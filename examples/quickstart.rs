@@ -1,0 +1,65 @@
+//! Quickstart: the full three-layer system on a small workload.
+//!
+//! Eight Rust worker threads train the MLP classifier through the PJRT
+//! artifacts (JAX Layer-2 graph, Pallas-kernel-verified math), while the
+//! smart Group Generator schedules P-Reduce groups; the group averaging
+//! itself executes the Layer-1 `preduce_mlp_g*` artifacts.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::time::Duration;
+
+use ripples::cluster::HeterogeneityProfile;
+use ripples::runtime::threaded::{
+    run_threaded, EngineClient, ThreadSched, ThreadedConfig, Workload,
+};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = ripples::runtime::artifacts_dir();
+    let (engine, _server) = EngineClient::spawn(artifacts)?;
+    println!("artifacts available: {:?}", engine.available()?);
+
+    let cfg = ThreadedConfig {
+        n_nodes: 2,
+        workers_per_node: 4,
+        iters: 30,
+        group_size: 3,
+        sched: ThreadSched::SmartGg,
+        lr: 0.05,
+        seed: 42,
+        hetero: HeterogeneityProfile::default(),
+        workload: Workload::Mlp { batch: 128, in_dim: 32, classes: 10 },
+        step_artifact: "mlp_train_step".into(),
+        init_artifact: "mlp_init".into(),
+        preduce_prefix: "preduce_mlp_g".into(),
+        compute_floor: Duration::ZERO,
+    };
+    println!(
+        "training MLP on {} workers, smart GG, {} iters...",
+        cfg.n_nodes * cfg.workers_per_node,
+        cfg.iters
+    );
+    let report = run_threaded(cfg, engine)?;
+
+    // average loss per iteration across workers
+    let mut per_iter: Vec<(f64, usize)> = vec![(0.0, 0); 30];
+    for &(_, it, loss) in &report.losses {
+        per_iter[it as usize].0 += loss as f64;
+        per_iter[it as usize].1 += 1;
+    }
+    println!("\niter   mean loss");
+    for (it, (sum, cnt)) in per_iter.iter().enumerate() {
+        if it % 5 == 0 || it == 29 {
+            println!("{it:>4}   {:.4}", sum / *cnt as f64);
+        }
+    }
+    let first = per_iter[0].0 / per_iter[0].1 as f64;
+    let last = per_iter[29].0 / per_iter[29].1 as f64;
+    println!(
+        "\nwall {:?}, {} P-Reduces, loss {first:.3} -> {last:.3}",
+        report.wall, report.preduce_count
+    );
+    assert!(last < first, "training must reduce loss");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! End-to-end driver: decentralized training of the transformer LM
+//! through all three layers (EXPERIMENTS.md §End-to-End records a run).
+//!
+//! * Layer 1/2: the `tlm_train_step` artifact is the JAX fwd/bwd+SGD graph
+//!   (Pallas-kernel lineage verified by the python test suite), lowered
+//!   once by `make artifacts` and executed here via PJRT — no Python.
+//! * Layer 3: worker threads + the smart Group Generator; P-Reduce group
+//!   averaging runs the `preduce_tlm_g*` artifacts.
+//!
+//! Data is a synthetic noisy successor-rule token stream, so the loss
+//! curve is meaningful: ln(vocab) ~ 5.55 at init, approaching the
+//! entropy of the rule as the model learns it.
+//!
+//!   make artifacts && cargo run --release --example train_transformer -- \
+//!       [--iters N] [--workers W] [--slow WORKER,FACTOR]
+
+use std::time::Duration;
+
+use ripples::cluster::HeterogeneityProfile;
+use ripples::runtime::threaded::{
+    run_threaded, EngineClient, ThreadSched, ThreadedConfig, Workload,
+};
+
+fn flag(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let iters: usize = flag(&args, "--iters").map(|v| v.parse()).transpose()?.unwrap_or(200);
+    let workers: usize = flag(&args, "--workers").map(|v| v.parse()).transpose()?.unwrap_or(8);
+    let hetero = match flag(&args, "--slow") {
+        Some(s) => {
+            let (w, f) = s.split_once(',').expect("--slow W,FACTOR");
+            HeterogeneityProfile {
+                slow_worker: Some((w.parse()?, f.parse()?)),
+                jitter: 0.0,
+            }
+        }
+        None => HeterogeneityProfile::default(),
+    };
+    let wpn = 4.min(workers);
+    assert!(workers % wpn == 0, "workers must be a multiple of {wpn}");
+
+    let artifacts = ripples::runtime::artifacts_dir();
+    let (engine, _server) = EngineClient::spawn(artifacts)?;
+    let cfg = ThreadedConfig {
+        n_nodes: workers / wpn,
+        workers_per_node: wpn,
+        iters,
+        group_size: 3,
+        sched: ThreadSched::SmartGg,
+        lr: 0.25,
+        seed: 7,
+        hetero,
+        workload: Workload::Tlm { batch: 8, seq: 64, vocab: 256 },
+        step_artifact: "tlm_train_step".into(),
+        init_artifact: "tlm_init".into(),
+        preduce_prefix: "preduce_tlm_g".into(),
+        compute_floor: Duration::ZERO,
+    };
+    println!(
+        "e2e: transformer LM ({} params/replica), {} workers x {} iters, smart GG",
+        435_000, workers, iters
+    );
+    let report = run_threaded(cfg, engine)?;
+
+    // aggregate loss curve
+    let mut per_iter: Vec<(f64, usize)> = vec![(0.0, 0); iters];
+    for &(_, it, loss) in &report.losses {
+        per_iter[it as usize].0 += loss as f64;
+        per_iter[it as usize].1 += 1;
+    }
+    println!("\niter   mean LM loss");
+    let stride = (iters / 20).max(1);
+    for (it, (sum, cnt)) in per_iter.iter().enumerate() {
+        if it % stride == 0 || it == iters - 1 {
+            println!("{it:>5}  {:.4}", sum / *cnt as f64);
+        }
+    }
+    let first = per_iter[0].0 / per_iter[0].1 as f64;
+    let last_w = &per_iter[iters.saturating_sub(5)..];
+    let last = last_w.iter().map(|(s, c)| s / *c as f64).sum::<f64>() / last_w.len() as f64;
+    println!(
+        "\nwall {:.1}s  throughput {:.1} iters/s  {} P-Reduces  loss {first:.3} -> {last:.3}",
+        report.wall.as_secs_f64(),
+        (iters * workers) as f64 / report.wall.as_secs_f64(),
+        report.preduce_count,
+    );
+    // write the loss curve for EXPERIMENTS.md
+    let mut csv = String::from("iter,mean_loss\n");
+    for (it, (sum, cnt)) in per_iter.iter().enumerate() {
+        csv.push_str(&format!("{it},{:.5}\n", sum / *cnt as f64));
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/e2e_transformer_loss.csv", csv)?;
+    println!("loss curve -> results/e2e_transformer_loss.csv");
+    assert!(last < first, "LM must learn the successor rule");
+    println!("train_transformer OK");
+    Ok(())
+}

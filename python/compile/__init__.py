@@ -1,0 +1,5 @@
+"""Build-time Python: Layer-1 Pallas kernels + Layer-2 JAX graphs + AOT.
+
+Never imported by the Rust runtime; `make artifacts` runs `compile.aot`
+once and the training path is pure Rust + PJRT afterwards.
+"""

@@ -1,0 +1,294 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that this image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact ``<name>.hlo.txt`` gets a ``<name>.meta.json`` sidecar
+describing input shapes/dtypes and model metadata, which the Rust loader
+(`runtime::artifact`) parses with its own mini-JSON reader.
+
+Run once via ``make artifacts``; a content hash makes it a no-op when the
+compile/ sources are unchanged.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--family all|mlp|tlm|preduce]
+        [--report]   # also print per-artifact HLO op histograms (L2 perf check)
+"""
+
+import argparse
+import collections
+import hashlib
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(s):
+    return str(s.dtype.name if hasattr(s.dtype, "name") else s.dtype)
+
+
+def lower_artifact(name, fn, arg_specs, meta, out_dir):
+    """Lower ``fn`` at ``arg_specs`` and write <name>.hlo.txt + sidecar."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    sidecar = dict(meta)
+    sidecar["name"] = name
+    sidecar["inputs"] = [
+        {"shape": list(s.shape), "dtype": _dt(s)} for s in arg_specs
+    ]
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(sidecar, f, indent=1, sort_keys=True)
+    print(f"  wrote {name}: {len(text)} chars, inputs={sidecar['inputs']}")
+    return text
+
+
+def hlo_op_histogram(text):
+    """Crude per-opcode counts from HLO text — the L2 fusion/perf report."""
+    hist = collections.Counter()
+    for m in re.finditer(r"=\s+\S+\s+([a-z][a-z0-9-]*)\(", text):
+        hist[m.group(1)] += 1
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# Artifact families
+# ---------------------------------------------------------------------------
+
+
+def build_mlp(out_dir, report):
+    """MLP train/eval steps: the figure-reproduction model."""
+    texts = {}
+    for tag, use_pallas in (("", False), ("_pallas", True)):
+        cfg = M.MlpConfig(use_pallas=use_pallas)
+        step = M.mlp_train_step(cfg)
+        n = cfg.param_count()
+        meta = {
+            "kind": "mlp_train_step",
+            "param_count": n,
+            "batch": cfg.batch,
+            "in_dim": cfg.in_dim,
+            "classes": cfg.classes,
+            "use_pallas": use_pallas,
+            "outputs": ["new_flat", "loss"],
+        }
+        texts[tag] = lower_artifact(
+            f"mlp_train_step{tag}",
+            step,
+            [
+                spec((n,)),
+                spec((cfg.batch, cfg.in_dim)),
+                spec((cfg.batch,), I32),
+                spec((), F32),
+            ],
+            meta,
+            out_dir,
+        )
+    cfg = M.MlpConfig()
+    n = cfg.param_count()
+    lower_artifact(
+        "mlp_eval",
+        lambda flat, x, y: (M.mlp_loss(cfg, flat, x, y),),
+        [spec((n,)), spec((cfg.batch, cfg.in_dim)), spec((cfg.batch,), I32)],
+        {"kind": "mlp_eval", "param_count": n, "outputs": ["loss"]},
+        out_dir,
+    )
+    lower_artifact(
+        "mlp_init",
+        lambda seed: (M.mlp_init(cfg, 0) if False else _mlp_init_traced(cfg, seed),),
+        [spec((), I32)],
+        {"kind": "mlp_init", "param_count": n, "outputs": ["flat"]},
+        out_dir,
+    )
+    if report:
+        for tag, text in texts.items():
+            hist = hlo_op_histogram(text)
+            fusions = hist.get("fusion", 0)
+            print(f"  [report] mlp{tag}: top ops {hist.most_common(6)} fusions={fusions}")
+
+
+def _mlp_init_traced(cfg, seed):
+    """Traced-seed variant of mlp_init so initialization is an artifact too."""
+    offsets, total = M.pack_specs(cfg.specs())
+    key = jax.random.PRNGKey(seed)
+    flat = jnp.zeros((total,), jnp.float32)
+    for s in cfg.specs():
+        off, shape = offsets[s.name]
+        if s.name.startswith("w"):
+            key, sub = jax.random.split(key)
+            w = jax.random.normal(sub, shape) * jnp.sqrt(2.0 / shape[0])
+            flat = jax.lax.dynamic_update_slice(flat, w.reshape(-1), (off,))
+    return flat
+
+
+def build_tlm(out_dir, report, large=False):
+    """Transformer-LM train/eval steps: the end-to-end example model."""
+    cfg = M.TlmConfig.large() if large else M.TlmConfig()
+    step = M.tlm_train_step(cfg)
+    n = cfg.param_count()
+    suffix = "_large" if large else ""
+    meta = {
+        "kind": "tlm_train_step",
+        "param_count": n,
+        "batch": cfg.batch,
+        "seq": cfg.seq,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "outputs": ["new_flat", "loss"],
+    }
+    text = lower_artifact(
+        f"tlm_train_step{suffix}",
+        step,
+        [spec((n,)), spec((cfg.batch, cfg.seq), I32), spec((), F32)],
+        meta,
+        out_dir,
+    )
+    lower_artifact(
+        f"tlm_init{suffix}",
+        lambda seed: (_tlm_init_traced(cfg, seed),),
+        [spec((), I32)],
+        {"kind": "tlm_init", "param_count": n, "outputs": ["flat"]},
+        out_dir,
+    )
+    if report:
+        hist = hlo_op_histogram(text)
+        print(f"  [report] tlm{suffix}: params={n} top ops {hist.most_common(6)}")
+
+
+def _tlm_init_traced(cfg, seed):
+    offsets, total = M.pack_specs(cfg.specs())
+    key = jax.random.PRNGKey(seed)
+    flat = jnp.zeros((total,), jnp.float32)
+    for s in cfg.specs():
+        off, shape = offsets[s.name]
+        key, sub = jax.random.split(key)
+        if s.name.endswith("_g"):
+            t = jnp.ones(shape)
+        else:
+            t = jax.random.normal(sub, shape) * 0.02
+        flat = jax.lax.dynamic_update_slice(flat, t.reshape(-1), (off,))
+    return flat
+
+
+def build_preduce(out_dir, report):
+    """Group-mean artifacts for each model's flat size and group sizes 2..8.
+
+    The Pallas path is used for the MLP sizes (fast enough under interpret);
+    the TLM sizes use the jnp path of the *same* graph so the e2e example is
+    not bottlenecked by interpret-mode emulation. Numerics are identical
+    (pytest asserts kernel == ref).
+    """
+    mlp_n = M.MlpConfig().param_count()
+    tlm_n = M.TlmConfig().param_count()
+    for model, n, use_pallas in (("mlp", mlp_n, True), ("tlm", tlm_n, False)):
+        for g in (2, 3, 4, 8):
+            fn = M.preduce_graph(g, n, use_pallas=use_pallas)
+            lower_artifact(
+                f"preduce_{model}_g{g}",
+                lambda stacked, fn=fn: (fn(stacked),),
+                [spec((g, n))],
+                {
+                    "kind": "preduce",
+                    "model": model,
+                    "group_size": g,
+                    "param_count": n,
+                    "use_pallas": use_pallas,
+                    "outputs": ["mean"],
+                },
+                out_dir,
+            )
+    # One weighted variant (used by the slowdown-weighting extension).
+    fnw = M.preduce_weighted_graph(4, mlp_n, use_pallas=True)
+    lower_artifact(
+        "preduce_mlp_g4_weighted",
+        lambda stacked, w: (fnw(stacked, w),),
+        [spec((4, mlp_n)), spec((4,))],
+        {
+            "kind": "preduce_weighted",
+            "model": "mlp",
+            "group_size": 4,
+            "param_count": mlp_n,
+            "outputs": ["avg"],
+        },
+        out_dir,
+    )
+
+
+FAMILIES = {"mlp": build_mlp, "tlm": build_tlm, "preduce": build_preduce}
+
+
+def source_fingerprint():
+    """Hash of compile/ sources; lets `make artifacts` skip when unchanged."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(base)):
+        for fname in sorted(files):
+            if fname.endswith(".py"):
+                with open(os.path.join(root, fname), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--family", default="all", choices=["all"] + list(FAMILIES))
+    p.add_argument("--large", action="store_true", help="also lower the ~110M TLM")
+    p.add_argument("--report", action="store_true", help="print HLO op histograms")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    stamp = os.path.join(args.out_dir, ".fingerprint")
+    fp = source_fingerprint() + (":large" if args.large else "")
+    if not args.force and os.path.exists(stamp):
+        with open(stamp) as f:
+            if f.read().strip() == fp and args.family == "all":
+                print("artifacts up to date (fingerprint match)")
+                return 0
+
+    fams = list(FAMILIES) if args.family == "all" else [args.family]
+    for fam in fams:
+        print(f"[aot] lowering family: {fam}")
+        if fam == "tlm":
+            build_tlm(args.out_dir, args.report)
+            if args.large:
+                build_tlm(args.out_dir, args.report, large=True)
+        else:
+            FAMILIES[fam](args.out_dir, args.report)
+    if args.family == "all":
+        with open(stamp, "w") as f:
+            f.write(fp)
+    print("[aot] done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles.
+
+Kernels (all interpret=True on this CPU testbed; see DESIGN.md
+§Hardware-Adaptation for the TPU mapping):
+
+* :mod:`.preduce`  — group-mean / weighted-mean reduction, the arithmetic
+  core of the paper's Partial All-Reduce primitive.
+* :mod:`.matmul`   — MXU-tiled matmul used by the Layer-2 models.
+* :mod:`.sgd`      — fused SGD / momentum parameter updates over the
+  paper's flat concatenated weight buffer (§6.1).
+* :mod:`.ref`      — the oracles pytest checks everything against.
+"""
+
+from . import matmul, preduce, ref, sgd  # noqa: F401

@@ -1,0 +1,109 @@
+"""Pallas tiled matmul kernel (Layer 1).
+
+The models' compute hot-spot. On a real TPU this is MXU work: blocks are
+multiples of the 128x128 systolic array, accumulation in float32, operands
+ideally bfloat16. The BlockSpec grid expresses the HBM->VMEM schedule that a
+CUDA kernel would express with threadblocks: grid = (M/bm, N/bn, K/bk), with
+the K axis innermost so each (i, j) output tile is revisited across K steps
+and accumulated in place (Pallas keeps the revisited block resident in VMEM).
+
+interpret=True on this testbed; structure (not wallclock) is the deliverable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, out_ref, *, k_steps):
+    """One (bm, bk) @ (bk, bn) MAC accumulated into the (bm, bn) out tile.
+
+    The out BlockSpec index map ignores k, so the same VMEM tile is
+    revisited for all k steps — init at k == 0, accumulate after.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _ceil_to(x, m):
+    return (x + m - 1) // m * m
+
+
+def _matmul_impl(a, b, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """C = A @ B (float32 out) with MXU-shaped tiling; ragged dims padded."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n].astype(a.dtype)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable Pallas matmul: C = A @ B.
+
+    Pallas kernels have no automatic JVP rule, so the VJP is supplied
+    explicitly — both cotangent products are themselves Pallas matmuls,
+    keeping backward passes on the MXU-tiled path too:
+        dA = g @ B^T ,  dB = A^T @ g
+    """
+    return _matmul_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return _matmul_impl(g, b.T), _matmul_impl(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK, dtype_bytes=4):
+    """VMEM bytes resident per grid step: A tile + B tile + out tile."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes
+
+
+def mxu_utilization_estimate(m, n, k, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Fraction of MXU issue slots doing useful MACs (pad waste only).
+
+    Reported in DESIGN.md §Perf. Real utilization additionally depends on
+    DMA overlap, which BlockSpec double-buffers automatically on TPU.
+    """
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    return (m * n * k) / float(mp * np_ * kp)

@@ -1,0 +1,115 @@
+"""Pallas kernel for the P-Reduce reduction (Layer 1).
+
+The paper's Partial All-Reduce ends in a group-mean: every worker in group G
+replaces its flattened parameter vector with the mean of the group's vectors
+(the fused synchronization matrix F^G with entries 1/|G|). On the simulated
+cluster the *schedule* of the reduction (ring reduce-scatter/all-gather) is
+owned by the Rust collectives layer; the *arithmetic* hot-spot — reducing a
+``(G, N)`` stack of replicas to the averaged vector — is this kernel.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the reduction is
+bandwidth-bound VPU work. We tile N into ``block_n``-wide stripes; each grid
+step holds a ``(G, block_n)`` tile in VMEM, reduces along axis 0, and writes
+a ``(block_n,)`` stripe. VMEM footprint per step is
+``(G + 1) * block_n * 4`` bytes — with the default ``block_n = 16384`` and
+G = 8 that is ~0.6 MB, comfortably inside the ~16 MB VMEM budget while
+giving the DMA engine long contiguous transfers.
+
+interpret=True is mandatory on this CPU testbed (Mosaic custom-calls cannot
+run on the CPU PJRT plugin); correctness is what we validate here, structure
+is what we'd ship to a real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 16384
+
+
+def _mean_kernel(stacked_ref, out_ref, *, group_size):
+    """Reduce a (G, block_n) VMEM tile along axis 0 into a (block_n,) tile."""
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.float32)
+    # G is small (2..16) and static: unrolled adds keep everything in VPU
+    # registers instead of materializing an axis-0 reduce tree.
+    for g in range(group_size):
+        acc = acc + stacked_ref[g, :].astype(jnp.float32)
+    out_ref[...] = (acc * (1.0 / group_size)).astype(out_ref.dtype)
+
+
+def _weighted_kernel(stacked_ref, weights_ref, out_ref, *, group_size):
+    """Weighted variant: out = sum_g w[g] * stacked[g, :]."""
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.float32)
+    for g in range(group_size):
+        acc = acc + weights_ref[g].astype(jnp.float32) * stacked_ref[g, :].astype(
+            jnp.float32
+        )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _pad_to_multiple(x, block_n):
+    n = x.shape[-1]
+    rem = n % block_n
+    if rem == 0:
+        return x, n
+    pad = block_n - rem
+    pad_widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, pad_widths), n
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def preduce_mean(stacked, block_n=DEFAULT_BLOCK_N):
+    """Group-mean of ``stacked`` with shape (G, N) -> (N,), via Pallas.
+
+    N is padded up to a multiple of ``block_n`` so the grid is regular; the
+    pad is sliced away afterwards (XLA fuses the pad/slice with the DMA).
+    """
+    group_size, n = stacked.shape
+    block_n = min(block_n, max(n, 1))
+    padded, orig_n = _pad_to_multiple(stacked, block_n)
+    grid = (padded.shape[1] // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_mean_kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[pl.BlockSpec((group_size, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded.shape[1],), stacked.dtype),
+        interpret=True,
+    )(padded)
+    return out[:orig_n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def preduce_weighted(stacked, weights, block_n=DEFAULT_BLOCK_N):
+    """Convex combination of replicas: (G, N), (G,) -> (N,), via Pallas.
+
+    Used for the generalized doubly-stochastic row of F^G (e.g. when a
+    group member is weighted down, as in bounded-staleness extensions).
+    """
+    group_size, n = stacked.shape
+    block_n = min(block_n, max(n, 1))
+    padded, orig_n = _pad_to_multiple(stacked, block_n)
+    grid = (padded.shape[1] // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_weighted_kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((group_size, block_n), lambda i: (0, i)),
+            pl.BlockSpec((group_size,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded.shape[1],), stacked.dtype),
+        interpret=True,
+    )(padded, weights)
+    return out[:orig_n]
+
+
+def vmem_footprint_bytes(group_size, block_n=DEFAULT_BLOCK_N, dtype_bytes=4):
+    """Estimated VMEM bytes held per grid step (input tile + output stripe).
+
+    Reported in DESIGN.md §Perf; used by the block-size sweep in
+    python/tests/test_perf_structure.py to keep blocks inside VMEM.
+    """
+    return (group_size + 1) * block_n * dtype_bytes

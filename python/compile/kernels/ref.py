@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between the Pallas (interpret=True) kernel and its oracle
+over a hypothesis-driven sweep of shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def preduce_mean(stacked):
+    """Reference for the P-Reduce reduction: mean over the group axis.
+
+    ``stacked`` has shape ``(G, N)`` — G model replicas of a flattened
+    parameter vector. The result is the averaged replica, shape ``(N,)``.
+    """
+    return jnp.mean(stacked, axis=0)
+
+
+def preduce_weighted(stacked, weights):
+    """Weighted P-Reduce: convex combination of replicas.
+
+    ``weights`` has shape ``(G,)`` and should sum to 1 (a doubly-stochastic
+    row of the fused synchronization matrix F^G).
+    """
+    return jnp.tensordot(weights, stacked, axes=1)
+
+
+def matmul(a, b):
+    """Reference for the tiled matmul kernel (float32 accumulation)."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def sgd_update(param, grad, lr):
+    """Reference for the fused SGD update kernel."""
+    return param - lr * grad
+
+
+def momentum_update(param, grad, velocity, lr, momentum, weight_decay):
+    """Reference for the fused momentum (heavy-ball) update kernel.
+
+    Matches the paper's ResNet-50 setup: momentum=0.9, weight_decay=1e-4.
+    v <- m*v + (g + wd*p) ; p <- p - lr*v
+    """
+    g = grad + weight_decay * param
+    new_v = momentum * velocity + g
+    new_p = param - lr * new_v
+    return new_p, new_v

@@ -1,0 +1,297 @@
+"""Layer-2 JAX compute graphs: models, train steps, and P-Reduce graphs.
+
+Everything here is *build-time only*: `aot.py` lowers these jitted functions
+to HLO text once, and the Rust coordinator executes the artifacts via PJRT.
+Python never runs on the training path.
+
+Two model families (stand-ins for the paper's VGG-16/CIFAR-10 and
+ResNet-50/ImageNet; see DESIGN.md §Hardware-Adaptation):
+
+* :class:`MlpConfig` — an MLP classifier over dense features, the
+  "medium model" used by most figure reproductions.
+* :class:`TlmConfig` — a small decoder-only transformer LM over synthetic
+  token streams, the "large model" for the end-to-end example.
+
+All parameters live in a single flat ``(N,)`` float32 buffer — the paper's
+§6.1 flatten-and-concatenate layout — so the Rust side treats a model as an
+opaque vector and P-Reduce is a single group-mean over ``(G, N)``.
+"""
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as kmatmul
+from .kernels import preduce as kpreduce
+from .kernels import sgd as ksgd
+
+# ---------------------------------------------------------------------------
+# Flat-buffer parameter packing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """Shape of one logical tensor inside the flat buffer."""
+
+    name: str
+    shape: Tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def pack_specs(specs):
+    """Offsets of each tensor inside the flat buffer; returns (offsets, total)."""
+    offsets, off = {}, 0
+    for s in specs:
+        offsets[s.name] = (off, s.shape)
+        off += s.size
+    return offsets, off
+
+
+def unpack(flat, offsets, name):
+    off, shape = offsets[name]
+    size = 1
+    for d in shape:
+        size *= d
+    return jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    """MLP over dense features. Default is the figure-reproduction size."""
+
+    in_dim: int = 32
+    hidden: Tuple[int, ...] = (128, 128)
+    classes: int = 10
+    batch: int = 128
+    use_pallas: bool = False
+
+    def specs(self):
+        dims = (self.in_dim,) + self.hidden + (self.classes,)
+        out = []
+        for i in range(len(dims) - 1):
+            out.append(TensorSpec(f"w{i}", (dims[i], dims[i + 1])))
+            out.append(TensorSpec(f"b{i}", (dims[i + 1],)))
+        return out
+
+    @property
+    def layers(self) -> int:
+        return len(self.hidden) + 1
+
+    def param_count(self) -> int:
+        return pack_specs(self.specs())[1]
+
+
+def mlp_init(cfg: MlpConfig, seed: int = 0) -> jnp.ndarray:
+    """He-initialized flat parameter buffer."""
+    offsets, total = pack_specs(cfg.specs())
+    key = jax.random.PRNGKey(seed)
+    flat = jnp.zeros((total,), jnp.float32)
+    for spec in cfg.specs():
+        off, shape = offsets[spec.name]
+        if spec.name.startswith("w"):
+            key, sub = jax.random.split(key)
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape) * jnp.sqrt(2.0 / fan_in)
+            flat = jax.lax.dynamic_update_slice(flat, w.reshape(-1), (off,))
+    return flat
+
+
+def _mlp_logits(cfg: MlpConfig, flat, x):
+    offsets, _ = pack_specs(cfg.specs())
+    mm = (lambda a, b: kmatmul.matmul(a, b)) if cfg.use_pallas else jnp.matmul
+    h = x
+    for i in range(cfg.layers):
+        w = unpack(flat, offsets, f"w{i}")
+        b = unpack(flat, offsets, f"b{i}")
+        h = mm(h, w) + b
+        if i < cfg.layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_loss(cfg: MlpConfig, flat, x, y):
+    """Mean softmax cross-entropy over the batch."""
+    logits = _mlp_logits(cfg, flat, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def mlp_train_step(cfg: MlpConfig):
+    """Returns f(flat, x, y, lr) -> (new_flat, loss): one SGD iteration."""
+
+    def step(flat, x, y, lr):
+        loss, grad = jax.value_and_grad(lambda p: mlp_loss(cfg, p, x, y))(flat)
+        if cfg.use_pallas:
+            new_flat = ksgd.sgd_update(flat, grad, lr)
+        else:
+            new_flat = flat - lr * grad
+        return new_flat, loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Tiny decoder-only transformer LM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TlmConfig:
+    """Decoder-only transformer LM over synthetic tokens.
+
+    The default (~2.8M params) keeps CPU-PJRT train steps fast enough for a
+    few hundred e2e steps; `large()` is a ~110M-param config matching the
+    system-prompt scale reference, lowered on demand (same graph, bigger
+    shapes).
+    """
+
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    seq: int = 64
+    batch: int = 8
+    use_pallas: bool = False
+
+    @classmethod
+    def large(cls):
+        return cls(
+            vocab=32000, d_model=768, n_heads=12, n_layers=12, d_ff=3072, seq=256,
+            batch=8,
+        )
+
+    def specs(self):
+        s = [
+            TensorSpec("tok_emb", (self.vocab, self.d_model)),
+            TensorSpec("pos_emb", (self.seq, self.d_model)),
+        ]
+        for i in range(self.n_layers):
+            s += [
+                TensorSpec(f"l{i}.ln1_g", (self.d_model,)),
+                TensorSpec(f"l{i}.wqkv", (self.d_model, 3 * self.d_model)),
+                TensorSpec(f"l{i}.wo", (self.d_model, self.d_model)),
+                TensorSpec(f"l{i}.ln2_g", (self.d_model,)),
+                TensorSpec(f"l{i}.w1", (self.d_model, self.d_ff)),
+                TensorSpec(f"l{i}.w2", (self.d_ff, self.d_model)),
+            ]
+        s.append(TensorSpec("lnf_g", (self.d_model,)))
+        return s
+
+    def param_count(self) -> int:
+        return pack_specs(self.specs())[1]
+
+
+def tlm_init(cfg: TlmConfig, seed: int = 0) -> jnp.ndarray:
+    offsets, total = pack_specs(cfg.specs())
+    key = jax.random.PRNGKey(seed)
+    flat = jnp.zeros((total,), jnp.float32)
+    for spec in cfg.specs():
+        off, shape = offsets[spec.name]
+        key, sub = jax.random.split(key)
+        if spec.name.endswith(("_g",)):
+            t = jnp.ones(shape)
+        else:
+            scale = 0.02
+            t = jax.random.normal(sub, shape) * scale
+        flat = jax.lax.dynamic_update_slice(flat, t.reshape(-1), (off,))
+    return flat
+
+
+def _rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _tlm_logits(cfg: TlmConfig, flat, tokens):
+    offsets, _ = pack_specs(cfg.specs())
+    get = lambda n: unpack(flat, offsets, n)  # noqa: E731
+    mm = (
+        (lambda a, b: kmatmul.matmul(a, b)) if cfg.use_pallas else jnp.matmul
+    )
+    B, T = tokens.shape
+    h = get("tok_emb")[tokens] + get("pos_emb")[None, :T, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    dh = cfg.d_model // cfg.n_heads
+    for i in range(cfg.n_layers):
+        x = _rmsnorm(h, get(f"l{i}.ln1_g"))
+        qkv = mm(x.reshape(B * T, -1), get(f"l{i}.wqkv")).reshape(B, T, 3, cfg.n_heads, dh)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(dh)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, cfg.d_model)
+        h = h + mm(o.reshape(B * T, -1), get(f"l{i}.wo")).reshape(B, T, -1)
+        x = _rmsnorm(h, get(f"l{i}.ln2_g"))
+        f = jax.nn.gelu(mm(x.reshape(B * T, -1), get(f"l{i}.w1")))
+        h = h + mm(f, get(f"l{i}.w2")).reshape(B, T, -1)
+    h = _rmsnorm(h, get("lnf_g"))
+    return mm(h.reshape(B * T, -1), get("tok_emb").T).reshape(B, T, cfg.vocab)
+
+
+def tlm_loss(cfg: TlmConfig, flat, tokens):
+    """Next-token cross-entropy; targets are tokens shifted by one."""
+    logits = _tlm_logits(cfg, flat, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def tlm_train_step(cfg: TlmConfig):
+    """Returns f(flat, tokens, lr) -> (new_flat, loss): one SGD iteration."""
+
+    def step(flat, tokens, lr):
+        loss, grad = jax.value_and_grad(lambda p: tlm_loss(cfg, p, tokens))(flat)
+        if cfg.use_pallas:
+            new_flat = ksgd.sgd_update(flat, grad, lr)
+        else:
+            new_flat = flat - lr * grad
+        return new_flat, loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# P-Reduce graphs (group averaging as standalone artifacts)
+# ---------------------------------------------------------------------------
+
+
+def preduce_graph(group_size: int, n: int, use_pallas: bool = True):
+    """Returns f(stacked (G, N)) -> (N,): the F^G group-mean.
+
+    This is the computation the Rust coordinator executes when a group
+    completes its P-Reduce rendezvous; the ring *schedule* is Rust's, the
+    arithmetic is this artifact's.
+    """
+
+    def graph(stacked):
+        if use_pallas:
+            return kpreduce.preduce_mean(stacked)
+        return jnp.mean(stacked, axis=0)
+
+    return graph
+
+
+def preduce_weighted_graph(group_size: int, n: int, use_pallas: bool = True):
+    """Returns f(stacked (G, N), weights (G,)) -> (N,): weighted F^G row."""
+
+    def graph(stacked, weights):
+        if use_pallas:
+            return kpreduce.preduce_weighted(stacked, weights)
+        return jnp.tensordot(weights, stacked, axes=1)
+
+    return graph

@@ -1,0 +1,82 @@
+"""AOT pipeline: lowering produces loadable HLO text + correct sidecars."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def art_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    aot.build_mlp(str(d), report=False)
+    return str(d)
+
+
+def test_hlo_text_is_parseable_hlo(art_dir):
+    text = open(os.path.join(art_dir, "mlp_train_step.hlo.txt")).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: root of entry must be a tuple
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_sidecar_shapes_match_config(art_dir):
+    meta = json.load(open(os.path.join(art_dir, "mlp_train_step.meta.json")))
+    cfg = M.MlpConfig()
+    n = cfg.param_count()
+    assert meta["param_count"] == n
+    assert meta["inputs"][0] == {"shape": [n], "dtype": "float32"}
+    assert meta["inputs"][1] == {"shape": [cfg.batch, cfg.in_dim], "dtype": "float32"}
+    assert meta["inputs"][2] == {"shape": [cfg.batch], "dtype": "int32"}
+    assert meta["outputs"] == ["new_flat", "loss"]
+
+
+def test_pallas_variant_same_signature(art_dir):
+    a = json.load(open(os.path.join(art_dir, "mlp_train_step.meta.json")))
+    b = json.load(open(os.path.join(art_dir, "mlp_train_step_pallas.meta.json")))
+    assert a["inputs"] == b["inputs"]
+    assert b["use_pallas"] is True
+
+
+def test_op_histogram_counts_something(art_dir):
+    text = open(os.path.join(art_dir, "mlp_train_step.hlo.txt")).read()
+    hist = aot.hlo_op_histogram(text)
+    assert sum(hist.values()) > 10
+    assert "dot" in hist or "fusion" in hist
+
+
+def test_fingerprint_stable():
+    assert aot.source_fingerprint() == aot.source_fingerprint()
+
+
+def test_fingerprint_skip(tmp_path, capsys):
+    """Second `all` run with matching fingerprint must be a no-op."""
+    stamp = tmp_path / ".fingerprint"
+    stamp.write_text(aot.source_fingerprint())
+    rc = aot.main(["--out-dir", str(tmp_path), "--family", "all"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "up to date" in out
+
+
+def test_preduce_artifact_roundtrip(tmp_path):
+    """preduce graphs lower and sidecars carry group size + param count."""
+    import jax
+    import jax.numpy as jnp
+
+    fn = M.preduce_graph(3, 128, use_pallas=False)
+    aot.lower_artifact(
+        "preduce_test_g3",
+        lambda s: (fn(s),),
+        [aot.spec((3, 128))],
+        {"kind": "preduce", "group_size": 3, "param_count": 128},
+        str(tmp_path),
+    )
+    meta = json.load(open(tmp_path / "preduce_test_g3.meta.json"))
+    assert meta["group_size"] == 3
+    text = open(tmp_path / "preduce_test_g3.hlo.txt").read()
+    assert text.startswith("HloModule")

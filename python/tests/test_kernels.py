@@ -1,0 +1,204 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/block sizes; assert_allclose against ref.py.
+This is the CORE correctness signal for everything the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as kmm
+from compile.kernels import preduce as kpr
+from compile.kernels import ref
+from compile.kernels import sgd as ksgd
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# preduce
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.integers(2, 8),
+    n=st.integers(1, 3000),
+    block=st.sampled_from([64, 256, 1024]),
+    seed=st.integers(0, 2**16),
+)
+def test_preduce_mean_matches_ref(g, n, block, seed):
+    stacked = rand(seed, (g, n))
+    got = kpr.preduce_mean(stacked, block_n=block)
+    want = ref.preduce_mean(stacked)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    g=st.integers(2, 6),
+    n=st.integers(1, 2000),
+    block=st.sampled_from([128, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_preduce_weighted_matches_ref(g, n, block, seed):
+    stacked = rand(seed, (g, n))
+    w = jax.nn.softmax(rand(seed + 1, (g,)))  # doubly-stochastic row
+    got = kpr.preduce_weighted(stacked, w, block_n=block)
+    want = ref.preduce_weighted(stacked, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_preduce_mean_uniform_weights_equiv():
+    """F^G row with uniform 1/|G| weights == plain group mean."""
+    stacked = rand(7, (4, 513))
+    w = jnp.full((4,), 0.25)
+    np.testing.assert_allclose(
+        kpr.preduce_weighted(stacked, w, block_n=128),
+        kpr.preduce_mean(stacked, block_n=128),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_preduce_idempotent():
+    """Averaging already-identical replicas is the identity: F^G F^G = F^G."""
+    x = rand(3, (1, 777))
+    stacked = jnp.tile(x, (5, 1))
+    got = kpr.preduce_mean(stacked, block_n=256)
+    np.testing.assert_allclose(got, x[0], rtol=1e-6, atol=1e-7)
+
+
+def test_preduce_exact_block_multiple():
+    """No-padding path: N an exact multiple of block_n."""
+    stacked = rand(11, (3, 1024))
+    np.testing.assert_allclose(
+        kpr.preduce_mean(stacked, block_n=256),
+        ref.preduce_mean(stacked),
+        rtol=1e-5,
+    )
+
+
+def test_preduce_single_element():
+    stacked = rand(5, (2, 1))
+    np.testing.assert_allclose(
+        kpr.preduce_mean(stacked, block_n=64), ref.preduce_mean(stacked), rtol=1e-6
+    )
+
+
+def test_preduce_block_larger_than_n():
+    stacked = rand(9, (4, 37))
+    np.testing.assert_allclose(
+        kpr.preduce_mean(stacked, block_n=4096),
+        ref.preduce_mean(stacked),
+        rtol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand(seed, (m, k))
+    b = rand(seed + 1, (k, n))
+    got = kmm._matmul_impl(a, b, bm=32, bn=32, bk=32)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_block_boundary_shapes():
+    """Exact multiples, one-over, one-under the block size."""
+    for m, k, n in [(32, 32, 32), (33, 31, 32), (64, 96, 33), (1, 128, 1)]:
+        a, b = rand(m + k, (m, k)), rand(n, (k, n))
+        np.testing.assert_allclose(
+            kmm._matmul_impl(a, b, bm=32, bn=32, bk=32),
+            ref.matmul(a, b),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
+def test_matmul_custom_vjp_matches_jnp_grads():
+    """The hand-written VJP must agree with jnp.matmul autodiff."""
+    a, b = rand(1, (24, 40)), rand(2, (40, 16))
+
+    def loss_pallas(a, b):
+        return jnp.sum(jnp.sin(kmm.matmul(a, b)))
+
+    def loss_ref(a, b):
+        return jnp.sum(jnp.sin(jnp.matmul(a, b)))
+
+    ga_p, gb_p = jax.grad(loss_pallas, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(loss_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_p, ga_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb_p, gb_r, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_mxu_utilization_estimate():
+    assert kmm.mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert kmm.mxu_utilization_estimate(129, 128, 128) < 1.0
+    u = kmm.mxu_utilization_estimate(100, 100, 100)
+    assert 0.0 < u < 1.0
+
+
+# ---------------------------------------------------------------------------
+# sgd / momentum
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 4000),
+    lr=st.floats(1e-4, 1.0),
+    block=st.sampled_from([128, 1024]),
+    seed=st.integers(0, 2**16),
+)
+def test_sgd_update_matches_ref(n, lr, block, seed):
+    p, g = rand(seed, (n,)), rand(seed + 1, (n,))
+    got = ksgd.sgd_update(p, g, lr, block_n=block)
+    want = ref.sgd_update(p, g, lr)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    seed=st.integers(0, 2**16),
+)
+def test_momentum_update_matches_ref(n, seed):
+    p, g, v = rand(seed, (n,)), rand(seed + 1, (n,)), rand(seed + 2, (n,))
+    lr, mom, wd = 0.128, 0.9, 1e-4  # the paper's ResNet-50 hyperparameters
+    got_p, got_v = ksgd.momentum_update(p, g, v, lr, mom, wd, block_n=512)
+    want_p, want_v = ref.momentum_update(p, g, v, lr, mom, wd)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-6)
+
+
+def test_momentum_zero_velocity_is_sgd_plus_wd():
+    p, g = rand(1, (100,)), rand(2, (100,))
+    v = jnp.zeros_like(p)
+    new_p, _ = ksgd.momentum_update(p, g, v, 0.1, 0.9, 0.0, block_n=64)
+    np.testing.assert_allclose(new_p, p - 0.1 * g, rtol=1e-5, atol=1e-6)
+
+
+def test_vmem_footprints_within_budget():
+    """Default blocks must fit TPU VMEM (~16 MiB) with margin."""
+    vmem = 16 * 1024 * 1024
+    assert kpr.vmem_footprint_bytes(group_size=8) < vmem // 4
+    assert kmm.vmem_footprint_bytes() < vmem // 4

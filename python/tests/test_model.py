@@ -1,0 +1,188 @@
+"""Layer-2 correctness: models, flat-buffer packing, train-step semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def small_mlp(use_pallas=False):
+    return M.MlpConfig(in_dim=8, hidden=(16,), classes=4, batch=16, use_pallas=use_pallas)
+
+
+def small_tlm(use_pallas=False):
+    return M.TlmConfig(
+        vocab=32, d_model=16, n_heads=2, n_layers=1, d_ff=32, seq=16, batch=4,
+        use_pallas=use_pallas,
+    )
+
+
+def synth_batch(cfg, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (cfg.batch, cfg.in_dim))
+    y = jax.random.randint(ky, (cfg.batch,), 0, cfg.classes)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# flat-buffer packing
+# ---------------------------------------------------------------------------
+
+
+def test_pack_specs_offsets_contiguous():
+    specs = [M.TensorSpec("a", (3, 4)), M.TensorSpec("b", (5,)), M.TensorSpec("c", (2, 2, 2))]
+    offsets, total = M.pack_specs(specs)
+    assert offsets["a"] == (0, (3, 4))
+    assert offsets["b"] == (12, (5,))
+    assert offsets["c"] == (17, (2, 2, 2))
+    assert total == 25
+
+
+def test_unpack_roundtrip():
+    specs = [M.TensorSpec("a", (3, 4)), M.TensorSpec("b", (5,))]
+    offsets, total = M.pack_specs(specs)
+    flat = jnp.arange(total, dtype=jnp.float32)
+    a = M.unpack(flat, offsets, "a")
+    b = M.unpack(flat, offsets, "b")
+    np.testing.assert_array_equal(a, jnp.arange(12.0).reshape(3, 4))
+    np.testing.assert_array_equal(b, jnp.arange(12.0, 17.0))
+
+
+def test_mlp_param_count_formula():
+    cfg = small_mlp()
+    expect = 8 * 16 + 16 + 16 * 4 + 4
+    assert cfg.param_count() == expect
+
+
+def test_tlm_param_count_positive_and_large_config_scale():
+    assert small_tlm().param_count() > 0
+    # large() should be on the order of 100M params (scale reference)
+    assert 5e7 < M.TlmConfig.large().param_count() < 3e8
+
+
+# ---------------------------------------------------------------------------
+# MLP semantics
+# ---------------------------------------------------------------------------
+
+
+def test_mlp_init_deterministic():
+    cfg = small_mlp()
+    np.testing.assert_array_equal(M.mlp_init(cfg, 3), M.mlp_init(cfg, 3))
+    assert not np.allclose(M.mlp_init(cfg, 3), M.mlp_init(cfg, 4))
+
+
+def test_mlp_loss_finite_and_near_uniform_at_init():
+    cfg = small_mlp()
+    flat = M.mlp_init(cfg, 0)
+    x, y = synth_batch(cfg)
+    loss = M.mlp_loss(cfg, flat, x, y)
+    assert np.isfinite(loss)
+    # At init, loss should be near ln(classes)
+    assert abs(float(loss) - np.log(cfg.classes)) < 1.5
+
+
+def test_mlp_train_step_reduces_loss():
+    cfg = small_mlp()
+    step = jax.jit(M.mlp_train_step(cfg))
+    flat = M.mlp_init(cfg, 0)
+    x, y = synth_batch(cfg)
+    losses = []
+    for _ in range(30):
+        flat, loss = step(flat, x, y, jnp.float32(0.1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7
+
+
+def test_mlp_pallas_and_jnp_paths_agree():
+    """use_pallas must change the implementation, not the math."""
+    cfg_j, cfg_p = small_mlp(False), small_mlp(True)
+    flat = M.mlp_init(cfg_j, 0)
+    x, y = synth_batch(cfg_j)
+    step_j = M.mlp_train_step(cfg_j)
+    step_p = M.mlp_train_step(cfg_p)
+    fj, lj = step_j(flat, x, y, jnp.float32(0.05))
+    fp, lp = step_p(flat, x, y, jnp.float32(0.05))
+    np.testing.assert_allclose(lj, lp, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(fj, fp, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# TLM semantics
+# ---------------------------------------------------------------------------
+
+
+def test_tlm_loss_near_uniform_at_init():
+    cfg = small_tlm()
+    flat = M.tlm_init(cfg, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (cfg.batch, cfg.seq), 0, cfg.vocab)
+    loss = M.tlm_loss(cfg, flat, toks)
+    assert np.isfinite(loss)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+def test_tlm_train_step_reduces_loss_on_fixed_batch():
+    cfg = small_tlm()
+    step = jax.jit(M.tlm_train_step(cfg))
+    flat = M.tlm_init(cfg, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (cfg.batch, cfg.seq), 0, cfg.vocab)
+    first = None
+    for i in range(25):
+        flat, loss = step(flat, toks, jnp.float32(0.05))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first
+
+
+def test_tlm_causality():
+    """Changing a future token must not affect earlier logits."""
+    cfg = small_tlm()
+    flat = M.tlm_init(cfg, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, cfg.seq), 0, cfg.vocab)
+    logits1 = M._tlm_logits(cfg, flat, toks)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % cfg.vocab)
+    logits2 = M._tlm_logits(cfg, flat, toks2)
+    np.testing.assert_allclose(logits1[0, :-1], logits2[0, :-1], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# P-Reduce graphs = the convergence-critical averaging semantics
+# ---------------------------------------------------------------------------
+
+
+def test_preduce_graph_matches_mean():
+    g = M.preduce_graph(3, 100, use_pallas=False)
+    stacked = jax.random.normal(jax.random.PRNGKey(0), (3, 100))
+    np.testing.assert_allclose(g(stacked), jnp.mean(stacked, axis=0), rtol=1e-6)
+
+
+def test_preduce_graph_pallas_jnp_agree():
+    gp = M.preduce_graph(4, 300, use_pallas=True)
+    gj = M.preduce_graph(4, 300, use_pallas=False)
+    stacked = jax.random.normal(jax.random.PRNGKey(1), (4, 300))
+    np.testing.assert_allclose(gp(stacked), gj(stacked), rtol=1e-5, atol=1e-6)
+
+
+def test_preduce_preserves_mean_of_ensemble():
+    """Doubly-stochastic property: total ensemble mass is conserved."""
+    g = M.preduce_graph(4, 50, use_pallas=False)
+    stacked = jax.random.normal(jax.random.PRNGKey(2), (4, 50))
+    avg = g(stacked)
+    after = jnp.tile(avg[None], (4, 1))
+    np.testing.assert_allclose(
+        jnp.mean(after, axis=0), jnp.mean(stacked, axis=0), rtol=1e-6
+    )
+
+
+def test_decentralized_averaging_contracts_disagreement():
+    """One P-Reduce strictly shrinks replica variance (spectral-gap intuition)."""
+    stacked = jax.random.normal(jax.random.PRNGKey(4), (4, 64))
+    g = M.preduce_graph(2, 64, use_pallas=False)
+    # average replicas {0,1} and {2,3}
+    a = g(stacked[:2])
+    b = g(stacked[2:])
+    after = jnp.stack([a, a, b, b])
+    var_before = float(jnp.var(stacked, axis=0).mean())
+    var_after = float(jnp.var(after, axis=0).mean())
+    assert var_after < var_before

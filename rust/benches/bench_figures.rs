@@ -1,0 +1,35 @@
+//! End-to-end figure benchmarks: regenerates every table/figure of the
+//! paper's evaluation and reports the wall time of each harness. This is
+//! the `cargo bench` entry point for deliverable (d) — one harness per
+//! paper table and figure (see DESIGN.md §Experiment-index).
+//!
+//! Run: `cargo bench --bench bench_figures`
+//! CSV traces land in `results/` (same as `ripples fig all --csv results`).
+
+use std::path::Path;
+use std::time::Instant;
+
+use ripples::bench::figures;
+
+fn main() {
+    let csv_dir = Path::new("results");
+    std::fs::create_dir_all(csv_dir).ok();
+    let ids = ["1", "2b", "15", "16", "17", "18", "19", "20"];
+    let mut total = 0.0;
+    for id in ids {
+        let t0 = Instant::now();
+        let tables = figures::run_figure(id, Some(csv_dir)).expect("figure harness");
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        for (title, table) in tables {
+            println!("== {title} ({dt:.2}s) ==");
+            println!("{}", table.render());
+            let path = csv_dir.join(format!(
+                "{}.csv",
+                title.to_lowercase().replace(' ', "_")
+            ));
+            std::fs::write(&path, table.to_csv()).expect("write table CSV");
+        }
+    }
+    println!("all figure harnesses regenerated in {total:.1}s; CSVs in results/");
+}

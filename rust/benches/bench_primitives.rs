@@ -1,0 +1,146 @@
+//! Primitive benchmarks (hand-rolled harness; criterion is not in the
+//! vendored registry). Measures the Layer-3 hot paths:
+//!   * fused P-Reduce mean (GB/s) across group sizes and model sizes
+//!   * threaded chunked ring all-reduce
+//!   * Group Generator request/complete throughput (random vs smart)
+//!   * lock vector ops and static scheduler lookups
+//!
+//! Run: `cargo bench --bench bench_primitives`
+
+use std::time::Instant;
+
+use ripples::collectives::{preduce_mean_inplace, ring};
+use ripples::gg::{GgConfig, GroupGenerator, LockVector, StaticScheduler};
+use ripples::util::rng::Pcg32;
+
+/// Robust timing: median of `reps` runs of `f` (returns seconds).
+fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[reps / 2]
+}
+
+fn rand_buf(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| rng.gen_f32()).collect()
+}
+
+fn bench_preduce_fused() {
+    println!("\n== fused P-Reduce mean (preduce_mean_inplace) ==");
+    println!("{:<10} {:<12} {:>12} {:>12}", "group", "elements", "median ms", "GB/s");
+    for &g in &[2usize, 3, 4, 8, 16] {
+        for &n in &[22_026usize, 434_816, 2_420_000] {
+            let mut bufs: Vec<Vec<f32>> = (0..g).map(|i| rand_buf(i as u64, n)).collect();
+            let mut scratch = Vec::new();
+            let t = time_median(9, || {
+                let mut refs: Vec<&mut [f32]> =
+                    bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                preduce_mean_inplace(&mut refs, &mut scratch);
+            });
+            // bytes touched: read g*n + write g*n floats
+            let gbps = (2.0 * g as f64 * n as f64 * 4.0) / t / 1e9;
+            println!("{g:<10} {n:<12} {:>12.3} {gbps:>12.2}", t * 1e3);
+        }
+    }
+}
+
+fn bench_ring() {
+    println!("\n== threaded chunked ring all-reduce ==");
+    println!("{:<10} {:<12} {:>12}", "ranks", "elements", "median ms");
+    for &p in &[2usize, 4, 8] {
+        for &n in &[22_026usize, 434_816] {
+            let t = time_median(7, || {
+                let mut bufs: Vec<Vec<f32>> =
+                    (0..p).map(|i| rand_buf(i as u64, n)).collect();
+                ring::ring_allreduce_mean(&mut bufs);
+            });
+            println!("{p:<10} {n:<12} {:>12.3}", t * 1e3);
+        }
+    }
+}
+
+fn bench_gg() {
+    println!("\n== Group Generator request+complete throughput ==");
+    println!("{:<22} {:>14} {:>12}", "policy", "ops/s", "us/op");
+    for (name, cfg) in [
+        ("random k=3", GgConfig::random(16, 4, 3)),
+        ("smart k=3", GgConfig::smart(16, 4, 3, 8)),
+        ("random k=3 n=64", GgConfig::random(64, 4, 3)),
+        ("smart k=3 n=64", GgConfig::smart(64, 4, 3, 8)),
+    ] {
+        let ops = 20_000usize;
+        let t = time_median(5, || {
+            let mut gg = GroupGenerator::new(cfg.clone());
+            let mut rng = Pcg32::new(7);
+            let n = cfg.n_workers;
+            let mut armed: Vec<(u64, Vec<usize>)> = Vec::new();
+            for i in 0..ops {
+                let (_, newly) = gg.request(i % n, &mut rng);
+                for g in newly {
+                    armed.push((g.id, g.members));
+                }
+                // complete oldest armed to keep the system flowing
+                while armed.len() > 4 {
+                    let (gid, _) = armed.remove(0);
+                    for g in gg.complete(gid) {
+                        armed.push((g.id, g.members));
+                    }
+                }
+            }
+            while let Some((gid, _)) = armed.pop() {
+                for g in gg.complete(gid) {
+                    armed.push((g.id, g.members));
+                }
+            }
+        });
+        println!("{name:<22} {:>14.0} {:>12.3}", ops as f64 / t, t / ops as f64 * 1e6);
+    }
+}
+
+fn bench_lockvec_and_sched() {
+    println!("\n== lock vector + static scheduler micro ==");
+    let mut lv = LockVector::new(1024);
+    let groups: Vec<Vec<usize>> = (0..256).map(|i| vec![i * 4, i * 4 + 1, i * 4 + 2]).collect();
+    let t = time_median(9, || {
+        for g in &groups {
+            assert!(lv.try_lock(g));
+        }
+        for g in &groups {
+            lv.release(g);
+        }
+    });
+    println!(
+        "lock vector   : {:>10.1} ns per try_lock+release (3-member group)",
+        t / groups.len() as f64 * 1e9
+    );
+    let s = StaticScheduler::new(4, 4);
+    let t = time_median(9, || {
+        let mut acc = 0usize;
+        for iter in 0..1000u64 {
+            for w in 0..16 {
+                if let Some(g) = s.group_of(w, iter) {
+                    acc += g.len();
+                }
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "static sched  : {:>10.1} ns per group_of lookup",
+        t / 16_000.0 * 1e9
+    );
+}
+
+fn main() {
+    println!("ripples primitive benchmarks (hand-rolled harness)");
+    bench_preduce_fused();
+    bench_ring();
+    bench_gg();
+    bench_lockvec_and_sched();
+    println!("\nbench_primitives done");
+}

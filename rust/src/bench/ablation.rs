@@ -1,0 +1,121 @@
+//! Ablation harness for the smart-GG design choices DESIGN.md calls out:
+//! Group Buffer, Global Division, Inter-Intra scheduling, and the
+//! slowdown filter are toggled one at a time to quantify what each
+//! contributes (§5's incremental story). Run via `ripples ablation`.
+
+use crate::config::AlgoKind;
+use crate::gg::GgConfig;
+use crate::metrics::Table;
+use crate::sim::{ripples, SimResult};
+
+use super::base_params;
+
+/// One ablation variant: a named GG configuration.
+pub struct Variant {
+    pub name: &'static str,
+    pub cfg_fn: fn(usize, usize, usize) -> GgConfig,
+}
+
+fn random(n: usize, wpn: usize, k: usize) -> GgConfig {
+    GgConfig::random(n, wpn, k)
+}
+
+fn gb_only(n: usize, wpn: usize, k: usize) -> GgConfig {
+    let mut c = GgConfig::random(n, wpn, k);
+    c.use_group_buffer = true;
+    c
+}
+
+fn gb_gd(n: usize, wpn: usize, k: usize) -> GgConfig {
+    let mut c = GgConfig::random(n, wpn, k);
+    c.use_group_buffer = true;
+    c.use_global_division = true;
+    c
+}
+
+fn full_smart(n: usize, wpn: usize, k: usize) -> GgConfig {
+    GgConfig::smart(n, wpn, k, 8)
+}
+
+fn smart_no_filter(n: usize, wpn: usize, k: usize) -> GgConfig {
+    let mut c = GgConfig::smart(n, wpn, k, 8);
+    c.c_thres = None;
+    c
+}
+
+pub const VARIANTS: &[Variant] = &[
+    Variant { name: "random (baseline)", cfg_fn: random },
+    Variant { name: "+ group buffer", cfg_fn: gb_only },
+    Variant { name: "+ global division", cfg_fn: gb_gd },
+    Variant { name: "+ inter-intra (full smart)", cfg_fn: full_smart },
+    Variant { name: "smart w/o slowdown filter", cfg_fn: smart_no_filter },
+];
+
+/// Run a variant in the event engine with a custom GG config.
+fn run_variant(v: &Variant, slow: Option<(usize, f64)>) -> SimResult {
+    let mut p = base_params(AlgoKind::RipplesSmart);
+    p.exp.cluster.hetero.slow_worker = slow;
+    let cfg = (v.cfg_fn)(
+        p.exp.cluster.n_workers(),
+        p.exp.cluster.workers_per_node,
+        p.exp.algo.group_size,
+    );
+    ripples::run_with_gg(&p, cfg)
+}
+
+/// The ablation table: each §5 mechanism toggled, homo + 5x straggler.
+pub fn ablation_table() -> Table {
+    let mut t = Table::new(&[
+        "variant",
+        "homo t2t(s)",
+        "homo conflicts",
+        "5x t2t(s)",
+        "5x degradation",
+    ]);
+    for v in VARIANTS {
+        let homo = run_variant(v, None);
+        let slow = run_variant(v, Some((7, 6.0)));
+        let homo_t = homo.time_to_target.unwrap_or(homo.final_time);
+        let slow_t = slow.time_to_target.unwrap_or(slow.final_time);
+        t.row(vec![
+            v.name.into(),
+            format!("{homo_t:.1}"),
+            format!("{}", homo.conflicts),
+            format!("{slow_t:.1}"),
+            format!("{:.2}x", slow_t / homo_t),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_all_run_short() {
+        for v in VARIANTS {
+            let mut p = base_params(AlgoKind::RipplesSmart);
+            p.exp.train.max_iters = 30;
+            p.exp.train.loss_target = None;
+            let cfg = (v.cfg_fn)(16, 4, 3);
+            let res = ripples::run_with_gg(&p, cfg);
+            assert_eq!(res.total_iters, 30 * 16, "{}", v.name);
+        }
+    }
+
+    #[test]
+    fn group_buffer_reduces_conflicts() {
+        let mut p = base_params(AlgoKind::RipplesSmart);
+        p.exp.train.max_iters = 120;
+        p.exp.train.loss_target = None;
+        let random = ripples::run_with_gg(&p, (VARIANTS[0].cfg_fn)(16, 4, 3));
+        let gb = ripples::run_with_gg(&p, (VARIANTS[1].cfg_fn)(16, 4, 3));
+        assert!(
+            gb.conflicts < random.conflicts,
+            "GB {} vs random {}",
+            gb.conflicts,
+            random.conflicts
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! Benchmark harnesses that regenerate every table and figure of the
+//! paper's evaluation (§7). Each `figN` function builds the workload,
+//! sweeps the parameters, runs all algorithms involved, and returns the
+//! rows the paper reports (plus the paper's expected *shape* for
+//! comparison). Invoked via `ripples fig <id>` and by `cargo bench`.
+
+pub mod ablation;
+pub mod figures;
+
+use crate::config::{AlgoKind, Experiment};
+use crate::model::MlpSpec;
+use crate::sim::{self, SimParams, SimResult};
+
+/// The fast "bench" model: small enough that real-math convergence sweeps
+/// run in seconds, big enough to show the algorithms' statistical
+/// differences. Communication costs stay calibrated to VGG-16 regardless
+/// (see `SimParams.model_bytes`).
+pub fn bench_spec() -> MlpSpec {
+    MlpSpec { in_dim: 16, hidden: vec![64], classes: 10 }
+}
+
+/// Default loss target for time-to-convergence experiments (the analogue
+/// of the paper's "loss = 0.32" on VGG-16/CIFAR-10, §7.1.4).
+pub const LOSS_TARGET: f64 = 0.02;
+
+/// Standard experiment: 16 workers on 4 nodes, VGG-16-calibrated costs.
+pub fn base_params(kind: AlgoKind) -> SimParams {
+    let mut exp = Experiment::default();
+    exp.algo.kind = kind;
+    exp.train.lr = 0.08;
+    exp.train.max_iters = 2500;
+    exp.train.eval_every = 5;
+    exp.train.loss_target = Some(LOSS_TARGET);
+    exp.train.seed = 42;
+    let mut p = SimParams::vgg16_defaults(exp);
+    p.spec = bench_spec();
+    p.dataset_size = 2048;
+    p.batch = 64;
+    p.data_bias = 0.6; // non-IID shards: sync structure drives convergence
+    p
+}
+
+/// Run `kind` with an optional `(worker, factor)` slowdown.
+pub fn run_algo(kind: AlgoKind, slow: Option<(usize, f64)>) -> SimResult {
+    let mut p = base_params(kind);
+    p.exp.cluster.hetero.slow_worker = slow;
+    sim::run(&p)
+}
+
+/// Time-to-target, falling back to final time when the target wasn't hit
+/// (reported with a `>` marker by the tables).
+pub fn ttt(res: &SimResult) -> (f64, bool) {
+    match res.time_to_target {
+        Some(t) => (t, true),
+        None => (res.final_time, false),
+    }
+}
+
+/// Format a time-to-target with the miss marker.
+pub fn fmt_ttt(res: &SimResult) -> String {
+    let (t, hit) = ttt(res);
+    if hit {
+        format!("{t:.1}")
+    } else {
+        format!(">{t:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_params_valid() {
+        for &k in AlgoKind::all() {
+            base_params(k).exp.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn bench_model_converges_to_target() {
+        // The whole harness depends on the target being reachable.
+        let mut p = base_params(AlgoKind::AllReduce);
+        p.exp.train.max_iters = 1200;
+        let res = sim::run(&p);
+        assert!(
+            res.time_to_target.is_some(),
+            "target {LOSS_TARGET} unreachable: last loss {:?}",
+            res.trace.last().map(|t| t.loss)
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! Data-plane collective operations over flat `f32` model buffers.
+//!
+//! Two implementations of the P-Reduce arithmetic:
+//!
+//! * [`preduce_mean_inplace`] — the fused single-pass mean the simulator's
+//!   hot path uses (the paper's F^G applied directly).
+//! * [`ring`] — a real chunked ring all-reduce executed by one thread per
+//!   rank over in-memory channels: reduce-scatter then all-gather, the
+//!   exact schedule the cost model charges for. Used by the thread runtime
+//!   and as a differential oracle for the fused path.
+
+pub mod ring;
+
+/// Block size for the fused mean: 8K floats (32 KiB) keeps the scratch
+/// stripe resident in L1 while each member buffer streams through once.
+/// Chosen by the §Perf sweep in EXPERIMENTS.md.
+const MEAN_BLOCK: usize = 8192;
+
+/// Apply F^G: replace every buffer in `bufs` with their element-wise mean.
+///
+/// Blocked two-pass: per `MEAN_BLOCK`-sized stripe, accumulate all members
+/// into an L1-resident scratch stripe, scale, and broadcast back — each
+/// member byte crosses DRAM exactly twice (read + write), and the scratch
+/// traffic stays in cache. Scratch is caller-provided so the training hot
+/// loop performs zero allocations.
+pub fn preduce_mean_inplace(bufs: &mut [&mut [f32]], scratch: &mut Vec<f32>) {
+    let g = bufs.len();
+    if g <= 1 {
+        return;
+    }
+    let n = bufs[0].len();
+    debug_assert!(bufs.iter().all(|b| b.len() == n), "ragged buffers");
+    let inv = 1.0 / g as f32;
+    scratch.clear();
+    scratch.resize(n.min(MEAN_BLOCK), 0.0);
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + MEAN_BLOCK).min(n);
+        let stripe = &mut scratch[..hi - lo];
+        stripe.copy_from_slice(&bufs[0][lo..hi]);
+        for buf in bufs[1..].iter() {
+            for (s, &v) in stripe.iter_mut().zip(buf[lo..hi].iter()) {
+                *s += v;
+            }
+        }
+        for s in stripe.iter_mut() {
+            *s *= inv;
+        }
+        for buf in bufs.iter_mut() {
+            buf[lo..hi].copy_from_slice(stripe);
+        }
+        lo = hi;
+    }
+}
+
+/// Weighted F^G row: every buffer becomes `sum_g w[g] * buf[g]`.
+pub fn preduce_weighted_inplace(
+    bufs: &mut [&mut [f32]],
+    weights: &[f32],
+    scratch: &mut Vec<f32>,
+) {
+    let g = bufs.len();
+    assert_eq!(g, weights.len());
+    if g == 0 {
+        return;
+    }
+    let n = bufs[0].len();
+    scratch.clear();
+    scratch.resize(n, 0.0);
+    for (buf, &w) in bufs.iter().zip(weights.iter()) {
+        for (s, &v) in scratch.iter_mut().zip(buf.iter()) {
+            *s += w * v;
+        }
+    }
+    for buf in bufs.iter_mut() {
+        buf.copy_from_slice(scratch);
+    }
+}
+
+/// Mean of `k` stacked buffers into `out` (the PS/All-Reduce gradient path).
+pub fn mean_into(bufs: &[&[f32]], out: &mut [f32]) {
+    let g = bufs.len();
+    assert!(g > 0);
+    out.copy_from_slice(bufs[0]);
+    for buf in &bufs[1..] {
+        for (o, &v) in out.iter_mut().zip(buf.iter()) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / g as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_buf(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn mean_inplace_matches_naive() {
+        let n = 1000;
+        let mut a = rand_buf(1, n);
+        let mut b = rand_buf(2, n);
+        let mut c = rand_buf(3, n);
+        let expect: Vec<f32> = (0..n).map(|i| (a[i] + b[i] + c[i]) / 3.0).collect();
+        let mut scratch = Vec::new();
+        preduce_mean_inplace(&mut [&mut a, &mut b, &mut c], &mut scratch);
+        for i in 0..n {
+            assert!((a[i] - expect[i]).abs() < 1e-6);
+            assert_eq!(a[i], b[i]);
+            assert_eq!(b[i], c[i]);
+        }
+    }
+
+    #[test]
+    fn mean_inplace_singleton_noop() {
+        let mut a = rand_buf(1, 10);
+        let orig = a.clone();
+        let mut scratch = Vec::new();
+        preduce_mean_inplace(&mut [&mut a], &mut scratch);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn mean_preserves_ensemble_sum() {
+        // Doubly-stochastic property: sum over replicas is invariant.
+        let n = 257;
+        let mut a = rand_buf(4, n);
+        let mut b = rand_buf(5, n);
+        let before: f64 = a.iter().chain(b.iter()).map(|&v| v as f64).sum();
+        let mut scratch = Vec::new();
+        preduce_mean_inplace(&mut [&mut a, &mut b], &mut scratch);
+        let after: f64 = a.iter().chain(b.iter()).map(|&v| v as f64).sum();
+        assert!((before - after).abs() < 1e-3);
+    }
+
+    #[test]
+    fn weighted_uniform_equals_mean() {
+        let n = 128;
+        let mut a1 = rand_buf(7, n);
+        let mut b1 = rand_buf(8, n);
+        let mut a2 = a1.clone();
+        let mut b2 = b1.clone();
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        preduce_mean_inplace(&mut [&mut a1, &mut b1], &mut s1);
+        preduce_weighted_inplace(&mut [&mut a2, &mut b2], &[0.5, 0.5], &mut s2);
+        for i in 0..n {
+            assert!((a1[i] - a2[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mean_into_basic() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        let mut out = vec![0.0f32; 2];
+        mean_into(&[&a, &b], &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn idempotent_after_first_apply() {
+        let n = 64;
+        let mut a = rand_buf(9, n);
+        let mut b = rand_buf(10, n);
+        let mut scratch = Vec::new();
+        preduce_mean_inplace(&mut [&mut a, &mut b], &mut scratch);
+        let snap = a.clone();
+        preduce_mean_inplace(&mut [&mut a, &mut b], &mut scratch);
+        assert_eq!(a, snap, "F^G F^G = F^G");
+    }
+}

@@ -1,0 +1,203 @@
+//! Real chunked ring all-reduce across thread "ranks".
+//!
+//! Implements the schedule the paper's P-Reduce leans on (§3.2): the
+//! buffer is split into `p` chunks; `p-1` reduce-scatter steps accumulate
+//! each chunk onto one rank, then `p-1` all-gather steps broadcast the
+//! finished chunks — `2(p-1)` total steps with `n/p` elements on every
+//! edge per step, which is bandwidth-optimal.
+//!
+//! Ranks are OS threads connected by mpsc channels in a ring. This is the
+//! data plane used by the thread runtime (`runtime::threaded`) and the
+//! differential oracle for the fused `preduce_mean_inplace` path.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+/// Chunk boundaries: chunk `c` covers `bounds(c).0 .. bounds(c).1`.
+fn chunk_bounds(n: usize, p: usize, c: usize) -> (usize, usize) {
+    let base = n / p;
+    let rem = n % p;
+    let start = c * base + c.min(rem);
+    let len = base + usize::from(c < rem);
+    (start, start + len)
+}
+
+/// Run a mean-all-reduce over `bufs` using the ring schedule, one thread
+/// per rank. Buffers are updated in place; all end up identical.
+pub fn ring_allreduce_mean(bufs: &mut [Vec<f32>]) {
+    let p = bufs.len();
+    if p <= 1 {
+        return;
+    }
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n), "ragged buffers");
+
+    // Build the ring: rank r sends to (r+1)%p, receives from (r-1+p)%p.
+    let mut senders: Vec<Option<Sender<Vec<f32>>>> = (0..p).map(|_| None).collect();
+    let mut receivers: Vec<Option<Receiver<Vec<f32>>>> = (0..p).map(|_| None).collect();
+    for r in 0..p {
+        let (tx, rx) = channel();
+        senders[r] = Some(tx); // rank r's outbound edge
+        receivers[(r + 1) % p] = Some(rx); // delivered to rank r+1
+    }
+
+    thread::scope(|scope| {
+        for (r, buf) in bufs.iter_mut().enumerate() {
+            let tx = senders[r].take().unwrap();
+            let rx = receivers[r].take().unwrap();
+            scope.spawn(move || {
+                rank_allreduce(r, p, buf, &tx, &rx);
+            });
+        }
+    });
+}
+
+fn rank_allreduce(
+    r: usize,
+    p: usize,
+    buf: &mut [f32],
+    tx: &Sender<Vec<f32>>,
+    rx: &Receiver<Vec<f32>>,
+) {
+    let n = buf.len();
+    // --- reduce-scatter: after step s, rank r has accumulated chunk
+    //     (r - s) into a partial sum of s+2 contributions.
+    for s in 0..p - 1 {
+        let send_c = (r + p - s) % p;
+        let (lo, hi) = chunk_bounds(n, p, send_c);
+        tx.send(buf[lo..hi].to_vec()).expect("ring send");
+        let incoming = rx.recv().expect("ring recv");
+        let recv_c = (r + p - s - 1) % p;
+        let (lo, hi) = chunk_bounds(n, p, recv_c);
+        for (b, v) in buf[lo..hi].iter_mut().zip(incoming.iter()) {
+            *b += v;
+        }
+    }
+    // Rank r now owns the fully-reduced chunk (r+1)%p; divide it to a mean.
+    let owned = (r + 1) % p;
+    let (lo, hi) = chunk_bounds(n, p, owned);
+    let inv = 1.0 / p as f32;
+    for b in buf[lo..hi].iter_mut() {
+        *b *= inv;
+    }
+    // --- all-gather: circulate finished chunks.
+    for s in 0..p - 1 {
+        let send_c = (r + 1 + p - s) % p;
+        let (lo, hi) = chunk_bounds(n, p, send_c);
+        tx.send(buf[lo..hi].to_vec()).expect("ring send");
+        let incoming = rx.recv().expect("ring recv");
+        let recv_c = (r + p - s) % p;
+        let (lo, hi) = chunk_bounds(n, p, recv_c);
+        buf[lo..hi].copy_from_slice(&incoming);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_bufs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::new(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect())
+            .collect()
+    }
+
+    fn naive_mean(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let p = bufs.len();
+        let n = bufs[0].len();
+        (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / p as f32)
+            .collect()
+    }
+
+    #[test]
+    fn chunk_bounds_partition() {
+        for n in [0usize, 1, 7, 16, 100] {
+            for p in 1..=8 {
+                let mut covered = 0;
+                for c in 0..p {
+                    let (lo, hi) = chunk_bounds(n, p, c);
+                    assert_eq!(lo, covered, "n={n} p={p} c={c}");
+                    covered = hi;
+                }
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_matches_naive_various_sizes() {
+        for (p, n) in [(2usize, 10usize), (3, 7), (4, 64), (5, 1000), (8, 129)] {
+            let mut bufs = rand_bufs(p, n, (p * 1000 + n) as u64);
+            let expect = naive_mean(&bufs);
+            ring_allreduce_mean(&mut bufs);
+            for (r, buf) in bufs.iter().enumerate() {
+                for i in 0..n {
+                    assert!(
+                        (buf[i] - expect[i]).abs() < 1e-5,
+                        "p={p} n={n} rank={r} idx={i}: {} vs {}",
+                        buf[i],
+                        expect[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_ranks_identical() {
+        let mut bufs = rand_bufs(6, 333, 77);
+        ring_allreduce_mean(&mut bufs);
+        for r in 1..6 {
+            assert_eq!(bufs[0], bufs[r], "rank {r} diverged");
+        }
+    }
+
+    #[test]
+    fn ring_singleton_and_pair() {
+        let mut one = rand_bufs(1, 16, 5);
+        let orig = one[0].clone();
+        ring_allreduce_mean(&mut one);
+        assert_eq!(one[0], orig);
+
+        let mut two = vec![vec![1.0f32; 8], vec![3.0f32; 8]];
+        ring_allreduce_mean(&mut two);
+        assert!(two[0].iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        assert_eq!(two[0], two[1]);
+    }
+
+    #[test]
+    fn ring_n_smaller_than_p() {
+        // Degenerate chunking: some chunks are empty.
+        let mut bufs = rand_bufs(8, 3, 9);
+        let expect = naive_mean(&bufs);
+        ring_allreduce_mean(&mut bufs);
+        for buf in &bufs {
+            for i in 0..3 {
+                assert!((buf[i] - expect[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_agrees_with_fused_preduce() {
+        // Differential test: the collective schedule and the fused mean
+        // must produce the same F^G result.
+        let mut ring_bufs = rand_bufs(4, 501, 21);
+        let mut a = ring_bufs[0].clone();
+        let mut b = ring_bufs[1].clone();
+        let mut c = ring_bufs[2].clone();
+        let mut d = ring_bufs[3].clone();
+        ring_allreduce_mean(&mut ring_bufs);
+        let mut scratch = Vec::new();
+        super::super::preduce_mean_inplace(
+            &mut [&mut a, &mut b, &mut c, &mut d],
+            &mut scratch,
+        );
+        for i in 0..501 {
+            assert!((ring_bufs[0][i] - a[i]).abs() < 1e-5);
+        }
+    }
+}

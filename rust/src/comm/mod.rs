@@ -1,0 +1,224 @@
+//! Interconnect cost model + communicator cache.
+//!
+//! The simulator charges virtual time for every transfer using the classic
+//! alpha-beta model (`latency + bytes / bandwidth`) with two link domains:
+//! intra-node (PCIe/QPI) and inter-node (InfiniBand), mirroring the
+//! paper's Maverick2 testbed (Fig. 14) and its observation (Fig. 15) that
+//! all-reduce cost depends strongly on worker *placement*.
+
+use crate::config::ClusterConfig;
+use std::collections::HashMap;
+
+/// Alpha-beta cost model over the two-level topology.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub workers_per_node: usize,
+    pub intra_bw: f64,
+    pub inter_bw: f64,
+    pub intra_lat: f64,
+    pub inter_lat: f64,
+    pub rpc_rtt: f64,
+}
+
+impl CostModel {
+    pub fn from_cluster(c: &ClusterConfig) -> Self {
+        Self {
+            workers_per_node: c.workers_per_node,
+            intra_bw: c.link.intra_bw,
+            inter_bw: c.link.inter_bw,
+            intra_lat: c.link.intra_lat,
+            inter_lat: c.link.inter_lat,
+            rpc_rtt: c.link.rpc_rtt,
+        }
+    }
+
+    pub fn node_of(&self, w: usize) -> usize {
+        w / self.workers_per_node
+    }
+
+    /// Point-to-point transfer time for `bytes` between workers `a` and `b`.
+    pub fn p2p(&self, a: usize, b: usize, bytes: usize) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        if self.node_of(a) == self.node_of(b) {
+            self.intra_lat + bytes as f64 / self.intra_bw
+        } else {
+            self.inter_lat + bytes as f64 / self.inter_bw
+        }
+    }
+
+    /// Ring all-reduce time for a `group` of workers moving `bytes` each.
+    ///
+    /// Standard chunked schedule: `2(p-1)` steps, each moving `bytes/p`
+    /// over every ring edge in parallel, so each step costs the *slowest*
+    /// edge (the paper's "bounded by the edge with the slowest connection",
+    /// §2.3). The ring is ordered node-major so workers on the same node
+    /// are adjacent — the same placement optimization NCCL applies — which
+    /// reproduces Fig. 15's dense-vs-sparse placement effect.
+    pub fn ring_allreduce(&self, group: &[usize], bytes: usize) -> f64 {
+        let p = group.len();
+        if p <= 1 {
+            return 0.0;
+        }
+        let mut ring = group.to_vec();
+        ring.sort_unstable(); // node-major adjacency
+        let chunk = (bytes as f64 / p as f64).ceil();
+        let mut worst = 0.0f64;
+        for i in 0..p {
+            let a = ring[i];
+            let b = ring[(i + 1) % p];
+            let t = if self.node_of(a) == self.node_of(b) {
+                self.intra_lat + chunk / self.intra_bw
+            } else {
+                self.inter_lat + chunk / self.inter_bw
+            };
+            if t > worst {
+                worst = t;
+            }
+        }
+        2.0 * (p - 1) as f64 * worst
+    }
+
+    /// Pairwise model averaging as AD-PSGD implements it over TF remote
+    /// variables: the active worker ships its model to the passive one and
+    /// receives the averaged model back — two full-model transfers plus a
+    /// per-sync software overhead (lock + graph dispatch), which is what
+    /// makes AD-PSGD sync-dominated in Fig. 2(b).
+    pub fn pairwise_avg(&self, a: usize, b: usize, bytes: usize, overhead: f64) -> f64 {
+        2.0 * self.p2p(a, b, bytes) + overhead
+    }
+
+    /// One synchronous PS round for `n` workers: all gradients funnel into
+    /// the server link (serialized), then the model fans back out.
+    pub fn ps_round(&self, n: usize, bytes: usize) -> f64 {
+        // Server sits on node 0; remote workers share the inter-node pipe.
+        let t_in = n as f64 * bytes as f64 / self.inter_bw + self.inter_lat;
+        let t_out = n as f64 * bytes as f64 / self.inter_bw + self.inter_lat;
+        t_in + t_out
+    }
+
+    /// GG request/notify round trip (small control messages only).
+    pub fn gg_rtt(&self) -> f64 {
+        self.rpc_rtt
+    }
+}
+
+/// Communicator cache, mirroring §6.1: NCCL communicators are expensive to
+/// create (and capped at 64), so Ripples caches them per group membership.
+/// We model the same: first use of a group pays `create_cost`, subsequent
+/// uses are free; the cache stops admitting (but keeps serving misses at
+/// full cost) beyond `capacity`.
+#[derive(Debug)]
+pub struct CommCache {
+    capacity: usize,
+    create_cost: f64,
+    cached: HashMap<Vec<usize>, u64>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CommCache {
+    pub fn new(capacity: usize, create_cost: f64) -> Self {
+        Self { capacity, create_cost, cached: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Cost of obtaining a communicator for `group` (sorted internally).
+    pub fn acquire(&mut self, group: &[usize]) -> f64 {
+        let mut key = group.to_vec();
+        key.sort_unstable();
+        if let Some(uses) = self.cached.get_mut(&key) {
+            *uses += 1;
+            self.hits += 1;
+            return 0.0;
+        }
+        self.misses += 1;
+        if self.cached.len() < self.capacity {
+            self.cached.insert(key, 1);
+        }
+        self.create_cost
+    }
+
+    pub fn len(&self) -> usize {
+        self.cached.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cached.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cm() -> CostModel {
+        CostModel::from_cluster(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn p2p_intra_cheaper_than_inter() {
+        let m = cm();
+        let bytes = 1 << 20;
+        assert!(m.p2p(0, 1, bytes) < m.p2p(0, 4, bytes));
+        assert_eq!(m.p2p(3, 3, bytes), 0.0);
+    }
+
+    #[test]
+    fn ring_allreduce_zero_for_singleton() {
+        let m = cm();
+        assert_eq!(m.ring_allreduce(&[3], 1 << 20), 0.0);
+        assert_eq!(m.ring_allreduce(&[], 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn ring_intra_node_faster_than_cross_node() {
+        // Fig. 15: all-reduce among workers in one node beats the same
+        // group size spread over nodes *with multiple workers per node*.
+        let m = cm();
+        let bytes = 9 << 20; // ~VGG-16 9.23 MB
+        let intra = m.ring_allreduce(&[0, 1, 2, 3], bytes);
+        let spread = m.ring_allreduce(&[0, 1, 4, 5], bytes);
+        assert!(intra < spread, "{intra} vs {spread}");
+    }
+
+    #[test]
+    fn ring_grows_with_group_size() {
+        let m = cm();
+        let bytes = 9 << 20;
+        let g8 = m.ring_allreduce(&(0..8).collect::<Vec<_>>(), bytes);
+        let g16 = m.ring_allreduce(&(0..16).collect::<Vec<_>>(), bytes);
+        assert!(g16 > g8);
+    }
+
+    #[test]
+    fn ring_beats_ps_at_scale() {
+        // The motivation for all-reduce over PS in the paper's §2.2.
+        let m = cm();
+        let bytes = 9 << 20;
+        let group: Vec<usize> = (0..16).collect();
+        assert!(m.ring_allreduce(&group, bytes) < m.ps_round(16, bytes));
+    }
+
+    #[test]
+    fn pairwise_includes_overhead() {
+        let m = cm();
+        let t0 = m.pairwise_avg(0, 4, 1 << 20, 0.0);
+        let t1 = m.pairwise_avg(0, 4, 1 << 20, 0.5);
+        assert!((t1 - t0 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_cache_hits_and_capacity() {
+        let mut cache = CommCache::new(2, 1.0);
+        assert_eq!(cache.acquire(&[0, 1, 2]), 1.0); // miss, cached
+        assert_eq!(cache.acquire(&[2, 1, 0]), 0.0); // same set -> hit
+        assert_eq!(cache.acquire(&[3, 4]), 1.0); // miss, cached (full now)
+        assert_eq!(cache.acquire(&[5, 6]), 1.0); // miss, NOT cached
+        assert_eq!(cache.acquire(&[5, 6]), 1.0); // still a miss
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 4);
+    }
+}

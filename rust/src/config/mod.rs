@@ -1,0 +1,368 @@
+//! Configuration: cluster topology, training hyperparameters, algorithm
+//! selection — plus a TOML-subset file loader (no serde in the registry).
+//!
+//! The defaults reproduce the paper's testbed: 4 nodes x 4 GPUs (16
+//! workers), FDR InfiniBand between nodes, PCIe/QPI within a node
+//! (Maverick2 GTX partition, Fig. 14).
+
+mod parse;
+
+pub use parse::{parse_toml_subset, TomlValue};
+
+use crate::cluster::HeterogeneityProfile;
+
+/// Which synchronization algorithm runs (paper §2.2, §4, §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    /// Ring all-reduce every iteration (Horovod-like baseline).
+    AllReduce,
+    /// Centralized parameter server (TensorFlow PS baseline).
+    ParameterServer,
+    /// Synchronous decentralized SGD on a fixed ring graph.
+    DPsgd,
+    /// Asynchronous decentralized SGD, bipartite active/passive (Lian et al.).
+    AdPsgd,
+    /// Ripples with the rule-based conflict-free static schedule (§4.2).
+    RipplesStatic,
+    /// Ripples with plain randomized GG (§4.1).
+    RipplesRandom,
+    /// Ripples with smart GG: Group Buffer + Global Division + Inter-Intra
+    /// + slowdown filter (§5).
+    RipplesSmart,
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "allreduce" | "all-reduce" | "ar" => AlgoKind::AllReduce,
+            "ps" | "parameter-server" | "parameterserver" => AlgoKind::ParameterServer,
+            "dpsgd" | "d-psgd" => AlgoKind::DPsgd,
+            "adpsgd" | "ad-psgd" => AlgoKind::AdPsgd,
+            "ripples-static" | "static" => AlgoKind::RipplesStatic,
+            "ripples-random" | "random" => AlgoKind::RipplesRandom,
+            "ripples-smart" | "smart" | "ripples" => AlgoKind::RipplesSmart,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::AllReduce => "all-reduce",
+            AlgoKind::ParameterServer => "parameter-server",
+            AlgoKind::DPsgd => "d-psgd",
+            AlgoKind::AdPsgd => "ad-psgd",
+            AlgoKind::RipplesStatic => "ripples-static",
+            AlgoKind::RipplesRandom => "ripples-random",
+            AlgoKind::RipplesSmart => "ripples-smart",
+        }
+    }
+
+    pub fn all() -> &'static [AlgoKind] {
+        &[
+            AlgoKind::AllReduce,
+            AlgoKind::ParameterServer,
+            AlgoKind::DPsgd,
+            AlgoKind::AdPsgd,
+            AlgoKind::RipplesStatic,
+            AlgoKind::RipplesRandom,
+            AlgoKind::RipplesSmart,
+        ]
+    }
+}
+
+/// Interconnect cost model (see `comm::CostModel` for the formulas).
+#[derive(Debug, Clone)]
+pub struct LinkConfig {
+    /// Bandwidth within one node (PCIe/NVLink-ish), bytes/sec.
+    pub intra_bw: f64,
+    /// Bandwidth between nodes (FDR InfiniBand ~ 56 Gb/s), bytes/sec.
+    pub inter_bw: f64,
+    /// One-way latency within a node, seconds.
+    pub intra_lat: f64,
+    /// One-way latency between nodes, seconds.
+    pub inter_lat: f64,
+    /// GG RPC round-trip latency, seconds (gRPC-on-IB in the paper).
+    pub rpc_rtt: f64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        Self {
+            intra_bw: 12.0e9,  // ~PCIe 3.0 x16 effective
+            inter_bw: 6.0e9,   // ~FDR IB effective per direction
+            intra_lat: 5e-6,
+            inter_lat: 25e-6,
+            rpc_rtt: 150e-6,
+        }
+    }
+}
+
+/// Cluster shape: `n_nodes` nodes with `workers_per_node` workers each.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub n_nodes: usize,
+    pub workers_per_node: usize,
+    pub link: LinkConfig,
+    pub hetero: HeterogeneityProfile,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            n_nodes: 4,
+            workers_per_node: 4,
+            link: LinkConfig::default(),
+            hetero: HeterogeneityProfile::default(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn n_workers(&self) -> usize {
+        self.n_nodes * self.workers_per_node
+    }
+
+    pub fn node_of(&self, worker: usize) -> usize {
+        worker / self.workers_per_node
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_nodes == 0 || self.workers_per_node == 0 {
+            return Err("cluster must have at least one node and worker".into());
+        }
+        if let Some((w, f)) = self.hetero.slow_worker {
+            if w >= self.n_workers() {
+                return Err(format!("slow worker {w} out of range"));
+            }
+            if f < 1.0 {
+                return Err(format!("slowdown factor {f} must be >= 1"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Algorithm-specific knobs.
+#[derive(Debug, Clone)]
+pub struct AlgoConfig {
+    pub kind: AlgoKind,
+    /// Group size for randomized GG (paper uses 3 in §7.1.3).
+    pub group_size: usize,
+    /// Slowdown filter threshold `C_thres` (§5.3), in iterations.
+    pub c_thres: u64,
+    /// Iterations between synchronizations ("section length", Fig. 16).
+    pub section_len: usize,
+    /// AD-PSGD communication graph: ring neighbors only if true, else any
+    /// opposite-set worker (bipartite sets are always enforced).
+    pub adpsgd_ring_only: bool,
+}
+
+impl Default for AlgoConfig {
+    fn default() -> Self {
+        Self {
+            kind: AlgoKind::RipplesSmart,
+            group_size: 3,
+            c_thres: 8,
+            section_len: 1,
+            adpsgd_ring_only: false,
+        }
+    }
+}
+
+impl AlgoConfig {
+    pub fn validate(&self, n_workers: usize) -> Result<(), String> {
+        if self.group_size < 2 {
+            return Err("group_size must be >= 2".into());
+        }
+        if self.group_size > n_workers {
+            return Err(format!(
+                "group_size {} exceeds worker count {n_workers}",
+                self.group_size
+            ));
+        }
+        if self.section_len == 0 {
+            return Err("section_len must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Training-loop knobs (model-agnostic).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub max_iters: usize,
+    /// Stop when the smoothed global loss falls below this (paper's
+    /// "time to loss = 0.32" methodology, §7.1.4).
+    pub loss_target: Option<f64>,
+    pub seed: u64,
+    /// Evaluate global loss every `eval_every` iterations of worker 0.
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            lr: 0.05,
+            max_iters: 4000,
+            loss_target: None,
+            seed: 42,
+            eval_every: 20,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Experiment {
+    pub cluster: ClusterConfig,
+    pub algo: AlgoConfig,
+    pub train: TrainConfig,
+}
+
+impl Experiment {
+    pub fn validate(&self) -> Result<(), String> {
+        self.cluster.validate()?;
+        self.algo.validate(self.cluster.n_workers())?;
+        Ok(())
+    }
+
+    /// Load from the TOML-subset format (see `config::parse`).
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_str_cfg(&text)
+    }
+
+    pub fn from_str_cfg(text: &str) -> Result<Self, String> {
+        let doc = parse_toml_subset(text)?;
+        let mut exp = Experiment::default();
+        for (section, key, value) in &doc {
+            exp.apply(section, key, value)?;
+        }
+        exp.validate()?;
+        Ok(exp)
+    }
+
+    fn apply(&mut self, section: &str, key: &str, v: &TomlValue) -> Result<(), String> {
+        let bad = || format!("bad value for {section}.{key}: {v:?}");
+        match (section, key) {
+            ("cluster", "n_nodes") => self.cluster.n_nodes = v.as_usize().ok_or_else(bad)?,
+            ("cluster", "workers_per_node") => {
+                self.cluster.workers_per_node = v.as_usize().ok_or_else(bad)?
+            }
+            ("cluster", "intra_bw") => self.cluster.link.intra_bw = v.as_f64().ok_or_else(bad)?,
+            ("cluster", "inter_bw") => self.cluster.link.inter_bw = v.as_f64().ok_or_else(bad)?,
+            ("cluster", "intra_lat") => self.cluster.link.intra_lat = v.as_f64().ok_or_else(bad)?,
+            ("cluster", "inter_lat") => self.cluster.link.inter_lat = v.as_f64().ok_or_else(bad)?,
+            ("cluster", "rpc_rtt") => self.cluster.link.rpc_rtt = v.as_f64().ok_or_else(bad)?,
+            ("cluster", "slow_worker") => {
+                let pair = v.as_arr().ok_or_else(bad)?;
+                if pair.len() != 2 {
+                    return Err(bad());
+                }
+                self.cluster.hetero.slow_worker = Some((
+                    pair[0].as_usize().ok_or_else(bad)?,
+                    pair[1].as_f64().ok_or_else(bad)?,
+                ));
+            }
+            ("cluster", "jitter") => self.cluster.hetero.jitter = v.as_f64().ok_or_else(bad)?,
+            ("algo", "kind") => {
+                let s = v.as_str().ok_or_else(bad)?;
+                self.algo.kind =
+                    AlgoKind::parse(s).ok_or_else(|| format!("unknown algorithm '{s}'"))?;
+            }
+            ("algo", "group_size") => self.algo.group_size = v.as_usize().ok_or_else(bad)?,
+            ("algo", "c_thres") => self.algo.c_thres = v.as_usize().ok_or_else(bad)? as u64,
+            ("algo", "section_len") => self.algo.section_len = v.as_usize().ok_or_else(bad)?,
+            ("algo", "adpsgd_ring_only") => {
+                self.algo.adpsgd_ring_only = v.as_bool().ok_or_else(bad)?
+            }
+            ("train", "lr") => self.train.lr = v.as_f64().ok_or_else(bad)? as f32,
+            ("train", "max_iters") => self.train.max_iters = v.as_usize().ok_or_else(bad)?,
+            ("train", "loss_target") => {
+                self.train.loss_target = Some(v.as_f64().ok_or_else(bad)?)
+            }
+            ("train", "seed") => self.train.seed = v.as_usize().ok_or_else(bad)? as u64,
+            ("train", "eval_every") => self.train.eval_every = v.as_usize().ok_or_else(bad)?,
+            _ => return Err(format!("unknown config key {section}.{key}")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.n_workers(), 16);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(15), 3);
+        assert!(c.same_node(4, 7));
+        assert!(!c.same_node(3, 4));
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn algo_kind_roundtrip() {
+        for &k in AlgoKind::all() {
+            assert_eq!(AlgoKind::parse(k.name()), Some(k), "{k:?}");
+        }
+        assert_eq!(AlgoKind::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut e = Experiment::default();
+        e.algo.group_size = 1;
+        assert!(e.validate().is_err());
+        e.algo.group_size = 99;
+        assert!(e.validate().is_err());
+        e.algo.group_size = 3;
+        e.cluster.hetero.slow_worker = Some((99, 5.0));
+        assert!(e.validate().is_err());
+        e.cluster.hetero.slow_worker = Some((3, 0.5));
+        assert!(e.validate().is_err());
+        e.cluster.hetero.slow_worker = Some((3, 5.0));
+        assert!(e.validate().is_ok());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let text = r#"
+            # paper heterogeneous setup
+            [cluster]
+            n_nodes = 4
+            workers_per_node = 4
+            slow_worker = [7, 5.0]
+
+            [algo]
+            kind = "ripples-smart"
+            group_size = 3
+            c_thres = 8
+
+            [train]
+            lr = 0.1
+            max_iters = 2000
+            loss_target = 0.32
+        "#;
+        let e = Experiment::from_str_cfg(text).unwrap();
+        assert_eq!(e.cluster.n_workers(), 16);
+        assert_eq!(e.cluster.hetero.slow_worker, Some((7, 5.0)));
+        assert_eq!(e.algo.kind, AlgoKind::RipplesSmart);
+        assert_eq!(e.train.loss_target, Some(0.32));
+        assert!((e.train.lr - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn config_file_unknown_key_rejected() {
+        assert!(Experiment::from_str_cfg("[algo]\nwat = 1\n").is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! TOML-subset parser: `[section]` headers and `key = value` lines where
+//! value ∈ {int, float, bool, "string", [v, v, ...]}. Comments with `#`.
+//!
+//! Deliberately small — config files in this repo only need flat sections.
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Num(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse into a flat list of `(section, key, value)` triples, preserving
+/// file order (later keys override earlier ones when applied in order).
+pub fn parse_toml_subset(text: &str) -> Result<Vec<(String, String, TomlValue)>, String> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        out.push((section.clone(), key.to_string(), value));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s}"))?;
+        let mut items = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml_subset(
+            "[a]\nx = 1\ny = 2.5  # trailing comment\nz = true\ns = \"hi # not a comment\"\n[b]\narr = [1, 2.5, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.len(), 5);
+        assert_eq!(doc[0], ("a".into(), "x".into(), TomlValue::Num(1.0)));
+        assert_eq!(doc[1].2.as_f64(), Some(2.5));
+        assert_eq!(doc[2].2.as_bool(), Some(true));
+        assert_eq!(doc[3].2.as_str(), Some("hi # not a comment"));
+        assert_eq!(doc[4].0, "b");
+        assert_eq!(doc[4].2.as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn as_usize_rejects_fractions_and_negatives() {
+        assert_eq!(TomlValue::Num(3.0).as_usize(), Some(3));
+        assert_eq!(TomlValue::Num(3.5).as_usize(), None);
+        assert_eq!(TomlValue::Num(-1.0).as_usize(), None);
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = parse_toml_subset("x = 1\noops\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse_toml_subset("[a]\nk = \n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn empty_array_ok() {
+        let doc = parse_toml_subset("a = []\n").unwrap();
+        assert_eq!(doc[0].2.as_arr().unwrap().len(), 0);
+    }
+}

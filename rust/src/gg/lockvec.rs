@@ -1,0 +1,122 @@
+//! The GG's lock vector (§4.1): one bit per worker indicating whether the
+//! worker is currently claimed by an armed group. Backed by a `u64` bitset
+//! — lock/try-lock over a whole group is a handful of word ops, which is
+//! what keeps the centralized GG off the critical path.
+
+/// Fixed-capacity bitset sized to the worker count.
+#[derive(Debug, Clone)]
+pub struct LockVector {
+    words: Vec<u64>,
+    n: usize,
+    locked_count: usize,
+}
+
+impl LockVector {
+    pub fn new(n: usize) -> Self {
+        Self { words: vec![0; n.div_ceil(64)], n, locked_count: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn is_locked(&self, w: usize) -> bool {
+        debug_assert!(w < self.n);
+        self.words[w / 64] >> (w % 64) & 1 == 1
+    }
+
+    pub fn locked_count(&self) -> usize {
+        self.locked_count
+    }
+
+    /// True if every member of `group` is free.
+    pub fn all_free(&self, group: &[usize]) -> bool {
+        group.iter().all(|&w| !self.is_locked(w))
+    }
+
+    /// Atomically lock the whole group if every member is free.
+    /// Returns false (and changes nothing) on any conflict.
+    pub fn try_lock(&mut self, group: &[usize]) -> bool {
+        if !self.all_free(group) {
+            return false;
+        }
+        for &w in group {
+            self.words[w / 64] |= 1 << (w % 64);
+        }
+        self.locked_count += group.len();
+        true
+    }
+
+    /// Release the whole group. Panics (debug) if any bit wasn't set —
+    /// releasing an unlocked worker is a protocol bug.
+    pub fn release(&mut self, group: &[usize]) {
+        for &w in group {
+            debug_assert!(self.is_locked(w), "releasing unlocked worker {w}");
+            self.words[w / 64] &= !(1 << (w % 64));
+        }
+        self.locked_count -= group.len();
+    }
+
+    /// Indices of currently-free workers.
+    pub fn free_workers(&self) -> Vec<usize> {
+        (0..self.n).filter(|&w| !self.is_locked(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_release_roundtrip() {
+        let mut lv = LockVector::new(100);
+        assert!(lv.try_lock(&[0, 63, 64, 99]));
+        assert!(lv.is_locked(0) && lv.is_locked(63) && lv.is_locked(64) && lv.is_locked(99));
+        assert!(!lv.is_locked(1));
+        assert_eq!(lv.locked_count(), 4);
+        lv.release(&[0, 63, 64, 99]);
+        assert_eq!(lv.locked_count(), 0);
+        assert!(lv.all_free(&[0, 63, 64, 99]));
+    }
+
+    #[test]
+    fn conflicting_lock_fails_atomically() {
+        let mut lv = LockVector::new(16);
+        assert!(lv.try_lock(&[0, 4, 5]));
+        // overlapping group must fail and leave 7 unlocked
+        assert!(!lv.try_lock(&[4, 5, 7]));
+        assert!(!lv.is_locked(7), "failed try_lock must not partially lock");
+        assert_eq!(lv.locked_count(), 3);
+    }
+
+    #[test]
+    fn disjoint_groups_coexist() {
+        let mut lv = LockVector::new(16);
+        assert!(lv.try_lock(&[0, 1]));
+        assert!(lv.try_lock(&[2, 3]));
+        assert!(lv.try_lock(&[8, 15]));
+        assert_eq!(lv.locked_count(), 6);
+    }
+
+    #[test]
+    fn free_workers_lists_complement() {
+        let mut lv = LockVector::new(8);
+        lv.try_lock(&[1, 3, 5]);
+        assert_eq!(lv.free_workers(), vec![0, 2, 4, 6, 7]);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn double_release_panics_in_debug() {
+        let mut lv = LockVector::new(4);
+        lv.try_lock(&[1]);
+        lv.release(&[1]);
+        lv.release(&[1]);
+    }
+}

@@ -1,0 +1,278 @@
+//! The decentralized static scheduler (§4.2, Figs. 9-10): a rule-based,
+//! conflict-free, periodic group schedule computed locally by every worker
+//! from `(worker, iteration)` — no GG round trip, no lock vector.
+//!
+//! The 4-phase rule generalizes Fig. 10 from (4 nodes x 4 workers) to any
+//! `(n_nodes, workers_per_node)`:
+//!
+//! * phase 0 — local-rank-0 workers of all nodes form one global "head"
+//!   group; local rank 1 skips; remaining local ranks pair up within their
+//!   node (odd one out skips).
+//! * phase 1 — all workers of each node sync intra-node.
+//! * phase 2 — rank 0 pairs with the last local rank (intra-node); rank 1
+//!   pairs with rank 1 on the *opposite node* of the ring; rank 2 skips;
+//!   remaining ranks pair up within the node.
+//! * phase 3 — intra-node sync again.
+//!
+//! Every phase is a partition of a subset of workers, so groups in the
+//! same iteration never overlap: conflict-free by construction (verified
+//! by the property tests below and in `tests/prop_gg.rs`).
+
+/// Static schedule generator for a two-level cluster.
+#[derive(Debug, Clone)]
+pub struct StaticScheduler {
+    pub n_nodes: usize,
+    pub workers_per_node: usize,
+}
+
+impl StaticScheduler {
+    pub fn new(n_nodes: usize, workers_per_node: usize) -> Self {
+        assert!(n_nodes >= 1 && workers_per_node >= 1);
+        Self { n_nodes, workers_per_node }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_nodes * self.workers_per_node
+    }
+
+    /// Cycle length of the schedule (Fig. 9: 4).
+    pub const PHASES: usize = 4;
+
+    fn node_of(&self, w: usize) -> usize {
+        w / self.workers_per_node
+    }
+
+    fn rank_of(&self, w: usize) -> usize {
+        w % self.workers_per_node
+    }
+
+    fn worker(&self, node: usize, rank: usize) -> usize {
+        node * self.workers_per_node + rank
+    }
+
+    /// The group worker `w` joins in iteration `iter`; `None` = skip sync.
+    /// Sorted members; guaranteed identical for every member (consistency)
+    /// and disjoint across groups of the same iteration (conflict-freedom).
+    pub fn group_of(&self, w: usize, iter: u64) -> Option<Vec<usize>> {
+        let phase = (iter % Self::PHASES as u64) as usize;
+        let node = self.node_of(w);
+        let rank = self.rank_of(w);
+        let wpn = self.workers_per_node;
+        match phase {
+            0 => {
+                if rank == 0 {
+                    // all head workers, across all nodes
+                    if self.n_nodes == 1 {
+                        return None;
+                    }
+                    Some((0..self.n_nodes).map(|nd| self.worker(nd, 0)).collect())
+                } else if rank == 1 {
+                    None
+                } else {
+                    // pair (2,3), (4,5), ... within the node
+                    self.pair_within(node, rank, 2)
+                }
+            }
+            1 | 3 => {
+                if wpn == 1 {
+                    return None;
+                }
+                Some((0..wpn).map(|r| self.worker(node, r)).collect())
+            }
+            2 => {
+                if rank == 0 {
+                    if wpn == 1 {
+                        // degenerate: no last-rank partner; head workers
+                        // pair with the opposite node instead
+                        return self.opposite_pair(node, 0);
+                    }
+                    Some(sorted(vec![self.worker(node, 0), self.worker(node, wpn - 1)]))
+                } else if rank == wpn - 1 && wpn >= 2 {
+                    Some(sorted(vec![self.worker(node, 0), self.worker(node, wpn - 1)]))
+                } else if rank == 1 {
+                    self.opposite_pair(node, 1)
+                } else if rank == 2 {
+                    None
+                } else {
+                    // ranks 3..wpn-2 pair within the node
+                    self.pair_within(node, rank, 3)
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Pair ranks `(base, base+1), (base+2, base+3), ...` within a node,
+    /// excluding the node's last rank in phase-2 (it pairs with rank 0).
+    fn pair_within(&self, node: usize, rank: usize, base: usize) -> Option<Vec<usize>> {
+        let wpn = self.workers_per_node;
+        // In phase 2, the last rank belongs to the (0, last) pair.
+        let limit = if base == 3 { wpn.saturating_sub(1) } else { wpn };
+        if rank < base || rank >= limit {
+            return None;
+        }
+        let idx = rank - base;
+        let mate_rank = if idx % 2 == 0 { rank + 1 } else { rank - 1 };
+        if mate_rank < base || mate_rank >= limit {
+            return None; // odd one out
+        }
+        Some(sorted(vec![self.worker(node, rank), self.worker(node, mate_rank)]))
+    }
+
+    /// Pair `(node, rank)` with the same rank on the opposite node of the
+    /// ring of nodes. Odd node counts leave the middle node unpaired.
+    fn opposite_pair(&self, node: usize, rank: usize) -> Option<Vec<usize>> {
+        if self.n_nodes < 2 {
+            return None;
+        }
+        let half = self.n_nodes / 2;
+        let mate_node = (node + half) % self.n_nodes;
+        if mate_node == node {
+            return None;
+        }
+        // Only valid if the mapping is an involution (node <-> mate_node).
+        if (mate_node + half) % self.n_nodes != node {
+            return None;
+        }
+        Some(sorted(vec![self.worker(node, rank), self.worker(mate_node, rank)]))
+    }
+
+    /// All groups of one iteration (deduplicated) — for analysis/benches.
+    pub fn groups_of_iter(&self, iter: u64) -> Vec<Vec<usize>> {
+        let mut out: Vec<Vec<usize>> = Vec::new();
+        for w in 0..self.n_workers() {
+            if let Some(g) = self.group_of(w, iter) {
+                if !out.contains(&g) {
+                    out.push(g);
+                }
+            }
+        }
+        out
+    }
+}
+
+fn sorted(mut v: Vec<usize>) -> Vec<usize> {
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_invariants(s: &StaticScheduler) {
+        for iter in 0..8u64 {
+            // consistency: every member computes the same group
+            for w in 0..s.n_workers() {
+                if let Some(g) = s.group_of(w, iter) {
+                    assert!(g.contains(&w), "iter {iter} w {w}: group {g:?} lacks self");
+                    assert!(g.len() >= 2, "iter {iter} w {w}: singleton group");
+                    for &m in &g {
+                        assert_eq!(
+                            s.group_of(m, iter).as_ref(),
+                            Some(&g),
+                            "iter {iter}: member {m} disagrees with {w}"
+                        );
+                    }
+                }
+            }
+            // conflict-freedom: groups partition
+            let groups = s.groups_of_iter(iter);
+            let mut seen = vec![false; s.n_workers()];
+            for g in &groups {
+                for &m in g {
+                    assert!(!seen[m], "iter {iter}: worker {m} in two groups");
+                    seen[m] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_shape_4x4() {
+        let s = StaticScheduler::new(4, 4);
+        check_invariants(&s);
+        // phase 0: head-worker group spans all nodes (Fig. 9 "G5"-style)
+        let g = s.group_of(0, 0).unwrap();
+        assert_eq!(g, vec![0, 4, 8, 12]);
+        // rank 1 skips phase 0 (the "-" cells)
+        assert_eq!(s.group_of(1, 0), None);
+        // ranks 2,3 pair within node
+        assert_eq!(s.group_of(2, 0).unwrap(), vec![2, 3]);
+        // phase 1: full intra-node groups
+        assert_eq!(s.group_of(5, 1).unwrap(), vec![4, 5, 6, 7]);
+        // phase 2: rank0<->rank3 same node, rank1 <-> opposite node rank 1
+        assert_eq!(s.group_of(0, 2).unwrap(), vec![0, 3]);
+        assert_eq!(s.group_of(1, 2).unwrap(), vec![1, 9]);
+        assert_eq!(s.group_of(2, 2), None);
+        // phase 3 = phase 1
+        assert_eq!(s.group_of(14, 3).unwrap(), vec![12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn periodicity() {
+        let s = StaticScheduler::new(4, 4);
+        for w in 0..16 {
+            for i in 0..4u64 {
+                assert_eq!(s.group_of(w, i), s.group_of(w, i + 4));
+                assert_eq!(s.group_of(w, i), s.group_of(w, i + 400));
+            }
+        }
+    }
+
+    #[test]
+    fn various_shapes_hold_invariants() {
+        for (nodes, wpn) in [(2, 2), (2, 4), (4, 4), (8, 4), (4, 8), (3, 4), (4, 3), (1, 4), (6, 5)] {
+            check_invariants(&StaticScheduler::new(nodes, wpn));
+        }
+    }
+
+    #[test]
+    fn schedule_mixes_inter_and_intra() {
+        // The architecture-aware point: most groups intra-node, a few inter.
+        let s = StaticScheduler::new(4, 4);
+        let mut inter = 0;
+        let mut intra = 0;
+        for iter in 0..4u64 {
+            for g in s.groups_of_iter(iter) {
+                let n0 = g[0] / s.workers_per_node;
+                if g.iter().all(|&m| m / s.workers_per_node == n0) {
+                    intra += 1;
+                } else {
+                    inter += 1;
+                }
+            }
+        }
+        assert!(intra > inter, "intra {intra} should dominate inter {inter}");
+        assert!(inter >= 2, "schedule must still propagate across nodes");
+    }
+
+    #[test]
+    fn connectivity_updates_reach_all_workers() {
+        // Spectral-gap sanity (§3.3): the union of groups over one period
+        // must form a connected graph over workers.
+        for (nodes, wpn) in [(4, 4), (2, 4), (8, 2), (3, 5)] {
+            let s = StaticScheduler::new(nodes, wpn);
+            let n = s.n_workers();
+            let mut reach = vec![false; n];
+            reach[0] = true;
+            // propagate for a few periods
+            for _ in 0..4 {
+                for iter in 0..4u64 {
+                    for g in s.groups_of_iter(iter) {
+                        if g.iter().any(|&m| reach[m]) {
+                            for &m in &g {
+                                reach[m] = true;
+                            }
+                        }
+                    }
+                }
+            }
+            assert!(
+                reach.iter().all(|&r| r),
+                "({nodes},{wpn}): unreachable workers {:?}",
+                reach.iter().enumerate().filter(|(_, &r)| !r).map(|(i, _)| i).collect::<Vec<_>>()
+            );
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! # Ripples — Heterogeneity-Aware Asynchronous Decentralized Training
+//!
+//! A Rust + JAX + Pallas reproduction of *"Heterogeneity-Aware
+//! Asynchronous Decentralized Training"* (Luo, He, Zhuo, Qian, 2019):
+//! the **Partial All-Reduce (P-Reduce)** synchronization primitive, the
+//! centralized **Group Generator** (random and smart: Group Buffer,
+//! Global Division, Inter-Intra scheduling, slowdown filtering), the
+//! conflict-free **static scheduler**, and the baselines it is evaluated
+//! against (Parameter Server, Ring All-Reduce, D-PSGD, AD-PSGD).
+//!
+//! Three layers (see DESIGN.md):
+//! * **Layer 3 (this crate)** — coordinator, schedulers, simulated
+//!   cluster, collectives, metrics, benches.
+//! * **Layer 2 (python/compile)** — JAX train-step graphs, AOT-lowered to
+//!   HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels (group-mean
+//!   P-Reduce arithmetic, MXU-tiled matmul, fused SGD), verified against
+//!   pure-jnp oracles.
+//!
+//! The [`runtime`] module executes the AOT artifacts via PJRT, so Python
+//! never runs on the training path.
+
+pub mod bench;
+pub mod cluster;
+pub mod collectives;
+pub mod comm;
+pub mod config;
+pub mod gg;
+pub mod metrics;
+pub mod model;
+pub mod rpc;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::{AlgoConfig, AlgoKind, ClusterConfig, Experiment, TrainConfig};
+pub use gg::{GgConfig, Group, GroupGenerator, StaticScheduler};
+pub use sim::{SimParams, SimResult};

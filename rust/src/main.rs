@@ -1,0 +1,231 @@
+//! `ripples` — CLI for the Ripples reproduction.
+//!
+//! Subcommands:
+//! * `train`     — run one simulated training experiment and print metrics
+//! * `fig <id>`  — regenerate a paper figure/table (1, 2b, 15..20, all)
+//! * `gg-serve`  — run the Group Generator as a TCP RPC service (§6.2)
+//! * `artifacts` — list and smoke-run the PJRT artifacts (layer check)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ripples::bench::figures;
+use ripples::config::{AlgoKind, Experiment};
+use ripples::gg::GgConfig;
+use ripples::metrics;
+use ripples::rpc::GgServer;
+use ripples::sim::{self, SimParams};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("fig") => cmd_fig(&args[1..]),
+        Some("gg-serve") => cmd_gg_serve(&args[1..]),
+        Some("artifacts") => cmd_artifacts(&args[1..]),
+        Some("ablation") => cmd_ablation(),
+        Some("help") | Some("-h") | Some("--help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command '{other}'\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+ripples — Heterogeneity-Aware Asynchronous Decentralized Training
+
+USAGE:
+  ripples train [--algo NAME] [--config FILE] [--slow W,FACTOR]
+                [--iters N] [--target LOSS] [--trace FILE.csv]
+  ripples fig <1|2b|15|16|17|18|19|20|all> [--csv DIR]
+  ripples gg-serve [--addr HOST:PORT] [--workers N] [--wpn K]
+                   [--mode random|smart] [--group-size G]
+  ripples artifacts [--dir DIR]
+  ripples ablation
+
+Algorithms: all-reduce, ps, d-psgd, ad-psgd, ripples-static,
+            ripples-random, ripples-smart (default)
+";
+
+/// Tiny flag parser: `--key value` pairs plus positionals.
+fn parse_flags(args: &[String]) -> Result<(Vec<String>, Vec<(String, String)>), String> {
+    let mut pos = Vec::new();
+    let mut flags = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| format!("flag --{key} needs a value"))?;
+            flags.push((key.to_string(), val.clone()));
+            i += 2;
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    Ok((pos, flags))
+}
+
+fn get_flag<'a>(flags: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    flags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn cmd_train(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let mut exp = match get_flag(&flags, "config") {
+        Some(path) => Experiment::from_file(path)?,
+        None => Experiment::default(),
+    };
+    if let Some(algo) = get_flag(&flags, "algo") {
+        exp.algo.kind =
+            AlgoKind::parse(algo).ok_or_else(|| format!("unknown algorithm '{algo}'"))?;
+    }
+    if let Some(slow) = get_flag(&flags, "slow") {
+        let (w, f) = slow.split_once(',').ok_or("--slow expects WORKER,FACTOR")?;
+        exp.cluster.hetero.slow_worker = Some((
+            w.parse().map_err(|e| format!("bad worker: {e}"))?,
+            f.parse().map_err(|e| format!("bad factor: {e}"))?,
+        ));
+    }
+    if let Some(iters) = get_flag(&flags, "iters") {
+        exp.train.max_iters = iters.parse().map_err(|e| format!("bad iters: {e}"))?;
+    }
+    if let Some(target) = get_flag(&flags, "target") {
+        exp.train.loss_target =
+            Some(target.parse().map_err(|e| format!("bad target: {e}"))?);
+    }
+    exp.validate()?;
+    let mut params = SimParams::vgg16_defaults(exp);
+    params.spec = ripples::bench::bench_spec();
+    params.dataset_size = 2048;
+    params.batch = 64;
+    println!(
+        "running {} on {} workers ({} nodes)...",
+        params.exp.algo.kind.name(),
+        params.exp.cluster.n_workers(),
+        params.exp.cluster.n_nodes
+    );
+    let res = sim::run(&params);
+    println!("{}", metrics::summarize(&res));
+    if let Some(tp) = res.trace.last() {
+        println!(
+            "final loss {:.4} at iter {:.0} (t={:.1}s)",
+            tp.loss, tp.avg_iter, tp.time
+        );
+    }
+    if let Some(t) = res.time_to_target {
+        println!(
+            "time-to-target: {t:.2}s (avg iters {:.0})",
+            res.avg_iters_to_target.unwrap_or(0.0)
+        );
+    }
+    if let Some(path) = get_flag(&flags, "trace") {
+        metrics::write_trace_csv(&res, std::path::Path::new(path))
+            .map_err(|e| format!("write trace: {e}"))?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig(args: &[String]) -> Result<(), String> {
+    let (pos, flags) = parse_flags(args)?;
+    let id = pos.first().map(String::as_str).unwrap_or("all");
+    let csv_dir = get_flag(&flags, "csv").map(PathBuf::from);
+    if let Some(dir) = &csv_dir {
+        std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+    }
+    for (title, table) in figures::run_figure(id, csv_dir.as_deref())? {
+        println!("== {title} ==");
+        println!("{}", table.render());
+        if let Some(dir) = &csv_dir {
+            let path = dir.join(format!("{}.csv", title.to_lowercase().replace(' ', "_")));
+            std::fs::write(&path, table.to_csv())
+                .map_err(|e| format!("write {}: {e}", path.display()))?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gg_serve(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let addr = get_flag(&flags, "addr").unwrap_or("127.0.0.1:7777");
+    let workers: usize = get_flag(&flags, "workers")
+        .unwrap_or("16")
+        .parse()
+        .map_err(|e| format!("bad workers: {e}"))?;
+    let wpn: usize = get_flag(&flags, "wpn")
+        .unwrap_or("4")
+        .parse()
+        .map_err(|e| format!("bad wpn: {e}"))?;
+    let group: usize = get_flag(&flags, "group-size")
+        .unwrap_or("3")
+        .parse()
+        .map_err(|e| format!("bad group size: {e}"))?;
+    let cfg = match get_flag(&flags, "mode").unwrap_or("smart") {
+        "random" => GgConfig::random(workers, wpn, group),
+        "smart" => GgConfig::smart(workers, wpn, group, 8),
+        other => return Err(format!("unknown mode '{other}'")),
+    };
+    let server = GgServer::spawn(addr, cfg, 42).map_err(|e| e.to_string())?;
+    println!("GG serving on {} ({workers} workers, {wpn} per node)", server.addr);
+    println!("press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_ablation() -> Result<(), String> {
+    println!("== Smart-GG ablation (each S5 mechanism toggled) ==");
+    println!("{}", ripples::bench::ablation::ablation_table().render());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let dir = get_flag(&flags, "dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(ripples::runtime::artifacts_dir);
+    let mut engine = ripples::runtime::PjrtEngine::new(&dir).map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", engine.platform());
+    let names = engine.available();
+    if names.is_empty() {
+        return Err("no artifacts found — run `make artifacts`".into());
+    }
+    for name in &names {
+        let c = engine.load(name).map_err(|e| format!("{name}: {e}"))?;
+        println!(
+            "  {name:<28} kind={:<16} params={:<8} inputs={}",
+            c.meta.kind,
+            c.meta.param_count,
+            c.meta.inputs.len()
+        );
+    }
+    // smoke-run the preduce path: mean of all-1s and all-3s must be all-2s
+    if names.iter().any(|n| n == "preduce_mlp_g2") {
+        let n = engine
+            .load("preduce_mlp_g2")
+            .map_err(|e| e.to_string())?
+            .meta
+            .param_count;
+        let mut stacked = vec![1.0f32; n];
+        stacked.extend(std::iter::repeat(3.0f32).take(n));
+        let mean = engine
+            .preduce("preduce_mlp_g2", &stacked)
+            .map_err(|e| e.to_string())?;
+        if mean.iter().all(|&v| (v - 2.0).abs() < 1e-6) {
+            println!("preduce smoke test: OK (mean(1,3) == 2)");
+        } else {
+            return Err("preduce smoke test FAILED".into());
+        }
+    }
+    Ok(())
+}

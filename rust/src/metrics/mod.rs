@@ -1,0 +1,138 @@
+//! Metrics output: CSV traces, aligned tables, speedup summaries.
+
+use crate::sim::SimResult;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Write a loss trace as CSV (`time,avg_iter,loss`).
+pub fn write_trace_csv(res: &SimResult, path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "time,avg_iter,loss")?;
+    for tp in &res.trace {
+        writeln!(f, "{:.6},{:.2},{:.6}", tp.time, tp.avg_iter, tp.loss)?;
+    }
+    Ok(())
+}
+
+/// A simple aligned text table (the figure harness output format).
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<w$}", c, w = widths[i] + 2);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.header);
+        let total: usize = widths.iter().map(|w| w + 2).sum();
+        out.push_str(&"-".repeat(total.max(ncol)));
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// CSV rendering of the same table.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.header.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// Summary line per algorithm, matching the paper's reporting style.
+pub fn summarize(res: &SimResult) -> String {
+    format!(
+        "{:<18} time={:>9.2}s  iters/worker={:>7.1}  per-iter={:>7.4}s  sync%={:>5.1}  conflicts={}",
+        res.algo,
+        res.final_time,
+        res.total_iters as f64 / res.per_worker_iters.len() as f64,
+        res.per_iter_time(),
+        res.sync_fraction() * 100.0,
+        res.conflicts,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::TracePoint;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["algo", "speedup"]);
+        t.row(vec!["all-reduce".into(), "4.27".into()]);
+        t.row(vec!["ps".into(), "1.00".into()]);
+        let s = t.render();
+        assert!(s.contains("algo"));
+        assert!(s.lines().count() == 4);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[2].find("4.27"), lines[3].find("1.00"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x,y".into(), "z".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn trace_csv_roundtrip() {
+        let mut res = SimResult::default();
+        res.trace.push(TracePoint { time: 1.5, avg_iter: 10.0, loss: 0.5 });
+        res.per_worker_iters = vec![10];
+        let dir = std::env::temp_dir().join("ripples_test_metrics");
+        let path = dir.join("trace.csv");
+        write_trace_csv(&res, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("time,avg_iter,loss"));
+        assert!(text.contains("1.500000,10.00,0.500000"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

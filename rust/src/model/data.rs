@@ -1,0 +1,182 @@
+//! Synthetic datasets (the CIFAR-10/ImageNet stand-ins; see DESIGN.md
+//! §Hardware-Adaptation — the paper's claims concern synchronization
+//! structure and convergence dynamics, not image content).
+
+use crate::util::rng::Pcg32;
+
+/// An in-memory classification dataset: `(n, in_dim)` features + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<usize>,
+    pub in_dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    /// Gaussian mixture: class c centered at a random unit-ish vector,
+    /// isotropic noise. Linearly-ish separable — converges fast, good for
+    /// time-to-loss experiments.
+    pub fn gaussian_mixture(in_dim: usize, classes: usize, n: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let mut centers = vec![0.0f32; classes * in_dim];
+        for v in centers.iter_mut() {
+            *v = rng.gen_normal() as f32 * 1.5;
+        }
+        let mut x = vec![0.0f32; n * in_dim];
+        let mut y = vec![0usize; n];
+        for i in 0..n {
+            let c = rng.gen_range(classes);
+            y[i] = c;
+            for d in 0..in_dim {
+                x[i * in_dim + d] =
+                    centers[c * in_dim + d] + rng.gen_normal() as f32 * 0.8;
+            }
+        }
+        Self { x, y, in_dim, classes }
+    }
+
+    /// Two interleaved spirals lifted into `in_dim` dims — *not* linearly
+    /// separable; exercises the nonlinear capacity of the MLP so the
+    /// convergence experiments aren't trivially easy.
+    pub fn two_spirals(in_dim: usize, n: usize, seed: u64) -> Self {
+        assert!(in_dim >= 2);
+        let mut rng = Pcg32::new(seed);
+        let mut x = vec![0.0f32; n * in_dim];
+        let mut y = vec![0usize; n];
+        for i in 0..n {
+            let c = i % 2;
+            let t = rng.gen_f64() * 3.0 * std::f64::consts::PI;
+            let r = t / (3.0 * std::f64::consts::PI) * 2.0 + 0.1;
+            let sign = if c == 0 { 1.0 } else { -1.0 };
+            let px = (sign * r * t.cos()) as f32 + rng.gen_normal() as f32 * 0.05;
+            let py = (sign * r * t.sin()) as f32 + rng.gen_normal() as f32 * 0.05;
+            x[i * in_dim] = px;
+            x[i * in_dim + 1] = py;
+            // random but fixed linear lift for the remaining dims
+            for d in 2..in_dim {
+                let a = ((d * 2654435761) % 1000) as f32 / 1000.0 - 0.5;
+                let b = ((d * 40503) % 1000) as f32 / 1000.0 - 0.5;
+                x[i * in_dim + d] = a * px + b * py;
+            }
+            y[i] = c;
+        }
+        Self { x, y, in_dim, classes: 2 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Deterministic batch for `(worker_seed, iteration)`-style indexing:
+    /// samples `batch` random rows with a PCG stream derived from `tag`.
+    pub fn batch(&self, tag: u64, batch: usize) -> (Vec<f32>, Vec<usize>) {
+        let mut rng = Pcg32::new(tag.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+        let mut x = Vec::with_capacity(batch * self.in_dim);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let i = rng.gen_range(self.len());
+            x.extend_from_slice(&self.x[i * self.in_dim..(i + 1) * self.in_dim]);
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// Row indices per class (for non-IID sharding).
+    pub fn class_index(&self) -> Vec<Vec<usize>> {
+        let mut idx = vec![Vec::new(); self.classes];
+        for (i, &c) in self.y.iter().enumerate() {
+            idx[c].push(i);
+        }
+        idx
+    }
+
+    /// Non-IID batch: with probability `bias` each sample is drawn from
+    /// `primary_class`, else uniformly. Models the skewed per-worker data
+    /// shards that make synchronization *matter* — without skew, each
+    /// replica converges alone and sync frequency has no observable
+    /// statistical effect (see DESIGN.md §Hardware-Adaptation).
+    pub fn batch_biased(
+        &self,
+        tag: u64,
+        batch: usize,
+        primary_class: usize,
+        bias: f64,
+        class_index: &[Vec<usize>],
+    ) -> (Vec<f32>, Vec<usize>) {
+        let mut rng = Pcg32::new(tag.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+        let mut x = Vec::with_capacity(batch * self.in_dim);
+        let mut y = Vec::with_capacity(batch);
+        let primary = &class_index[primary_class % self.classes];
+        for _ in 0..batch {
+            let i = if !primary.is_empty() && rng.gen_f64() < bias {
+                primary[rng.gen_range(primary.len())]
+            } else {
+                rng.gen_range(self.len())
+            };
+            x.extend_from_slice(&self.x[i * self.in_dim..(i + 1) * self.in_dim]);
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// The first `k` rows as a fixed evaluation set.
+    pub fn eval_set(&self, k: usize) -> (Vec<f32>, Vec<usize>) {
+        let k = k.min(self.len());
+        (self.x[..k * self.in_dim].to_vec(), self.y[..k].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_mixture_shapes_and_labels() {
+        let ds = Dataset::gaussian_mixture(16, 10, 100, 1);
+        assert_eq!(ds.len(), 100);
+        assert_eq!(ds.x.len(), 1600);
+        assert!(ds.y.iter().all(|&c| c < 10));
+    }
+
+    #[test]
+    fn two_spirals_balanced() {
+        let ds = Dataset::two_spirals(8, 200, 2);
+        let ones = ds.y.iter().filter(|&&c| c == 1).count();
+        assert_eq!(ones, 100);
+        assert_eq!(ds.classes, 2);
+    }
+
+    #[test]
+    fn batches_deterministic_per_tag() {
+        let ds = Dataset::gaussian_mixture(4, 3, 50, 3);
+        let (x1, y1) = ds.batch(7, 16);
+        let (x2, y2) = ds.batch(7, 16);
+        let (x3, _) = ds.batch(8, 16);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        assert_ne!(x1, x3);
+        assert_eq!(x1.len(), 16 * 4);
+    }
+
+    #[test]
+    fn dataset_deterministic_per_seed() {
+        let a = Dataset::gaussian_mixture(4, 3, 20, 5);
+        let b = Dataset::gaussian_mixture(4, 3, 20, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn eval_set_prefix() {
+        let ds = Dataset::gaussian_mixture(4, 3, 50, 5);
+        let (x, y) = ds.eval_set(10);
+        assert_eq!(x.len(), 40);
+        assert_eq!(y.len(), 10);
+        assert_eq!(&x[..], &ds.x[..40]);
+    }
+}

@@ -1,0 +1,386 @@
+//! Pure-Rust differentiable MLP over a flat parameter buffer.
+//!
+//! This is the *real math* substrate for the convergence experiments
+//! (Figs. 16–20): the simulator charges virtual time from the cost model,
+//! but loss curves come from actual SGD on actual parameters, so the
+//! paper's statistical-efficiency claims (iterations-to-converge per
+//! algorithm) are reproduced with real dynamics, not a convergence proxy.
+//!
+//! Layout matches the paper's §6.1 flatten-and-concatenate scheme (and the
+//! JAX Layer-2 models): `[w0, b0, w1, b1, ...]` row-major, so P-Reduce is
+//! a plain mean over flat vectors.
+
+use crate::util::rng::Pcg32;
+
+/// MLP shape: `in_dim -> hidden... -> classes`, ReLU between layers,
+/// softmax cross-entropy loss.
+#[derive(Debug, Clone)]
+pub struct MlpSpec {
+    pub in_dim: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+}
+
+impl MlpSpec {
+    /// The figure-reproduction default (matches python MlpConfig).
+    pub fn default_paper() -> Self {
+        Self { in_dim: 32, hidden: vec![128, 128], classes: 10 }
+    }
+
+    /// A tiny spec for fast unit tests.
+    pub fn tiny() -> Self {
+        Self { in_dim: 8, hidden: vec![16], classes: 4 }
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.in_dim];
+        d.extend_from_slice(&self.hidden);
+        d.push(self.classes);
+        d
+    }
+
+    pub fn layers(&self) -> usize {
+        self.hidden.len() + 1
+    }
+
+    pub fn param_count(&self) -> usize {
+        let d = self.dims();
+        (0..self.layers()).map(|i| d[i] * d[i + 1] + d[i + 1]).sum()
+    }
+
+    /// Offset of layer `i`'s weight matrix and bias inside the flat buffer.
+    fn offsets(&self) -> Vec<(usize, usize)> {
+        let d = self.dims();
+        let mut out = Vec::with_capacity(self.layers());
+        let mut off = 0;
+        for i in 0..self.layers() {
+            let w_off = off;
+            off += d[i] * d[i + 1];
+            let b_off = off;
+            off += d[i + 1];
+            out.push((w_off, b_off));
+        }
+        out
+    }
+
+    /// He-initialized flat parameter buffer.
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        let mut flat = vec![0.0f32; self.param_count()];
+        let d = self.dims();
+        for (i, (w_off, _)) in self.offsets().iter().enumerate() {
+            let scale = (2.0 / d[i] as f64).sqrt();
+            for k in 0..d[i] * d[i + 1] {
+                flat[w_off + k] = (rng.gen_normal() * scale) as f32;
+            }
+        }
+        flat
+    }
+}
+
+/// Scratch buffers reused across iterations (hot-path: no per-step allocs).
+#[derive(Debug, Default)]
+pub struct MlpScratch {
+    acts: Vec<Vec<f32>>,   // activations per layer, batch-major
+    grads: Vec<f32>,       // gradient buffer, same size as params
+    delta: Vec<f32>,       // backprop delta, reused per layer
+    delta_next: Vec<f32>,
+}
+
+impl MlpScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// One forward+backward+SGD step over a batch; returns the mean loss.
+///
+/// `x` is `(batch, in_dim)` row-major, `y` labels in `0..classes`.
+pub fn sgd_step(
+    spec: &MlpSpec,
+    flat: &mut [f32],
+    x: &[f32],
+    y: &[usize],
+    lr: f32,
+    scratch: &mut MlpScratch,
+) -> f64 {
+    let loss = loss_and_grad(spec, flat, x, y, scratch);
+    for (p, g) in flat.iter_mut().zip(scratch.grads.iter()) {
+        *p -= lr * *g;
+    }
+    loss
+}
+
+/// Mean cross-entropy loss over the batch (no gradient).
+pub fn loss_only(spec: &MlpSpec, flat: &[f32], x: &[f32], y: &[usize]) -> f64 {
+    let batch = y.len();
+    let d = spec.dims();
+    let offsets = spec.offsets();
+    let mut h: Vec<f32> = x.to_vec();
+    let mut h_next: Vec<f32> = Vec::new();
+    for (i, &(w_off, b_off)) in offsets.iter().enumerate() {
+        let (din, dout) = (d[i], d[i + 1]);
+        h_next.clear();
+        h_next.resize(batch * dout, 0.0);
+        matmul_bias(&h, &flat[w_off..w_off + din * dout], &flat[b_off..b_off + dout], &mut h_next, batch, din, dout);
+        if i + 1 < offsets.len() {
+            for v in h_next.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        std::mem::swap(&mut h, &mut h_next);
+    }
+    mean_xent(&h, y, spec.classes)
+}
+
+/// Forward + backward; gradients land in `scratch.grads`; returns mean loss.
+pub fn loss_and_grad(
+    spec: &MlpSpec,
+    flat: &[f32],
+    x: &[f32],
+    y: &[usize],
+    scratch: &mut MlpScratch,
+) -> f64 {
+    let batch = y.len();
+    let d = spec.dims();
+    let offsets = spec.offsets();
+    let layers = spec.layers();
+    assert_eq!(x.len(), batch * spec.in_dim, "x shape mismatch");
+
+    // ---- forward, caching activations
+    scratch.acts.resize(layers + 1, Vec::new());
+    scratch.acts[0].clear();
+    scratch.acts[0].extend_from_slice(x);
+    for i in 0..layers {
+        let (din, dout) = (d[i], d[i + 1]);
+        let (w_off, b_off) = offsets[i];
+        // Split-borrow the two activation slots.
+        let (lo, hi) = scratch.acts.split_at_mut(i + 1);
+        let inp = &lo[i];
+        let out = &mut hi[0];
+        out.clear();
+        out.resize(batch * dout, 0.0);
+        matmul_bias(inp, &flat[w_off..w_off + din * dout], &flat[b_off..b_off + dout], out, batch, din, dout);
+        if i + 1 < layers {
+            for v in out.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    let logits = &scratch.acts[layers];
+    let loss = mean_xent(logits, y, spec.classes);
+
+    // ---- backward
+    scratch.grads.clear();
+    scratch.grads.resize(flat.len(), 0.0);
+    // delta = dL/dlogits = (softmax - onehot) / batch
+    scratch.delta.clear();
+    scratch.delta.resize(batch * spec.classes, 0.0);
+    softmax_minus_onehot(logits, y, spec.classes, &mut scratch.delta);
+    let inv_b = 1.0 / batch as f32;
+    for v in scratch.delta.iter_mut() {
+        *v *= inv_b;
+    }
+
+    for i in (0..layers).rev() {
+        let (din, dout) = (d[i], d[i + 1]);
+        let (w_off, b_off) = offsets[i];
+        let inp = &scratch.acts[i];
+        // dW = inp^T @ delta ; db = sum_rows(delta)
+        {
+            let gw = &mut scratch.grads[w_off..w_off + din * dout];
+            for b in 0..batch {
+                let drow = &scratch.delta[b * dout..(b + 1) * dout];
+                let irow = &inp[b * din..(b + 1) * din];
+                for (r, &iv) in irow.iter().enumerate() {
+                    if iv != 0.0 {
+                        let gw_row = &mut gw[r * dout..(r + 1) * dout];
+                        for (gwv, &dv) in gw_row.iter_mut().zip(drow.iter()) {
+                            *gwv += iv * dv;
+                        }
+                    }
+                }
+            }
+        }
+        {
+            let gb = &mut scratch.grads[b_off..b_off + dout];
+            for b in 0..batch {
+                let drow = &scratch.delta[b * dout..(b + 1) * dout];
+                for (gbv, &dv) in gb.iter_mut().zip(drow.iter()) {
+                    *gbv += dv;
+                }
+            }
+        }
+        if i > 0 {
+            // delta_prev = (delta @ W^T) * relu'(act[i])
+            let w = &flat[w_off..w_off + din * dout];
+            scratch.delta_next.clear();
+            scratch.delta_next.resize(batch * din, 0.0);
+            for b in 0..batch {
+                let drow = &scratch.delta[b * dout..(b + 1) * dout];
+                let orow = &mut scratch.delta_next[b * din..(b + 1) * din];
+                for (r, ov) in orow.iter_mut().enumerate() {
+                    let wrow = &w[r * dout..(r + 1) * dout];
+                    let mut acc = 0.0f32;
+                    for (wv, dv) in wrow.iter().zip(drow.iter()) {
+                        acc += wv * dv;
+                    }
+                    *ov = acc;
+                }
+            }
+            let act = &scratch.acts[i];
+            for (ov, &av) in scratch.delta_next.iter_mut().zip(act.iter()) {
+                if av <= 0.0 {
+                    *ov = 0.0;
+                }
+            }
+            std::mem::swap(&mut scratch.delta, &mut scratch.delta_next);
+        }
+    }
+    loss
+}
+
+/// out[b,:] = inp[b,:] @ W + bias   (W is (din, dout) row-major)
+fn matmul_bias(
+    inp: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    din: usize,
+    dout: usize,
+) {
+    for b in 0..batch {
+        let orow = &mut out[b * dout..(b + 1) * dout];
+        orow.copy_from_slice(bias);
+        let irow = &inp[b * din..(b + 1) * din];
+        for (r, &iv) in irow.iter().enumerate() {
+            if iv != 0.0 {
+                let wrow = &w[r * dout..(r + 1) * dout];
+                for (ov, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                    *ov += iv * wv;
+                }
+            }
+        }
+    }
+}
+
+fn mean_xent(logits: &[f32], y: &[usize], classes: usize) -> f64 {
+    let batch = y.len();
+    let mut total = 0.0f64;
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logsum = row.iter().map(|&v| ((v - max) as f64).exp()).sum::<f64>().ln();
+        total += logsum + max as f64 - row[y[b]] as f64;
+    }
+    total / batch as f64
+}
+
+fn softmax_minus_onehot(logits: &[f32], y: &[usize], classes: usize, out: &mut [f32]) {
+    let batch = y.len();
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let orow = &mut out[b * classes..(b + 1) * classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (o, &v) in orow.iter_mut().zip(row.iter()) {
+            *o = (v - max).exp();
+            sum += *o;
+        }
+        for o in orow.iter_mut() {
+            *o /= sum;
+        }
+        orow[y[b]] -= 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::data::Dataset;
+
+    #[test]
+    fn param_count_formula() {
+        let s = MlpSpec::tiny();
+        assert_eq!(s.param_count(), 8 * 16 + 16 + 16 * 4 + 4);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let s = MlpSpec::tiny();
+        assert_eq!(s.init(1), s.init(1));
+        assert_ne!(s.init(1), s.init(2));
+    }
+
+    #[test]
+    fn gradcheck_against_finite_differences() {
+        let spec = MlpSpec { in_dim: 3, hidden: vec![5], classes: 3 };
+        let mut flat = spec.init(7);
+        let x: Vec<f32> = (0..6).map(|i| (i as f32) * 0.3 - 0.8).collect();
+        let y = vec![0usize, 2];
+        let mut scratch = MlpScratch::new();
+        loss_and_grad(&spec, &flat, &x, &y, &mut scratch);
+        let analytic = scratch.grads.clone();
+        let eps = 1e-3f32;
+        for idx in [0usize, 3, 10, 20, spec.param_count() - 1] {
+            let orig = flat[idx];
+            flat[idx] = orig + eps;
+            let lp = loss_only(&spec, &flat, &x, &y);
+            flat[idx] = orig - eps;
+            let lm = loss_only(&spec, &flat, &x, &y);
+            flat[idx] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (numeric - analytic[idx]).abs() < 2e-3,
+                "idx {idx}: numeric {numeric} vs analytic {}",
+                analytic[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn loss_decreases_under_sgd() {
+        let spec = MlpSpec::tiny();
+        let mut flat = spec.init(0);
+        let ds = Dataset::gaussian_mixture(spec.in_dim, spec.classes, 256, 3);
+        let mut scratch = MlpScratch::new();
+        let (x, y) = ds.batch(0, 64);
+        let first = sgd_step(&spec, &mut flat, &x, &y, 0.1, &mut scratch);
+        let mut last = first;
+        for _ in 0..60 {
+            last = sgd_step(&spec, &mut flat, &x, &y, 0.1, &mut scratch);
+        }
+        assert!(last < first * 0.6, "loss {first} -> {last} did not decrease");
+    }
+
+    #[test]
+    fn loss_only_matches_step_loss() {
+        let spec = MlpSpec::tiny();
+        let mut flat = spec.init(1);
+        let ds = Dataset::gaussian_mixture(spec.in_dim, spec.classes, 128, 5);
+        let (x, y) = ds.batch(1, 32);
+        let mut scratch = MlpScratch::new();
+        let l1 = loss_only(&spec, &flat, &x, &y);
+        let l2 = sgd_step(&spec, &mut flat, &x, &y, 0.0, &mut scratch);
+        assert!((l1 - l2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn init_loss_near_uniform() {
+        let spec = MlpSpec::default_paper();
+        let flat = spec.init(3);
+        let ds = Dataset::gaussian_mixture(spec.in_dim, spec.classes, 256, 9);
+        let (x, y) = ds.batch(0, 128);
+        let loss = loss_only(&spec, &flat, &x, &y);
+        // He init keeps logit variance bounded; loss should be within a
+        // factor ~2 of the uniform-prediction loss ln(classes).
+        let uniform = (spec.classes as f64).ln();
+        assert!(loss < 2.5 * uniform && loss > 0.3 * uniform, "loss {loss}");
+    }
+}

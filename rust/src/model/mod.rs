@@ -1,0 +1,10 @@
+//! Pure-Rust model substrate: a differentiable MLP over the paper's flat
+//! parameter layout plus synthetic datasets. Used by the discrete-event
+//! simulator for real-math convergence experiments; the PJRT runtime
+//! (`crate::runtime`) executes the JAX/Pallas artifacts instead.
+
+pub mod data;
+pub mod mlp;
+
+pub use data::Dataset;
+pub use mlp::{loss_and_grad, loss_only, sgd_step, MlpScratch, MlpSpec};

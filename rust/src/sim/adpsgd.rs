@@ -1,0 +1,232 @@
+//! AD-PSGD baseline (Lian et al. 2018), as the paper describes its
+//! deployable implementation (§2.3): workers are split into an *active*
+//! and a *passive* set (bipartite communication graph — required to avoid
+//! the Fig. 2(a) deadlock); only actives initiate pairwise atomic
+//! averaging; a worker can be in at most one synchronization at a time, so
+//! overlapping syncs serialize (the conflict cost §3.1 analyses).
+//!
+//! Timing model: the active worker blocks on its averaging (TF
+//! remote-variable round trip, calibrated `ADPSGD_SYNC_OVERHEAD`), while
+//! the passive side serves syncs on its communication thread without
+//! stalling its own compute — which is exactly what makes AD-PSGD
+//! heterogeneity-tolerant (a slow worker only hurts when selected) yet
+//! sync-dominated in wall-clock (Fig. 2b).
+
+use crate::cluster::{calibration, ComputeTimer};
+use crate::comm::CostModel;
+use crate::util::rng::Pcg32;
+
+use super::events::EventQueue;
+use super::state::SimResult;
+use super::SimParams;
+
+#[derive(Debug)]
+enum Ev {
+    ComputeDone(usize),
+    /// (active, passive, requested_at)
+    SyncDone(usize, usize, f64),
+}
+
+pub fn run(params: &SimParams) -> SimResult {
+    run_until(params, None)
+}
+
+pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
+    let exp = &params.exp;
+    let n = exp.cluster.n_workers();
+    assert!(n >= 2, "AD-PSGD needs at least one active/passive pair");
+    let cost = CostModel::from_cluster(&exp.cluster);
+    let mut timer = ComputeTimer::new(
+        params.compute_base,
+        exp.cluster.hetero.clone(),
+        n,
+        exp.train.seed,
+    );
+    let mut st = params.make_state();
+    let mut rng = Pcg32::new(exp.train.seed ^ 0xADB5);
+    let section = exp.algo.section_len.max(1) as u64;
+    let bytes = params.model_bytes;
+
+    // Bipartite split: even = active, odd = passive (ring-compatible).
+    let passives: Vec<usize> = (0..n).filter(|w| w % 2 == 1).collect();
+    let is_active = |w: usize| w % 2 == 0;
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut iters = vec![0u64; n];
+    let mut sync_free = vec![0.0f64; n];
+    let mut compute_total = 0.0;
+    let mut sync_total = 0.0;
+    let mut conflicts = 0u64;
+    let mut total_iters = 0u64;
+    let max_total = exp.train.max_iters as u64 * n as u64;
+    let eval_stride = (exp.train.eval_every * n) as u64;
+
+    st.record(0.0, 0.0);
+    for w in 0..n {
+        q.push(timer.next_compute(w), Ev::ComputeDone(w));
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        match ev {
+            Ev::ComputeDone(w) => {
+                st.local_step(w, iters[w]);
+                iters[w] += 1;
+                total_iters += 1;
+                compute_total += timer.base() * exp.cluster.hetero.slowdown_of(w);
+                if total_iters % eval_stride == 0 {
+                    st.record(now, total_iters as f64 / n as f64);
+                }
+                if st.done()
+                    || total_iters >= max_total
+                    || time_budget.is_some_and(|b| now > b)
+                {
+                    break;
+                }
+                let wants_sync = is_active(w) && iters[w] % section == 0;
+                if wants_sync {
+                    // pick a random passive neighbor
+                    let p = if exp.algo.adpsgd_ring_only {
+                        // ring neighbors of an even worker are w±1 (odd)
+                        let left = (w + n - 1) % n;
+                        let right = (w + 1) % n;
+                        if rng.gen_range(2) == 0 {
+                            left
+                        } else {
+                            right
+                        }
+                    } else {
+                        passives[rng.gen_range(passives.len())]
+                    };
+                    // atomic pairwise averaging: serialized per worker
+                    let free_at = sync_free[w].max(sync_free[p]);
+                    if free_at > now {
+                        conflicts += 1;
+                    }
+                    let start = now.max(free_at);
+                    let dur = cost.pairwise_avg(w, p, bytes, calibration::ADPSGD_SYNC_OVERHEAD);
+                    let done = start + dur;
+                    sync_free[w] = done;
+                    sync_free[p] = done;
+                    q.push(done, Ev::SyncDone(w, p, now));
+                } else {
+                    // Passive workers' compute also serializes with the
+                    // averaging executed on their TF graph (the remote
+                    // variable is locked during the atomic update), so
+                    // their next iteration starts after any in-flight
+                    // sync involving them completes.
+                    let start = now.max(sync_free[w]);
+                    sync_total += start - now;
+                    q.push(start + timer.next_compute(w), Ev::ComputeDone(w));
+                }
+            }
+            Ev::SyncDone(a, p, requested_at) => {
+                let mut pair = [a, p];
+                pair.sort_unstable();
+                st.preduce(&pair);
+                // active blocked from request to completion (wait + xfer)
+                sync_total += now - requested_at;
+                q.push(now + timer.next_compute(a), Ev::ComputeDone(a));
+            }
+        }
+    }
+
+    let final_time = q.now();
+    st.record(final_time, total_iters as f64 / n as f64);
+    SimResult {
+        algo: "ad-psgd".to_string(),
+        final_time,
+        total_iters,
+        per_worker_iters: iters,
+        compute_time: compute_total,
+        sync_time: sync_total,
+        time_to_target: st.hit_time,
+        avg_iters_to_target: st.hit_avg_iter,
+        trace: st.trace,
+        conflicts,
+        gg_requests: 0,
+        comm_cache_hits: 0,
+        comm_cache_misses: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoKind, Experiment};
+    use crate::model::MlpSpec;
+    use crate::sim::rounds;
+
+    fn params() -> SimParams {
+        let mut exp = Experiment::default();
+        exp.algo.kind = AlgoKind::AdPsgd;
+        exp.train.max_iters = 60;
+        exp.train.eval_every = 10;
+        exp.train.loss_target = None;
+        let mut p = SimParams::vgg16_defaults(exp);
+        p.spec = MlpSpec::tiny();
+        p.dataset_size = 256;
+        p.batch = 32;
+        p
+    }
+
+    #[test]
+    fn learns_and_reports_sync_dominance() {
+        let res = run(&params());
+        assert!(res.total_iters > 0);
+        let first = res.trace.first().unwrap().loss;
+        let last = res.trace.last().unwrap().loss;
+        assert!(last < first);
+        // Fig. 2(b): AD-PSGD spends most of its time synchronizing.
+        assert!(
+            res.sync_fraction() > 0.6,
+            "sync fraction {} too low",
+            res.sync_fraction()
+        );
+    }
+
+    #[test]
+    fn tolerates_slowdown_better_than_allreduce() {
+        // Fig. 1 Hetero: AD-PSGD degrades less than All-Reduce under a
+        // 5x slow worker.
+        let mut pa = params();
+        pa.exp.algo.kind = AlgoKind::AllReduce;
+        let mut pd = params();
+        let ar_base = rounds::run(&pa).final_time;
+        let ad_base = run(&pd).final_time;
+        pa.exp.cluster.hetero.slow_worker = Some((3, 5.0));
+        pd.exp.cluster.hetero.slow_worker = Some((3, 5.0));
+        let ar_slow = rounds::run(&pa).final_time;
+        let ad_slow = run(&pd).final_time;
+        let ar_degrade = ar_slow / ar_base;
+        let ad_degrade = ad_slow / ad_base;
+        assert!(
+            ad_degrade < ar_degrade,
+            "AD-PSGD degraded {ad_degrade}x vs AR {ar_degrade}x"
+        );
+    }
+
+    #[test]
+    fn conflicts_occur_with_many_actives() {
+        let mut p = params();
+        p.exp.train.max_iters = 120;
+        let res = run(&p);
+        assert!(res.conflicts > 0, "expected serialization conflicts");
+    }
+
+    #[test]
+    fn ring_only_mode_runs() {
+        let mut p = params();
+        p.exp.algo.adpsgd_ring_only = true;
+        let res = run(&p);
+        assert!(res.total_iters > 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = params();
+        let a = run(&p);
+        let b = run(&p);
+        assert_eq!(a.final_time, b.final_time);
+        assert_eq!(a.conflicts, b.conflicts);
+    }
+}

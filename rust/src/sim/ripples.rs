@@ -1,0 +1,439 @@
+//! Ripples: event-driven simulation of P-Reduce group synchronization,
+//! scheduled either by the centralized Group Generator (random or smart,
+//! §4.1/§5) or by the decentralized static scheduler (§4.2).
+//!
+//! Semantics (faithful to Fig. 8):
+//! * A worker reaching its sync point sends a request to the GG and
+//!   becomes *ready*; it stays at the sync point until its *assigned*
+//!   group's P-Reduce completes, but meanwhile participates in any armed
+//!   group that includes it (it may have been drafted by other workers).
+//! * An armed group (holds all its lock-vector bits) starts its P-Reduce
+//!   as soon as every member is ready; conflicting groups wait in the
+//!   GG's pending queue — that serialization is the atomicity guarantee
+//!   and the cost smart GG exists to avoid.
+//! * Static mode needs no locks: the schedule is conflict-free by
+//!   construction; a group of schedule step `s` runs when all its members
+//!   reach step `s` (rendezvous), which is also why a slow worker stalls
+//!   its statically-assigned partners (§4.3).
+
+use std::collections::HashMap;
+
+use crate::cluster::{calibration, ComputeTimer};
+use crate::comm::{CommCache, CostModel};
+use crate::config::AlgoKind;
+use crate::gg::{GgConfig, GroupGenerator, GroupId, StaticScheduler};
+use crate::util::rng::Pcg32;
+
+use super::events::EventQueue;
+use super::state::SimResult;
+use super::SimParams;
+
+#[derive(Debug)]
+enum Ev {
+    ComputeDone(usize),
+    /// GG mode: group `id` with `members` finished its P-Reduce.
+    PReduceDone(GroupId, Vec<usize>),
+    /// Static mode: the group `members` of schedule step `sidx` finished.
+    StaticDone(u64, Vec<usize>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum WState {
+    Computing,
+    Ready,
+    InPReduce,
+}
+
+/// Scan armed groups; start every group whose members are all ready.
+fn start_runnable(
+    armed: &mut HashMap<GroupId, Vec<usize>>,
+    wstate: &mut [WState],
+    q: &mut EventQueue<Ev>,
+    now: f64,
+    cost: &CostModel,
+    cache: &mut CommCache,
+    bytes: usize,
+) {
+    let mut runnable: Vec<GroupId> = armed
+        .iter()
+        .filter(|(_, m)| m.iter().all(|&x| wstate[x] == WState::Ready))
+        .map(|(&id, _)| id)
+        .collect();
+    // HashMap iteration order is randomized per process; start groups in
+    // creation order so simulations are bit-for-bit reproducible per seed.
+    runnable.sort_unstable();
+    for gid in runnable {
+        let members = armed.remove(&gid).unwrap();
+        for &m in &members {
+            wstate[m] = WState::InPReduce;
+        }
+        let dur = cost.gg_rtt()
+            + cache.acquire(&members)
+            + cost.ring_allreduce(&members, bytes)
+            + calibration::PREDUCE_OVERHEAD;
+        q.push(now + dur, Ev::PReduceDone(gid, members));
+    }
+}
+
+pub fn run(params: &SimParams) -> SimResult {
+    run_until(params, None)
+}
+
+/// Run with an explicit GG configuration (the ablation harness toggles
+/// individual §5 mechanisms; see `bench::ablation`).
+pub fn run_with_gg(params: &SimParams, gg_cfg: GgConfig) -> SimResult {
+    run_inner(params, None, Some(gg_cfg))
+}
+
+pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
+    run_inner(params, time_budget, None)
+}
+
+fn run_inner(
+    params: &SimParams,
+    time_budget: Option<f64>,
+    gg_override: Option<GgConfig>,
+) -> SimResult {
+    let exp = &params.exp;
+    let n = exp.cluster.n_workers();
+    let kind = exp.algo.kind;
+    let cost = CostModel::from_cluster(&exp.cluster);
+    let mut timer = ComputeTimer::new(
+        params.compute_base,
+        exp.cluster.hetero.clone(),
+        n,
+        exp.train.seed,
+    );
+    let mut st = params.make_state();
+    let mut rng = Pcg32::new(exp.train.seed ^ 0x8199_1e5);
+    let mut cache = CommCache::new(64, calibration::COMM_CREATE_COST);
+    let bytes = params.model_bytes;
+    let section = exp.algo.section_len.max(1) as u64;
+
+    let mut gg = match (gg_override, kind) {
+        (Some(cfg), _) => Some(GroupGenerator::new(cfg)),
+        (None, AlgoKind::RipplesRandom) => Some(GroupGenerator::new(GgConfig::random(
+            n,
+            exp.cluster.workers_per_node,
+            exp.algo.group_size,
+        ))),
+        (None, AlgoKind::RipplesSmart) => Some(GroupGenerator::new(GgConfig::smart(
+            n,
+            exp.cluster.workers_per_node,
+            exp.algo.group_size,
+            exp.algo.c_thres,
+        ))),
+        (None, AlgoKind::RipplesStatic) => None,
+        (None, other) => unreachable!("ripples engine got {other:?}"),
+    };
+    let sched = StaticScheduler::new(exp.cluster.n_nodes, exp.cluster.workers_per_node);
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut wstate = vec![WState::Computing; n];
+    let mut ready_since = vec![0.0f64; n];
+    let mut assigned: Vec<Option<GroupId>> = vec![None; n];
+    // armed but not yet started: id -> members
+    let mut armed: HashMap<GroupId, Vec<usize>> = HashMap::new();
+    // static-mode rendezvous: (sidx, lead member) -> arrivals so far
+    let mut rendezvous: HashMap<(u64, usize), usize> = HashMap::new();
+
+    let mut iters = vec![0u64; n];
+    let mut compute_total = 0.0;
+    let mut sync_total = 0.0;
+    let mut total_iters = 0u64;
+    let max_total = exp.train.max_iters as u64 * n as u64;
+    let eval_stride = (exp.train.eval_every * n) as u64;
+
+    st.record(0.0, 0.0);
+    for w in 0..n {
+        q.push(timer.next_compute(w), Ev::ComputeDone(w));
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        match ev {
+            Ev::ComputeDone(w) => {
+                st.local_step(w, iters[w]);
+                let it = iters[w];
+                iters[w] += 1;
+                total_iters += 1;
+                compute_total += timer.base() * exp.cluster.hetero.slowdown_of(w);
+                if total_iters % eval_stride == 0 {
+                    st.record(now, total_iters as f64 / n as f64);
+                }
+                if st.done()
+                    || total_iters >= max_total
+                    || time_budget.is_some_and(|b| now > b)
+                {
+                    break;
+                }
+                if (it + 1) % section != 0 {
+                    q.push(now + timer.next_compute(w), Ev::ComputeDone(w));
+                    continue;
+                }
+                wstate[w] = WState::Ready;
+                ready_since[w] = now;
+                if let Some(gg) = gg.as_mut() {
+                    let (gid, newly) = gg.request(w, &mut rng);
+                    match gid {
+                        Some(gid) => assigned[w] = Some(gid),
+                        None => {
+                            // no sync possible (cannot happen in the sim's
+                            // never-retiring workload, but stay graceful)
+                            wstate[w] = WState::Computing;
+                            q.push(now + timer.next_compute(w), Ev::ComputeDone(w));
+                        }
+                    }
+                    for g in newly {
+                        armed.insert(g.id, g.members);
+                    }
+                    start_runnable(
+                        &mut armed, &mut wstate, &mut q, now, &cost, &mut cache, bytes,
+                    );
+                } else {
+                    // static scheduling: one schedule step per section
+                    let sidx = it / section;
+                    match sched.group_of(w, sidx) {
+                        None => {
+                            wstate[w] = WState::Computing;
+                            q.push(now + timer.next_compute(w), Ev::ComputeDone(w));
+                        }
+                        Some(members) => {
+                            let key = (sidx, members[0]);
+                            let arrived = rendezvous.entry(key).or_insert(0);
+                            *arrived += 1;
+                            if *arrived == members.len() {
+                                rendezvous.remove(&key);
+                                for &m in &members {
+                                    wstate[m] = WState::InPReduce;
+                                }
+                                let dur = cache.acquire(&members)
+                                    + cost.ring_allreduce(&members, bytes)
+                                    + calibration::PREDUCE_OVERHEAD;
+                                q.push(now + dur, Ev::StaticDone(sidx, members));
+                            }
+                        }
+                    }
+                }
+            }
+            Ev::PReduceDone(gid, members) => {
+                st.preduce(&members);
+                {
+                    let gg = gg.as_mut().expect("PReduceDone without GG");
+                    for g in gg.complete(gid) {
+                        armed.insert(g.id, g.members);
+                    }
+                }
+                for &m in &members {
+                    if assigned[m] == Some(gid) {
+                        // this was m's own sync step: resume compute
+                        assigned[m] = None;
+                        wstate[m] = WState::Computing;
+                        sync_total += now - ready_since[m];
+                        q.push(now + timer.next_compute(m), Ev::ComputeDone(m));
+                    } else {
+                        // drafted into someone else's group: stay ready
+                        wstate[m] = WState::Ready;
+                    }
+                }
+                start_runnable(
+                    &mut armed, &mut wstate, &mut q, now, &cost, &mut cache, bytes,
+                );
+            }
+            Ev::StaticDone(_sidx, members) => {
+                st.preduce(&members);
+                for &m in &members {
+                    wstate[m] = WState::Computing;
+                    sync_total += now - ready_since[m];
+                    q.push(now + timer.next_compute(m), Ev::ComputeDone(m));
+                }
+            }
+        }
+        if q.is_empty() && total_iters < max_total && !st.done() {
+            panic!(
+                "simulation stalled at t={}: states {:?}, armed {:?}, pending {}",
+                q.now(),
+                wstate,
+                armed.keys().collect::<Vec<_>>(),
+                gg.as_ref().map(|g| g.pending_len()).unwrap_or(0)
+            );
+        }
+    }
+
+    let final_time = q.now();
+    st.record(final_time, total_iters as f64 / n as f64);
+    let (conflicts, requests) = gg
+        .as_ref()
+        .map(|g| (g.stats.conflicts, g.stats.requests))
+        .unwrap_or((0, 0));
+    SimResult {
+        algo: kind.name().to_string(),
+        final_time,
+        total_iters,
+        per_worker_iters: iters,
+        compute_time: compute_total,
+        sync_time: sync_total,
+        time_to_target: st.hit_time,
+        avg_iters_to_target: st.hit_avg_iter,
+        trace: st.trace,
+        conflicts,
+        gg_requests: requests,
+        comm_cache_hits: cache.hits,
+        comm_cache_misses: cache.misses,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Experiment;
+    use crate::model::MlpSpec;
+    use crate::sim::{adpsgd, rounds};
+
+    fn params(kind: AlgoKind) -> SimParams {
+        let mut exp = Experiment::default();
+        exp.algo.kind = kind;
+        exp.train.max_iters = 60;
+        exp.train.eval_every = 10;
+        exp.train.loss_target = None;
+        let mut p = SimParams::vgg16_defaults(exp);
+        p.spec = MlpSpec::tiny();
+        p.dataset_size = 256;
+        p.batch = 32;
+        p
+    }
+
+    #[test]
+    fn all_three_ripples_variants_complete() {
+        for kind in [
+            AlgoKind::RipplesStatic,
+            AlgoKind::RipplesRandom,
+            AlgoKind::RipplesSmart,
+        ] {
+            let res = run(&params(kind));
+            assert_eq!(res.total_iters, 60 * 16, "{kind:?}");
+            assert!(res.final_time > 0.0);
+        }
+    }
+
+    #[test]
+    fn smart_gg_conflicts_fewer_than_random() {
+        // §5.1's whole point: GB + GD avoid the serialization conflicts
+        // plain random group generation produces constantly.
+        let random = run(&params(AlgoKind::RipplesRandom));
+        let smart = run(&params(AlgoKind::RipplesSmart));
+        assert!(
+            smart.conflicts < random.conflicts,
+            "smart {} vs random {}",
+            smart.conflicts,
+            random.conflicts
+        );
+        assert!(smart.final_time < random.final_time);
+    }
+
+    #[test]
+    fn static_has_zero_conflicts() {
+        let res = run(&params(AlgoKind::RipplesStatic));
+        assert_eq!(res.conflicts, 0);
+    }
+
+    #[test]
+    fn ripples_static_beats_allreduce_homogeneous() {
+        // Fig. 17's headline: Ripples static > All-Reduce per-iteration
+        // in homogeneous clusters (smaller groups, no global barrier).
+        let mut pa = params(AlgoKind::AllReduce);
+        let rs = run(&params(AlgoKind::RipplesStatic));
+        let ar = rounds::run(&pa);
+        assert!(
+            rs.per_iter_time() < ar.per_iter_time(),
+            "ripples {} vs AR {}",
+            rs.per_iter_time(),
+            ar.per_iter_time()
+        );
+        pa.exp.algo.kind = AlgoKind::ParameterServer;
+        let ps = rounds::run(&pa);
+        assert!(rs.per_iter_time() < ps.per_iter_time());
+    }
+
+    #[test]
+    fn ripples_beats_adpsgd_throughput() {
+        // P-Reduce (one collective) vs pairwise atomic averaging with the
+        // TF remote-variable overhead: Ripples should iterate much faster.
+        let rs = run(&params(AlgoKind::RipplesSmart));
+        let ad = adpsgd::run(&params(AlgoKind::AdPsgd));
+        assert!(
+            rs.per_iter_time() < ad.per_iter_time(),
+            "ripples {} vs adpsgd {}",
+            rs.per_iter_time(),
+            ad.per_iter_time()
+        );
+    }
+
+    #[test]
+    fn smart_tolerates_slowdown_better_than_static() {
+        // Fig. 19: with a 5x slow worker, static's fixed schedule stalls
+        // its partners while smart GG routes around the laggard.
+        let mut ps = params(AlgoKind::RipplesStatic);
+        let mut pm = params(AlgoKind::RipplesSmart);
+        let static_base = run(&ps).final_time;
+        let smart_base = run(&pm).final_time;
+        ps.exp.cluster.hetero.slow_worker = Some((5, 5.0));
+        pm.exp.cluster.hetero.slow_worker = Some((5, 5.0));
+        let static_slow = run(&ps).final_time;
+        let smart_slow = run(&pm).final_time;
+        let static_degrade = static_slow / static_base;
+        let smart_degrade = smart_slow / smart_base;
+        assert!(
+            smart_degrade < static_degrade,
+            "smart degraded {smart_degrade}x vs static {static_degrade}x"
+        );
+    }
+
+    #[test]
+    fn models_converge_toward_consensus() {
+        // Spectral-gap consequence: replicas drift together over time.
+        let p = params(AlgoKind::RipplesSmart);
+        let res = run(&p);
+        let _ = res;
+        let mut st = p.make_state();
+        // replay a short schedule manually to measure disagreement decay
+        let mut rng = Pcg32::new(9);
+        let mut gg = GroupGenerator::new(GgConfig::smart(16, 4, 3, 8));
+        let disagreement = |st: &crate::sim::TrainState| -> f64 {
+            let n = st.models[0].len();
+            let mut mean = vec![0.0f64; n];
+            for m in &st.models {
+                for (s, &v) in mean.iter_mut().zip(m.iter()) {
+                    *s += v as f64;
+                }
+            }
+            for s in mean.iter_mut() {
+                *s /= st.models.len() as f64;
+            }
+            st.models
+                .iter()
+                .map(|m| {
+                    m.iter()
+                        .zip(mean.iter())
+                        .map(|(&v, &mu)| (v as f64 - mu).powi(2))
+                        .sum::<f64>()
+                })
+                .sum::<f64>()
+        };
+        for w in 0..16 {
+            st.local_step(w, 0);
+        }
+        let d0 = disagreement(&st);
+        // run a few GD rounds of averaging only
+        for round in 0..6 {
+            let (_, armed) = gg.request(round % 16, &mut rng);
+            for g in &armed {
+                st.preduce(&g.members);
+            }
+            for g in armed {
+                gg.complete(g.id);
+            }
+        }
+        let d1 = disagreement(&st);
+        assert!(d1 < d0 * 0.8, "disagreement {d0} -> {d1} did not contract");
+    }
+}

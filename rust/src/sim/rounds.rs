@@ -1,0 +1,229 @@
+//! Barrier-style baselines: All-Reduce, Parameter Server, D-PSGD.
+//!
+//! These need no event queue — per-iteration timing is a closed-form
+//! recurrence over worker finish times:
+//!
+//! * All-Reduce / PS: a *global* barrier; the round ends when the slowest
+//!   worker finishes compute, plus the collective / server round cost.
+//!   This is precisely why one 5x-slow worker drags the whole cluster
+//!   (Fig. 1, Fig. 19).
+//! * D-PSGD: each worker barriers only with its ring neighbors, so slow
+//!   workers stall their neighborhood; the stall still propagates around
+//!   the ring at one hop per iteration.
+
+use crate::cluster::{calibration, ComputeTimer};
+use crate::comm::CostModel;
+use crate::config::AlgoKind;
+
+use super::state::SimResult;
+use super::SimParams;
+
+pub fn run(params: &SimParams) -> SimResult {
+    run_until(params, None)
+}
+
+pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
+    let exp = &params.exp;
+    let n = exp.cluster.n_workers();
+    let cost = CostModel::from_cluster(&exp.cluster);
+    let mut timer = ComputeTimer::new(
+        params.compute_base,
+        exp.cluster.hetero.clone(),
+        n,
+        exp.train.seed,
+    );
+    let mut st = params.make_state();
+    let kind = exp.algo.kind;
+    let bytes = params.model_bytes;
+    let section = exp.algo.section_len.max(1);
+
+    // Per-worker local clocks (D-PSGD); AR/PS collapse to one clock.
+    let mut t = vec![0.0f64; n];
+    let mut compute_total = 0.0f64;
+    let mut sync_total = 0.0f64;
+    let all: Vec<usize> = (0..n).collect();
+
+    let sync_cost = |k: AlgoKind| -> f64 {
+        match k {
+            AlgoKind::AllReduce => {
+                cost.ring_allreduce(&all, bytes) + calibration::ALLREDUCE_OVERHEAD
+            }
+            AlgoKind::ParameterServer => {
+                cost.ps_round(n, bytes) + calibration::PS_OVERHEAD
+            }
+            AlgoKind::DPsgd => {
+                // two neighbor exchanges, worst-case inter-node
+                2.0 * cost.p2p(0, n / 2, bytes) + calibration::PREDUCE_OVERHEAD
+            }
+            _ => unreachable!("rounds engine got {k:?}"),
+        }
+    };
+
+    st.record(0.0, 0.0);
+    let mut iter: u64 = 0;
+    let max_iters = exp.train.max_iters as u64;
+    'outer: while iter < max_iters && !st.done() {
+        // local compute everywhere (real math)
+        let mut finish = vec![0.0f64; n];
+        for w in 0..n {
+            let c = timer.next_compute(w);
+            st.local_step(w, iter);
+            finish[w] = t[w] + c;
+            compute_total += c;
+        }
+        iter += 1;
+        let do_sync = iter % section as u64 == 0;
+        match kind {
+            AlgoKind::AllReduce | AlgoKind::ParameterServer => {
+                let barrier = finish.iter().cloned().fold(0.0, f64::max);
+                let s = if do_sync { sync_cost(kind) } else { 0.0 };
+                if do_sync {
+                    st.global_average();
+                }
+                // every worker waits from its own finish to barrier + sync
+                for w in 0..n {
+                    sync_total += barrier - finish[w] + s;
+                    t[w] = barrier + s;
+                }
+            }
+            AlgoKind::DPsgd => {
+                if do_sync {
+                    // neighborhood averaging on a ring (W with 1/3 weights):
+                    // new_x[w] = mean(x[w-1], x[w], x[w+1])
+                    let snapshot = st.models.clone();
+                    for w in 0..n {
+                        let l = (w + n - 1) % n;
+                        let r = (w + 1) % n;
+                        let model = &mut st.models[w];
+                        for i in 0..model.len() {
+                            model[i] =
+                                (snapshot[l][i] + snapshot[w][i] + snapshot[r][i]) / 3.0;
+                        }
+                    }
+                    let s = sync_cost(kind);
+                    let mut t_next = vec![0.0f64; n];
+                    for w in 0..n {
+                        let l = (w + n - 1) % n;
+                        let r = (w + 1) % n;
+                        let ready = finish[w].max(finish[l]).max(finish[r]);
+                        sync_total += ready - finish[w] + s;
+                        t_next[w] = ready + s;
+                    }
+                    t = t_next;
+                } else {
+                    t = finish;
+                }
+            }
+            _ => unreachable!(),
+        }
+        if iter % exp.train.eval_every as u64 == 0 {
+            let now = t.iter().cloned().fold(0.0, f64::max);
+            st.record(now, iter as f64);
+        }
+        if let Some(budget) = time_budget {
+            if t.iter().cloned().fold(0.0, f64::max) > budget {
+                break 'outer;
+            }
+        }
+    }
+
+    let final_time = t.iter().cloned().fold(0.0, f64::max);
+    if st.trace.last().map(|tp| tp.avg_iter) != Some(iter as f64) {
+        st.record(final_time, iter as f64);
+    }
+    SimResult {
+        algo: kind.name().to_string(),
+        final_time,
+        total_iters: iter * n as u64,
+        per_worker_iters: vec![iter; n],
+        compute_time: compute_total,
+        sync_time: sync_total,
+        time_to_target: st.hit_time,
+        avg_iters_to_target: st.hit_avg_iter,
+        trace: st.trace,
+        conflicts: 0,
+        gg_requests: 0,
+        comm_cache_hits: 0,
+        comm_cache_misses: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Experiment;
+    use crate::model::MlpSpec;
+
+    fn params(kind: AlgoKind) -> SimParams {
+        let mut exp = Experiment::default();
+        exp.algo.kind = kind;
+        exp.train.max_iters = 40;
+        exp.train.eval_every = 10;
+        exp.train.loss_target = None;
+        let mut p = SimParams::vgg16_defaults(exp);
+        p.spec = MlpSpec::tiny();
+        p.dataset_size = 256;
+        p.batch = 32;
+        p
+    }
+
+    #[test]
+    fn allreduce_faster_than_ps_per_iteration() {
+        let ar = run(&params(AlgoKind::AllReduce));
+        let ps = run(&params(AlgoKind::ParameterServer));
+        assert!(ar.per_iter_time() < ps.per_iter_time());
+    }
+
+    #[test]
+    fn allreduce_models_stay_identical() {
+        let p = params(AlgoKind::AllReduce);
+        let _ = run(&p); // run() consumes state internally; re-run manually
+        // rebuild and check invariant directly
+        let mut st = p.make_state();
+        for it in 0..5 {
+            for w in 0..st.n_workers() {
+                st.local_step(w, it);
+            }
+            st.global_average();
+        }
+        for w in 1..st.n_workers() {
+            assert_eq!(st.models[0], st.models[w]);
+        }
+    }
+
+    #[test]
+    fn slow_worker_drags_allreduce_proportionally() {
+        let mut p = params(AlgoKind::AllReduce);
+        let base = run(&p).final_time;
+        p.exp.cluster.hetero.slow_worker = Some((7, 5.0));
+        let slow = run(&p).final_time;
+        // compute dominates at these settings; 5x slow worker should push
+        // total time up by at least 2x (global barrier effect)
+        assert!(slow > base * 2.0, "base {base} slow {slow}");
+    }
+
+    #[test]
+    fn dpsgd_tolerates_slowdown_better_than_allreduce() {
+        let mut pa = params(AlgoKind::AllReduce);
+        let mut pd = params(AlgoKind::DPsgd);
+        pa.exp.cluster.hetero.slow_worker = Some((0, 5.0));
+        pd.exp.cluster.hetero.slow_worker = Some((0, 5.0));
+        let a = run(&pa);
+        let d = run(&pd);
+        // D-PSGD's fast workers keep running ahead of the slow one's
+        // neighborhood, so it finishes the same #iters sooner.
+        assert!(d.final_time < a.final_time, "{} vs {}", d.final_time, a.final_time);
+    }
+
+    #[test]
+    fn section_length_reduces_sync_share() {
+        let mut p1 = params(AlgoKind::AllReduce);
+        p1.exp.train.max_iters = 32;
+        let mut p4 = p1.clone();
+        p4.exp.algo.section_len = 4;
+        let r1 = run(&p1);
+        let r4 = run(&p4);
+        assert!(r4.sync_fraction() < r1.sync_fraction());
+        assert!(r4.final_time < r1.final_time);
+    }
+}

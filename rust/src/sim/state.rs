@@ -1,0 +1,321 @@
+//! Shared training state for all simulation engines: per-worker model
+//! replicas (real math), loss evaluation, trace recording, termination.
+
+use crate::collectives;
+use crate::model::{loss_only, sgd_step, Dataset, MlpScratch, MlpSpec};
+
+/// One point on the loss curve.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    /// Virtual wall-clock seconds.
+    pub time: f64,
+    /// Average completed iterations per worker.
+    pub avg_iter: f64,
+    /// Loss of the ensemble-averaged model on the eval set.
+    pub loss: f64,
+}
+
+/// Simulation outcome (consumed by the figure harnesses).
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    pub algo: String,
+    pub trace: Vec<TracePoint>,
+    pub final_time: f64,
+    pub total_iters: u64,
+    pub per_worker_iters: Vec<u64>,
+    /// Sum over workers of time spent computing.
+    pub compute_time: f64,
+    /// Sum over workers of time spent in synchronization (wait + transfer).
+    pub sync_time: f64,
+    pub time_to_target: Option<f64>,
+    pub avg_iters_to_target: Option<f64>,
+    pub conflicts: u64,
+    pub gg_requests: u64,
+    pub comm_cache_hits: u64,
+    pub comm_cache_misses: u64,
+}
+
+impl SimResult {
+    /// Mean wall-clock seconds per (per-worker) iteration.
+    pub fn per_iter_time(&self) -> f64 {
+        if self.total_iters == 0 {
+            return 0.0;
+        }
+        self.final_time / (self.total_iters as f64 / self.per_worker_iters.len() as f64)
+    }
+
+    /// Fraction of worker-time spent synchronizing (Fig. 2b's metric).
+    pub fn sync_fraction(&self) -> f64 {
+        let total = self.compute_time + self.sync_time;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.sync_time / total
+        }
+    }
+}
+
+/// Per-worker replicas + the real-math SGD/eval plumbing.
+pub struct TrainState {
+    pub spec: MlpSpec,
+    pub dataset: Dataset,
+    pub models: Vec<Vec<f32>>,
+    pub batch: usize,
+    pub lr: f32,
+    scratch: MlpScratch,
+    avg_scratch: Vec<f32>,
+    eval_x: Vec<f32>,
+    eval_y: Vec<usize>,
+    pub trace: Vec<TracePoint>,
+    /// Smoothed loss (EMA) for target detection.
+    smoothed: Option<f64>,
+    pub loss_target: Option<f64>,
+    pub hit_time: Option<f64>,
+    pub hit_avg_iter: Option<f64>,
+    seed: u64,
+    /// Non-IID skew: probability a sample comes from the worker's primary
+    /// class (0 = IID).
+    data_bias: f64,
+    class_index: Vec<Vec<usize>>,
+}
+
+impl TrainState {
+    pub fn new(
+        spec: MlpSpec,
+        dataset: Dataset,
+        n_workers: usize,
+        batch: usize,
+        lr: f32,
+        loss_target: Option<f64>,
+        seed: u64,
+    ) -> Self {
+        Self::with_bias(spec, dataset, n_workers, batch, lr, loss_target, seed, 0.0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_bias(
+        spec: MlpSpec,
+        dataset: Dataset,
+        n_workers: usize,
+        batch: usize,
+        lr: f32,
+        loss_target: Option<f64>,
+        seed: u64,
+        data_bias: f64,
+    ) -> Self {
+        let init = spec.init(seed);
+        let (eval_x, eval_y) = dataset.eval_set(512);
+        let class_index = dataset.class_index();
+        Self {
+            models: vec![init; n_workers],
+            spec,
+            dataset,
+            batch,
+            lr,
+            scratch: MlpScratch::new(),
+            avg_scratch: Vec::new(),
+            eval_x,
+            eval_y,
+            trace: Vec::new(),
+            smoothed: None,
+            loss_target,
+            hit_time: None,
+            hit_avg_iter: None,
+            seed,
+            data_bias,
+            class_index,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.models.len()
+    }
+
+    /// One local SGD iteration for `worker` (tag makes batches distinct
+    /// across workers and iterations but deterministic per seed). With
+    /// `data_bias > 0` the worker draws from its non-IID shard (primary
+    /// class `worker % classes`).
+    pub fn local_step(&mut self, worker: usize, iter: u64) -> f64 {
+        let tag = self
+            .seed
+            .wrapping_mul(0x517C_C1B7_2722_0A95)
+            .wrapping_add((worker as u64) << 32)
+            .wrapping_add(iter);
+        let (x, y) = if self.data_bias > 0.0 {
+            self.dataset.batch_biased(
+                tag,
+                self.batch,
+                worker % self.spec.classes,
+                self.data_bias,
+                &self.class_index,
+            )
+        } else {
+            self.dataset.batch(tag, self.batch)
+        };
+        sgd_step(&self.spec, &mut self.models[worker], &x, &y, self.lr, &mut self.scratch)
+    }
+
+    /// Apply F^G: average the models of `group` in place.
+    pub fn preduce(&mut self, group: &[usize]) {
+        debug_assert!(group.windows(2).all(|w| w[0] < w[1]), "group must be sorted");
+        // Split the borrow: collect raw pointers safely via split_at_mut
+        // dance — simplest correct approach: take slices by index order.
+        let mut refs: Vec<&mut [f32]> = Vec::with_capacity(group.len());
+        let mut rest: &mut [Vec<f32>] = &mut self.models;
+        let mut offset = 0usize;
+        for &g in group {
+            let idx = g - offset;
+            let (head, tail) = rest.split_at_mut(idx + 1);
+            refs.push(head[idx].as_mut_slice());
+            rest = tail;
+            offset = g + 1;
+        }
+        collectives::preduce_mean_inplace(&mut refs, &mut self.avg_scratch);
+    }
+
+    /// Average ALL models (the All-Reduce/PS step).
+    pub fn global_average(&mut self) {
+        let group: Vec<usize> = (0..self.n_workers()).collect();
+        self.preduce(&group);
+    }
+
+    /// Training loss as a distributed system logs it: the mean of
+    /// per-replica losses (sampled over up to 4 replicas for speed).
+    ///
+    /// This is deliberately NOT the loss of the ensemble-mean model: the
+    /// averaged iterate hides replica drift entirely (local-SGD folklore),
+    /// while per-replica loss exposes the statistical-efficiency cost of
+    /// infrequent or less-random synchronization — the effect Figs. 16/18
+    /// measure.
+    pub fn global_loss(&mut self) -> f64 {
+        let n_models = self.models.len();
+        let stride = n_models.div_ceil(4).max(1);
+        let mut total = 0.0;
+        let mut count = 0;
+        let mut w = 0;
+        while w < n_models {
+            total += loss_only(&self.spec, &self.models[w], &self.eval_x, &self.eval_y);
+            count += 1;
+            w += stride;
+        }
+        total / count as f64
+    }
+
+    /// Loss of the ensemble-mean model (consensus view; used by Fig. 20's
+    /// final-accuracy reporting).
+    pub fn consensus_loss(&mut self) -> f64 {
+        let n = self.models[0].len();
+        self.avg_scratch.clear();
+        self.avg_scratch.resize(n, 0.0);
+        for m in &self.models {
+            for (s, &v) in self.avg_scratch.iter_mut().zip(m.iter()) {
+                *s += v;
+            }
+        }
+        let inv = 1.0 / self.models.len() as f32;
+        for s in self.avg_scratch.iter_mut() {
+            *s *= inv;
+        }
+        loss_only(&self.spec, &self.avg_scratch, &self.eval_x, &self.eval_y)
+    }
+
+    /// Record a trace point; returns true if the loss target was just hit.
+    pub fn record(&mut self, time: f64, avg_iter: f64) -> bool {
+        let loss = self.global_loss();
+        self.trace.push(TracePoint { time, avg_iter, loss });
+        let s = match self.smoothed {
+            Some(prev) => 0.5 * prev + 0.5 * loss,
+            None => loss,
+        };
+        self.smoothed = Some(s);
+        if self.hit_time.is_none() {
+            if let Some(target) = self.loss_target {
+                if s <= target {
+                    self.hit_time = Some(time);
+                    self.hit_avg_iter = Some(avg_iter);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    pub fn done(&self) -> bool {
+        self.hit_time.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(n: usize) -> TrainState {
+        let spec = MlpSpec::tiny();
+        let ds = Dataset::gaussian_mixture(spec.in_dim, spec.classes, 256, 7);
+        TrainState::new(spec, ds, n, 32, 0.1, Some(0.05), 1)
+    }
+
+    #[test]
+    fn preduce_makes_group_models_equal() {
+        let mut st = state(4);
+        for w in 0..4 {
+            st.local_step(w, 0);
+        }
+        st.preduce(&[1, 3]);
+        assert_eq!(st.models[1], st.models[3]);
+        assert_ne!(st.models[0], st.models[1]);
+    }
+
+    #[test]
+    fn preduce_nonadjacent_group_indices() {
+        let mut st = state(8);
+        for w in 0..8 {
+            st.local_step(w, 0);
+            st.local_step(w, 1);
+        }
+        let before_sum: f64 = [0usize, 4, 7]
+            .iter()
+            .map(|&w| st.models[w].iter().map(|&v| v as f64).sum::<f64>())
+            .sum();
+        st.preduce(&[0, 4, 7]);
+        assert_eq!(st.models[0], st.models[4]);
+        assert_eq!(st.models[4], st.models[7]);
+        let after_sum: f64 = [0usize, 4, 7]
+            .iter()
+            .map(|&w| st.models[w].iter().map(|&v| v as f64).sum::<f64>())
+            .sum();
+        assert!((before_sum - after_sum).abs() < 1e-2, "mass not conserved");
+    }
+
+    #[test]
+    fn local_steps_deterministic() {
+        let mut a = state(2);
+        let mut b = state(2);
+        let la = a.local_step(0, 5);
+        let lb = b.local_step(0, 5);
+        assert_eq!(la, lb);
+        assert_eq!(a.models[0], b.models[0]);
+    }
+
+    #[test]
+    fn global_average_then_loss_decreases_with_training() {
+        let mut st = state(2);
+        let l0 = st.global_loss();
+        for it in 0..40 {
+            st.local_step(0, it);
+            st.local_step(1, it);
+            st.global_average();
+        }
+        let l1 = st.global_loss();
+        assert!(l1 < l0, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn record_hits_target() {
+        let mut st = state(2);
+        st.loss_target = Some(1e9); // absurdly easy
+        assert!(st.record(1.0, 1.0));
+        assert_eq!(st.hit_time, Some(1.0));
+        assert!(st.done());
+    }
+}

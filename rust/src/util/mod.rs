@@ -1,0 +1,5 @@
+//! Shared utilities: deterministic RNGs, statistics, mini-JSON.
+
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,256 @@
+//! Integration tests: whole-system behaviours across algorithm engines —
+//! the paper's qualitative claims, determinism, and the config pipeline.
+
+use ripples::bench::{self, base_params};
+use ripples::config::{AlgoKind, Experiment};
+use ripples::metrics;
+use ripples::sim;
+
+fn quick(kind: AlgoKind) -> sim::SimParams {
+    let mut p = base_params(kind);
+    p.exp.train.max_iters = 120;
+    p.exp.train.loss_target = None;
+    p
+}
+
+#[test]
+fn paper_shape_homogeneous_ordering() {
+    // Fig. 17 ordering on per-iteration time:
+    //   ripples-{static,smart} < all-reduce < ps <= ad-psgd-ish
+    let static_ = sim::run(&quick(AlgoKind::RipplesStatic));
+    let smart = sim::run(&quick(AlgoKind::RipplesSmart));
+    let ar = sim::run(&quick(AlgoKind::AllReduce));
+    let ps = sim::run(&quick(AlgoKind::ParameterServer));
+    let ad = sim::run(&quick(AlgoKind::AdPsgd));
+    assert!(static_.per_iter_time() < ar.per_iter_time(), "static vs AR");
+    assert!(smart.per_iter_time() < ar.per_iter_time(), "smart vs AR");
+    assert!(ar.per_iter_time() < ps.per_iter_time(), "AR vs PS");
+    assert!(smart.per_iter_time() < ad.per_iter_time(), "smart vs AD-PSGD");
+}
+
+#[test]
+fn paper_shape_heterogeneous_flip() {
+    // Fig. 1: AR >> AD-PSGD homo, AD-PSGD wins (or nearly) at 5x.
+    let mut ar5 = quick(AlgoKind::AllReduce);
+    ar5.exp.cluster.hetero.slow_worker = Some((7, 5.0));
+    let mut ad5 = quick(AlgoKind::AdPsgd);
+    ad5.exp.cluster.hetero.slow_worker = Some((7, 5.0));
+    let ar_homo = sim::run(&quick(AlgoKind::AllReduce));
+    let ar_hetero = sim::run(&ar5);
+    let ad_homo = sim::run(&quick(AlgoKind::AdPsgd));
+    let ad_hetero = sim::run(&ad5);
+    // AR's per-iteration wall time balloons with the straggler...
+    assert!(ar_hetero.per_iter_time() > 3.0 * ar_homo.per_iter_time());
+    // ...AD-PSGD's barely moves.
+    assert!(ad_hetero.per_iter_time() < 1.5 * ad_homo.per_iter_time());
+}
+
+#[test]
+fn paper_shape_smart_gg_best_of_both() {
+    // The headline: smart GG is near-best homo AND degrades mildly.
+    let homo = sim::run(&quick(AlgoKind::RipplesSmart));
+    let mut p5 = quick(AlgoKind::RipplesSmart);
+    p5.exp.cluster.hetero.slow_worker = Some((7, 5.0));
+    let hetero = sim::run(&p5);
+    let degradation = hetero.final_time / homo.final_time;
+    assert!(
+        degradation < 2.0,
+        "smart GG degraded {degradation}x under a 5x straggler"
+    );
+    let mut ar5 = quick(AlgoKind::AllReduce);
+    ar5.exp.cluster.hetero.slow_worker = Some((7, 5.0));
+    let ar_hetero = sim::run(&ar5);
+    assert!(
+        hetero.final_time < ar_hetero.final_time,
+        "smart hetero {} vs AR hetero {}",
+        hetero.final_time,
+        ar_hetero.final_time
+    );
+}
+
+#[test]
+fn slow_worker_iterates_less_under_smart_gg() {
+    // §5.3: the slowdown filter lets fast workers proceed; the slow
+    // worker completes fewer iterations instead of dragging everyone.
+    let mut p = quick(AlgoKind::RipplesSmart);
+    p.exp.cluster.hetero.slow_worker = Some((3, 5.0));
+    let res = sim::run(&p);
+    let slow_iters = res.per_worker_iters[3];
+    let fast_iters: Vec<u64> = res
+        .per_worker_iters
+        .iter()
+        .enumerate()
+        .filter(|&(w, _)| w != 3)
+        .map(|(_, &it)| it)
+        .collect();
+    let fast_avg = fast_iters.iter().sum::<u64>() as f64 / fast_iters.len() as f64;
+    assert!(
+        (slow_iters as f64) < fast_avg * 0.6,
+        "slow worker did {slow_iters} vs fast avg {fast_avg}"
+    );
+}
+
+#[test]
+fn static_blocks_on_straggler_more_than_smart() {
+    // §4.3: the static schedule cannot route around a slow worker.
+    let mut ps = quick(AlgoKind::RipplesStatic);
+    ps.exp.cluster.hetero.slow_worker = Some((3, 5.0));
+    let mut pm = quick(AlgoKind::RipplesSmart);
+    pm.exp.cluster.hetero.slow_worker = Some((3, 5.0));
+    let static_res = sim::run(&ps);
+    let smart_res = sim::run(&pm);
+    assert!(smart_res.final_time < static_res.final_time);
+}
+
+#[test]
+fn convergence_time_to_target_all_algorithms() {
+    // Every algorithm must actually reach the bench loss target.
+    for &kind in AlgoKind::all() {
+        let mut p = base_params(kind);
+        p.exp.train.max_iters = 3000;
+        let res = sim::run(&p);
+        assert!(
+            res.time_to_target.is_some(),
+            "{kind:?} never reached {} (final {:?})",
+            bench::LOSS_TARGET,
+            res.trace.last().map(|t| t.loss)
+        );
+    }
+}
+
+#[test]
+fn determinism_across_engines() {
+    for &kind in AlgoKind::all() {
+        let p = quick(kind);
+        let a = sim::run(&p);
+        let b = sim::run(&p);
+        assert_eq!(a.final_time.to_bits(), b.final_time.to_bits(), "{kind:?}");
+        assert_eq!(a.total_iters, b.total_iters, "{kind:?}");
+        assert_eq!(a.conflicts, b.conflicts, "{kind:?}");
+    }
+}
+
+#[test]
+fn seeds_change_trajectories() {
+    let mut p1 = quick(AlgoKind::RipplesSmart);
+    let mut p2 = quick(AlgoKind::RipplesSmart);
+    p1.exp.train.seed = 1;
+    p2.exp.train.seed = 2;
+    let a = sim::run(&p1);
+    let b = sim::run(&p2);
+    assert_ne!(
+        a.trace.last().unwrap().loss,
+        b.trace.last().unwrap().loss,
+        "different seeds must explore different trajectories"
+    );
+}
+
+#[test]
+fn section_length_tradeoff_matches_fig16() {
+    // Longer sections: faster per-iteration, more iterations to target.
+    let mut p1 = base_params(AlgoKind::RipplesSmart);
+    p1.exp.train.max_iters = 5000;
+    p1.exp.train.eval_every = 2; // fine-grained so the crossing resolves
+    let mut p16 = p1.clone();
+    p16.exp.algo.section_len = 16;
+    let r1 = sim::run(&p1);
+    let r16 = sim::run(&p16);
+    assert!(r16.per_iter_time() < r1.per_iter_time(), "throughput should rise");
+    let i1 = r1.avg_iters_to_target.expect("section=1 must converge");
+    let i16 = r16.avg_iters_to_target.expect("section=16 must converge");
+    assert!(
+        i16 > i1,
+        "statistical efficiency should drop: {i1} vs {i16}"
+    );
+}
+
+#[test]
+fn group_size_tradeoff() {
+    // §3.2: larger groups propagate updates faster (fewer iterations) but
+    // increase conflict probability under random GG.
+    let mut p2 = base_params(AlgoKind::RipplesRandom);
+    p2.exp.algo.group_size = 2;
+    p2.exp.train.max_iters = 400;
+    p2.exp.train.loss_target = None;
+    let mut p6 = p2.clone();
+    p6.exp.algo.group_size = 6;
+    let r2 = sim::run(&p2);
+    let r6 = sim::run(&p6);
+    assert!(
+        r6.conflicts > r2.conflicts,
+        "bigger groups must conflict more: {} vs {}",
+        r6.conflicts,
+        r2.conflicts
+    );
+}
+
+#[test]
+fn config_file_drives_simulation() {
+    let dir = std::env::temp_dir().join("ripples_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        "[cluster]\nn_nodes = 2\nworkers_per_node = 2\nslow_worker = [1, 2.0]\n\
+         [algo]\nkind = \"ripples-smart\"\ngroup_size = 2\n\
+         [train]\nmax_iters = 50\nlr = 0.08\n",
+    )
+    .unwrap();
+    let exp = Experiment::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(exp.cluster.n_workers(), 4);
+    let mut params = sim::SimParams::vgg16_defaults(exp);
+    params.spec = bench::bench_spec();
+    params.dataset_size = 512;
+    params.batch = 32;
+    let res = sim::run(&params);
+    assert_eq!(res.per_worker_iters.len(), 4);
+    assert!(res.total_iters > 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_csv_and_summary_outputs() {
+    let res = sim::run(&quick(AlgoKind::AllReduce));
+    let line = metrics::summarize(&res);
+    assert!(line.contains("all-reduce"));
+    let dir = std::env::temp_dir().join("ripples_trace_test");
+    let path = dir.join("t.csv");
+    metrics::write_trace_csv(&res, &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.lines().count() > 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn dpsgd_converges_with_gossip_averaging() {
+    let mut p = base_params(AlgoKind::DPsgd);
+    p.exp.train.max_iters = 3000;
+    let res = sim::run(&p);
+    assert!(res.time_to_target.is_some(), "D-PSGD should converge");
+}
+
+#[test]
+fn fixed_time_budget_ranking_matches_fig20() {
+    // Under a fixed budget with ResNet-calibrated costs, AD-PSGD finishes
+    // far fewer average iterations than All-Reduce or Prague smart.
+    let budget = 300.0;
+    let mut results = Vec::new();
+    for kind in [AlgoKind::AllReduce, AlgoKind::AdPsgd, AlgoKind::RipplesSmart] {
+        let mut exp = Experiment::default();
+        exp.algo.kind = kind;
+        exp.train.eval_every = 20;
+        let mut p = sim::SimParams::resnet50_defaults(exp);
+        p.spec = bench::bench_spec();
+        p.dataset_size = 1024;
+        p.batch = 32;
+        let res = sim::run_time_budget(&p, budget);
+        results.push((kind, res.total_iters as f64 / 16.0));
+    }
+    let get = |k: AlgoKind| results.iter().find(|(kk, _)| *kk == k).unwrap().1;
+    assert!(
+        get(AlgoKind::RipplesSmart) > get(AlgoKind::AdPsgd),
+        "smart {} vs adpsgd {}",
+        get(AlgoKind::RipplesSmart),
+        get(AlgoKind::AdPsgd)
+    );
+}

@@ -1,0 +1,328 @@
+//! Property-based tests of the Group Generator, lock vector, static
+//! scheduler, and collectives invariants.
+//!
+//! No proptest in the vendored registry, so this is a hand-rolled
+//! randomized harness: every property runs across many PCG-seeded random
+//! workloads; on failure the seed is in the panic message, making the
+//! counterexample reproducible.
+
+use std::collections::HashSet;
+
+use ripples::collectives::{self, ring};
+use ripples::config::ClusterConfig;
+use ripples::gg::{GgConfig, GroupGenerator, GroupId, StaticScheduler};
+use ripples::util::rng::Pcg32;
+
+const SEEDS: u64 = 40;
+
+/// Drive a GG through a random request/complete workload, checking the
+/// serialization invariants at every step.
+fn gg_workload(cfg: GgConfig, seed: u64, steps: usize) {
+    let n = cfg.n_workers;
+    let mut gg = GroupGenerator::new(cfg);
+    let mut rng = Pcg32::new(seed);
+    // armed groups we have not yet completed: (id, members)
+    let mut armed: Vec<(GroupId, Vec<usize>)> = Vec::new();
+    // workers currently waiting (requested, assigned group not completed)
+    let mut waiting: HashSet<usize> = HashSet::new();
+
+    for step in 0..steps {
+        let do_request = armed.is_empty() || rng.gen_f64() < 0.6;
+        if do_request {
+            // pick a worker that is not already waiting
+            let free: Vec<usize> = (0..n).filter(|w| !waiting.contains(w)).collect();
+            if free.is_empty() {
+                // must complete something; fall through
+            } else {
+                let w = free[rng.gen_range(free.len())];
+                let (gid, newly) = gg.request(w, &mut rng);
+                match gid {
+                    // None = "skip this sync step" (no idle partner);
+                    // must come with no new groups
+                    None => assert!(
+                        newly.is_empty(),
+                        "seed {seed} step {step}: groups without assignment"
+                    ),
+                    Some(gid) => {
+                        waiting.insert(w);
+                        let g = gg.group(gid).unwrap_or_else(|| {
+                            panic!("seed {seed} step {step}: assigned group {gid} unknown")
+                        });
+                        assert!(
+                            g.members.contains(&w),
+                            "seed {seed} step {step}: group {:?} lacks requester {w}",
+                            g.members
+                        );
+                        for g in newly {
+                            armed.push((g.id, g.members));
+                        }
+                    }
+                }
+            }
+        }
+        if !do_request || waiting.len() == n {
+            if let Some(idx) = (!armed.is_empty()).then(|| rng.gen_range(armed.len())) {
+                let (gid, members) = armed.swap_remove(idx);
+                let newly = gg.complete(gid);
+                for &m in &members {
+                    waiting.remove(&m);
+                }
+                for g in newly {
+                    armed.push((g.id, g.members));
+                }
+            }
+        }
+        // ---- invariants ----
+        // 1. armed groups are pairwise disjoint (atomicity)
+        let mut seen: HashSet<usize> = HashSet::new();
+        for (gid, members) in &armed {
+            for &m in members {
+                assert!(
+                    seen.insert(m),
+                    "seed {seed} step {step}: worker {m} in two armed groups (g{gid})"
+                );
+            }
+        }
+        // 2. every armed member's lock bit is set — and pending groups are
+        //    exactly the live groups that are not armed
+        let armed_ids: HashSet<GroupId> = armed.iter().map(|&(id, _)| id).collect();
+        for gid in gg.live_group_ids() {
+            assert_eq!(
+                gg.is_armed(gid),
+                armed_ids.contains(&gid),
+                "seed {seed} step {step}: armed-state mismatch for g{gid}"
+            );
+        }
+        // 3. counter sum equals request count
+        let csum: u64 = gg.counters().iter().sum();
+        assert_eq!(csum, gg.stats.requests, "seed {seed} step {step}");
+    }
+    // ---- drain: completing everything must release all locks ----
+    while let Some((gid, _)) = armed.pop() {
+        for g in gg.complete(gid) {
+            armed.push((g.id, g.members));
+        }
+    }
+    assert_eq!(gg.pending_len(), 0, "seed {seed}: pending groups leaked");
+}
+
+#[test]
+fn prop_random_gg_serialization_invariants() {
+    for seed in 0..SEEDS {
+        gg_workload(GgConfig::random(16, 4, 3), seed, 300);
+    }
+}
+
+#[test]
+fn prop_smart_gg_serialization_invariants() {
+    for seed in 0..SEEDS {
+        gg_workload(GgConfig::smart(16, 4, 3, 8), seed, 300);
+    }
+}
+
+#[test]
+fn prop_gg_various_shapes_and_group_sizes() {
+    let mut rng = Pcg32::new(999);
+    for seed in 0..SEEDS {
+        let nodes = 1 + rng.gen_range(6);
+        let wpn = 1 + rng.gen_range(6);
+        let n = (nodes * wpn).max(2);
+        let k = 2 + rng.gen_range((n - 1).min(6));
+        gg_workload(GgConfig::random(n, wpn, k), seed, 150);
+        gg_workload(GgConfig::smart(n, wpn, k, 4), seed, 150);
+    }
+}
+
+#[test]
+fn prop_global_division_partitions_are_disjoint() {
+    for seed in 0..SEEDS {
+        let mut cfg = GgConfig::smart(16, 4, 3, 1_000_000);
+        cfg.inter_intra = seed % 2 == 0;
+        let mut gg = GroupGenerator::new(cfg);
+        let mut rng = Pcg32::new(seed);
+        let w = rng.gen_range(16);
+        let (_, armed) = gg.request(w, &mut rng);
+        // armed groups must be disjoint among themselves (lock exclusivity)
+        let mut seen = HashSet::new();
+        for g in &armed {
+            for &m in &g.members {
+                assert!(seen.insert(m), "seed {seed}: GD overlap at {m}");
+            }
+        }
+        if gg.config().inter_intra {
+            // the *intra*-phase groups deliberately queue behind the
+            // inter-phase groups holding the locks — they are the
+            // "conflicts" here, and must equal the pending count
+            assert_eq!(
+                gg.stats.conflicts as usize,
+                gg.pending_len(),
+                "seed {seed}: pending bookkeeping"
+            );
+        } else {
+            // plain GD: a partition can never conflict with itself
+            assert_eq!(gg.stats.conflicts, 0, "seed {seed}: GD must not conflict");
+        }
+    }
+}
+
+#[test]
+fn prop_static_schedule_conflict_free_and_consistent() {
+    let mut rng = Pcg32::new(4242);
+    for _ in 0..SEEDS {
+        let nodes = 1 + rng.gen_range(8);
+        let wpn = 1 + rng.gen_range(8);
+        let s = StaticScheduler::new(nodes, wpn);
+        for iter in 0..12u64 {
+            let mut seen = vec![false; s.n_workers()];
+            for w in 0..s.n_workers() {
+                if let Some(g) = s.group_of(w, iter) {
+                    // consistency
+                    for &m in &g {
+                        assert_eq!(
+                            s.group_of(m, iter),
+                            Some(g.clone()),
+                            "({nodes},{wpn}) iter {iter}: inconsistent view"
+                        );
+                    }
+                    // conflict-freedom (count each worker once via leader)
+                    if g[0] == w {
+                        for &m in &g {
+                            assert!(!seen[m], "({nodes},{wpn}) iter {iter}: overlap");
+                            seen[m] = true;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// F^G applied to random replica ensembles: doubly-stochastic mass
+/// conservation and contraction of disagreement.
+#[test]
+fn prop_preduce_doubly_stochastic_and_contractive() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed);
+        let n_workers = 2 + rng.gen_range(14);
+        let dim = 1 + rng.gen_range(200);
+        let mut models: Vec<Vec<f32>> = (0..n_workers)
+            .map(|_| (0..dim).map(|_| rng.gen_f32() * 4.0 - 2.0).collect())
+            .collect();
+        let total_before: f64 = models
+            .iter()
+            .flat_map(|m| m.iter())
+            .map(|&v| v as f64)
+            .sum();
+        let spread = |models: &[Vec<f32>]| -> f64 {
+            let mut worst = 0.0f64;
+            for i in 0..dim {
+                let vals: Vec<f64> = models.iter().map(|m| m[i] as f64).collect();
+                let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                worst = worst.max(hi - lo);
+            }
+            worst
+        };
+        let before = spread(&models);
+        let mut scratch = Vec::new();
+        for _ in 0..10 {
+            let k = 2 + rng.gen_range((n_workers - 1).min(4));
+            let group = rng.sample_distinct(n_workers, k);
+            let mut sorted = group.clone();
+            sorted.sort_unstable();
+            // borrow-split members
+            let mut refs: Vec<&mut [f32]> = Vec::new();
+            let mut rest: &mut [Vec<f32>] = &mut models;
+            let mut off = 0;
+            for &g in &sorted {
+                let (head, tail) = rest.split_at_mut(g - off + 1);
+                refs.push(head[g - off].as_mut_slice());
+                rest = tail;
+                off = g + 1;
+            }
+            collectives::preduce_mean_inplace(&mut refs, &mut scratch);
+        }
+        let total_after: f64 = models
+            .iter()
+            .flat_map(|m| m.iter())
+            .map(|&v| v as f64)
+            .sum();
+        assert!(
+            (total_before - total_after).abs() < 1e-2 * (1.0 + total_before.abs()),
+            "seed {seed}: mass {total_before} -> {total_after}"
+        );
+        assert!(
+            spread(&models) <= before + 1e-6,
+            "seed {seed}: disagreement grew"
+        );
+    }
+}
+
+/// Ring all-reduce (threaded, chunked) equals the naive mean on random
+/// shapes, including n < p and odd sizes.
+#[test]
+fn prop_ring_allreduce_matches_naive() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0xff);
+        let p = 2 + rng.gen_range(7);
+        let n = 1 + rng.gen_range(600);
+        let mut bufs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect())
+            .collect();
+        let expect: Vec<f32> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / p as f32)
+            .collect();
+        ring::ring_allreduce_mean(&mut bufs);
+        for (r, buf) in bufs.iter().enumerate() {
+            for i in 0..n {
+                assert!(
+                    (buf[i] - expect[i]).abs() < 1e-4,
+                    "seed {seed} p={p} n={n} rank={r} idx={i}"
+                );
+            }
+        }
+    }
+}
+
+/// Cost-model sanity across random topologies: ring all-reduce time is
+/// monotone in message size and never cheaper for a superset group.
+#[test]
+fn prop_cost_model_monotonicity() {
+    use ripples::comm::CostModel;
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0xabc);
+        let cluster = ClusterConfig {
+            n_nodes: 1 + rng.gen_range(6),
+            workers_per_node: 1 + rng.gen_range(6),
+            ..ClusterConfig::default()
+        };
+        let cost = CostModel::from_cluster(&cluster);
+        let n = cluster.n_workers();
+        if n < 3 {
+            continue;
+        }
+        let k = 2 + rng.gen_range(n - 2);
+        let group = {
+            let mut g = rng.sample_distinct(n, k);
+            g.sort_unstable();
+            g
+        };
+        let small = cost.ring_allreduce(&group, 1 << 20);
+        let big = cost.ring_allreduce(&group, 1 << 24);
+        assert!(big > small, "seed {seed}: cost not monotone in bytes");
+        let mut superset = group.clone();
+        for w in 0..n {
+            if !superset.contains(&w) {
+                superset.push(w);
+                break;
+            }
+        }
+        if superset.len() > group.len() {
+            superset.sort_unstable();
+            assert!(
+                cost.ring_allreduce(&superset, 1 << 20) >= small * 0.9,
+                "seed {seed}: superset group drastically cheaper"
+            );
+        }
+    }
+}
