@@ -1,0 +1,40 @@
+# Ripples build/verify entry points. `make verify` is the full gate a PR
+# must pass; `cargo build --release && cargo test -q` alone is tier-1.
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: build test doc verify artifacts python-test bench clean
+
+build:
+	$(CARGO) build --release
+
+test: build
+	$(CARGO) test -q
+
+# Documentation gate: rustdoc warnings (broken intra-doc links and
+# friends) are errors, and doc examples must pass — keeps references
+# like the DESIGN.md sections cited from source comments from rotting.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+	$(CARGO) test --doc -q
+
+verify: build test doc
+
+# Lower the Layer-2/Layer-1 JAX graphs to HLO-text artifacts (needs
+# Python + JAX; content-hashed, so re-running is a no-op when the
+# graphs are unchanged). The PJRT runtime then needs `--features pjrt`.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+python-test:
+	cd python && $(PYTHON) -m pytest tests -q
+
+bench:
+	$(CARGO) bench --bench bench_primitives
+	$(CARGO) bench --bench bench_figures
+
+clean:
+	$(CARGO) clean
+	rm -rf $(ARTIFACTS_DIR) results

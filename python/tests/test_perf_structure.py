@@ -1,0 +1,54 @@
+"""Perf-structure checks for the Layer-1 kernels (DESIGN.md §Perf).
+
+The kernels run interpreted on this CPU testbed, so wall-clock is not the
+signal — *structure* is: block sizes must keep every grid step's working
+set inside the TPU VMEM budget, and the tiling must not silently waste
+MXU issue slots. This is the block-size sweep referenced by
+``preduce.vmem_footprint_bytes`` and EXPERIMENTS.md §MEAN_BLOCK-sweep.
+
+Pure arithmetic on the footprint/utilization helpers — no Pallas
+execution — so it runs anywhere the package imports.
+"""
+
+from compile.kernels import matmul as kmm
+from compile.kernels import preduce as kpr
+
+# ~16 MB of VMEM per TensorCore; leave headroom for double-buffering
+# (BlockSpec pipelines the next tile's DMA behind the current compute).
+VMEM_BUDGET = 16 * 1024 * 1024
+HEADROOM = 0.5
+
+
+def test_preduce_block_sweep_stays_inside_vmem():
+    for group_size in (2, 3, 4, 8, 16):
+        footprint = kpr.vmem_footprint_bytes(group_size)
+        assert footprint <= VMEM_BUDGET * HEADROOM, (
+            f"G={group_size}: {footprint} bytes exceeds the double-buffered "
+            f"VMEM budget"
+        )
+    # the documented default-shape number: (8 + 1) * 16384 * 4 ≈ 0.6 MB
+    assert kpr.vmem_footprint_bytes(8) == 9 * kpr.DEFAULT_BLOCK_N * 4
+
+
+def test_preduce_footprint_scales_linearly_in_group_size():
+    base = kpr.vmem_footprint_bytes(2)
+    for g in (3, 4, 8):
+        expect = (g + 1) / 3 * base
+        assert abs(kpr.vmem_footprint_bytes(g) - expect) < 1e-6
+
+
+def test_matmul_tiles_stay_inside_vmem():
+    footprint = kmm.vmem_footprint_bytes()
+    assert footprint <= VMEM_BUDGET * HEADROOM
+    # three 128x128 f32 tiles
+    assert footprint == 3 * 128 * 128 * 4
+
+
+def test_mxu_utilization_estimate_behaves():
+    # aligned shapes: no pad waste
+    assert kmm.mxu_utilization_estimate(256, 256, 256) == 1.0
+    # off-by-one shapes pay padding; utilization strictly between 0 and 1
+    u = kmm.mxu_utilization_estimate(129, 129, 129)
+    assert 0.0 < u < 1.0
+    # growing an aligned dim cannot reduce utilization
+    assert kmm.mxu_utilization_estimate(256, 256, 384) == 1.0

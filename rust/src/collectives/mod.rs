@@ -4,10 +4,12 @@
 //!
 //! * [`preduce_mean_inplace`] — the fused single-pass mean the simulator's
 //!   hot path uses (the paper's F^G applied directly).
-//! * [`ring`] — a real chunked ring all-reduce executed by one thread per
-//!   rank over in-memory channels: reduce-scatter then all-gather, the
-//!   exact schedule the cost model charges for. Used by the thread runtime
-//!   and as a differential oracle for the fused path.
+//! * [`ring`] — a real chunked ring all-reduce: reduce-scatter then
+//!   all-gather, the exact schedule the cost model charges for. The
+//!   schedule is generic over a [`ring::ChunkTransport`]: in-memory
+//!   channels (thread runtime, differential oracle for the fused path) or
+//!   framed TCP streams between worker processes (`net`, the distributed
+//!   data plane).
 
 pub mod ring;
 

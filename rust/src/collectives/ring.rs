@@ -1,4 +1,4 @@
-//! Real chunked ring all-reduce across thread "ranks".
+//! Real chunked ring all-reduce, generic over the rank-to-rank transport.
 //!
 //! Implements the schedule the paper's P-Reduce leans on (§3.2): the
 //! buffer is split into `p` chunks; `p-1` reduce-scatter steps accumulate
@@ -6,15 +6,23 @@
 //! finished chunks — `2(p-1)` total steps with `n/p` elements on every
 //! edge per step, which is bandwidth-optimal.
 //!
-//! Ranks are OS threads connected by mpsc channels in a ring. This is the
-//! data plane used by the thread runtime (`runtime::threaded`) and the
-//! differential oracle for the fused `preduce_mean_inplace` path.
+//! The schedule itself is pure ([`ring_allreduce_via`]) and runs over any
+//! [`ChunkTransport`]:
+//!
+//! * [`ChannelTransport`] — mpsc channels between OS threads in one
+//!   process; used by the thread runtime (`runtime::threaded`) and as the
+//!   differential oracle for the fused `preduce_mean_inplace` path.
+//! * `net::TcpRingTransport` — framed TCP streams between worker
+//!   *processes*; the distributed data plane behind `ripples launch`
+//!   (see DESIGN.md §Deployment).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread;
 
+use anyhow::{anyhow, Result};
+
 /// Chunk boundaries: chunk `c` covers `bounds(c).0 .. bounds(c).1`.
-fn chunk_bounds(n: usize, p: usize, c: usize) -> (usize, usize) {
+pub(crate) fn chunk_bounds(n: usize, p: usize, c: usize) -> (usize, usize) {
     let base = n / p;
     let rem = n % p;
     let start = c * base + c.min(rem);
@@ -22,8 +30,103 @@ fn chunk_bounds(n: usize, p: usize, c: usize) -> (usize, usize) {
     (start, start + len)
 }
 
+/// A rank's pair of directed ring edges: send to successor, receive from
+/// predecessor. `step` indexes the schedule (`0..2(p-1)`), letting framed
+/// transports tag and verify ordering; in-memory transports may ignore it.
+pub trait ChunkTransport {
+    /// Ship `data` to the ring successor.
+    fn send(&mut self, step: u32, data: &[f32]) -> Result<()>;
+    /// Receive this step's chunk from the ring predecessor.
+    fn recv(&mut self, step: u32) -> Result<Vec<f32>>;
+}
+
+/// In-process transport: one mpsc edge in, one out.
+pub struct ChannelTransport {
+    tx: Sender<Vec<f32>>,
+    rx: Receiver<Vec<f32>>,
+}
+
+impl ChunkTransport for ChannelTransport {
+    fn send(&mut self, _step: u32, data: &[f32]) -> Result<()> {
+        self.tx
+            .send(data.to_vec())
+            .map_err(|_| anyhow!("ring send: receiver hung up"))
+    }
+
+    fn recv(&mut self, _step: u32) -> Result<Vec<f32>> {
+        self.rx.recv().map_err(|_| anyhow!("ring recv: sender hung up"))
+    }
+}
+
+/// Run rank `r`'s side of the mean-all-reduce schedule over `transport`.
+///
+/// All `p` ranks must call this with the same buffer length; on success
+/// every rank's `buf` holds the element-wise mean. Transport errors
+/// propagate (a peer process dying mid-collective surfaces here rather
+/// than deadlocking).
+pub fn ring_allreduce_via<T: ChunkTransport>(
+    r: usize,
+    p: usize,
+    buf: &mut [f32],
+    transport: &mut T,
+) -> Result<()> {
+    if p <= 1 {
+        return Ok(());
+    }
+    let n = buf.len();
+    let mut step = 0u32;
+    // --- reduce-scatter: after step s, rank r has accumulated chunk
+    //     (r - s) into a partial sum of s+2 contributions.
+    for s in 0..p - 1 {
+        let send_c = (r + p - s) % p;
+        let (lo, hi) = chunk_bounds(n, p, send_c);
+        transport.send(step, &buf[lo..hi])?;
+        let incoming = transport.recv(step)?;
+        let recv_c = (r + p - s - 1) % p;
+        let (lo, hi) = chunk_bounds(n, p, recv_c);
+        if incoming.len() != hi - lo {
+            return Err(anyhow!(
+                "ring step {step}: expected {} elements, got {}",
+                hi - lo,
+                incoming.len()
+            ));
+        }
+        for (b, v) in buf[lo..hi].iter_mut().zip(incoming.iter()) {
+            *b += v;
+        }
+        step += 1;
+    }
+    // Rank r now owns the fully-reduced chunk (r+1)%p; divide it to a mean.
+    let owned = (r + 1) % p;
+    let (lo, hi) = chunk_bounds(n, p, owned);
+    let inv = 1.0 / p as f32;
+    for b in buf[lo..hi].iter_mut() {
+        *b *= inv;
+    }
+    // --- all-gather: circulate finished chunks.
+    for s in 0..p - 1 {
+        let send_c = (r + 1 + p - s) % p;
+        let (lo, hi) = chunk_bounds(n, p, send_c);
+        transport.send(step, &buf[lo..hi])?;
+        let incoming = transport.recv(step)?;
+        let recv_c = (r + p - s) % p;
+        let (lo, hi) = chunk_bounds(n, p, recv_c);
+        if incoming.len() != hi - lo {
+            return Err(anyhow!(
+                "ring step {step}: expected {} elements, got {}",
+                hi - lo,
+                incoming.len()
+            ));
+        }
+        buf[lo..hi].copy_from_slice(&incoming);
+        step += 1;
+    }
+    Ok(())
+}
+
 /// Run a mean-all-reduce over `bufs` using the ring schedule, one thread
-/// per rank. Buffers are updated in place; all end up identical.
+/// per rank over in-memory channels. Buffers are updated in place; all end
+/// up identical.
 pub fn ring_allreduce_mean(bufs: &mut [Vec<f32>]) {
     let p = bufs.len();
     if p <= 1 {
@@ -46,50 +149,11 @@ pub fn ring_allreduce_mean(bufs: &mut [Vec<f32>]) {
             let tx = senders[r].take().unwrap();
             let rx = receivers[r].take().unwrap();
             scope.spawn(move || {
-                rank_allreduce(r, p, buf, &tx, &rx);
+                let mut t = ChannelTransport { tx, rx };
+                ring_allreduce_via(r, p, buf, &mut t).expect("in-process ring");
             });
         }
     });
-}
-
-fn rank_allreduce(
-    r: usize,
-    p: usize,
-    buf: &mut [f32],
-    tx: &Sender<Vec<f32>>,
-    rx: &Receiver<Vec<f32>>,
-) {
-    let n = buf.len();
-    // --- reduce-scatter: after step s, rank r has accumulated chunk
-    //     (r - s) into a partial sum of s+2 contributions.
-    for s in 0..p - 1 {
-        let send_c = (r + p - s) % p;
-        let (lo, hi) = chunk_bounds(n, p, send_c);
-        tx.send(buf[lo..hi].to_vec()).expect("ring send");
-        let incoming = rx.recv().expect("ring recv");
-        let recv_c = (r + p - s - 1) % p;
-        let (lo, hi) = chunk_bounds(n, p, recv_c);
-        for (b, v) in buf[lo..hi].iter_mut().zip(incoming.iter()) {
-            *b += v;
-        }
-    }
-    // Rank r now owns the fully-reduced chunk (r+1)%p; divide it to a mean.
-    let owned = (r + 1) % p;
-    let (lo, hi) = chunk_bounds(n, p, owned);
-    let inv = 1.0 / p as f32;
-    for b in buf[lo..hi].iter_mut() {
-        *b *= inv;
-    }
-    // --- all-gather: circulate finished chunks.
-    for s in 0..p - 1 {
-        let send_c = (r + 1 + p - s) % p;
-        let (lo, hi) = chunk_bounds(n, p, send_c);
-        tx.send(buf[lo..hi].to_vec()).expect("ring send");
-        let incoming = rx.recv().expect("ring recv");
-        let recv_c = (r + p - s) % p;
-        let (lo, hi) = chunk_bounds(n, p, recv_c);
-        buf[lo..hi].copy_from_slice(&incoming);
-    }
 }
 
 #[cfg(test)]
@@ -199,5 +263,32 @@ mod tests {
         for i in 0..501 {
             assert!((ring_bufs[0][i] - a[i]).abs() < 1e-5);
         }
+    }
+
+    /// A transport that injects a short payload mid-schedule.
+    struct Lying {
+        inner: ChannelTransport,
+    }
+
+    impl ChunkTransport for Lying {
+        fn send(&mut self, step: u32, data: &[f32]) -> Result<()> {
+            self.inner.send(step, data)
+        }
+        fn recv(&mut self, step: u32) -> Result<Vec<f32>> {
+            let mut v = self.inner.recv(step)?;
+            v.pop();
+            Ok(v)
+        }
+    }
+
+    #[test]
+    fn ring_rejects_wrong_chunk_size() {
+        let (tx, rx) = channel();
+        // Self-loop edge with a corrupting receiver: rank 0 of a fake
+        // 2-rank ring immediately sees the truncated chunk and errors.
+        let mut t = Lying { inner: ChannelTransport { tx, rx } };
+        let mut buf = vec![1.0f32; 10];
+        let err = ring_allreduce_via(0, 2, &mut buf, &mut t);
+        assert!(err.is_err(), "short chunk must be rejected");
     }
 }

@@ -49,6 +49,13 @@ pub struct GgConfig {
     pub inter_intra: bool,
     /// §5.3 slowdown filter threshold; None disables.
     pub c_thres: Option<u64>,
+    /// The engine driving this GG is a collective *rendezvous* runtime
+    /// (threaded or distributed): members physically meet to execute a
+    /// group, so freshly generated groups must draft only idle workers —
+    /// drafting a worker whose front group is pending creates a circular
+    /// wait. The event simulator leaves this off and keeps the paper's
+    /// unrestricted §4.1 sampling (pending groups just queue there).
+    pub rendezvous: bool,
 }
 
 impl GgConfig {
@@ -62,6 +69,7 @@ impl GgConfig {
             use_global_division: false,
             inter_intra: false,
             c_thres: None,
+            rendezvous: false,
         }
     }
 
@@ -80,6 +88,7 @@ impl GgConfig {
             use_global_division: true,
             inter_intra: true,
             c_thres: Some(c_thres),
+            rendezvous: false,
         }
     }
 }
@@ -290,10 +299,20 @@ impl GroupGenerator {
     }
 
     /// §4.1: a uniformly random group of `group_size` containing `w`
-    /// (None when every other worker has retired).
+    /// (None when nobody is available to pair with).
+    ///
+    /// In rendezvous mode candidates are restricted to *idle* workers
+    /// (empty GB, unlocked) for the same reason Global Division always
+    /// is — see [`GgConfig::rendezvous`]. Otherwise this is the paper's
+    /// unrestricted sampling, conflicts and all.
     fn random_group(&self, w: usize, rng: &mut Pcg32) -> Option<Vec<usize>> {
         let mut others: Vec<usize> = (0..self.cfg.n_workers)
-            .filter(|&x| x != w && !self.retired[x])
+            .filter(|&x| {
+                x != w
+                    && !self.retired[x]
+                    && (!self.cfg.rendezvous
+                        || (self.gb[x].is_empty() && !self.locks.is_locked(x)))
+            })
             .collect();
         if others.is_empty() {
             return None;
@@ -530,6 +549,32 @@ mod tests {
         assert_eq!(id_other, Some(id0), "GB must return the already-scheduled group");
         assert!(newly.is_empty());
         assert!(gg.stats.buffer_hits >= 1);
+    }
+
+    #[test]
+    fn buffered_random_drafts_only_idle_workers() {
+        // Rendezvous safety: in rendezvous mode, random groups must
+        // draft only idle workers — drafting a worker whose front group
+        // is pending would create a circular wait in collective runtimes
+        // (the member waits at its front group while the new group holds
+        // the locks that front group needs).
+        let mut cfg = GgConfig::random(6, 6, 2);
+        cfg.use_group_buffer = true;
+        cfg.rendezvous = true;
+        let mut gg = GroupGenerator::new(cfg);
+        let mut r = rng();
+        for round in 0..2 {
+            for w in 0..6 {
+                let (gid, _) = gg.request(w, &mut r);
+                if let Some(gid) = gid {
+                    // anything assigned must already hold its locks
+                    assert!(gg.is_armed(gid), "round {round} worker {w}");
+                }
+            }
+            // idle-only drafting can never create a lock conflict
+            assert_eq!(gg.stats.conflicts, 0, "round {round}");
+            assert_eq!(gg.pending_len(), 0, "round {round}");
+        }
     }
 
     #[test]

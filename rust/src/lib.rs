@@ -18,7 +18,10 @@
 //!   pure-jnp oracles.
 //!
 //! The [`runtime`] module executes the AOT artifacts via PJRT, so Python
-//! never runs on the training path.
+//! never runs on the training path. The [`net`] module is the deployable
+//! composition: worker *processes* coordinating through the TCP Group
+//! Generator service ([`rpc`]) and moving model bytes over the TCP data
+//! plane (`ripples launch` / `ripples worker`; DESIGN.md §Deployment).
 
 pub mod bench;
 pub mod cluster;
@@ -28,6 +31,7 @@ pub mod config;
 pub mod gg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod rpc;
 pub mod runtime;
 pub mod sim;

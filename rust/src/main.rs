@@ -4,15 +4,19 @@
 //! * `train`     — run one simulated training experiment and print metrics
 //! * `fig <id>`  — regenerate a paper figure/table (1, 2b, 15..20, all)
 //! * `gg-serve`  — run the Group Generator as a TCP RPC service (§6.2)
+//! * `launch`    — spawn an N-process P-Reduce cluster on localhost
+//! * `worker`    — one distributed worker process (data plane over TCP)
 //! * `artifacts` — list and smoke-run the PJRT artifacts (layer check)
 
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::time::Duration;
 
 use ripples::bench::figures;
 use ripples::config::{AlgoKind, Experiment};
 use ripples::gg::GgConfig;
 use ripples::metrics;
+use ripples::net::{launch_local, worker_main, LaunchConfig, WorkerParams};
 use ripples::rpc::GgServer;
 use ripples::sim::{self, SimParams};
 
@@ -22,6 +26,8 @@ fn main() -> ExitCode {
         Some("train") => cmd_train(&args[1..]),
         Some("fig") => cmd_fig(&args[1..]),
         Some("gg-serve") => cmd_gg_serve(&args[1..]),
+        Some("launch") => cmd_launch(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
         Some("artifacts") => cmd_artifacts(&args[1..]),
         Some("ablation") => cmd_ablation(),
         Some("help") | Some("-h") | Some("--help") | None => {
@@ -48,11 +54,26 @@ USAGE:
   ripples fig <1|2b|15|16|17|18|19|20|all> [--csv DIR]
   ripples gg-serve [--addr HOST:PORT] [--workers N] [--wpn K]
                    [--mode random|smart] [--group-size G]
+  ripples launch [--workers N] [--slow W:FACTOR] [--secs S] [--iters N]
+                 [--group-size G] [--mode random|smart] [--c-thres C]
+                 [--wpn K] [--seed S] [--lr LR] [--batch B] [--bias P]
+                 [--floor-ms MS] [--model tiny|paper] [--echo true]
+  ripples worker --rank R --workers N --gg HOST:PORT
+                 [--listen HOST:PORT] [--peers a0,a1,...] [--secs S]
+                 [--iters N] [--slowdown F] [--seed S] [--lr LR]
+                 [--batch B] [--bias P] [--floor-ms MS] [--dataset N]
+                 [--model tiny|paper]
   ripples artifacts [--dir DIR]
   ripples ablation
 
 Algorithms: all-reduce, ps, d-psgd, ad-psgd, ripples-static,
             ripples-random, ripples-smart (default)
+
+`launch` spawns N `worker` processes plus a Group Generator service on
+localhost; workers train a shared-init MLP and execute GG-assigned
+P-Reduce groups as chunked ring all-reduces over TCP (DESIGN.md
+§Deployment). Point `worker` at remote hosts manually for multi-machine
+runs.
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positionals.
@@ -181,6 +202,115 @@ fn cmd_gg_serve(args: &[String]) -> Result<(), String> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn parse_or<T: std::str::FromStr>(
+    flags: &[(String, String)],
+    key: &str,
+    default: T,
+) -> Result<T, String>
+where
+    T::Err: std::fmt::Display,
+{
+    match get_flag(flags, key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| format!("bad --{key}: {e}")),
+    }
+}
+
+/// `W:FACTOR` or `W,FACTOR`.
+fn parse_slow(s: &str) -> Result<(usize, f64), String> {
+    let (w, f) = s
+        .split_once(':')
+        .or_else(|| s.split_once(','))
+        .ok_or("--slow expects WORKER:FACTOR")?;
+    Ok((
+        w.parse().map_err(|e| format!("bad worker: {e}"))?,
+        f.parse().map_err(|e| format!("bad factor: {e}"))?,
+    ))
+}
+
+fn cmd_launch(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let mut cfg = LaunchConfig {
+        bin: std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?,
+        ..LaunchConfig::default()
+    };
+    cfg.workers = parse_or(&flags, "workers", cfg.workers)?;
+    if let Some(slow) = get_flag(&flags, "slow") {
+        cfg.slow = Some(parse_slow(slow)?);
+    }
+    cfg.secs = parse_or(&flags, "secs", cfg.secs)?;
+    cfg.max_iters = parse_or(&flags, "iters", cfg.max_iters)?;
+    cfg.group_size = parse_or(&flags, "group-size", cfg.group_size)?;
+    cfg.c_thres = parse_or(&flags, "c-thres", cfg.c_thres)?;
+    cfg.workers_per_node = parse_or(&flags, "wpn", cfg.workers_per_node)?;
+    cfg.seed = parse_or(&flags, "seed", cfg.seed)?;
+    cfg.lr = parse_or(&flags, "lr", cfg.lr)?;
+    cfg.batch = parse_or(&flags, "batch", cfg.batch)?;
+    cfg.data_bias = parse_or(&flags, "bias", cfg.data_bias)?;
+    cfg.compute_floor_ms = parse_or(&flags, "floor-ms", cfg.compute_floor_ms)?;
+    cfg.echo = parse_or(&flags, "echo", cfg.echo)?;
+    match get_flag(&flags, "mode").unwrap_or("smart") {
+        "smart" => cfg.smart = true,
+        "random" => cfg.smart = false,
+        other => return Err(format!("unknown mode '{other}'")),
+    }
+    match get_flag(&flags, "model").unwrap_or("tiny") {
+        "tiny" => cfg.tiny = true,
+        "paper" => cfg.tiny = false,
+        other => return Err(format!("unknown model '{other}'")),
+    }
+    println!(
+        "launching {} worker processes (group size {}, {} GG{})...",
+        cfg.workers,
+        cfg.group_size,
+        if cfg.smart { "smart" } else { "random" },
+        cfg.slow
+            .map(|(w, f)| format!(", worker {w} slowed {f}x"))
+            .unwrap_or_default()
+    );
+    let report = launch_local(&cfg).map_err(|e| format!("{e:#}"))?;
+    print!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_worker(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let defaults = WorkerParams::default();
+    let p = WorkerParams {
+        rank: get_flag(&flags, "rank")
+            .ok_or("worker needs --rank")?
+            .parse()
+            .map_err(|e| format!("bad --rank: {e}"))?,
+        n_workers: get_flag(&flags, "workers")
+            .ok_or("worker needs --workers")?
+            .parse()
+            .map_err(|e| format!("bad --workers: {e}"))?,
+        gg_addr: get_flag(&flags, "gg").ok_or("worker needs --gg")?.to_string(),
+        secs: parse_or(&flags, "secs", defaults.secs)?,
+        max_iters: parse_or(&flags, "iters", defaults.max_iters)?,
+        slowdown: parse_or(&flags, "slowdown", defaults.slowdown)?,
+        compute_floor: Duration::from_millis(parse_or(
+            &flags,
+            "floor-ms",
+            defaults.compute_floor.as_millis() as u64,
+        )?),
+        seed: parse_or(&flags, "seed", defaults.seed)?,
+        lr: parse_or(&flags, "lr", defaults.lr)?,
+        batch: parse_or(&flags, "batch", defaults.batch)?,
+        data_bias: parse_or(&flags, "bias", defaults.data_bias)?,
+        tiny: match get_flag(&flags, "model").unwrap_or("tiny") {
+            "tiny" => true,
+            "paper" => false,
+            other => return Err(format!("unknown model '{other}'")),
+        },
+        dataset_size: parse_or(&flags, "dataset", defaults.dataset_size)?,
+        eval_size: defaults.eval_size,
+    };
+    let listen = get_flag(&flags, "listen").unwrap_or("127.0.0.1:0");
+    worker_main(&p, listen, get_flag(&flags, "peers")).map_err(|e| format!("{e:#}"))?;
+    Ok(())
 }
 
 fn cmd_ablation() -> Result<(), String> {

@@ -78,6 +78,36 @@ impl Table {
     }
 }
 
+/// One worker's throughput over a `ripples launch` run (the distributed
+/// analogue of `SimResult.per_worker_iters`).
+#[derive(Debug, Clone)]
+pub struct WorkerStat {
+    pub rank: usize,
+    pub iters: u64,
+    pub preduces: u64,
+    pub secs: f64,
+    pub loss_first: f64,
+    pub loss_last: f64,
+}
+
+/// Per-worker throughput table for a distributed run: iteration rate is
+/// the heterogeneity metric (a gated fast worker converges to the slow
+/// worker's rate; see EXPERIMENTS.md §Deployment-run).
+pub fn worker_table(stats: &[WorkerStat]) -> Table {
+    let mut t = Table::new(&["worker", "iters", "iters/s", "preduces", "loss first→last"]);
+    for s in stats {
+        let rate = if s.secs > 0.0 { s.iters as f64 / s.secs } else { 0.0 };
+        t.row(vec![
+            s.rank.to_string(),
+            s.iters.to_string(),
+            format!("{rate:.1}"),
+            s.preduces.to_string(),
+            format!("{:.4} → {:.4}", s.loss_first, s.loss_last),
+        ]);
+    }
+    t
+}
+
 /// Summary line per algorithm, matching the paper's reporting style.
 pub fn summarize(res: &SimResult) -> String {
     format!(
@@ -120,6 +150,32 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn worker_table_renders_rates() {
+        let t = worker_table(&[
+            WorkerStat {
+                rank: 0,
+                iters: 100,
+                preduces: 30,
+                secs: 4.0,
+                loss_first: 1.5,
+                loss_last: 0.5,
+            },
+            WorkerStat {
+                rank: 1,
+                iters: 40,
+                preduces: 30,
+                secs: 4.0,
+                loss_first: 1.5,
+                loss_last: 0.6,
+            },
+        ]);
+        let s = t.render();
+        assert!(s.contains("25.0"), "{s}"); // 100 iters / 4 s
+        assert!(s.contains("10.0"), "{s}");
+        assert_eq!(s.lines().count(), 4);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Data-plane framing: length-prefixed messages between worker processes,
+//! reusing the `rpc::wire` codec style (little-endian, no deps).
+//!
+//! Two message kinds flow on a mesh connection:
+//!
+//! * `Hello { rank }` — sent once by the connecting side so the acceptor
+//!   can index the stream by peer rank.
+//! * `Chunk { gid, step, data }` — one ring-schedule transfer of model
+//!   elements for P-Reduce group `gid`. The `(gid, step)` tag lets the
+//!   receiver assert it is consuming the transfer it expects: armed
+//!   groups are disjoint (lock vector) and an edge is quiescent between
+//!   groups, so a mismatch is a protocol bug, not a reordering.
+//!
+//! Outer wire format matches the GG RPC: `u32 length (LE) | payload`.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::rpc::wire::{Reader, Writer};
+
+/// Refuse frames above this size (64 MiB ≈ a 16M-parameter f32 chunk);
+/// corrupt length prefixes otherwise trigger huge allocations.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// A decoded data-plane message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Connection preamble: the sender's worker rank.
+    Hello { rank: u32 },
+    /// One ring-collective transfer.
+    Chunk { gid: u64, step: u32, data: Vec<f32> },
+}
+
+impl Frame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Frame::Hello { rank } => {
+                w.u8(0);
+                w.u32(*rank);
+            }
+            Frame::Chunk { gid, step, data } => {
+                w.u8(1);
+                w.u64(*gid);
+                w.u32(*step);
+                w.u32(data.len() as u32);
+                for v in data {
+                    w.bytes(&v.to_le_bytes());
+                }
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let tag = r.u8()?;
+        let frame = match tag {
+            0 => Frame::Hello { rank: r.u32()? },
+            1 => {
+                let gid = r.u64()?;
+                let step = r.u32()?;
+                let count = r.u32()? as usize;
+                if count * 4 > MAX_FRAME {
+                    bail!("chunk too large: {count} elements");
+                }
+                let mut data = Vec::with_capacity(count);
+                for _ in 0..count {
+                    data.push(f32::from_le_bytes(r.u32()?.to_le_bytes()));
+                }
+                Frame::Chunk { gid, step, data }
+            }
+            t => bail!("bad frame tag {t}"),
+        };
+        r.done()?;
+        Ok(frame)
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let payload = frame.encode();
+    let len = payload.len() as u32;
+    w.write_all(&len.to_le_bytes()).context("write frame length")?;
+    w.write_all(&payload).context("write frame payload")?;
+    w.flush().context("flush frame")?;
+    Ok(())
+}
+
+/// Hot-path chunk writer: encodes straight from the slice into one
+/// buffer (length prefix included), skipping the intermediate
+/// `Vec<f32>` a `Frame::Chunk` would need. Byte-identical to
+/// `write_frame(&Frame::Chunk { .. })`.
+pub fn write_chunk<W: Write>(w: &mut W, gid: u64, step: u32, data: &[f32]) -> Result<()> {
+    let payload_len = 1 + 8 + 4 + 4 + 4 * data.len();
+    let mut buf = Vec::with_capacity(4 + payload_len);
+    buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    buf.push(1); // Frame::Chunk tag
+    buf.extend_from_slice(&gid.to_le_bytes());
+    buf.extend_from_slice(&step.to_le_bytes());
+    buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf).context("write chunk frame")?;
+    w.flush().context("flush chunk frame")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut lenbuf = [0u8; 4];
+    r.read_exact(&mut lenbuf).context("read frame length")?;
+    let len = u32::from_le_bytes(lenbuf) as usize;
+    if len > MAX_FRAME {
+        bail!("frame too large: {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("read frame payload")?;
+    Frame::decode(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_roundtrip() {
+        for frame in [
+            Frame::Hello { rank: 3 },
+            Frame::Chunk { gid: 9, step: 4, data: vec![1.0, -2.5, f32::MIN] },
+            Frame::Chunk { gid: u64::MAX, step: 0, data: vec![] },
+        ] {
+            assert_eq!(Frame::decode(&frame.encode()).unwrap(), frame);
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let mut buf = Vec::new();
+        let a = Frame::Hello { rank: 1 };
+        let b = Frame::Chunk { gid: 2, step: 3, data: vec![0.5; 7] };
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), a);
+        assert_eq!(read_frame(&mut cur).unwrap(), b);
+    }
+
+    #[test]
+    fn write_chunk_matches_frame_encoding() {
+        let (gid, step, data) = (77u64, 5u32, vec![1.5f32, -0.25, 1e20]);
+        let mut fast = Vec::new();
+        write_chunk(&mut fast, gid, step, &data).unwrap();
+        let mut slow = Vec::new();
+        write_frame(&mut slow, &Frame::Chunk { gid, step, data }).unwrap();
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Frame::decode(&[9]).is_err()); // bad tag
+        assert!(Frame::decode(&[0, 1]).is_err()); // truncated hello
+        // trailing bytes after a well-formed hello
+        let mut buf = Frame::Hello { rank: 0 }.encode();
+        buf.push(0);
+        assert!(Frame::decode(&buf).is_err());
+        // length prefix beyond MAX_FRAME
+        let mut cur = std::io::Cursor::new(((MAX_FRAME + 1) as u32).to_le_bytes().to_vec());
+        assert!(read_frame(&mut cur).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! `ripples launch`: spawn an N-process P-Reduce cluster on localhost.
+//!
+//! The launcher owns the control plane (an in-process [`GgServer`]) and
+//! orchestrates worker *processes* (the `ripples worker` subcommand)
+//! through a three-phase handshake:
+//!
+//!  1. every worker binds its data-plane listener on an ephemeral port
+//!     and prints `DATA_ADDR <addr>`;
+//!  2. the launcher broadcasts the full rank-indexed list over stdin
+//!     (`PEERS a0,a1,...`) — no fixed ports, no bind races;
+//!  3. workers train, drain, and print a `REPORT` line the launcher
+//!     aggregates into a per-worker throughput table (`metrics`).
+//!
+//! This is the deployment shape of the paper's §6 testbed scaled to one
+//! machine; pointing the same `ripples worker` flags (`--gg`, `--listen`,
+//! `--peers`) at real hosts is the multi-machine path (DESIGN.md
+//! §Deployment).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+
+use anyhow::{bail, Context, Result};
+
+use crate::gg::GgConfig;
+use crate::metrics::{worker_table, WorkerStat};
+use crate::rpc::{GgClient, GgServer};
+
+use super::worker::WorkerReport;
+
+/// Cluster-launch configuration (CLI: `ripples launch`).
+#[derive(Debug, Clone)]
+pub struct LaunchConfig {
+    /// Path to the `ripples` binary to spawn workers from.
+    pub bin: PathBuf,
+    pub workers: usize,
+    /// `(worker, factor)`: that worker's compute takes `factor`x as long.
+    pub slow: Option<(usize, f64)>,
+    /// Timed training window per worker, seconds.
+    pub secs: f64,
+    /// Per-worker iteration cap (0 = unlimited).
+    pub max_iters: u64,
+    pub group_size: usize,
+    /// Smart GG (Group Buffer + Global Division + slowdown filter) vs
+    /// plain random groups.
+    pub smart: bool,
+    /// §5.3 slowdown-filter threshold (smart mode).
+    pub c_thres: u64,
+    /// Workers per "node" for the GG's architecture-aware scheduling;
+    /// local processes default to 1 (every process models its own host).
+    pub workers_per_node: usize,
+    pub seed: u64,
+    pub lr: f32,
+    pub batch: usize,
+    pub data_bias: f64,
+    pub compute_floor_ms: u64,
+    pub tiny: bool,
+    /// Forward worker log lines to the launcher's stdout.
+    pub echo: bool,
+}
+
+impl Default for LaunchConfig {
+    fn default() -> Self {
+        Self {
+            bin: std::env::current_exe().unwrap_or_else(|_| PathBuf::from("ripples")),
+            workers: 4,
+            slow: None,
+            secs: 5.0,
+            max_iters: 0,
+            group_size: 2,
+            smart: true,
+            c_thres: 2,
+            workers_per_node: 1,
+            seed: 42,
+            lr: 0.1,
+            batch: 32,
+            data_bias: 0.5,
+            compute_floor_ms: 5,
+            tiny: true,
+            echo: false,
+        }
+    }
+}
+
+/// Aggregated outcome of a cluster run.
+#[derive(Debug)]
+pub struct LaunchReport {
+    pub workers: Vec<WorkerReport>,
+    /// GG counters: (requests, conflicts, groups_created, buffer_hits).
+    pub gg_stats: (u64, u64, u64, u64),
+}
+
+impl LaunchReport {
+    /// Per-worker throughput rows for `metrics::worker_table`.
+    pub fn stats(&self) -> Vec<WorkerStat> {
+        self.workers
+            .iter()
+            .map(|w| WorkerStat {
+                rank: w.rank,
+                iters: w.iters,
+                preduces: w.preduces,
+                secs: w.secs,
+                loss_first: w.loss_first,
+                loss_last: w.loss_last,
+            })
+            .collect()
+    }
+
+    pub fn render(&self) -> String {
+        let (requests, conflicts, created, hits) = self.gg_stats;
+        format!(
+            "{}\nGG: {requests} requests, {created} groups, {conflicts} conflicts, \
+             {hits} buffer hits\n",
+            worker_table(&self.stats()).render()
+        )
+    }
+}
+
+/// Spawn the GG and `workers` local worker processes; block until every
+/// worker has drained and reported.
+pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
+    if cfg.workers < 2 {
+        bail!("launch needs at least 2 workers");
+    }
+    if cfg.group_size < 2 || cfg.group_size > cfg.workers {
+        bail!("group size {} out of range for {} workers", cfg.group_size, cfg.workers);
+    }
+    if let Some((w, f)) = cfg.slow {
+        if w >= cfg.workers {
+            bail!("slow worker {w} out of range");
+        }
+        if f < 1.0 {
+            bail!("slowdown factor {f} must be >= 1");
+        }
+    }
+    // Workers physically rendezvous to execute groups, so the GG must
+    // draft only idle workers into fresh groups and every member's own
+    // Sync must resolve to the already-scheduled group (Group Buffer) —
+    // otherwise two conflicting groups deadlock waiting on each other
+    // (same constraint as `runtime::threaded`, which only offers
+    // SmartGg/Static). The event simulator runs without `rendezvous`.
+    let mut gg_cfg = if cfg.smart {
+        GgConfig::smart(cfg.workers, cfg.workers_per_node, cfg.group_size, cfg.c_thres)
+    } else {
+        let mut c = GgConfig::random(cfg.workers, cfg.workers_per_node, cfg.group_size);
+        c.use_group_buffer = true;
+        c
+    };
+    gg_cfg.rendezvous = true;
+    let server = GgServer::spawn("127.0.0.1:0", gg_cfg, cfg.seed).context("spawn GG")?;
+    let gg_addr = server.addr.to_string();
+
+    // Any failure below must not leak worker processes: they would keep
+    // training (and holding sockets) for the rest of their timed window.
+    let mut children: Vec<WorkerProc> = Vec::new();
+    let result = run_cluster(cfg, &gg_addr, &mut children);
+    if result.is_err() {
+        for wp in &mut children {
+            let _ = wp.child.kill();
+            let _ = wp.child.wait();
+        }
+    }
+    let reports = result?;
+
+    let mut stats_client = GgClient::connect(server.addr).context("GG stats")?;
+    let gg_stats = stats_client.stats()?;
+    drop(stats_client);
+    server.shutdown();
+    Ok(LaunchReport { workers: reports, gg_stats })
+}
+
+struct WorkerProc {
+    child: Child,
+    out: BufReader<std::process::ChildStdout>,
+}
+
+/// Phases 1–3 of the cluster run; every spawned child is pushed into
+/// `children` *before* any fallible step so the caller can reap them.
+fn run_cluster(
+    cfg: &LaunchConfig,
+    gg_addr: &str,
+    children: &mut Vec<WorkerProc>,
+) -> Result<Vec<WorkerReport>> {
+    // ---- phase 1: spawn everyone, collect advertised data-plane addrs
+    let mut addrs: Vec<String> = Vec::new();
+    for rank in 0..cfg.workers {
+        let slowdown = match cfg.slow {
+            Some((w, f)) if w == rank => f,
+            _ => 1.0,
+        };
+        let mut cmd = Command::new(&cfg.bin);
+        cmd.arg("worker")
+            .args(["--rank", &rank.to_string()])
+            .args(["--workers", &cfg.workers.to_string()])
+            .args(["--gg", gg_addr])
+            .args(["--secs", &cfg.secs.to_string()])
+            .args(["--slowdown", &slowdown.to_string()])
+            .args(["--seed", &cfg.seed.to_string()])
+            .args(["--lr", &cfg.lr.to_string()])
+            .args(["--batch", &cfg.batch.to_string()])
+            .args(["--bias", &cfg.data_bias.to_string()])
+            .args(["--floor-ms", &cfg.compute_floor_ms.to_string()])
+            .args(["--model", if cfg.tiny { "tiny" } else { "paper" }])
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped());
+        if cfg.max_iters > 0 {
+            cmd.args(["--iters", &cfg.max_iters.to_string()]);
+        }
+        let mut child = cmd
+            .spawn()
+            .with_context(|| format!("spawn worker {rank} from {}", cfg.bin.display()))?;
+        let out = BufReader::new(child.stdout.take().expect("piped stdout"));
+        // registered before any fallible read so the caller can reap it
+        children.push(WorkerProc { child, out });
+        let wp = children.last_mut().unwrap();
+        let addr = loop {
+            let mut line = String::new();
+            if wp.out.read_line(&mut line).context("worker stdout")? == 0 {
+                bail!("worker {rank} exited before advertising its data address");
+            }
+            if let Some(a) = line.trim().strip_prefix("DATA_ADDR ") {
+                break a.to_string();
+            }
+            if cfg.echo {
+                print!("[w{rank}] {line}");
+            }
+        };
+        addrs.push(addr);
+    }
+
+    // ---- phase 2: broadcast the rank-indexed peer list
+    let peer_line = format!("PEERS {}\n", addrs.join(","));
+    for (rank, wp) in children.iter_mut().enumerate() {
+        wp.child
+            .stdin
+            .take()
+            .expect("piped stdin")
+            .write_all(peer_line.as_bytes())
+            .with_context(|| format!("send peer list to worker {rank}"))?;
+        // stdin handle drops here; workers only read the one line
+    }
+
+    // ---- phase 3: collect reports
+    let mut reports: Vec<WorkerReport> = Vec::new();
+    for rank in 0..children.len() {
+        let wp = &mut children[rank];
+        let mut report = None;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if wp.out.read_line(&mut line).context("worker stdout")? == 0 {
+                break;
+            }
+            if line.trim().starts_with("REPORT ") {
+                report = Some(WorkerReport::parse_line(&line)?);
+            } else if cfg.echo {
+                print!("[w{rank}] {line}");
+            }
+        }
+        let status = wp.child.wait().context("wait for worker")?;
+        if !status.success() {
+            bail!("worker {rank} failed with {status}");
+        }
+        let report =
+            report.with_context(|| format!("worker {rank} exited without a report"))?;
+        if report.rank != rank {
+            bail!("worker {rank} reported as rank {}", report.rank);
+        }
+        reports.push(report);
+    }
+    Ok(reports)
+}

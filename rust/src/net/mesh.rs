@@ -1,0 +1,330 @@
+//! Worker-to-worker connection mesh for the P-Reduce data plane.
+//!
+//! Every worker process binds one data-plane listener. Connections are
+//! *lazy and directed*: the first time rank `a` must send to rank `b`
+//! (because `b` follows `a` in some group's ring order), `a` dials `b`,
+//! sends a `Hello { rank }` preamble, and caches the stream; `b`'s accept
+//! loop indexes the inbound stream by the hello rank. Each directed edge
+//! is used by one group at a time — armed groups are pairwise disjoint
+//! (the GG's lock vector), so a worker participates in at most one
+//! collective at any moment and an edge is quiescent between groups.
+//! Frames are tagged with `(gid, step)` and verified on receipt anyway:
+//! a mismatch means a protocol bug and fails fast instead of corrupting
+//! model bytes.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::collectives::ring::ChunkTransport;
+
+use super::frame::{read_frame, write_frame, Frame};
+
+/// Inbound streams registered by the accept loop, keyed by peer rank.
+struct Inbound {
+    conns: Mutex<HashMap<u32, TcpStream>>,
+    cv: Condvar,
+}
+
+/// One worker's view of the cluster data plane.
+pub struct WorkerMesh {
+    rank: u32,
+    local_addr: SocketAddr,
+    /// Rank-indexed peer data-plane addresses (set after the handshake).
+    peers: Vec<SocketAddr>,
+    outbound: Mutex<HashMap<u32, TcpStream>>,
+    inbound: Arc<Inbound>,
+    /// Per-transfer socket timeout: a peer dying mid-collective surfaces
+    /// as an error instead of a hang.
+    pub io_timeout: Duration,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<thread::JoinHandle<()>>,
+}
+
+impl WorkerMesh {
+    /// Bind the data-plane listener (e.g. `"127.0.0.1:0"` for an
+    /// ephemeral port) and start the accept loop. Peer addresses arrive
+    /// later via [`WorkerMesh::set_peers`] — binding first lets every
+    /// worker advertise its address before any dialing starts.
+    pub fn bind(rank: usize, listen: &str) -> Result<Self> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("bind data plane on {listen}"))?;
+        let local_addr = listener.local_addr()?;
+        let inbound = Arc::new(Inbound { conns: Mutex::new(HashMap::new()), cv: Condvar::new() });
+        let stop = Arc::new(AtomicBool::new(false));
+        let inb = Arc::clone(&inbound);
+        let stop2 = Arc::clone(&stop);
+        let accept_handle = thread::spawn(move || {
+            listener.set_nonblocking(true).ok();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        stream.set_nodelay(true).ok();
+                        // bounded wait for the hello preamble
+                        stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                        match read_frame(&mut stream) {
+                            Ok(Frame::Hello { rank }) => {
+                                let mut conns = inb.conns.lock().unwrap();
+                                conns.insert(rank, stream);
+                                inb.cv.notify_all();
+                            }
+                            _ => drop(stream), // not a peer; ignore
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Self {
+            rank: rank as u32,
+            local_addr,
+            peers: Vec::new(),
+            outbound: Mutex::new(HashMap::new()),
+            inbound,
+            io_timeout: Duration::from_secs(60),
+            stop,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// The bound data-plane address to advertise to peers.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Install the rank-indexed peer address list (index = worker rank).
+    pub fn set_peers(&mut self, peers: Vec<SocketAddr>) {
+        self.peers = peers;
+    }
+
+    /// Dial (or reuse) the outbound edge to `to`, returning a handle that
+    /// shares the cached socket.
+    fn outbound_to(&self, to: u32) -> Result<TcpStream> {
+        let mut cache = self.outbound.lock().unwrap();
+        if let Some(s) = cache.get(&to) {
+            return Ok(s.try_clone()?);
+        }
+        let addr = *self
+            .peers
+            .get(to as usize)
+            .ok_or_else(|| anyhow!("no address for rank {to}"))?;
+        // The launcher distributes addresses only after every listener is
+        // bound, so a *refused* connection is transient (peer mid-restart
+        // at worst) — retry those briefly. Anything else (unroutable
+        // host, permission) is a configuration error; surface it now
+        // rather than spinning through the whole io_timeout.
+        let deadline = Instant::now() + self.io_timeout;
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e)
+                    if Instant::now() < deadline
+                        && matches!(
+                            e.kind(),
+                            std::io::ErrorKind::ConnectionRefused
+                                | std::io::ErrorKind::ConnectionReset
+                        ) =>
+                {
+                    thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(e).with_context(|| format!("dial rank {to} at {addr}")),
+            }
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_write_timeout(Some(self.io_timeout)).ok();
+        write_frame(&mut stream, &Frame::Hello { rank: self.rank })?;
+        let handle = stream.try_clone()?;
+        cache.insert(to, stream);
+        Ok(handle)
+    }
+
+    /// Wait for the inbound edge from `from` (its first chunk may race
+    /// ahead of our accept loop registering the stream).
+    fn inbound_from(&self, from: u32) -> Result<TcpStream> {
+        let deadline = Instant::now() + self.io_timeout;
+        let mut conns = self.inbound.conns.lock().unwrap();
+        loop {
+            if let Some(s) = conns.get(&from) {
+                let clone = s.try_clone()?;
+                clone.set_read_timeout(Some(self.io_timeout)).ok();
+                return Ok(clone);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("no inbound connection from rank {from} within {:?}", self.io_timeout);
+            }
+            let (guard, _) = self
+                .inbound
+                .cv
+                .wait_timeout(conns, deadline - now)
+                .map_err(|_| anyhow!("poisoned inbound mesh"))?;
+            conns = guard;
+        }
+    }
+
+    /// Build the ring transport for this worker's position in `members`
+    /// (the GG's sorted member list): send edge to the successor, receive
+    /// edge from the predecessor. Returns the transport plus this
+    /// worker's ring position.
+    pub fn ring_transport(
+        &self,
+        gid: u64,
+        members: &[usize],
+    ) -> Result<(TcpRingTransport, usize)> {
+        let p = members.len();
+        let pos = members
+            .iter()
+            .position(|&m| m == self.rank as usize)
+            .ok_or_else(|| anyhow!("rank {} not in group {members:?}", self.rank))?;
+        if p < 2 {
+            bail!("ring needs at least 2 members, got {members:?}");
+        }
+        let succ = members[(pos + 1) % p] as u32;
+        let pred = members[(pos + p - 1) % p] as u32;
+        let send = self.outbound_to(succ)?;
+        let recv = self.inbound_from(pred)?;
+        Ok((TcpRingTransport { gid, send, recv }, pos))
+    }
+}
+
+impl Drop for WorkerMesh {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A worker's directed ring edges for one P-Reduce group, framing chunk
+/// transfers with `(gid, step)` tags (see `net::frame`).
+pub struct TcpRingTransport {
+    gid: u64,
+    send: TcpStream,
+    recv: TcpStream,
+}
+
+impl ChunkTransport for TcpRingTransport {
+    fn send(&mut self, step: u32, data: &[f32]) -> Result<()> {
+        super::frame::write_chunk(&mut self.send, self.gid, step, data)
+    }
+
+    fn recv(&mut self, step: u32) -> Result<Vec<f32>> {
+        match read_frame(&mut self.recv)? {
+            Frame::Chunk { gid, step: got, data } => {
+                if gid != self.gid || got != step {
+                    bail!(
+                        "chunk tag mismatch: got (gid {gid}, step {got}), \
+                         expected (gid {}, step {step})",
+                        self.gid
+                    );
+                }
+                Ok(data)
+            }
+            other => bail!("expected chunk frame, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ring::ring_allreduce_via;
+    use crate::util::rng::Pcg32;
+
+    /// In-process "multi-process" harness: one mesh per rank, threads as
+    /// processes, real TCP on localhost.
+    #[test]
+    fn tcp_ring_matches_naive_mean() {
+        let members = [0usize, 1, 2];
+        let n = 103;
+        let mut meshes: Vec<WorkerMesh> = members
+            .iter()
+            .map(|&r| WorkerMesh::bind(r, "127.0.0.1:0").unwrap())
+            .collect();
+        let addrs: Vec<SocketAddr> = meshes.iter().map(|m| m.local_addr()).collect();
+        for m in &mut meshes {
+            m.set_peers(addrs.clone());
+            m.io_timeout = Duration::from_secs(10);
+        }
+        let mut rng = Pcg32::new(7);
+        let bufs: Vec<Vec<f32>> = members
+            .iter()
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect())
+            .collect();
+        let expect: Vec<f32> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / members.len() as f32)
+            .collect();
+        let results: Vec<Vec<f32>> = thread::scope(|scope| {
+            let handles: Vec<_> = meshes
+                .iter()
+                .zip(bufs)
+                .map(|(mesh, mut buf)| {
+                    let members = &members;
+                    scope.spawn(move || {
+                        let (mut t, pos) = mesh.ring_transport(42, members).unwrap();
+                        ring_allreduce_via(pos, members.len(), &mut buf, &mut t).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (r, buf) in results.iter().enumerate() {
+            for i in 0..n {
+                assert!(
+                    (buf[i] - expect[i]).abs() < 1e-5,
+                    "rank {r} idx {i}: {} vs {}",
+                    buf[i],
+                    expect[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn consecutive_groups_reuse_edges() {
+        // Two back-to-back pair collectives over the same mesh: the second
+        // must reuse the cached streams and still verify its own gid tag.
+        let members = [0usize, 1];
+        let mut meshes: Vec<WorkerMesh> = members
+            .iter()
+            .map(|&r| WorkerMesh::bind(r, "127.0.0.1:0").unwrap())
+            .collect();
+        let addrs: Vec<SocketAddr> = meshes.iter().map(|m| m.local_addr()).collect();
+        for m in &mut meshes {
+            m.set_peers(addrs.clone());
+            m.io_timeout = Duration::from_secs(10);
+        }
+        for gid in [1u64, 2] {
+            let results: Vec<Vec<f32>> = thread::scope(|scope| {
+                let handles: Vec<_> = meshes
+                    .iter()
+                    .enumerate()
+                    .map(|(r, mesh)| {
+                        let members = &members;
+                        scope.spawn(move || {
+                            let mut buf = vec![r as f32; 8];
+                            let (mut t, pos) = mesh.ring_transport(gid, members).unwrap();
+                            ring_allreduce_via(pos, 2, &mut buf, &mut t).unwrap();
+                            buf
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for buf in &results {
+                assert!(buf.iter().all(|&v| (v - 0.5).abs() < 1e-6), "{buf:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Distributed TCP data plane for P-Reduce (DESIGN.md §Deployment).
+//!
+//! The control plane (`rpc`) already moved the Group Generator behind a
+//! TCP service; this module moves the *model bytes* too, turning the
+//! reproduction into a deployable multi-process system:
+//!
+//! * [`frame`] — length-prefixed chunk framing over the `rpc::wire` codec;
+//! * [`mesh`] — [`WorkerMesh`]: lazy rank-to-rank connections and the
+//!   [`mesh::TcpRingTransport`] that plugs into the generic ring schedule
+//!   in `collectives::ring`;
+//! * [`worker`] — the per-process training loop (pure-Rust MLP +
+//!   GG-scheduled ring collectives) behind `ripples worker`;
+//! * [`launch`] — the localhost cluster orchestrator behind
+//!   `ripples launch`.
+//!
+//! The same `collectives::ring` schedule the thread runtime executes over
+//! mpsc channels runs here over sockets — one implementation of the
+//! paper's bandwidth-optimal P-Reduce, two transports.
+
+pub mod frame;
+pub mod launch;
+pub mod mesh;
+pub mod worker;
+
+pub use frame::Frame;
+pub use launch::{launch_local, LaunchConfig, LaunchReport};
+pub use mesh::{TcpRingTransport, WorkerMesh};
+pub use worker::{run_worker, worker_main, WorkerParams, WorkerReport};

@@ -1,0 +1,312 @@
+//! One distributed worker process: pure-Rust MLP training with
+//! GG-scheduled P-Reduce groups executing the chunked ring collective
+//! over TCP (see DESIGN.md §Deployment).
+//!
+//! Protocol per iteration (the paper's Fig. 8 worker loop):
+//!  1. one local SGD step (plus the configured heterogeneity sleep);
+//!  2. `Sync` with the Group Generator; a `None` assignment means "skip";
+//!  3. `WaitArmed`, then run the ring mean-all-reduce with the group over
+//!     the [`WorkerMesh`];
+//!  4. the ring leader (lowest rank) reports `Complete`; everyone else
+//!     blocks on `WaitDone` so their next `Sync` cannot re-observe the
+//!     group at the front of their Group Buffer.
+//!
+//! Termination mirrors the threaded runtime: `Retire`, then keep syncing
+//! until the Group Buffer drains — partners of already-scheduled groups
+//! would otherwise block forever on our membership.
+
+use std::io::BufRead;
+use std::io::Write as _;
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::collectives::ring::ring_allreduce_via;
+use crate::model::mlp::{loss_only, sgd_step, MlpScratch, MlpSpec};
+use crate::model::Dataset;
+use crate::rpc::GgClient;
+
+use super::mesh::WorkerMesh;
+
+/// Everything one worker process needs (built from CLI flags by
+/// `ripples worker`, or directly by tests).
+#[derive(Debug, Clone)]
+pub struct WorkerParams {
+    pub rank: usize,
+    pub n_workers: usize,
+    /// Group Generator RPC address.
+    pub gg_addr: String,
+    /// Wall-clock training budget; iteration counts over a fixed window
+    /// are the heterogeneity metric (`EXPERIMENTS.md §Deployment-run`).
+    pub secs: f64,
+    /// Hard cap on iterations (safety net for tests).
+    pub max_iters: u64,
+    /// Compute slowdown factor for *this* worker (1.0 = fast).
+    pub slowdown: f64,
+    /// Emulated per-iteration device time; the tiny MLP alone is too fast
+    /// for a slowdown to be observable.
+    pub compute_floor: Duration,
+    pub seed: u64,
+    pub lr: f32,
+    pub batch: usize,
+    /// Non-IID shard skew (probability of drawing the worker's primary
+    /// class); makes synchronization statistically observable.
+    pub data_bias: f64,
+    /// Use the tiny test MLP instead of the paper-default shape.
+    pub tiny: bool,
+    pub dataset_size: usize,
+    pub eval_size: usize,
+}
+
+impl Default for WorkerParams {
+    fn default() -> Self {
+        Self {
+            rank: 0,
+            n_workers: 2,
+            gg_addr: "127.0.0.1:7777".into(),
+            secs: 5.0,
+            max_iters: u64::MAX,
+            slowdown: 1.0,
+            compute_floor: Duration::from_millis(5),
+            seed: 42,
+            lr: 0.1,
+            batch: 32,
+            data_bias: 0.5,
+            tiny: true,
+            dataset_size: 2048,
+            eval_size: 256,
+        }
+    }
+}
+
+/// What a worker measured over its run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerReport {
+    pub rank: usize,
+    /// Iterations completed inside the timed window (drain excluded).
+    pub iters: u64,
+    /// P-Reduce collectives this worker participated in (drain included).
+    pub preduces: u64,
+    pub loss_first: f64,
+    pub loss_last: f64,
+    pub secs: f64,
+}
+
+impl WorkerReport {
+    /// One-line stdout encoding consumed by `launch` (`REPORT k=v ...`).
+    pub fn to_line(&self) -> String {
+        format!(
+            "REPORT rank={} iters={} preduces={} loss_first={:.6} loss_last={:.6} secs={:.3}",
+            self.rank, self.iters, self.preduces, self.loss_first, self.loss_last, self.secs
+        )
+    }
+
+    pub fn parse_line(line: &str) -> Result<Self> {
+        let mut rank = None;
+        let mut iters = None;
+        let mut preduces = None;
+        let mut loss_first = None;
+        let mut loss_last = None;
+        let mut secs = None;
+        for kv in line.trim().strip_prefix("REPORT ").unwrap_or("").split_whitespace() {
+            let (k, v) = kv.split_once('=').with_context(|| format!("bad field {kv:?}"))?;
+            match k {
+                "rank" => rank = Some(v.parse()?),
+                "iters" => iters = Some(v.parse()?),
+                "preduces" => preduces = Some(v.parse()?),
+                "loss_first" => loss_first = Some(v.parse()?),
+                "loss_last" => loss_last = Some(v.parse()?),
+                "secs" => secs = Some(v.parse()?),
+                _ => {} // forward-compatible: ignore unknown fields
+            }
+        }
+        match (rank, iters, preduces, loss_first, loss_last, secs) {
+            (Some(rank), Some(iters), Some(preduces), Some(lf), Some(ll), Some(secs)) => {
+                Ok(Self { rank, iters, preduces, loss_first: lf, loss_last: ll, secs })
+            }
+            _ => bail!("incomplete report line: {line:?}"),
+        }
+    }
+}
+
+/// Run the distributed training loop over an already-bound mesh and a
+/// connected GG client.
+pub fn run_worker(
+    p: &WorkerParams,
+    mesh: &WorkerMesh,
+    gg: &mut GgClient,
+) -> Result<WorkerReport> {
+    let spec = if p.tiny { MlpSpec::tiny() } else { MlpSpec::default_paper() };
+    // Shared dataset and identical init across the cluster: seeds must
+    // not depend on rank (P-Reduce averages replicas of one model).
+    let ds = Dataset::gaussian_mixture(
+        spec.in_dim,
+        spec.classes,
+        p.dataset_size,
+        p.seed ^ 0xDA7A,
+    );
+    let class_index = ds.class_index();
+    let (ex, ey) = ds.eval_set(p.eval_size);
+    let mut flat = spec.init(p.seed ^ 1);
+    let mut scratch = MlpScratch::new();
+    let loss_first = loss_only(&spec, &flat, &ex, &ey);
+
+    let mut preduces = 0u64;
+    let mut iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < p.secs && iters < p.max_iters {
+        // ---- compute phase
+        let tag = p.seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(((p.rank as u64) << 32) | iters);
+        let (x, y) = ds.batch_biased(
+            tag,
+            p.batch,
+            p.rank % spec.classes,
+            p.data_bias,
+            &class_index,
+        );
+        sgd_step(&spec, &mut flat, &x, &y, p.lr, &mut scratch);
+        iters += 1;
+        if p.compute_floor > Duration::ZERO {
+            std::thread::sleep(p.compute_floor.mul_f64(p.slowdown));
+        }
+        // ---- sync phase
+        let (assigned, _newly_armed) = gg.sync(p.rank)?;
+        if let Some((gid, members)) = assigned {
+            execute_group(p, mesh, gg, gid, &members, &mut flat)?;
+            preduces += 1;
+        }
+    }
+    let timed = start.elapsed().as_secs_f64();
+
+    // ---- termination protocol: retire, then drain the Group Buffer.
+    gg.retire(p.rank)?;
+    loop {
+        let (assigned, _) = gg.sync(p.rank)?;
+        match assigned {
+            None => break,
+            Some((gid, members)) => {
+                execute_group(p, mesh, gg, gid, &members, &mut flat)?;
+                preduces += 1;
+            }
+        }
+    }
+
+    let loss_last = loss_only(&spec, &flat, &ex, &ey);
+    Ok(WorkerReport {
+        rank: p.rank,
+        iters,
+        preduces,
+        loss_first,
+        loss_last,
+        secs: timed,
+    })
+}
+
+/// One GG-assigned P-Reduce: wait for the group to arm, run the ring
+/// collective over TCP, report/observe completion.
+fn execute_group(
+    p: &WorkerParams,
+    mesh: &WorkerMesh,
+    gg: &mut GgClient,
+    gid: u64,
+    members: &[usize],
+    flat: &mut [f32],
+) -> Result<()> {
+    if members.len() < 2 {
+        bail!("GG assigned degenerate group {members:?}");
+    }
+    gg.wait_armed(gid)?;
+    let (mut transport, pos) = mesh.ring_transport(gid, members)?;
+    ring_allreduce_via(pos, members.len(), flat, &mut transport)
+        .with_context(|| format!("ring collective for group {gid} ({members:?})"))?;
+    if members[0] == p.rank {
+        gg.complete(gid)?;
+    } else {
+        gg.wait_done(gid)?;
+    }
+    Ok(())
+}
+
+/// Entry point for the `ripples worker` subcommand: performs the
+/// stdout/stdin address handshake with the launcher (or uses `--peers`
+/// when given explicitly), runs the loop, prints the report line.
+pub fn worker_main(
+    p: &WorkerParams,
+    listen: &str,
+    peers_flag: Option<&str>,
+) -> Result<WorkerReport> {
+    let mut mesh = WorkerMesh::bind(p.rank, listen)?;
+    // Generous timeout on both planes: a worker can legitimately sit in
+    // a collective (or a WaitArmed) behind a peer that still has most of
+    // its timed window to train through — but a *crashed* peer must
+    // surface as an error here instead of hanging the whole cluster.
+    let io_timeout = Duration::from_secs_f64((p.secs * 4.0).max(60.0));
+    mesh.io_timeout = io_timeout;
+    println!("DATA_ADDR {}", mesh.local_addr());
+    std::io::stdout().flush().ok();
+    let peer_list = match peers_flag {
+        Some(list) => list.to_string(),
+        None => {
+            // launcher replies with `PEERS addr0,addr1,...` on stdin
+            let mut line = String::new();
+            std::io::stdin()
+                .lock()
+                .read_line(&mut line)
+                .context("read PEERS line from launcher")?;
+            line.trim()
+                .strip_prefix("PEERS ")
+                .with_context(|| format!("expected PEERS line, got {line:?}"))?
+                .to_string()
+        }
+    };
+    let peers: Vec<SocketAddr> = peer_list
+        .split(',')
+        .map(|a| a.trim().parse().with_context(|| format!("bad peer address {a:?}")))
+        .collect::<Result<_>>()?;
+    if peers.len() != p.n_workers {
+        bail!("expected {} peer addresses, got {}", p.n_workers, peers.len());
+    }
+    mesh.set_peers(peers);
+    let mut gg = GgClient::connect(&p.gg_addr)
+        .with_context(|| format!("connect to GG at {}", p.gg_addr))?;
+    gg.set_io_timeout(io_timeout)?;
+    let report = run_worker(p, &mesh, &mut gg)?;
+    println!("{}", report.to_line());
+    std::io::stdout().flush().ok();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_line_roundtrip() {
+        let r = WorkerReport {
+            rank: 3,
+            iters: 120,
+            preduces: 40,
+            loss_first: 1.386294,
+            loss_last: 0.25,
+            secs: 4.002,
+        };
+        let parsed = WorkerReport::parse_line(&r.to_line()).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn report_parse_rejects_incomplete() {
+        assert!(WorkerReport::parse_line("REPORT rank=1 iters=2").is_err());
+        assert!(WorkerReport::parse_line("nonsense").is_err());
+    }
+
+    #[test]
+    fn report_parse_ignores_unknown_fields() {
+        let line = "REPORT rank=0 iters=1 preduces=0 loss_first=1.0 \
+                    loss_last=0.5 secs=1.0 extra=9";
+        assert_eq!(WorkerReport::parse_line(line).unwrap().iters, 1);
+    }
+}

@@ -37,6 +37,17 @@ pub enum Request {
     Stats,
     /// Orderly shutdown.
     Shutdown,
+    /// Block until group `id` holds its locks (or was already completed).
+    /// Distributed workers call this between `Sync` and the data-plane
+    /// collective: a pending group must not start moving model bytes.
+    WaitArmed { id: GroupId },
+    /// Block until group `id` has been completed. Non-leader members call
+    /// this after the collective so their next `Sync` cannot observe the
+    /// group still at the front of their Group Buffer (the re-execution
+    /// race the threaded runtime solves with shared `done` flags).
+    WaitDone { id: GroupId },
+    /// Worker `w` leaves the session: never drafted into new groups.
+    Retire { worker: u32 },
 }
 
 /// Server -> client messages.
@@ -63,6 +74,18 @@ impl Request {
             }
             Request::Stats => w.u8(2),
             Request::Shutdown => w.u8(3),
+            Request::WaitArmed { id } => {
+                w.u8(4);
+                w.u64(*id);
+            }
+            Request::WaitDone { id } => {
+                w.u8(5);
+                w.u64(*id);
+            }
+            Request::Retire { worker } => {
+                w.u8(6);
+                w.u32(*worker);
+            }
         }
         w.finish()
     }
@@ -75,6 +98,9 @@ impl Request {
             1 => Request::Complete { id: r.u64()? },
             2 => Request::Stats,
             3 => Request::Shutdown,
+            4 => Request::WaitArmed { id: r.u64()? },
+            5 => Request::WaitDone { id: r.u64()? },
+            6 => Request::Retire { worker: r.u32()? },
             t => bail!("bad request tag {t}"),
         };
         r.done()?;
@@ -295,6 +321,27 @@ fn serve_conn(
             }
         };
         let req = Request::decode(&frame)?;
+        // Blocking calls poll the state machine without holding the lock
+        // across sleeps (other connections keep making progress).
+        if let Request::WaitArmed { id } | Request::WaitDone { id } = req {
+            let want_armed = matches!(req, Request::WaitArmed { .. });
+            let resp = loop {
+                {
+                    let guard = state.lock().map_err(|_| anyhow!("poisoned GG"))?;
+                    let gg = &guard.0;
+                    let done = gg.group(id).is_none();
+                    if done || (want_armed && gg.is_armed(id)) {
+                        break Response::Ok;
+                    }
+                }
+                if stop.load(Ordering::Relaxed) {
+                    break Response::Err { msg: "server stopping".into() };
+                }
+                thread::sleep(std::time::Duration::from_millis(1));
+            };
+            write_frame(&mut stream, &resp.encode())?;
+            continue;
+        }
         let resp = {
             let mut guard = state.lock().map_err(|_| anyhow!("poisoned GG"))?;
             let (gg, rng) = &mut *guard;
@@ -336,6 +383,17 @@ fn serve_conn(
                     stop.store(true, Ordering::Relaxed);
                     Response::Ok
                 }
+                Request::Retire { worker } => {
+                    let w = worker as usize;
+                    if w >= gg.config().n_workers {
+                        Response::Err { msg: format!("worker {w} out of range") }
+                    } else {
+                        gg.retire(w);
+                        Response::Ok
+                    }
+                }
+                // handled above without holding the lock
+                Request::WaitArmed { .. } | Request::WaitDone { .. } => unreachable!(),
             }
         };
         write_frame(&mut stream, &resp.encode())?;
@@ -359,6 +417,17 @@ impl GgClient {
         let stream = TcpStream::connect(addr).context("connect to GG")?;
         stream.set_nodelay(true).ok();
         Ok(Self { stream })
+    }
+
+    /// Bound every call — including the blocking `wait_armed`/`wait_done`
+    /// — so a dead peer or server surfaces as an error instead of hanging
+    /// this worker (and everything reading its pipes) forever. A group
+    /// can legitimately stay pending for a few straggler iterations, so
+    /// callers should pass the same generous budget as the data plane.
+    pub fn set_io_timeout(&mut self, timeout: std::time::Duration) -> Result<()> {
+        self.stream.set_read_timeout(Some(timeout)).context("set read timeout")?;
+        self.stream.set_write_timeout(Some(timeout)).context("set write timeout")?;
+        Ok(())
     }
 
     fn call(&mut self, req: &Request) -> Result<Response> {
@@ -412,6 +481,33 @@ impl GgClient {
         }
     }
 
+    /// Block until `id` holds its locks (no-op if it already completed).
+    pub fn wait_armed(&mut self, id: GroupId) -> Result<()> {
+        match self.call(&Request::WaitArmed { id })? {
+            Response::Ok => Ok(()),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Block until `id` has been completed (by its group leader).
+    pub fn wait_done(&mut self, id: GroupId) -> Result<()> {
+        match self.call(&Request::WaitDone { id })? {
+            Response::Ok => Ok(()),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Mark `worker` as departed; it is never drafted into new groups.
+    pub fn retire(&mut self, worker: usize) -> Result<()> {
+        match self.call(&Request::Retire { worker: worker as u32 })? {
+            Response::Ok => Ok(()),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         match self.call(&Request::Shutdown)? {
             Response::Ok => Ok(()),
@@ -431,6 +527,9 @@ mod tests {
             Request::Complete { id: 123456789 },
             Request::Stats,
             Request::Shutdown,
+            Request::WaitArmed { id: 1 },
+            Request::WaitDone { id: u64::MAX },
+            Request::Retire { worker: 3 },
         ] {
             assert_eq!(Request::decode(&req.encode()).unwrap(), req);
         }
@@ -483,6 +582,34 @@ mod tests {
         assert_eq!(requests, 1);
         assert!(created >= 1);
         client.shutdown().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn wait_and_retire_over_tcp() {
+        let server =
+            GgServer::spawn("127.0.0.1:0", GgConfig::random(4, 4, 2), 7).unwrap();
+        let mut c = GgClient::connect(server.addr).unwrap();
+        let (assigned, _armed) = c.sync(0).unwrap();
+        let (gid, _) = assigned.expect("sync must assign a group");
+        // the first group has no conflicts: wait_armed returns immediately
+        c.wait_armed(gid).unwrap();
+        // a second connection completes the group while we block on it
+        let addr = server.addr;
+        let h = std::thread::spawn(move || {
+            let mut c2 = GgClient::connect(addr).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            c2.complete(gid).unwrap();
+        });
+        c.wait_done(gid).unwrap();
+        h.join().unwrap();
+        // wait on a completed (unknown) id is a no-op, not a hang
+        c.wait_armed(gid).unwrap();
+        // a retired worker's sync says "skip this step"
+        c.retire(0).unwrap();
+        let (assigned, newly) = c.sync(0).unwrap();
+        assert!(assigned.is_none(), "retired worker must not be drafted");
+        assert!(newly.is_empty());
         server.shutdown();
     }
 

@@ -1,0 +1,92 @@
+//! API-compatible stand-in for [`PjrtEngine`] when the crate is built
+//! without the `pjrt` feature (the default): the XLA bindings and their
+//! native extension library are only present on testbeds that ran
+//! `make artifacts`, so every other build — the simulator, the GG service,
+//! the TCP data plane, CI — compiles against this stub and gets a clear
+//! error if it actually tries to execute an artifact.
+//!
+//! Keep the public surface in sync with `engine.rs`; the e2e tests and
+//! examples compile against whichever module the feature selects.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::artifact::ArtifactMeta;
+
+const NO_PJRT: &str =
+    "ripples was built without the `pjrt` feature; rebuild with \
+     `cargo build --features pjrt` (requires the XLA extension library) \
+     to execute AOT artifacts";
+
+/// Typed input value for an artifact call (mirror of the real engine's).
+#[derive(Debug, Clone)]
+pub enum Value<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+/// A compiled artifact; never constructed by the stub.
+pub struct Compiled {
+    pub meta: ArtifactMeta,
+}
+
+impl Compiled {
+    pub fn call(&self, _inputs: &[Value<'_>]) -> Result<Vec<Vec<f32>>> {
+        bail!(NO_PJRT);
+    }
+}
+
+/// Stub engine: constructing it always fails with an actionable message.
+pub struct PjrtEngine {
+    _private: (),
+}
+
+impl PjrtEngine {
+    pub fn new(_artifacts_dir: &Path) -> Result<Self> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load(&mut self, _name: &str) -> Result<&Compiled> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn available(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    pub fn mlp_train_step(
+        &mut self,
+        _name: &str,
+        _flat: &[f32],
+        _x: &[f32],
+        _y: &[i32],
+        _lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn tlm_train_step(
+        &mut self,
+        _name: &str,
+        _flat: &[f32],
+        _tokens: &[i32],
+        _lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn init_model(&mut self, _name: &str, _seed: i32) -> Result<Vec<f32>> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn preduce(&mut self, _name: &str, _stacked: &[f32]) -> Result<Vec<f32>> {
+        bail!(NO_PJRT);
+    }
+}

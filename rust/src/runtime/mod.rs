@@ -7,6 +7,10 @@
 //! see `aot.py` and /opt/xla-example/README.md for why.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 pub mod threaded;
 

@@ -1,0 +1,101 @@
+//! End-to-end tests of the distributed TCP data plane: real worker
+//! *processes* on localhost, group membership from the GG service, model
+//! bytes over framed TCP ring collectives.
+//!
+//! These spawn the `ripples` binary itself (Cargo builds it for
+//! integration tests and exports the path via `CARGO_BIN_EXE_ripples`).
+
+use std::path::PathBuf;
+
+use ripples::net::{launch_local, LaunchConfig};
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_ripples"))
+}
+
+/// The acceptance scenario: a 4-process cluster with worker 0 slowed 3x.
+/// Loss must decrease everywhere, groups must actually execute over TCP,
+/// and the fast workers must not be gated down to the slow worker's rate
+/// (the paper's core heterogeneity claim, here on real sockets).
+#[test]
+fn four_process_cluster_with_straggler() {
+    let cfg = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        slow: Some((0, 3.0)),
+        secs: 4.0,
+        group_size: 2,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 42,
+        ..LaunchConfig::default()
+    };
+    let report = launch_local(&cfg).expect("cluster run");
+    assert_eq!(report.workers.len(), 4);
+
+    let (requests, _conflicts, created, _hits) = report.gg_stats;
+    assert!(requests > 0, "workers never reached the GG");
+    assert!(created > 0, "GG never created a group");
+
+    for w in &report.workers {
+        assert!(
+            w.preduces > 0,
+            "worker {} never executed a P-Reduce over TCP: {w:?}",
+            w.rank
+        );
+        assert!(
+            w.loss_last < w.loss_first * 0.85,
+            "worker {} loss did not decrease: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+    }
+
+    // Heterogeneity: within the same wall-clock window the fast workers
+    // must complete substantially more iterations than the 3x straggler.
+    // Fully gated lockstep would put this ratio at ~1.0; the smart GG's
+    // idle-only Global Division plus the slowdown filter keeps the fast
+    // side free-running (ideal ratio ~3).
+    let slow_iters = report.workers[0].iters as f64;
+    let fast_mean = report.workers[1..]
+        .iter()
+        .map(|w| w.iters as f64)
+        .sum::<f64>()
+        / 3.0;
+    assert!(
+        fast_mean > 1.3 * slow_iters,
+        "fast workers gated by the straggler: fast mean {fast_mean:.0} vs slow {slow_iters:.0}"
+    );
+}
+
+/// Random-GG pair: the minimal cluster exercises the non-smart scheduling
+/// path and the leader/`WaitDone` completion protocol.
+#[test]
+fn two_process_random_gg_pair() {
+    let cfg = LaunchConfig {
+        bin: bin(),
+        workers: 2,
+        slow: None,
+        secs: 1.5,
+        group_size: 2,
+        smart: false,
+        compute_floor_ms: 2,
+        seed: 7,
+        ..LaunchConfig::default()
+    };
+    let report = launch_local(&cfg).expect("pair run");
+    assert_eq!(report.workers.len(), 2);
+    for w in &report.workers {
+        assert!(w.iters > 0);
+        assert!(w.preduces > 0, "pair never synchronized: {w:?}");
+        assert!(
+            w.loss_last < w.loss_first,
+            "worker {} loss did not decrease: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Property-based tests of the data-plane wire frames, in the style of
+//! `prop_gg.rs`: hand-rolled randomized harness (no proptest in the
+//! vendored registry), seeds in panic messages for reproducibility.
+
+use ripples::net::frame::{read_frame, write_frame, Frame};
+use ripples::rpc::{Request, Response};
+use ripples::util::rng::Pcg32;
+
+const SEEDS: u64 = 60;
+
+fn rand_chunk(rng: &mut Pcg32) -> Frame {
+    let count = rng.gen_range(2049);
+    let data: Vec<f32> = (0..count)
+        .map(|_| {
+            // cover exact-bit-pattern extremes, not just uniform draws
+            match rng.gen_range(8) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::MIN,
+                3 => f32::MAX,
+                4 => f32::MIN_POSITIVE,
+                _ => rng.gen_f32() * 2e6 - 1e6,
+            }
+        })
+        .collect();
+    Frame::Chunk { gid: rng.next_u64(), step: rng.next_u32(), data }
+}
+
+/// Every chunk frame survives encode -> decode bit-exactly.
+#[test]
+fn prop_chunk_roundtrip() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed);
+        let frame = rand_chunk(&mut rng);
+        let decoded = Frame::decode(&frame.encode())
+            .unwrap_or_else(|e| panic!("seed {seed}: decode failed: {e}"));
+        // PartialEq on f32 vectors is what we want here: the codec must
+        // preserve exact bit patterns (NaN is excluded by construction).
+        assert_eq!(decoded, frame, "seed {seed}");
+    }
+}
+
+/// The encoded size is exactly the header plus 4 bytes per element —
+/// nothing hidden, nothing padded (the cost model charges per byte).
+#[test]
+fn prop_chunk_encoding_size() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed);
+        let frame = rand_chunk(&mut rng);
+        let Frame::Chunk { ref data, .. } = frame else { unreachable!() };
+        assert_eq!(
+            frame.encode().len(),
+            1 + 8 + 4 + 4 + 4 * data.len(),
+            "seed {seed}"
+        );
+    }
+}
+
+/// Any strict prefix of a valid frame must fail to decode (truncation is
+/// detected, never silently zero-filled).
+#[test]
+fn prop_truncation_detected() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed);
+        let frame = rand_chunk(&mut rng);
+        let buf = frame.encode();
+        // a handful of random cut points plus the boundary cases
+        let mut cuts = vec![0, 1, buf.len() - 1];
+        for _ in 0..8 {
+            cuts.push(rng.gen_range(buf.len()));
+        }
+        for cut in cuts {
+            assert!(
+                Frame::decode(&buf[..cut]).is_err(),
+                "seed {seed}: truncation at {cut}/{} decoded",
+                buf.len()
+            );
+        }
+    }
+}
+
+/// Appending trailing garbage must fail to decode (frames are
+/// length-delimited by the outer transport; slack means corruption).
+#[test]
+fn prop_trailing_bytes_detected() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed);
+        let mut buf = rand_chunk(&mut rng).encode();
+        buf.push(rng.next_u32() as u8);
+        assert!(Frame::decode(&buf).is_err(), "seed {seed}");
+    }
+}
+
+/// Streamed frames (length-prefixed over a byte pipe) arrive in order and
+/// intact — the mesh's actual on-socket format.
+#[test]
+fn prop_stream_sequence_roundtrip() {
+    for seed in 0..SEEDS / 4 {
+        let mut rng = Pcg32::new(seed ^ 0x57EA);
+        let frames: Vec<Frame> = (0..rng.gen_range(6) + 1)
+            .map(|i| {
+                if i == 0 {
+                    Frame::Hello { rank: rng.next_u32() }
+                } else {
+                    rand_chunk(&mut rng)
+                }
+            })
+            .collect();
+        let mut pipe = Vec::new();
+        for f in &frames {
+            write_frame(&mut pipe, f).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(pipe);
+        for (i, f) in frames.iter().enumerate() {
+            let got = read_frame(&mut cur)
+                .unwrap_or_else(|e| panic!("seed {seed} frame {i}: {e}"));
+            assert_eq!(&got, f, "seed {seed} frame {i}");
+        }
+    }
+}
+
+/// The GG control frames added for the data plane (WaitArmed / WaitDone /
+/// Retire) roundtrip for arbitrary ids, alongside the original calls.
+#[test]
+fn prop_rpc_request_roundtrip() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0xC0DE);
+        let reqs = [
+            Request::Sync { worker: rng.next_u32() },
+            Request::Complete { id: rng.next_u64() },
+            Request::WaitArmed { id: rng.next_u64() },
+            Request::WaitDone { id: rng.next_u64() },
+            Request::Retire { worker: rng.next_u32() },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            assert_eq!(
+                Request::decode(&req.encode()).unwrap(),
+                req,
+                "seed {seed}"
+            );
+        }
+        let resp = Response::Assigned {
+            id: rng.next_u64(),
+            members: (0..rng.gen_range(9)).map(|_| rng.next_u32()).collect(),
+            armed: vec![(rng.next_u64(), vec![rng.next_u32()])],
+        };
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp, "seed {seed}");
+    }
+}
