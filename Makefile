@@ -5,7 +5,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test doc verify artifacts python-test bench clean
+.PHONY: build test doc verify artifacts python-test bench bench-json clean
 
 build:
 	$(CARGO) build --release
@@ -34,6 +34,11 @@ python-test:
 bench:
 	$(CARGO) bench --bench bench_primitives
 	$(CARGO) bench --bench bench_figures
+
+# Machine-readable perf trajectory: every figure harness as
+# results/BENCH_<id>.json (accumulated across PRs; see EXPERIMENTS.md).
+bench-json: build
+	$(CARGO) run --release -- fig all --json results
 
 clean:
 	$(CARGO) clean

@@ -29,8 +29,9 @@ fn main() -> anyhow::Result<()> {
             for _iter in 0..20 {
                 // "compute" ...
                 thread::sleep(std::time::Duration::from_millis(2 + w as u64));
-                // sync request: the GG assigns (or reuses) a group
-                let (assigned, armed) = client.sync(w)?;
+                // sync request: the GG assigns (or reuses) a group; the
+                // measured step duration rides along as the SpeedReport
+                let (assigned, armed) = client.sync(w, (2 + w as u64) as f64 * 1e-3)?;
                 if let Some((_gid, members)) = &assigned {
                     assert!(members.contains(&w), "assigned group must include self");
                 }
@@ -57,12 +58,15 @@ fn main() -> anyhow::Result<()> {
         led += h.join().expect("worker panicked")?;
     }
     let mut probe = GgClient::connect(server.addr)?;
-    let (requests, conflicts, created, hits) = probe.stats()?;
+    let stats = probe.stats()?;
     println!(
-        "workers led {led} completed groups; GG saw {requests} requests, \
-         {created} groups created, {conflicts} conflicts, {hits} buffer hits"
+        "workers led {led} completed groups; GG saw {} requests, \
+         {} groups created, {} conflicts, {} buffer hits",
+        stats.requests, stats.groups_created, stats.conflicts, stats.buffer_hits
     );
-    assert_eq!(requests, n_workers as u64 * 20);
+    println!("measured speed table (EWMA ms): {:?}", stats.speeds);
+    assert_eq!(stats.requests, n_workers as u64 * 20);
+    assert!(stats.speeds.iter().all(|&v| v > 0.0), "speed reports missing");
     server.shutdown();
     println!("gg_service OK");
     Ok(())

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             let (w, f) = s.split_once(',').expect("--slow W,FACTOR");
             HeterogeneityProfile {
                 slow_worker: Some((w.parse()?, f.parse()?)),
-                jitter: 0.0,
+                ..HeterogeneityProfile::default()
             }
         }
         None => HeterogeneityProfile::default(),

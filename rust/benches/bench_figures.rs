@@ -14,14 +14,14 @@ use ripples::bench::figures;
 fn main() {
     let csv_dir = Path::new("results");
     std::fs::create_dir_all(csv_dir).ok();
-    let ids = ["1", "2b", "15", "16", "17", "18", "19", "20"];
+    let ids = ["1", "2b", "15", "16", "17", "18", "19", "20", "dyn"];
     let mut total = 0.0;
     for id in ids {
         let t0 = Instant::now();
         let tables = figures::run_figure(id, Some(csv_dir)).expect("figure harness");
         let dt = t0.elapsed().as_secs_f64();
         total += dt;
-        for (title, table) in tables {
+        for (fig_id, title, table) in tables {
             println!("== {title} ({dt:.2}s) ==");
             println!("{}", table.render());
             let path = csv_dir.join(format!(
@@ -29,6 +29,9 @@ fn main() {
                 title.to_lowercase().replace(' ', "_")
             ));
             std::fs::write(&path, table.to_csv()).expect("write table CSV");
+            let json_path = csv_dir.join(format!("BENCH_{fig_id}.json"));
+            std::fs::write(&json_path, figures::to_json_entry(&fig_id, &title, &table))
+                .expect("write table JSON");
         }
     }
     println!("all figure harnesses regenerated in {total:.1}s; CSVs in results/");

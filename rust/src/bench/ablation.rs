@@ -40,6 +40,7 @@ fn full_smart(n: usize, wpn: usize, k: usize) -> GgConfig {
 fn smart_no_filter(n: usize, wpn: usize, k: usize) -> GgConfig {
     let mut c = GgConfig::smart(n, wpn, k, 8);
     c.c_thres = None;
+    c.s_thres = None; // both filter legs off: measured and counter
     c
 }
 

@@ -322,30 +322,123 @@ pub fn fig20(csv_dir: Option<&Path>) -> Table {
     t
 }
 
-/// Run one figure by id; `all` runs everything.
-pub fn run_figure(id: &str, csv_dir: Option<&Path>) -> Result<Vec<(String, Table)>, String> {
-    let all: Vec<(&str, fn(Option<&Path>) -> Table)> = vec![
-        ("1", fig1),
-        ("2b", fig2b),
-        ("15", fig15),
-        ("16", fig16),
-        ("17", fig17),
-        ("18", fig18),
-        ("19", fig19),
-        ("20", fig20),
+/// Dynamic straggler — filter reaction time. Not a paper figure: the
+/// paper's §5.3 filter assumes the scheduler knows who is slow; this
+/// harness measures how the *online* speed table reacts when worker 7
+/// turns 6x slow at its iteration 40 and recovers at its iteration 56
+/// (EXPERIMENTS.md §Dynamic-straggler; the recovery point is early
+/// enough that the slowed worker actually reaches it inside the
+/// iteration budget). Expected shape: with the measured (EWMA) filter
+/// the straggler stops being drafted shortly after onset AND is
+/// re-admitted after recovery; the counter-only filter excludes it but
+/// can never re-admit (the progress deficit is frozen); with no filter
+/// it keeps being drafted throughout.
+pub fn fig_dyn(csv_dir: Option<&Path>) -> Table {
+    use crate::cluster::SlowdownEvent;
+    use crate::gg::GgConfig;
+    use crate::sim::ripples;
+
+    let mut t = Table::new(&[
+        "filter",
+        "onset req",
+        "last drafted req",
+        "total reqs",
+        "straggler drafts",
+        "end rel speed",
+        "readmitted",
+    ]);
+    let variants: [(&str, fn(GgConfig) -> GgConfig); 3] = [
+        ("measured (EWMA)", |c| c),
+        ("counter-only", |c| {
+            let mut c = c;
+            c.s_thres = None;
+            c
+        }),
+        ("off", |c| {
+            let mut c = c;
+            c.s_thres = None;
+            c.c_thres = None;
+            c
+        }),
+    ];
+    for (name, tweak) in variants {
+        let mut p = base_params(AlgoKind::RipplesSmart);
+        p.exp.train.loss_target = None;
+        p.exp.train.max_iters = 220;
+        p.exp.cluster.hetero.schedule = vec![
+            SlowdownEvent { worker: 7, factor: 6.0, start_iter: 40 },
+            SlowdownEvent { worker: 7, factor: 1.0, start_iter: 56 },
+        ];
+        let cfg = tweak(GgConfig::smart(
+            p.exp.cluster.n_workers(),
+            p.exp.cluster.workers_per_node,
+            p.exp.algo.group_size,
+            p.exp.algo.c_thres,
+        ));
+        let res = ripples::run_with_gg(&p, cfg);
+        dump_trace(csv_dir, &format!("dyn_{}", name.replace([' ', '(', ')'], "")), &res);
+        let rel = metrics::relative_speeds(&res.measured_speeds);
+        let last = res.last_drafted_request[7];
+        // drafted within the final 10% of requests = still/again drafted
+        let readmitted = res.gg_requests.saturating_sub(last) < res.gg_requests / 10;
+        t.row(vec![
+            name.into(),
+            res.onset_request.map_or("-".into(), |r| r.to_string()),
+            last.to_string(),
+            res.gg_requests.to_string(),
+            res.drafts[7].to_string(),
+            format!("{:.2}", rel[7]),
+            if readmitted { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t
+}
+
+/// Run one figure by id; `all` runs everything. Returns
+/// `(id, title, table)` so callers can derive stable artifact names
+/// (`BENCH_<id>.json`, CSV files).
+#[allow(clippy::type_complexity)]
+pub fn run_figure(
+    id: &str,
+    csv_dir: Option<&Path>,
+) -> Result<Vec<(String, String, Table)>, String> {
+    let all: Vec<(&str, &str, fn(Option<&Path>) -> Table)> = vec![
+        ("1", "Figure 1", fig1),
+        ("2b", "Figure 2b", fig2b),
+        ("15", "Figure 15", fig15),
+        ("16", "Figure 16", fig16),
+        ("17", "Figure 17", fig17),
+        ("18", "Figure 18", fig18),
+        ("19", "Figure 19", fig19),
+        ("20", "Figure 20", fig20),
+        ("dyn", "Dynamic straggler (filter reaction)", fig_dyn),
     ];
     let selected: Vec<_> = if id == "all" {
         all
     } else {
-        all.into_iter().filter(|(n, _)| *n == id).collect()
+        all.into_iter().filter(|(n, ..)| *n == id).collect()
     };
     if selected.is_empty() {
-        return Err(format!("unknown figure '{id}' (try 1, 2b, 15, 16, 17, 18, 19, 20, all)"));
+        return Err(format!(
+            "unknown figure '{id}' (try 1, 2b, 15, 16, 17, 18, 19, 20, dyn, all)"
+        ));
     }
     Ok(selected
         .into_iter()
-        .map(|(n, f)| (format!("Figure {n}"), f(csv_dir)))
+        .map(|(n, title, f)| (n.to_string(), title.to_string(), f(csv_dir)))
         .collect())
+}
+
+/// Machine-readable form of one figure run, written by
+/// `ripples fig --json DIR` as `BENCH_<id>.json` (the perf-trajectory
+/// artifact the `bench-json` Makefile target accumulates).
+pub fn to_json_entry(id: &str, title: &str, table: &Table) -> String {
+    format!(
+        "{{\"figure\": \"{}\", \"title\": \"{}\", \"table\": {}}}",
+        metrics::json_escape(id),
+        metrics::json_escape(title),
+        table.to_json()
+    )
 }
 
 #[cfg(test)]
@@ -375,6 +468,40 @@ mod tests {
     #[test]
     fn unknown_figure_rejected() {
         assert!(run_figure("99", None).is_err());
-        assert!(run_figure("2b", None).is_ok());
+        let ok = run_figure("2b", None).unwrap();
+        assert_eq!(ok[0].0, "2b");
+        assert_eq!(ok[0].1, "Figure 2b");
+    }
+
+    #[test]
+    fn dyn_scenario_filter_shapes() {
+        let t = fig_dyn(None);
+        let csv = t.to_csv();
+        let row = |name: &str| {
+            csv.lines()
+                .find(|l| l.starts_with(name))
+                .unwrap_or_else(|| panic!("missing row {name}:\n{csv}"))
+                .trim()
+                .to_string()
+        };
+        // the measured filter re-admits the recovered straggler; the
+        // counter-only filter cannot (frozen deficit); no filter keeps
+        // drafting throughout
+        assert!(row("measured (EWMA)").ends_with("yes"), "{csv}");
+        assert!(row("counter-only").ends_with("no"), "{csv}");
+        assert!(row("off").ends_with("yes"), "{csv}");
+    }
+
+    #[test]
+    fn json_entry_wraps_table() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["1".into()]);
+        let j = to_json_entry("17", "Figure 17", &t);
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(parsed.get("figure").unwrap().as_str(), Some("17"));
+        assert_eq!(
+            parsed.get("table").unwrap().get("rows").unwrap().as_arr().unwrap().len(),
+            1
+        );
     }
 }

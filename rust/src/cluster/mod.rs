@@ -5,6 +5,68 @@
 
 use crate::util::rng::Pcg32;
 
+/// One scheduled speed change: `worker`'s total compute multiplier
+/// becomes `factor` once its *local* iteration count reaches
+/// `start_iter`. This is the simulator-side ground truth of a straggler
+/// that appears (or recovers) mid-run — what the GG's *measured* speed
+/// table (see `gg::SpeedTable`) has to discover online.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowdownEvent {
+    pub worker: usize,
+    pub factor: f64,
+    pub start_iter: u64,
+}
+
+impl SlowdownEvent {
+    /// Parse a `W,F@ITER[;W,F@ITER...]` schedule (the `--slow-schedule`
+    /// CLI grammar): worker `W`'s factor becomes `F` at its iteration
+    /// `ITER`. Later entries for the same worker override earlier ones
+    /// once active, so `7,6.0@40;7,1.0@120` is "slow from 40, recovered
+    /// from 120".
+    pub fn parse_list(s: &str) -> Result<Vec<SlowdownEvent>, String> {
+        let mut out = Vec::new();
+        for part in s.split(';').filter(|p| !p.trim().is_empty()) {
+            let part = part.trim();
+            let (wf, iter) = part
+                .split_once('@')
+                .ok_or_else(|| format!("bad schedule entry {part:?}: expected W,F@ITER"))?;
+            let (w, f) = wf
+                .split_once(',')
+                .ok_or_else(|| format!("bad schedule entry {part:?}: expected W,F@ITER"))?;
+            out.push(SlowdownEvent {
+                worker: w.trim().parse().map_err(|e| format!("bad worker in {part:?}: {e}"))?,
+                factor: f.trim().parse().map_err(|e| format!("bad factor in {part:?}: {e}"))?,
+                start_iter: iter
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("bad iteration in {part:?}: {e}"))?,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Resolve a `(factor, start_iter)` schedule at `iter`: the entry with
+/// the largest active `start_iter` (<= `iter`) wins; `base` when none
+/// is active. The single source of truth for schedule semantics —
+/// shared by the simulator profile, the real worker loop, and the
+/// launcher's ground-truth table, so they cannot drift apart.
+pub fn scheduled_factor_at(
+    entries: impl IntoIterator<Item = (f64, u64)>,
+    base: f64,
+    iter: u64,
+) -> f64 {
+    let mut factor = base;
+    let mut best_start = None;
+    for (f, start) in entries {
+        if start <= iter && best_start.map_or(true, |b| start >= b) {
+            best_start = Some(start);
+            factor = f;
+        }
+    }
+    factor
+}
+
 /// Heterogeneity specification.
 #[derive(Debug, Clone, Default)]
 pub struct HeterogeneityProfile {
@@ -15,23 +77,52 @@ pub struct HeterogeneityProfile {
     pub slow_worker: Option<(usize, f64)>,
     /// Lognormal sigma for random per-iteration jitter (0 = none).
     pub jitter: f64,
+    /// Time-varying slowdowns applied on top of `slow_worker`: once a
+    /// worker's iteration count reaches an entry's `start_iter`, that
+    /// entry's factor replaces the static one (the entry with the
+    /// largest active `start_iter` wins).
+    pub schedule: Vec<SlowdownEvent>,
 }
 
 impl HeterogeneityProfile {
+    /// Static (iteration-0) slowdown of `worker`.
     pub fn slowdown_of(&self, worker: usize) -> f64 {
         match self.slow_worker {
             Some((w, f)) if w == worker => f,
             _ => 1.0,
         }
     }
+
+    /// Slowdown of `worker` at its local iteration `iter`, including any
+    /// active scheduled change.
+    pub fn slowdown_at(&self, worker: usize, iter: u64) -> f64 {
+        scheduled_factor_at(
+            self.schedule
+                .iter()
+                .filter(|ev| ev.worker == worker)
+                .map(|ev| (ev.factor, ev.start_iter)),
+            self.slowdown_of(worker),
+            iter,
+        )
+    }
+
+    /// True once any schedule entry for `worker` is active at `iter`.
+    pub fn schedule_active(&self, worker: usize, iter: u64) -> bool {
+        self.schedule
+            .iter()
+            .any(|ev| ev.worker == worker && ev.start_iter <= iter)
+    }
 }
 
 /// Per-worker compute-time source: calibrated base cost x slowdown x jitter.
+/// Tracks each worker's iteration count internally so scheduled
+/// (`SlowdownEvent`) speed changes apply at the right step.
 #[derive(Debug)]
 pub struct ComputeTimer {
     base: f64,
     profile: HeterogeneityProfile,
     rngs: Vec<Pcg32>,
+    iters: Vec<u64>,
 }
 
 impl ComputeTimer {
@@ -40,12 +131,15 @@ impl ComputeTimer {
         let rngs = (0..n_workers)
             .map(|w| Pcg32::new(seed ^ (0xC0FFEE + w as u64 * 7919)))
             .collect();
-        Self { base, profile, rngs }
+        Self { base, profile, rngs, iters: vec![0; n_workers] }
     }
 
-    /// Compute duration for `worker`'s next iteration.
+    /// Compute duration for `worker`'s next iteration (each call counts
+    /// as one iteration for the slowdown schedule).
     pub fn next_compute(&mut self, worker: usize) -> f64 {
-        let mut t = self.base * self.profile.slowdown_of(worker);
+        let iter = self.iters[worker];
+        self.iters[worker] += 1;
+        let mut t = self.base * self.profile.slowdown_at(worker, iter);
         if self.profile.jitter > 0.0 {
             let z = self.rngs[worker].gen_normal();
             t *= (self.profile.jitter * z).exp();
@@ -55,6 +149,10 @@ impl ComputeTimer {
 
     pub fn base(&self) -> f64 {
         self.base
+    }
+
+    pub fn profile(&self) -> &HeterogeneityProfile {
+        &self.profile
     }
 }
 
@@ -111,7 +209,10 @@ mod tests {
 
     #[test]
     fn slowdown_applies_to_selected_worker_only() {
-        let p = HeterogeneityProfile { slow_worker: Some((3, 5.0)), jitter: 0.0 };
+        let p = HeterogeneityProfile {
+            slow_worker: Some((3, 5.0)),
+            ..HeterogeneityProfile::default()
+        };
         assert_eq!(p.slowdown_of(3), 5.0);
         assert_eq!(p.slowdown_of(2), 1.0);
         let mut t = ComputeTimer::new(0.1, p, 8, 1);
@@ -121,7 +222,7 @@ mod tests {
 
     #[test]
     fn jitter_spreads_times() {
-        let p = HeterogeneityProfile { slow_worker: None, jitter: 0.2 };
+        let p = HeterogeneityProfile { jitter: 0.2, ..HeterogeneityProfile::default() };
         let mut t = ComputeTimer::new(0.1, p, 2, 7);
         let xs: Vec<f64> = (0..200).map(|_| t.next_compute(0)).collect();
         let mean = xs.iter().sum::<f64>() / xs.len() as f64;
@@ -139,6 +240,59 @@ mod tests {
         for w in 0..4 {
             assert_eq!(t.next_compute(w), 0.25);
         }
+    }
+
+    #[test]
+    fn schedule_overrides_static_factor_at_its_iteration() {
+        let p = HeterogeneityProfile {
+            slow_worker: Some((1, 2.0)),
+            jitter: 0.0,
+            schedule: vec![
+                SlowdownEvent { worker: 1, factor: 6.0, start_iter: 3 },
+                SlowdownEvent { worker: 1, factor: 1.0, start_iter: 7 },
+            ],
+        };
+        assert_eq!(p.slowdown_at(1, 0), 2.0); // static phase
+        assert_eq!(p.slowdown_at(1, 2), 2.0);
+        assert_eq!(p.slowdown_at(1, 3), 6.0); // straggler appears
+        assert_eq!(p.slowdown_at(1, 6), 6.0);
+        assert_eq!(p.slowdown_at(1, 7), 1.0); // recovery
+        assert_eq!(p.slowdown_at(0, 100), 1.0); // other workers untouched
+        assert!(!p.schedule_active(1, 2));
+        assert!(p.schedule_active(1, 3));
+        assert!(!p.schedule_active(0, 100));
+    }
+
+    #[test]
+    fn compute_timer_applies_schedule_per_call() {
+        let p = HeterogeneityProfile {
+            slow_worker: None,
+            jitter: 0.0,
+            schedule: vec![SlowdownEvent { worker: 0, factor: 3.0, start_iter: 2 }],
+        };
+        let mut t = ComputeTimer::new(0.1, p, 2, 1);
+        assert!((t.next_compute(0) - 0.1).abs() < 1e-12); // iter 0
+        assert!((t.next_compute(0) - 0.1).abs() < 1e-12); // iter 1
+        assert!((t.next_compute(0) - 0.3).abs() < 1e-12); // iter 2: slowed
+        assert!((t.next_compute(1) - 0.1).abs() < 1e-12); // other worker clean
+    }
+
+    #[test]
+    fn slow_schedule_parsing() {
+        let evs = SlowdownEvent::parse_list("0,3.0@40; 7,1.5@120").unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                SlowdownEvent { worker: 0, factor: 3.0, start_iter: 40 },
+                SlowdownEvent { worker: 7, factor: 1.5, start_iter: 120 },
+            ]
+        );
+        assert_eq!(SlowdownEvent::parse_list("").unwrap(), vec![]);
+        assert!(SlowdownEvent::parse_list("0,3.0").is_err()); // no @ITER
+        assert!(SlowdownEvent::parse_list("3.0@40").is_err()); // no worker
+        assert!(SlowdownEvent::parse_list("x,3.0@40").is_err());
+        assert!(SlowdownEvent::parse_list("0,y@40").is_err());
+        assert!(SlowdownEvent::parse_list("0,3.0@z").is_err());
     }
 
     #[test]

@@ -142,6 +142,14 @@ impl ClusterConfig {
                 return Err(format!("slowdown factor {f} must be >= 1"));
             }
         }
+        for ev in &self.hetero.schedule {
+            if ev.worker >= self.n_workers() {
+                return Err(format!("slow-schedule worker {} out of range", ev.worker));
+            }
+            if ev.factor < 1.0 {
+                return Err(format!("slow-schedule factor {} must be >= 1", ev.factor));
+            }
+        }
         Ok(())
     }
 }
@@ -271,6 +279,27 @@ impl Experiment {
                 ));
             }
             ("cluster", "jitter") => self.cluster.hetero.jitter = v.as_f64().ok_or_else(bad)?,
+            ("cluster", "slow_schedule") => {
+                // flat [w, f, iter] triples: [7, 6.0, 40, 7, 1.0, 120]
+                let arr = v.as_arr().ok_or_else(bad)?;
+                if arr.is_empty() || arr.len() % 3 != 0 {
+                    return Err(format!(
+                        "cluster.slow_schedule wants flat [worker, factor, iter] \
+                         triples, got {} values",
+                        arr.len()
+                    ));
+                }
+                self.cluster.hetero.schedule = arr
+                    .chunks(3)
+                    .map(|c| {
+                        Ok(crate::cluster::SlowdownEvent {
+                            worker: c[0].as_usize().ok_or_else(bad)?,
+                            factor: c[1].as_f64().ok_or_else(bad)?,
+                            start_iter: c[2].as_usize().ok_or_else(bad)? as u64,
+                        })
+                    })
+                    .collect::<Result<_, String>>()?;
+            }
             ("algo", "kind") => {
                 let s = v.as_str().ok_or_else(bad)?;
                 self.algo.kind =
@@ -364,5 +393,38 @@ mod tests {
     #[test]
     fn config_file_unknown_key_rejected() {
         assert!(Experiment::from_str_cfg("[algo]\nwat = 1\n").is_err());
+    }
+
+    #[test]
+    fn slow_schedule_config_roundtrip() {
+        let e = Experiment::from_str_cfg(
+            "[cluster]\nslow_schedule = [7, 6.0, 40, 7, 1.0, 120]\n",
+        )
+        .unwrap();
+        assert_eq!(e.cluster.hetero.schedule.len(), 2);
+        assert_eq!(e.cluster.hetero.schedule[0].worker, 7);
+        assert_eq!(e.cluster.hetero.schedule[0].factor, 6.0);
+        assert_eq!(e.cluster.hetero.schedule[1].start_iter, 120);
+        assert_eq!(e.cluster.hetero.slowdown_at(7, 50), 6.0);
+        assert_eq!(e.cluster.hetero.slowdown_at(7, 120), 1.0);
+    }
+
+    #[test]
+    fn slow_schedule_config_rejected_when_malformed() {
+        // not a flat triple list
+        assert!(Experiment::from_str_cfg("[cluster]\nslow_schedule = [7, 6.0]\n").is_err());
+        // wrong value type inside a triple
+        assert!(Experiment::from_str_cfg(
+            "[cluster]\nslow_schedule = [7, \"fast\", 40]\n"
+        )
+        .is_err());
+        // out-of-range worker fails validation (default 16-worker cluster)
+        assert!(
+            Experiment::from_str_cfg("[cluster]\nslow_schedule = [99, 6.0, 40]\n").is_err()
+        );
+        // factor below 1 fails validation
+        assert!(
+            Experiment::from_str_cfg("[cluster]\nslow_schedule = [7, 0.5, 40]\n").is_err()
+        );
     }
 }

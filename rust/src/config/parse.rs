@@ -166,4 +166,36 @@ mod tests {
         let doc = parse_toml_subset("a = []\n").unwrap();
         assert_eq!(doc[0].2.as_arr().unwrap().len(), 0);
     }
+
+    #[test]
+    fn error_paths_cover_every_malformation() {
+        // unterminated string
+        let err = parse_toml_subset("s = \"oops\n").unwrap_err();
+        assert!(err.contains("unterminated string"), "{err}");
+        // unterminated array
+        let err = parse_toml_subset("a = [1, 2\n").unwrap_err();
+        assert!(err.contains("unterminated array"), "{err}");
+        // bad value inside an array propagates with the line number
+        let err = parse_toml_subset("x = 1\na = [1, zz]\n").unwrap_err();
+        assert!(err.contains("line 2") && err.contains("zz"), "{err}");
+        // empty section header
+        let err = parse_toml_subset("[ ]\n").unwrap_err();
+        assert!(err.contains("empty section"), "{err}");
+        // empty key
+        let err = parse_toml_subset(" = 5\n").unwrap_err();
+        assert!(err.contains("empty key"), "{err}");
+        // unparseable scalar
+        let err = parse_toml_subset("x = 5abc\n").unwrap_err();
+        assert!(err.contains("cannot parse value"), "{err}");
+        // a line that is neither section nor key=value
+        let err = parse_toml_subset("just words\n").unwrap_err();
+        assert!(err.contains("expected 'key = value'"), "{err}");
+    }
+
+    #[test]
+    fn comment_only_and_blank_lines_are_skipped() {
+        let doc = parse_toml_subset("# header\n\n   \n# more\nx = 1\n").unwrap();
+        assert_eq!(doc.len(), 1);
+        assert_eq!(doc[0].1, "x");
+    }
 }

@@ -15,6 +15,40 @@
 //!     in the pending queue (serialization = the atomicity guarantee).
 //!  4. When a P-Reduce finishes, the engine calls
 //!     [`GroupGenerator::complete`]; locks release and pending groups arm.
+//!
+//! # Online speed telemetry
+//!
+//! The slowdown filter (§5.3) needs to know which workers are slow.
+//! Rather than trusting launch-time configuration, every engine feeds
+//! *measured* per-worker step durations into the GG's [`SpeedTable`]
+//! (workers piggyback an EWMA on their `Sync` RPCs; the simulator
+//! observes its own virtual compute times). Global Division then
+//! excludes workers whose relative speed — EWMA step time divided by
+//! the fastest worker's — exceeds [`GgConfig::s_thres`], so a straggler
+//! that *appears mid-run* stops being drafted within ~1/α steps, and a
+//! straggler that *recovers* is re-admitted just as fast (the pure
+//! counter filter would exclude it forever: its progress deficit never
+//! shrinks). Configured slowdowns remain simulator ground truth only.
+//!
+//! ```
+//! use ripples::gg::{GgConfig, GroupGenerator};
+//! use ripples::util::rng::Pcg32;
+//!
+//! let mut gg = GroupGenerator::new(GgConfig::smart(8, 4, 2, 8));
+//! let mut rng = Pcg32::new(42);
+//! // workers report measured step durations; worker 7 is 6x slower
+//! for w in 0..8 {
+//!     gg.report_speed(w, if w == 7 { 0.060 } else { 0.010 });
+//! }
+//! let rel = gg.relative_speed(7).unwrap();
+//! assert!((rel - 6.0).abs() < 1e-9);
+//! // a fast initiator's Global Division never drafts the straggler
+//! let (assigned, armed) = gg.request(0, &mut rng);
+//! assert!(assigned.is_some());
+//! for g in &armed {
+//!     assert!(!g.members.contains(&7));
+//! }
+//! ```
 
 pub mod lockvec;
 pub mod static_sched;
@@ -26,6 +60,93 @@ use crate::util::rng::Pcg32;
 use std::collections::{HashMap, VecDeque};
 
 pub type GroupId = u64;
+
+/// Default measured-slowdown filter threshold: a worker measured more
+/// than 1.5x slower than the fastest peer is excluded from other
+/// initiators' divisions — between homogeneous noise (relative ≈
+/// 1.0–1.2 under jitter) and the mildest configured straggler (2x
+/// total multiplier), so even the paper's gentlest scenario is
+/// filtered while jittered-but-healthy workers are not.
+pub const DEFAULT_S_THRES: f64 = 1.5;
+
+/// Default EWMA smoothing factor for server-side speed observations
+/// (per-step updates: `ewma = α·sample + (1-α)·ewma`). 0.25 reacts to a
+/// mid-run slowdown within ~4 steps while riding out single-step noise;
+/// see DESIGN.md §Hardware-Adaptation.
+pub const SPEED_ALPHA: f64 = 0.25;
+
+/// One scalar EWMA update: seed with the first sample (`prev <= 0`
+/// means "no measurement yet"), then fold with `alpha`. The single
+/// definition of the smoothing shared by [`SpeedTable::observe`] and
+/// the distributed worker loop, so the worker-side EWMA cannot drift
+/// from the sim/threaded path.
+pub fn ewma_step(prev: f64, sample: f64, alpha: f64) -> f64 {
+    if prev > 0.0 {
+        alpha * sample + (1.0 - alpha) * prev
+    } else {
+        sample
+    }
+}
+
+/// Online per-worker speed telemetry: EWMA seconds per local SGD step.
+///
+/// Fed either by raw per-step observations ([`SpeedTable::observe`],
+/// the simulator path) or by already-smoothed worker-side EWMAs
+/// ([`SpeedTable::report`], the RPC piggyback path). Relative speed is
+/// measured against the fastest known worker, so `relative(w)` is the
+/// measured analogue of the configured slowdown factor.
+#[derive(Debug, Clone)]
+pub struct SpeedTable {
+    ewma: Vec<Option<f64>>,
+    alpha: f64,
+}
+
+impl SpeedTable {
+    pub fn new(n_workers: usize, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "bad EWMA alpha {alpha}");
+        Self { ewma: vec![None; n_workers], alpha }
+    }
+
+    /// Fold one raw step-duration sample into worker `w`'s EWMA.
+    pub fn observe(&mut self, w: usize, step_secs: f64) {
+        if !(step_secs > 0.0 && step_secs.is_finite()) {
+            return; // ignore garbage samples
+        }
+        self.ewma[w] = Some(ewma_step(self.ewma[w].unwrap_or(0.0), step_secs, self.alpha));
+    }
+
+    /// Replace worker `w`'s entry with an already-smoothed EWMA (the
+    /// worker did the smoothing; re-smoothing would double the lag).
+    pub fn report(&mut self, w: usize, ewma_secs: f64) {
+        if ewma_secs > 0.0 && ewma_secs.is_finite() {
+            self.ewma[w] = Some(ewma_secs);
+        }
+    }
+
+    /// EWMA step seconds of `w`, if any measurement arrived yet.
+    pub fn get(&self, w: usize) -> Option<f64> {
+        self.ewma[w]
+    }
+
+    /// Fastest known EWMA (the reference for relative speeds).
+    pub fn reference(&self) -> Option<f64> {
+        self.ewma
+            .iter()
+            .flatten()
+            .copied()
+            .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.min(v))))
+    }
+
+    /// Measured slowdown factor of `w` vs the fastest known worker.
+    pub fn relative(&self, w: usize) -> Option<f64> {
+        Some(self.ewma[w]? / self.reference()?)
+    }
+
+    /// All EWMAs, 0.0 where nothing was measured (wire-friendly).
+    pub fn snapshot(&self) -> Vec<f64> {
+        self.ewma.iter().map(|e| e.unwrap_or(0.0)).collect()
+    }
+}
 
 /// A synchronization group: sorted member list.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -49,6 +170,19 @@ pub struct GgConfig {
     pub inter_intra: bool,
     /// §5.3 slowdown filter threshold; None disables.
     pub c_thres: Option<u64>,
+    /// Measured slowdown filter: exclude workers whose [`SpeedTable`]
+    /// relative speed exceeds this factor from *other* initiators'
+    /// divisions (the initiator itself always participates, like the
+    /// counter filter). None disables; workers with no measurement yet
+    /// are judged by the `c_thres` counter rule instead. Note the EWMA
+    /// times the *compute phase only* (sync wait would conflate a
+    /// worker's own speed with its partners'), so when telemetry exists
+    /// it fully replaces the counter rule — the price is that a worker
+    /// slow purely in its *link* (fast compute, slow transfers) passes;
+    /// every heterogeneity source this repo models is compute-time.
+    pub s_thres: Option<f64>,
+    /// EWMA smoothing for per-step speed observations ([`SPEED_ALPHA`]).
+    pub speed_alpha: f64,
     /// The engine driving this GG is a collective *rendezvous* runtime
     /// (threaded or distributed): members physically meet to execute a
     /// group, so freshly generated groups must draft only idle workers —
@@ -69,6 +203,8 @@ impl GgConfig {
             use_global_division: false,
             inter_intra: false,
             c_thres: None,
+            s_thres: None,
+            speed_alpha: SPEED_ALPHA,
             rendezvous: false,
         }
     }
@@ -88,6 +224,8 @@ impl GgConfig {
             use_global_division: true,
             inter_intra: true,
             c_thres: Some(c_thres),
+            s_thres: Some(DEFAULT_S_THRES),
+            speed_alpha: SPEED_ALPHA,
             rendezvous: false,
         }
     }
@@ -115,6 +253,14 @@ pub struct GroupGenerator {
     gb: Vec<VecDeque<GroupId>>,
     /// §5.3 progress counters (requests seen per worker).
     counters: Vec<u64>,
+    /// Measured per-worker step durations (the dynamic §5.3 input).
+    speed: SpeedTable,
+    /// Times each worker was drafted into a fresh group created by a
+    /// *different* initiator (the slowdown filter's observable).
+    drafts: Vec<u64>,
+    /// `stats.requests` value at each worker's most recent such draft
+    /// (0 = never): "requests since the filter last drafted w".
+    last_drafted: Vec<u64>,
     /// Workers that have left the training session (threaded-runtime
     /// termination protocol): never drafted into new groups.
     retired: Vec<bool>,
@@ -126,6 +272,7 @@ impl GroupGenerator {
     pub fn new(cfg: GgConfig) -> Self {
         assert!(cfg.group_size >= 2 && cfg.group_size <= cfg.n_workers);
         let n = cfg.n_workers;
+        let alpha = cfg.speed_alpha;
         Self {
             cfg,
             locks: LockVector::new(n),
@@ -133,6 +280,9 @@ impl GroupGenerator {
             groups: HashMap::new(),
             gb: (0..n).map(|_| VecDeque::new()).collect(),
             counters: vec![0; n],
+            speed: SpeedTable::new(n, alpha),
+            drafts: vec![0; n],
+            last_drafted: vec![0; n],
             retired: vec![false; n],
             next_id: 1,
             stats: GgStats::default(),
@@ -149,6 +299,40 @@ impl GroupGenerator {
 
     pub fn counters(&self) -> &[u64] {
         &self.counters
+    }
+
+    /// Fold one raw measured step duration into `w`'s EWMA (simulator /
+    /// threaded-runtime path).
+    pub fn observe_speed(&mut self, w: usize, step_secs: f64) {
+        self.speed.observe(w, step_secs);
+    }
+
+    /// Accept a worker-smoothed EWMA step duration (the `SpeedReport`
+    /// piggybacked on `Sync` RPCs).
+    pub fn report_speed(&mut self, w: usize, ewma_secs: f64) {
+        self.speed.report(w, ewma_secs);
+    }
+
+    /// The measured speed table.
+    pub fn speed_table(&self) -> &SpeedTable {
+        &self.speed
+    }
+
+    /// Measured slowdown factor of `w` vs the fastest known worker.
+    pub fn relative_speed(&self, w: usize) -> Option<f64> {
+        self.speed.relative(w)
+    }
+
+    /// Per-worker counts of drafts into groups created by *other*
+    /// initiators (what the slowdown filter suppresses for stragglers).
+    pub fn drafts(&self) -> &[u64] {
+        &self.drafts
+    }
+
+    /// Per-worker `stats.requests` value at the most recent such draft
+    /// (0 = never drafted by another initiator).
+    pub fn last_drafted(&self) -> &[u64] {
+        &self.last_drafted
     }
 
     pub fn pending_len(&self) -> usize {
@@ -221,7 +405,7 @@ impl GroupGenerator {
         let mut assigned = None;
         for members in member_lists {
             let contains_w = members.contains(&w);
-            let id = self.create_group(members, &mut newly_armed);
+            let id = self.create_group(w, members, &mut newly_armed);
             if contains_w && assigned.is_none() {
                 assigned = Some(id);
             }
@@ -274,7 +458,12 @@ impl GroupGenerator {
     // group creation
     // ------------------------------------------------------------------
 
-    fn create_group(&mut self, mut members: Vec<usize>, newly_armed: &mut Vec<Group>) -> GroupId {
+    fn create_group(
+        &mut self,
+        initiator: usize,
+        mut members: Vec<usize>,
+        newly_armed: &mut Vec<Group>,
+    ) -> GroupId {
         members.sort_unstable();
         members.dedup();
         debug_assert!(members.len() >= 2);
@@ -282,6 +471,12 @@ impl GroupGenerator {
         self.next_id += 1;
         let group = Group { id, members };
         self.stats.groups_created += 1;
+        for &m in &group.members {
+            if m != initiator {
+                self.drafts[m] += 1;
+                self.last_drafted[m] = self.stats.requests;
+            }
+        }
         if self.cfg.use_group_buffer {
             for &m in &group.members {
                 self.gb[m].push_back(id);
@@ -330,12 +525,18 @@ impl GroupGenerator {
 
     /// §5.1/§5.2/§5.3: Global Division over the idle workers.
     ///
-    /// Idle = empty GB and not locked. The slowdown filter keeps only
-    /// workers whose progress counter is within `c_thres` of the
-    /// initiator's (the initiator itself always participates).
+    /// Idle = empty GB and not locked. The slowdown filter excludes
+    /// workers measured more than `s_thres` times slower than the
+    /// fastest peer ([`SpeedTable`]); where no telemetry exists it falls
+    /// back to the paper's progress-counter rule (within `c_thres` of
+    /// the initiator). The initiator itself always participates. The
+    /// measured leg is what reacts to stragglers appearing — and
+    /// recovering — mid-run.
     fn global_division(&mut self, w: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
         self.stats.divisions += 1;
         let c_i = self.counters[w];
+        // hoisted: the fastest EWMA is one O(n) scan, not one per candidate
+        let speed_ref = self.speed.reference();
         let mut idle: Vec<usize> = (0..self.cfg.n_workers)
             .filter(|&x| {
                 if x == w {
@@ -343,11 +544,21 @@ impl GroupGenerator {
                 }
                 let buffer_free = !self.cfg.use_group_buffer || self.gb[x].is_empty();
                 let lock_free = !self.locks.is_locked(x) && !self.retired[x];
-                let fast_enough = match self.cfg.c_thres {
-                    // c_i - c_x < C_thres  (workers too far *behind* the
-                    // initiator are excluded; workers ahead always pass)
-                    Some(thres) => c_i.saturating_sub(self.counters[x]) < thres,
-                    None => true,
+                // Slowdown filter: when telemetry for `x` exists, the
+                // *measured* relative speed drives the decision — it can
+                // re-admit a recovered straggler, which the progress
+                // counters never can (a deficit only freezes, it does not
+                // shrink). The counter rule (c_i - c_x < C_thres; workers
+                // ahead always pass) remains the bootstrap and the path
+                // for engines that feed no telemetry.
+                let measured_rel =
+                    self.speed.get(x).and_then(|own| speed_ref.map(|r| own / r));
+                let fast_enough = match (self.cfg.s_thres, measured_rel) {
+                    (Some(thres), Some(rel)) => rel <= thres,
+                    _ => match self.cfg.c_thres {
+                        Some(thres) => c_i.saturating_sub(self.counters[x]) < thres,
+                        None => true,
+                    },
                 };
                 buffer_free && lock_free && fast_enough
             })
@@ -664,13 +875,87 @@ mod tests {
     }
 
     #[test]
+    fn speed_table_ewma_and_relative() {
+        let mut t = SpeedTable::new(3, 0.5);
+        assert_eq!(t.get(0), None);
+        assert_eq!(t.relative(0), None);
+        t.observe(0, 0.010);
+        assert_eq!(t.get(0), Some(0.010)); // first sample seeds the EWMA
+        t.observe(0, 0.030);
+        assert!((t.get(0).unwrap() - 0.020).abs() < 1e-12);
+        t.observe(1, f64::NAN); // garbage ignored
+        t.observe(1, -1.0);
+        assert_eq!(t.get(1), None);
+        t.report(2, 0.040);
+        assert!((t.relative(2).unwrap() - 2.0).abs() < 1e-12);
+        assert_eq!(t.snapshot(), vec![0.020, 0.0, 0.040]);
+    }
+
+    #[test]
+    fn measured_filter_excludes_and_readmits() {
+        // plain GD, counter filter off: only the measured filter acts
+        let mut cfg = GgConfig::smart(8, 4, 2, 1_000_000);
+        cfg.inter_intra = false;
+        let mut gg = GroupGenerator::new(cfg);
+        let mut r = rng();
+        for w in 0..8 {
+            gg.report_speed(w, 0.010);
+        }
+        // worker 5 turns into a 3x straggler: raw observations converge
+        // onto the EWMA within ~1/alpha steps
+        for _ in 0..16 {
+            gg.observe_speed(5, 0.030);
+        }
+        assert!(gg.relative_speed(5).unwrap() > DEFAULT_S_THRES);
+        let (_, armed) = gg.request(0, &mut r);
+        assert!(!armed.is_empty());
+        for g in &armed {
+            assert!(!g.members.contains(&5), "measured straggler drafted: {g:?}");
+        }
+        for g in armed {
+            gg.complete(g.id);
+        }
+        assert_eq!(gg.drafts()[5], 0, "straggler must not be drafted by others");
+        // the straggler itself still gets a group when *it* requests
+        let (id5, armed5) = gg.request(5, &mut r);
+        assert!(gg.group(id5.unwrap()).unwrap().members.contains(&5));
+        for g in armed5 {
+            gg.complete(g.id);
+        }
+        // recovery: fast steps pull the EWMA back under the threshold,
+        // and the worker is drafted again (the counter filter could not
+        // do this — a progress deficit never shrinks)
+        for _ in 0..16 {
+            gg.observe_speed(5, 0.010);
+        }
+        assert!(gg.relative_speed(5).unwrap() < DEFAULT_S_THRES);
+        let (_, armed) = gg.request(0, &mut r);
+        let drafted: Vec<usize> = armed.iter().flat_map(|g| g.members.clone()).collect();
+        assert!(drafted.contains(&5), "recovered worker not re-admitted: {drafted:?}");
+        assert!(gg.drafts()[5] >= 1);
+        assert_eq!(gg.last_drafted()[5], gg.stats.requests);
+    }
+
+    #[test]
+    fn unknown_speeds_pass_the_measured_filter() {
+        let mut cfg = GgConfig::smart(8, 4, 2, 1_000_000);
+        cfg.inter_intra = false;
+        let mut gg = GroupGenerator::new(cfg);
+        let mut r = rng();
+        // nobody has reported anything: GD must still draft everyone
+        let (_, armed) = gg.request(0, &mut r);
+        let drafted: usize = armed.iter().map(|g| g.members.len()).sum();
+        assert_eq!(drafted, 8, "bootstrap division must cover all workers");
+    }
+
+    #[test]
     fn complete_releases_and_arms_fifo() {
         let mut gg = GroupGenerator::new(GgConfig::random(4, 4, 2));
         // Hand-roll groups to control membership.
         let mut armed = Vec::new();
-        let a = gg.create_group(vec![0, 1], &mut armed);
-        let b = gg.create_group(vec![1, 2], &mut armed); // conflicts with a
-        let c = gg.create_group(vec![2, 3], &mut armed); // conflicts with b? no: 2,3 free? 2 is free (b pending) -> arms
+        let a = gg.create_group(0, vec![0, 1], &mut armed);
+        let b = gg.create_group(1, vec![1, 2], &mut armed); // conflicts with a
+        let c = gg.create_group(2, vec![2, 3], &mut armed); // conflicts with b? no: 2,3 free? 2 is free (b pending) -> arms
         assert!(gg.is_armed(a));
         assert!(!gg.is_armed(b));
         assert!(gg.is_armed(c));

@@ -22,6 +22,11 @@
 //! composition: worker *processes* coordinating through the TCP Group
 //! Generator service ([`rpc`]) and moving model bytes over the TCP data
 //! plane (`ripples launch` / `ripples worker`; DESIGN.md §Deployment).
+//! Workers piggyback measured step-duration EWMAs on their GG RPCs
+//! ([`rpc::SpeedReport`] → [`gg::SpeedTable`]), so the slowdown filter
+//! runs on *measured* heterogeneity and reacts to stragglers that
+//! appear — or recover — mid-run ([`cluster::SlowdownEvent`],
+//! `--slow-schedule`; DESIGN.md §Hardware-Adaptation).
 
 pub mod bench;
 pub mod cluster;
@@ -37,6 +42,7 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
+pub use cluster::{HeterogeneityProfile, SlowdownEvent};
 pub use config::{AlgoConfig, AlgoKind, ClusterConfig, Experiment, TrainConfig};
-pub use gg::{GgConfig, Group, GroupGenerator, StaticScheduler};
+pub use gg::{GgConfig, Group, GroupGenerator, SpeedTable, StaticScheduler};
 pub use sim::{SimParams, SimResult};

@@ -50,19 +50,21 @@ ripples — Heterogeneity-Aware Asynchronous Decentralized Training
 
 USAGE:
   ripples train [--algo NAME] [--config FILE] [--slow W,FACTOR]
+                [--slow-schedule W,F@ITER[;W,F@ITER...]]
                 [--iters N] [--target LOSS] [--trace FILE.csv]
-  ripples fig <1|2b|15|16|17|18|19|20|all> [--csv DIR]
+  ripples fig <1|2b|15|16|17|18|19|20|dyn|all> [--csv DIR] [--json DIR]
   ripples gg-serve [--addr HOST:PORT] [--workers N] [--wpn K]
                    [--mode random|smart] [--group-size G]
   ripples launch [--workers N] [--slow W:FACTOR] [--secs S] [--iters N]
+                 [--slow-schedule W,F@ITER[;W,F@ITER...]]
                  [--group-size G] [--mode random|smart] [--c-thres C]
                  [--wpn K] [--seed S] [--lr LR] [--batch B] [--bias P]
                  [--floor-ms MS] [--model tiny|paper] [--echo true]
   ripples worker --rank R --workers N --gg HOST:PORT
                  [--listen HOST:PORT] [--peers a0,a1,...] [--secs S]
-                 [--iters N] [--slowdown F] [--seed S] [--lr LR]
-                 [--batch B] [--bias P] [--floor-ms MS] [--dataset N]
-                 [--model tiny|paper]
+                 [--iters N] [--slowdown F] [--slow-schedule F@ITER[,...]]
+                 [--seed S] [--lr LR] [--batch B] [--bias P]
+                 [--floor-ms MS] [--dataset N] [--model tiny|paper]
   ripples artifacts [--dir DIR]
   ripples ablation
 
@@ -73,7 +75,11 @@ Algorithms: all-reduce, ps, d-psgd, ad-psgd, ripples-static,
 localhost; workers train a shared-init MLP and execute GG-assigned
 P-Reduce groups as chunked ring all-reduces over TCP (DESIGN.md
 §Deployment). Point `worker` at remote hosts manually for multi-machine
-runs.
+runs. `--slow-schedule` makes a straggler appear (or recover) mid-run:
+workers report measured EWMA step durations to the GG, whose speed
+table drives the slowdown filter (`fig dyn` measures the reaction).
+`fig --json DIR` writes each figure as machine-readable
+`DIR/BENCH_<id>.json` (the `make bench-json` perf trajectory).
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positionals.
@@ -116,6 +122,9 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
             w.parse().map_err(|e| format!("bad worker: {e}"))?,
             f.parse().map_err(|e| format!("bad factor: {e}"))?,
         ));
+    }
+    if let Some(sched) = get_flag(&flags, "slow-schedule") {
+        exp.cluster.hetero.schedule = ripples::cluster::SlowdownEvent::parse_list(sched)?;
     }
     if let Some(iters) = get_flag(&flags, "iters") {
         exp.train.max_iters = iters.parse().map_err(|e| format!("bad iters: {e}"))?;
@@ -161,16 +170,23 @@ fn cmd_fig(args: &[String]) -> Result<(), String> {
     let (pos, flags) = parse_flags(args)?;
     let id = pos.first().map(String::as_str).unwrap_or("all");
     let csv_dir = get_flag(&flags, "csv").map(PathBuf::from);
-    if let Some(dir) = &csv_dir {
+    let json_dir = get_flag(&flags, "json").map(PathBuf::from);
+    for dir in [&csv_dir, &json_dir].into_iter().flatten() {
         std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
     }
-    for (title, table) in figures::run_figure(id, csv_dir.as_deref())? {
+    for (fig_id, title, table) in figures::run_figure(id, csv_dir.as_deref())? {
         println!("== {title} ==");
         println!("{}", table.render());
         if let Some(dir) = &csv_dir {
             let path = dir.join(format!("{}.csv", title.to_lowercase().replace(' ', "_")));
             std::fs::write(&path, table.to_csv())
                 .map_err(|e| format!("write {}: {e}", path.display()))?;
+        }
+        if let Some(dir) = &json_dir {
+            let path = dir.join(format!("BENCH_{fig_id}.json"));
+            std::fs::write(&path, figures::to_json_entry(&fig_id, &title, &table))
+                .map_err(|e| format!("write {}: {e}", path.display()))?;
+            println!("json written to {}", path.display());
         }
     }
     Ok(())
@@ -240,6 +256,9 @@ fn cmd_launch(args: &[String]) -> Result<(), String> {
     if let Some(slow) = get_flag(&flags, "slow") {
         cfg.slow = Some(parse_slow(slow)?);
     }
+    if let Some(sched) = get_flag(&flags, "slow-schedule") {
+        cfg.slow_schedule = ripples::cluster::SlowdownEvent::parse_list(sched)?;
+    }
     cfg.secs = parse_or(&flags, "secs", cfg.secs)?;
     cfg.max_iters = parse_or(&flags, "iters", cfg.max_iters)?;
     cfg.group_size = parse_or(&flags, "group-size", cfg.group_size)?;
@@ -262,13 +281,18 @@ fn cmd_launch(args: &[String]) -> Result<(), String> {
         other => return Err(format!("unknown model '{other}'")),
     }
     println!(
-        "launching {} worker processes (group size {}, {} GG{})...",
+        "launching {} worker processes (group size {}, {} GG{}{})...",
         cfg.workers,
         cfg.group_size,
         if cfg.smart { "smart" } else { "random" },
         cfg.slow
             .map(|(w, f)| format!(", worker {w} slowed {f}x"))
-            .unwrap_or_default()
+            .unwrap_or_default(),
+        if cfg.slow_schedule.is_empty() {
+            String::new()
+        } else {
+            format!(", {} scheduled speed changes", cfg.slow_schedule.len())
+        }
     );
     let report = launch_local(&cfg).map_err(|e| format!("{e:#}"))?;
     print!("{}", report.render());
@@ -291,6 +315,11 @@ fn cmd_worker(args: &[String]) -> Result<(), String> {
         secs: parse_or(&flags, "secs", defaults.secs)?,
         max_iters: parse_or(&flags, "iters", defaults.max_iters)?,
         slowdown: parse_or(&flags, "slowdown", defaults.slowdown)?,
+        slow_schedule: match get_flag(&flags, "slow-schedule") {
+            Some(s) => ripples::net::parse_worker_schedule(s)
+                .map_err(|e| format!("bad --slow-schedule: {e:#}"))?,
+            None => Vec::new(),
+        },
         compute_floor: Duration::from_millis(parse_or(
             &flags,
             "floor-ms",

@@ -60,6 +60,34 @@ impl Table {
         out
     }
 
+    /// JSON rendering of the same table:
+    /// `{"header": [...], "rows": [[...], ...]}` (all cells as strings).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"header\": [");
+        let cells = |out: &mut String, row: &[String]| {
+            for (i, c) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push('"');
+                out.push_str(&json_escape(c));
+                out.push('"');
+            }
+        };
+        cells(&mut out, &self.header);
+        out.push_str("], \"rows\": [");
+        for (i, row) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push('[');
+            cells(&mut out, row);
+            out.push(']');
+        }
+        out.push_str("]}");
+        out
+    }
+
     /// CSV rendering of the same table.
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
@@ -76,6 +104,24 @@ impl Table {
         }
         out
     }
+}
+
+/// Escape a string for embedding in a JSON string literal (used by
+/// [`Table::to_json`] and the `BENCH_<id>.json` figure wrapper).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// One worker's throughput over a `ripples launch` run (the distributed
@@ -108,9 +154,45 @@ pub fn worker_table(stats: &[WorkerStat]) -> Table {
     t
 }
 
+/// Measured slowdown factor per worker: EWMA step seconds divided by
+/// the fastest measured worker's. 0.0 where nothing was measured.
+pub fn relative_speeds(speeds: &[f64]) -> Vec<f64> {
+    let reference = speeds
+        .iter()
+        .copied()
+        .filter(|&v| v > 0.0)
+        .fold(f64::INFINITY, f64::min);
+    speeds
+        .iter()
+        .map(|&v| if v > 0.0 && reference.is_finite() { v / reference } else { 0.0 })
+        .collect()
+}
+
+/// Measured per-worker speed table for GG-scheduled runs: the online
+/// telemetry (EWMA step time, relative factor) next to the configured
+/// ground truth and the filter's observable (drafts by other
+/// initiators). Rendered by `ripples launch` and the dynamic-straggler
+/// harness (EXPERIMENTS.md §Dynamic-straggler).
+pub fn speed_table(speeds: &[f64], true_factors: &[f64], drafts: &[u64]) -> Table {
+    let rel = relative_speeds(speeds);
+    let mut t = Table::new(&["worker", "ewma ms", "rel speed", "true factor", "drafts"]);
+    for w in 0..speeds.len() {
+        t.row(vec![
+            w.to_string(),
+            if speeds[w] > 0.0 { format!("{:.1}", speeds[w] * 1e3) } else { "-".into() },
+            if rel[w] > 0.0 { format!("{:.2}", rel[w]) } else { "-".into() },
+            true_factors.get(w).map_or("-".into(), |f| format!("{f:.2}")),
+            drafts.get(w).map_or("-".into(), |d| d.to_string()),
+        ]);
+    }
+    t
+}
+
 /// Summary line per algorithm, matching the paper's reporting style.
+/// GG-scheduled runs with measured speed telemetry get a second line
+/// with the per-worker relative speeds the slowdown filter acted on.
 pub fn summarize(res: &SimResult) -> String {
-    format!(
+    let mut out = format!(
         "{:<18} time={:>9.2}s  iters/worker={:>7.1}  per-iter={:>7.4}s  sync%={:>5.1}  conflicts={}",
         res.algo,
         res.final_time,
@@ -118,7 +200,19 @@ pub fn summarize(res: &SimResult) -> String {
         res.per_iter_time(),
         res.sync_fraction() * 100.0,
         res.conflicts,
-    )
+    );
+    if res.measured_speeds.iter().any(|&v| v > 0.0) {
+        let rel = relative_speeds(&res.measured_speeds);
+        let rel_s: Vec<String> = rel.iter().map(|v| format!("{v:.2}")).collect();
+        let ms_s: Vec<String> =
+            res.measured_speeds.iter().map(|v| format!("{:.1}", v * 1e3)).collect();
+        out.push_str(&format!(
+            "\nmeasured speeds: rel=[{}] ewma_ms=[{}]",
+            rel_s.join(" "),
+            ms_s.join(" ")
+        ));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -176,6 +270,68 @@ mod tests {
         assert!(s.contains("25.0"), "{s}"); // 100 iters / 4 s
         assert!(s.contains("10.0"), "{s}");
         assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn relative_speeds_vs_fastest() {
+        assert_eq!(relative_speeds(&[]), Vec::<f64>::new());
+        assert_eq!(relative_speeds(&[0.0, 0.0]), vec![0.0, 0.0]);
+        let rel = relative_speeds(&[0.010, 0.0, 0.030]);
+        assert!((rel[0] - 1.0).abs() < 1e-12);
+        assert_eq!(rel[1], 0.0);
+        assert!((rel[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speed_table_golden_rendering() {
+        let t = speed_table(&[0.010, 0.0, 0.030], &[1.0, 1.0, 3.0], &[12, 7, 0]);
+        // golden per-line content (cells are right-padded; compare trimmed)
+        let got: Vec<String> =
+            t.render().lines().map(|l| l.trim_end().to_string()).collect();
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0], "worker  ewma ms  rel speed  true factor  drafts");
+        assert!(got[1].chars().all(|c| c == '-') && got[1].len() >= got[0].len());
+        assert_eq!(got[2], "0       10.0     1.00       1.00         12");
+        assert_eq!(got[3], "1       -        -          1.00         7");
+        assert_eq!(got[4], "2       30.0     3.00       3.00         0");
+    }
+
+    #[test]
+    fn summarize_appends_measured_speed_line() {
+        let mut res = SimResult {
+            algo: "ripples-smart".into(),
+            final_time: 10.0,
+            total_iters: 100,
+            per_worker_iters: vec![50, 50],
+            ..SimResult::default()
+        };
+        let base = summarize(&res);
+        assert_eq!(base.lines().count(), 1, "no telemetry, no speed line: {base}");
+        res.measured_speeds = vec![0.010, 0.025];
+        let with = summarize(&res);
+        let lines: Vec<&str> = with.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], base);
+        assert_eq!(lines[1], "measured speeds: rel=[1.00 2.50] ewma_ms=[10.0 25.0]");
+    }
+
+    #[test]
+    fn table_to_json_escapes_and_structures() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x\"y".into(), "1.5".into()]);
+        t.row(vec!["plain".into(), "2".into()]);
+        let j = t.to_json();
+        assert_eq!(
+            j,
+            "{\"header\": [\"a\", \"b\"], \"rows\": [[\"x\\\"y\", \"1.5\"], [\"plain\", \"2\"]]}"
+        );
+        // must be parseable by the in-repo JSON parser
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            parsed.get("rows").unwrap().as_arr().unwrap()[0].as_arr().unwrap()[0].as_str(),
+            Some("x\"y")
+        );
     }
 
     #[test]

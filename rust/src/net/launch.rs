@@ -22,11 +22,12 @@ use std::process::{Child, Command, Stdio};
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::SlowdownEvent;
 use crate::gg::GgConfig;
-use crate::metrics::{worker_table, WorkerStat};
-use crate::rpc::{GgClient, GgServer};
+use crate::metrics::{speed_table, worker_table, WorkerStat};
+use crate::rpc::{GgClient, GgServer, StatsReport};
 
-use super::worker::WorkerReport;
+use super::worker::{format_worker_schedule, WorkerReport};
 
 /// Cluster-launch configuration (CLI: `ripples launch`).
 #[derive(Debug, Clone)]
@@ -36,6 +37,11 @@ pub struct LaunchConfig {
     pub workers: usize,
     /// `(worker, factor)`: that worker's compute takes `factor`x as long.
     pub slow: Option<(usize, f64)>,
+    /// Mid-run speed changes (`--slow-schedule W,F@ITER[;...]`): worker
+    /// `W`'s factor becomes `F` once its local iteration count reaches
+    /// `ITER` — a straggler can appear or recover while the cluster
+    /// runs, and only the GG's *measured* speed table can see it.
+    pub slow_schedule: Vec<SlowdownEvent>,
     /// Timed training window per worker, seconds.
     pub secs: f64,
     /// Per-worker iteration cap (0 = unlimited).
@@ -65,6 +71,7 @@ impl Default for LaunchConfig {
             bin: std::env::current_exe().unwrap_or_else(|_| PathBuf::from("ripples")),
             workers: 4,
             slow: None,
+            slow_schedule: Vec::new(),
             secs: 5.0,
             max_iters: 0,
             group_size: 2,
@@ -86,8 +93,11 @@ impl Default for LaunchConfig {
 #[derive(Debug)]
 pub struct LaunchReport {
     pub workers: Vec<WorkerReport>,
-    /// GG counters: (requests, conflicts, groups_created, buffer_hits).
-    pub gg_stats: (u64, u64, u64, u64),
+    /// GG counters plus the measured speed table.
+    pub gg_stats: StatsReport,
+    /// Configured ground-truth slowdown factor per worker (final
+    /// schedule state) — what the measured table should converge to.
+    pub true_factors: Vec<f64>,
 }
 
 impl LaunchReport {
@@ -107,12 +117,20 @@ impl LaunchReport {
     }
 
     pub fn render(&self) -> String {
-        let (requests, conflicts, created, hits) = self.gg_stats;
-        format!(
-            "{}\nGG: {requests} requests, {created} groups, {conflicts} conflicts, \
-             {hits} buffer hits\n",
-            worker_table(&self.stats()).render()
-        )
+        let s = &self.gg_stats;
+        let mut out = format!(
+            "{}\nGG: {} requests, {} groups, {} conflicts, {} buffer hits\n",
+            worker_table(&self.stats()).render(),
+            s.requests,
+            s.groups_created,
+            s.conflicts,
+            s.buffer_hits,
+        );
+        if s.speeds.iter().any(|&v| v > 0.0) {
+            out.push_str("measured speed table (GG view):\n");
+            out.push_str(&speed_table(&s.speeds, &self.true_factors, &s.drafts).render());
+        }
+        out
     }
 }
 
@@ -131,6 +149,14 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
         }
         if f < 1.0 {
             bail!("slowdown factor {f} must be >= 1");
+        }
+    }
+    for ev in &cfg.slow_schedule {
+        if ev.worker >= cfg.workers {
+            bail!("slow-schedule worker {} out of range", ev.worker);
+        }
+        if ev.factor < 1.0 {
+            bail!("slow-schedule factor {} must be >= 1", ev.factor);
         }
     }
     // Workers physically rendezvous to execute groups, so the GG must
@@ -166,7 +192,25 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
     let gg_stats = stats_client.stats()?;
     drop(stats_client);
     server.shutdown();
-    Ok(LaunchReport { workers: reports, gg_stats })
+    // Ground truth per worker: the final scheduled factor, else static
+    // (same resolution rule as the worker loop, evaluated at iter = MAX).
+    let true_factors = (0..cfg.workers)
+        .map(|w| {
+            let base = match cfg.slow {
+                Some((sw, f)) if sw == w => f,
+                _ => 1.0,
+            };
+            crate::cluster::scheduled_factor_at(
+                cfg.slow_schedule
+                    .iter()
+                    .filter(|ev| ev.worker == w)
+                    .map(|ev| (ev.factor, ev.start_iter)),
+                base,
+                u64::MAX,
+            )
+        })
+        .collect();
+    Ok(LaunchReport { workers: reports, gg_stats, true_factors })
 }
 
 struct WorkerProc {
@@ -188,6 +232,13 @@ fn run_cluster(
             Some((w, f)) if w == rank => f,
             _ => 1.0,
         };
+        // this rank's share of the cluster-wide slowdown schedule
+        let rank_schedule: Vec<(f64, u64)> = cfg
+            .slow_schedule
+            .iter()
+            .filter(|ev| ev.worker == rank)
+            .map(|ev| (ev.factor, ev.start_iter))
+            .collect();
         let mut cmd = Command::new(&cfg.bin);
         cmd.arg("worker")
             .args(["--rank", &rank.to_string()])
@@ -205,6 +256,9 @@ fn run_cluster(
             .stdout(Stdio::piped());
         if cfg.max_iters > 0 {
             cmd.args(["--iters", &cfg.max_iters.to_string()]);
+        }
+        if !rank_schedule.is_empty() {
+            cmd.args(["--slow-schedule", &format_worker_schedule(&rank_schedule)]);
         }
         let mut child = cmd
             .spawn()

@@ -16,6 +16,34 @@
 //! The same `collectives::ring` schedule the thread runtime executes over
 //! mpsc channels runs here over sockets — one implementation of the
 //! paper's bandwidth-optimal P-Reduce, two transports.
+//!
+//! # Speed telemetry and dynamic stragglers
+//!
+//! Each worker timestamps its compute phase, folds the duration into an
+//! EWMA ([`crate::gg::SPEED_ALPHA`]), and piggybacks it on every `Sync`
+//! RPC as a [`crate::rpc::SpeedReport`]; the GG's speed table then
+//! drives the slowdown filter from *measured* heterogeneity. A worker's
+//! speed can change mid-run via a slowdown schedule — the launcher's
+//! `--slow-schedule W,F@ITER` becomes a per-rank `F@ITER` list:
+//!
+//! ```
+//! use ripples::net::{parse_worker_schedule, WorkerParams, WorkerReport};
+//!
+//! // worker-side schedule: 3x slow from iteration 40, recovered at 120
+//! let p = WorkerParams {
+//!     slow_schedule: parse_worker_schedule("3.0@40,1.0@120").unwrap(),
+//!     ..WorkerParams::default()
+//! };
+//! assert_eq!(p.slowdown_at(0), 1.0);
+//! assert_eq!(p.slowdown_at(40), 3.0);
+//! assert_eq!(p.slowdown_at(120), 1.0);
+//!
+//! // the REPORT line carries the final measured EWMA back to `launch`
+//! let line = "REPORT rank=1 iters=120 preduces=40 loss_first=1.4 \
+//!             loss_last=0.3 secs=4.0 ewma=0.024500";
+//! let r = WorkerReport::parse_line(line).unwrap();
+//! assert!((r.ewma_secs - 0.0245).abs() < 1e-9);
+//! ```
 
 pub mod frame;
 pub mod launch;
@@ -25,4 +53,7 @@ pub mod worker;
 pub use frame::Frame;
 pub use launch::{launch_local, LaunchConfig, LaunchReport};
 pub use mesh::{TcpRingTransport, WorkerMesh};
-pub use worker::{run_worker, worker_main, WorkerParams, WorkerReport};
+pub use worker::{
+    format_worker_schedule, parse_worker_schedule, run_worker, worker_main, WorkerParams,
+    WorkerReport,
+};

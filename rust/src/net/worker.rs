@@ -3,8 +3,12 @@
 //! over TCP (see DESIGN.md §Deployment).
 //!
 //! Protocol per iteration (the paper's Fig. 8 worker loop):
-//!  1. one local SGD step (plus the configured heterogeneity sleep);
-//!  2. `Sync` with the Group Generator; a `None` assignment means "skip";
+//!  1. one local SGD step (plus the heterogeneity sleep, whose factor
+//!     may change mid-run via the `--slow-schedule` entries), timed and
+//!     folded into an EWMA step duration;
+//!  2. `Sync` with the Group Generator, piggybacking the EWMA as a
+//!     [`SpeedReport`](crate::rpc::SpeedReport) so the GG's speed table
+//!     tracks *measured* heterogeneity; a `None` assignment means "skip";
 //!  3. `WaitArmed`, then run the ring mean-all-reduce with the group over
 //!     the [`WorkerMesh`];
 //!  4. the ring leader (lowest rank) reports `Complete`; everyone else
@@ -44,6 +48,11 @@ pub struct WorkerParams {
     pub max_iters: u64,
     /// Compute slowdown factor for *this* worker (1.0 = fast).
     pub slowdown: f64,
+    /// Mid-run speed changes: `(factor, start_iter)` — once the local
+    /// iteration count reaches `start_iter`, `factor` replaces the
+    /// static `slowdown` (the entry with the largest active start wins).
+    /// Built from `--slow-schedule` by the launcher.
+    pub slow_schedule: Vec<(f64, u64)>,
     /// Emulated per-iteration device time; the tiny MLP alone is too fast
     /// for a slowdown to be observable.
     pub compute_floor: Duration,
@@ -68,6 +77,7 @@ impl Default for WorkerParams {
             secs: 5.0,
             max_iters: u64::MAX,
             slowdown: 1.0,
+            slow_schedule: Vec::new(),
             compute_floor: Duration::from_millis(5),
             seed: 42,
             lr: 0.1,
@@ -78,6 +88,44 @@ impl Default for WorkerParams {
             eval_size: 256,
         }
     }
+}
+
+impl WorkerParams {
+    /// Effective slowdown factor at local iteration `iter` (shared
+    /// schedule semantics: `cluster::scheduled_factor_at`).
+    pub fn slowdown_at(&self, iter: u64) -> f64 {
+        crate::cluster::scheduled_factor_at(
+            self.slow_schedule.iter().copied(),
+            self.slowdown,
+            iter,
+        )
+    }
+}
+
+/// Parse a worker-local `F@ITER[,F@ITER...]` slowdown schedule (the
+/// per-rank form the launcher derives from `--slow-schedule W,F@ITER`).
+pub fn parse_worker_schedule(s: &str) -> Result<Vec<(f64, u64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let part = part.trim();
+        let (f, iter) = part
+            .split_once('@')
+            .with_context(|| format!("bad schedule entry {part:?}: expected F@ITER"))?;
+        out.push((
+            f.trim().parse().with_context(|| format!("bad factor in {part:?}"))?,
+            iter.trim().parse().with_context(|| format!("bad iteration in {part:?}"))?,
+        ));
+    }
+    Ok(out)
+}
+
+/// Render a worker-local schedule back into the `F@ITER[,...]` flag form.
+pub fn format_worker_schedule(schedule: &[(f64, u64)]) -> String {
+    schedule
+        .iter()
+        .map(|(f, i)| format!("{f}@{i}"))
+        .collect::<Vec<_>>()
+        .join(",")
 }
 
 /// What a worker measured over its run.
@@ -91,14 +139,24 @@ pub struct WorkerReport {
     pub loss_first: f64,
     pub loss_last: f64,
     pub secs: f64,
+    /// Final EWMA step duration, the same value piggybacked to the GG
+    /// (0.0 when the worker completed no timed iteration).
+    pub ewma_secs: f64,
 }
 
 impl WorkerReport {
     /// One-line stdout encoding consumed by `launch` (`REPORT k=v ...`).
     pub fn to_line(&self) -> String {
         format!(
-            "REPORT rank={} iters={} preduces={} loss_first={:.6} loss_last={:.6} secs={:.3}",
-            self.rank, self.iters, self.preduces, self.loss_first, self.loss_last, self.secs
+            "REPORT rank={} iters={} preduces={} loss_first={:.6} loss_last={:.6} \
+             secs={:.3} ewma={:.6}",
+            self.rank,
+            self.iters,
+            self.preduces,
+            self.loss_first,
+            self.loss_last,
+            self.secs,
+            self.ewma_secs
         )
     }
 
@@ -109,6 +167,7 @@ impl WorkerReport {
         let mut loss_first = None;
         let mut loss_last = None;
         let mut secs = None;
+        let mut ewma_secs = 0.0; // optional: absent in pre-telemetry lines
         for kv in line.trim().strip_prefix("REPORT ").unwrap_or("").split_whitespace() {
             let (k, v) = kv.split_once('=').with_context(|| format!("bad field {kv:?}"))?;
             match k {
@@ -118,12 +177,21 @@ impl WorkerReport {
                 "loss_first" => loss_first = Some(v.parse()?),
                 "loss_last" => loss_last = Some(v.parse()?),
                 "secs" => secs = Some(v.parse()?),
+                "ewma" => ewma_secs = v.parse()?,
                 _ => {} // forward-compatible: ignore unknown fields
             }
         }
         match (rank, iters, preduces, loss_first, loss_last, secs) {
             (Some(rank), Some(iters), Some(preduces), Some(lf), Some(ll), Some(secs)) => {
-                Ok(Self { rank, iters, preduces, loss_first: lf, loss_last: ll, secs })
+                Ok(Self {
+                    rank,
+                    iters,
+                    preduces,
+                    loss_first: lf,
+                    loss_last: ll,
+                    secs,
+                    ewma_secs,
+                })
             }
             _ => bail!("incomplete report line: {line:?}"),
         }
@@ -154,9 +222,14 @@ pub fn run_worker(
 
     let mut preduces = 0u64;
     let mut iters = 0u64;
+    // Measured step-duration EWMA, piggybacked on every Sync so the GG's
+    // speed table sees this worker's *actual* speed (including scheduled
+    // mid-run slowdowns) rather than any configured factor.
+    let mut ewma_secs = 0.0f64;
     let start = Instant::now();
     while start.elapsed().as_secs_f64() < p.secs && iters < p.max_iters {
-        // ---- compute phase
+        // ---- compute phase (timestamped)
+        let step_start = Instant::now();
         let tag = p.seed
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
             .wrapping_add(((p.rank as u64) << 32) | iters);
@@ -168,12 +241,15 @@ pub fn run_worker(
             &class_index,
         );
         sgd_step(&spec, &mut flat, &x, &y, p.lr, &mut scratch);
+        let factor = p.slowdown_at(iters);
         iters += 1;
         if p.compute_floor > Duration::ZERO {
-            std::thread::sleep(p.compute_floor.mul_f64(p.slowdown));
+            std::thread::sleep(p.compute_floor.mul_f64(factor));
         }
-        // ---- sync phase
-        let (assigned, _newly_armed) = gg.sync(p.rank)?;
+        let step_secs = step_start.elapsed().as_secs_f64();
+        ewma_secs = crate::gg::ewma_step(ewma_secs, step_secs, crate::gg::SPEED_ALPHA);
+        // ---- sync phase (EWMA rides along as the SpeedReport)
+        let (assigned, _newly_armed) = gg.sync(p.rank, ewma_secs)?;
         if let Some((gid, members)) = assigned {
             execute_group(p, mesh, gg, gid, &members, &mut flat)?;
             preduces += 1;
@@ -184,7 +260,7 @@ pub fn run_worker(
     // ---- termination protocol: retire, then drain the Group Buffer.
     gg.retire(p.rank)?;
     loop {
-        let (assigned, _) = gg.sync(p.rank)?;
+        let (assigned, _) = gg.sync(p.rank, ewma_secs)?;
         match assigned {
             None => break,
             Some((gid, members)) => {
@@ -202,6 +278,7 @@ pub fn run_worker(
         loss_first,
         loss_last,
         secs: timed,
+        ewma_secs,
     })
 }
 
@@ -292,6 +369,7 @@ mod tests {
             loss_first: 1.386294,
             loss_last: 0.25,
             secs: 4.002,
+            ewma_secs: 0.024500,
         };
         let parsed = WorkerReport::parse_line(&r.to_line()).unwrap();
         assert_eq!(parsed, r);
@@ -308,5 +386,42 @@ mod tests {
         let line = "REPORT rank=0 iters=1 preduces=0 loss_first=1.0 \
                     loss_last=0.5 secs=1.0 extra=9";
         assert_eq!(WorkerReport::parse_line(line).unwrap().iters, 1);
+    }
+
+    #[test]
+    fn report_parse_tolerates_missing_ewma() {
+        // pre-telemetry line shape: ewma defaults to 0.0
+        let line = "REPORT rank=0 iters=1 preduces=0 loss_first=1.0 \
+                    loss_last=0.5 secs=1.0";
+        assert_eq!(WorkerReport::parse_line(line).unwrap().ewma_secs, 0.0);
+    }
+
+    #[test]
+    fn slowdown_schedule_applies_latest_active_entry() {
+        let p = WorkerParams {
+            slowdown: 1.0,
+            slow_schedule: vec![(3.0, 40), (1.0, 120)],
+            ..WorkerParams::default()
+        };
+        assert_eq!(p.slowdown_at(0), 1.0);
+        assert_eq!(p.slowdown_at(39), 1.0);
+        assert_eq!(p.slowdown_at(40), 3.0); // straggler appears
+        assert_eq!(p.slowdown_at(119), 3.0);
+        assert_eq!(p.slowdown_at(120), 1.0); // recovery
+    }
+
+    #[test]
+    fn worker_schedule_flag_roundtrip() {
+        let sched = parse_worker_schedule("3.0@40,1.5@120").unwrap();
+        assert_eq!(sched, vec![(3.0, 40), (1.5, 120)]);
+        assert_eq!(format_worker_schedule(&sched), "3@40,1.5@120");
+        assert_eq!(
+            parse_worker_schedule(&format_worker_schedule(&sched)).unwrap(),
+            sched
+        );
+        assert_eq!(parse_worker_schedule("").unwrap(), vec![]);
+        assert!(parse_worker_schedule("3.0").is_err());
+        assert!(parse_worker_schedule("x@3").is_err());
+        assert!(parse_worker_schedule("3.0@x").is_err());
     }
 }

@@ -26,11 +26,29 @@ use crate::gg::{GgConfig, Group, GroupGenerator, GroupId};
 use crate::util::rng::Pcg32;
 use wire::{Reader, Writer};
 
+/// Piggybacked speed telemetry: the worker's own EWMA of its local SGD
+/// step duration (compute phase only, sync wait excluded). Rides on
+/// every `Sync`, so the GG's [`crate::gg::SpeedTable`] tracks *measured*
+/// heterogeneity with zero extra round trips. `0.0` = no measurement
+/// yet (first iteration); the server ignores it.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SpeedReport {
+    /// EWMA seconds per local SGD step.
+    pub ewma_step_secs: f64,
+}
+
+impl SpeedReport {
+    pub fn new(ewma_step_secs: f64) -> Self {
+        Self { ewma_step_secs }
+    }
+}
+
 /// Client -> server messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// Worker `w` reached its sync point.
-    Sync { worker: u32 },
+    /// Worker `w` reached its sync point; `speed` carries its measured
+    /// step-duration EWMA (the slowdown filter's dynamic input).
+    Sync { worker: u32, speed: SpeedReport },
     /// Group `id` finished its P-Reduce.
     Complete { id: GroupId },
     /// Fetch counters.
@@ -50,12 +68,41 @@ pub enum Request {
     Retire { worker: u32 },
 }
 
+/// GG counters plus the measured per-worker speed table, returned by
+/// `Request::Stats` (what `ripples launch` renders and the e2e suite
+/// asserts filter behaviour from).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StatsReport {
+    pub requests: u64,
+    pub conflicts: u64,
+    pub groups_created: u64,
+    pub buffer_hits: u64,
+    /// Per-worker measured EWMA step seconds (0.0 = nothing reported).
+    pub speeds: Vec<f64>,
+    /// Per-worker drafts into groups created by *other* initiators.
+    pub drafts: Vec<u64>,
+    /// `requests` value at each worker's most recent such draft (0 =
+    /// never): how long ago the filter last drafted the worker.
+    pub last_drafted: Vec<u64>,
+}
+
+impl StatsReport {
+    /// Measured slowdown factor of `w` vs the fastest measured worker
+    /// (None when either side has no measurement). Delegates to
+    /// [`crate::metrics::relative_speeds`] — one definition of
+    /// "relative speed" for the e2e assertions and the fig harnesses.
+    pub fn relative_speed(&self, w: usize) -> Option<f64> {
+        let rel = *crate::metrics::relative_speeds(&self.speeds).get(w)?;
+        (rel > 0.0).then_some(rel)
+    }
+}
+
 /// Server -> client messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Assigned { id: GroupId, members: Vec<u32>, armed: Vec<(GroupId, Vec<u32>)> },
     Armed { groups: Vec<(GroupId, Vec<u32>)> },
-    Stats { requests: u64, conflicts: u64, groups_created: u64, buffer_hits: u64 },
+    Stats(StatsReport),
     Ok,
     Err { msg: String },
 }
@@ -64,9 +111,10 @@ impl Request {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
-            Request::Sync { worker } => {
+            Request::Sync { worker, speed } => {
                 w.u8(0);
                 w.u32(*worker);
+                w.u64(speed.ewma_step_secs.to_bits());
             }
             Request::Complete { id } => {
                 w.u8(1);
@@ -94,7 +142,10 @@ impl Request {
         let mut r = Reader::new(buf);
         let tag = r.u8()?;
         let req = match tag {
-            0 => Request::Sync { worker: r.u32()? },
+            0 => Request::Sync {
+                worker: r.u32()?,
+                speed: SpeedReport::new(f64::from_bits(r.u64()?)),
+            },
             1 => Request::Complete { id: r.u64()? },
             2 => Request::Stats,
             3 => Request::Shutdown,
@@ -157,12 +208,22 @@ impl Response {
                 w.u8(1);
                 encode_groups(&mut w, groups);
             }
-            Response::Stats { requests, conflicts, groups_created, buffer_hits } => {
+            Response::Stats(s) => {
                 w.u8(2);
-                w.u64(*requests);
-                w.u64(*conflicts);
-                w.u64(*groups_created);
-                w.u64(*buffer_hits);
+                w.u64(s.requests);
+                w.u64(s.conflicts);
+                w.u64(s.groups_created);
+                w.u64(s.buffer_hits);
+                debug_assert!(
+                    s.speeds.len() == s.drafts.len()
+                        && s.drafts.len() == s.last_drafted.len()
+                );
+                w.u32(s.speeds.len() as u32);
+                for i in 0..s.speeds.len() {
+                    w.u64(s.speeds[i].to_bits());
+                    w.u64(s.drafts[i]);
+                    w.u64(s.last_drafted[i]);
+                }
             }
             Response::Ok => w.u8(3),
             Response::Err { msg } => {
@@ -187,12 +248,33 @@ impl Response {
                 Response::Assigned { id, members, armed: decode_groups(&mut r)? }
             }
             1 => Response::Armed { groups: decode_groups(&mut r)? },
-            2 => Response::Stats {
-                requests: r.u64()?,
-                conflicts: r.u64()?,
-                groups_created: r.u64()?,
-                buffer_hits: r.u64()?,
-            },
+            2 => {
+                let requests = r.u64()?;
+                let conflicts = r.u64()?;
+                let groups_created = r.u64()?;
+                let buffer_hits = r.u64()?;
+                let n = r.u32()? as usize;
+                if n > 1 << 16 {
+                    bail!("unreasonable worker count {n}");
+                }
+                let mut speeds = Vec::with_capacity(n);
+                let mut drafts = Vec::with_capacity(n);
+                let mut last_drafted = Vec::with_capacity(n);
+                for _ in 0..n {
+                    speeds.push(f64::from_bits(r.u64()?));
+                    drafts.push(r.u64()?);
+                    last_drafted.push(r.u64()?);
+                }
+                Response::Stats(StatsReport {
+                    requests,
+                    conflicts,
+                    groups_created,
+                    buffer_hits,
+                    speeds,
+                    drafts,
+                    last_drafted,
+                })
+            }
             3 => Response::Ok,
             4 => Response::Err { msg: String::from_utf8_lossy(&r.rest()).into_owned() },
             t => bail!("bad response tag {t}"),
@@ -346,11 +428,14 @@ fn serve_conn(
             let mut guard = state.lock().map_err(|_| anyhow!("poisoned GG"))?;
             let (gg, rng) = &mut *guard;
             match req {
-                Request::Sync { worker } => {
+                Request::Sync { worker, speed } => {
                     let w = worker as usize;
                     if w >= gg.config().n_workers {
                         Response::Err { msg: format!("worker {w} out of range") }
                     } else {
+                        // fold the piggybacked telemetry in *before* the
+                        // request so this very division sees it
+                        gg.report_speed(w, speed.ewma_step_secs);
                         let (id, armed) = gg.request(w, rng);
                         // id 0 with no members encodes "skip this sync"
                         // (GroupIds start at 1)
@@ -373,12 +458,15 @@ fn serve_conn(
                         Response::Armed { groups: group_pairs(gg.complete(id)) }
                     }
                 }
-                Request::Stats => Response::Stats {
+                Request::Stats => Response::Stats(StatsReport {
                     requests: gg.stats.requests,
                     conflicts: gg.stats.conflicts,
                     groups_created: gg.stats.groups_created,
                     buffer_hits: gg.stats.buffer_hits,
-                },
+                    speeds: gg.speed_table().snapshot(),
+                    drafts: gg.drafts().to_vec(),
+                    last_drafted: gg.last_drafted().to_vec(),
+                }),
                 Request::Shutdown => {
                     stop.store(true, Ordering::Relaxed);
                     Response::Ok
@@ -438,12 +526,18 @@ impl GgClient {
 
     /// Worker sync request; returns `(assigned, newly_armed)`. `assigned`
     /// is None (wire id 0) when the GG says "skip this sync step".
+    /// `ewma_step_secs` piggybacks the worker's measured step-duration
+    /// EWMA (0.0 = no measurement yet).
     #[allow(clippy::type_complexity)]
     pub fn sync(
         &mut self,
         worker: usize,
+        ewma_step_secs: f64,
     ) -> Result<(Option<(GroupId, Vec<usize>)>, Vec<(GroupId, Vec<usize>)>)> {
-        match self.call(&Request::Sync { worker: worker as u32 })? {
+        match self.call(&Request::Sync {
+            worker: worker as u32,
+            speed: SpeedReport::new(ewma_step_secs),
+        })? {
             Response::Assigned { id, members, armed } => {
                 let assigned = (id != 0).then(|| {
                     (id, members.into_iter().map(|m| m as usize).collect::<Vec<_>>())
@@ -472,11 +566,9 @@ impl GgClient {
         }
     }
 
-    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64)> {
+    pub fn stats(&mut self) -> Result<StatsReport> {
         match self.call(&Request::Stats)? {
-            Response::Stats { requests, conflicts, groups_created, buffer_hits } => {
-                Ok((requests, conflicts, groups_created, buffer_hits))
-            }
+            Response::Stats(report) => Ok(report),
             other => bail!("unexpected response {other:?}"),
         }
     }
@@ -523,7 +615,8 @@ mod tests {
     #[test]
     fn request_codec_roundtrip() {
         for req in [
-            Request::Sync { worker: 7 },
+            Request::Sync { worker: 7, speed: SpeedReport::new(0.0123) },
+            Request::Sync { worker: 0, speed: SpeedReport::default() },
             Request::Complete { id: 123456789 },
             Request::Stats,
             Request::Shutdown,
@@ -544,12 +637,34 @@ mod tests {
                 armed: vec![(9, vec![0, 4, 5]), (10, vec![1, 2])],
             },
             Response::Armed { groups: vec![] },
-            Response::Stats { requests: 1, conflicts: 2, groups_created: 3, buffer_hits: 4 },
+            Response::Stats(StatsReport {
+                requests: 1,
+                conflicts: 2,
+                groups_created: 3,
+                buffer_hits: 4,
+                speeds: vec![0.01, 0.0, 0.03],
+                drafts: vec![5, 0, 7],
+                last_drafted: vec![1, 0, 9],
+            }),
+            Response::Stats(StatsReport::default()),
             Response::Ok,
             Response::Err { msg: "boom".into() },
         ] {
             assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
         }
+    }
+
+    #[test]
+    fn stats_relative_speed() {
+        let s = StatsReport {
+            speeds: vec![0.010, 0.0, 0.030],
+            ..StatsReport::default()
+        };
+        assert!((s.relative_speed(0).unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(s.relative_speed(1), None, "unmeasured worker has no factor");
+        assert!((s.relative_speed(2).unwrap() - 3.0).abs() < 1e-12);
+        assert_eq!(s.relative_speed(99), None);
+        assert_eq!(StatsReport::default().relative_speed(0), None);
     }
 
     #[test]
@@ -568,7 +683,7 @@ mod tests {
         )
         .unwrap();
         let mut client = GgClient::connect(server.addr).unwrap();
-        let (assigned, armed) = client.sync(0).unwrap();
+        let (assigned, armed) = client.sync(0, 0.0125).unwrap();
         let (id, members) = assigned.expect("sync must assign a group");
         assert!(members.contains(&0));
         assert!(!armed.is_empty());
@@ -578,9 +693,13 @@ mod tests {
         }
         // completing again must error, not crash
         assert!(client.complete(id).is_err() || true);
-        let (requests, _, created, _) = client.stats().unwrap();
-        assert_eq!(requests, 1);
-        assert!(created >= 1);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.requests, 1);
+        assert!(stats.groups_created >= 1);
+        // the piggybacked speed report landed in the GG speed table
+        assert_eq!(stats.speeds.len(), 8);
+        assert!((stats.speeds[0] - 0.0125).abs() < 1e-12);
+        assert!(stats.speeds[1..].iter().all(|&v| v == 0.0));
         client.shutdown().unwrap();
         server.shutdown();
     }
@@ -590,7 +709,7 @@ mod tests {
         let server =
             GgServer::spawn("127.0.0.1:0", GgConfig::random(4, 4, 2), 7).unwrap();
         let mut c = GgClient::connect(server.addr).unwrap();
-        let (assigned, _armed) = c.sync(0).unwrap();
+        let (assigned, _armed) = c.sync(0, 0.0).unwrap();
         let (gid, _) = assigned.expect("sync must assign a group");
         // the first group has no conflicts: wait_armed returns immediately
         c.wait_armed(gid).unwrap();
@@ -607,7 +726,7 @@ mod tests {
         c.wait_armed(gid).unwrap();
         // a retired worker's sync says "skip this step"
         c.retire(0).unwrap();
-        let (assigned, newly) = c.sync(0).unwrap();
+        let (assigned, newly) = c.sync(0, 0.0).unwrap();
         assert!(assigned.is_none(), "retired worker must not be drafted");
         assert!(newly.is_empty());
         server.shutdown();
@@ -623,10 +742,10 @@ mod tests {
         .unwrap();
         let mut c1 = GgClient::connect(server.addr).unwrap();
         let mut c2 = GgClient::connect(server.addr).unwrap();
-        let _ = c1.sync(0).unwrap();
-        let _ = c2.sync(1).unwrap();
-        let (requests, ..) = c1.stats().unwrap();
-        assert_eq!(requests, 2, "both clients must hit one state machine");
+        let _ = c1.sync(0, 0.0).unwrap();
+        let _ = c2.sync(1, 0.0).unwrap();
+        let stats = c1.stats().unwrap();
+        assert_eq!(stats.requests, 2, "both clients must hit one state machine");
         server.shutdown();
     }
 }

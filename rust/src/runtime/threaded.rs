@@ -345,8 +345,9 @@ fn worker_loop(w: usize, sh: Arc<Shared>) -> WorkerOut {
     let cfg = &sh.cfg;
     let mut rng = Pcg32::new(cfg.seed ^ ((w as u64) << 20) ^ 0xBEEF);
     let mut losses = Vec::new();
-    let slowdown = cfg.hetero.slowdown_of(w);
     for it in 0..cfg.iters as u64 {
+        // per-iteration: scheduled (SlowdownEvent) speed changes apply
+        let slowdown = cfg.hetero.slowdown_at(w, it);
         // ---- compute phase (PJRT train step through the AOT artifacts)
         let t0 = Instant::now();
         let flat = sh.models[w].lock().unwrap().clone();
@@ -368,9 +369,12 @@ fn worker_loop(w: usize, sh: Arc<Shared>) -> WorkerOut {
         } else if cfg.compute_floor > Duration::ZERO {
             thread::sleep(cfg.compute_floor);
         }
+        // measured step duration (compute + heterogeneity sleep): the
+        // GG's speed table input, same as the distributed SpeedReport
+        let step_secs = t0.elapsed().as_secs_f64();
         // ---- sync phase
         match cfg.sched {
-            ThreadSched::SmartGg => sync_gg(w, &sh)?,
+            ThreadSched::SmartGg => sync_gg(w, &sh, step_secs)?,
             ThreadSched::Static => sync_static(w, it, &sh)?,
         }
     }
@@ -390,18 +394,21 @@ fn worker_loop(w: usize, sh: Arc<Shared>) -> WorkerOut {
             if !has_pending {
                 break;
             }
-            sync_gg(w, &sh)?;
+            sync_gg(w, &sh, 0.0)?; // drain: no fresh measurement
         }
     }
     Ok((cfg.iters as u64, losses))
 }
 
 /// One GG-scheduled sync step (smart GG semantics; see module docs).
-fn sync_gg(w: usize, sh: &Shared) -> Result<()> {
+/// `step_secs` is the measured duration of the compute phase just
+/// finished (0.0 = no measurement, e.g. the termination drain).
+fn sync_gg(w: usize, sh: &Shared, step_secs: f64) -> Result<()> {
     let mut coord = sh.coord.lock().unwrap();
     let (gid_opt, newly) = {
         let c = &mut *coord;
         let gg = c.gg.as_mut().expect("GG mode without GG");
+        gg.observe_speed(w, step_secs); // ignores non-positive samples
         let out = gg.request(w, &mut c.rng);
         // materialize runtime entries for any groups we haven't seen
         let known: Vec<GroupId> = c.groups.keys().copied().collect();

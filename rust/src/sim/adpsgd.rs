@@ -54,6 +54,9 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
     let mut q: EventQueue<Ev> = EventQueue::new();
     let mut iters = vec![0u64; n];
     let mut sync_free = vec![0.0f64; n];
+    // scheduled duration of each worker's in-flight compute (slowdown
+    // schedules make the per-iteration cost time-varying)
+    let mut durs = vec![0.0f64; n];
     let mut compute_total = 0.0;
     let mut sync_total = 0.0;
     let mut conflicts = 0u64;
@@ -63,7 +66,8 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
 
     st.record(0.0, 0.0);
     for w in 0..n {
-        q.push(timer.next_compute(w), Ev::ComputeDone(w));
+        durs[w] = timer.next_compute(w);
+        q.push(durs[w], Ev::ComputeDone(w));
     }
 
     while let Some((now, ev)) = q.pop() {
@@ -72,7 +76,7 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
                 st.local_step(w, iters[w]);
                 iters[w] += 1;
                 total_iters += 1;
-                compute_total += timer.base() * exp.cluster.hetero.slowdown_of(w);
+                compute_total += durs[w];
                 if total_iters % eval_stride == 0 {
                     st.record(now, total_iters as f64 / n as f64);
                 }
@@ -116,7 +120,8 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
                     // sync involving them completes.
                     let start = now.max(sync_free[w]);
                     sync_total += start - now;
-                    q.push(start + timer.next_compute(w), Ev::ComputeDone(w));
+                    durs[w] = timer.next_compute(w);
+                    q.push(start + durs[w], Ev::ComputeDone(w));
                 }
             }
             Ev::SyncDone(a, p, requested_at) => {
@@ -125,7 +130,8 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
                 st.preduce(&pair);
                 // active blocked from request to completion (wait + xfer)
                 sync_total += now - requested_at;
-                q.push(now + timer.next_compute(a), Ev::ComputeDone(a));
+                durs[a] = timer.next_compute(a);
+                q.push(now + durs[a], Ev::ComputeDone(a));
             }
         }
     }
@@ -146,6 +152,7 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
         gg_requests: 0,
         comm_cache_hits: 0,
         comm_cache_misses: 0,
+        ..SimResult::default()
     }
 }
 

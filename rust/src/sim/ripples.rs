@@ -131,6 +131,12 @@ fn run_inner(
     let mut q: EventQueue<Ev> = EventQueue::new();
     let mut wstate = vec![WState::Computing; n];
     let mut ready_since = vec![0.0f64; n];
+    // Scheduled duration of each worker's in-flight compute: the virtual
+    // "timestamped SGD step" the GG's speed table observes, mirroring
+    // the SpeedReport piggyback of the distributed runtime.
+    let mut durs = vec![0.0f64; n];
+    let mut onset_request: Option<u64> = None;
+    let hetero = exp.cluster.hetero.clone();
     let mut assigned: Vec<Option<GroupId>> = vec![None; n];
     // armed but not yet started: id -> members
     let mut armed: HashMap<GroupId, Vec<usize>> = HashMap::new();
@@ -146,7 +152,8 @@ fn run_inner(
 
     st.record(0.0, 0.0);
     for w in 0..n {
-        q.push(timer.next_compute(w), Ev::ComputeDone(w));
+        durs[w] = timer.next_compute(w);
+        q.push(durs[w], Ev::ComputeDone(w));
     }
 
     while let Some((now, ev)) = q.pop() {
@@ -156,7 +163,14 @@ fn run_inner(
                 let it = iters[w];
                 iters[w] += 1;
                 total_iters += 1;
-                compute_total += timer.base() * exp.cluster.hetero.slowdown_of(w);
+                compute_total += durs[w];
+                if let Some(gg) = gg.as_mut() {
+                    // measured telemetry: the step the worker just timed
+                    gg.observe_speed(w, durs[w]);
+                    if onset_request.is_none() && hetero.schedule_active(w, it) {
+                        onset_request = Some(gg.stats.requests);
+                    }
+                }
                 if total_iters % eval_stride == 0 {
                     st.record(now, total_iters as f64 / n as f64);
                 }
@@ -167,7 +181,8 @@ fn run_inner(
                     break;
                 }
                 if (it + 1) % section != 0 {
-                    q.push(now + timer.next_compute(w), Ev::ComputeDone(w));
+                    durs[w] = timer.next_compute(w);
+                    q.push(now + durs[w], Ev::ComputeDone(w));
                     continue;
                 }
                 wstate[w] = WState::Ready;
@@ -180,7 +195,8 @@ fn run_inner(
                             // no sync possible (cannot happen in the sim's
                             // never-retiring workload, but stay graceful)
                             wstate[w] = WState::Computing;
-                            q.push(now + timer.next_compute(w), Ev::ComputeDone(w));
+                            durs[w] = timer.next_compute(w);
+                            q.push(now + durs[w], Ev::ComputeDone(w));
                         }
                     }
                     for g in newly {
@@ -195,7 +211,8 @@ fn run_inner(
                     match sched.group_of(w, sidx) {
                         None => {
                             wstate[w] = WState::Computing;
-                            q.push(now + timer.next_compute(w), Ev::ComputeDone(w));
+                            durs[w] = timer.next_compute(w);
+                            q.push(now + durs[w], Ev::ComputeDone(w));
                         }
                         Some(members) => {
                             let key = (sidx, members[0]);
@@ -229,7 +246,8 @@ fn run_inner(
                         assigned[m] = None;
                         wstate[m] = WState::Computing;
                         sync_total += now - ready_since[m];
-                        q.push(now + timer.next_compute(m), Ev::ComputeDone(m));
+                        durs[m] = timer.next_compute(m);
+                        q.push(now + durs[m], Ev::ComputeDone(m));
                     } else {
                         // drafted into someone else's group: stay ready
                         wstate[m] = WState::Ready;
@@ -244,7 +262,8 @@ fn run_inner(
                 for &m in &members {
                     wstate[m] = WState::Computing;
                     sync_total += now - ready_since[m];
-                    q.push(now + timer.next_compute(m), Ev::ComputeDone(m));
+                    durs[m] = timer.next_compute(m);
+                    q.push(now + durs[m], Ev::ComputeDone(m));
                 }
             }
         }
@@ -265,6 +284,12 @@ fn run_inner(
         .as_ref()
         .map(|g| (g.stats.conflicts, g.stats.requests))
         .unwrap_or((0, 0));
+    let (measured_speeds, drafts, last_drafted_request) = gg
+        .as_ref()
+        .map(|g| {
+            (g.speed_table().snapshot(), g.drafts().to_vec(), g.last_drafted().to_vec())
+        })
+        .unwrap_or_default();
     SimResult {
         algo: kind.name().to_string(),
         final_time,
@@ -279,6 +304,10 @@ fn run_inner(
         gg_requests: requests,
         comm_cache_hits: cache.hits,
         comm_cache_misses: cache.misses,
+        measured_speeds,
+        drafts,
+        last_drafted_request,
+        onset_request,
     }
 }
 
@@ -385,6 +414,76 @@ mod tests {
         assert!(
             smart_degrade < static_degrade,
             "smart degraded {smart_degrade}x vs static {static_degrade}x"
+        );
+    }
+
+    #[test]
+    fn dynamic_straggler_measured_and_filtered() {
+        use crate::cluster::SlowdownEvent;
+        let mut p = params(AlgoKind::RipplesSmart);
+        p.exp.train.max_iters = 120;
+        p.exp.cluster.hetero.schedule =
+            vec![SlowdownEvent { worker: 7, factor: 6.0, start_iter: 40 }];
+        let res = run(&p);
+        // the schedule fired and the GG observed it
+        let onset = res.onset_request.expect("schedule never activated");
+        assert!(res.gg_requests > onset);
+        // measured relative speed converged to the true 6x (within 30%)
+        let rel = crate::metrics::relative_speeds(&res.measured_speeds);
+        assert!(
+            (rel[7] - 6.0).abs() < 0.3 * 6.0,
+            "measured {} vs true 6.0 (speeds {:?})",
+            rel[7],
+            res.measured_speeds
+        );
+        for w in 0..7 {
+            assert!(rel[w] < 1.5, "fast worker {w} mis-measured at {}", rel[w]);
+        }
+        // the filter reacted: the straggler was drafted before the onset
+        // but stops being drafted shortly after it
+        assert!(res.drafts[7] > 0, "straggler never drafted pre-onset");
+        assert!(
+            res.gg_requests - res.last_drafted_request[7] > 200,
+            "straggler still drafted near the end: last at {} of {} (onset {})",
+            res.last_drafted_request[7],
+            res.gg_requests,
+            onset
+        );
+    }
+
+    #[test]
+    fn recovered_straggler_readmitted_only_with_measured_filter() {
+        use crate::cluster::SlowdownEvent;
+        // slow from iter 20, recovered from iter 32 (early enough that
+        // the 6x-slowed worker reaches it inside the total-iteration
+        // budget): the counter filter alone can never re-admit (the
+        // progress deficit is frozen), the measured filter re-admits
+        // within ~1/alpha steps
+        let schedule = vec![
+            SlowdownEvent { worker: 7, factor: 6.0, start_iter: 20 },
+            SlowdownEvent { worker: 7, factor: 1.0, start_iter: 32 },
+        ];
+        let mut measured = params(AlgoKind::RipplesSmart);
+        measured.exp.train.max_iters = 200;
+        measured.exp.cluster.hetero.schedule = schedule.clone();
+        let mut counter_only_cfg = GgConfig::smart(16, 4, 3, 8);
+        counter_only_cfg.s_thres = None;
+        let with_measured = run(&measured);
+        let counter_only = super::run_with_gg(&measured, counter_only_cfg);
+        // measured filter: drafted again near the end of the run
+        assert!(
+            with_measured.gg_requests - with_measured.last_drafted_request[7] < 400,
+            "recovered worker not re-admitted: last drafted {} of {}",
+            with_measured.last_drafted_request[7],
+            with_measured.gg_requests
+        );
+        // counter-only filter: exclusion persists long after recovery
+        assert!(
+            counter_only.gg_requests - counter_only.last_drafted_request[7]
+                > with_measured.gg_requests - with_measured.last_drafted_request[7],
+            "counter filter re-admitted as fast as the measured one: {} vs {}",
+            counter_only.last_drafted_request[7],
+            with_measured.last_drafted_request[7]
         );
     }
 

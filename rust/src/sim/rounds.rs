@@ -145,6 +145,7 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
         gg_requests: 0,
         comm_cache_hits: 0,
         comm_cache_misses: 0,
+        ..SimResult::default()
     }
 }
 

@@ -33,6 +33,16 @@ pub struct SimResult {
     pub gg_requests: u64,
     pub comm_cache_hits: u64,
     pub comm_cache_misses: u64,
+    /// Final measured per-worker EWMA step seconds from the GG speed
+    /// table (empty for engines without a GG; 0.0 = never observed).
+    pub measured_speeds: Vec<f64>,
+    /// Per-worker drafts into groups created by *other* initiators.
+    pub drafts: Vec<u64>,
+    /// `gg_requests` value at each worker's most recent such draft.
+    pub last_drafted_request: Vec<u64>,
+    /// `gg_requests` value when the first scheduled slowdown change
+    /// (`cluster::SlowdownEvent`) took effect; None = none fired.
+    pub onset_request: Option<u64>,
 }
 
 impl SimResult {

@@ -7,6 +7,7 @@
 
 use std::path::PathBuf;
 
+use ripples::cluster::SlowdownEvent;
 use ripples::net::{launch_local, LaunchConfig};
 
 fn bin() -> PathBuf {
@@ -34,9 +35,14 @@ fn four_process_cluster_with_straggler() {
     let report = launch_local(&cfg).expect("cluster run");
     assert_eq!(report.workers.len(), 4);
 
-    let (requests, _conflicts, created, _hits) = report.gg_stats;
-    assert!(requests > 0, "workers never reached the GG");
-    assert!(created > 0, "GG never created a group");
+    assert!(report.gg_stats.requests > 0, "workers never reached the GG");
+    assert!(report.gg_stats.groups_created > 0, "GG never created a group");
+    // every worker piggybacked speed telemetry on its Sync RPCs
+    assert!(
+        report.gg_stats.speeds.iter().all(|&v| v > 0.0),
+        "missing speed reports: {:?}",
+        report.gg_stats.speeds
+    );
 
     for w in &report.workers {
         assert!(
@@ -67,6 +73,67 @@ fn four_process_cluster_with_straggler() {
     assert!(
         fast_mean > 1.3 * slow_iters,
         "fast workers gated by the straggler: fast mean {fast_mean:.0} vs slow {slow_iters:.0}"
+    );
+}
+
+/// The dynamic-straggler acceptance scenario: worker 0 becomes 3x slow
+/// *mid-run* via `--slow-schedule` (no configured slowdown reaches the
+/// GG — only the piggybacked measurements). Asserted from each run's
+/// own metrics:
+///  * the GG speed table converges to the true factor within 30%;
+///  * smart mode stops drafting the straggler within a bounded number
+///    of requests (none in the final stretch of the run);
+///  * random mode (filter off) keeps drafting it to the end.
+#[test]
+fn dynamic_straggler_filter_reaction() {
+    let base = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        slow: None,
+        slow_schedule: vec![SlowdownEvent { worker: 0, factor: 3.0, start_iter: 40 }],
+        secs: 4.0,
+        group_size: 2,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 42,
+        ..LaunchConfig::default()
+    };
+    // requests with no straggler draft that count as "stopped drafting";
+    // a 4-worker cluster at an 8ms floor serves hundreds of requests in
+    // the window, so 40 is bounded but far above scheduling noise
+    const BOUND: u64 = 40;
+
+    let smart = launch_local(&LaunchConfig { smart: true, ..base.clone() })
+        .expect("smart cluster run");
+    let s = &smart.gg_stats;
+    let rel = s.relative_speed(0).expect("straggler never reported a speed");
+    assert!(
+        (rel - 3.0).abs() < 0.3 * 3.0,
+        "speed table did not converge: measured {rel:.2} vs true 3.0 (ewma {:?})",
+        s.speeds
+    );
+    for w in 1..4 {
+        let r = s.relative_speed(w).expect("fast worker never reported");
+        assert!(r < 2.0, "fast worker {w} mis-measured at {r:.2}");
+    }
+    assert!(s.drafts[0] > 0, "straggler was never drafted before the onset");
+    assert!(
+        s.requests - s.last_drafted[0] >= BOUND,
+        "smart GG kept drafting the straggler: last draft at request {} of {}",
+        s.last_drafted[0],
+        s.requests
+    );
+
+    let random = launch_local(&LaunchConfig { smart: false, ..base })
+        .expect("random cluster run");
+    let r = &random.gg_stats;
+    assert!(r.drafts[0] > 0, "random GG never drafted the straggler at all");
+    assert!(
+        r.requests - r.last_drafted[0] < BOUND,
+        "random GG (filter off) should keep drafting the straggler: \
+         last draft at request {} of {}",
+        r.last_drafted[0],
+        r.requests
     );
 }
 

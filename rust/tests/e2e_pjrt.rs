@@ -169,7 +169,10 @@ fn threaded_static_schedule_full_stack() {
         sched: ThreadSched::Static,
         lr: 0.05,
         seed: 2,
-        hetero: HeterogeneityProfile { slow_worker: Some((1, 2.0)), jitter: 0.0 },
+        hetero: HeterogeneityProfile {
+            slow_worker: Some((1, 2.0)),
+            ..HeterogeneityProfile::default()
+        },
         workload: Workload::Mlp { batch: 128, in_dim: 32, classes: 10 },
         step_artifact: "mlp_train_step".into(),
         init_artifact: "mlp_init".into(),
@@ -217,7 +220,10 @@ fn threaded_smart_gg_seed_stress() {
             hetero: if seed % 2 == 0 {
                 HeterogeneityProfile::default()
             } else {
-                HeterogeneityProfile { slow_worker: Some((1, 3.0)), jitter: 0.0 }
+                HeterogeneityProfile {
+                    slow_worker: Some((1, 3.0)),
+                    ..HeterogeneityProfile::default()
+                }
             },
             workload: Workload::Mlp { batch: 128, in_dim: 32, classes: 10 },
             step_artifact: "mlp_train_step".into(),

@@ -165,6 +165,46 @@ fn prop_global_division_partitions_are_disjoint() {
     }
 }
 
+/// With measured speeds replacing configured ones, the slowdown filter
+/// excludes *exactly* the workers whose EWMA exceeds the threshold: a
+/// fast initiator's Global Division drafts every idle worker at or
+/// under `s_thres` times the fastest EWMA and nobody above it.
+#[test]
+fn prop_measured_filter_excludes_exactly_over_threshold() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0x5eed);
+        let n = 4 + rng.gen_range(13);
+        let mut cfg = GgConfig::smart(n, 4, 2 + rng.gen_range(3), 1_000_000);
+        cfg.inter_intra = false; // plain GD: the filter is the only exclusion
+        let s_thres = cfg.s_thres.expect("smart preset enables the measured filter");
+        let mut gg = GroupGenerator::new(cfg);
+        // random measured EWMAs between 10ms and 40ms (up to 4x spread)
+        let speeds: Vec<f64> = (0..n).map(|_| 0.010 + 0.030 * rng.gen_f64()).collect();
+        for (w, &s) in speeds.iter().enumerate() {
+            gg.report_speed(w, s);
+        }
+        let reference = speeds.iter().cloned().fold(f64::INFINITY, f64::min);
+        let initiator = (0..n)
+            .min_by(|&a, &b| speeds[a].partial_cmp(&speeds[b]).unwrap())
+            .unwrap();
+        let expected: Vec<usize> = (0..n)
+            .filter(|&x| x == initiator || speeds[x] / reference <= s_thres)
+            .collect();
+        let (_, armed) = gg.request(initiator, &mut rng);
+        let mut drafted: Vec<usize> =
+            armed.iter().flat_map(|g| g.members.iter().copied()).collect();
+        drafted.sort_unstable();
+        if expected.len() >= 2 {
+            assert_eq!(
+                drafted, expected,
+                "seed {seed}: filter drafted the wrong set (speeds {speeds:?})"
+            );
+        } else {
+            assert!(drafted.is_empty(), "seed {seed}: degenerate division must skip");
+        }
+    }
+}
+
 #[test]
 fn prop_static_schedule_conflict_free_and_consistent() {
     let mut rng = Pcg32::new(4242);

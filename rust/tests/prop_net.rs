@@ -126,7 +126,10 @@ fn prop_rpc_request_roundtrip() {
     for seed in 0..SEEDS {
         let mut rng = Pcg32::new(seed ^ 0xC0DE);
         let reqs = [
-            Request::Sync { worker: rng.next_u32() },
+            Request::Sync {
+                worker: rng.next_u32(),
+                speed: ripples::rpc::SpeedReport::new(rng.gen_f64() * 0.1),
+            },
             Request::Complete { id: rng.next_u64() },
             Request::WaitArmed { id: rng.next_u64() },
             Request::WaitDone { id: rng.next_u64() },
@@ -146,6 +149,18 @@ fn prop_rpc_request_roundtrip() {
             members: (0..rng.gen_range(9)).map(|_| rng.next_u32()).collect(),
             armed: vec![(rng.next_u64(), vec![rng.next_u32()])],
         };
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp, "seed {seed}");
+        // the Stats response carries the per-worker speed table
+        let n = rng.gen_range(6);
+        let resp = Response::Stats(ripples::rpc::StatsReport {
+            requests: rng.next_u64(),
+            conflicts: rng.next_u64(),
+            groups_created: rng.next_u64(),
+            buffer_hits: rng.next_u64(),
+            speeds: (0..n).map(|_| rng.gen_f64()).collect(),
+            drafts: (0..n).map(|_| rng.next_u64()).collect(),
+            last_drafted: (0..n).map(|_| rng.next_u64()).collect(),
+        });
         assert_eq!(Response::decode(&resp.encode()).unwrap(), resp, "seed {seed}");
     }
 }
