@@ -5,13 +5,18 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test doc verify artifacts python-test bench bench-json clean
+.PHONY: build test clippy doc verify artifacts python-test bench bench-json clean
 
 build:
 	$(CARGO) build --release
 
 test: build
 	$(CARGO) test -q
+
+# Lint gate: clippy over every target (lib, bin, tests, benches,
+# examples) with warnings denied.
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
 
 # Documentation gate: rustdoc warnings (broken intra-doc links and
 # friends) are errors, and doc examples must pass — keeps references
@@ -20,7 +25,7 @@ doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 	$(CARGO) test --doc -q
 
-verify: build test doc
+verify: build test clippy doc
 
 # Lower the Layer-2/Layer-1 JAX graphs to HLO-text artifacts (needs
 # Python + JAX; content-hashed, so re-running is a no-op when the

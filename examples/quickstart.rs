@@ -10,6 +10,7 @@
 use std::time::Duration;
 
 use ripples::cluster::HeterogeneityProfile;
+use ripples::collectives::OverlapConfig;
 use ripples::runtime::threaded::{
     run_threaded, EngineClient, ThreadSched, ThreadedConfig, Workload,
 };
@@ -33,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         init_artifact: "mlp_init".into(),
         preduce_prefix: "preduce_mlp_g".into(),
         compute_floor: Duration::ZERO,
+        overlap: OverlapConfig::serial(),
     };
     println!(
         "training MLP on {} workers, smart GG, {} iters...",

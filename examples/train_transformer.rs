@@ -17,6 +17,7 @@
 use std::time::Duration;
 
 use ripples::cluster::HeterogeneityProfile;
+use ripples::collectives::OverlapConfig;
 use ripples::runtime::threaded::{
     run_threaded, EngineClient, ThreadSched, ThreadedConfig, Workload,
 };
@@ -60,6 +61,7 @@ fn main() -> anyhow::Result<()> {
         init_artifact: "tlm_init".into(),
         preduce_prefix: "preduce_tlm_g".into(),
         compute_floor: Duration::ZERO,
+        overlap: OverlapConfig::serial(),
     };
     println!(
         "e2e: transformer LM ({} params/replica), {} workers x {} iters, smart GG",

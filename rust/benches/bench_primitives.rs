@@ -6,12 +6,42 @@
 //!   * lock vector ops and static scheduler lookups
 //!
 //! Run: `cargo bench --bench bench_primitives`
+//!
+//! The ring bench also *asserts* the buffer-recycling property of
+//! `ChannelTransport` (per-edge spare channels): one collective must
+//! allocate only a small constant number of chunk buffers, not one per
+//! schedule step — measured through a counting global allocator.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use ripples::collectives::{preduce_mean_inplace, ring};
 use ripples::gg::{GgConfig, GroupGenerator, LockVector, StaticScheduler};
 use ripples::util::rng::Pcg32;
+
+/// Counts bytes handed out by the allocator (thread stacks are mmap'd
+/// and invisible here, which is what makes the ring assertion sharp).
+struct CountingAlloc;
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 /// Robust timing: median of `reps` runs of `f` (returns seconds).
 fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
@@ -51,17 +81,73 @@ fn bench_preduce_fused() {
 
 fn bench_ring() {
     println!("\n== threaded chunked ring all-reduce ==");
-    println!("{:<10} {:<12} {:>12}", "ranks", "elements", "median ms");
+    println!("{:<10} {:<12} {:>12} {:>14}", "ranks", "elements", "median ms", "alloc MB/op");
     for &p in &[2usize, 4, 8] {
         for &n in &[22_026usize, 434_816] {
+            // buffers allocated outside the measured/counted region
+            let mut bufs: Vec<Vec<f32>> = (0..p).map(|i| rand_buf(i as u64, n)).collect();
+            ring::ring_allreduce_mean(&mut bufs); // warmup
+            let before = ALLOCATED.load(Ordering::Relaxed);
             let t = time_median(7, || {
-                let mut bufs: Vec<Vec<f32>> =
-                    (0..p).map(|i| rand_buf(i as u64, n)).collect();
                 ring::ring_allreduce_mean(&mut bufs);
             });
-            println!("{p:<10} {n:<12} {:>12.3}", t * 1e3);
+            let bytes_per_op =
+                (ALLOCATED.load(Ordering::Relaxed) - before) as f64 / 7.0;
+            println!(
+                "{p:<10} {n:<12} {:>12.3} {:>14.2}",
+                t * 1e3,
+                bytes_per_op / 1e6
+            );
         }
     }
+    assert_transport_recycles();
+}
+
+/// Buffer-recycling regression gate for `ChannelTransport`. Run
+/// single-threaded (both ends of a 2-rank loop driven alternately) so
+/// the measurement is deterministic: after a short warmup the spare
+/// channels supply every send, and the steady state allocates no chunk
+/// buffers at all. The pre-reuse transport cloned the payload on every
+/// send — 2 chunks per exchange, O(steps) — so the O(1) gate below is
+/// unpassable for it regardless of scheduling.
+fn assert_transport_recycles() {
+    use ripples::collectives::ring::{ChannelTransport, ChunkTransport};
+    let n = 100_000usize; // chunk elements per transfer (400 KB)
+    let steps = 64u32;
+    let payload = vec![1.0f32; n];
+    let mut transports = ChannelTransport::ring(2);
+    let (mut b, mut a) = (transports.pop().unwrap(), transports.pop().unwrap());
+    let mut out_a = Vec::new();
+    let mut out_b = Vec::new();
+    let mut exchange = |step: u32, a: &mut ChannelTransport, b: &mut ChannelTransport| {
+        a.send(step, &payload).unwrap();
+        b.recv(step, &mut out_b).unwrap();
+        b.send(step, &payload).unwrap();
+        a.recv(step, &mut out_a).unwrap();
+    };
+    for step in 0..4 {
+        exchange(step, &mut a, &mut b); // warmup seeds the spare pools
+    }
+    let before = ALLOCATED.load(Ordering::Relaxed);
+    for step in 0..steps {
+        exchange(step, &mut a, &mut b);
+    }
+    let bytes = ALLOCATED.load(Ordering::Relaxed) - before;
+    let chunk_bytes = (4 * n) as u64;
+    println!(
+        "transport     : {:>10.1} KB allocated over {steps} steady-state \
+         exchanges ({:.0} KB/chunk)",
+        bytes as f64 / 1e3,
+        chunk_bytes as f64 / 1e3
+    );
+    // generous O(1) budget (channel nodes, stray growth); per-send
+    // cloning would sit at 2 * steps * chunk_bytes = 128 chunks
+    assert!(
+        bytes < 8 * chunk_bytes,
+        "ChannelTransport allocations regressed: {bytes} bytes over {steps} \
+         exchanges (per-send cloning would allocate {})",
+        2 * steps as u64 * chunk_bytes
+    );
 }
 
 fn bench_gg() {

@@ -10,8 +10,15 @@
 //!   channels (thread runtime, differential oracle for the fused path) or
 //!   framed TCP streams between worker processes (`net`, the distributed
 //!   data plane).
+//! * [`pipeline`] — the same ring schedule pipelined over `K` model
+//!   shards with per-shard step tags, plus the bounded-staleness
+//!   reconcile that lets training overlap the transfer
+//!   ([`pipeline::OverlapConfig`]; DESIGN.md §Perf).
 
+pub mod pipeline;
 pub mod ring;
+
+pub use pipeline::OverlapConfig;
 
 /// Block size for the fused mean: 8K floats (32 KiB) keeps the scratch
 /// stripe resident in L1 while each member buffer streams through once.

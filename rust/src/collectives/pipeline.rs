@@ -1,0 +1,296 @@
+//! Pipelined, sharded P-Reduce: compute/communication overlap.
+//!
+//! The serial worker loop is stop-and-wait — the network idles during
+//! compute and the CPU idles during every collective. This module splits
+//! the flat model into `K` shards ([`shard_bounds`]) and runs the ring
+//! schedule *shard by shard* over the same [`ChunkTransport`]
+//! ([`ring_allreduce_sharded`]); each shard gets its own step-tag range,
+//! so framed transports verify per-shard ordering exactly as before.
+//!
+//! Overlap itself is an engine concern (a dedicated comm thread runs the
+//! sharded collective on a snapshot while the training thread keeps
+//! stepping — see `net::worker` and `runtime::threaded`); this module
+//! owns the two pure ingredients every engine shares:
+//!
+//! * the shard partition (`K` contiguous ranges that exactly tile the
+//!   model, ragged sizes included), and
+//! * the bounded-staleness apply ([`reconcile_shard`]): the collective
+//!   averaged a *snapshot* `s` into `avg` while the live model advanced
+//!   from `s` to `x = s + delta`; reconciling to `avg + delta` keeps the
+//!   local progress made during the transfer and applies the group
+//!   average — the non-blocking-update rule of AD-PSGD (Lian et al.,
+//!   1710.06952) and NBSync (He & Dube, 2211.00889), here per shard.
+//!
+//! Staleness is bounded by [`OverlapConfig::max_staleness`]: the number
+//! of extra local SGD steps a worker may take while a collective is in
+//! flight. `max_staleness = 0` disables overlap entirely and (with
+//! `shards = 1`) takes the exact serial code path — bit-for-bit the
+//! pre-overlap behaviour, which the golden tests pin.
+
+use anyhow::Result;
+
+use super::ring::{chunk_bounds, ring_allreduce_via_offset, ChunkTransport};
+
+/// Compute/communication-overlap knobs, shared by the distributed worker
+/// (`--overlap-shards` / `--max-staleness`), the threaded runtime, and
+/// the simulator's virtual-time model (`[overlap]` config section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverlapConfig {
+    /// Number of model shards the collective is pipelined over (K >= 1;
+    /// 1 = the whole model as a single shard, i.e. today's schedule).
+    /// All members of a group must use the same K: shard step tags are
+    /// part of the wire schedule.
+    pub shards: usize,
+    /// Maximum extra local SGD steps a worker may run on stale weights
+    /// while a collective for its model is still in flight. 0 = serial
+    /// (block through the whole collective, the paper's Fig. 8 loop).
+    pub max_staleness: u64,
+}
+
+impl Default for OverlapConfig {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+impl OverlapConfig {
+    /// The stop-and-wait default: one shard, no stale steps.
+    pub fn serial() -> Self {
+        Self { shards: 1, max_staleness: 0 }
+    }
+
+    /// True when no comm thread should be spawned at all: the training
+    /// thread blocks through the (possibly sharded) collective inline.
+    pub fn is_serial(&self) -> bool {
+        self.max_staleness == 0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("overlap.shards must be >= 1".into());
+        }
+        if self.shards > 1024 {
+            return Err(format!("overlap.shards {} is unreasonable (max 1024)", self.shards));
+        }
+        Ok(())
+    }
+}
+
+/// Shard boundaries: shard `s` of `k` covers `bounds.0 .. bounds.1` of an
+/// `n`-element model. Same remainder-spreading rule as the ring schedule's
+/// chunk partition, so the `k` shards exactly tile `0..n` for every
+/// (ragged) size.
+pub fn shard_bounds(n: usize, k: usize, s: usize) -> (usize, usize) {
+    chunk_bounds(n, k, s)
+}
+
+/// Step tags `base..base + 2(p-1)` for shard `s` of a `p`-rank ring: each
+/// shard's schedule owns a disjoint tag range on the shared edge.
+pub fn shard_step_base(p: usize, s: usize) -> u32 {
+    (2 * p.saturating_sub(1) * s) as u32
+}
+
+/// Run rank `r`'s side of the mean-all-reduce pipelined over `k` shards:
+/// `k` back-to-back ring schedules, each over one contiguous shard of
+/// `buf`, with per-shard step-tag ranges. `on_shard(s)` fires after shard
+/// `s` completes — the hook an overlap engine uses to publish finished
+/// shards while later ones are still on the wire. With `k = 1` this is
+/// exactly [`ring_allreduce_via_offset`]`(.., 0)`, frames and arithmetic
+/// identical to the unsharded collective.
+pub fn ring_allreduce_sharded<T, F>(
+    r: usize,
+    p: usize,
+    buf: &mut [f32],
+    k: usize,
+    transport: &mut T,
+    mut on_shard: F,
+) -> Result<()>
+where
+    T: ChunkTransport,
+    F: FnMut(usize, &[f32]),
+{
+    let k = k.max(1);
+    let n = buf.len();
+    for s in 0..k {
+        let (lo, hi) = shard_bounds(n, k, s);
+        ring_allreduce_via_offset(r, p, &mut buf[lo..hi], transport, shard_step_base(p, s))?;
+        on_shard(s, &buf[lo..hi]);
+    }
+    Ok(())
+}
+
+/// Bounded-staleness apply for one finished shard: the collective
+/// averaged snapshot values `snap` into `avg`; meanwhile `live` advanced
+/// by local SGD. Set `live = avg + (live - snap)` element-wise — the
+/// group average plus the local progress made while the shard was in
+/// flight. When `live == snap` (no stale steps ran) the result is
+/// exactly `avg`, so a zero-staleness overlap run degenerates to the
+/// serial semantics.
+///
+/// All three slices are the *same shard range* of their buffers and must
+/// have equal lengths.
+pub fn reconcile_shard(live: &mut [f32], snap: &[f32], avg: &[f32]) {
+    debug_assert_eq!(live.len(), snap.len());
+    debug_assert_eq!(live.len(), avg.len());
+    for ((l, &s), &a) in live.iter_mut().zip(snap.iter()).zip(avg.iter()) {
+        *l = a + (*l - s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ring::{ring_allreduce_via, ChannelTransport};
+    use crate::util::rng::Pcg32;
+    use std::thread;
+
+    fn rand_bufs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::new(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect())
+            .collect()
+    }
+
+    fn naive_mean(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let p = bufs.len();
+        let n = bufs[0].len();
+        (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / p as f32)
+            .collect()
+    }
+
+    /// Run the sharded collective over in-memory channels, one thread per
+    /// rank, recording each rank's shard-completion order.
+    fn sharded_mean(bufs: &mut [Vec<f32>], k: usize) -> Vec<Vec<usize>> {
+        let p = bufs.len();
+        let transports = ChannelTransport::ring(p);
+        thread::scope(|scope| {
+            let handles: Vec<_> = bufs
+                .iter_mut()
+                .enumerate()
+                .zip(transports)
+                .map(|((r, buf), mut t)| {
+                    scope.spawn(move || {
+                        let mut order = Vec::new();
+                        ring_allreduce_sharded(r, p, buf, k, &mut t, |s, _| order.push(s))
+                            .expect("sharded ring");
+                        order
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn shard_bounds_tile_exactly() {
+        for n in [0usize, 1, 5, 16, 101, 1000] {
+            for k in 1..=9 {
+                let mut covered = 0;
+                for s in 0..k {
+                    let (lo, hi) = shard_bounds(n, k, s);
+                    assert_eq!(lo, covered, "n={n} k={k} s={s}");
+                    assert!(hi >= lo);
+                    covered = hi;
+                }
+                assert_eq!(covered, n, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_step_bases_are_disjoint() {
+        for p in 2..=8usize {
+            let steps = 2 * (p - 1) as u32;
+            for s in 0..6usize {
+                assert_eq!(shard_step_base(p, s), steps * s as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_naive_and_completes_in_order() {
+        for (p, n, k) in [(2usize, 64usize, 2usize), (3, 101, 4), (4, 1000, 8), (5, 7, 3)] {
+            let mut bufs = rand_bufs(p, n, (p * 31 + n + k) as u64);
+            let expect = naive_mean(&bufs);
+            let orders = sharded_mean(&mut bufs, k);
+            for (r, buf) in bufs.iter().enumerate() {
+                for i in 0..n {
+                    assert!(
+                        (buf[i] - expect[i]).abs() < 1e-5,
+                        "p={p} n={n} k={k} rank={r} idx={i}"
+                    );
+                }
+            }
+            for order in orders {
+                assert_eq!(order, (0..k).collect::<Vec<_>>(), "shards out of order");
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_bitwise_equals_unsharded() {
+        // K=1 must take the exact serial schedule: same frames, same
+        // arithmetic, bit-identical results (the golden-test guarantee).
+        let p = 4;
+        let n = 501;
+        let mut plain = rand_bufs(p, n, 99);
+        let mut sharded = plain.clone();
+        let transports = ChannelTransport::ring(p);
+        thread::scope(|scope| {
+            for ((r, buf), mut t) in plain.iter_mut().enumerate().zip(transports) {
+                scope.spawn(move || {
+                    ring_allreduce_via(r, p, buf, &mut t).unwrap();
+                });
+            }
+        });
+        sharded_mean(&mut sharded, 1);
+        for r in 0..p {
+            for i in 0..n {
+                assert_eq!(
+                    plain[r][i].to_bits(),
+                    sharded[r][i].to_bits(),
+                    "rank {r} idx {i} diverged bitwise"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reconcile_preserves_local_progress() {
+        let snap = vec![1.0f32, 2.0, 3.0];
+        let avg = vec![0.5f32, 1.5, 2.5]; // group average of the snapshot
+        let mut live = vec![1.1f32, 2.0, 2.9]; // snapshot + local delta
+        reconcile_shard(&mut live, &snap, &avg);
+        // avg + (live - snap): 0.5+0.1, 1.5+0.0, 2.5-0.1
+        assert!((live[0] - 0.6).abs() < 1e-6);
+        assert!((live[1] - 1.5).abs() < 1e-6);
+        assert!((live[2] - 2.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reconcile_zero_staleness_is_exact_copy() {
+        // live == snap (no stale steps): the result must be avg exactly,
+        // bit for bit — the serial-semantics degeneration.
+        let mut rng = Pcg32::new(5);
+        let snap: Vec<f32> = (0..64).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let avg: Vec<f32> = (0..64).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let mut live = snap.clone();
+        reconcile_shard(&mut live, &snap, &avg);
+        for i in 0..64 {
+            assert_eq!(live[i].to_bits(), avg[i].to_bits(), "idx {i}");
+        }
+    }
+
+    #[test]
+    fn overlap_config_validation() {
+        assert!(OverlapConfig::serial().validate().is_ok());
+        assert!(OverlapConfig::serial().is_serial());
+        assert!(OverlapConfig { shards: 4, max_staleness: 2 }.validate().is_ok());
+        assert!(!OverlapConfig { shards: 4, max_staleness: 2 }.is_serial());
+        // K > 1 with zero staleness is still "serial": inline, blocking
+        assert!(OverlapConfig { shards: 4, max_staleness: 0 }.is_serial());
+        assert!(OverlapConfig { shards: 0, max_staleness: 0 }.validate().is_err());
+        assert!(OverlapConfig { shards: 4096, max_staleness: 0 }.validate().is_err());
+    }
+}

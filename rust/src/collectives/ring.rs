@@ -12,9 +12,16 @@
 //! * [`ChannelTransport`] — mpsc channels between OS threads in one
 //!   process; used by the thread runtime (`runtime::threaded`) and as the
 //!   differential oracle for the fused `preduce_mean_inplace` path.
+//!   Chunk buffers are *recycled* over a reverse channel per edge, so the
+//!   steady state allocates nothing — matching the zero-copy TCP write
+//!   path (`net::frame::write_chunk`).
 //! * `net::TcpRingTransport` — framed TCP streams between worker
 //!   *processes*; the distributed data plane behind `ripples launch`
 //!   (see DESIGN.md §Deployment).
+//!
+//! [`ring_allreduce_via_offset`] runs the same schedule with a step-tag
+//! base, which is how `collectives::pipeline` runs K independent
+//! per-shard schedules over one edge without tag collisions.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread;
@@ -31,30 +38,78 @@ pub(crate) fn chunk_bounds(n: usize, p: usize, c: usize) -> (usize, usize) {
 }
 
 /// A rank's pair of directed ring edges: send to successor, receive from
-/// predecessor. `step` indexes the schedule (`0..2(p-1)`), letting framed
-/// transports tag and verify ordering; in-memory transports may ignore it.
+/// predecessor. `step` indexes the schedule (`0..2(p-1)`, plus a shard
+/// offset under `collectives::pipeline`), letting framed transports tag
+/// and verify ordering; in-memory transports may ignore it.
 pub trait ChunkTransport {
     /// Ship `data` to the ring successor.
     fn send(&mut self, step: u32, data: &[f32]) -> Result<()>;
-    /// Receive this step's chunk from the ring predecessor.
-    fn recv(&mut self, step: u32) -> Result<Vec<f32>>;
+    /// Receive this step's chunk from the ring predecessor into `out`
+    /// (replacing its contents). Taking a caller-owned buffer lets the
+    /// schedule reuse one allocation across all `2(p-1)` steps.
+    fn recv(&mut self, step: u32, out: &mut Vec<f32>) -> Result<()>;
 }
 
-/// In-process transport: one mpsc edge in, one out.
+/// In-process transport: one mpsc edge in, one out, plus reverse *spare*
+/// edges that hand consumed chunk buffers back to their producer for
+/// reuse (`send` pops a spare instead of allocating).
 pub struct ChannelTransport {
+    /// Chunks to the ring successor.
     tx: Sender<Vec<f32>>,
+    /// Chunks from the ring predecessor.
     rx: Receiver<Vec<f32>>,
+    /// Consumed buffers handed back to the predecessor.
+    spare_tx: Sender<Vec<f32>>,
+    /// Our own buffers coming back from the successor.
+    spare_rx: Receiver<Vec<f32>>,
+}
+
+impl ChannelTransport {
+    /// Build the four ring edges for `p` ranks: rank `r` sends to
+    /// `(r+1)%p` and receives from `(r-1+p)%p`, with a reverse spare
+    /// channel along each data edge. Returns one transport per rank.
+    pub fn ring(p: usize) -> Vec<ChannelTransport> {
+        let mut data_tx: Vec<Option<Sender<Vec<f32>>>> = (0..p).map(|_| None).collect();
+        let mut data_rx: Vec<Option<Receiver<Vec<f32>>>> = (0..p).map(|_| None).collect();
+        let mut spare_tx: Vec<Option<Sender<Vec<f32>>>> = (0..p).map(|_| None).collect();
+        let mut spare_rx: Vec<Option<Receiver<Vec<f32>>>> = (0..p).map(|_| None).collect();
+        for r in 0..p {
+            let succ = (r + 1) % p;
+            let (dtx, drx) = channel();
+            data_tx[r] = Some(dtx); // rank r's outbound edge
+            data_rx[succ] = Some(drx); // delivered to the successor
+            let (stx, srx) = channel();
+            spare_tx[succ] = Some(stx); // successor returns spent buffers
+            spare_rx[r] = Some(srx); // ...back to rank r
+        }
+        (0..p)
+            .map(|r| ChannelTransport {
+                tx: data_tx[r].take().unwrap(),
+                rx: data_rx[r].take().unwrap(),
+                spare_tx: spare_tx[r].take().unwrap(),
+                spare_rx: spare_rx[r].take().unwrap(),
+            })
+            .collect()
+    }
 }
 
 impl ChunkTransport for ChannelTransport {
     fn send(&mut self, _step: u32, data: &[f32]) -> Result<()> {
-        self.tx
-            .send(data.to_vec())
-            .map_err(|_| anyhow!("ring send: receiver hung up"))
+        // Reuse a buffer the successor already consumed, if one came back.
+        let mut buf = self.spare_rx.try_recv().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(data);
+        self.tx.send(buf).map_err(|_| anyhow!("ring send: receiver hung up"))
     }
 
-    fn recv(&mut self, _step: u32) -> Result<Vec<f32>> {
-        self.rx.recv().map_err(|_| anyhow!("ring recv: sender hung up"))
+    fn recv(&mut self, _step: u32, out: &mut Vec<f32>) -> Result<()> {
+        let incoming = self.rx.recv().map_err(|_| anyhow!("ring recv: sender hung up"))?;
+        // Swap the delivered buffer in and recycle the consumed one back
+        // to the predecessor (ignore a hung-up spare edge: recycling is
+        // best-effort, correctness never depends on it).
+        let spent = std::mem::replace(out, incoming);
+        let _ = self.spare_tx.send(spent);
+        Ok(())
     }
 }
 
@@ -70,18 +125,33 @@ pub fn ring_allreduce_via<T: ChunkTransport>(
     buf: &mut [f32],
     transport: &mut T,
 ) -> Result<()> {
+    ring_allreduce_via_offset(r, p, buf, transport, 0)
+}
+
+/// [`ring_allreduce_via`] with a step-tag base: step tags run
+/// `base_step..base_step + 2(p-1)`. `collectives::pipeline` gives each
+/// shard its own tag range so K per-shard schedules share one framed
+/// edge without collisions; `base_step = 0` is the plain collective.
+pub fn ring_allreduce_via_offset<T: ChunkTransport>(
+    r: usize,
+    p: usize,
+    buf: &mut [f32],
+    transport: &mut T,
+    base_step: u32,
+) -> Result<()> {
     if p <= 1 {
         return Ok(());
     }
     let n = buf.len();
-    let mut step = 0u32;
+    let mut step = base_step;
+    let mut incoming: Vec<f32> = Vec::new(); // reused across all steps
     // --- reduce-scatter: after step s, rank r has accumulated chunk
     //     (r - s) into a partial sum of s+2 contributions.
     for s in 0..p - 1 {
         let send_c = (r + p - s) % p;
         let (lo, hi) = chunk_bounds(n, p, send_c);
         transport.send(step, &buf[lo..hi])?;
-        let incoming = transport.recv(step)?;
+        transport.recv(step, &mut incoming)?;
         let recv_c = (r + p - s - 1) % p;
         let (lo, hi) = chunk_bounds(n, p, recv_c);
         if incoming.len() != hi - lo {
@@ -108,7 +178,7 @@ pub fn ring_allreduce_via<T: ChunkTransport>(
         let send_c = (r + 1 + p - s) % p;
         let (lo, hi) = chunk_bounds(n, p, send_c);
         transport.send(step, &buf[lo..hi])?;
-        let incoming = transport.recv(step)?;
+        transport.recv(step, &mut incoming)?;
         let recv_c = (r + p - s) % p;
         let (lo, hi) = chunk_bounds(n, p, recv_c);
         if incoming.len() != hi - lo {
@@ -135,21 +205,10 @@ pub fn ring_allreduce_mean(bufs: &mut [Vec<f32>]) {
     let n = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == n), "ragged buffers");
 
-    // Build the ring: rank r sends to (r+1)%p, receives from (r-1+p)%p.
-    let mut senders: Vec<Option<Sender<Vec<f32>>>> = (0..p).map(|_| None).collect();
-    let mut receivers: Vec<Option<Receiver<Vec<f32>>>> = (0..p).map(|_| None).collect();
-    for r in 0..p {
-        let (tx, rx) = channel();
-        senders[r] = Some(tx); // rank r's outbound edge
-        receivers[(r + 1) % p] = Some(rx); // delivered to rank r+1
-    }
-
+    let transports = ChannelTransport::ring(p);
     thread::scope(|scope| {
-        for (r, buf) in bufs.iter_mut().enumerate() {
-            let tx = senders[r].take().unwrap();
-            let rx = receivers[r].take().unwrap();
+        for ((r, buf), mut t) in bufs.iter_mut().enumerate().zip(transports) {
             scope.spawn(move || {
-                let mut t = ChannelTransport { tx, rx };
                 ring_allreduce_via(r, p, buf, &mut t).expect("in-process ring");
             });
         }
@@ -265,6 +324,39 @@ mod tests {
         }
     }
 
+    #[test]
+    fn channel_transport_recycles_buffers() {
+        // A pair ring is a closed loop: after the first exchange, every
+        // send must reuse a buffer the peer handed back rather than
+        // allocating. Observable via pointer stability: across many
+        // steps, each side only ever sees the two original allocations.
+        let mut transports = ChannelTransport::ring(2);
+        let (mut b, mut a) = (transports.pop().unwrap(), transports.pop().unwrap());
+        let payload = [1.0f32; 64];
+        let mut seen: Vec<*const f32> = Vec::new();
+        let mut out_a = Vec::new();
+        let mut out_b = Vec::new();
+        for step in 0..32u32 {
+            a.send(step, &payload).unwrap();
+            b.recv(step, &mut out_b).unwrap();
+            b.send(step, &payload).unwrap();
+            a.recv(step, &mut out_a).unwrap();
+            assert_eq!(out_a.len(), 64);
+            assert_eq!(out_b.len(), 64);
+            let ptr = out_a.as_ptr();
+            if !seen.contains(&ptr) {
+                seen.push(ptr);
+            }
+        }
+        // a's received buffers cycle among the few initial allocations
+        // (the first rounds seed the pool; afterwards nothing is new)
+        assert!(
+            seen.len() <= 3,
+            "buffers not recycled: {} distinct allocations over 32 steps",
+            seen.len()
+        );
+    }
+
     /// A transport that injects a short payload mid-schedule.
     struct Lying {
         inner: ChannelTransport,
@@ -274,19 +366,20 @@ mod tests {
         fn send(&mut self, step: u32, data: &[f32]) -> Result<()> {
             self.inner.send(step, data)
         }
-        fn recv(&mut self, step: u32) -> Result<Vec<f32>> {
-            let mut v = self.inner.recv(step)?;
-            v.pop();
-            Ok(v)
+        fn recv(&mut self, step: u32, out: &mut Vec<f32>) -> Result<()> {
+            self.inner.recv(step, out)?;
+            out.pop();
+            Ok(())
         }
     }
 
     #[test]
     fn ring_rejects_wrong_chunk_size() {
-        let (tx, rx) = channel();
         // Self-loop edge with a corrupting receiver: rank 0 of a fake
         // 2-rank ring immediately sees the truncated chunk and errors.
-        let mut t = Lying { inner: ChannelTransport { tx, rx } };
+        let (tx, rx) = channel();
+        let (spare_tx, spare_rx) = channel();
+        let mut t = Lying { inner: ChannelTransport { tx, rx, spare_tx, spare_rx } };
         let mut buf = vec![1.0f32; 10];
         let err = ring_allreduce_via(0, 2, &mut buf, &mut t);
         assert!(err.is_err(), "short chunk must be rejected");

@@ -10,6 +10,7 @@ mod parse;
 pub use parse::{parse_toml_subset, TomlValue};
 
 use crate::cluster::HeterogeneityProfile;
+use crate::collectives::pipeline::OverlapConfig;
 
 /// Which synchronization algorithm runs (paper §2.2, §4, §5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -230,12 +231,16 @@ pub struct Experiment {
     pub cluster: ClusterConfig,
     pub algo: AlgoConfig,
     pub train: TrainConfig,
+    /// Pipelined P-Reduce overlap knobs (`[overlap]` section; the serial
+    /// default reproduces the stop-and-wait sync path bit-for-bit).
+    pub overlap: OverlapConfig,
 }
 
 impl Experiment {
     pub fn validate(&self) -> Result<(), String> {
         self.cluster.validate()?;
         self.algo.validate(self.cluster.n_workers())?;
+        self.overlap.validate()?;
         Ok(())
     }
 
@@ -318,6 +323,10 @@ impl Experiment {
             }
             ("train", "seed") => self.train.seed = v.as_usize().ok_or_else(bad)? as u64,
             ("train", "eval_every") => self.train.eval_every = v.as_usize().ok_or_else(bad)?,
+            ("overlap", "shards") => self.overlap.shards = v.as_usize().ok_or_else(bad)?,
+            ("overlap", "max_staleness") => {
+                self.overlap.max_staleness = v.as_usize().ok_or_else(bad)? as u64
+            }
             _ => return Err(format!("unknown config key {section}.{key}")),
         }
         Ok(())
@@ -393,6 +402,20 @@ mod tests {
     #[test]
     fn config_file_unknown_key_rejected() {
         assert!(Experiment::from_str_cfg("[algo]\nwat = 1\n").is_err());
+    }
+
+    #[test]
+    fn overlap_config_roundtrip_and_validation() {
+        let e = Experiment::from_str_cfg("[overlap]\nshards = 4\nmax_staleness = 2\n")
+            .unwrap();
+        assert_eq!(e.overlap.shards, 4);
+        assert_eq!(e.overlap.max_staleness, 2);
+        assert!(!e.overlap.is_serial());
+        // default = serial (golden-test semantics)
+        assert!(Experiment::default().overlap.is_serial());
+        assert_eq!(Experiment::default().overlap.shards, 1);
+        // zero shards fails validation
+        assert!(Experiment::from_str_cfg("[overlap]\nshards = 0\n").is_err());
     }
 
     #[test]

@@ -130,10 +130,20 @@ impl SpeedTable {
 
     /// Fastest known EWMA (the reference for relative speeds).
     pub fn reference(&self) -> Option<f64> {
+        self.reference_excluding(&[])
+    }
+
+    /// Fastest known EWMA among workers *not* flagged in `skip` (workers
+    /// beyond `skip.len()` count as not skipped). The GG passes its
+    /// retired mask here: a fast worker that left the session must not
+    /// keep suppressing everyone else's relative speed — that would hold
+    /// a recovered straggler excluded for the whole drain.
+    pub fn reference_excluding(&self, skip: &[bool]) -> Option<f64> {
         self.ewma
             .iter()
-            .flatten()
-            .copied()
+            .enumerate()
+            .filter(|(w, _)| !skip.get(*w).copied().unwrap_or(false))
+            .filter_map(|(_, e)| *e)
             .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.min(v))))
     }
 
@@ -318,9 +328,11 @@ impl GroupGenerator {
         &self.speed
     }
 
-    /// Measured slowdown factor of `w` vs the fastest known worker.
+    /// Measured slowdown factor of `w` vs the fastest known *live*
+    /// worker (retired ranks are excluded from the reference — their
+    /// frozen EWMAs would otherwise suppress everyone forever).
     pub fn relative_speed(&self, w: usize) -> Option<f64> {
-        self.speed.relative(w)
+        Some(self.speed.get(w)? / self.speed.reference_excluding(&self.retired)?)
     }
 
     /// Per-worker counts of drafts into groups created by *other*
@@ -415,8 +427,14 @@ impl GroupGenerator {
 
     /// A group's P-Reduce finished: release locks, pop Group Buffers, and
     /// arm pending groups whose members are now free (in FIFO order).
+    ///
+    /// Idempotent: completing an unknown (already-completed) id is a
+    /// no-op returning no newly armed groups — a duplicate or retried
+    /// leader `Complete` RPC must not crash the control plane.
     pub fn complete(&mut self, id: GroupId) -> Vec<Group> {
-        let group = self.groups.remove(&id).expect("completing unknown group");
+        let Some(group) = self.groups.remove(&id) else {
+            return Vec::new();
+        };
         self.locks.release(&group.members);
         if self.cfg.use_group_buffer {
             for &m in &group.members {
@@ -535,8 +553,11 @@ impl GroupGenerator {
     fn global_division(&mut self, w: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
         self.stats.divisions += 1;
         let c_i = self.counters[w];
-        // hoisted: the fastest EWMA is one O(n) scan, not one per candidate
-        let speed_ref = self.speed.reference();
+        // hoisted: the fastest EWMA is one O(n) scan, not one per
+        // candidate — over *live* workers only: a fast retired worker's
+        // frozen EWMA would permanently depress every relative speed and
+        // keep a recovered straggler excluded through the drain
+        let speed_ref = self.speed.reference_excluding(&self.retired);
         let mut idle: Vec<usize> = (0..self.cfg.n_workers)
             .filter(|&x| {
                 if x == w {
@@ -971,6 +992,56 @@ mod tests {
         gg.complete(b);
         assert_eq!(gg.live_groups(), 0);
         assert_eq!(gg.locks.locked_count(), 0);
+    }
+
+    #[test]
+    fn complete_is_idempotent_on_unknown_ids() {
+        // Regression: a duplicate/retried leader Complete used to panic
+        // ("completing unknown group") and take down the control plane.
+        let mut gg = GroupGenerator::new(GgConfig::random(4, 4, 2));
+        assert!(gg.complete(999).is_empty(), "unknown id must be a no-op");
+        let mut armed = Vec::new();
+        let a = gg.create_group(0, vec![0, 1], &mut armed);
+        let b = gg.create_group(1, vec![1, 2], &mut armed); // pends behind a
+        let first = gg.complete(a);
+        assert!(first.iter().any(|g| g.id == b), "completion must arm b");
+        // the retried duplicate: no panic, no lock corruption, nothing new
+        assert!(gg.complete(a).is_empty());
+        assert!(gg.is_armed(b), "duplicate complete must not disturb b");
+        gg.complete(b);
+        assert_eq!(gg.live_groups(), 0);
+        assert_eq!(gg.locks.locked_count(), 0);
+        assert!(gg.complete(b).is_empty(), "re-complete after drain is a no-op");
+    }
+
+    #[test]
+    fn retired_fast_worker_does_not_suppress_reference() {
+        // Regression: SpeedTable::reference took the min over ALL workers
+        // including retired ones, so a fast retired worker kept everyone
+        // else's relative() above s_thres and a recovered straggler
+        // excluded during drain.
+        let mut cfg = GgConfig::smart(4, 4, 2, 1_000_000);
+        cfg.inter_intra = false;
+        let mut gg = GroupGenerator::new(cfg);
+        let mut r = rng();
+        gg.report_speed(0, 0.005); // very fast
+        for w in 1..4 {
+            gg.report_speed(w, 0.012); // 2.4x the fast worker: over 1.5x
+        }
+        // with worker 0 live, the others are all filtered relative to it
+        assert!(gg.relative_speed(1).unwrap() > DEFAULT_S_THRES);
+        gg.retire(0);
+        // the reference must now be the fastest LIVE worker: everyone
+        // measures 1.0x and Global Division drafts all three survivors
+        for w in 1..4 {
+            assert!(
+                (gg.relative_speed(w).unwrap() - 1.0).abs() < 1e-9,
+                "worker {w} still judged against the retired reference"
+            );
+        }
+        let (_, armed) = gg.request(1, &mut r);
+        let drafted: usize = armed.iter().map(|g| g.members.len()).sum();
+        assert_eq!(drafted, 3, "drain division must cover all live workers: {armed:?}");
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub mod sim;
 pub mod util;
 
 pub use cluster::{HeterogeneityProfile, SlowdownEvent};
+pub use collectives::OverlapConfig;
 pub use config::{AlgoConfig, AlgoKind, ClusterConfig, Experiment, TrainConfig};
 pub use gg::{GgConfig, Group, GroupGenerator, SpeedTable, StaticScheduler};
 pub use sim::{SimParams, SimResult};

@@ -51,8 +51,9 @@ ripples — Heterogeneity-Aware Asynchronous Decentralized Training
 USAGE:
   ripples train [--algo NAME] [--config FILE] [--slow W,FACTOR]
                 [--slow-schedule W,F@ITER[;W,F@ITER...]]
+                [--overlap-shards K] [--max-staleness S]
                 [--iters N] [--target LOSS] [--trace FILE.csv]
-  ripples fig <1|2b|15|16|17|18|19|20|dyn|all> [--csv DIR] [--json DIR]
+  ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|all> [--csv DIR] [--json DIR]
   ripples gg-serve [--addr HOST:PORT] [--workers N] [--wpn K]
                    [--mode random|smart] [--group-size G]
   ripples launch [--workers N] [--slow W:FACTOR] [--secs S] [--iters N]
@@ -60,11 +61,13 @@ USAGE:
                  [--group-size G] [--mode random|smart] [--c-thres C]
                  [--wpn K] [--seed S] [--lr LR] [--batch B] [--bias P]
                  [--floor-ms MS] [--model tiny|paper] [--echo true]
+                 [--overlap-shards K] [--max-staleness S]
   ripples worker --rank R --workers N --gg HOST:PORT
                  [--listen HOST:PORT] [--peers a0,a1,...] [--secs S]
                  [--iters N] [--slowdown F] [--slow-schedule F@ITER[,...]]
                  [--seed S] [--lr LR] [--batch B] [--bias P]
                  [--floor-ms MS] [--dataset N] [--model tiny|paper]
+                 [--overlap-shards K] [--max-staleness S]
   ripples artifacts [--dir DIR]
   ripples ablation
 
@@ -78,8 +81,12 @@ P-Reduce groups as chunked ring all-reduces over TCP (DESIGN.md
 runs. `--slow-schedule` makes a straggler appear (or recover) mid-run:
 workers report measured EWMA step durations to the GG, whose speed
 table drives the slowdown filter (`fig dyn` measures the reaction).
-`fig --json DIR` writes each figure as machine-readable
-`DIR/BENCH_<id>.json` (the `make bench-json` perf trajectory).
+`--overlap-shards K` + `--max-staleness S` pipeline every P-Reduce over
+K model shards while workers keep stepping on stale weights (bounded by
+S; 0 = serial stop-and-wait) — `fig overlap` sweeps the hidden vs
+exposed sync cost. `fig --json DIR` writes each figure as
+machine-readable `DIR/BENCH_<id>.json` (the `make bench-json` perf
+trajectory).
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positionals.
@@ -133,6 +140,9 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
         exp.train.loss_target =
             Some(target.parse().map_err(|e| format!("bad target: {e}"))?);
     }
+    exp.overlap.shards = parse_or(&flags, "overlap-shards", exp.overlap.shards)?;
+    exp.overlap.max_staleness =
+        parse_or(&flags, "max-staleness", exp.overlap.max_staleness)?;
     exp.validate()?;
     let mut params = SimParams::vgg16_defaults(exp);
     params.spec = ripples::bench::bench_spec();
@@ -270,6 +280,9 @@ fn cmd_launch(args: &[String]) -> Result<(), String> {
     cfg.data_bias = parse_or(&flags, "bias", cfg.data_bias)?;
     cfg.compute_floor_ms = parse_or(&flags, "floor-ms", cfg.compute_floor_ms)?;
     cfg.echo = parse_or(&flags, "echo", cfg.echo)?;
+    cfg.overlap.shards = parse_or(&flags, "overlap-shards", cfg.overlap.shards)?;
+    cfg.overlap.max_staleness =
+        parse_or(&flags, "max-staleness", cfg.overlap.max_staleness)?;
     match get_flag(&flags, "mode").unwrap_or("smart") {
         "smart" => cfg.smart = true,
         "random" => cfg.smart = false,
@@ -336,6 +349,10 @@ fn cmd_worker(args: &[String]) -> Result<(), String> {
         },
         dataset_size: parse_or(&flags, "dataset", defaults.dataset_size)?,
         eval_size: defaults.eval_size,
+        overlap: ripples::collectives::OverlapConfig {
+            shards: parse_or(&flags, "overlap-shards", defaults.overlap.shards)?,
+            max_staleness: parse_or(&flags, "max-staleness", defaults.overlap.max_staleness)?,
+        },
     };
     let listen = get_flag(&flags, "listen").unwrap_or("127.0.0.1:0");
     worker_main(&p, listen, get_flag(&flags, "peers")).map_err(|e| format!("{e:#}"))?;

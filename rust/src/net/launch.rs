@@ -23,6 +23,7 @@ use std::process::{Child, Command, Stdio};
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::SlowdownEvent;
+use crate::collectives::pipeline::OverlapConfig;
 use crate::gg::GgConfig;
 use crate::metrics::{speed_table, worker_table, WorkerStat};
 use crate::rpc::{GgClient, GgServer, StatsReport};
@@ -63,6 +64,11 @@ pub struct LaunchConfig {
     pub tiny: bool,
     /// Forward worker log lines to the launcher's stdout.
     pub echo: bool,
+    /// Pipelined P-Reduce with compute/communication overlap
+    /// (`--overlap-shards K`, `--max-staleness S`), forwarded to every
+    /// worker — shard step tags are part of the wire schedule, so the
+    /// whole cluster must agree on `K`.
+    pub overlap: OverlapConfig,
 }
 
 impl Default for LaunchConfig {
@@ -85,6 +91,7 @@ impl Default for LaunchConfig {
             compute_floor_ms: 5,
             tiny: true,
             echo: false,
+            overlap: OverlapConfig::serial(),
         }
     }
 }
@@ -159,6 +166,7 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
             bail!("slow-schedule factor {} must be >= 1", ev.factor);
         }
     }
+    cfg.overlap.validate().map_err(|e| anyhow::anyhow!("bad overlap config: {e}"))?;
     // Workers physically rendezvous to execute groups, so the GG must
     // draft only idle workers into fresh groups and every member's own
     // Sync must resolve to the already-scheduled group (Group Buffer) —
@@ -252,6 +260,8 @@ fn run_cluster(
             .args(["--bias", &cfg.data_bias.to_string()])
             .args(["--floor-ms", &cfg.compute_floor_ms.to_string()])
             .args(["--model", if cfg.tiny { "tiny" } else { "paper" }])
+            .args(["--overlap-shards", &cfg.overlap.shards.to_string()])
+            .args(["--max-staleness", &cfg.overlap.max_staleness.to_string()])
             .stdin(Stdio::piped())
             .stdout(Stdio::piped());
         if cfg.max_iters > 0 {

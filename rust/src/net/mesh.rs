@@ -14,7 +14,7 @@
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -30,6 +30,10 @@ struct Inbound {
     conns: Mutex<HashMap<u32, TcpStream>>,
     cv: Condvar,
 }
+
+/// Cap on concurrently pending `Hello` handshakes: far above any real
+/// cluster's rank count, far below a connect flood's thread bill.
+const MAX_PENDING_HANDSHAKES: usize = 128;
 
 /// One worker's view of the cluster data plane.
 pub struct WorkerMesh {
@@ -59,23 +63,45 @@ impl WorkerMesh {
         let stop = Arc::new(AtomicBool::new(false));
         let inb = Arc::clone(&inbound);
         let stop2 = Arc::clone(&stop);
+        let inflight = Arc::new(AtomicUsize::new(0));
         let accept_handle = thread::spawn(move || {
             listener.set_nonblocking(true).ok();
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((mut stream, _)) => {
-                        stream.set_nonblocking(false).ok();
-                        stream.set_nodelay(true).ok();
-                        // bounded wait for the hello preamble
-                        stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
-                        match read_frame(&mut stream) {
-                            Ok(Frame::Hello { rank }) => {
-                                let mut conns = inb.conns.lock().unwrap();
-                                conns.insert(rank, stream);
-                                inb.cv.notify_all();
-                            }
-                            _ => drop(stream), // not a peer; ignore
+                        // Handshake per connection on its own thread: a
+                        // slow or stuck dialer must not head-of-line-block
+                        // every other peer's registration behind its 10 s
+                        // hello timeout (found by the slow-dialer test).
+                        // In-flight handshakes are capped so a connect
+                        // flood cannot spawn unbounded threads — excess
+                        // sockets are dropped (a real peer fails fast
+                        // and surfaces the error instead of hanging).
+                        if inflight.load(Ordering::Relaxed) >= MAX_PENDING_HANDSHAKES {
+                            drop(stream);
+                            continue;
                         }
+                        inflight.fetch_add(1, Ordering::Relaxed);
+                        let inb = Arc::clone(&inb);
+                        let inflight = Arc::clone(&inflight);
+                        let stop = Arc::clone(&stop2);
+                        thread::spawn(move || {
+                            stream.set_nonblocking(false).ok();
+                            stream.set_nodelay(true).ok();
+                            // bounded wait for the hello preamble
+                            stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                            match read_frame(&mut stream) {
+                                // a mesh being torn down must not admit
+                                // late registrations
+                                Ok(Frame::Hello { rank }) if !stop.load(Ordering::Relaxed) => {
+                                    let mut conns = inb.conns.lock().unwrap();
+                                    conns.insert(rank, stream);
+                                    inb.cv.notify_all();
+                                }
+                                _ => drop(stream), // not a peer; ignore
+                            }
+                            inflight.fetch_sub(1, Ordering::Relaxed);
+                        });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         thread::sleep(Duration::from_millis(2));
@@ -218,7 +244,7 @@ impl ChunkTransport for TcpRingTransport {
         super::frame::write_chunk(&mut self.send, self.gid, step, data)
     }
 
-    fn recv(&mut self, step: u32) -> Result<Vec<f32>> {
+    fn recv(&mut self, step: u32, out: &mut Vec<f32>) -> Result<()> {
         match read_frame(&mut self.recv)? {
             Frame::Chunk { gid, step: got, data } => {
                 if gid != self.gid || got != step {
@@ -228,7 +254,8 @@ impl ChunkTransport for TcpRingTransport {
                         self.gid
                     );
                 }
-                Ok(data)
+                *out = data;
+                Ok(())
             }
             other => bail!("expected chunk frame, got {other:?}"),
         }
@@ -288,6 +315,52 @@ mod tests {
                     expect[i]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn slow_dialer_does_not_block_other_registrations() {
+        // Regression: the accept loop used to run the Hello handshake
+        // inline with a 10 s read timeout, so one connect-then-silent
+        // socket stalled every other peer's registration behind it. With
+        // per-connection handshake threads, a real peer registers (and a
+        // collective completes) well inside a 3 s io_timeout even while
+        // a silent dialer sits on each mesh.
+        let members = [0usize, 1];
+        let mut meshes: Vec<WorkerMesh> = members
+            .iter()
+            .map(|&r| WorkerMesh::bind(r, "127.0.0.1:0").unwrap())
+            .collect();
+        let addrs: Vec<SocketAddr> = meshes.iter().map(|m| m.local_addr()).collect();
+        for m in &mut meshes {
+            m.set_peers(addrs.clone());
+            m.io_timeout = Duration::from_secs(3); // < the 10 s hello timeout
+        }
+        // silent dialers: connect, send nothing, stay open for the test
+        let _silent: Vec<TcpStream> = addrs
+            .iter()
+            .map(|a| TcpStream::connect(a).expect("silent dial"))
+            .collect();
+        // give the accept loops time to pick the silent sockets up first
+        thread::sleep(Duration::from_millis(100));
+        let results: Vec<Vec<f32>> = thread::scope(|scope| {
+            let handles: Vec<_> = meshes
+                .iter()
+                .enumerate()
+                .map(|(r, mesh)| {
+                    let members = &members;
+                    scope.spawn(move || {
+                        let mut buf = vec![r as f32; 16];
+                        let (mut t, pos) = mesh.ring_transport(7, members).unwrap();
+                        ring_allreduce_via(pos, 2, &mut buf, &mut t).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for buf in &results {
+            assert!(buf.iter().all(|&v| (v - 0.5).abs() < 1e-6), "{buf:?}");
         }
     }
 

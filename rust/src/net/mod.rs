@@ -15,7 +15,11 @@
 //!
 //! The same `collectives::ring` schedule the thread runtime executes over
 //! mpsc channels runs here over sockets — one implementation of the
-//! paper's bandwidth-optimal P-Reduce, two transports.
+//! paper's bandwidth-optimal P-Reduce, two transports. With
+//! `--overlap-shards K --max-staleness S` the collective is pipelined
+//! over `K` model shards by a dedicated comm thread while training
+//! continues on bounded-stale weights (`collectives::pipeline`;
+//! DESIGN.md §Perf).
 //!
 //! # Speed telemetry and dynamic stragglers
 //!

@@ -15,18 +15,36 @@
 //!     blocks on `WaitDone` so their next `Sync` cannot re-observe the
 //!     group at the front of their Group Buffer.
 //!
+//! # Compute/communication overlap
+//!
+//! With `--max-staleness S > 0` step 3 stops being stop-and-wait: a
+//! dedicated *comm thread* (borrowing the GG connection for the
+//! duration) arms the group and runs the ring schedule pipelined over
+//! `--overlap-shards K` shards of a model snapshot, while the training
+//! thread keeps taking up to `S` SGD steps on the live weights. Finished shards stream back and are
+//! reconciled between steps with the bounded-staleness apply
+//! (`collectives::pipeline::reconcile_shard`: group average plus the
+//! local progress made in flight). `S = 0` (the default) is the serial
+//! loop above, bit-for-bit. All members of a cluster must run the same
+//! `K`: shard step tags are part of the wire schedule.
+//!
 //! Termination mirrors the threaded runtime: `Retire`, then keep syncing
 //! until the Group Buffer drains — partners of already-scheduled groups
-//! would otherwise block forever on our membership.
+//! would otherwise block forever on our membership. The drain always
+//! executes serially (no stale steps are allowed after the timed window).
 
 use std::io::BufRead;
 use std::io::Write as _;
 use std::net::SocketAddr;
+use std::sync::mpsc::channel;
+use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::collectives::ring::ring_allreduce_via;
+use crate::collectives::pipeline::{
+    reconcile_shard, ring_allreduce_sharded, shard_bounds, OverlapConfig,
+};
 use crate::model::mlp::{loss_only, sgd_step, MlpScratch, MlpSpec};
 use crate::model::Dataset;
 use crate::rpc::GgClient;
@@ -66,6 +84,9 @@ pub struct WorkerParams {
     pub tiny: bool,
     pub dataset_size: usize,
     pub eval_size: usize,
+    /// Pipelined-collective knobs (`--overlap-shards`/`--max-staleness`);
+    /// the serial default reproduces the pre-overlap loop bit-for-bit.
+    pub overlap: OverlapConfig,
 }
 
 impl Default for WorkerParams {
@@ -86,6 +107,7 @@ impl Default for WorkerParams {
             tiny: true,
             dataset_size: 2048,
             eval_size: 256,
+            overlap: OverlapConfig::serial(),
         }
     }
 }
@@ -99,6 +121,14 @@ impl WorkerParams {
             self.slowdown,
             iter,
         )
+    }
+
+    /// The generous io budget shared by the GG control plane and the
+    /// data plane: a worker can legitimately sit behind a peer with most
+    /// of its timed window left, but a *crashed* peer must surface as an
+    /// error instead of hanging the cluster.
+    pub fn io_timeout(&self) -> Duration {
+        Duration::from_secs_f64((self.secs * 4.0).max(60.0))
     }
 }
 
@@ -132,7 +162,8 @@ pub fn format_worker_schedule(schedule: &[(f64, u64)]) -> String {
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerReport {
     pub rank: usize,
-    /// Iterations completed inside the timed window (drain excluded).
+    /// Iterations completed inside the timed window (drain excluded;
+    /// overlap's stale steps included — they are real SGD steps).
     pub iters: u64,
     /// P-Reduce collectives this worker participated in (drain included).
     pub preduces: u64,
@@ -142,6 +173,13 @@ pub struct WorkerReport {
     /// Final EWMA step duration, the same value piggybacked to the GG
     /// (0.0 when the worker completed no timed iteration).
     pub ewma_secs: f64,
+    /// SGD steps taken on stale weights while a collective was in flight
+    /// (0 in serial mode).
+    pub stale_steps: u64,
+    /// Wall-clock seconds the training thread spent *blocked* on
+    /// synchronization (exposed sync): the whole collective in serial
+    /// mode; only the un-overlapped remainder with staleness enabled.
+    pub sync_blocked_secs: f64,
 }
 
 impl WorkerReport {
@@ -149,14 +187,16 @@ impl WorkerReport {
     pub fn to_line(&self) -> String {
         format!(
             "REPORT rank={} iters={} preduces={} loss_first={:.6} loss_last={:.6} \
-             secs={:.3} ewma={:.6}",
+             secs={:.3} ewma={:.6} stale={} sync_secs={:.6}",
             self.rank,
             self.iters,
             self.preduces,
             self.loss_first,
             self.loss_last,
             self.secs,
-            self.ewma_secs
+            self.ewma_secs,
+            self.stale_steps,
+            self.sync_blocked_secs
         )
     }
 
@@ -168,6 +208,8 @@ impl WorkerReport {
         let mut loss_last = None;
         let mut secs = None;
         let mut ewma_secs = 0.0; // optional: absent in pre-telemetry lines
+        let mut stale_steps = 0; // optional: absent in pre-overlap lines
+        let mut sync_blocked_secs = 0.0; // optional, ditto
         for kv in line.trim().strip_prefix("REPORT ").unwrap_or("").split_whitespace() {
             let (k, v) = kv.split_once('=').with_context(|| format!("bad field {kv:?}"))?;
             match k {
@@ -178,6 +220,8 @@ impl WorkerReport {
                 "loss_last" => loss_last = Some(v.parse()?),
                 "secs" => secs = Some(v.parse()?),
                 "ewma" => ewma_secs = v.parse()?,
+                "stale" => stale_steps = v.parse()?,
+                "sync_secs" => sync_blocked_secs = v.parse()?,
                 _ => {} // forward-compatible: ignore unknown fields
             }
         }
@@ -191,10 +235,54 @@ impl WorkerReport {
                     loss_last: ll,
                     secs,
                     ewma_secs,
+                    stale_steps,
+                    sync_blocked_secs,
                 })
             }
             _ => bail!("incomplete report line: {line:?}"),
         }
+    }
+}
+
+/// The per-step training state shared by the main loop and the overlap
+/// engine's stale steps: one call = one timed SGD step (batch draw,
+/// update, heterogeneity sleep, EWMA fold) on whatever buffer is passed.
+struct SgdDriver<'a> {
+    p: &'a WorkerParams,
+    spec: &'a MlpSpec,
+    ds: &'a Dataset,
+    class_index: &'a [Vec<usize>],
+    scratch: MlpScratch,
+    /// Local iteration count (drives batch tags and the slow schedule).
+    iters: u64,
+    /// Measured step-duration EWMA, piggybacked on every Sync.
+    ewma_secs: f64,
+}
+
+impl SgdDriver<'_> {
+    fn step(&mut self, flat: &mut [f32]) {
+        let step_start = Instant::now();
+        let tag = self
+            .p
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(((self.p.rank as u64) << 32) | self.iters);
+        let (x, y) = self.ds.batch_biased(
+            tag,
+            self.p.batch,
+            self.p.rank % self.spec.classes,
+            self.p.data_bias,
+            self.class_index,
+        );
+        sgd_step(self.spec, flat, &x, &y, self.p.lr, &mut self.scratch);
+        let factor = self.p.slowdown_at(self.iters);
+        self.iters += 1;
+        if self.p.compute_floor > Duration::ZERO {
+            std::thread::sleep(self.p.compute_floor.mul_f64(factor));
+        }
+        let step_secs = step_start.elapsed().as_secs_f64();
+        self.ewma_secs =
+            crate::gg::ewma_step(self.ewma_secs, step_secs, crate::gg::SPEED_ALPHA);
     }
 }
 
@@ -205,6 +293,7 @@ pub fn run_worker(
     mesh: &WorkerMesh,
     gg: &mut GgClient,
 ) -> Result<WorkerReport> {
+    p.overlap.validate().map_err(|e| anyhow!("bad overlap config: {e}"))?;
     let spec = if p.tiny { MlpSpec::tiny() } else { MlpSpec::default_paper() };
     // Shared dataset and identical init across the cluster: seeds must
     // not depend on rank (P-Reduce averages replicas of one model).
@@ -217,50 +306,51 @@ pub fn run_worker(
     let class_index = ds.class_index();
     let (ex, ey) = ds.eval_set(p.eval_size);
     let mut flat = spec.init(p.seed ^ 1);
-    let mut scratch = MlpScratch::new();
     let loss_first = loss_only(&spec, &flat, &ex, &ey);
+    let mut drv = SgdDriver {
+        p,
+        spec: &spec,
+        ds: &ds,
+        class_index: &class_index,
+        scratch: MlpScratch::new(),
+        iters: 0,
+        ewma_secs: 0.0,
+    };
 
+    let overlap_active = !p.overlap.is_serial();
     let mut preduces = 0u64;
-    let mut iters = 0u64;
-    // Measured step-duration EWMA, piggybacked on every Sync so the GG's
-    // speed table sees this worker's *actual* speed (including scheduled
-    // mid-run slowdowns) rather than any configured factor.
-    let mut ewma_secs = 0.0f64;
+    let mut stale_steps = 0u64;
+    let mut sync_blocked = 0.0f64;
     let start = Instant::now();
-    while start.elapsed().as_secs_f64() < p.secs && iters < p.max_iters {
-        // ---- compute phase (timestamped)
-        let step_start = Instant::now();
-        let tag = p.seed
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add(((p.rank as u64) << 32) | iters);
-        let (x, y) = ds.batch_biased(
-            tag,
-            p.batch,
-            p.rank % spec.classes,
-            p.data_bias,
-            &class_index,
-        );
-        sgd_step(&spec, &mut flat, &x, &y, p.lr, &mut scratch);
-        let factor = p.slowdown_at(iters);
-        iters += 1;
-        if p.compute_floor > Duration::ZERO {
-            std::thread::sleep(p.compute_floor.mul_f64(factor));
-        }
-        let step_secs = step_start.elapsed().as_secs_f64();
-        ewma_secs = crate::gg::ewma_step(ewma_secs, step_secs, crate::gg::SPEED_ALPHA);
+    while start.elapsed().as_secs_f64() < p.secs && drv.iters < p.max_iters {
+        // ---- compute phase (timestamped, EWMA-folded)
+        drv.step(&mut flat);
         // ---- sync phase (EWMA rides along as the SpeedReport)
-        let (assigned, _newly_armed) = gg.sync(p.rank, ewma_secs)?;
+        let (assigned, _newly_armed) = gg.sync(p.rank, drv.ewma_secs)?;
         if let Some((gid, members)) = assigned {
-            execute_group(p, mesh, gg, gid, &members, &mut flat)?;
+            if overlap_active {
+                let (stale, blocked) = execute_group_overlapped(
+                    p, mesh, gg, gid, &members, &mut flat, &mut drv, start,
+                )?;
+                stale_steps += stale;
+                sync_blocked += blocked;
+            } else {
+                let t0 = Instant::now();
+                execute_group(p, mesh, gg, gid, &members, &mut flat)?;
+                sync_blocked += t0.elapsed().as_secs_f64();
+            }
             preduces += 1;
         }
     }
     let timed = start.elapsed().as_secs_f64();
+    let iters = drv.iters;
 
     // ---- termination protocol: retire, then drain the Group Buffer.
+    // The drain is always serial: the timed window is over, so there is
+    // no compute left to hide transfers behind.
     gg.retire(p.rank)?;
     loop {
-        let (assigned, _) = gg.sync(p.rank, ewma_secs)?;
+        let (assigned, _) = gg.sync(p.rank, drv.ewma_secs)?;
         match assigned {
             None => break,
             Some((gid, members)) => {
@@ -278,12 +368,16 @@ pub fn run_worker(
         loss_first,
         loss_last,
         secs: timed,
-        ewma_secs,
+        ewma_secs: drv.ewma_secs,
+        stale_steps,
+        sync_blocked_secs: sync_blocked,
     })
 }
 
-/// One GG-assigned P-Reduce: wait for the group to arm, run the ring
-/// collective over TCP, report/observe completion.
+/// One GG-assigned P-Reduce, stop-and-wait: wait for the group to arm,
+/// run the (possibly sharded) ring collective over TCP, report/observe
+/// completion. With the default single shard this is the exact
+/// pre-overlap schedule, frames and arithmetic identical.
 fn execute_group(
     p: &WorkerParams,
     mesh: &WorkerMesh,
@@ -297,14 +391,113 @@ fn execute_group(
     }
     gg.wait_armed(gid)?;
     let (mut transport, pos) = mesh.ring_transport(gid, members)?;
-    ring_allreduce_via(pos, members.len(), flat, &mut transport)
-        .with_context(|| format!("ring collective for group {gid} ({members:?})"))?;
+    ring_allreduce_sharded(
+        pos,
+        members.len(),
+        flat,
+        p.overlap.shards,
+        &mut transport,
+        |_, _| (),
+    )
+    .with_context(|| format!("ring collective for group {gid} ({members:?})"))?;
     if members[0] == p.rank {
         gg.complete(gid)?;
     } else {
         gg.wait_done(gid)?;
     }
     Ok(())
+}
+
+/// One GG-assigned P-Reduce with compute/communication overlap: the comm
+/// thread runs the pipelined ring over a model *snapshot* and streams
+/// finished shards back; the training thread keeps stepping on the live
+/// weights (up to `max_staleness` steps) and reconciles each finished
+/// shard with the bounded-staleness apply. The GG connection is lent to
+/// the comm thread for the duration (wait-armed/complete/wait-done are
+/// its only RPCs in flight — the training thread's next `Sync` happens
+/// strictly after the join). Returns `(stale_steps_taken,
+/// seconds_blocked)`.
+#[allow(clippy::too_many_arguments)]
+fn execute_group_overlapped(
+    p: &WorkerParams,
+    mesh: &WorkerMesh,
+    gg: &mut GgClient,
+    gid: u64,
+    members: &[usize],
+    flat: &mut [f32],
+    drv: &mut SgdDriver<'_>,
+    start: Instant,
+) -> Result<(u64, f64)> {
+    if members.len() < 2 {
+        bail!("GG assigned degenerate group {members:?}");
+    }
+    let k = p.overlap.shards.max(1);
+    let n = flat.len();
+    // Two copies: `snap` is the reconcile reference the training thread
+    // keeps; `work` is the buffer the comm thread averages in place.
+    let snap = flat.to_vec();
+    let mut work = flat.to_vec();
+    let rank = p.rank;
+    let (tx, rx) = channel::<(usize, Vec<f32>)>();
+    thread::scope(|scope| -> Result<(u64, f64)> {
+        let comm = scope.spawn(move || -> Result<()> {
+            gg.wait_armed(gid)?;
+            let (mut transport, pos) = mesh.ring_transport(gid, members)?;
+            ring_allreduce_sharded(pos, members.len(), &mut work, k, &mut transport, |s, avg| {
+                // training thread gone = error already in flight; the
+                // collective itself must still finish for the peers
+                let _ = tx.send((s, avg.to_vec()));
+            })
+            .with_context(|| format!("pipelined ring for group {gid} ({members:?})"))?;
+            if members[0] == rank {
+                gg.complete(gid)?;
+            } else {
+                gg.wait_done(gid)?;
+            }
+            Ok(())
+        });
+
+        let mut applied = 0usize;
+        let mut stale = 0u64;
+        let mut blocked = 0.0f64;
+        while applied < k {
+            // drain whatever shards already landed, without blocking
+            while let Ok((s, avg)) = rx.try_recv() {
+                let (lo, hi) = shard_bounds(n, k, s);
+                reconcile_shard(&mut flat[lo..hi], &snap[lo..hi], &avg);
+                applied += 1;
+            }
+            if applied >= k {
+                break;
+            }
+            let budget_left = drv.iters < p.max_iters
+                && start.elapsed().as_secs_f64() < p.secs;
+            if stale < p.overlap.max_staleness && budget_left {
+                drv.step(flat); // hidden compute on (slightly) stale weights
+                stale += 1;
+            } else {
+                // staleness bound reached: this is the *exposed* sync
+                let t0 = Instant::now();
+                let msg = rx.recv();
+                blocked += t0.elapsed().as_secs_f64();
+                match msg {
+                    Ok((s, avg)) => {
+                        let (lo, hi) = shard_bounds(n, k, s);
+                        reconcile_shard(&mut flat[lo..hi], &snap[lo..hi], &avg);
+                        applied += 1;
+                    }
+                    Err(_) => break, // comm thread died; join() has the error
+                }
+            }
+        }
+        // completion protocol (leader Complete / member WaitDone) is also
+        // exposed wait — the next Sync cannot run before it
+        let t0 = Instant::now();
+        let res = comm.join().map_err(|_| anyhow!("comm thread panicked"))?;
+        blocked += t0.elapsed().as_secs_f64();
+        res?;
+        Ok((stale, blocked))
+    })
 }
 
 /// Entry point for the `ripples worker` subcommand: performs the
@@ -320,7 +513,7 @@ pub fn worker_main(
     // a collective (or a WaitArmed) behind a peer that still has most of
     // its timed window to train through — but a *crashed* peer must
     // surface as an error here instead of hanging the whole cluster.
-    let io_timeout = Duration::from_secs_f64((p.secs * 4.0).max(60.0));
+    let io_timeout = p.io_timeout();
     mesh.io_timeout = io_timeout;
     println!("DATA_ADDR {}", mesh.local_addr());
     std::io::stdout().flush().ok();
@@ -370,6 +563,8 @@ mod tests {
             loss_last: 0.25,
             secs: 4.002,
             ewma_secs: 0.024500,
+            stale_steps: 17,
+            sync_blocked_secs: 0.812500,
         };
         let parsed = WorkerReport::parse_line(&r.to_line()).unwrap();
         assert_eq!(parsed, r);
@@ -389,11 +584,14 @@ mod tests {
     }
 
     #[test]
-    fn report_parse_tolerates_missing_ewma() {
-        // pre-telemetry line shape: ewma defaults to 0.0
+    fn report_parse_tolerates_missing_optional_fields() {
+        // pre-telemetry/pre-overlap line shape: optional fields default
         let line = "REPORT rank=0 iters=1 preduces=0 loss_first=1.0 \
                     loss_last=0.5 secs=1.0";
-        assert_eq!(WorkerReport::parse_line(line).unwrap().ewma_secs, 0.0);
+        let r = WorkerReport::parse_line(line).unwrap();
+        assert_eq!(r.ewma_secs, 0.0);
+        assert_eq!(r.stale_steps, 0);
+        assert_eq!(r.sync_blocked_secs, 0.0);
     }
 
     #[test]
@@ -423,5 +621,12 @@ mod tests {
         assert!(parse_worker_schedule("3.0").is_err());
         assert!(parse_worker_schedule("x@3").is_err());
         assert!(parse_worker_schedule("3.0@x").is_err());
+    }
+
+    #[test]
+    fn default_params_are_serial() {
+        let p = WorkerParams::default();
+        assert!(p.overlap.is_serial());
+        assert_eq!(p.overlap.shards, 1);
     }
 }

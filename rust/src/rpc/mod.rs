@@ -449,7 +449,9 @@ fn serve_conn(
                 }
                 Request::Complete { id } => {
                     if gg.group(id).is_none() {
-                        Response::Err { msg: format!("unknown group {id}") }
+                        // unknown = already completed: a duplicate/retried
+                        // leader Complete is idempotent, not a crash
+                        Response::Armed { groups: Vec::new() }
                     } else if !gg.is_armed(id) {
                         // completing a pending group would corrupt the lock
                         // vector — a client protocol violation
@@ -691,8 +693,10 @@ mod tests {
         for (gid, _) in armed {
             let _ = client.complete(gid).unwrap();
         }
-        // completing again must error, not crash
-        assert!(client.complete(id).is_err() || true);
+        // a duplicate/retried Complete is idempotent: empty armed list,
+        // no error, and — regression — no control-plane crash
+        let dup = client.complete(id).expect("duplicate Complete must succeed");
+        assert!(dup.is_empty(), "duplicate Complete armed {dup:?}");
         let stats = client.stats().unwrap();
         assert_eq!(stats.requests, 1);
         assert!(stats.groups_created >= 1);

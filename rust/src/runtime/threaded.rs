@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::cluster::HeterogeneityProfile;
+use crate::collectives::pipeline::OverlapConfig;
 use crate::gg::{GgConfig, GroupGenerator, GroupId, StaticScheduler};
 use crate::util::rng::Pcg32;
 
@@ -202,6 +203,16 @@ pub struct ThreadedConfig {
     pub preduce_prefix: String,
     /// Extra per-iteration sleep to emulate device time (0 for tests).
     pub compute_floor: Duration,
+    /// Compute/communication overlap: with `max_staleness > 0`, a worker
+    /// waiting at its sync point (group pending, partners mid-compute,
+    /// or collective executing elsewhere) takes up to that many extra
+    /// SGD steps on its own replica instead of blocking — the in-process
+    /// analogue of the distributed comm-thread overlap. Serial default
+    /// keeps the pre-overlap rendezvous bit-for-bit. Note `shards` is
+    /// accepted for config parity but has no effect here: the in-process
+    /// collective is one fused mean with no wire pipeline to shard, so
+    /// only `max_staleness` changes behaviour in this engine.
+    pub overlap: OverlapConfig,
 }
 
 /// Outcome of a threaded run.
@@ -213,6 +224,13 @@ pub struct ThreadedReport {
     pub losses: Vec<(usize, u64, f32)>,
     pub preduce_count: u64,
     pub final_models: Vec<Vec<f32>>,
+    /// Extra SGD steps each worker took on stale weights while waiting
+    /// at a sync point (0 everywhere in serial mode).
+    pub stale_steps: Vec<u64>,
+    /// Wall-clock each worker spent *blocked* in synchronization
+    /// (rendezvous wait + collective, minus time covered by stale
+    /// compute) — the exposed-sync measurement the overlap reduces.
+    pub sync_wait: Vec<Duration>,
 }
 
 #[derive(Default)]
@@ -320,12 +338,16 @@ pub fn run_threaded(cfg: ThreadedConfig, engine: EngineClient) -> Result<Threade
     }
     let mut losses = Vec::new();
     let mut per_worker_iters = vec![0u64; n];
+    let mut stale_steps = vec![0u64; n];
+    let mut sync_wait = vec![Duration::ZERO; n];
     for (w, h) in handles.into_iter().enumerate() {
-        let (iters, mut ls) = h
+        let (iters, mut ls, stale, waited) = h
             .join()
             .map_err(|_| anyhow!("worker {w} panicked"))??;
         per_worker_iters[w] = iters;
         losses.append(&mut ls);
+        stale_steps[w] = stale;
+        sync_wait[w] = waited;
     }
     let wall = start.elapsed();
     let coord = shared.coord.lock().unwrap();
@@ -336,15 +358,26 @@ pub fn run_threaded(cfg: ThreadedConfig, engine: EngineClient) -> Result<Threade
         .iter()
         .map(|m| m.lock().unwrap().clone())
         .collect();
-    Ok(ThreadedReport { wall, per_worker_iters, losses, preduce_count, final_models })
+    Ok(ThreadedReport {
+        wall,
+        per_worker_iters,
+        losses,
+        preduce_count,
+        final_models,
+        stale_steps,
+        sync_wait,
+    })
 }
 
-type WorkerOut = Result<(u64, Vec<(usize, u64, f32)>)>;
+type WorkerOut = Result<(u64, Vec<(usize, u64, f32)>, u64, Duration)>;
 
 fn worker_loop(w: usize, sh: Arc<Shared>) -> WorkerOut {
     let cfg = &sh.cfg;
     let mut rng = Pcg32::new(cfg.seed ^ ((w as u64) << 20) ^ 0xBEEF);
     let mut losses = Vec::new();
+    let mut stale_total = 0u64;
+    let mut stale_time = Duration::ZERO;
+    let mut blocked = Duration::ZERO;
     for it in 0..cfg.iters as u64 {
         // per-iteration: scheduled (SlowdownEvent) speed changes apply
         let slowdown = cfg.hetero.slowdown_at(w, it);
@@ -372,10 +405,28 @@ fn worker_loop(w: usize, sh: Arc<Shared>) -> WorkerOut {
         // measured step duration (compute + heterogeneity sleep): the
         // GG's speed table input, same as the distributed SpeedReport
         let step_secs = t0.elapsed().as_secs_f64();
-        // ---- sync phase
+        // ---- sync phase (wall time minus stale compute = exposed wait)
+        let t_sync = Instant::now();
         match cfg.sched {
-            ThreadSched::SmartGg => sync_gg(w, &sh, step_secs)?,
-            ThreadSched::Static => sync_static(w, it, &sh)?,
+            ThreadSched::SmartGg => {
+                let stale_before = stale_time;
+                sync_gg(
+                    w,
+                    &sh,
+                    step_secs,
+                    Some(StaleBudget {
+                        rng: &mut rng,
+                        iter: it,
+                        taken: &mut stale_total,
+                        time: &mut stale_time,
+                    }),
+                )?;
+                blocked += t_sync.elapsed().saturating_sub(stale_time - stale_before);
+            }
+            ThreadSched::Static => {
+                sync_static(w, it, &sh)?;
+                blocked += t_sync.elapsed();
+            }
         }
     }
     // ---- termination protocol (GG mode): retire so no new group drafts
@@ -394,16 +445,79 @@ fn worker_loop(w: usize, sh: Arc<Shared>) -> WorkerOut {
             if !has_pending {
                 break;
             }
-            sync_gg(w, &sh, 0.0)?; // drain: no fresh measurement
+            // drain: no fresh measurement and no stale steps — the
+            // iteration budget is spent, only membership must resolve
+            sync_gg(w, &sh, 0.0, None)?;
         }
     }
-    Ok((cfg.iters as u64, losses))
+    Ok((cfg.iters as u64, losses, stale_total, blocked))
+}
+
+/// Permission for [`sync_gg`] to take bounded stale SGD steps while the
+/// worker's group waits (the in-process overlap engine; see
+/// [`ThreadedConfig::overlap`]).
+struct StaleBudget<'a> {
+    rng: &'a mut Pcg32,
+    /// Enclosing iteration (drives the heterogeneity schedule).
+    iter: u64,
+    /// Run-total published stale steps (for the report).
+    taken: &'a mut u64,
+    /// Run-total wall time spent in stale compute (subtracted from the
+    /// sync wait: that time was *hidden*, not exposed).
+    time: &'a mut Duration,
+}
+
+/// One bounded-staleness SGD step taken while `gid` has not started its
+/// collective: compute on a clone of this worker's replica, publish only
+/// if the group *still* has not started (publishing after the gather
+/// would clobber the average). Linearized by the coord lock: the
+/// executor flips `executing` under it before gathering. Returns the
+/// wall time spent and whether the step was published.
+fn stale_step(
+    w: usize,
+    gid: GroupId,
+    sh: &Shared,
+    rng: &mut Pcg32,
+    iter: u64,
+) -> Result<(Duration, bool)> {
+    let cfg = &sh.cfg;
+    let slowdown = cfg.hetero.slowdown_at(w, iter);
+    let t0 = Instant::now();
+    let flat = sh.models[w].lock().unwrap().clone();
+    let (new_flat, _loss) = match cfg.workload {
+        Workload::Mlp { batch, in_dim, classes } => {
+            let (x, y) = synth_batch(rng, batch, in_dim, classes);
+            sh.engine.mlp_step(&cfg.step_artifact, flat, x, y, cfg.lr)?
+        }
+        Workload::Tlm { batch, seq, vocab } => {
+            let tokens = synth_tokens(rng, batch, seq, vocab);
+            sh.engine.tlm_step(&cfg.step_artifact, flat, tokens, cfg.lr)?
+        }
+    };
+    let compute = t0.elapsed() + cfg.compute_floor;
+    if slowdown > 1.0 {
+        thread::sleep(compute.mul_f64(slowdown - 1.0));
+    } else if cfg.compute_floor > Duration::ZERO {
+        thread::sleep(cfg.compute_floor);
+    }
+    let coord = sh.coord.lock().unwrap();
+    let safe = coord
+        .groups
+        .get(&gid)
+        .is_some_and(|e| !e.executing && !e.done);
+    if safe {
+        *sh.models[w].lock().unwrap() = new_flat;
+    }
+    drop(coord);
+    Ok((t0.elapsed(), safe))
 }
 
 /// One GG-scheduled sync step (smart GG semantics; see module docs).
 /// `step_secs` is the measured duration of the compute phase just
 /// finished (0.0 = no measurement, e.g. the termination drain).
-fn sync_gg(w: usize, sh: &Shared, step_secs: f64) -> Result<()> {
+/// With `stale` present and `overlap.max_staleness > 0`, waiting turns
+/// into bounded stale compute instead of parking on the condvar.
+fn sync_gg(w: usize, sh: &Shared, step_secs: f64, mut stale: Option<StaleBudget>) -> Result<()> {
     let mut coord = sh.coord.lock().unwrap();
     let (gid_opt, newly) = {
         let c = &mut *coord;
@@ -433,6 +547,7 @@ fn sync_gg(w: usize, sh: &Shared, step_secs: f64) -> Result<()> {
         return Ok(()); // GG says skip (retired / nobody left to pair with)
     };
     coord.groups.get_mut(&gid).expect("assigned unknown group").arrived += 1;
+    let mut stale_this_group = 0u64;
     loop {
         let entry = coord.groups.get(&gid).expect("group vanished");
         if entry.done {
@@ -471,6 +586,22 @@ fn sync_gg(w: usize, sh: &Shared, step_secs: f64) -> Result<()> {
             }
             sh.cv.notify_all();
             // fall through to the done branch next loop iteration
+        } else if let Some(b) = stale
+            .as_mut()
+            .filter(|_| stale_this_group < sh.cfg.overlap.max_staleness)
+        {
+            // overlap: hide the wait behind an extra (stale) SGD step
+            // instead of parking — bounded per collective
+            drop(coord);
+            let (dur, published) = stale_step(w, gid, sh, b.rng, b.iter)?;
+            stale_this_group += 1;
+            if published {
+                *b.taken += 1;
+            }
+            // the wait was hidden behind compute either way — a step
+            // discarded because the gather raced it still wasn't parking
+            *b.time += dur;
+            coord = sh.coord.lock().unwrap();
         } else {
             coord = sh.cv.wait(coord).unwrap();
         }

@@ -25,8 +25,14 @@ pub struct SimResult {
     pub per_worker_iters: Vec<u64>,
     /// Sum over workers of time spent computing.
     pub compute_time: f64,
-    /// Sum over workers of time spent in synchronization (wait + transfer).
+    /// Sum over workers of *exposed* synchronization time (wait +
+    /// transfer the worker actually blocked on). Without overlap this is
+    /// the whole sync cost.
     pub sync_time: f64,
+    /// Sum over workers of sync cost *hidden* behind stale compute by
+    /// the pipelined-overlap model (`Experiment::overlap`); 0.0 when
+    /// overlap is off.
+    pub hidden_sync_time: f64,
     pub time_to_target: Option<f64>,
     pub avg_iters_to_target: Option<f64>,
     pub conflicts: u64,
@@ -54,13 +60,26 @@ impl SimResult {
         self.final_time / (self.total_iters as f64 / self.per_worker_iters.len() as f64)
     }
 
-    /// Fraction of worker-time spent synchronizing (Fig. 2b's metric).
+    /// Fraction of worker-time spent in *exposed* synchronization
+    /// (Fig. 2b's metric; with overlap enabled, hidden sync is excluded
+    /// because the worker was computing through it).
     pub fn sync_fraction(&self) -> f64 {
         let total = self.compute_time + self.sync_time;
         if total == 0.0 {
             0.0
         } else {
             self.sync_time / total
+        }
+    }
+
+    /// Share of the total sync cost the overlap pipeline hid behind
+    /// compute (0.0 when overlap is off or nothing was hidden).
+    pub fn hidden_sync_share(&self) -> f64 {
+        let total = self.sync_time + self.hidden_sync_time;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.hidden_sync_time / total
         }
     }
 }

@@ -8,7 +8,8 @@
 use std::path::PathBuf;
 
 use ripples::cluster::SlowdownEvent;
-use ripples::net::{launch_local, LaunchConfig};
+use ripples::collectives::OverlapConfig;
+use ripples::net::{launch_local, LaunchConfig, LaunchReport};
 
 fn bin() -> PathBuf {
     PathBuf::from(env!("CARGO_BIN_EXE_ripples"))
@@ -134,6 +135,71 @@ fn dynamic_straggler_filter_reaction() {
          last draft at request {} of {}",
         r.last_drafted[0],
         r.requests
+    );
+}
+
+/// The overlap acceptance scenario: the same 4-process cluster run twice,
+/// serially and with the pipelined P-Reduce (K=4 shards, staleness 6).
+/// The overlapped run must (a) actually take stale steps, (b) spend
+/// strictly less wall-clock blocked on synchronization, and (c) reach a
+/// final loss within tolerance of the serial run — overlap buys wait
+/// time, not convergence.
+#[test]
+fn overlap_pipeline_reduces_exposed_sync() {
+    let base = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        // a 3x straggler creates real rendezvous wait for overlap to hide
+        slow: Some((0, 3.0)),
+        secs: 4.0,
+        group_size: 2,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 42,
+        ..LaunchConfig::default()
+    };
+    let serial = launch_local(&base).expect("serial cluster run");
+    let overlapped = launch_local(&LaunchConfig {
+        overlap: OverlapConfig { shards: 4, max_staleness: 6 },
+        ..base.clone()
+    })
+    .expect("overlapped cluster run");
+
+    for w in &serial.workers {
+        assert_eq!(w.stale_steps, 0, "serial mode must not stale-step: {w:?}");
+    }
+    let stale: u64 = overlapped.workers.iter().map(|w| w.stale_steps).sum();
+    assert!(stale > 0, "overlap never hid any wait: {:?}", overlapped.workers);
+
+    let blocked = |r: &LaunchReport| -> f64 {
+        r.workers.iter().map(|w| w.sync_blocked_secs).sum()
+    };
+    assert!(
+        blocked(&overlapped) < blocked(&serial),
+        "exposed sync wait did not drop: overlap {:.3}s vs serial {:.3}s",
+        blocked(&overlapped),
+        blocked(&serial)
+    );
+
+    // equal-loss-trajectory tolerance: the overlapped run must train as
+    // well as the serial one (both from the same init and data)
+    let mean_loss = |r: &LaunchReport| -> f64 {
+        r.workers.iter().map(|w| w.loss_last).sum::<f64>() / r.workers.len() as f64
+    };
+    for w in &overlapped.workers {
+        assert!(
+            w.loss_last < w.loss_first * 0.85,
+            "worker {} loss did not decrease under overlap: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+    }
+    let (ls, lo) = (mean_loss(&serial), mean_loss(&overlapped));
+    assert!(
+        (ls - lo).abs() < 0.5 * ls.max(lo) + 0.05,
+        "final losses diverged: serial {ls:.4} vs overlap {lo:.4}"
     );
 }
 

@@ -8,6 +8,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use ripples::cluster::HeterogeneityProfile;
+use ripples::collectives::OverlapConfig;
 use ripples::runtime::threaded::{
     run_threaded, synth_batch, synth_tokens, EngineClient, ThreadSched, ThreadedConfig,
     Workload,
@@ -140,6 +141,7 @@ fn threaded_smart_gg_full_stack() {
         init_artifact: "mlp_init".into(),
         preduce_prefix: "preduce_mlp_g".into(),
         compute_floor: Duration::ZERO,
+        overlap: OverlapConfig::serial(),
     };
     let report = run_threaded(cfg, engine).unwrap();
     assert_eq!(report.per_worker_iters, vec![8, 8, 8, 8]);
@@ -178,6 +180,7 @@ fn threaded_static_schedule_full_stack() {
         init_artifact: "mlp_init".into(),
         preduce_prefix: "preduce_mlp_g".into(),
         compute_floor: Duration::from_millis(1),
+        overlap: OverlapConfig::serial(),
     };
     let report = run_threaded(cfg, engine).unwrap();
     assert_eq!(report.per_worker_iters, vec![8; 4]);
@@ -230,6 +233,7 @@ fn threaded_smart_gg_seed_stress() {
             init_artifact: "mlp_init".into(),
             preduce_prefix: "preduce_mlp_g".into(),
             compute_floor: Duration::ZERO,
+            overlap: OverlapConfig::serial(),
         };
         let report = run_threaded(cfg, engine.clone()).unwrap();
         assert!(
@@ -238,6 +242,71 @@ fn threaded_smart_gg_seed_stress() {
             report.per_worker_iters
         );
     }
+}
+
+#[test]
+fn threaded_overlap_hides_straggler_wait() {
+    // In-process overlap acceptance: with a 3x straggler, fast workers
+    // waiting at their sync points take bounded stale steps instead of
+    // parking — total exposed sync wait must drop vs the serial run at
+    // an equivalent final model (consensus preserved).
+    let Some(dir) = artifacts() else { return };
+    let (engine, _h) = EngineClient::spawn(dir).unwrap();
+    let base = ThreadedConfig {
+        n_nodes: 2,
+        workers_per_node: 2,
+        iters: 10,
+        group_size: 2,
+        sched: ThreadSched::SmartGg,
+        lr: 0.05,
+        seed: 9,
+        hetero: HeterogeneityProfile {
+            slow_worker: Some((1, 3.0)),
+            ..HeterogeneityProfile::default()
+        },
+        workload: Workload::Mlp { batch: 128, in_dim: 32, classes: 10 },
+        step_artifact: "mlp_train_step".into(),
+        init_artifact: "mlp_init".into(),
+        preduce_prefix: "preduce_mlp_g".into(),
+        compute_floor: Duration::from_millis(4),
+        overlap: OverlapConfig::serial(),
+    };
+    let serial = run_threaded(base.clone(), engine.clone()).unwrap();
+    let mut over_cfg = base;
+    over_cfg.overlap = OverlapConfig { shards: 4, max_staleness: 4 };
+    let overlapped = run_threaded(over_cfg, engine).unwrap();
+
+    assert_eq!(overlapped.per_worker_iters, vec![10; 4]);
+    assert!(overlapped.preduce_count > 0);
+    assert_eq!(serial.stale_steps, vec![0; 4], "serial mode must not stale-step");
+    let stale_total: u64 = overlapped.stale_steps.iter().sum();
+    assert!(stale_total > 0, "overlap never hid any wait: {:?}", overlapped.stale_steps);
+    let wait = |r: &ripples::runtime::threaded::ThreadedReport| -> f64 {
+        r.sync_wait.iter().map(|d| d.as_secs_f64()).sum()
+    };
+    assert!(
+        wait(&overlapped) < wait(&serial),
+        "exposed sync wait did not drop: overlap {:.4}s vs serial {:.4}s",
+        wait(&overlapped),
+        wait(&serial)
+    );
+    // replicas still contract toward consensus under stale averaging
+    let spread = |models: &[Vec<f32>]| -> f32 {
+        let n = models[0].len();
+        let mut worst = 0.0f32;
+        for i in (0..n).step_by(53) {
+            let vals: Vec<f32> = models.iter().map(|m| m[i]).collect();
+            let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            worst = worst.max(hi - lo);
+        }
+        worst
+    };
+    assert!(
+        spread(&overlapped.final_models) < 1.0,
+        "replicas diverged under overlap: {}",
+        spread(&overlapped.final_models)
+    );
 }
 
 #[test]

@@ -8,7 +8,7 @@
 
 use std::collections::HashSet;
 
-use ripples::collectives::{self, ring};
+use ripples::collectives::{self, pipeline, ring};
 use ripples::config::ClusterConfig;
 use ripples::gg::{GgConfig, GroupGenerator, GroupId, StaticScheduler};
 use ripples::util::rng::Pcg32;
@@ -201,6 +201,120 @@ fn prop_measured_filter_excludes_exactly_over_threshold() {
             );
         } else {
             assert!(drafted.is_empty(), "seed {seed}: degenerate division must skip");
+        }
+    }
+}
+
+/// Retired ranks must not anchor the speed reference: with the fastest
+/// worker retired, the filter judges everyone against the fastest *live*
+/// EWMA — exactly the workers within `s_thres` of it are drafted.
+#[test]
+fn prop_retired_ranks_excluded_from_speed_reference() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0xde7e);
+        let n = 4 + rng.gen_range(13);
+        let mut cfg = GgConfig::smart(n, 4, 2 + rng.gen_range(3), 1_000_000);
+        cfg.inter_intra = false;
+        let s_thres = cfg.s_thres.expect("smart preset enables the measured filter");
+        let mut gg = GroupGenerator::new(cfg);
+        let speeds: Vec<f64> = (0..n).map(|_| 0.010 + 0.030 * rng.gen_f64()).collect();
+        for (w, &s) in speeds.iter().enumerate() {
+            gg.report_speed(w, s);
+        }
+        // retire the fastest worker: its frozen EWMA must stop mattering
+        let fastest = (0..n)
+            .min_by(|&a, &b| speeds[a].partial_cmp(&speeds[b]).unwrap())
+            .unwrap();
+        gg.retire(fastest);
+        let live_ref = (0..n)
+            .filter(|&w| w != fastest)
+            .map(|w| speeds[w])
+            .fold(f64::INFINITY, f64::min);
+        let initiator = (0..n)
+            .filter(|&w| w != fastest)
+            .min_by(|&a, &b| speeds[a].partial_cmp(&speeds[b]).unwrap())
+            .unwrap();
+        let expected: Vec<usize> = (0..n)
+            .filter(|&x| {
+                x != fastest && (x == initiator || speeds[x] / live_ref <= s_thres)
+            })
+            .collect();
+        let (_, armed) = gg.request(initiator, &mut rng);
+        let mut drafted: Vec<usize> =
+            armed.iter().flat_map(|g| g.members.iter().copied()).collect();
+        drafted.sort_unstable();
+        if expected.len() >= 2 {
+            assert_eq!(
+                drafted, expected,
+                "seed {seed}: wrong live-reference set (fastest {fastest} retired, \
+                 speeds {speeds:?})"
+            );
+        } else {
+            assert!(drafted.is_empty(), "seed {seed}: degenerate division must skip");
+        }
+    }
+}
+
+/// The overlap pipeline's shard partition exactly tiles the model for
+/// every ragged size: contiguous, in order, no gaps, no overlap, and
+/// balanced to within one element.
+#[test]
+fn prop_shard_partition_tiles_ragged_sizes() {
+    let mut rng = Pcg32::new(0x5a4d);
+    for _ in 0..SEEDS * 4 {
+        let n = rng.gen_range(5000);
+        let k = 1 + rng.gen_range(16);
+        let mut covered = 0usize;
+        let mut sizes = Vec::new();
+        for s in 0..k {
+            let (lo, hi) = pipeline::shard_bounds(n, k, s);
+            assert_eq!(lo, covered, "gap/overlap at n={n} k={k} s={s}");
+            assert!(hi >= lo, "negative shard at n={n} k={k} s={s}");
+            sizes.push(hi - lo);
+            covered = hi;
+        }
+        assert_eq!(covered, n, "partition does not tile n={n} k={k}");
+        let (min, max) = (
+            sizes.iter().copied().min().unwrap(),
+            sizes.iter().copied().max().unwrap(),
+        );
+        assert!(max - min <= 1, "unbalanced shards {sizes:?} at n={n} k={k}");
+    }
+}
+
+/// The sharded (pipelined) ring equals the naive mean on random ragged
+/// shapes — shard count included in the fuzz.
+#[test]
+fn prop_sharded_ring_matches_naive() {
+    use ripples::collectives::ring::ChannelTransport;
+    use std::thread;
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0x0f00);
+        let p = 2 + rng.gen_range(6);
+        let n = 1 + rng.gen_range(600);
+        let k = 1 + rng.gen_range(9);
+        let mut bufs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect())
+            .collect();
+        let expect: Vec<f32> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / p as f32)
+            .collect();
+        let transports = ChannelTransport::ring(p);
+        thread::scope(|scope| {
+            for ((r, buf), mut t) in bufs.iter_mut().enumerate().zip(transports) {
+                scope.spawn(move || {
+                    pipeline::ring_allreduce_sharded(r, p, buf, k, &mut t, |_, _| ())
+                        .expect("sharded ring");
+                });
+            }
+        });
+        for (r, buf) in bufs.iter().enumerate() {
+            for i in 0..n {
+                assert!(
+                    (buf[i] - expect[i]).abs() < 1e-4,
+                    "seed {seed} p={p} n={n} k={k} rank={r} idx={i}"
+                );
+            }
         }
     }
 }
