@@ -5,13 +5,20 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test clippy doc verify artifacts python-test bench bench-json clean
+.PHONY: build test chaos clippy doc verify artifacts python-test bench bench-json clean
 
 build:
 	$(CARGO) build --release
 
 test: build
 	$(CARGO) test -q
+
+# Chaos gate, explicitly: the fault-injection e2e suite (kill a worker
+# mid-collective; repair + checkpoint-rejoin). Included in `cargo test`
+# too — this target exists so `verify` names the crash path even when
+# test filters change.
+chaos:
+	$(CARGO) test -q --test e2e_net chaos_
 
 # Lint gate: clippy over every target (lib, bin, tests, benches,
 # examples) with warnings denied.
@@ -25,7 +32,7 @@ doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 	$(CARGO) test --doc -q
 
-verify: build test clippy doc
+verify: build test chaos clippy doc
 
 # Lower the Layer-2/Layer-1 JAX graphs to HLO-text artifacts (needs
 # Python + JAX; content-hashed, so re-running is a no-op when the

@@ -442,6 +442,84 @@ pub fn fig_overlap(csv_dir: Option<&Path>) -> Table {
     t
 }
 
+/// Failure sweep — crash tolerance. Not a paper figure: the paper's
+/// control plane only handles graceful departure; this harness measures
+/// what a *crash* costs under three policies at equal virtual time
+/// (EXPERIMENTS.md §Crash-sweep). Expected shape: crash-no-repair
+/// freezes the dead rank's lock partners (the AD-PSGD deadlock class)
+/// and falls furthest behind; crash-with-repair loses only the dead
+/// rank's own throughput; crash-with-rejoin recovers most of that too;
+/// crash-free is the ceiling.
+pub fn fig_failures(csv_dir: Option<&Path>) -> Table {
+    use crate::cluster::CrashEvent;
+    let mut t = Table::new(&[
+        "scenario",
+        "iters (total)",
+        "min/max live iters",
+        "aborted",
+        "deaths",
+        "rejoins",
+        "frozen workers",
+        "expected shape",
+    ]);
+    let mk = |crash: Option<CrashEvent>, repair: bool| {
+        let mut p = base_params(AlgoKind::RipplesSmart);
+        p.exp.train.loss_target = None;
+        p.exp.train.max_iters = 160;
+        p.exp.cluster.hetero.crashes = crash.into_iter().collect();
+        p.exp.faults.repair = repair;
+        p
+    };
+    let crash = CrashEvent { worker: 7, at_iter: 40, rejoin_after_secs: None };
+    let rejoin = CrashEvent { worker: 7, at_iter: 40, rejoin_after_secs: Some(10.0) };
+    let free = sim::run(&mk(None, true));
+    let budget = free.final_time; // equal-virtual-time comparison
+    let scenarios: [(&str, SimResult, &str); 4] = [
+        ("crash-free", free, "the ceiling"),
+        (
+            "crash+repair",
+            sim::run_until(&mk(Some(crash), true), Some(budget)),
+            "loses ~1 worker's share",
+        ),
+        (
+            "crash+rejoin",
+            sim::run_until(&mk(Some(rejoin), true), Some(budget)),
+            "recovers most of it",
+        ),
+        (
+            "crash-no-repair",
+            sim::run_until(&mk(Some(crash), false), Some(budget)),
+            "lock partners freeze; worst",
+        ),
+    ];
+    for (name, res, shape) in scenarios {
+        dump_trace(csv_dir, &format!("failures_{}", name.replace('+', "_")), &res);
+        let live: Vec<u64> = res
+            .per_worker_iters
+            .iter()
+            .enumerate()
+            .filter(|(w, _)| *w != 7)
+            .map(|(_, &i)| i)
+            .collect();
+        let (min, max) = (
+            live.iter().copied().min().unwrap_or(0),
+            live.iter().copied().max().unwrap_or(0),
+        );
+        let frozen = live.iter().filter(|&&i| i < max / 2).count();
+        t.row(vec![
+            name.into(),
+            res.total_iters.to_string(),
+            format!("{min}/{max}"),
+            res.groups_aborted.to_string(),
+            res.deaths.to_string(),
+            res.rejoins.to_string(),
+            frozen.to_string(),
+            shape.into(),
+        ]);
+    }
+    t
+}
+
 /// Run one figure by id; `all` runs everything. Returns
 /// `(id, title, table)` so callers can derive stable artifact names
 /// (`BENCH_<id>.json`, CSV files).
@@ -461,6 +539,7 @@ pub fn run_figure(
         ("20", "Figure 20", fig20),
         ("dyn", "Dynamic straggler (filter reaction)", fig_dyn),
         ("overlap", "Overlap pipeline (hidden vs exposed sync)", fig_overlap),
+        ("failures", "Failure sweep (crash tolerance)", fig_failures),
     ];
     let selected: Vec<_> = if id == "all" {
         all
@@ -469,7 +548,8 @@ pub fn run_figure(
     };
     if selected.is_empty() {
         return Err(format!(
-            "unknown figure '{id}' (try 1, 2b, 15, 16, 17, 18, 19, 20, dyn, overlap, all)"
+            "unknown figure '{id}' (try 1, 2b, 15, 16, 17, 18, 19, 20, dyn, overlap, \
+             failures, all)"
         ));
     }
     Ok(selected
@@ -577,6 +657,36 @@ mod tests {
             (ls - l4).abs() < 0.5 * ls.max(l4) + 0.02,
             "loss diverged: serial {ls} vs K=4 {l4}:\n{csv}"
         );
+    }
+
+    #[test]
+    fn failures_scenario_shapes() {
+        let t = fig_failures(None);
+        let csv = t.to_csv();
+        let col = |name: &str, idx: usize| -> String {
+            csv.lines()
+                .find(|l| l.starts_with(name))
+                .unwrap_or_else(|| panic!("missing row {name}:\n{csv}"))
+                .split(',')
+                .nth(idx)
+                .unwrap()
+                .to_string()
+        };
+        let iters = |name: &str| -> u64 { col(name, 1).parse().unwrap() };
+        // ordering at equal virtual time: free >= rejoin >= repair > none
+        assert!(iters("crash-free") >= iters("crash+rejoin"), "{csv}");
+        assert!(iters("crash+rejoin") >= iters("crash+repair"), "{csv}");
+        assert!(
+            iters("crash-no-repair") < iters("crash+repair"),
+            "repair must beat the deadlock class:\n{csv}"
+        );
+        // the crash actually fired and was repaired
+        assert_eq!(col("crash+repair", 4), "1", "{csv}");
+        assert_eq!(col("crash+rejoin", 5), "1", "{csv}");
+        assert_eq!(col("crash-free", 4), "0", "{csv}");
+        // only the unrepaired run freezes survivors
+        assert_eq!(col("crash+repair", 6), "0", "{csv}");
+        assert!(col("crash-no-repair", 6).parse::<u64>().unwrap() >= 1, "{csv}");
     }
 
     #[test]

@@ -46,6 +46,61 @@ impl SlowdownEvent {
     }
 }
 
+/// One scheduled crash: `worker` dies when its *local* iteration count
+/// reaches `at_iter` (mid-iteration — the step never completes), and
+/// optionally rejoins `rejoin_after_secs` virtual seconds later as a
+/// checkpoint-restored replacement seeded from the freshest live peer.
+/// The simulator's ground truth for `fig failures`, mirroring
+/// [`SlowdownEvent`]; the deterministic test harness derives these from
+/// a [`crate::fault::FaultPlan`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashEvent {
+    pub worker: usize,
+    pub at_iter: u64,
+    pub rejoin_after_secs: Option<f64>,
+}
+
+impl CrashEvent {
+    /// Parse a `W@ITER[+SECS][;W@ITER[+SECS]...]` schedule (the
+    /// `--crash` CLI grammar): worker `W` crashes at its iteration
+    /// `ITER`; with `+SECS` it rejoins that many virtual seconds later.
+    pub fn parse_list(s: &str) -> Result<Vec<CrashEvent>, String> {
+        let mut out = Vec::new();
+        for part in s.split(';').filter(|p| !p.trim().is_empty()) {
+            let part = part.trim();
+            let (w, rest) = part
+                .split_once('@')
+                .ok_or_else(|| format!("bad crash entry {part:?}: expected W@ITER[+SECS]"))?;
+            let (iter, rejoin) = match rest.split_once('+') {
+                Some((i, r)) => (
+                    i,
+                    Some(
+                        r.trim()
+                            .parse::<f64>()
+                            .map_err(|e| format!("bad rejoin secs in {part:?}: {e}"))?,
+                    ),
+                ),
+                None => (rest, None),
+            };
+            if rejoin.is_some_and(|r| r < 0.0) {
+                return Err(format!("bad crash entry {part:?}: rejoin secs must be >= 0"));
+            }
+            out.push(CrashEvent {
+                worker: w
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("bad worker in {part:?}: {e}"))?,
+                at_iter: iter
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("bad iteration in {part:?}: {e}"))?,
+                rejoin_after_secs: rejoin,
+            });
+        }
+        Ok(out)
+    }
+}
+
 /// Resolve a `(factor, start_iter)` schedule at `iter`: the entry with
 /// the largest active `start_iter` (<= `iter`) wins; `base` when none
 /// is active. The single source of truth for schedule semantics —
@@ -82,6 +137,9 @@ pub struct HeterogeneityProfile {
     /// entry's factor replaces the static one (the entry with the
     /// largest active `start_iter` wins).
     pub schedule: Vec<SlowdownEvent>,
+    /// Scheduled crashes (and optional rejoins) — at most one per worker;
+    /// later entries for the same worker are ignored.
+    pub crashes: Vec<CrashEvent>,
 }
 
 impl HeterogeneityProfile {
@@ -111,6 +169,11 @@ impl HeterogeneityProfile {
         self.schedule
             .iter()
             .any(|ev| ev.worker == worker && ev.start_iter <= iter)
+    }
+
+    /// The crash scheduled for `worker`, if any (first entry wins).
+    pub fn crash_of(&self, worker: usize) -> Option<&CrashEvent> {
+        self.crashes.iter().find(|ev| ev.worker == worker)
     }
 }
 
@@ -293,6 +356,37 @@ mod tests {
         assert!(SlowdownEvent::parse_list("x,3.0@40").is_err());
         assert!(SlowdownEvent::parse_list("0,y@40").is_err());
         assert!(SlowdownEvent::parse_list("0,3.0@z").is_err());
+    }
+
+    #[test]
+    fn crash_schedule_parsing() {
+        let evs = CrashEvent::parse_list("7@30; 2@10+15.5").unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                CrashEvent { worker: 7, at_iter: 30, rejoin_after_secs: None },
+                CrashEvent { worker: 2, at_iter: 10, rejoin_after_secs: Some(15.5) },
+            ]
+        );
+        assert_eq!(CrashEvent::parse_list("").unwrap(), vec![]);
+        assert!(CrashEvent::parse_list("7").is_err()); // no @ITER
+        assert!(CrashEvent::parse_list("x@30").is_err());
+        assert!(CrashEvent::parse_list("7@y").is_err());
+        assert!(CrashEvent::parse_list("7@30+z").is_err());
+        assert!(CrashEvent::parse_list("7@30+-1").is_err());
+    }
+
+    #[test]
+    fn crash_of_returns_first_entry() {
+        let p = HeterogeneityProfile {
+            crashes: vec![
+                CrashEvent { worker: 1, at_iter: 5, rejoin_after_secs: None },
+                CrashEvent { worker: 1, at_iter: 9, rejoin_after_secs: Some(1.0) },
+            ],
+            ..HeterogeneityProfile::default()
+        };
+        assert_eq!(p.crash_of(1).unwrap().at_iter, 5);
+        assert!(p.crash_of(0).is_none());
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod pipeline;
 pub mod ring;
 
 pub use pipeline::OverlapConfig;
+pub use ring::AbortedError;
 
 /// Block size for the fused mean: 8K floats (32 KiB) keeps the scratch
 /// stripe resident in L1 while each member buffer streams through once.

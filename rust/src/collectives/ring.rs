@@ -28,6 +28,24 @@ use std::thread;
 
 use anyhow::{anyhow, Result};
 
+/// Typed transport failure: the group's collective was torn down by
+/// failure repair (a peer died, or a ring neighbour poisoned the edge —
+/// `net::frame::Frame::Poison`). Engines downcast for it
+/// (`err.downcast_ref::<AbortedError>()`) to tell "restore the snapshot
+/// and retry in a repaired group" from a fatal transport bug.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AbortedError {
+    pub gid: u64,
+}
+
+impl std::fmt::Display for AbortedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "group {} aborted: collective poisoned by failure repair", self.gid)
+    }
+}
+
+impl std::error::Error for AbortedError {}
+
 /// Chunk boundaries: chunk `c` covers `bounds(c).0 .. bounds(c).1`.
 pub(crate) fn chunk_bounds(n: usize, p: usize, c: usize) -> (usize, usize) {
     let base = n / p;

@@ -225,6 +225,45 @@ impl Default for TrainConfig {
     }
 }
 
+/// Failure-handling policy (`[faults]` section).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Repair on crash: declare the rank dead, abort its groups, let
+    /// partners retry in repaired groups. `false` models the
+    /// pre-fault-tolerance control plane (the AD-PSGD deadlock class):
+    /// a crash holds its locks forever and the cluster grinds to a halt
+    /// — what `fig failures` measures against.
+    pub repair: bool,
+    /// Virtual seconds between a crash and its detection (the sim's
+    /// stand-in for the heartbeat deadline / accusation grace).
+    pub detect_secs: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self { repair: true, detect_secs: 0.5 }
+    }
+}
+
+impl FaultConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.detect_secs >= 0.0 && self.detect_secs.is_finite()) {
+            return Err(format!("faults.detect_secs {} must be >= 0", self.detect_secs));
+        }
+        Ok(())
+    }
+}
+
+/// Checkpointing policy (`[ckpt]` section; the deployment plane's
+/// `--ckpt-every`/`--ckpt-dir` — see `net::ckpt`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CkptConfig {
+    /// Snapshot every N iterations (0 = never).
+    pub every: u64,
+    /// Shared checkpoint directory.
+    pub dir: Option<String>,
+}
+
 /// Top-level experiment configuration.
 #[derive(Debug, Clone, Default)]
 pub struct Experiment {
@@ -234,6 +273,10 @@ pub struct Experiment {
     /// Pipelined P-Reduce overlap knobs (`[overlap]` section; the serial
     /// default reproduces the stop-and-wait sync path bit-for-bit).
     pub overlap: OverlapConfig,
+    /// Crash repair/detection policy (`[faults]` section).
+    pub faults: FaultConfig,
+    /// Checkpoint cadence and location (`[ckpt]` section).
+    pub ckpt: CkptConfig,
 }
 
 impl Experiment {
@@ -241,6 +284,18 @@ impl Experiment {
         self.cluster.validate()?;
         self.algo.validate(self.cluster.n_workers())?;
         self.overlap.validate()?;
+        self.faults.validate()?;
+        for ev in &self.cluster.hetero.crashes {
+            if ev.worker >= self.cluster.n_workers() {
+                return Err(format!("crash worker {} out of range", ev.worker));
+            }
+            if ev.rejoin_after_secs.is_some_and(|r| !(r >= 0.0 && r.is_finite())) {
+                return Err(format!(
+                    "crash rejoin delay {:?} must be finite and >= 0",
+                    ev.rejoin_after_secs
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -327,6 +382,35 @@ impl Experiment {
             ("overlap", "max_staleness") => {
                 self.overlap.max_staleness = v.as_usize().ok_or_else(bad)? as u64
             }
+            ("cluster", "crash_schedule") => {
+                // flat [worker, iter, rejoin_secs] triples; rejoin < 0 =
+                // the rank stays gone: [7, 30, -1, 2, 10, 15.0]
+                let arr = v.as_arr().ok_or_else(bad)?;
+                if arr.is_empty() || arr.len() % 3 != 0 {
+                    return Err(format!(
+                        "cluster.crash_schedule wants flat [worker, iter, \
+                         rejoin_secs] triples, got {} values",
+                        arr.len()
+                    ));
+                }
+                self.cluster.hetero.crashes = arr
+                    .chunks(3)
+                    .map(|c| {
+                        let rejoin = c[2].as_f64().ok_or_else(bad)?;
+                        Ok(crate::cluster::CrashEvent {
+                            worker: c[0].as_usize().ok_or_else(bad)?,
+                            at_iter: c[1].as_usize().ok_or_else(bad)? as u64,
+                            rejoin_after_secs: (rejoin >= 0.0).then_some(rejoin),
+                        })
+                    })
+                    .collect::<Result<_, String>>()?;
+            }
+            ("faults", "repair") => self.faults.repair = v.as_bool().ok_or_else(bad)?,
+            ("faults", "detect_secs") => {
+                self.faults.detect_secs = v.as_f64().ok_or_else(bad)?
+            }
+            ("ckpt", "every") => self.ckpt.every = v.as_usize().ok_or_else(bad)? as u64,
+            ("ckpt", "dir") => self.ckpt.dir = Some(v.as_str().ok_or_else(bad)?.to_string()),
             _ => return Err(format!("unknown config key {section}.{key}")),
         }
         Ok(())
@@ -430,6 +514,41 @@ mod tests {
         assert_eq!(e.cluster.hetero.schedule[1].start_iter, 120);
         assert_eq!(e.cluster.hetero.slowdown_at(7, 50), 6.0);
         assert_eq!(e.cluster.hetero.slowdown_at(7, 120), 1.0);
+    }
+
+    #[test]
+    fn crash_faults_and_ckpt_config_roundtrip() {
+        let e = Experiment::from_str_cfg(
+            "[cluster]\ncrash_schedule = [7, 30, -1, 2, 10, 15.0]\n\n\
+             [faults]\nrepair = false\ndetect_secs = 0.25\n\n\
+             [ckpt]\nevery = 50\ndir = \"ckpts\"\n",
+        )
+        .unwrap();
+        assert_eq!(e.cluster.hetero.crashes.len(), 2);
+        assert_eq!(e.cluster.hetero.crashes[0].worker, 7);
+        assert_eq!(e.cluster.hetero.crashes[0].at_iter, 30);
+        assert_eq!(e.cluster.hetero.crashes[0].rejoin_after_secs, None);
+        assert_eq!(e.cluster.hetero.crashes[1].rejoin_after_secs, Some(15.0));
+        assert!(!e.faults.repair);
+        assert_eq!(e.faults.detect_secs, 0.25);
+        assert_eq!(e.ckpt.every, 50);
+        assert_eq!(e.ckpt.dir.as_deref(), Some("ckpts"));
+        // defaults: repair on, no checkpoints
+        let d = Experiment::default();
+        assert!(d.faults.repair);
+        assert_eq!(d.ckpt, CkptConfig::default());
+    }
+
+    #[test]
+    fn crash_schedule_config_rejected_when_malformed() {
+        // not flat triples
+        assert!(Experiment::from_str_cfg("[cluster]\ncrash_schedule = [7, 30]\n").is_err());
+        // out-of-range worker (default 16-worker cluster)
+        assert!(
+            Experiment::from_str_cfg("[cluster]\ncrash_schedule = [99, 30, -1]\n").is_err()
+        );
+        // negative detect window
+        assert!(Experiment::from_str_cfg("[faults]\ndetect_secs = -1.0\n").is_err());
     }
 
     #[test]

@@ -62,6 +62,23 @@ impl LockVector {
         self.locked_count -= group.len();
     }
 
+    /// Clear `w`'s bit if set, returning whether a bit was cleared.
+    ///
+    /// Failure-repair sweep: after a rank is declared dead every group
+    /// naming it is aborted, which releases its locks through the normal
+    /// [`LockVector::release`] path — but a dead rank must *never* keep a
+    /// lock bit, so [`crate::gg::GroupGenerator::declare_dead`] finishes
+    /// with this unconditional sweep as a guard against protocol drift.
+    pub fn force_release(&mut self, w: usize) -> bool {
+        if self.is_locked(w) {
+            self.words[w / 64] &= !(1 << (w % 64));
+            self.locked_count -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
     /// Indices of currently-free workers.
     pub fn free_workers(&self) -> Vec<usize> {
         (0..self.n).filter(|&w| !self.is_locked(w)).collect()
@@ -108,6 +125,18 @@ mod tests {
         let mut lv = LockVector::new(8);
         lv.try_lock(&[1, 3, 5]);
         assert_eq!(lv.free_workers(), vec![0, 2, 4, 6, 7]);
+    }
+
+    #[test]
+    fn force_release_clears_only_set_bits() {
+        let mut lv = LockVector::new(8);
+        lv.try_lock(&[2, 5]);
+        assert!(lv.force_release(2), "locked bit must be cleared");
+        assert!(!lv.is_locked(2));
+        assert_eq!(lv.locked_count(), 1);
+        assert!(!lv.force_release(2), "idempotent on a free worker");
+        assert_eq!(lv.locked_count(), 1);
+        assert!(lv.is_locked(5), "other bits untouched");
     }
 
     #[test]

@@ -30,6 +30,20 @@
 //! counter filter would exclude it forever: its progress deficit never
 //! shrinks). Configured slowdowns remain simulator ground truth only.
 //!
+//! # Fault tolerance
+//!
+//! Graceful departure is [`GroupGenerator::retire`]; a *crash* is
+//! [`GroupGenerator::declare_dead`]: the rank's locks are released, its
+//! speed entry is purged, and every live group naming it is aborted so
+//! ring peers unwind and retry in a repaired group instead of waiting
+//! forever — the deadlock class AD-PSGD is criticized for. Engines can
+//! also abort a single broken group ([`GroupGenerator::abort_group`],
+//! fed by data-plane failure reports) and re-admit a checkpoint-restored
+//! replacement ([`GroupGenerator::rejoin`]). Probing distinguishes
+//! "completed" from "aborted" via [`GroupGenerator::was_aborted`]. See
+//! DESIGN.md §Fault-tolerance for the full detection → abort → repair →
+//! rejoin data flow.
+//!
 //! ```
 //! use ripples::gg::{GgConfig, GroupGenerator};
 //! use ripples::util::rng::Pcg32;
@@ -57,7 +71,7 @@ pub use lockvec::LockVector;
 pub use static_sched::StaticScheduler;
 
 use crate::util::rng::Pcg32;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 pub type GroupId = u64;
 
@@ -156,6 +170,13 @@ impl SpeedTable {
     pub fn snapshot(&self) -> Vec<f64> {
         self.ewma.iter().map(|e| e.unwrap_or(0.0)).collect()
     }
+
+    /// Forget everything measured about `w` (death purge / rejoin reset:
+    /// a dead rank's frozen EWMA must not anchor the reference, and a
+    /// rejoined replacement starts with fresh measurements).
+    pub fn clear(&mut self, w: usize) {
+        self.ewma[w] = None;
+    }
 }
 
 /// A synchronization group: sorted member list.
@@ -250,7 +271,29 @@ pub struct GgStats {
     pub divisions: u64,
     pub buffer_hits: u64,
     pub max_pending: usize,
+    /// Ranks declared dead ([`GroupGenerator::declare_dead`]).
+    pub deaths: u64,
+    /// Groups torn down by failure repair (abort ≠ complete).
+    pub groups_aborted: u64,
+    /// Dead ranks re-registered ([`GroupGenerator::rejoin`]).
+    pub rejoins: u64,
 }
+
+/// What a death declaration tore down: the groups that were aborted
+/// (locks released, Group Buffers purged) plus any pending groups that
+/// armed once the dead rank's locks came free. Engines must stop
+/// tracking the former and start tracking the latter.
+#[derive(Debug, Clone, Default)]
+pub struct DeathPurge {
+    pub aborted: Vec<Group>,
+    pub newly_armed: Vec<Group>,
+}
+
+/// Bound on the remembered aborted-group ids: old ids are pruned once
+/// the set exceeds this (ids are monotonic, so the most recent survive).
+/// Far above anything a bounded run creates; keeps unbounded services
+/// from leaking.
+const ABORTED_MEMORY: usize = 1 << 16;
 
 /// The GG state machine.
 #[derive(Debug)]
@@ -274,6 +317,13 @@ pub struct GroupGenerator {
     /// Workers that have left the training session (threaded-runtime
     /// termination protocol): never drafted into new groups.
     retired: Vec<bool>,
+    /// Workers declared dead by failure detection (crash, not Retire):
+    /// also retired, plus every group naming them has been aborted.
+    dead: Vec<bool>,
+    /// Ids of groups torn down by failure repair, so Wait/Probe can tell
+    /// "aborted — do not run the collective" from "completed" (bounded;
+    /// see [`ABORTED_MEMORY`]).
+    aborted: HashSet<GroupId>,
     next_id: GroupId,
     pub stats: GgStats,
 }
@@ -294,6 +344,8 @@ impl GroupGenerator {
             drafts: vec![0; n],
             last_drafted: vec![0; n],
             retired: vec![false; n],
+            dead: vec![false; n],
+            aborted: HashSet::new(),
             next_id: 1,
             stats: GgStats::default(),
         }
@@ -377,6 +429,141 @@ impl GroupGenerator {
         self.retired[w]
     }
 
+    pub fn is_dead(&self, w: usize) -> bool {
+        self.dead[w]
+    }
+
+    /// True if `id` was torn down by failure repair (as opposed to
+    /// completing normally). Memory is bounded (`ABORTED_MEMORY`).
+    pub fn was_aborted(&self, id: GroupId) -> bool {
+        self.aborted.contains(&id)
+    }
+
+    /// Lock-vector view of one worker (test/diagnostic accessor).
+    pub fn is_locked_worker(&self, w: usize) -> bool {
+        self.locks.is_locked(w)
+    }
+
+    /// Total lock bits currently set (test/diagnostic accessor).
+    pub fn locked_count(&self) -> usize {
+        self.locks.locked_count()
+    }
+
+    /// Snapshot of one worker's Group Buffer (test/diagnostic accessor).
+    pub fn gb_snapshot(&self, w: usize) -> Vec<GroupId> {
+        self.gb[w].iter().copied().collect()
+    }
+
+    fn note_aborted(&mut self, id: GroupId) {
+        self.aborted.insert(id);
+        if self.aborted.len() > ABORTED_MEMORY {
+            // ids are monotonic: keep the most recent window
+            let min_keep = self.next_id.saturating_sub(ABORTED_MEMORY as u64);
+            self.aborted.retain(|&g| g >= min_keep);
+        }
+    }
+
+    /// Remove one live group without completing it: purge it from every
+    /// member's Group Buffer (any position — unlike completion, an
+    /// aborted group need not be at the front) and drop it from the
+    /// pending queue or release its locks. Returns the group plus
+    /// whether locks were released (armed) — arming whatever those
+    /// locks were blocking is the caller's choice: immediately
+    /// ([`GroupGenerator::abort_group`]) or once after a batch
+    /// ([`GroupGenerator::declare_dead`]). `None` for unknown ids.
+    fn teardown_group(&mut self, id: GroupId) -> Option<(Group, bool)> {
+        let group = self.groups.remove(&id)?;
+        self.stats.groups_aborted += 1;
+        self.note_aborted(id);
+        if self.cfg.use_group_buffer {
+            for &m in &group.members {
+                self.gb[m].retain(|&g| g != id);
+            }
+        }
+        if let Some(pos) = self.pending.iter().position(|&p| p == id) {
+            self.pending.remove(pos);
+            return Some((group, false)); // pending groups hold no locks
+        }
+        self.locks.release(&group.members);
+        Some((group, true))
+    }
+
+    /// Tear one group down without completing it and arm whatever its
+    /// locks were blocking. Idempotent on unknown ids (a duplicate abort
+    /// report from a second ring survivor is expected, not an error).
+    ///
+    /// Returns the groups that armed as a result.
+    pub fn abort_group(&mut self, id: GroupId) -> Vec<Group> {
+        match self.teardown_group(id) {
+            Some((group, true)) => self.arm_unblocked(&group.members),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Failure detection verdict: `w` crashed. The rank is retired (never
+    /// drafted again), its speed telemetry is purged (a frozen EWMA must
+    /// not anchor the filter's reference), and every live group naming it
+    /// — armed or pending — is aborted so its partners unblock instead of
+    /// waiting forever on a dead rank's locks. Idempotent.
+    pub fn declare_dead(&mut self, w: usize) -> DeathPurge {
+        if self.dead[w] {
+            return DeathPurge::default();
+        }
+        self.dead[w] = true;
+        self.retired[w] = true;
+        self.stats.deaths += 1;
+        self.speed.clear(w);
+        self.gb[w].clear();
+        let mut doomed: Vec<GroupId> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| g.members.contains(&w))
+            .map(|(&id, _)| id)
+            .collect();
+        doomed.sort_unstable(); // HashMap order is randomized; stay deterministic
+        // Remove every doomed group first, then arm in one sweep — arming
+        // as we go could transiently hand out a pending group that names
+        // the dead rank and is itself about to be aborted.
+        let mut released: Vec<usize> = Vec::new();
+        let mut aborted = Vec::new();
+        for id in doomed {
+            let (group, was_armed) =
+                self.teardown_group(id).expect("doomed id is live");
+            if was_armed {
+                released.extend(group.members.iter().copied());
+            }
+            aborted.push(group);
+        }
+        let newly_armed =
+            if released.is_empty() { Vec::new() } else { self.arm_unblocked(&released) };
+        // Guard against protocol drift: a dead rank must never keep a bit.
+        debug_assert!(!self.locks.is_locked(w), "dead rank {w} still locked");
+        self.locks.force_release(w);
+        DeathPurge { aborted, newly_armed }
+    }
+
+    /// A replacement process re-registers rank `w` (checkpoint-restored):
+    /// purge whatever the old incarnation left behind (its death may not
+    /// have been declared yet — a fast restart), then clear the dead and
+    /// retired flags so the rank is drafted again. The progress counter
+    /// catches up to the fastest live worker so the §5.3 counter rule
+    /// cannot freeze the rejoiner out of divisions; speed telemetry
+    /// restarts from scratch.
+    pub fn rejoin(&mut self, w: usize) -> DeathPurge {
+        let purge = self.declare_dead(w);
+        self.dead[w] = false;
+        self.retired[w] = false;
+        self.speed.clear(w);
+        let caught_up = (0..self.cfg.n_workers)
+            .filter(|&x| x != w && !self.retired[x])
+            .map(|x| self.counters[x])
+            .max()
+            .unwrap_or(0);
+        self.counters[w] = self.counters[w].max(caught_up);
+        self.stats.rejoins += 1;
+        purge
+    }
+
     /// Worker `w` requests synchronization.
     ///
     /// Returns `(assigned, newly_armed)`: the id of the group that
@@ -447,16 +634,21 @@ impl GroupGenerator {
                 }
             }
         }
-        // Arm pending groups that can now lock, preserving FIFO fairness.
-        // Hot-path optimization (§Perf): a pending group whose members do
-        // not intersect the just-released set was already blocked before
-        // this complete, and nothing in this call can unblock it (arming
-        // other groups only *sets* lock bits) — skip its try_lock.
+        self.arm_unblocked(&group.members)
+    }
+
+    /// Arm pending groups that can now lock after `released` workers came
+    /// free, preserving FIFO fairness. Hot-path optimization (§Perf): a
+    /// pending group whose members do not intersect the released set was
+    /// already blocked before this call, and nothing here can unblock it
+    /// (arming other groups only *sets* lock bits) — skip its try_lock.
+    /// Shared by completion and the failure-repair abort path.
+    fn arm_unblocked(&mut self, released: &[usize]) -> Vec<Group> {
         let mut armed = Vec::new();
         let mut still_pending = VecDeque::new();
         while let Some(pid) = self.pending.pop_front() {
             let g = &self.groups[&pid];
-            let touched = g.members.iter().any(|m| group.members.contains(m));
+            let touched = g.members.iter().any(|m| released.contains(m));
             if touched && self.locks.try_lock(&g.members) {
                 armed.push(g.clone());
             } else {
@@ -1042,6 +1234,167 @@ mod tests {
         let (_, armed) = gg.request(1, &mut r);
         let drafted: usize = armed.iter().map(|g| g.members.len()).sum();
         assert_eq!(drafted, 3, "drain division must cover all live workers: {armed:?}");
+    }
+
+    #[test]
+    fn declare_dead_aborts_armed_and_pending_groups() {
+        let mut gg = GroupGenerator::new(GgConfig::random(6, 6, 2));
+        let mut armed = Vec::new();
+        let a = gg.create_group(0, vec![0, 1], &mut armed); // arms
+        let b = gg.create_group(1, vec![1, 2], &mut armed); // pends behind a
+        let c = gg.create_group(2, vec![2, 3], &mut armed); // arms
+        assert!(gg.is_armed(a) && !gg.is_armed(b) && gg.is_armed(c));
+        let purge = gg.declare_dead(1);
+        // both groups naming rank 1 die; c survives untouched
+        let mut dead_ids: Vec<GroupId> = purge.aborted.iter().map(|g| g.id).collect();
+        dead_ids.sort_unstable();
+        assert_eq!(dead_ids, vec![a, b]);
+        assert!(gg.was_aborted(a) && gg.was_aborted(b) && !gg.was_aborted(c));
+        assert!(gg.group(a).is_none() && gg.group(b).is_none());
+        assert!(gg.is_armed(c));
+        // rank 1 holds no locks and appears in no live group
+        assert!(!gg.is_locked_worker(1));
+        assert!(gg.is_dead(1) && gg.is_retired(1));
+        for id in gg.live_group_ids() {
+            assert!(!gg.group(id).unwrap().members.contains(&1));
+        }
+        // worker 0 came free: nothing pended on it, but its lock is gone
+        assert!(!gg.is_locked_worker(0));
+        assert_eq!(gg.stats.deaths, 1);
+        assert_eq!(gg.stats.groups_aborted, 2);
+        // idempotent
+        assert!(gg.declare_dead(1).aborted.is_empty());
+        assert_eq!(gg.stats.deaths, 1);
+    }
+
+    #[test]
+    fn declare_dead_arms_groups_blocked_by_the_dead_rank() {
+        let mut gg = GroupGenerator::new(GgConfig::random(4, 4, 2));
+        let mut armed = Vec::new();
+        let a = gg.create_group(0, vec![0, 1], &mut armed); // arms, holds 0&1
+        let b = gg.create_group(2, vec![1, 2], &mut armed); // pends behind a
+        assert!(!gg.is_armed(b));
+        let purge = gg.declare_dead(0);
+        assert_eq!(purge.aborted.len(), 1);
+        assert_eq!(purge.aborted[0].id, a);
+        // releasing the dead rank's group frees worker 1: b arms
+        assert_eq!(purge.newly_armed.len(), 1);
+        assert_eq!(purge.newly_armed[0].id, b);
+        assert!(gg.is_armed(b));
+        // and the newly armed group must not name the dead rank
+        assert!(!purge.newly_armed[0].members.contains(&0));
+    }
+
+    #[test]
+    fn dead_worker_is_never_drafted_and_speed_is_purged() {
+        let mut cfg = GgConfig::smart(4, 4, 2, 8);
+        cfg.inter_intra = false;
+        let mut gg = GroupGenerator::new(cfg);
+        let mut r = rng();
+        for w in 0..4 {
+            gg.report_speed(w, 0.010);
+        }
+        gg.declare_dead(3);
+        assert_eq!(gg.speed_table().get(3), None, "speed entry must be purged");
+        assert_eq!(gg.speed_table().snapshot()[3], 0.0);
+        let (_, armed) = gg.request(0, &mut r);
+        for g in &armed {
+            assert!(!g.members.contains(&3), "dead rank drafted: {g:?}");
+        }
+        // a zombie Sync from the dead rank is a skip, not a crash
+        for g in armed {
+            gg.complete(g.id);
+        }
+        let (assigned, newly) = gg.request(3, &mut r);
+        assert!(assigned.is_none() && newly.is_empty());
+    }
+
+    #[test]
+    fn abort_group_purges_buffers_and_arms_blocked() {
+        let mut cfg = GgConfig::random(4, 4, 2);
+        cfg.use_group_buffer = true;
+        let mut gg = GroupGenerator::new(cfg);
+        let mut armed = Vec::new();
+        let a = gg.create_group(0, vec![0, 1], &mut armed);
+        let b = gg.create_group(2, vec![1, 2], &mut armed); // pends
+        assert_eq!(gg.gb_snapshot(1), vec![a, b]);
+        // aborting the pending group releases nothing but purges GBs
+        assert!(gg.abort_group(b).is_empty());
+        assert_eq!(gg.gb_snapshot(1), vec![a]);
+        assert_eq!(gg.gb_snapshot(2), Vec::<GroupId>::new());
+        // aborting the armed group releases 0 and 1
+        assert!(gg.abort_group(a).is_empty());
+        assert_eq!(gg.locked_count(), 0);
+        assert_eq!(gg.live_groups(), 0);
+        assert!(gg.was_aborted(a) && gg.was_aborted(b));
+        assert_eq!(gg.stats.groups_aborted, 2);
+        // idempotent on unknown/already-aborted ids
+        assert!(gg.abort_group(a).is_empty());
+        assert_eq!(gg.stats.groups_aborted, 2);
+        // completed groups are NOT "aborted"
+        let mut armed = Vec::new();
+        let c = gg.create_group(0, vec![0, 1], &mut armed);
+        gg.complete(c);
+        assert!(!gg.was_aborted(c));
+    }
+
+    #[test]
+    fn rejoin_readmits_a_dead_rank() {
+        let mut cfg = GgConfig::smart(4, 4, 2, 2);
+        cfg.inter_intra = false;
+        let mut gg = GroupGenerator::new(cfg);
+        let mut r = rng();
+        // build a progress gap, then kill worker 3
+        for _ in 0..6 {
+            for w in 0..3 {
+                let (_, armed) = gg.request(w, &mut r);
+                for g in armed {
+                    gg.complete(g.id);
+                }
+                while let Some(front) = gg.gb_front(w) {
+                    if gg.is_armed(front) {
+                        gg.complete(front);
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        gg.declare_dead(3);
+        let (_, armed) = gg.request(0, &mut r);
+        for g in &armed {
+            assert!(!g.members.contains(&3));
+        }
+        for g in armed {
+            gg.complete(g.id);
+        }
+        // rejoin: drafted again despite the frozen counter deficit
+        gg.rejoin(3);
+        assert!(!gg.is_dead(3) && !gg.is_retired(3));
+        assert!(
+            gg.counters()[3] >= gg.counters()[0],
+            "rejoiner's counter must catch up: {:?}",
+            gg.counters()
+        );
+        assert_eq!(gg.stats.rejoins, 1);
+        let (_, armed) = gg.request(0, &mut r);
+        let drafted: Vec<usize> = armed.iter().flat_map(|g| g.members.clone()).collect();
+        assert!(drafted.contains(&3), "rejoined rank not drafted: {drafted:?}");
+    }
+
+    #[test]
+    fn rejoin_of_a_live_rank_purges_its_stale_groups_first() {
+        // fast restart: the old incarnation's death was never declared
+        let mut gg = GroupGenerator::new(GgConfig::random(4, 4, 2));
+        let mut armed = Vec::new();
+        let a = gg.create_group(0, vec![0, 1], &mut armed);
+        let purge = gg.rejoin(0);
+        assert_eq!(purge.aborted.len(), 1);
+        assert_eq!(purge.aborted[0].id, a);
+        assert!(!gg.is_dead(0) && !gg.is_retired(0));
+        assert_eq!(gg.locked_count(), 0);
+        assert_eq!(gg.stats.deaths, 1, "the old incarnation counts as a death");
+        assert_eq!(gg.stats.rejoins, 1);
     }
 
     #[test]

@@ -33,6 +33,7 @@ pub mod cluster;
 pub mod collectives;
 pub mod comm;
 pub mod config;
+pub mod fault;
 pub mod gg;
 pub mod metrics;
 pub mod model;
@@ -42,8 +43,9 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-pub use cluster::{HeterogeneityProfile, SlowdownEvent};
-pub use collectives::OverlapConfig;
+pub use cluster::{CrashEvent, HeterogeneityProfile, SlowdownEvent};
+pub use collectives::{AbortedError, OverlapConfig};
 pub use config::{AlgoConfig, AlgoKind, ClusterConfig, Experiment, TrainConfig};
+pub use fault::{Fault, FaultPlan, FaultyTransport};
 pub use gg::{GgConfig, Group, GroupGenerator, SpeedTable, StaticScheduler};
 pub use sim::{SimParams, SimResult};

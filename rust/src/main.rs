@@ -51,23 +51,31 @@ ripples — Heterogeneity-Aware Asynchronous Decentralized Training
 USAGE:
   ripples train [--algo NAME] [--config FILE] [--slow W,FACTOR]
                 [--slow-schedule W,F@ITER[;W,F@ITER...]]
+                [--crash W@ITER[+REJOIN_SECS][;...]] [--no-repair true]
                 [--overlap-shards K] [--max-staleness S]
                 [--iters N] [--target LOSS] [--trace FILE.csv]
-  ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|all> [--csv DIR] [--json DIR]
+  ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|failures|all>
+              [--csv DIR] [--json DIR]
   ripples gg-serve [--addr HOST:PORT] [--workers N] [--wpn K]
                    [--mode random|smart] [--group-size G]
+                   [--liveness-ms MS]
   ripples launch [--workers N] [--slow W:FACTOR] [--secs S] [--iters N]
                  [--slow-schedule W,F@ITER[;W,F@ITER...]]
                  [--group-size G] [--mode random|smart] [--c-thres C]
                  [--wpn K] [--seed S] [--lr LR] [--batch B] [--bias P]
                  [--floor-ms MS] [--model tiny|paper] [--echo true]
                  [--overlap-shards K] [--max-staleness S]
+                 [--liveness-ms MS] [--heartbeat-ms MS]
+                 [--ckpt-every N] [--ckpt-dir DIR]
+                 [--kill R@SECS] [--rejoin-after SECS]
   ripples worker --rank R --workers N --gg HOST:PORT
                  [--listen HOST:PORT] [--peers a0,a1,...] [--secs S]
                  [--iters N] [--slowdown F] [--slow-schedule F@ITER[,...]]
                  [--seed S] [--lr LR] [--batch B] [--bias P]
                  [--floor-ms MS] [--dataset N] [--model tiny|paper]
                  [--overlap-shards K] [--max-staleness S]
+                 [--heartbeat-ms MS] [--probe-ms MS]
+                 [--ckpt-every N] [--ckpt-dir DIR] [--rejoin true]
   ripples artifacts [--dir DIR]
   ripples ablation
 
@@ -84,9 +92,15 @@ table drives the slowdown filter (`fig dyn` measures the reaction).
 `--overlap-shards K` + `--max-staleness S` pipeline every P-Reduce over
 K model shards while workers keep stepping on stale weights (bounded by
 S; 0 = serial stop-and-wait) — `fig overlap` sweeps the hidden vs
-exposed sync cost. `fig --json DIR` writes each figure as
-machine-readable `DIR/BENCH_<id>.json` (the `make bench-json` perf
-trajectory).
+exposed sync cost. Crash tolerance: workers heartbeat the GG, whose
+liveness monitor declares silent ranks dead and aborts their groups so
+ring peers unwind (poison frames) and retry repaired; `launch --kill
+R@SECS` SIGKILLs a worker mid-run, `--rejoin-after SECS` spawns a
+replacement that restores the freshest `--ckpt-dir` checkpoint and
+rejoins (`fig failures` measures crash-free vs crash-with-repair vs
+crash-no-repair; sim crashes via `train --crash`). `fig --json DIR`
+writes each figure as machine-readable `DIR/BENCH_<id>.json` (the
+`make bench-json` perf trajectory).
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positionals.
@@ -132,6 +146,12 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
     }
     if let Some(sched) = get_flag(&flags, "slow-schedule") {
         exp.cluster.hetero.schedule = ripples::cluster::SlowdownEvent::parse_list(sched)?;
+    }
+    if let Some(crash) = get_flag(&flags, "crash") {
+        exp.cluster.hetero.crashes = ripples::cluster::CrashEvent::parse_list(crash)?;
+    }
+    if parse_or(&flags, "no-repair", false)? {
+        exp.faults.repair = false;
     }
     if let Some(iters) = get_flag(&flags, "iters") {
         exp.train.max_iters = iters.parse().map_err(|e| format!("bad iters: {e}"))?;
@@ -222,7 +242,12 @@ fn cmd_gg_serve(args: &[String]) -> Result<(), String> {
         "smart" => GgConfig::smart(workers, wpn, group, 8),
         other => return Err(format!("unknown mode '{other}'")),
     };
-    let server = GgServer::spawn(addr, cfg, 42).map_err(|e| e.to_string())?;
+    let liveness_ms: u64 = parse_or(&flags, "liveness-ms", 0)?;
+    let liveness = (liveness_ms > 0).then(|| {
+        ripples::rpc::LivenessConfig::with_timeout(Duration::from_millis(liveness_ms))
+    });
+    let server = GgServer::spawn_with_liveness(addr, cfg, 42, liveness)
+        .map_err(|e| e.to_string())?;
     println!("GG serving on {} ({workers} workers, {wpn} per node)", server.addr);
     println!("press Ctrl-C to stop");
     loop {
@@ -283,6 +308,25 @@ fn cmd_launch(args: &[String]) -> Result<(), String> {
     cfg.overlap.shards = parse_or(&flags, "overlap-shards", cfg.overlap.shards)?;
     cfg.overlap.max_staleness =
         parse_or(&flags, "max-staleness", cfg.overlap.max_staleness)?;
+    cfg.liveness_ms = parse_or(&flags, "liveness-ms", cfg.liveness_ms)?;
+    cfg.heartbeat_ms = parse_or(&flags, "heartbeat-ms", cfg.heartbeat_ms)?;
+    cfg.ckpt_every = parse_or(&flags, "ckpt-every", cfg.ckpt_every)?;
+    if let Some(dir) = get_flag(&flags, "ckpt-dir") {
+        cfg.ckpt_dir = Some(PathBuf::from(dir));
+    }
+    if let Some(kill) = get_flag(&flags, "kill") {
+        let (r, secs) = kill.split_once('@').ok_or("--kill expects RANK@SECS")?;
+        cfg.kill = Some(ripples::net::KillSpec {
+            rank: r.parse().map_err(|e| format!("bad kill rank: {e}"))?,
+            after_secs: secs.parse().map_err(|e| format!("bad kill time: {e}"))?,
+            rejoin_after_secs: match get_flag(&flags, "rejoin-after") {
+                Some(v) => Some(v.parse().map_err(|e| format!("bad --rejoin-after: {e}"))?),
+                None => None,
+            },
+        });
+    } else if get_flag(&flags, "rejoin-after").is_some() {
+        return Err("--rejoin-after needs --kill".into());
+    }
     match get_flag(&flags, "mode").unwrap_or("smart") {
         "smart" => cfg.smart = true,
         "random" => cfg.smart = false,
@@ -353,6 +397,11 @@ fn cmd_worker(args: &[String]) -> Result<(), String> {
             shards: parse_or(&flags, "overlap-shards", defaults.overlap.shards)?,
             max_staleness: parse_or(&flags, "max-staleness", defaults.overlap.max_staleness)?,
         },
+        heartbeat_ms: parse_or(&flags, "heartbeat-ms", defaults.heartbeat_ms)?,
+        probe_ms: parse_or(&flags, "probe-ms", defaults.probe_ms)?,
+        ckpt_every: parse_or(&flags, "ckpt-every", defaults.ckpt_every)?,
+        ckpt_dir: get_flag(&flags, "ckpt-dir").map(PathBuf::from),
+        rejoin: parse_or(&flags, "rejoin", defaults.rejoin)?,
     };
     let listen = get_flag(&flags, "listen").unwrap_or("127.0.0.1:0");
     worker_main(&p, listen, get_flag(&flags, "peers")).map_err(|e| format!("{e:#}"))?;

@@ -1,0 +1,196 @@
+//! Worker checkpoints: periodic model + trainer-state snapshots that let
+//! a replacement process rejoin the cluster after a crash.
+//!
+//! A checkpoint is one flat file per rank (`ckpt_r<rank>.bin`), written
+//! atomically (tmp + rename) every `--ckpt-every` iterations into a
+//! directory the whole cluster shares. The shared directory doubles as
+//! the "freshest live peer" seed: a rejoiner restores the *newest*
+//! checkpoint in the directory regardless of which rank wrote it
+//! ([`latest`]), then converges onto its peers through ordinary P-Reduce
+//! averaging. Trainer state here is everything plain SGD carries besides
+//! the weights: the iteration count (drives batch tags and slowdown
+//! schedules) and the speed-telemetry EWMA.
+//!
+//! Format (little-endian, `rpc::wire` codec): magic `RIPC`, version,
+//! rank u32, iter u64, ewma f64-bits, weight count u32, then the f32
+//! weights.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::rpc::wire::{Reader, Writer};
+
+const MAGIC: &[u8; 4] = b"RIPC";
+const VERSION: u32 = 1;
+
+/// One model + trainer-state snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub rank: u32,
+    /// Local iteration count at snapshot time (the freshness key).
+    pub iter: u64,
+    /// The worker's speed-telemetry EWMA (0.0 = none yet).
+    pub ewma_secs: f64,
+    pub weights: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION);
+        w.u32(self.rank);
+        w.u64(self.iter);
+        w.u64(self.ewma_secs.to_bits());
+        w.u32(self.weights.len() as u32);
+        for v in &self.weights {
+            w.bytes(&v.to_le_bytes());
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        if r.bytes(4)? != MAGIC {
+            bail!("not a ripples checkpoint (bad magic)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let rank = r.u32()?;
+        let iter = r.u64()?;
+        let ewma_secs = f64::from_bits(r.u64()?);
+        let count = r.u32()? as usize;
+        let mut weights = Vec::with_capacity(count);
+        for _ in 0..count {
+            weights.push(f32::from_le_bytes(r.u32()?.to_le_bytes()));
+        }
+        r.done()?;
+        Ok(Self { rank, iter, ewma_secs, weights })
+    }
+}
+
+/// The per-rank checkpoint path inside `dir`.
+pub fn path_for(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("ckpt_r{rank}.bin"))
+}
+
+/// Write `ckpt` atomically into `dir` (tmp + rename: a crash mid-write
+/// never corrupts the previous snapshot). Creates the directory.
+pub fn save(dir: &Path, ckpt: &Checkpoint) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+    let path = path_for(dir, ckpt.rank as usize);
+    let tmp = dir.join(format!("ckpt_r{}.tmp", ckpt.rank));
+    std::fs::write(&tmp, ckpt.encode())
+        .with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    Ok(path)
+}
+
+/// Load one checkpoint file.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let buf =
+        std::fs::read(path).with_context(|| format!("read checkpoint {}", path.display()))?;
+    Checkpoint::decode(&buf).with_context(|| format!("decode {}", path.display()))
+}
+
+/// The freshest checkpoint in `dir` — maximum `iter`, ties broken by
+/// lowest rank for determinism; unparseable files are skipped (a peer
+/// may be writing concurrently on another machine without atomic-rename
+/// semantics). `Ok(None)` when the directory is empty or missing.
+pub fn latest(dir: &Path) -> Result<Option<Checkpoint>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(e).with_context(|| format!("list checkpoints in {}", dir.display()))
+        }
+    };
+    let mut best: Option<Checkpoint> = None;
+    for entry in entries {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if !name.starts_with("ckpt_r") || !name.ends_with(".bin") {
+            continue;
+        }
+        let Ok(ckpt) = load(&path) else { continue };
+        let fresher = match &best {
+            None => true,
+            Some(b) => {
+                ckpt.iter > b.iter || (ckpt.iter == b.iter && ckpt.rank < b.rank)
+            }
+        };
+        if fresher {
+            best = Some(ckpt);
+        }
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ripples_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn ckpt(rank: u32, iter: u64) -> Checkpoint {
+        Checkpoint {
+            rank,
+            iter,
+            ewma_secs: 0.0125,
+            weights: (0..64).map(|i| i as f32 * 0.5 - 3.0).collect(),
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        let c = ckpt(3, 120);
+        assert_eq!(Checkpoint::decode(&c.encode()).unwrap(), c);
+        assert!(Checkpoint::decode(b"nope").is_err());
+        let mut bad = c.encode();
+        bad[4] = 99; // version
+        assert!(Checkpoint::decode(&bad).is_err());
+        bad.truncate(20);
+        bad[4] = 1;
+        assert!(Checkpoint::decode(&bad).is_err(), "truncated weights");
+    }
+
+    #[test]
+    fn save_load_and_latest_picks_freshest() {
+        let dir = tmpdir("latest");
+        assert_eq!(latest(&dir).unwrap(), None, "missing dir is empty, not an error");
+        save(&dir, &ckpt(0, 10)).unwrap();
+        save(&dir, &ckpt(1, 30)).unwrap();
+        save(&dir, &ckpt(2, 20)).unwrap();
+        let best = latest(&dir).unwrap().expect("three checkpoints present");
+        assert_eq!((best.rank, best.iter), (1, 30), "freshest = max iter");
+        // overwriting a rank's file replaces its snapshot atomically
+        save(&dir, &ckpt(2, 99)).unwrap();
+        let best = latest(&dir).unwrap().unwrap();
+        assert_eq!((best.rank, best.iter), (2, 99));
+        // garbage files are skipped, not fatal
+        std::fs::write(dir.join("ckpt_r7.bin"), b"garbage").unwrap();
+        assert_eq!(latest(&dir).unwrap().unwrap().iter, 99);
+        // tie on iter: lowest rank wins (deterministic restore)
+        save(&dir, &ckpt(0, 99)).unwrap();
+        assert_eq!(latest(&dir).unwrap().unwrap().rank, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn roundtrip_through_disk_is_exact() {
+        let dir = tmpdir("roundtrip");
+        let c = ckpt(5, 7);
+        let path = save(&dir, &c).unwrap();
+        assert_eq!(load(&path).unwrap(), c);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,7 +1,7 @@
 //! Data-plane framing: length-prefixed messages between worker processes,
 //! reusing the `rpc::wire` codec style (little-endian, no deps).
 //!
-//! Two message kinds flow on a mesh connection:
+//! Three message kinds flow on a mesh connection:
 //!
 //! * `Hello { rank }` — sent once by the connecting side so the acceptor
 //!   can index the stream by peer rank.
@@ -9,7 +9,15 @@
 //!   elements for P-Reduce group `gid`. The `(gid, step)` tag lets the
 //!   receiver assert it is consuming the transfer it expects: armed
 //!   groups are disjoint (lock vector) and an edge is quiescent between
-//!   groups, so a mismatch is a protocol bug, not a reordering.
+//!   groups, so a same-group mismatch is a protocol bug, not a
+//!   reordering.
+//! * `Poison { gid }` — failure repair: a worker unwinding from group
+//!   `gid`'s broken collective poisons its ring successor, which unwinds
+//!   and forwards the poison, so the whole ring unblocks in one
+//!   round-trip instead of waiting out socket timeouts. A receiver in a
+//!   *later* group skips stale frames of aborted predecessors (group ids
+//!   are monotone per edge — conflicting groups serialize on the lock
+//!   vector).
 //!
 //! Outer wire format matches the GG RPC: `u32 length (LE) | payload`.
 
@@ -30,6 +38,8 @@ pub enum Frame {
     Hello { rank: u32 },
     /// One ring-collective transfer.
     Chunk { gid: u64, step: u32, data: Vec<f32> },
+    /// Failure repair: group `gid`'s collective is broken — unwind.
+    Poison { gid: u64 },
 }
 
 impl Frame {
@@ -48,6 +58,10 @@ impl Frame {
                 for v in data {
                     w.bytes(&v.to_le_bytes());
                 }
+            }
+            Frame::Poison { gid } => {
+                w.u8(2);
+                w.u64(*gid);
             }
         }
         w.finish()
@@ -71,6 +85,7 @@ impl Frame {
                 }
                 Frame::Chunk { gid, step, data }
             }
+            2 => Frame::Poison { gid: r.u64()? },
             t => bail!("bad frame tag {t}"),
         };
         r.done()?;
@@ -131,6 +146,7 @@ mod tests {
             Frame::Hello { rank: 3 },
             Frame::Chunk { gid: 9, step: 4, data: vec![1.0, -2.5, f32::MIN] },
             Frame::Chunk { gid: u64::MAX, step: 0, data: vec![] },
+            Frame::Poison { gid: 77 },
         ] {
             assert_eq!(Frame::decode(&frame.encode()).unwrap(), frame);
         }

@@ -19,6 +19,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -26,9 +27,23 @@ use crate::cluster::SlowdownEvent;
 use crate::collectives::pipeline::OverlapConfig;
 use crate::gg::GgConfig;
 use crate::metrics::{speed_table, worker_table, WorkerStat};
-use crate::rpc::{GgClient, GgServer, StatsReport};
+use crate::rpc::{GgClient, GgServer, LivenessConfig, StatsReport};
 
 use super::worker::{format_worker_schedule, WorkerReport};
+
+/// Chaos orchestration: kill one worker mid-run, optionally spawn a
+/// checkpoint-restored replacement that rejoins the cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KillSpec {
+    /// Rank to SIGKILL.
+    pub rank: usize,
+    /// Seconds after the peer-list broadcast to pull the trigger —
+    /// mid-collective with any realistic compute floor.
+    pub after_secs: f64,
+    /// Spawn a `--rejoin` replacement this many seconds after the kill
+    /// (needs `ckpt_dir`); None = the rank stays gone.
+    pub rejoin_after_secs: Option<f64>,
+}
 
 /// Cluster-launch configuration (CLI: `ripples launch`).
 #[derive(Debug, Clone)]
@@ -69,6 +84,18 @@ pub struct LaunchConfig {
     /// worker — shard step tags are part of the wire schedule, so the
     /// whole cluster must agree on `K`.
     pub overlap: OverlapConfig,
+    /// GG failure-detection deadline in ms (0 disables the monitor —
+    /// a crash then holds its locks forever, the pre-fault-tolerance
+    /// behaviour).
+    pub liveness_ms: u64,
+    /// Worker heartbeat period in ms (0 = no beacon threads).
+    pub heartbeat_ms: u64,
+    /// Checkpoint cadence forwarded to workers (`--ckpt-every`; 0 = off).
+    pub ckpt_every: u64,
+    /// Shared checkpoint directory (`--ckpt-dir`).
+    pub ckpt_dir: Option<PathBuf>,
+    /// Chaos orchestration (`--kill R@SECS`, `--rejoin-after SECS`).
+    pub kill: Option<KillSpec>,
 }
 
 impl Default for LaunchConfig {
@@ -92,6 +119,11 @@ impl Default for LaunchConfig {
             tiny: true,
             echo: false,
             overlap: OverlapConfig::serial(),
+            liveness_ms: 4000,
+            heartbeat_ms: 200,
+            ckpt_every: 0,
+            ckpt_dir: None,
+            kill: None,
         }
     }
 }
@@ -99,12 +131,19 @@ impl Default for LaunchConfig {
 /// Aggregated outcome of a cluster run.
 #[derive(Debug)]
 pub struct LaunchReport {
+    /// Reports from every worker that finished — the killed rank has
+    /// none; its replacement (if any) reports under the same rank.
     pub workers: Vec<WorkerReport>,
     /// GG counters plus the measured speed table.
     pub gg_stats: StatsReport,
     /// Configured ground-truth slowdown factor per worker (final
     /// schedule state) — what the measured table should converge to.
     pub true_factors: Vec<f64>,
+    /// The rank SIGKILLed by the chaos spec, if any.
+    pub killed: Option<usize>,
+    /// GG counters snapshotted right after the kill — the "before" for
+    /// assertions like "the rejoined rank was drafted *again*".
+    pub gg_stats_at_kill: Option<StatsReport>,
 }
 
 impl LaunchReport {
@@ -133,6 +172,15 @@ impl LaunchReport {
             s.conflicts,
             s.buffer_hits,
         );
+        if s.deaths > 0 || s.groups_aborted > 0 || s.rejoins > 0 {
+            out.push_str(&format!(
+                "faults: {} deaths, {} groups aborted, {} rejoins{}\n",
+                s.deaths,
+                s.groups_aborted,
+                s.rejoins,
+                self.killed.map(|r| format!(" (rank {r} killed)")).unwrap_or_default(),
+            ));
+        }
         if s.speeds.iter().any(|&v| v > 0.0) {
             out.push_str("measured speed table (GG view):\n");
             out.push_str(&speed_table(&s.speeds, &self.true_factors, &s.drafts).render());
@@ -167,6 +215,20 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
         }
     }
     cfg.overlap.validate().map_err(|e| anyhow::anyhow!("bad overlap config: {e}"))?;
+    if let Some(kill) = &cfg.kill {
+        if kill.rank >= cfg.workers {
+            bail!("kill rank {} out of range", kill.rank);
+        }
+        if kill.after_secs < 0.0 || kill.after_secs >= cfg.secs {
+            bail!("kill time {}s outside the {}s training window", kill.after_secs, cfg.secs);
+        }
+        if kill.rejoin_after_secs.is_some() && cfg.ckpt_dir.is_none() {
+            bail!("rejoin needs ckpt_dir (the replacement restores from it)");
+        }
+        if cfg.liveness_ms == 0 || cfg.heartbeat_ms == 0 {
+            bail!("kill orchestration needs liveness_ms and heartbeat_ms > 0");
+        }
+    }
     // Workers physically rendezvous to execute groups, so the GG must
     // draft only idle workers into fresh groups and every member's own
     // Sync must resolve to the already-scheduled group (Group Buffer) —
@@ -181,7 +243,10 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
         c
     };
     gg_cfg.rendezvous = true;
-    let server = GgServer::spawn("127.0.0.1:0", gg_cfg, cfg.seed).context("spawn GG")?;
+    let liveness = (cfg.liveness_ms > 0)
+        .then(|| LivenessConfig::with_timeout(Duration::from_millis(cfg.liveness_ms)));
+    let server = GgServer::spawn_with_liveness("127.0.0.1:0", gg_cfg, cfg.seed, liveness)
+        .context("spawn GG")?;
     let gg_addr = server.addr.to_string();
 
     // Any failure below must not leak worker processes: they would keep
@@ -194,7 +259,7 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
             let _ = wp.child.wait();
         }
     }
-    let reports = result?;
+    let (reports, gg_stats_at_kill) = result?;
 
     let mut stats_client = GgClient::connect(server.addr).context("GG stats")?;
     let gg_stats = stats_client.stats()?;
@@ -218,64 +283,88 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
             )
         })
         .collect();
-    Ok(LaunchReport { workers: reports, gg_stats, true_factors })
+    Ok(LaunchReport {
+        workers: reports,
+        gg_stats,
+        true_factors,
+        killed: cfg.kill.map(|k| k.rank),
+        gg_stats_at_kill,
+    })
 }
 
 struct WorkerProc {
+    rank: usize,
     child: Child,
     out: BufReader<std::process::ChildStdout>,
+    /// False for the SIGKILLed rank: EOF without a report is expected.
+    expect_report: bool,
 }
 
-/// Phases 1–3 of the cluster run; every spawned child is pushed into
-/// `children` *before* any fallible step so the caller can reap them.
+/// Shared argv for an original worker or a rejoining replacement.
+fn worker_command(cfg: &LaunchConfig, gg_addr: &str, rank: usize, secs: f64) -> Command {
+    let slowdown = match cfg.slow {
+        Some((w, f)) if w == rank => f,
+        _ => 1.0,
+    };
+    // this rank's share of the cluster-wide slowdown schedule
+    let rank_schedule: Vec<(f64, u64)> = cfg
+        .slow_schedule
+        .iter()
+        .filter(|ev| ev.worker == rank)
+        .map(|ev| (ev.factor, ev.start_iter))
+        .collect();
+    let mut cmd = Command::new(&cfg.bin);
+    cmd.arg("worker")
+        .args(["--rank", &rank.to_string()])
+        .args(["--workers", &cfg.workers.to_string()])
+        .args(["--gg", gg_addr])
+        .args(["--secs", &secs.to_string()])
+        .args(["--slowdown", &slowdown.to_string()])
+        .args(["--seed", &cfg.seed.to_string()])
+        .args(["--lr", &cfg.lr.to_string()])
+        .args(["--batch", &cfg.batch.to_string()])
+        .args(["--bias", &cfg.data_bias.to_string()])
+        .args(["--floor-ms", &cfg.compute_floor_ms.to_string()])
+        .args(["--model", if cfg.tiny { "tiny" } else { "paper" }])
+        .args(["--overlap-shards", &cfg.overlap.shards.to_string()])
+        .args(["--max-staleness", &cfg.overlap.max_staleness.to_string()])
+        .args(["--heartbeat-ms", &cfg.heartbeat_ms.to_string()])
+        .stdout(Stdio::piped());
+    if cfg.max_iters > 0 {
+        cmd.args(["--iters", &cfg.max_iters.to_string()]);
+    }
+    if !rank_schedule.is_empty() {
+        cmd.args(["--slow-schedule", &format_worker_schedule(&rank_schedule)]);
+    }
+    if cfg.ckpt_every > 0 {
+        cmd.args(["--ckpt-every", &cfg.ckpt_every.to_string()]);
+    }
+    if let Some(dir) = &cfg.ckpt_dir {
+        cmd.args(["--ckpt-dir", &dir.display().to_string()]);
+    }
+    cmd
+}
+
+/// Phases 1–3 of the cluster run (plus the optional chaos phase);
+/// every spawned child is pushed into `children` *before* any fallible
+/// step so the caller can reap them. Returns the collected reports and,
+/// when a kill was orchestrated, the GG stats snapshotted right after it.
 fn run_cluster(
     cfg: &LaunchConfig,
     gg_addr: &str,
     children: &mut Vec<WorkerProc>,
-) -> Result<Vec<WorkerReport>> {
+) -> Result<(Vec<WorkerReport>, Option<StatsReport>)> {
     // ---- phase 1: spawn everyone, collect advertised data-plane addrs
     let mut addrs: Vec<String> = Vec::new();
     for rank in 0..cfg.workers {
-        let slowdown = match cfg.slow {
-            Some((w, f)) if w == rank => f,
-            _ => 1.0,
-        };
-        // this rank's share of the cluster-wide slowdown schedule
-        let rank_schedule: Vec<(f64, u64)> = cfg
-            .slow_schedule
-            .iter()
-            .filter(|ev| ev.worker == rank)
-            .map(|ev| (ev.factor, ev.start_iter))
-            .collect();
-        let mut cmd = Command::new(&cfg.bin);
-        cmd.arg("worker")
-            .args(["--rank", &rank.to_string()])
-            .args(["--workers", &cfg.workers.to_string()])
-            .args(["--gg", gg_addr])
-            .args(["--secs", &cfg.secs.to_string()])
-            .args(["--slowdown", &slowdown.to_string()])
-            .args(["--seed", &cfg.seed.to_string()])
-            .args(["--lr", &cfg.lr.to_string()])
-            .args(["--batch", &cfg.batch.to_string()])
-            .args(["--bias", &cfg.data_bias.to_string()])
-            .args(["--floor-ms", &cfg.compute_floor_ms.to_string()])
-            .args(["--model", if cfg.tiny { "tiny" } else { "paper" }])
-            .args(["--overlap-shards", &cfg.overlap.shards.to_string()])
-            .args(["--max-staleness", &cfg.overlap.max_staleness.to_string()])
-            .stdin(Stdio::piped())
-            .stdout(Stdio::piped());
-        if cfg.max_iters > 0 {
-            cmd.args(["--iters", &cfg.max_iters.to_string()]);
-        }
-        if !rank_schedule.is_empty() {
-            cmd.args(["--slow-schedule", &format_worker_schedule(&rank_schedule)]);
-        }
+        let mut cmd = worker_command(cfg, gg_addr, rank, cfg.secs);
+        cmd.stdin(Stdio::piped());
         let mut child = cmd
             .spawn()
             .with_context(|| format!("spawn worker {rank} from {}", cfg.bin.display()))?;
         let out = BufReader::new(child.stdout.take().expect("piped stdout"));
         // registered before any fallible read so the caller can reap it
-        children.push(WorkerProc { child, out });
+        children.push(WorkerProc { rank, child, out, expect_report: true });
         let wp = children.last_mut().unwrap();
         let addr = loop {
             let mut line = String::new();
@@ -294,20 +383,57 @@ fn run_cluster(
 
     // ---- phase 2: broadcast the rank-indexed peer list
     let peer_line = format!("PEERS {}\n", addrs.join(","));
-    for (rank, wp) in children.iter_mut().enumerate() {
+    for wp in children.iter_mut() {
         wp.child
             .stdin
             .take()
             .expect("piped stdin")
             .write_all(peer_line.as_bytes())
-            .with_context(|| format!("send peer list to worker {rank}"))?;
+            .with_context(|| format!("send peer list to worker {}", wp.rank))?;
         // stdin handle drops here; workers only read the one line
+    }
+    let training_started = Instant::now();
+
+    // ---- chaos phase: SIGKILL the victim mid-run; optionally spawn a
+    // checkpoint-restored replacement that rejoins under the same rank
+    let mut stats_at_kill = None;
+    if let Some(kill) = &cfg.kill {
+        std::thread::sleep(Duration::from_secs_f64(kill.after_secs));
+        let victim = &mut children[kill.rank];
+        victim.child.kill().context("kill victim worker")?;
+        victim.child.wait().context("reap victim worker")?;
+        victim.expect_report = false;
+        let mut stats_client = GgClient::connect(gg_addr).context("stats after kill")?;
+        stats_at_kill = Some(stats_client.stats()?);
+        drop(stats_client);
+        if let Some(rejoin_after) = kill.rejoin_after_secs {
+            std::thread::sleep(Duration::from_secs_f64(rejoin_after));
+            let remaining =
+                (cfg.secs - training_started.elapsed().as_secs_f64()).max(1.0);
+            let mut cmd = worker_command(cfg, gg_addr, kill.rank, remaining);
+            // explicit peer list: no launcher handshake the second time
+            // (the replacement registers its fresh address with the GG,
+            // which survivors re-resolve via Lookup)
+            cmd.args(["--peers", &addrs.join(",")])
+                .args(["--rejoin", "true"])
+                .stdin(Stdio::null());
+            let mut child = cmd.spawn().with_context(|| {
+                format!("spawn replacement for rank {}", kill.rank)
+            })?;
+            let out = BufReader::new(child.stdout.take().expect("piped stdout"));
+            children.push(WorkerProc {
+                rank: kill.rank,
+                child,
+                out,
+                expect_report: true,
+            });
+        }
     }
 
     // ---- phase 3: collect reports
     let mut reports: Vec<WorkerReport> = Vec::new();
-    for rank in 0..children.len() {
-        let wp = &mut children[rank];
+    for wp in children.iter_mut() {
+        let rank = wp.rank;
         let mut report = None;
         let mut line = String::new();
         loop {
@@ -321,6 +447,9 @@ fn run_cluster(
                 print!("[w{rank}] {line}");
             }
         }
+        if !wp.expect_report {
+            continue; // SIGKILLed: already reaped, no report expected
+        }
         let status = wp.child.wait().context("wait for worker")?;
         if !status.success() {
             bail!("worker {rank} failed with {status}");
@@ -332,5 +461,5 @@ fn run_cluster(
         }
         reports.push(report);
     }
-    Ok(reports)
+    Ok((reports, stats_at_kill))
 }

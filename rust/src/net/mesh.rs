@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::collectives::ring::ChunkTransport;
+use crate::collectives::ring::{AbortedError, ChunkTransport};
 
 use super::frame::{read_frame, write_frame, Frame};
 
@@ -39,8 +39,10 @@ const MAX_PENDING_HANDSHAKES: usize = 128;
 pub struct WorkerMesh {
     rank: u32,
     local_addr: SocketAddr,
-    /// Rank-indexed peer data-plane addresses (set after the handshake).
-    peers: Vec<SocketAddr>,
+    /// Rank-indexed peer data-plane addresses (set after the handshake;
+    /// an entry is *updated* when a rank rejoins at a new address — see
+    /// [`WorkerMesh::update_peer`]).
+    peers: Mutex<Vec<SocketAddr>>,
     outbound: Mutex<HashMap<u32, TcpStream>>,
     inbound: Arc<Inbound>,
     /// Per-transfer socket timeout: a peer dying mid-collective surfaces
@@ -113,7 +115,7 @@ impl WorkerMesh {
         Ok(Self {
             rank: rank as u32,
             local_addr,
-            peers: Vec::new(),
+            peers: Mutex::new(Vec::new()),
             outbound: Mutex::new(HashMap::new()),
             inbound,
             io_timeout: Duration::from_secs(60),
@@ -128,38 +130,66 @@ impl WorkerMesh {
     }
 
     /// Install the rank-indexed peer address list (index = worker rank).
-    pub fn set_peers(&mut self, peers: Vec<SocketAddr>) {
-        self.peers = peers;
+    pub fn set_peers(&self, peers: Vec<SocketAddr>) {
+        *self.peers.lock().unwrap() = peers;
     }
 
-    /// Dial (or reuse) the outbound edge to `to`, returning a handle that
-    /// shares the cached socket.
-    fn outbound_to(&self, to: u32) -> Result<TcpStream> {
+    /// A rank came back at a new data-plane address (checkpoint-restored
+    /// replacement, learned via the GG's `Lookup` registry): record it
+    /// and drop any cached edges to the old incarnation so the next dial
+    /// reaches the new process. No-op when the address is unchanged.
+    pub fn update_peer(&self, rank: usize, addr: SocketAddr) {
+        {
+            let mut peers = self.peers.lock().unwrap();
+            match peers.get_mut(rank) {
+                Some(slot) if *slot != addr => *slot = addr,
+                _ => return,
+            }
+        }
+        self.invalidate(rank);
+    }
+
+    /// Forget the cached edges to `rank` (both directions): the next
+    /// collective re-dials and re-accepts. Called after a socket to the
+    /// rank was observed failing — a dead peer's half-open streams must
+    /// not be reused, and a rejoined replacement registers fresh ones.
+    pub fn invalidate(&self, rank: usize) {
+        self.outbound.lock().unwrap().remove(&(rank as u32));
+        self.inbound.conns.lock().unwrap().remove(&(rank as u32));
+    }
+
+    /// Dial (or reuse) the outbound edge to `to` before `deadline`.
+    /// `Ok(None)` = the peer did not answer in time (dead or still
+    /// binding — the caller decides by asking the control plane).
+    fn outbound_within(&self, to: u32, deadline: Instant) -> Result<Option<TcpStream>> {
         let mut cache = self.outbound.lock().unwrap();
         if let Some(s) = cache.get(&to) {
-            return Ok(s.try_clone()?);
+            return Ok(Some(s.try_clone()?));
         }
         let addr = *self
             .peers
+            .lock()
+            .unwrap()
             .get(to as usize)
             .ok_or_else(|| anyhow!("no address for rank {to}"))?;
         // The launcher distributes addresses only after every listener is
-        // bound, so a *refused* connection is transient (peer mid-restart
-        // at worst) — retry those briefly. Anything else (unroutable
-        // host, permission) is a configuration error; surface it now
-        // rather than spinning through the whole io_timeout.
-        let deadline = Instant::now() + self.io_timeout;
+        // bound, so a *refused* connection is transient (peer crashed or
+        // mid-restart) — retry those until the deadline. Anything else
+        // (unroutable host, permission) is a configuration error; surface
+        // it now rather than spinning through the whole budget.
         let mut stream = loop {
             match TcpStream::connect(addr) {
                 Ok(s) => break s,
                 Err(e)
-                    if Instant::now() < deadline
-                        && matches!(
-                            e.kind(),
-                            std::io::ErrorKind::ConnectionRefused
-                                | std::io::ErrorKind::ConnectionReset
-                        ) =>
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionRefused
+                            | std::io::ErrorKind::ConnectionReset
+                    ) =>
                 {
+                    if Instant::now() >= deadline {
+                        return Ok(None);
+                    }
                     thread::sleep(Duration::from_millis(20));
                 }
                 Err(e) => return Err(e).with_context(|| format!("dial rank {to} at {addr}")),
@@ -170,23 +200,23 @@ impl WorkerMesh {
         write_frame(&mut stream, &Frame::Hello { rank: self.rank })?;
         let handle = stream.try_clone()?;
         cache.insert(to, stream);
-        Ok(handle)
+        Ok(Some(handle))
     }
 
-    /// Wait for the inbound edge from `from` (its first chunk may race
-    /// ahead of our accept loop registering the stream).
-    fn inbound_from(&self, from: u32) -> Result<TcpStream> {
-        let deadline = Instant::now() + self.io_timeout;
+    /// Wait until `deadline` for the inbound edge from `from` (its first
+    /// chunk may race ahead of our accept loop registering the stream).
+    /// `Ok(None)` = nothing registered in time.
+    fn inbound_within(&self, from: u32, deadline: Instant) -> Result<Option<TcpStream>> {
         let mut conns = self.inbound.conns.lock().unwrap();
         loop {
             if let Some(s) = conns.get(&from) {
                 let clone = s.try_clone()?;
                 clone.set_read_timeout(Some(self.io_timeout)).ok();
-                return Ok(clone);
+                return Ok(Some(clone));
             }
             let now = Instant::now();
             if now >= deadline {
-                bail!("no inbound connection from rank {from} within {:?}", self.io_timeout);
+                return Ok(None);
             }
             let (guard, _) = self
                 .inbound
@@ -200,12 +230,31 @@ impl WorkerMesh {
     /// Build the ring transport for this worker's position in `members`
     /// (the GG's sorted member list): send edge to the successor, receive
     /// edge from the predecessor. Returns the transport plus this
-    /// worker's ring position.
+    /// worker's ring position. Blocks up to the full `io_timeout`.
     pub fn ring_transport(
         &self,
         gid: u64,
         members: &[usize],
     ) -> Result<(TcpRingTransport, usize)> {
+        match self.try_ring_transport(gid, members, self.io_timeout)? {
+            Some(pair) => Ok(pair),
+            None => bail!(
+                "group {gid}: ring edges not established within {:?} ({members:?})",
+                self.io_timeout
+            ),
+        }
+    }
+
+    /// [`WorkerMesh::ring_transport`] with a bounded wait: `Ok(None)` if
+    /// either edge is still missing after `wait`, so the caller can poll
+    /// the control plane (has the group been aborted? did a member rejoin
+    /// at a new address?) instead of blocking through a crash.
+    pub fn try_ring_transport(
+        &self,
+        gid: u64,
+        members: &[usize],
+        wait: Duration,
+    ) -> Result<Option<(TcpRingTransport, usize)>> {
         let p = members.len();
         let pos = members
             .iter()
@@ -216,9 +265,14 @@ impl WorkerMesh {
         }
         let succ = members[(pos + 1) % p] as u32;
         let pred = members[(pos + p - 1) % p] as u32;
-        let send = self.outbound_to(succ)?;
-        let recv = self.inbound_from(pred)?;
-        Ok((TcpRingTransport { gid, send, recv }, pos))
+        let deadline = Instant::now() + wait;
+        let Some(send) = self.outbound_within(succ, deadline)? else {
+            return Ok(None);
+        };
+        let Some(recv) = self.inbound_within(pred, deadline)? else {
+            return Ok(None);
+        };
+        Ok(Some((TcpRingTransport { gid, send, recv, succ, pred, failed: None }, pos)))
     }
 }
 
@@ -232,32 +286,76 @@ impl Drop for WorkerMesh {
 }
 
 /// A worker's directed ring edges for one P-Reduce group, framing chunk
-/// transfers with `(gid, step)` tags (see `net::frame`).
+/// transfers with `(gid, step)` tags (see `net::frame`). On a transport
+/// failure the rank whose socket broke is recorded
+/// ([`TcpRingTransport::failed_peer`]) so the engine can invalidate that
+/// edge and accuse the right suspect; a received `Poison` surfaces as a
+/// typed [`AbortedError`] (unwind-and-retry, nobody to accuse).
 pub struct TcpRingTransport {
     gid: u64,
     send: TcpStream,
     recv: TcpStream,
+    succ: u32,
+    pred: u32,
+    failed: Option<u32>,
+}
+
+impl TcpRingTransport {
+    /// The rank whose socket was observed failing, if any (set by the
+    /// first send/recv error; poison receipt sets nothing).
+    pub fn failed_peer(&self) -> Option<usize> {
+        self.failed.map(|r| r as usize)
+    }
+
+    /// Best-effort: poison the ring successor so it unwinds immediately
+    /// instead of waiting out a socket timeout. Errors are swallowed —
+    /// the successor may be the dead rank itself.
+    pub fn poison(&mut self) {
+        let _ = write_frame(&mut self.send, &Frame::Poison { gid: self.gid });
+    }
 }
 
 impl ChunkTransport for TcpRingTransport {
     fn send(&mut self, step: u32, data: &[f32]) -> Result<()> {
-        super::frame::write_chunk(&mut self.send, self.gid, step, data)
+        super::frame::write_chunk(&mut self.send, self.gid, step, data).map_err(|e| {
+            self.failed.get_or_insert(self.succ);
+            e
+        })
     }
 
     fn recv(&mut self, step: u32, out: &mut Vec<f32>) -> Result<()> {
-        match read_frame(&mut self.recv)? {
-            Frame::Chunk { gid, step: got, data } => {
-                if gid != self.gid || got != step {
-                    bail!(
-                        "chunk tag mismatch: got (gid {gid}, step {got}), \
-                         expected (gid {}, step {step})",
-                        self.gid
-                    );
+        loop {
+            let frame = read_frame(&mut self.recv).map_err(|e| {
+                self.failed.get_or_insert(self.pred);
+                e
+            })?;
+            match frame {
+                Frame::Chunk { gid, step: got, data } if gid == self.gid => {
+                    if got != step {
+                        bail!(
+                            "chunk tag mismatch: got (gid {gid}, step {got}), \
+                             expected (gid {}, step {step})",
+                            self.gid
+                        );
+                    }
+                    *out = data;
+                    return Ok(());
                 }
-                *out = data;
-                Ok(())
+                // Leftovers of an *earlier* aborted group on this edge
+                // (ids are monotone per edge: conflicting groups
+                // serialize on the lock vector): the predecessor sent
+                // chunks, learned of the abort, and poisoned — while we
+                // skipped that group at WaitArmed and never drained them.
+                Frame::Chunk { gid, .. } if gid < self.gid => continue,
+                Frame::Poison { gid } if gid == self.gid => {
+                    return Err(AbortedError { gid }.into());
+                }
+                Frame::Poison { gid } if gid < self.gid => continue, // stale
+                other => bail!(
+                    "group {}: unexpected frame on ring edge: {other:?}",
+                    self.gid
+                ),
             }
-            other => bail!("expected chunk frame, got {other:?}"),
         }
     }
 }
@@ -362,6 +460,139 @@ mod tests {
         for buf in &results {
             assert!(buf.iter().all(|&v| (v - 0.5).abs() < 1e-6), "{buf:?}");
         }
+    }
+
+    fn pair_meshes(io_secs: u64) -> (Vec<WorkerMesh>, Vec<SocketAddr>) {
+        let mut meshes: Vec<WorkerMesh> = [0usize, 1]
+            .iter()
+            .map(|&r| WorkerMesh::bind(r, "127.0.0.1:0").unwrap())
+            .collect();
+        let addrs: Vec<SocketAddr> = meshes.iter().map(|m| m.local_addr()).collect();
+        for m in &mut meshes {
+            m.set_peers(addrs.clone());
+            m.io_timeout = Duration::from_secs(io_secs);
+        }
+        (meshes, addrs)
+    }
+
+    #[test]
+    fn poison_unwinds_the_ring_as_a_typed_abort() {
+        use crate::collectives::ring::AbortedError;
+        let (meshes, _) = pair_meshes(10);
+        let members = [0usize, 1];
+        thread::scope(|scope| {
+            let m0 = &meshes[0];
+            let m1 = &meshes[1];
+            let h0 = scope.spawn(move || {
+                let mut buf = vec![1.0f32; 8];
+                let (mut t, pos) = m0.ring_transport(5, &members).unwrap();
+                let err = ring_allreduce_via(pos, 2, &mut buf, &mut t)
+                    .expect_err("poisoned collective must fail");
+                assert!(
+                    err.downcast_ref::<AbortedError>().is_some(),
+                    "expected typed AbortedError, got: {err:#}"
+                );
+                assert_eq!(
+                    err.downcast_ref::<AbortedError>().unwrap().gid,
+                    5,
+                    "abort must name the poisoned group"
+                );
+                assert_eq!(t.failed_peer(), None, "poison accuses nobody");
+            });
+            let h1 = scope.spawn(move || {
+                // rank 1 joins the edges but poisons instead of reducing
+                let (mut t, _) = m1.ring_transport(5, &members).unwrap();
+                t.poison();
+            });
+            h0.join().unwrap();
+            h1.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn stale_frames_of_aborted_groups_are_skipped() {
+        let (meshes, _) = pair_meshes(10);
+        let members = [0usize, 1];
+        thread::scope(|scope| {
+            let m0 = &meshes[0];
+            let m1 = &meshes[1];
+            let h0 = scope.spawn(move || {
+                // group 3: rank 0 sent one chunk, learned of the abort,
+                // poisoned. group 4 then runs normally on the same edge.
+                let (mut t3, _) = m0.ring_transport(3, &members).unwrap();
+                t3.send(0, &[9.0; 4]).unwrap();
+                t3.poison();
+                let mut buf = vec![0.0f32; 8];
+                let (mut t4, pos) = m0.ring_transport(4, &members).unwrap();
+                ring_allreduce_via(pos, 2, &mut buf, &mut t4).unwrap();
+                buf
+            });
+            let h1 = scope.spawn(move || {
+                // rank 1 never consumed group 3's frames (it skipped the
+                // group at WaitArmed); its group-4 recv must skip them
+                let mut buf = vec![1.0f32; 8];
+                let (mut t4, pos) = m1.ring_transport(4, &members).unwrap();
+                ring_allreduce_via(pos, 2, &mut buf, &mut t4).unwrap();
+                buf
+            });
+            let b0 = h0.join().unwrap();
+            let b1 = h1.join().unwrap();
+            assert!(b0.iter().all(|&v| (v - 0.5).abs() < 1e-6), "{b0:?}");
+            assert_eq!(b0, b1);
+        });
+    }
+
+    #[test]
+    fn try_ring_transport_times_out_cleanly_on_a_dead_peer() {
+        let mesh = WorkerMesh::bind(0, "127.0.0.1:0").unwrap();
+        // rank 1's "address" has no listener behind it (peer is dead):
+        // grab a port by binding and dropping a listener
+        let dead_addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        mesh.set_peers(vec![mesh.local_addr(), dead_addr]);
+        let t0 = Instant::now();
+        let got = mesh
+            .try_ring_transport(1, &[0, 1], Duration::from_millis(120))
+            .expect("timeout is not an error");
+        assert!(got.is_none(), "dead peer must yield None, not a transport");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "bounded wait must return promptly"
+        );
+    }
+
+    #[test]
+    fn update_peer_drops_stale_edges_only_on_change() {
+        let (meshes, addrs) = pair_meshes(10);
+        // same address: cached edges must survive (no-op)
+        meshes[0].update_peer(1, addrs[1]);
+        // new address: the cached entry (if any) is invalidated and the
+        // address table rewritten — observable via a fresh dial target
+        let replacement = WorkerMesh::bind(1, "127.0.0.1:0").unwrap();
+        replacement.set_peers(addrs.clone());
+        meshes[0].update_peer(1, replacement.local_addr());
+        let members = [0usize, 1];
+        thread::scope(|scope| {
+            let m0 = &meshes[0];
+            let mr = &replacement;
+            let h0 = scope.spawn(move || {
+                let mut buf = vec![0.0f32; 4];
+                let (mut t, pos) = m0.ring_transport(9, &members).unwrap();
+                ring_allreduce_via(pos, 2, &mut buf, &mut t).unwrap();
+                buf
+            });
+            let h1 = scope.spawn(move || {
+                let mut buf = vec![1.0f32; 4];
+                let (mut t, pos) = mr.ring_transport(9, &members).unwrap();
+                ring_allreduce_via(pos, 2, &mut buf, &mut t).unwrap();
+                buf
+            });
+            let b0 = h0.join().unwrap();
+            assert!(b0.iter().all(|&v| (v - 0.5).abs() < 1e-6), "{b0:?}");
+            h1.join().unwrap();
+        });
     }
 
     #[test]

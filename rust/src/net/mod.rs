@@ -21,6 +21,18 @@
 //! continues on bounded-stale weights (`collectives::pipeline`;
 //! DESIGN.md §Perf).
 //!
+//! # Crash tolerance
+//!
+//! Workers heartbeat the GG ([`crate::rpc::LivenessConfig`]); a worker
+//! whose ring peer dies mid-collective unwinds via socket error or
+//! `Poison` frame, restores its pre-collective snapshot, reports
+//! `AbortGroup`, and retries in a repaired group. Periodic checkpoints
+//! ([`ckpt`], `--ckpt-every`/`--ckpt-dir`) let a replacement process
+//! `--rejoin`: it restores the freshest snapshot in the shared directory
+//! and re-registers its (new) data-plane address with the GG, which
+//! surviving peers re-resolve via `Lookup`. DESIGN.md §Fault-tolerance
+//! has the full data flow.
+//!
 //! # Speed telemetry and dynamic stragglers
 //!
 //! Each worker timestamps its compute phase, folds the duration into an
@@ -49,13 +61,15 @@
 //! assert!((r.ewma_secs - 0.0245).abs() < 1e-9);
 //! ```
 
+pub mod ckpt;
 pub mod frame;
 pub mod launch;
 pub mod mesh;
 pub mod worker;
 
+pub use ckpt::Checkpoint;
 pub use frame::Frame;
-pub use launch::{launch_local, LaunchConfig, LaunchReport};
+pub use launch::{launch_local, KillSpec, LaunchConfig, LaunchReport};
 pub use mesh::{TcpRingTransport, WorkerMesh};
 pub use worker::{
     format_worker_schedule, parse_worker_schedule, run_worker, worker_main, WorkerParams,

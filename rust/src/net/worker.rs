@@ -32,11 +32,26 @@
 //! until the Group Buffer drains — partners of already-scheduled groups
 //! would otherwise block forever on our membership. The drain always
 //! executes serially (no stale steps are allowed after the timed window).
+//!
+//! # Crash tolerance
+//!
+//! A heartbeat thread proves the rank alive on its own GG connection.
+//! When a collective breaks (peer socket error, or a `Poison` frame
+//! relayed around the ring), the worker rolls back to its pre-collective
+//! snapshot, poisons downstream, reports `AbortGroup` (accusing the peer
+//! it saw fail), and retries at its next sync in a repaired group.
+//! `--ckpt-every`/`--ckpt-dir` snapshot the model + trainer state; a
+//! `--rejoin` replacement restores the freshest snapshot in the shared
+//! directory and re-registers its new data-plane address, which peers
+//! re-resolve through the GG's `Lookup` registry.
 
 use std::io::BufRead;
 use std::io::Write as _;
 use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -47,9 +62,10 @@ use crate::collectives::pipeline::{
 };
 use crate::model::mlp::{loss_only, sgd_step, MlpScratch, MlpSpec};
 use crate::model::Dataset;
-use crate::rpc::GgClient;
+use crate::rpc::{GgClient, GroupState, WaitOutcome};
 
-use super::mesh::WorkerMesh;
+use super::ckpt;
+use super::mesh::{TcpRingTransport, WorkerMesh};
 
 /// Everything one worker process needs (built from CLI flags by
 /// `ripples worker`, or directly by tests).
@@ -87,6 +103,21 @@ pub struct WorkerParams {
     /// Pipelined-collective knobs (`--overlap-shards`/`--max-staleness`);
     /// the serial default reproduces the pre-overlap loop bit-for-bit.
     pub overlap: OverlapConfig,
+    /// Heartbeat period for the liveness beacon thread (0 = no thread —
+    /// the GG then sees this worker only through its Sync traffic).
+    pub heartbeat_ms: u64,
+    /// How long to wait for ring edges before polling the GG "was the
+    /// group aborted? did a member rejoin elsewhere?" while acquiring a
+    /// collective's transport.
+    pub probe_ms: u64,
+    /// Snapshot the model + trainer state every this many iterations
+    /// (0 = never) into `ckpt_dir`.
+    pub ckpt_every: u64,
+    /// Shared checkpoint directory (see `net::ckpt`).
+    pub ckpt_dir: Option<PathBuf>,
+    /// This process replaces a crashed rank: restore the freshest
+    /// checkpoint in `ckpt_dir` and `Rejoin` instead of `Register`.
+    pub rejoin: bool,
 }
 
 impl Default for WorkerParams {
@@ -108,6 +139,11 @@ impl Default for WorkerParams {
             dataset_size: 2048,
             eval_size: 256,
             overlap: OverlapConfig::serial(),
+            heartbeat_ms: 200,
+            probe_ms: 200,
+            ckpt_every: 0,
+            ckpt_dir: None,
+            rejoin: false,
         }
     }
 }
@@ -180,6 +216,9 @@ pub struct WorkerReport {
     /// synchronization (exposed sync): the whole collective in serial
     /// mode; only the un-overlapped remainder with staleness enabled.
     pub sync_blocked_secs: f64,
+    /// Collectives this worker unwound from because the group was
+    /// aborted by failure repair (each was retried in a repaired group).
+    pub aborts: u64,
 }
 
 impl WorkerReport {
@@ -187,7 +226,7 @@ impl WorkerReport {
     pub fn to_line(&self) -> String {
         format!(
             "REPORT rank={} iters={} preduces={} loss_first={:.6} loss_last={:.6} \
-             secs={:.3} ewma={:.6} stale={} sync_secs={:.6}",
+             secs={:.3} ewma={:.6} stale={} sync_secs={:.6} aborts={}",
             self.rank,
             self.iters,
             self.preduces,
@@ -196,7 +235,8 @@ impl WorkerReport {
             self.secs,
             self.ewma_secs,
             self.stale_steps,
-            self.sync_blocked_secs
+            self.sync_blocked_secs,
+            self.aborts
         )
     }
 
@@ -210,6 +250,7 @@ impl WorkerReport {
         let mut ewma_secs = 0.0; // optional: absent in pre-telemetry lines
         let mut stale_steps = 0; // optional: absent in pre-overlap lines
         let mut sync_blocked_secs = 0.0; // optional, ditto
+        let mut aborts = 0; // optional: absent in pre-fault-tolerance lines
         for kv in line.trim().strip_prefix("REPORT ").unwrap_or("").split_whitespace() {
             let (k, v) = kv.split_once('=').with_context(|| format!("bad field {kv:?}"))?;
             match k {
@@ -222,6 +263,7 @@ impl WorkerReport {
                 "ewma" => ewma_secs = v.parse()?,
                 "stale" => stale_steps = v.parse()?,
                 "sync_secs" => sync_blocked_secs = v.parse()?,
+                "aborts" => aborts = v.parse()?,
                 _ => {} // forward-compatible: ignore unknown fields
             }
         }
@@ -237,6 +279,7 @@ impl WorkerReport {
                     ewma_secs,
                     stale_steps,
                     sync_blocked_secs,
+                    aborts,
                 })
             }
             _ => bail!("incomplete report line: {line:?}"),
@@ -286,6 +329,58 @@ impl SgdDriver<'_> {
     }
 }
 
+/// How one GG-assigned collective ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum GroupOutcome {
+    /// Averaged and completed (the normal path).
+    Done,
+    /// The group was aborted by failure repair: the model was restored
+    /// (serial) or left with only fully-averaged shards (overlap), and
+    /// the worker should retry at its next sync in a repaired group.
+    Aborted,
+}
+
+/// Liveness beacon: a background thread proving this rank alive to the
+/// GG on its own connection, so a worker blocked inside a long
+/// collective is not mistaken for a crash. Joined on drop.
+struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    /// No-op guard when `period_ms == 0` or the GG is unreachable.
+    fn spawn(addr: &str, rank: usize, period_ms: u64, io: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        if period_ms == 0 {
+            return Self { stop, handle: None };
+        }
+        let stop2 = Arc::clone(&stop);
+        let addr = addr.to_string();
+        let handle = thread::spawn(move || {
+            let Ok(mut gg) = GgClient::connect(&addr) else { return };
+            let _ = gg.set_io_timeout(io);
+            let period = Duration::from_millis(period_ms);
+            while !stop2.load(Ordering::Relaxed) {
+                if gg.heartbeat(rank).is_err() {
+                    return; // server gone: the worker will notice too
+                }
+                thread::sleep(period);
+            }
+        });
+        Self { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Run the distributed training loop over an already-bound mesh and a
 /// connected GG client.
 pub fn run_worker(
@@ -306,6 +401,44 @@ pub fn run_worker(
     let class_index = ds.class_index();
     let (ex, ey) = ds.eval_set(p.eval_size);
     let mut flat = spec.init(p.seed ^ 1);
+    let mut restored_iter = 0u64;
+    let mut restored_ewma = 0.0f64;
+
+    // ---- membership: advertise the data-plane address; a rejoiner
+    // additionally purges its old incarnation and restores the freshest
+    // checkpoint any peer wrote (net::ckpt — "seed from the freshest
+    // live peer").
+    let own_addr = mesh.local_addr().to_string();
+    if p.rejoin {
+        gg.rejoin(p.rank, &own_addr)?;
+        let dir = p
+            .ckpt_dir
+            .as_ref()
+            .context("--rejoin needs --ckpt-dir to restore from")?;
+        match ckpt::latest(dir)? {
+            Some(c) => {
+                if c.weights.len() != flat.len() {
+                    bail!(
+                        "checkpoint has {} weights, model has {} — wrong --model?",
+                        c.weights.len(),
+                        flat.len()
+                    );
+                }
+                flat.copy_from_slice(&c.weights);
+                restored_iter = c.iter;
+                restored_ewma = c.ewma_secs;
+            }
+            None => eprintln!(
+                "worker {}: no checkpoint in {}, rejoining from fresh init",
+                p.rank,
+                dir.display()
+            ),
+        }
+    } else {
+        gg.register(p.rank, &own_addr)?;
+    }
+    let _beacon = Heartbeat::spawn(&p.gg_addr, p.rank, p.heartbeat_ms, p.io_timeout());
+
     let loss_first = loss_only(&spec, &flat, &ex, &ey);
     let mut drv = SgdDriver {
         p,
@@ -313,37 +446,63 @@ pub fn run_worker(
         ds: &ds,
         class_index: &class_index,
         scratch: MlpScratch::new(),
-        iters: 0,
-        ewma_secs: 0.0,
+        iters: restored_iter,
+        ewma_secs: restored_ewma,
     };
 
     let overlap_active = !p.overlap.is_serial();
     let mut preduces = 0u64;
     let mut stale_steps = 0u64;
     let mut sync_blocked = 0.0f64;
+    let mut aborts = 0u64;
+    // pre-collective snapshot reused across groups: a broken serial
+    // collective leaves partial reduce-scatter sums in `flat`, which must
+    // be rolled back before retrying in a repaired group
+    let mut abort_snap: Vec<f32> = Vec::new();
     let start = Instant::now();
-    while start.elapsed().as_secs_f64() < p.secs && drv.iters < p.max_iters {
+    let iter_budget = p.max_iters.saturating_add(restored_iter);
+    while start.elapsed().as_secs_f64() < p.secs && drv.iters < iter_budget {
         // ---- compute phase (timestamped, EWMA-folded)
         drv.step(&mut flat);
+        if p.ckpt_every > 0 && drv.iters % p.ckpt_every == 0 {
+            if let Some(dir) = &p.ckpt_dir {
+                ckpt::save(
+                    dir,
+                    &ckpt::Checkpoint {
+                        rank: p.rank as u32,
+                        iter: drv.iters,
+                        ewma_secs: drv.ewma_secs,
+                        weights: flat.clone(),
+                    },
+                )?;
+            }
+        }
         // ---- sync phase (EWMA rides along as the SpeedReport)
         let (assigned, _newly_armed) = gg.sync(p.rank, drv.ewma_secs)?;
         if let Some((gid, members)) = assigned {
-            if overlap_active {
-                let (stale, blocked) = execute_group_overlapped(
-                    p, mesh, gg, gid, &members, &mut flat, &mut drv, start,
+            let outcome = if overlap_active {
+                let (stale, blocked, outcome) = execute_group_overlapped(
+                    p, mesh, gg, gid, &members, &mut flat, &mut drv, start, iter_budget,
                 )?;
                 stale_steps += stale;
                 sync_blocked += blocked;
+                outcome
             } else {
                 let t0 = Instant::now();
-                execute_group(p, mesh, gg, gid, &members, &mut flat)?;
+                let outcome =
+                    execute_group(p, mesh, gg, gid, &members, &mut flat, &mut abort_snap)?;
                 sync_blocked += t0.elapsed().as_secs_f64();
+                outcome
+            };
+            match outcome {
+                GroupOutcome::Done => preduces += 1,
+                // repaired at the GG: the next sync drafts a fresh group
+                GroupOutcome::Aborted => aborts += 1,
             }
-            preduces += 1;
         }
     }
     let timed = start.elapsed().as_secs_f64();
-    let iters = drv.iters;
+    let iters = drv.iters - restored_iter;
 
     // ---- termination protocol: retire, then drain the Group Buffer.
     // The drain is always serial: the timed window is over, so there is
@@ -354,8 +513,10 @@ pub fn run_worker(
         match assigned {
             None => break,
             Some((gid, members)) => {
-                execute_group(p, mesh, gg, gid, &members, &mut flat)?;
-                preduces += 1;
+                match execute_group(p, mesh, gg, gid, &members, &mut flat, &mut abort_snap)? {
+                    GroupOutcome::Done => preduces += 1,
+                    GroupOutcome::Aborted => aborts += 1,
+                }
             }
         }
     }
@@ -371,13 +532,73 @@ pub fn run_worker(
         ewma_secs: drv.ewma_secs,
         stale_steps,
         sync_blocked_secs: sync_blocked,
+        aborts,
     })
+}
+
+/// Wait for the group's ring edges with bounded patience: between waits,
+/// ask the GG whether the group was aborted (a member died before
+/// arriving) and re-resolve member addresses (a member may have rejoined
+/// at a new one). `Ok(None)` = group aborted/completed — skip it.
+fn acquire_transport(
+    p: &WorkerParams,
+    mesh: &WorkerMesh,
+    gg: &mut GgClient,
+    gid: u64,
+    members: &[usize],
+) -> Result<Option<(TcpRingTransport, usize)>> {
+    let wait = Duration::from_millis(p.probe_ms.max(1));
+    let deadline = Instant::now() + p.io_timeout();
+    loop {
+        if let Some(pair) = mesh.try_ring_transport(gid, members, wait)? {
+            return Ok(Some(pair));
+        }
+        match gg.probe(gid)? {
+            GroupState::Aborted | GroupState::Done => return Ok(None),
+            GroupState::Armed | GroupState::Pending => {}
+        }
+        for &m in members {
+            if m != p.rank {
+                if let Some(addr) = gg.lookup(m)? {
+                    if let Ok(parsed) = addr.parse() {
+                        mesh.update_peer(m, parsed);
+                    }
+                }
+            }
+        }
+        if Instant::now() >= deadline {
+            bail!(
+                "group {gid}: ring edges not established within {:?} ({members:?})",
+                p.io_timeout()
+            );
+        }
+    }
+}
+
+/// A collective failed under us: restore nothing here (callers decide),
+/// but poison downstream so the ring unwinds, drop the broken edge, and
+/// report the abort (accusing the peer whose socket failed, if any).
+fn unwind_broken_collective(
+    mesh: &WorkerMesh,
+    gg: &mut GgClient,
+    gid: u64,
+    transport: &mut TcpRingTransport,
+) -> Result<()> {
+    transport.poison();
+    let suspect = transport.failed_peer();
+    if let Some(r) = suspect {
+        mesh.invalidate(r);
+    }
+    gg.abort_group(gid, suspect)
 }
 
 /// One GG-assigned P-Reduce, stop-and-wait: wait for the group to arm,
 /// run the (possibly sharded) ring collective over TCP, report/observe
 /// completion. With the default single shard this is the exact
-/// pre-overlap schedule, frames and arithmetic identical.
+/// pre-overlap schedule, frames and arithmetic identical. A collective
+/// broken by a crashed peer rolls the model back to `snapshot` and
+/// returns [`GroupOutcome::Aborted`] instead of erroring: the next sync
+/// retries in a repaired group.
 fn execute_group(
     p: &WorkerParams,
     mesh: &WorkerMesh,
@@ -385,27 +606,42 @@ fn execute_group(
     gid: u64,
     members: &[usize],
     flat: &mut [f32],
-) -> Result<()> {
+    snapshot: &mut Vec<f32>,
+) -> Result<GroupOutcome> {
     if members.len() < 2 {
         bail!("GG assigned degenerate group {members:?}");
     }
-    gg.wait_armed(gid)?;
-    let (mut transport, pos) = mesh.ring_transport(gid, members)?;
-    ring_allreduce_sharded(
+    if gg.wait_armed(gid)? == WaitOutcome::Aborted {
+        return Ok(GroupOutcome::Aborted);
+    }
+    let Some((mut transport, pos)) = acquire_transport(p, mesh, gg, gid, members)? else {
+        return Ok(GroupOutcome::Aborted);
+    };
+    snapshot.clear();
+    snapshot.extend_from_slice(flat);
+    let run = ring_allreduce_sharded(
         pos,
         members.len(),
         flat,
         p.overlap.shards,
         &mut transport,
         |_, _| (),
-    )
-    .with_context(|| format!("ring collective for group {gid} ({members:?})"))?;
+    );
+    if run.is_err() {
+        // partial reduce-scatter sums are garbage: roll back, then
+        // unwind the ring and report so everyone retries repaired
+        flat.copy_from_slice(snapshot);
+        unwind_broken_collective(mesh, gg, gid, &mut transport)?;
+        return Ok(GroupOutcome::Aborted);
+    }
     if members[0] == p.rank {
         gg.complete(gid)?;
     } else {
-        gg.wait_done(gid)?;
+        // Aborted here means the leader died *after* the collective —
+        // our averaged data is fine either way.
+        let _ = gg.wait_done(gid)?;
     }
-    Ok(())
+    Ok(GroupOutcome::Done)
 }
 
 /// One GG-assigned P-Reduce with compute/communication overlap: the comm
@@ -416,7 +652,13 @@ fn execute_group(
 /// the comm thread for the duration (wait-armed/complete/wait-done are
 /// its only RPCs in flight — the training thread's next `Sync` happens
 /// strictly after the join). Returns `(stale_steps_taken,
-/// seconds_blocked)`.
+/// seconds_blocked, outcome)`.
+///
+/// An abort mid-pipeline keeps the shards that fully averaged (they are
+/// valid group means, already reconciled) and leaves the rest local —
+/// members may disagree on *which* shards averaged, a bounded divergence
+/// the next successful averaging contracts, exactly like stale-step
+/// noise.
 #[allow(clippy::too_many_arguments)]
 fn execute_group_overlapped(
     p: &WorkerParams,
@@ -427,7 +669,8 @@ fn execute_group_overlapped(
     flat: &mut [f32],
     drv: &mut SgdDriver<'_>,
     start: Instant,
-) -> Result<(u64, f64)> {
+    iter_budget: u64,
+) -> Result<(u64, f64, GroupOutcome)> {
     if members.len() < 2 {
         bail!("GG assigned degenerate group {members:?}");
     }
@@ -439,22 +682,39 @@ fn execute_group_overlapped(
     let mut work = flat.to_vec();
     let rank = p.rank;
     let (tx, rx) = channel::<(usize, Vec<f32>)>();
-    thread::scope(|scope| -> Result<(u64, f64)> {
-        let comm = scope.spawn(move || -> Result<()> {
-            gg.wait_armed(gid)?;
-            let (mut transport, pos) = mesh.ring_transport(gid, members)?;
-            ring_allreduce_sharded(pos, members.len(), &mut work, k, &mut transport, |s, avg| {
-                // training thread gone = error already in flight; the
-                // collective itself must still finish for the peers
-                let _ = tx.send((s, avg.to_vec()));
-            })
-            .with_context(|| format!("pipelined ring for group {gid} ({members:?})"))?;
+    thread::scope(|scope| -> Result<(u64, f64, GroupOutcome)> {
+        let comm = scope.spawn(move || -> Result<GroupOutcome> {
+            if gg.wait_armed(gid)? == WaitOutcome::Aborted {
+                return Ok(GroupOutcome::Aborted);
+            }
+            let Some((mut transport, pos)) = acquire_transport(p, mesh, gg, gid, members)?
+            else {
+                return Ok(GroupOutcome::Aborted);
+            };
+            let run = ring_allreduce_sharded(
+                pos,
+                members.len(),
+                &mut work,
+                k,
+                &mut transport,
+                |s, avg| {
+                    // training thread gone = error already in flight; the
+                    // collective itself must still finish for the peers
+                    let _ = tx.send((s, avg.to_vec()));
+                },
+            );
+            if run.is_err() {
+                // dropping tx unblocks the training thread's recv; fully
+                // averaged shards were already streamed and stay applied
+                unwind_broken_collective(mesh, gg, gid, &mut transport)?;
+                return Ok(GroupOutcome::Aborted);
+            }
             if members[0] == rank {
                 gg.complete(gid)?;
             } else {
-                gg.wait_done(gid)?;
+                let _ = gg.wait_done(gid)?;
             }
-            Ok(())
+            Ok(GroupOutcome::Done)
         });
 
         let mut applied = 0usize;
@@ -470,7 +730,10 @@ fn execute_group_overlapped(
             if applied >= k {
                 break;
             }
-            let budget_left = drv.iters < p.max_iters
+            // same budget as the main loop: max_iters offset by the
+            // checkpoint-restored iteration count, so a rejoined worker
+            // keeps hiding sync behind stale steps
+            let budget_left = drv.iters < iter_budget
                 && start.elapsed().as_secs_f64() < p.secs;
             if stale < p.overlap.max_staleness && budget_left {
                 drv.step(flat); // hidden compute on (slightly) stale weights
@@ -486,7 +749,7 @@ fn execute_group_overlapped(
                         reconcile_shard(&mut flat[lo..hi], &snap[lo..hi], &avg);
                         applied += 1;
                     }
-                    Err(_) => break, // comm thread died; join() has the error
+                    Err(_) => break, // comm thread done/aborted; join() knows
                 }
             }
         }
@@ -495,8 +758,8 @@ fn execute_group_overlapped(
         let t0 = Instant::now();
         let res = comm.join().map_err(|_| anyhow!("comm thread panicked"))?;
         blocked += t0.elapsed().as_secs_f64();
-        res?;
-        Ok((stale, blocked))
+        let outcome = res?;
+        Ok((stale, blocked, outcome))
     })
 }
 
@@ -565,6 +828,7 @@ mod tests {
             ewma_secs: 0.024500,
             stale_steps: 17,
             sync_blocked_secs: 0.812500,
+            aborts: 2,
         };
         let parsed = WorkerReport::parse_line(&r.to_line()).unwrap();
         assert_eq!(parsed, r);
@@ -592,6 +856,7 @@ mod tests {
         assert_eq!(r.ewma_secs, 0.0);
         assert_eq!(r.stale_steps, 0);
         assert_eq!(r.sync_blocked_secs, 0.0);
+        assert_eq!(r.aborts, 0);
     }
 
     #[test]
@@ -628,5 +893,19 @@ mod tests {
         let p = WorkerParams::default();
         assert!(p.overlap.is_serial());
         assert_eq!(p.overlap.shards, 1);
+        assert_eq!(p.ckpt_every, 0, "checkpointing is opt-in");
+        assert!(!p.rejoin);
+        assert!(p.heartbeat_ms > 0, "liveness beacon on by default");
+    }
+
+    #[test]
+    fn heartbeat_guard_is_noop_without_period_or_server() {
+        // period 0: no thread at all
+        let hb = Heartbeat::spawn("127.0.0.1:1", 0, 0, Duration::from_secs(1));
+        drop(hb);
+        // unreachable server: the thread exits on its own; drop must not hang
+        let hb = Heartbeat::spawn("127.0.0.1:1", 0, 50, Duration::from_secs(1));
+        std::thread::sleep(Duration::from_millis(30));
+        drop(hb);
     }
 }

@@ -3,14 +3,21 @@
 //! has no gRPC/tokio, and the messages are tiny control packets anyway).
 //!
 //! Wire format: every frame is `u32 length (LE) | payload`. Payloads are
-//! hand-encoded (see [`wire`]); the protocol has three calls:
+//! hand-encoded (see [`wire`]); the protocol has three call families:
 //!
-//! * `Request { worker }  -> Assigned { group_id, members, armed_groups }`
-//! * `Complete { group_id } -> Armed { groups }`
-//! * `Stats {} -> StatsReply { requests, conflicts, ... }`
+//! * scheduling — `Sync`, `Complete`, `WaitArmed`/`WaitDone`, `Stats`;
+//! * membership — `Retire` (graceful), `Register`/`Lookup` (data-plane
+//!   address registry), `Rejoin` (checkpoint-restored replacement);
+//! * fault tolerance — `Heartbeat` (liveness), `AbortGroup` (a ring
+//!   survivor reports a broken collective and accuses the peer it saw
+//!   fail), `Probe` (armed / pending / done / aborted).
 //!
 //! The server wraps the same pure [`GroupGenerator`] state machine the
-//! simulator and the threaded runtime use.
+//! simulator and the threaded runtime use. With a [`LivenessConfig`]
+//! installed, a monitor thread declares ranks dead when their heartbeat
+//! goes stale — quickly when a peer accused them, eventually on the hard
+//! timeout — which aborts their in-flight groups so ring partners unwind
+//! and retry in repaired groups (DESIGN.md §Fault-tolerance).
 
 pub mod wire;
 
@@ -19,12 +26,19 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::gg::{GgConfig, Group, GroupGenerator, GroupId};
 use crate::util::rng::Pcg32;
 use wire::{Reader, Writer};
+
+/// Wire marker for "no suspect" in `AbortGroup`.
+const NO_SUSPECT: u32 = u32::MAX;
+
+/// Longest accepted address string on the wire.
+const MAX_ADDR_LEN: usize = 1 << 12;
 
 /// Piggybacked speed telemetry: the worker's own EWMA of its local SGD
 /// step duration (compute phase only, sync wait excluded). Rides on
@@ -66,6 +80,73 @@ pub enum Request {
     WaitDone { id: GroupId },
     /// Worker `w` leaves the session: never drafted into new groups.
     Retire { worker: u32 },
+    /// Liveness beacon from `w`'s heartbeat thread. Any rank-bearing RPC
+    /// counts as a heartbeat; this one exists so a worker blocked in a
+    /// long collective still proves it is alive.
+    Heartbeat { worker: u32 },
+    /// A ring survivor observed group `id`'s collective break. The GG
+    /// aborts the group (locks released, Group Buffers purged) so every
+    /// member unwinds and retries in a repaired group; `suspect` (the
+    /// peer whose socket failed; `u32::MAX` if unknown) is flagged
+    /// for the liveness monitor's fast path.
+    AbortGroup { id: GroupId, suspect: u32 },
+    /// Non-blocking group-state query ([`GroupState`]).
+    Probe { id: GroupId },
+    /// A checkpoint-restored replacement re-registers rank `w`: the old
+    /// incarnation is purged (death declared if it wasn't yet) and the
+    /// rank becomes draftable again; `addr` is the replacement's new
+    /// data-plane address for the registry.
+    Rejoin { worker: u32, addr: String },
+    /// Advertise `w`'s data-plane address (startup; peers re-resolve a
+    /// rank's address via `Lookup` when its cached edge breaks).
+    Register { worker: u32, addr: String },
+    /// Fetch the registered data-plane address of `w`.
+    Lookup { worker: u32 },
+}
+
+/// Lifecycle of a group as seen by `Probe`/`WaitArmed`/`WaitDone`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupState {
+    /// Live, waiting in the pending queue for its locks.
+    Pending,
+    /// Live and holding its locks: the collective may run.
+    Armed,
+    /// Completed normally (or never existed).
+    Done,
+    /// Torn down by failure repair: do NOT run the collective.
+    Aborted,
+}
+
+impl GroupState {
+    fn code(self) -> u8 {
+        match self {
+            GroupState::Pending => 0,
+            GroupState::Armed => 1,
+            GroupState::Done => 2,
+            GroupState::Aborted => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => GroupState::Pending,
+            1 => GroupState::Armed,
+            2 => GroupState::Done,
+            3 => GroupState::Aborted,
+            c => bail!("bad group state code {c}"),
+        })
+    }
+}
+
+/// What a blocking wait resolved to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitOutcome {
+    /// The awaited condition holds (armed / completed).
+    Ready,
+    /// The group was aborted by failure repair: skip the collective
+    /// (`WaitArmed`) or proceed — the data already landed (`WaitDone`,
+    /// where abort can only mean the leader died after the collective).
+    Aborted,
 }
 
 /// GG counters plus the measured per-worker speed table, returned by
@@ -84,6 +165,12 @@ pub struct StatsReport {
     /// `requests` value at each worker's most recent such draft (0 =
     /// never): how long ago the filter last drafted the worker.
     pub last_drafted: Vec<u64>,
+    /// Ranks declared dead by failure detection.
+    pub deaths: u64,
+    /// Groups torn down by failure repair.
+    pub groups_aborted: u64,
+    /// Dead ranks re-admitted via `Rejoin`.
+    pub rejoins: u64,
 }
 
 impl StatsReport {
@@ -105,6 +192,23 @@ pub enum Response {
     Stats(StatsReport),
     Ok,
     Err { msg: String },
+    /// `Probe`/`WaitArmed`/`WaitDone` verdict.
+    State(GroupState),
+    /// `Lookup` result: the registered data-plane address, if any.
+    Addr { addr: Option<String> },
+}
+
+fn encode_str(w: &mut Writer, s: &str) {
+    w.u32(s.len() as u32);
+    w.bytes(s.as_bytes());
+}
+
+fn decode_str(r: &mut Reader) -> Result<String> {
+    let len = r.u32()? as usize;
+    if len > MAX_ADDR_LEN {
+        bail!("unreasonable string length {len}");
+    }
+    String::from_utf8(r.bytes(len)?.to_vec()).context("non-utf8 string")
 }
 
 impl Request {
@@ -134,6 +238,33 @@ impl Request {
                 w.u8(6);
                 w.u32(*worker);
             }
+            Request::Heartbeat { worker } => {
+                w.u8(7);
+                w.u32(*worker);
+            }
+            Request::AbortGroup { id, suspect } => {
+                w.u8(8);
+                w.u64(*id);
+                w.u32(*suspect);
+            }
+            Request::Probe { id } => {
+                w.u8(9);
+                w.u64(*id);
+            }
+            Request::Rejoin { worker, addr } => {
+                w.u8(10);
+                w.u32(*worker);
+                encode_str(&mut w, addr);
+            }
+            Request::Register { worker, addr } => {
+                w.u8(11);
+                w.u32(*worker);
+                encode_str(&mut w, addr);
+            }
+            Request::Lookup { worker } => {
+                w.u8(12);
+                w.u32(*worker);
+            }
         }
         w.finish()
     }
@@ -152,6 +283,12 @@ impl Request {
             4 => Request::WaitArmed { id: r.u64()? },
             5 => Request::WaitDone { id: r.u64()? },
             6 => Request::Retire { worker: r.u32()? },
+            7 => Request::Heartbeat { worker: r.u32()? },
+            8 => Request::AbortGroup { id: r.u64()?, suspect: r.u32()? },
+            9 => Request::Probe { id: r.u64()? },
+            10 => Request::Rejoin { worker: r.u32()?, addr: decode_str(&mut r)? },
+            11 => Request::Register { worker: r.u32()?, addr: decode_str(&mut r)? },
+            12 => Request::Lookup { worker: r.u32()? },
             t => bail!("bad request tag {t}"),
         };
         r.done()?;
@@ -214,6 +351,9 @@ impl Response {
                 w.u64(s.conflicts);
                 w.u64(s.groups_created);
                 w.u64(s.buffer_hits);
+                w.u64(s.deaths);
+                w.u64(s.groups_aborted);
+                w.u64(s.rejoins);
                 debug_assert!(
                     s.speeds.len() == s.drafts.len()
                         && s.drafts.len() == s.last_drafted.len()
@@ -229,6 +369,20 @@ impl Response {
             Response::Err { msg } => {
                 w.u8(4);
                 w.bytes(msg.as_bytes());
+            }
+            Response::State(s) => {
+                w.u8(5);
+                w.u8(s.code());
+            }
+            Response::Addr { addr } => {
+                w.u8(6);
+                match addr {
+                    Some(a) => {
+                        w.u8(1);
+                        encode_str(&mut w, a);
+                    }
+                    None => w.u8(0),
+                }
             }
         }
         w.finish()
@@ -253,6 +407,9 @@ impl Response {
                 let conflicts = r.u64()?;
                 let groups_created = r.u64()?;
                 let buffer_hits = r.u64()?;
+                let deaths = r.u64()?;
+                let groups_aborted = r.u64()?;
+                let rejoins = r.u64()?;
                 let n = r.u32()? as usize;
                 if n > 1 << 16 {
                     bail!("unreasonable worker count {n}");
@@ -273,10 +430,17 @@ impl Response {
                     speeds,
                     drafts,
                     last_drafted,
+                    deaths,
+                    groups_aborted,
+                    rejoins,
                 })
             }
             3 => Response::Ok,
             4 => Response::Err { msg: String::from_utf8_lossy(&r.rest()).into_owned() },
+            5 => Response::State(GroupState::from_code(r.u8()?)?),
+            6 => Response::Addr {
+                addr: if r.u8()? == 1 { Some(decode_str(&mut r)?) } else { None },
+            },
             t => bail!("bad response tag {t}"),
         };
         if tag != 4 {
@@ -309,21 +473,139 @@ fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
 // Server
 // ---------------------------------------------------------------------------
 
-/// A running GG server; one thread per connection, shared state machine.
+/// Liveness policy for the server's failure detector. Heartbeats arrive
+/// on any rank-bearing RPC plus the dedicated `Heartbeat` beacon; the
+/// monitor thread declares a rank dead when its heartbeat goes stale.
+#[derive(Debug, Clone)]
+pub struct LivenessConfig {
+    /// Hard deadline: a non-retired rank whose last heartbeat is older
+    /// than this is declared dead.
+    pub timeout: Duration,
+    /// Fast path: once a ring survivor *accused* the rank (`AbortGroup`
+    /// suspect), this much staleness suffices — a healthy-but-slow rank
+    /// keeps heartbeating and survives a false accusation.
+    pub accused_grace: Duration,
+    /// Monitor poll period.
+    pub poll: Duration,
+}
+
+impl LivenessConfig {
+    /// `timeout` with an accusation fast path sized to a few heartbeat
+    /// periods and a brisk poll.
+    pub fn with_timeout(timeout: Duration) -> Self {
+        Self {
+            timeout,
+            accused_grace: (timeout / 8).max(Duration::from_millis(300)),
+            poll: Duration::from_millis(50),
+        }
+    }
+}
+
+impl Default for LivenessConfig {
+    fn default() -> Self {
+        Self::with_timeout(Duration::from_secs(5))
+    }
+}
+
+/// Per-rank liveness bookkeeping: `(last_seen, accused)`. `last_seen`
+/// is `None` until the rank's first contact — a rank that is slow to
+/// *start* (long spawn, long handshake) must not be declared dead by a
+/// clock that began at server spawn. A never-seen rank only dies via
+/// the accusation path (a peer observed its socket fail).
+struct LivenessTracker {
+    cfg: LivenessConfig,
+    inner: Mutex<(Vec<Option<Instant>>, Vec<bool>)>,
+}
+
+/// Everything the connection threads and the monitor share.
+struct ServerShared {
+    state: Mutex<(GroupGenerator, Pcg32)>,
+    /// Rank-indexed data-plane address registry (`Register`/`Lookup`).
+    addrs: Mutex<Vec<Option<String>>>,
+    liveness: Option<LivenessTracker>,
+}
+
+impl ServerShared {
+    /// Record proof of life for `w` (out-of-range ranks ignored — the
+    /// request handler rejects them separately).
+    fn touch(&self, w: usize) {
+        if let Some(l) = &self.liveness {
+            let mut g = l.inner.lock().unwrap();
+            if let Some(slot) = g.0.get_mut(w) {
+                *slot = Some(Instant::now());
+            }
+        }
+    }
+
+    /// Flag `w` for the monitor's accusation fast path.
+    fn accuse(&self, w: usize) {
+        if let Some(l) = &self.liveness {
+            let mut g = l.inner.lock().unwrap();
+            if let Some(slot) = g.1.get_mut(w) {
+                *slot = true;
+            }
+        }
+    }
+
+    /// A rejoined rank starts with a clean slate.
+    fn clear_suspicion(&self, w: usize) {
+        if let Some(l) = &self.liveness {
+            let mut g = l.inner.lock().unwrap();
+            if let Some(slot) = g.0.get_mut(w) {
+                *slot = Some(Instant::now());
+            }
+            if let Some(slot) = g.1.get_mut(w) {
+                *slot = false;
+            }
+        }
+    }
+}
+
+/// A running GG server; one thread per connection, shared state machine,
+/// plus an optional liveness monitor ([`LivenessConfig`]).
 pub struct GgServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<thread::JoinHandle<()>>,
+    monitor: Option<thread::JoinHandle<()>>,
 }
 
 impl GgServer {
-    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port) with
+    /// failure detection disabled — crashes hold their locks forever, as
+    /// in the pre-fault-tolerance control plane.
     pub fn spawn(addr: &str, cfg: GgConfig, seed: u64) -> Result<Self> {
+        Self::spawn_with_liveness(addr, cfg, seed, None)
+    }
+
+    /// [`GgServer::spawn`] with an optional liveness monitor: stale
+    /// heartbeats (see [`LivenessConfig`]) trigger
+    /// [`GroupGenerator::declare_dead`], aborting the dead rank's groups.
+    pub fn spawn_with_liveness(
+        addr: &str,
+        cfg: GgConfig,
+        seed: u64,
+        liveness: Option<LivenessConfig>,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(addr).context("bind GG server")?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
-        let state = Arc::new(Mutex::new((GroupGenerator::new(cfg), Pcg32::new(seed))));
+        let n = cfg.n_workers;
+        let shared = Arc::new(ServerShared {
+            state: Mutex::new((GroupGenerator::new(cfg), Pcg32::new(seed))),
+            addrs: Mutex::new(vec![None; n]),
+            liveness: liveness.map(|cfg| LivenessTracker {
+                cfg,
+                inner: Mutex::new((vec![None; n], vec![false; n])),
+            }),
+        });
+        let monitor = shared.liveness.is_some().then(|| {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || monitor_liveness(&shared, &stop))
+        });
         let stop2 = Arc::clone(&stop);
+        let shared2 = Arc::clone(&shared);
         let handle = thread::spawn(move || {
             listener.set_nonblocking(true).ok();
             let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
@@ -337,7 +619,7 @@ impl GgServer {
                         stream
                             .set_read_timeout(Some(std::time::Duration::from_millis(100)))
                             .ok();
-                        let st = Arc::clone(&state);
+                        let st = Arc::clone(&shared2);
                         let stop3 = Arc::clone(&stop2);
                         conns.push(thread::spawn(move || {
                             let _ = serve_conn(stream, st, stop3);
@@ -353,22 +635,67 @@ impl GgServer {
                 let _ = c.join();
             }
         });
-        Ok(Self { addr: local, stop, handle: Some(handle) })
+        Ok(Self { addr: local, stop, handle: Some(handle), monitor })
     }
 
-    pub fn shutdown(mut self) {
+    fn join_threads(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.join_threads();
     }
 }
 
 impl Drop for GgServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        self.join_threads();
+    }
+}
+
+/// Declare ranks dead when their heartbeat goes stale: past the hard
+/// `timeout` always, past `accused_grace` once a ring survivor accused
+/// them; an accused rank that *never* made contact dies immediately
+/// (no proof of life to weigh against the observed socket failure).
+/// Retired (gracefully departed), already-dead, and unaccused
+/// never-seen ranks are exempt — their silence is expected.
+fn monitor_liveness(shared: &ServerShared, stop: &AtomicBool) {
+    let tracker = shared.liveness.as_ref().expect("monitor without liveness");
+    while !stop.load(Ordering::Relaxed) {
+        thread::sleep(tracker.cfg.poll);
+        let now = Instant::now();
+        let Ok(mut guard) = shared.state.lock() else { return };
+        let (gg, _) = &mut *guard;
+        // lock order everywhere: state, then liveness
+        let live = tracker.inner.lock().unwrap();
+        let mut verdicts = Vec::new();
+        for w in 0..gg.config().n_workers {
+            if gg.is_dead(w) || gg.is_retired(w) {
+                continue;
+            }
+            let accused = live.1[w];
+            let dead = match live.0[w] {
+                Some(seen) => {
+                    let stale = now.duration_since(seen);
+                    stale > tracker.cfg.timeout
+                        || (accused && stale > tracker.cfg.accused_grace)
+                }
+                None => accused,
+            };
+            if dead {
+                verdicts.push(w);
+            }
+        }
+        drop(live);
+        for w in verdicts {
+            // clients discover the purge by polling Wait/Probe
+            let _ = gg.declare_dead(w);
         }
     }
 }
@@ -380,9 +707,24 @@ fn group_pairs(groups: Vec<Group>) -> Vec<(GroupId, Vec<u32>)> {
         .collect()
 }
 
+/// Lifecycle of `id` as the Wait/Probe calls report it.
+fn group_state(gg: &GroupGenerator, id: GroupId) -> GroupState {
+    if gg.group(id).is_none() {
+        if gg.was_aborted(id) {
+            GroupState::Aborted
+        } else {
+            GroupState::Done
+        }
+    } else if gg.is_armed(id) {
+        GroupState::Armed
+    } else {
+        GroupState::Pending
+    }
+}
+
 fn serve_conn(
     mut stream: TcpStream,
-    state: Arc<Mutex<(GroupGenerator, Pcg32)>>,
+    shared: Arc<ServerShared>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
     loop {
@@ -403,17 +745,57 @@ fn serve_conn(
             }
         };
         let req = Request::decode(&frame)?;
+        // Every rank-bearing request doubles as proof of life.
+        match &req {
+            Request::Sync { worker, .. }
+            | Request::Heartbeat { worker }
+            | Request::Retire { worker }
+            | Request::Register { worker, .. } => shared.touch(*worker as usize),
+            _ => {}
+        }
+        // Lock-free handlers first (no GG state involved).
+        match &req {
+            Request::Heartbeat { .. } => {
+                write_frame(&mut stream, &Response::Ok.encode())?;
+                continue;
+            }
+            Request::Register { worker, addr } => {
+                let w = *worker as usize;
+                let resp = {
+                    let mut addrs = shared.addrs.lock().unwrap();
+                    if w < addrs.len() {
+                        addrs[w] = Some(addr.clone());
+                        Response::Ok
+                    } else {
+                        Response::Err { msg: format!("worker {w} out of range") }
+                    }
+                };
+                write_frame(&mut stream, &resp.encode())?;
+                continue;
+            }
+            Request::Lookup { worker } => {
+                let addr =
+                    shared.addrs.lock().unwrap().get(*worker as usize).cloned().flatten();
+                write_frame(&mut stream, &Response::Addr { addr }.encode())?;
+                continue;
+            }
+            _ => {}
+        }
         // Blocking calls poll the state machine without holding the lock
         // across sleeps (other connections keep making progress).
         if let Request::WaitArmed { id } | Request::WaitDone { id } = req {
             let want_armed = matches!(req, Request::WaitArmed { .. });
             let resp = loop {
                 {
-                    let guard = state.lock().map_err(|_| anyhow!("poisoned GG"))?;
-                    let gg = &guard.0;
-                    let done = gg.group(id).is_none();
-                    if done || (want_armed && gg.is_armed(id)) {
-                        break Response::Ok;
+                    let guard = shared.state.lock().map_err(|_| anyhow!("poisoned GG"))?;
+                    match group_state(&guard.0, id) {
+                        s @ (GroupState::Done | GroupState::Aborted) => {
+                            break Response::State(s)
+                        }
+                        GroupState::Armed if want_armed => {
+                            break Response::State(GroupState::Armed)
+                        }
+                        GroupState::Armed | GroupState::Pending => {}
                     }
                 }
                 if stop.load(Ordering::Relaxed) {
@@ -425,17 +807,21 @@ fn serve_conn(
             continue;
         }
         let resp = {
-            let mut guard = state.lock().map_err(|_| anyhow!("poisoned GG"))?;
+            let mut guard = shared.state.lock().map_err(|_| anyhow!("poisoned GG"))?;
             let (gg, rng) = &mut *guard;
-            match req {
+            match &req {
                 Request::Sync { worker, speed } => {
-                    let w = worker as usize;
+                    let w = *worker as usize;
                     if w >= gg.config().n_workers {
                         Response::Err { msg: format!("worker {w} out of range") }
                     } else {
                         // fold the piggybacked telemetry in *before* the
-                        // request so this very division sees it
-                        gg.report_speed(w, speed.ewma_step_secs);
+                        // request so this very division sees it — unless
+                        // the rank was declared dead: a zombie's report
+                        // must not repopulate the purged speed entry
+                        if !gg.is_dead(w) {
+                            gg.report_speed(w, speed.ewma_step_secs);
+                        }
                         let (id, armed) = gg.request(w, rng);
                         // id 0 with no members encodes "skip this sync"
                         // (GroupIds start at 1)
@@ -448,9 +834,11 @@ fn serve_conn(
                     }
                 }
                 Request::Complete { id } => {
+                    let id = *id;
                     if gg.group(id).is_none() {
-                        // unknown = already completed: a duplicate/retried
-                        // leader Complete is idempotent, not a crash
+                        // unknown = already completed or aborted: a
+                        // duplicate/retried leader Complete is idempotent,
+                        // not a crash
                         Response::Armed { groups: Vec::new() }
                     } else if !gg.is_armed(id) {
                         // completing a pending group would corrupt the lock
@@ -468,13 +856,16 @@ fn serve_conn(
                     speeds: gg.speed_table().snapshot(),
                     drafts: gg.drafts().to_vec(),
                     last_drafted: gg.last_drafted().to_vec(),
+                    deaths: gg.stats.deaths,
+                    groups_aborted: gg.stats.groups_aborted,
+                    rejoins: gg.stats.rejoins,
                 }),
                 Request::Shutdown => {
                     stop.store(true, Ordering::Relaxed);
                     Response::Ok
                 }
                 Request::Retire { worker } => {
-                    let w = worker as usize;
+                    let w = *worker as usize;
                     if w >= gg.config().n_workers {
                         Response::Err { msg: format!("worker {w} out of range") }
                     } else {
@@ -482,8 +873,34 @@ fn serve_conn(
                         Response::Ok
                     }
                 }
-                // handled above without holding the lock
-                Request::WaitArmed { .. } | Request::WaitDone { .. } => unreachable!(),
+                Request::AbortGroup { id, suspect } => {
+                    // tear the broken group down no matter who (if
+                    // anyone) gets blamed — the collective cannot finish
+                    let _ = gg.abort_group(*id);
+                    let s = *suspect as usize;
+                    if *suspect != NO_SUSPECT && s < gg.config().n_workers {
+                        shared.accuse(s);
+                    }
+                    Response::Ok
+                }
+                Request::Probe { id } => Response::State(group_state(gg, *id)),
+                Request::Rejoin { worker, addr } => {
+                    let w = *worker as usize;
+                    if w >= gg.config().n_workers {
+                        Response::Err { msg: format!("worker {w} out of range") }
+                    } else {
+                        let _ = gg.rejoin(w);
+                        shared.addrs.lock().unwrap()[w] = Some(addr.clone());
+                        shared.clear_suspicion(w);
+                        Response::Ok
+                    }
+                }
+                // handled above without the state lock
+                Request::WaitArmed { .. }
+                | Request::WaitDone { .. }
+                | Request::Heartbeat { .. }
+                | Request::Register { .. }
+                | Request::Lookup { .. } => unreachable!(),
             }
         };
         write_frame(&mut stream, &resp.encode())?;
@@ -576,18 +993,81 @@ impl GgClient {
     }
 
     /// Block until `id` holds its locks (no-op if it already completed).
-    pub fn wait_armed(&mut self, id: GroupId) -> Result<()> {
+    /// [`WaitOutcome::Aborted`] means failure repair tore the group down:
+    /// skip the collective and re-`sync` for a repaired group.
+    pub fn wait_armed(&mut self, id: GroupId) -> Result<WaitOutcome> {
         match self.call(&Request::WaitArmed { id })? {
-            Response::Ok => Ok(()),
+            Response::State(GroupState::Aborted) => Ok(WaitOutcome::Aborted),
+            Response::State(_) | Response::Ok => Ok(WaitOutcome::Ready),
             Response::Err { msg } => bail!("GG error: {msg}"),
             other => bail!("unexpected response {other:?}"),
         }
     }
 
     /// Block until `id` has been completed (by its group leader).
-    pub fn wait_done(&mut self, id: GroupId) -> Result<()> {
+    /// [`WaitOutcome::Aborted`] here means the leader died *after* the
+    /// collective — the data already landed, so callers may proceed.
+    pub fn wait_done(&mut self, id: GroupId) -> Result<WaitOutcome> {
         match self.call(&Request::WaitDone { id })? {
+            Response::State(GroupState::Aborted) => Ok(WaitOutcome::Aborted),
+            Response::State(_) | Response::Ok => Ok(WaitOutcome::Ready),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Non-blocking group-state query.
+    pub fn probe(&mut self, id: GroupId) -> Result<GroupState> {
+        match self.call(&Request::Probe { id })? {
+            Response::State(s) => Ok(s),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Liveness beacon (the worker's heartbeat thread).
+    pub fn heartbeat(&mut self, worker: usize) -> Result<()> {
+        match self.call(&Request::Heartbeat { worker: worker as u32 })? {
             Response::Ok => Ok(()),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Report a broken collective: abort group `id` and (optionally)
+    /// accuse the peer whose socket was observed failing.
+    pub fn abort_group(&mut self, id: GroupId, suspect: Option<usize>) -> Result<()> {
+        let suspect = suspect.map_or(NO_SUSPECT, |s| s as u32);
+        match self.call(&Request::AbortGroup { id, suspect })? {
+            Response::Ok => Ok(()),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Advertise `worker`'s data-plane address.
+    pub fn register(&mut self, worker: usize, addr: &str) -> Result<()> {
+        match self.call(&Request::Register { worker: worker as u32, addr: addr.into() })? {
+            Response::Ok => Ok(()),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Re-register a (possibly dead) rank with a fresh data-plane
+    /// address: the checkpoint-restored replacement's first call.
+    pub fn rejoin(&mut self, worker: usize, addr: &str) -> Result<()> {
+        match self.call(&Request::Rejoin { worker: worker as u32, addr: addr.into() })? {
+            Response::Ok => Ok(()),
+            Response::Err { msg } => bail!("GG error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Current registered data-plane address of `worker`, if any.
+    pub fn lookup(&mut self, worker: usize) -> Result<Option<String>> {
+        match self.call(&Request::Lookup { worker: worker as u32 })? {
+            Response::Addr { addr } => Ok(addr),
             Response::Err { msg } => bail!("GG error: {msg}"),
             other => bail!("unexpected response {other:?}"),
         }
@@ -625,6 +1105,13 @@ mod tests {
             Request::WaitArmed { id: 1 },
             Request::WaitDone { id: u64::MAX },
             Request::Retire { worker: 3 },
+            Request::Heartbeat { worker: 9 },
+            Request::AbortGroup { id: 42, suspect: 2 },
+            Request::AbortGroup { id: 43, suspect: NO_SUSPECT },
+            Request::Probe { id: 7 },
+            Request::Rejoin { worker: 1, addr: "127.0.0.1:9999".into() },
+            Request::Register { worker: 0, addr: "10.0.0.5:40000".into() },
+            Request::Lookup { worker: 15 },
         ] {
             assert_eq!(Request::decode(&req.encode()).unwrap(), req);
         }
@@ -647,10 +1134,19 @@ mod tests {
                 speeds: vec![0.01, 0.0, 0.03],
                 drafts: vec![5, 0, 7],
                 last_drafted: vec![1, 0, 9],
+                deaths: 1,
+                groups_aborted: 2,
+                rejoins: 1,
             }),
             Response::Stats(StatsReport::default()),
             Response::Ok,
             Response::Err { msg: "boom".into() },
+            Response::State(GroupState::Pending),
+            Response::State(GroupState::Armed),
+            Response::State(GroupState::Done),
+            Response::State(GroupState::Aborted),
+            Response::Addr { addr: None },
+            Response::Addr { addr: Some("127.0.0.1:1234".into()) },
         ] {
             assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
         }
@@ -733,6 +1229,115 @@ mod tests {
         let (assigned, newly) = c.sync(0, 0.0).unwrap();
         assert!(assigned.is_none(), "retired worker must not be drafted");
         assert!(newly.is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn abort_probe_and_rejoin_over_tcp() {
+        let server =
+            GgServer::spawn("127.0.0.1:0", GgConfig::random(4, 4, 2), 11).unwrap();
+        let mut c = GgClient::connect(server.addr).unwrap();
+        let (assigned, _) = c.sync(0, 0.0).unwrap();
+        let (gid, members) = assigned.expect("sync must assign");
+        assert!(members.contains(&0));
+        assert_eq!(c.probe(gid).unwrap(), GroupState::Armed);
+        // a ring survivor reports the collective broken, accusing nobody
+        c.abort_group(gid, None).unwrap();
+        assert_eq!(c.probe(gid).unwrap(), GroupState::Aborted);
+        // waits on the aborted group return Aborted instead of hanging
+        assert_eq!(c.wait_armed(gid).unwrap(), WaitOutcome::Aborted);
+        assert_eq!(c.wait_done(gid).unwrap(), WaitOutcome::Aborted);
+        // duplicate abort reports are idempotent
+        c.abort_group(gid, Some(1)).unwrap();
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.groups_aborted, 1);
+        assert_eq!(stats.deaths, 0, "abort alone must not declare anyone dead");
+        // address registry
+        assert_eq!(c.lookup(2).unwrap(), None);
+        c.register(2, "127.0.0.1:5555").unwrap();
+        assert_eq!(c.lookup(2).unwrap(), Some("127.0.0.1:5555".into()));
+        // rejoin re-registers a rank and updates its address
+        c.rejoin(2, "127.0.0.1:6666").unwrap();
+        assert_eq!(c.lookup(2).unwrap(), Some("127.0.0.1:6666".into()));
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.rejoins, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn liveness_monitor_declares_silent_rank_dead() {
+        // rank 0 heartbeats, rank 1 goes silent: the monitor must declare
+        // rank 1 dead, aborting the armed group the two of them share, so
+        // rank 0's wait unblocks with Aborted instead of hanging forever.
+        let liveness = LivenessConfig {
+            timeout: Duration::from_millis(250),
+            accused_grace: Duration::from_millis(100),
+            poll: Duration::from_millis(10),
+        };
+        let server = GgServer::spawn_with_liveness(
+            "127.0.0.1:0",
+            GgConfig::random(2, 2, 2),
+            5,
+            Some(liveness),
+        )
+        .unwrap();
+        let mut c = GgClient::connect(server.addr).unwrap();
+        c.heartbeat(1).unwrap(); // rank 1's first and last sign of life
+        let (assigned, _) = c.sync(0, 0.0).unwrap();
+        let (gid, members) = assigned.expect("pair must form");
+        assert_eq!(members, vec![0, 1]);
+        // keep rank 0 alive past rank 1's deadline
+        let deadline = Instant::now() + Duration::from_millis(700);
+        let mut dead = false;
+        while Instant::now() < deadline {
+            c.heartbeat(0).unwrap();
+            if c.probe(gid).unwrap() == GroupState::Aborted {
+                dead = true;
+                break;
+            }
+            thread::sleep(Duration::from_millis(20));
+        }
+        assert!(dead, "monitor never aborted the dead rank's group");
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.deaths, 1, "exactly rank 1 must be declared dead");
+        // the survivor's next division excludes the dead rank: with only
+        // one live worker there is nobody to pair with — sync says skip
+        let (assigned, _) = c.sync(0, 0.0).unwrap();
+        assert!(assigned.is_none(), "dead rank must not be drafted");
+        server.shutdown();
+    }
+
+    #[test]
+    fn accusation_fast_path_beats_the_hard_timeout() {
+        // hard timeout far beyond the test: only the accusation path can
+        // declare the silent suspect dead
+        let liveness = LivenessConfig {
+            timeout: Duration::from_secs(3600),
+            accused_grace: Duration::from_millis(80),
+            poll: Duration::from_millis(10),
+        };
+        let server = GgServer::spawn_with_liveness(
+            "127.0.0.1:0",
+            GgConfig::random(2, 2, 2),
+            6,
+            Some(liveness),
+        )
+        .unwrap();
+        let mut c = GgClient::connect(server.addr).unwrap();
+        let (assigned, _) = c.sync(0, 0.0).unwrap();
+        let (gid, _) = assigned.expect("pair must form");
+        // survivor reports the broken collective and accuses rank 1
+        c.abort_group(gid, Some(1)).unwrap();
+        let deadline = Instant::now() + Duration::from_millis(900);
+        let mut deaths = 0;
+        while Instant::now() < deadline {
+            deaths = c.stats().unwrap().deaths;
+            if deaths == 1 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(deaths, 1, "accused silent rank must die on the fast path");
         server.shutdown();
     }
 

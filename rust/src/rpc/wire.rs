@@ -66,6 +66,11 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Take exactly `n` bytes (length-prefixed payloads).
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
     /// Remaining bytes (consumes them).
     pub fn rest(&mut self) -> Vec<u8> {
         let s = self.buf[self.pos..].to_vec();
@@ -106,6 +111,13 @@ mod tests {
     fn truncation_detected() {
         let mut r = Reader::new(&[1, 2]);
         assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn bytes_takes_exact_and_detects_truncation() {
+        let mut r = Reader::new(&[9, 8, 7]);
+        assert_eq!(r.bytes(2).unwrap(), &[9, 8]);
+        assert!(r.bytes(2).is_err(), "only one byte left");
     }
 
     #[test]

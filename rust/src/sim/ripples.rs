@@ -16,7 +16,7 @@
 //!   reach step `s` (rendezvous), which is also why a slow worker stalls
 //!   its statically-assigned partners (§4.3).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::cluster::{calibration, ComputeTimer};
 use crate::comm::{CommCache, CostModel};
@@ -37,6 +37,11 @@ enum Ev {
     PReduceDone(GroupId, Vec<usize>, f64),
     /// Static mode: the group `members` of schedule step `sidx` finished.
     StaticDone(u64, Vec<usize>),
+    /// Failure repair: worker `w`'s assigned group was aborted; after the
+    /// detection delay it re-requests a repaired group.
+    RepairRetry(usize),
+    /// Crash recovery: worker `w` checkpoint-restores and rejoins.
+    Rejoin(usize),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -159,6 +164,17 @@ fn run_inner(
     let mut total_iters = 0u64;
     let max_total = exp.train.max_iters as u64 * n as u64;
     let eval_stride = (exp.train.eval_every * n) as u64;
+    // ---- crash model (`CrashEvent` ground truth, `[faults]` policy):
+    // a worker dies mid-iteration; with repair on, the GG declares it
+    // dead after `detect_secs` — groups naming it abort, stranded
+    // partners re-request; with repair off the locks are never released
+    // (the AD-PSGD deadlock class) and the run ends in a stall.
+    let faults = exp.faults;
+    let mut dead_now = vec![false; n]; // currently crashed
+    let mut crash_fired = vec![false; n]; // sticky: each event fires once
+    let mut deaths = 0u64;
+    let mut rejoins = 0u64;
+    let mut deadlocked = false;
 
     st.record(0.0, 0.0);
     for w in 0..n {
@@ -169,6 +185,53 @@ fn run_inner(
     while let Some((now, ev)) = q.pop() {
         match ev {
             Ev::ComputeDone(w) => {
+                // crash hook: the worker dies mid-iteration `at_iter` —
+                // this step never completes, no more events for `w`
+                if !crash_fired[w]
+                    && hetero.crash_of(w).is_some_and(|ev| ev.at_iter == iters[w])
+                {
+                    let cev = *hetero.crash_of(w).expect("checked above");
+                    crash_fired[w] = true;
+                    dead_now[w] = true;
+                    deaths += 1;
+                    if faults.repair {
+                        if let Some(gg) = gg.as_mut() {
+                            let purge = gg.declare_dead(w);
+                            let aborted_ids: HashSet<GroupId> =
+                                purge.aborted.iter().map(|g| g.id).collect();
+                            armed.retain(|id, _| !aborted_ids.contains(id));
+                            // partners stranded at their sync point
+                            // re-request once the failure is detected
+                            for g in &purge.aborted {
+                                for &m in &g.members {
+                                    if m != w
+                                        && !dead_now[m]
+                                        && wstate[m] == WState::Ready
+                                        && assigned[m]
+                                            .is_some_and(|a| aborted_ids.contains(&a))
+                                    {
+                                        assigned[m] = None;
+                                        q.push(
+                                            now + faults.detect_secs,
+                                            Ev::RepairRetry(m),
+                                        );
+                                    }
+                                }
+                            }
+                            for g in purge.newly_armed {
+                                armed.insert(g.id, g.members);
+                            }
+                            start_runnable(
+                                &mut armed, &mut wstate, &mut q, now, &cost, &mut cache,
+                                bytes,
+                            );
+                        }
+                    }
+                    if let Some(r) = cev.rejoin_after_secs {
+                        q.push(now + r, Ev::Rejoin(w));
+                    }
+                    continue;
+                }
                 st.local_step(w, iters[w]);
                 let it = iters[w];
                 iters[w] += 1;
@@ -280,6 +343,20 @@ fn run_inner(
                     } else {
                         // drafted into someone else's group: stay ready
                         wstate[m] = WState::Ready;
+                        // repair orphan: m's own assigned group was
+                        // aborted (a group cannot complete without m
+                        // participating, so "gone" here always means
+                        // aborted) — re-request right away
+                        let orphaned = match assigned[m] {
+                            None => true,
+                            Some(a) => {
+                                gg.as_ref().is_some_and(|g| g.group(a).is_none())
+                            }
+                        };
+                        if orphaned && !dead_now[m] {
+                            assigned[m] = None;
+                            q.push(now, Ev::RepairRetry(m));
+                        }
                     }
                 }
                 start_runnable(
@@ -295,8 +372,64 @@ fn run_inner(
                     q.push(now + durs[m], Ev::ComputeDone(m));
                 }
             }
+            Ev::RepairRetry(m) => {
+                // stale once the worker moved on (resumed compute, joined
+                // a collective, crashed, or a prior retry succeeded)
+                if !dead_now[m] && wstate[m] == WState::Ready && assigned[m].is_none() {
+                    let gg = gg.as_mut().expect("repair retry without GG");
+                    let (gid, newly) = gg.request(m, &mut rng);
+                    match gid {
+                        Some(gid) => assigned[m] = Some(gid),
+                        None => {
+                            // nobody left to pair with: skip this sync
+                            wstate[m] = WState::Computing;
+                            durs[m] = timer.next_compute(m);
+                            q.push(now + durs[m], Ev::ComputeDone(m));
+                        }
+                    }
+                    for g in newly {
+                        armed.insert(g.id, g.members);
+                    }
+                    start_runnable(
+                        &mut armed, &mut wstate, &mut q, now, &cost, &mut cache, bytes,
+                    );
+                }
+            }
+            Ev::Rejoin(w) => {
+                if dead_now[w] {
+                    dead_now[w] = false;
+                    rejoins += 1;
+                    if faults.repair {
+                        if let Some(gg) = gg.as_mut() {
+                            // re-registers the declared-dead rank; no
+                            // groups to purge (death already aborted them)
+                            let _ = gg.rejoin(w);
+                        }
+                    }
+                    // checkpoint-restore: seed from the freshest live
+                    // replica (net::ckpt's "freshest in the shared dir")
+                    if let Some(best) = (0..n)
+                        .filter(|&x| x != w && !dead_now[x])
+                        .max_by_key(|&x| iters[x])
+                    {
+                        st.models[w] = st.models[best].clone();
+                    }
+                    wstate[w] = WState::Computing;
+                    assigned[w] = None;
+                    durs[w] = timer.next_compute(w);
+                    q.push(now + durs[w], Ev::ComputeDone(w));
+                }
+            }
         }
         if q.is_empty() && total_iters < max_total && !st.done() {
+            if dead_now.iter().any(|&d| d) {
+                // every live worker is blocked on a group naming a
+                // crashed rank whose locks were never released: the
+                // no-repair failure mode. This IS the measurement —
+                // report the partial run instead of panicking.
+                deadlocked = true;
+                break;
+            }
             panic!(
                 "simulation stalled at t={}: states {:?}, armed {:?}, pending {}",
                 q.now(),
@@ -338,6 +471,10 @@ fn run_inner(
         drafts,
         last_drafted_request,
         onset_request,
+        deaths,
+        groups_aborted: gg.as_ref().map(|g| g.stats.groups_aborted).unwrap_or(0),
+        rejoins,
+        deadlocked,
     }
 }
 
@@ -549,6 +686,144 @@ mod tests {
         assert_eq!(ro.final_time.to_bits(), ro2.final_time.to_bits());
         assert_eq!(ro.sync_time.to_bits(), ro2.sync_time.to_bits());
         assert_eq!(ro.hidden_sync_time.to_bits(), ro2.hidden_sync_time.to_bits());
+    }
+
+    #[test]
+    fn crash_with_repair_outlives_crash_without() {
+        use crate::cluster::CrashEvent;
+        let mut base = params(AlgoKind::RipplesSmart);
+        base.exp.train.max_iters = 80;
+        let crash_free = run(&base);
+        let budget = crash_free.final_time; // equal-virtual-time comparison
+
+        let mut crashed = base.clone();
+        crashed.exp.cluster.hetero.crashes =
+            vec![CrashEvent { worker: 7, at_iter: 30, rejoin_after_secs: None }];
+        let repaired = super::run_until(&crashed, Some(budget));
+        assert_eq!(repaired.deaths, 1);
+        assert!(!repaired.deadlocked, "repair must keep the cluster alive");
+        assert_eq!(
+            repaired.per_worker_iters[7],
+            30,
+            "the dead worker stops at its crash iteration"
+        );
+        // every survivor keeps iterating after the repair: nobody frozen
+        let min_live = (0..16)
+            .filter(|&w| w != 7)
+            .map(|w| repaired.per_worker_iters[w])
+            .min()
+            .unwrap();
+        assert!(
+            min_live > 40,
+            "a survivor froze despite repair: {:?}",
+            repaired.per_worker_iters
+        );
+
+        let mut broken = crashed.clone();
+        broken.exp.faults.repair = false;
+        let no_repair = super::run_until(&broken, Some(budget));
+        // the group that drafted the dead rank never arms: its members
+        // hang forever holding nothing but their Ready state, while the
+        // dead rank's locks freeze everyone the GG packed with it
+        let max_live = (0..16)
+            .filter(|&w| w != 7)
+            .map(|w| no_repair.per_worker_iters[w])
+            .max()
+            .unwrap();
+        let frozen = (0..16)
+            .filter(|&w| w != 7 && no_repair.per_worker_iters[w] < max_live / 2)
+            .count();
+        assert!(
+            frozen >= 1,
+            "no survivor got stuck behind the dead rank: {:?}",
+            no_repair.per_worker_iters
+        );
+        assert!(
+            no_repair.total_iters < repaired.total_iters,
+            "unrepaired cluster must fall behind at equal time: {} vs {}",
+            no_repair.total_iters,
+            repaired.total_iters
+        );
+    }
+
+    #[test]
+    fn pair_cluster_deadlocks_without_repair_and_survives_with() {
+        use crate::cluster::CrashEvent;
+        // 2 workers: once worker 1 crashes inside the armed pair group,
+        // worker 0 has no event left — the full AD-PSGD-style deadlock.
+        let mut p = params(AlgoKind::RipplesSmart);
+        p.exp.cluster.n_nodes = 1;
+        p.exp.cluster.workers_per_node = 2;
+        p.exp.algo.group_size = 2;
+        p.exp.train.max_iters = 40;
+        p.exp.cluster.hetero.crashes =
+            vec![CrashEvent { worker: 1, at_iter: 5, rejoin_after_secs: None }];
+        let mut broken = p.clone();
+        broken.exp.faults.repair = false;
+        let res = run(&broken);
+        assert!(res.deadlocked, "pair cluster must fully deadlock without repair");
+        assert!(res.total_iters < 40 * 2);
+        // with repair the survivor syncs solo-skips and finishes its budget
+        let res = run(&p);
+        assert!(!res.deadlocked);
+        assert_eq!(res.deaths, 1);
+        assert!(
+            res.per_worker_iters[0] > 5,
+            "survivor must keep training: {:?}",
+            res.per_worker_iters
+        );
+    }
+
+    #[test]
+    fn rejoined_worker_is_drafted_again() {
+        use crate::cluster::CrashEvent;
+        let mut p = params(AlgoKind::RipplesSmart);
+        p.exp.train.max_iters = 120;
+        p.exp.cluster.hetero.crashes =
+            vec![CrashEvent { worker: 7, at_iter: 20, rejoin_after_secs: Some(3.0) }];
+        let res = run(&p);
+        assert_eq!(res.deaths, 1);
+        assert_eq!(res.rejoins, 1);
+        assert!(!res.deadlocked);
+        assert!(
+            res.per_worker_iters[7] > 20,
+            "rejoined worker must iterate again: {:?}",
+            res.per_worker_iters
+        );
+        // the restored rank was drafted by other initiators post-rejoin:
+        // its last draft falls in the post-crash request stream
+        assert!(
+            res.drafts[7] > 0 && res.last_drafted_request[7] > 0,
+            "rejoined rank never drafted: drafts {:?}",
+            res.drafts
+        );
+        assert!(
+            res.gg_requests - res.last_drafted_request[7] < res.gg_requests / 2,
+            "rejoined rank not drafted in the later half of the run: last {} of {}",
+            res.last_drafted_request[7],
+            res.gg_requests
+        );
+    }
+
+    #[test]
+    fn crash_schedules_are_deterministic() {
+        use crate::cluster::CrashEvent;
+        let mut p = params(AlgoKind::RipplesSmart);
+        p.exp.train.max_iters = 100;
+        p.exp.cluster.hetero.crashes =
+            vec![CrashEvent { worker: 3, at_iter: 15, rejoin_after_secs: Some(2.0) }];
+        let a = run(&p);
+        let b = run(&p);
+        assert_eq!(a.final_time.to_bits(), b.final_time.to_bits());
+        assert_eq!(a.total_iters, b.total_iters);
+        assert_eq!(a.per_worker_iters, b.per_worker_iters);
+        assert_eq!(a.deaths, b.deaths);
+        assert_eq!(a.rejoins, b.rejoins);
+        assert_eq!(a.groups_aborted, b.groups_aborted);
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (x, y) in a.trace.iter().zip(b.trace.iter()) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
     }
 
     #[test]

@@ -49,6 +49,16 @@ pub struct SimResult {
     /// `gg_requests` value when the first scheduled slowdown change
     /// (`cluster::SlowdownEvent`) took effect; None = none fired.
     pub onset_request: Option<u64>,
+    /// Crashes that fired (`cluster::CrashEvent`).
+    pub deaths: u64,
+    /// Groups torn down by failure repair.
+    pub groups_aborted: u64,
+    /// Crashed workers that checkpoint-restored and rejoined.
+    pub rejoins: u64,
+    /// The run ended in a stall: every live worker blocked forever on a
+    /// group naming a crashed rank — the no-repair failure mode
+    /// (`[faults] repair = false`) that `fig failures` measures.
+    pub deadlocked: bool,
 }
 
 impl SimResult {

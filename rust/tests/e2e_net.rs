@@ -6,13 +6,31 @@
 //! integration tests and exports the path via `CARGO_BIN_EXE_ripples`).
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use ripples::cluster::SlowdownEvent;
 use ripples::collectives::OverlapConfig;
-use ripples::net::{launch_local, LaunchConfig, LaunchReport};
+use ripples::net::{launch_local, KillSpec, LaunchConfig, LaunchReport};
 
 fn bin() -> PathBuf {
     PathBuf::from(env!("CARGO_BIN_EXE_ripples"))
+}
+
+/// Hard test timeout: a fault-tolerance regression must FAIL the test,
+/// not hang CI. The work runs on a helper thread; if it outlives the
+/// deadline the test panics (the thread is leaked — the process is about
+/// to die anyway).
+fn with_timeout<T, F>(secs: u64, what: &str, f: F) -> T
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .unwrap_or_else(|_| panic!("{what}: hung past the {secs}s test timeout"))
 }
 
 /// The acceptance scenario: a 4-process cluster with worker 0 slowed 3x.
@@ -201,6 +219,141 @@ fn overlap_pipeline_reduces_exposed_sync() {
         (ls - lo).abs() < 0.5 * ls.max(lo) + 0.05,
         "final losses diverged: serial {ls:.4} vs overlap {lo:.4}"
     );
+}
+
+/// The chaos acceptance scenario: a 4-process cluster, one worker
+/// SIGKILLed mid-run (with an 8 ms compute floor and constant syncing,
+/// that lands mid-collective or with in-flight group state). The
+/// remaining workers must detect the crash (heartbeat liveness +
+/// data-plane accusations), abort/repair the broken groups, finish the
+/// timed window, and train about as well as a crash-free 3-worker
+/// cluster — neither hanging nor crashing.
+#[test]
+fn chaos_kill_worker_mid_run_cluster_repairs_and_finishes() {
+    let base = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        secs: 3.0,
+        group_size: 2,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 42,
+        liveness_ms: 2000,
+        heartbeat_ms: 100,
+        ..LaunchConfig::default()
+    };
+    let report = with_timeout(120, "chaos kill run", {
+        let cfg = LaunchConfig {
+            kill: Some(KillSpec { rank: 3, after_secs: 1.0, rejoin_after_secs: None }),
+            ..base.clone()
+        };
+        move || launch_local(&cfg).expect("chaos cluster run")
+    });
+    assert_eq!(report.killed, Some(3));
+    assert_eq!(report.workers.len(), 3, "exactly the survivors report");
+    let s = &report.gg_stats;
+    assert_eq!(s.deaths, 1, "the killed rank must be declared dead (and only it)");
+    assert_eq!(s.rejoins, 0);
+    // the cluster kept scheduling after the kill
+    let at_kill = report.gg_stats_at_kill.as_ref().expect("kill snapshot");
+    assert!(
+        s.requests > at_kill.requests + 10,
+        "survivors stopped syncing after the kill: {} -> {}",
+        at_kill.requests,
+        s.requests
+    );
+    for w in &report.workers {
+        assert_ne!(w.rank, 3);
+        assert!(w.preduces > 0, "survivor {} never synchronized: {w:?}", w.rank);
+        assert!(
+            w.loss_last < w.loss_first * 0.85,
+            "survivor {} loss did not decrease: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+    }
+
+    // crash-free 3-worker reference: the repaired cluster must train to a
+    // comparable loss (same seed, same window — the dead rank's absence
+    // is the only difference after repair)
+    let reference = with_timeout(120, "crash-free reference run", {
+        let cfg = LaunchConfig { workers: 3, ..base };
+        move || launch_local(&cfg).expect("reference cluster run")
+    });
+    let mean_loss = |r: &LaunchReport| -> f64 {
+        r.workers.iter().map(|w| w.loss_last).sum::<f64>() / r.workers.len() as f64
+    };
+    let (lc, lr) = (mean_loss(&report), mean_loss(&reference));
+    assert!(
+        (lc - lr).abs() < 0.5 * lc.max(lr) + 0.05,
+        "repaired cluster trained much worse than crash-free: {lc:.4} vs {lr:.4}"
+    );
+}
+
+/// The rejoin acceptance scenario: kill a worker, then spawn a
+/// replacement that restores the freshest shared checkpoint and rejoins
+/// under the same rank at a *new* data-plane address. The replacement
+/// must train and be drafted by other initiators again (asserted via the
+/// GG's `StatsReport` draft counters against the at-kill snapshot).
+#[test]
+fn chaos_rejoin_restores_from_checkpoint_and_contributes() {
+    let ckpt_dir = std::env::temp_dir()
+        .join(format!("ripples_chaos_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let cfg = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        secs: 4.0,
+        group_size: 2,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 43,
+        liveness_ms: 2000,
+        heartbeat_ms: 100,
+        ckpt_every: 5,
+        ckpt_dir: Some(ckpt_dir.clone()),
+        kill: Some(KillSpec { rank: 3, after_secs: 1.2, rejoin_after_secs: Some(0.8) }),
+        ..LaunchConfig::default()
+    };
+    let report = with_timeout(150, "chaos rejoin run", move || {
+        launch_local(&cfg).expect("rejoin cluster run")
+    });
+    assert_eq!(report.killed, Some(3));
+    let s = &report.gg_stats;
+    assert_eq!(s.deaths, 1);
+    assert_eq!(s.rejoins, 1, "the replacement must have rejoined");
+    // all four ranks report: 3 survivors + the replacement under rank 3
+    assert_eq!(report.workers.len(), 4);
+    let replacement = report
+        .workers
+        .iter()
+        .find(|w| w.rank == 3)
+        .expect("replacement must report under the killed rank");
+    assert!(replacement.iters > 0, "replacement never trained: {replacement:?}");
+    assert!(
+        replacement.preduces > 0,
+        "replacement never executed a P-Reduce: {replacement:?}"
+    );
+    // drafted AGAIN: its most recent draft by another initiator happened
+    // after the kill-time request counter
+    let at_kill = report.gg_stats_at_kill.as_ref().expect("kill snapshot");
+    assert!(
+        s.last_drafted[3] > at_kill.requests,
+        "restored rank was never drafted post-rejoin: last draft at request {} \
+         vs {} requests at kill",
+        s.last_drafted[3],
+        at_kill.requests
+    );
+    // checkpoints were actually written (the replacement restored one)
+    assert!(
+        std::fs::read_dir(&ckpt_dir).map(|d| d.count() > 0).unwrap_or(false),
+        "no checkpoints in {}",
+        ckpt_dir.display()
+    );
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
 }
 
 /// Random-GG pair: the minimal cluster exercises the non-smart scheduling

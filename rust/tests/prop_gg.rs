@@ -133,6 +133,184 @@ fn prop_gg_various_shapes_and_group_sizes() {
     }
 }
 
+/// Drive a GG through a random interleaving of request / complete /
+/// declare_dead, checking the death-purge invariants at every step:
+/// no lock is ever held by a dead rank, no Group Buffer entry (of any
+/// worker) names a group containing a dead rank, the speed table forgets
+/// dead ranks, and `GgStats` reflects every purge.
+fn gg_death_workload(cfg: ripples::gg::GgConfig, seed: u64, steps: usize) {
+    let n = cfg.n_workers;
+    let use_gb = cfg.use_group_buffer;
+    let mut gg = GroupGenerator::new(cfg);
+    let mut rng = Pcg32::new(seed ^ 0xDead);
+    let mut armed: Vec<(GroupId, Vec<usize>)> = Vec::new();
+    let mut waiting: HashSet<usize> = HashSet::new();
+    let mut dead: HashSet<usize> = HashSet::new();
+    // seed some telemetry so the purge has something to erase
+    for w in 0..n {
+        gg.report_speed(w, 0.010 + 0.001 * w as f64);
+    }
+
+    for step in 0..steps {
+        let roll = rng.gen_f64();
+        if roll < 0.08 && dead.len() + 2 < n {
+            // ---- declare a random live rank dead
+            let live: Vec<usize> = (0..n).filter(|w| !dead.contains(w)).collect();
+            let victim = live[rng.gen_range(live.len())];
+            let purge = gg.declare_dead(victim);
+            dead.insert(victim);
+            waiting.remove(&victim);
+            let aborted: HashSet<GroupId> = purge.aborted.iter().map(|g| g.id).collect();
+            armed.retain(|(id, _)| !aborted.contains(id));
+            for g in &purge.aborted {
+                for m in &g.members {
+                    // stranded members would re-sync; model as not waiting
+                    waiting.remove(m);
+                }
+            }
+            for g in purge.newly_armed {
+                armed.push((g.id, g.members));
+            }
+        } else if roll < 0.6 || armed.is_empty() {
+            // ---- a live, non-waiting worker requests
+            let free: Vec<usize> =
+                (0..n).filter(|w| !waiting.contains(w) && !dead.contains(w)).collect();
+            if let Some(&w) = (!free.is_empty())
+                .then(|| &free[rng.gen_range(free.len())])
+            {
+                let (gid, newly) = gg.request(w, &mut rng);
+                if let Some(gid) = gid {
+                    waiting.insert(w);
+                    let g = gg.group(gid).unwrap_or_else(|| {
+                        panic!("seed {seed} step {step}: assigned {gid} unknown")
+                    });
+                    assert!(
+                        !g.members.iter().any(|m| dead.contains(m)),
+                        "seed {seed} step {step}: dead rank in assigned {:?}",
+                        g.members
+                    );
+                }
+                for g in newly {
+                    armed.push((g.id, g.members));
+                }
+            }
+        } else {
+            // ---- complete a random armed group
+            let idx = rng.gen_range(armed.len());
+            let (gid, members) = armed.swap_remove(idx);
+            for &m in &members {
+                waiting.remove(&m);
+            }
+            for g in gg.complete(gid) {
+                armed.push((g.id, g.members));
+            }
+        }
+        // ---- invariants after every step ----
+        for &d in &dead {
+            assert!(
+                !gg.is_locked_worker(d),
+                "seed {seed} step {step}: dead rank {d} holds a lock"
+            );
+            assert!(
+                gg.gb_snapshot(d).is_empty(),
+                "seed {seed} step {step}: dead rank {d} has GB entries"
+            );
+            assert_eq!(
+                gg.speed_table().get(d),
+                None,
+                "seed {seed} step {step}: dead rank {d} still measured"
+            );
+            assert!(gg.is_dead(d) && gg.is_retired(d));
+        }
+        for gid in gg.live_group_ids() {
+            let members = &gg.group(gid).unwrap().members;
+            assert!(
+                !members.iter().any(|m| dead.contains(m)),
+                "seed {seed} step {step}: live group {gid} names a dead rank {members:?}"
+            );
+        }
+        if use_gb {
+            // every GB entry refers to a live group (hence dead-free)
+            for w in 0..n {
+                for gid in gg.gb_snapshot(w) {
+                    assert!(
+                        gg.group(gid).is_some(),
+                        "seed {seed} step {step}: GB of {w} names dead/stale group {gid}"
+                    );
+                }
+            }
+        }
+        assert_eq!(
+            gg.stats.deaths as usize,
+            dead.len(),
+            "seed {seed} step {step}: death count drifted"
+        );
+    }
+    // drain and verify no lock leaks
+    while let Some((gid, _)) = armed.pop() {
+        for g in gg.complete(gid) {
+            armed.push((g.id, g.members));
+        }
+    }
+    assert_eq!(gg.pending_len(), 0, "seed {seed}: pending groups leaked");
+    assert_eq!(gg.locked_count(), 0, "seed {seed}: locks leaked after drain");
+}
+
+#[test]
+fn prop_death_purge_invariants_random_gg() {
+    for seed in 0..SEEDS {
+        gg_death_workload(GgConfig::random(16, 4, 3), seed, 250);
+    }
+}
+
+#[test]
+fn prop_death_purge_invariants_smart_gg() {
+    for seed in 0..SEEDS {
+        gg_death_workload(GgConfig::smart(16, 4, 3, 8), seed, 250);
+    }
+}
+
+/// Identical crash schedules replay bit-for-bit: the fault-injection
+/// backbone's reproducibility guarantee, end to end through the
+/// simulator (crash, repair, rejoin, loss trace).
+#[test]
+fn prop_sim_crash_schedules_deterministic() {
+    use ripples::cluster::CrashEvent;
+    use ripples::config::{AlgoKind, Experiment};
+    use ripples::model::MlpSpec;
+    use ripples::sim::{self, SimParams};
+    for seed in 0..6u64 {
+        let mut exp = Experiment::default();
+        exp.algo.kind = AlgoKind::RipplesSmart;
+        exp.train.max_iters = 60;
+        exp.train.eval_every = 10;
+        exp.train.loss_target = None;
+        exp.train.seed = 1000 + seed;
+        let mut rng = Pcg32::new(seed ^ 0xC4A5);
+        exp.cluster.hetero.crashes = vec![CrashEvent {
+            worker: rng.gen_range(16),
+            at_iter: 5 + rng.gen_range(30) as u64,
+            rejoin_after_secs: (seed % 2 == 0).then_some(2.5),
+        }];
+        let mut p = SimParams::vgg16_defaults(exp);
+        p.spec = MlpSpec::tiny();
+        p.dataset_size = 256;
+        p.batch = 32;
+        let a = sim::run(&p);
+        let b = sim::run(&p);
+        assert_eq!(a.final_time.to_bits(), b.final_time.to_bits(), "seed {seed}");
+        assert_eq!(a.per_worker_iters, b.per_worker_iters, "seed {seed}");
+        assert_eq!(a.deaths, b.deaths, "seed {seed}");
+        assert_eq!(a.rejoins, b.rejoins, "seed {seed}");
+        assert_eq!(a.groups_aborted, b.groups_aborted, "seed {seed}");
+        assert_eq!(a.trace.len(), b.trace.len(), "seed {seed}");
+        for (x, y) in a.trace.iter().zip(b.trace.iter()) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "seed {seed}");
+        }
+        assert!(a.deaths == 1, "seed {seed}: the crash must fire");
+    }
+}
+
 #[test]
 fn prop_global_division_partitions_are_disjoint() {
     for seed in 0..SEEDS {

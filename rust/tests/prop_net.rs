@@ -160,6 +160,9 @@ fn prop_rpc_request_roundtrip() {
             speeds: (0..n).map(|_| rng.gen_f64()).collect(),
             drafts: (0..n).map(|_| rng.next_u64()).collect(),
             last_drafted: (0..n).map(|_| rng.next_u64()).collect(),
+            deaths: rng.next_u64(),
+            groups_aborted: rng.next_u64(),
+            rejoins: rng.next_u64(),
         });
         assert_eq!(Response::decode(&resp.encode()).unwrap(), resp, "seed {seed}");
     }
