@@ -5,7 +5,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test chaos clippy doc verify artifacts python-test bench bench-json clean
+.PHONY: build test chaos clippy doc fmt verify artifacts python-test bench bench-json clean
 
 build:
 	$(CARGO) build --release
@@ -14,9 +14,10 @@ test: build
 	$(CARGO) test -q
 
 # Chaos gate, explicitly: the fault-injection e2e suite (kill a worker
-# mid-collective; repair + checkpoint-rejoin). Included in `cargo test`
-# too — this target exists so `verify` names the crash path even when
-# test filters change.
+# mid-collective; repair + checkpoint-rejoin; one kill-mid-run case
+# under `--wire q8` proving poison/abort paths survive compressed
+# frames). Included in `cargo test` too — this target exists so
+# `verify` names the crash path even when test filters change.
 chaos:
 	$(CARGO) test -q --test e2e_net chaos_
 
@@ -32,7 +33,11 @@ doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 	$(CARGO) test --doc -q
 
-verify: build test chaos clippy doc
+# Formatting gate: the tree must be rustfmt-clean.
+fmt:
+	$(CARGO) fmt --check
+
+verify: build test chaos clippy doc fmt
 
 # Lower the Layer-2/Layer-1 JAX graphs to HLO-text artifacts (needs
 # Python + JAX; content-hashed, so re-running is a no-op when the
@@ -49,6 +54,7 @@ bench:
 
 # Machine-readable perf trajectory: every figure harness as
 # results/BENCH_<id>.json (accumulated across PRs; see EXPERIMENTS.md).
+# `fig all` includes `fig wire` (BENCH_wire.json: codec x bandwidth).
 bench-json: build
 	$(CARGO) run --release -- fig all --json results
 

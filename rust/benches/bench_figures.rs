@@ -14,7 +14,8 @@ use ripples::bench::figures;
 fn main() {
     let csv_dir = Path::new("results");
     std::fs::create_dir_all(csv_dir).ok();
-    let ids = ["1", "2b", "15", "16", "17", "18", "19", "20", "dyn"];
+    let ids =
+        ["1", "2b", "15", "16", "17", "18", "19", "20", "dyn", "overlap", "wire", "failures"];
     let mut total = 0.0;
     for id in ids {
         let t0 = Instant::now();

@@ -442,6 +442,61 @@ pub fn fig_overlap(csv_dir: Option<&Path>) -> Table {
     t
 }
 
+/// Wire-format sweep — codec × link bandwidth. Not a paper figure: the
+/// paper ships raw `f32` chunks; this harness sweeps the compressed
+/// wire codecs (`--wire fp32|fp16|q8`) against a uniform and a
+/// bandwidth-constrained cluster (every link throttled 512x via
+/// `cluster::BandwidthEvent` — the repo's first *bandwidth*
+/// heterogeneity axis; EXPERIMENTS.md §Wire-sweep). Expected shape: on
+/// the constrained link q8 moves ~4x fewer bytes and exposes >=2x less
+/// sync time than fp32 at an equivalent final loss (the codec noise is
+/// bounded per chunk range); on the uniform link the codecs barely
+/// matter because sync is overhead-, not bandwidth-, dominated.
+pub fn fig_wire(csv_dir: Option<&Path>) -> Table {
+    use crate::cluster::BandwidthEvent;
+    use crate::collectives::WireCodec;
+    let mut t = Table::new(&[
+        "link",
+        "codec",
+        "exposed sync s",
+        "wire MB",
+        "iters/s",
+        "final loss",
+        "expected shape",
+    ]);
+    for (link, throttle) in [("uniform", None), ("constrained-512x", Some(512.0))] {
+        for codec in [WireCodec::Fp32, WireCodec::Fp16, WireCodec::Q8] {
+            let mut p = base_params(AlgoKind::RipplesSmart);
+            p.exp.train.loss_target = None;
+            p.exp.train.max_iters = 160;
+            p.exp.wire = codec;
+            if let Some(factor) = throttle {
+                p.exp.cluster.hetero.bandwidth = (0..p.exp.cluster.n_workers())
+                    .map(|w| BandwidthEvent { worker: w, factor, start_iter: 0 })
+                    .collect();
+            }
+            let res = sim::run(&p);
+            dump_trace(csv_dir, &format!("wire_{link}_{}", codec.name()), &res);
+            let loss = res.trace.last().map(|tp| tp.loss).unwrap_or(f64::NAN);
+            t.row(vec![
+                link.into(),
+                codec.name().into(),
+                format!("{:.3}", res.sync_time),
+                format!("{:.1}", res.bytes_on_wire as f64 / 1e6),
+                format!("{:.2}", res.total_iters as f64 / res.final_time),
+                format!("{loss:.4}"),
+                if link == "constrained-512x" && codec == WireCodec::Fp32 {
+                    "q8 >=2x less exposed sync at equal loss"
+                } else {
+                    ""
+                }
+                .into(),
+            ]);
+        }
+    }
+    t
+}
+
 /// Failure sweep — crash tolerance. Not a paper figure: the paper's
 /// control plane only handles graceful departure; this harness measures
 /// what a *crash* costs under three policies at equal virtual time
@@ -539,6 +594,7 @@ pub fn run_figure(
         ("20", "Figure 20", fig20),
         ("dyn", "Dynamic straggler (filter reaction)", fig_dyn),
         ("overlap", "Overlap pipeline (hidden vs exposed sync)", fig_overlap),
+        ("wire", "Wire formats (codec x bandwidth)", fig_wire),
         ("failures", "Failure sweep (crash tolerance)", fig_failures),
     ];
     let selected: Vec<_> = if id == "all" {
@@ -549,7 +605,7 @@ pub fn run_figure(
     if selected.is_empty() {
         return Err(format!(
             "unknown figure '{id}' (try 1, 2b, 15, 16, 17, 18, 19, 20, dyn, overlap, \
-             failures, all)"
+             wire, failures, all)"
         ));
     }
     Ok(selected
@@ -657,6 +713,48 @@ mod tests {
             (ls - l4).abs() < 0.5 * ls.max(l4) + 0.02,
             "loss diverged: serial {ls} vs K=4 {l4}:\n{csv}"
         );
+    }
+
+    #[test]
+    fn wire_scenario_q8_halves_constrained_sync_at_equal_loss() {
+        let t = fig_wire(None);
+        let csv = t.to_csv();
+        let col = |link: &str, codec: &str, idx: usize| -> f64 {
+            csv.lines()
+                .find(|l| l.starts_with(&format!("{link},{codec},")))
+                .unwrap_or_else(|| panic!("missing row {link}/{codec}:\n{csv}"))
+                .split(',')
+                .nth(idx)
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        // the acceptance bar: >=2x exposed-sync reduction for q8 vs fp32
+        // on the bandwidth-constrained link
+        let fp32_sync = col("constrained-512x", "fp32", 2);
+        let q8_sync = col("constrained-512x", "q8", 2);
+        assert!(
+            q8_sync <= 0.5 * fp32_sync,
+            "q8 sync {q8_sync}s vs fp32 {fp32_sync}s:\n{csv}"
+        );
+        // fp16 sits in between
+        let fp16_sync = col("constrained-512x", "fp16", 2);
+        assert!(fp16_sync < fp32_sync, "{csv}");
+        // bytes shrink by the codec's ratio everywhere
+        assert!(col("uniform", "fp16", 3) < 0.6 * col("uniform", "fp32", 3), "{csv}");
+        assert!(col("uniform", "q8", 3) < 0.3 * col("uniform", "fp32", 3), "{csv}");
+        // equal-loss tolerance: the q8 run trains comparably to fp32
+        let lf = col("constrained-512x", "fp32", 5);
+        let lq = col("constrained-512x", "q8", 5);
+        assert!(
+            (lf - lq).abs() < 0.5 * lf.max(lq) + 0.05,
+            "loss diverged: fp32 {lf} vs q8 {lq}:\n{csv}"
+        );
+        // on the uniform link the codec barely matters (overhead-bound;
+        // generous slack — different durations re-phase the schedule)
+        let uf = col("uniform", "fp32", 2);
+        let uq = col("uniform", "q8", 2);
+        assert!(uq <= uf * 1.25 + 0.05, "uniform q8 {uq}s vs fp32 {uf}s:\n{csv}");
     }
 
     #[test]

@@ -46,6 +46,36 @@ impl SlowdownEvent {
     }
 }
 
+/// One scheduled *link* bandwidth change: `worker`'s network bandwidth
+/// is divided by `factor` once its *local* iteration count reaches
+/// `start_iter` — the bandwidth analogue of [`SlowdownEvent`] (the repo
+/// previously only modelled *compute* heterogeneity). Every ring edge
+/// touching the worker is throttled (a ring step costs its slowest
+/// edge), which is how a constrained link gates a whole group; the
+/// wire codec (`WireCodec`, `--wire`) attacks exactly this cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BandwidthEvent {
+    pub worker: usize,
+    /// Bandwidth *divisor* (>= 1): 4.0 means the link runs at 1/4 speed.
+    pub factor: f64,
+    pub start_iter: u64,
+}
+
+impl BandwidthEvent {
+    /// Parse a `W,F@ITER[;W,F@ITER...]` schedule (the `--bw-schedule`
+    /// CLI grammar — same shape as [`SlowdownEvent::parse_list`]).
+    pub fn parse_list(s: &str) -> Result<Vec<BandwidthEvent>, String> {
+        Ok(SlowdownEvent::parse_list(s)?
+            .into_iter()
+            .map(|ev| BandwidthEvent {
+                worker: ev.worker,
+                factor: ev.factor,
+                start_iter: ev.start_iter,
+            })
+            .collect())
+    }
+}
+
 /// One scheduled crash: `worker` dies when its *local* iteration count
 /// reaches `at_iter` (mid-iteration — the step never completes), and
 /// optionally rejoins `rejoin_after_secs` virtual seconds later as a
@@ -140,6 +170,10 @@ pub struct HeterogeneityProfile {
     /// Scheduled crashes (and optional rejoins) — at most one per worker;
     /// later entries for the same worker are ignored.
     pub crashes: Vec<CrashEvent>,
+    /// Per-link bandwidth throttles: once active, the worker's link
+    /// bandwidth is divided by the entry's factor (largest active
+    /// `start_iter` wins, mirroring the slowdown schedule).
+    pub bandwidth: Vec<BandwidthEvent>,
 }
 
 impl HeterogeneityProfile {
@@ -174,6 +208,20 @@ impl HeterogeneityProfile {
     /// The crash scheduled for `worker`, if any (first entry wins).
     pub fn crash_of(&self, worker: usize) -> Option<&CrashEvent> {
         self.crashes.iter().find(|ev| ev.worker == worker)
+    }
+
+    /// Bandwidth divisor of `worker`'s link at its local iteration
+    /// `iter` (1.0 = full speed; same largest-active-entry resolution
+    /// as the slowdown schedule).
+    pub fn bandwidth_factor_at(&self, worker: usize, iter: u64) -> f64 {
+        scheduled_factor_at(
+            self.bandwidth
+                .iter()
+                .filter(|ev| ev.worker == worker)
+                .map(|ev| (ev.factor, ev.start_iter)),
+            1.0,
+            iter,
+        )
     }
 }
 
@@ -374,6 +422,27 @@ mod tests {
         assert!(CrashEvent::parse_list("7@y").is_err());
         assert!(CrashEvent::parse_list("7@30+z").is_err());
         assert!(CrashEvent::parse_list("7@30+-1").is_err());
+    }
+
+    #[test]
+    fn bandwidth_schedule_resolves_like_slowdowns() {
+        let p = HeterogeneityProfile {
+            bandwidth: vec![
+                BandwidthEvent { worker: 2, factor: 8.0, start_iter: 10 },
+                BandwidthEvent { worker: 2, factor: 1.0, start_iter: 30 },
+            ],
+            ..HeterogeneityProfile::default()
+        };
+        assert_eq!(p.bandwidth_factor_at(2, 0), 1.0);
+        assert_eq!(p.bandwidth_factor_at(2, 10), 8.0); // link degrades
+        assert_eq!(p.bandwidth_factor_at(2, 29), 8.0);
+        assert_eq!(p.bandwidth_factor_at(2, 30), 1.0); // link recovers
+        assert_eq!(p.bandwidth_factor_at(0, 100), 1.0); // other links clean
+        // parse shares the slowdown grammar
+        let evs = BandwidthEvent::parse_list("2,8.0@10; 2,1.0@30").unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0], BandwidthEvent { worker: 2, factor: 8.0, start_iter: 10 });
+        assert!(BandwidthEvent::parse_list("2,8.0").is_err());
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Wire codecs for the P-Reduce data plane: how model elements are
+//! represented on the wire (DESIGN.md §Perf, "Wire formats").
+//!
+//! The ring schedule is bandwidth-optimal in *transfers* (`2(p-1)` steps
+//! of `n/p` elements), but every element still ships as a raw `f32` —
+//! 4 bytes/parameter/step. On a constrained link the ring, not the
+//! straggler, becomes the bottleneck (AD-PSGD and Hop both observe
+//! decentralized training is communication-bound on slow networks), so
+//! the data plane supports lossy compressed chunk formats:
+//!
+//! | codec  | bytes/elem | error bound per element                        |
+//! |--------|------------|------------------------------------------------|
+//! | `fp32` | 4          | exact (bit-identical, the golden default)      |
+//! | `fp16` | 2          | `max(|x|·2⁻¹¹, 2⁻²⁴)`; saturates at ±65504     |
+//! | `q8`   | 1 (+8/chunk header) | `(hi−lo)/510` per chunk `[lo, hi]`    |
+//!
+//! * **fp16** — IEEE-754 binary16 conversion with round-to-nearest-even,
+//!   subnormals included. Overflow (and ±inf/NaN input) *saturates* to
+//!   the largest finite half, ±65504 — the wire never carries a
+//!   non-finite half, so a single huge gradient cannot poison a ring sum
+//!   with `inf` ([`f32_to_f16_bits`] / [`f16_bits_to_f32`]).
+//! * **q8** — per-chunk min/max-scaled 8-bit quantization: each wire
+//!   chunk carries `(lo, scale)` and one byte per element,
+//!   `q = round((x−lo)/scale·255)`, decoded as `lo + q·scale/255`.
+//!   Deterministic (pure f32 arithmetic, no RNG) and total: NaN inputs
+//!   quantize as 0.0 and ±inf clamp to ±[`Q8_CLAMP`] so `hi − lo` stays
+//!   finite. The error bound is *relative to the chunk's dynamic range*,
+//!   which is why the data plane quantizes per ring chunk (`n/p`
+//!   elements) rather than per model: local ranges are tighter.
+//!
+//! When is `q8` safe? Whenever per-sync perturbations of order
+//! `range/510` are small against the SGD step size — weight averaging is
+//! a contraction, so the quantization noise does not accumulate across
+//! syncs (EXPERIMENTS.md §Wire-sweep measures the loss gap). Partial
+//! reduce-scatter sums are re-quantized at every hop, so worst-case
+//! error grows with group size `p`; keep `q8` to small groups (the
+//! paper's P-Reduce regime) or drop to `fp16`, whose error is relative
+//! to each element rather than the chunk range.
+
+use std::fmt;
+
+/// Largest finite IEEE binary16 value (`0x7bff`).
+pub const F16_MAX: f32 = 65504.0;
+/// Relative error bound of fp16 round-to-nearest (half ulp, `2^-11`).
+pub const F16_REL_ERR: f32 = 4.882_812_5e-4;
+/// Absolute error bound of fp16 in the subnormal range (`2^-24`).
+pub const F16_ABS_ERR: f32 = 5.960_464_5e-8;
+/// q8 clamps inputs into `[-Q8_CLAMP, Q8_CLAMP]` so `hi - lo` is finite.
+pub const Q8_CLAMP: f32 = f32::MAX / 2.0;
+
+const F16_MAX_BITS: u16 = 0x7bff;
+
+/// On-wire element representation for ring-collective chunks
+/// (`--wire fp32|fp16|q8`, config `[wire] codec`). All members of a
+/// cluster should agree; receivers decode whatever codec the sender
+/// used (the frame tag carries it), so the knob only governs what each
+/// worker *sends*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireCodec {
+    /// Raw little-endian `f32` — the exact, golden-path default.
+    #[default]
+    Fp32,
+    /// IEEE binary16 truncation (round-to-nearest-even, saturating).
+    Fp16,
+    /// Per-chunk min/max-scaled 8-bit quantization.
+    Q8,
+}
+
+impl WireCodec {
+    /// Parse the CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" | "raw" => WireCodec::Fp32,
+            "fp16" | "f16" | "half" => WireCodec::Fp16,
+            "q8" | "int8" | "i8" => WireCodec::Q8,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireCodec::Fp32 => "fp32",
+            WireCodec::Fp16 => "fp16",
+            WireCodec::Q8 => "q8",
+        }
+    }
+
+    /// Bytes a chunk of `f32_bytes` worth of raw elements occupies on
+    /// the wire under this codec (headers included for `q8`). The
+    /// simulator's bytes-on-wire model.
+    pub fn wire_bytes(&self, f32_bytes: usize) -> usize {
+        let elems = f32_bytes / 4;
+        match self {
+            WireCodec::Fp32 => f32_bytes,
+            WireCodec::Fp16 => elems * 2,
+            WireCodec::Q8 => elems + 8, // + per-chunk (lo, scale)
+        }
+    }
+
+    /// Apply the codec's encode→decode precision loss in place — the
+    /// numeric effect of one wire hop without the byte shuffling. Used
+    /// by the in-process [`ChannelTransport`](super::ring::ChannelTransport)
+    /// and the simulator's coded averaging, so both share the exact
+    /// arithmetic of the TCP path.
+    pub fn roundtrip_inplace(&self, data: &mut [f32]) {
+        match self {
+            WireCodec::Fp32 => {}
+            WireCodec::Fp16 => {
+                for v in data.iter_mut() {
+                    *v = f16_bits_to_f32(f32_to_f16_bits(*v));
+                }
+            }
+            WireCodec::Q8 => {
+                let (lo, scale) = q8_params(data);
+                let step = scale / 255.0;
+                for v in data.iter_mut() {
+                    *v = lo + q8_quantize_one(*v, lo, scale) as f32 * step;
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for WireCodec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Round-to-nearest-even increment: `base + 1` when the dropped bits
+/// `rem` exceed `halfway`, or tie on an odd `base`.
+fn rne(base: u32, rem: u32, halfway: u32) -> u32 {
+    if rem > halfway || (rem == halfway && base & 1 == 1) {
+        base + 1
+    } else {
+        base
+    }
+}
+
+/// `f32` → IEEE binary16 bits, round-to-nearest-even. Overflow, ±inf
+/// and NaN all saturate to the largest finite half (±[`F16_MAX`]) so
+/// the wire never carries a non-finite value.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        return sign | F16_MAX_BITS; // inf/NaN guard: stay finite
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | F16_MAX_BITS; // overflow saturates
+    }
+    if unbiased >= -14 {
+        // normal half: 10-bit mantissa, RNE over the 13 dropped bits
+        let base = (((unbiased + 15) as u32) << 10) | (man >> 13);
+        let rounded = rne(base, man & 0x1fff, 0x1000);
+        if rounded >= 0x7c00 {
+            return sign | F16_MAX_BITS; // rounded into inf: saturate
+        }
+        return sign | rounded as u16;
+    }
+    if unbiased < -25 {
+        return sign; // below half the smallest subnormal: ±0
+    }
+    // subnormal half: value = significand · 2^(unbiased-23), renormalized
+    // onto the 2^-24 grid (f32 subnormals land here too: exp 0 has no
+    // implicit bit, but those values are < 2^-126, far under the cutoff)
+    let sig = man | 0x0080_0000;
+    let shift = (-(unbiased + 1)) as u32; // 14..=24
+    let base = sig >> shift;
+    let rem = sig & ((1u32 << shift) - 1);
+    let rounded = rne(base, rem, 1u32 << (shift - 1));
+    sign | rounded as u16
+}
+
+/// IEEE binary16 bits → `f32`, exact (every half is representable).
+/// The decoder is total: inf/NaN bit patterns map to their IEEE values
+/// even though [`f32_to_f16_bits`] never produces them.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = match exp {
+        0 => {
+            if man == 0 {
+                sign // ±0
+            } else {
+                // subnormal: man · 2^-24, exact in f32
+                let v = man as f32 * (1.0 / 16_777_216.0);
+                sign | v.to_bits()
+            }
+        }
+        0x1f => sign | 0x7f80_0000 | (man << 13),
+        _ => sign | ((exp + 112) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Make a value safe for q8 range arithmetic: NaN → 0, ±inf (and
+/// anything larger than [`Q8_CLAMP`]) clamps, so `hi - lo` is finite.
+fn q8_sanitize(v: f32) -> f32 {
+    if v.is_nan() {
+        0.0
+    } else {
+        v.clamp(-Q8_CLAMP, Q8_CLAMP)
+    }
+}
+
+/// Per-chunk quantization parameters `(lo, scale)` with
+/// `scale = hi - lo ≥ 0`, over sanitized values. An empty chunk yields
+/// `(0, 0)`.
+pub fn q8_params(data: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in data {
+        let v = q8_sanitize(v);
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if data.is_empty() {
+        return (0.0, 0.0);
+    }
+    (lo, hi - lo)
+}
+
+/// Quantize one value against the chunk's `(lo, scale)`.
+pub fn q8_quantize_one(v: f32, lo: f32, scale: f32) -> u8 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    let t = (q8_sanitize(v) - lo) / scale * 255.0;
+    t.round().clamp(0.0, 255.0) as u8
+}
+
+/// Dequantize `bytes` into `out` (replacing its contents).
+pub fn q8_dequantize_into(bytes: &[u8], lo: f32, scale: f32, out: &mut Vec<f32>) {
+    let step = scale / 255.0;
+    out.clear();
+    out.reserve(bytes.len());
+    out.extend(bytes.iter().map(|&q| lo + q as f32 * step));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn fp16_exact_on_representable_values() {
+        for v in [0.0f32, -0.0, 1.0, -2.5, 0.5, 65504.0, -65504.0, 2.0f32.powi(-14)] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} not preserved");
+        }
+    }
+
+    #[test]
+    fn fp16_saturates_instead_of_overflowing() {
+        for v in [65520.0f32, 1e9, f32::MAX, f32::INFINITY] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), F16_MAX, "{v}");
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-v)), -F16_MAX, "-{v}");
+        }
+        // NaN input also stays finite (the guard is about the wire)
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_finite());
+    }
+
+    #[test]
+    fn fp16_subnormals_round_on_the_2neg24_grid() {
+        // smallest subnormal half
+        assert_eq!(f16_bits_to_f32(1), 2.0f32.powi(-24));
+        // below half of it: rounds to zero
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2.0f32.powi(-26))), 0.0);
+        // exactly half of it: RNE tie to even (zero)
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2.0f32.powi(-25))), 0.0);
+        // between grid points: lands on the nearest one
+        let v = 3.0 * 2.0f32.powi(-24);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v);
+        // f32 subnormals underflow to zero (they are < 2^-126)
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::from_bits(1))), 0.0);
+    }
+
+    #[test]
+    fn fp16_error_within_documented_bound() {
+        let mut rng = Pcg32::new(0xF16);
+        for i in 0..4000 {
+            let v = match i % 4 {
+                0 => (rng.gen_f32() * 2.0 - 1.0) * 65000.0,
+                1 => (rng.gen_f32() * 2.0 - 1.0) * 1.0,
+                2 => (rng.gen_f32() * 2.0 - 1.0) * 1e-4,
+                _ => (rng.gen_f32() * 2.0 - 1.0) * 2.0f32.powi(-16),
+            };
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            let err = (back as f64 - v as f64).abs();
+            let bound = (v.abs() as f64 * F16_REL_ERR as f64).max(F16_ABS_ERR as f64);
+            assert!(err <= bound, "v={v} back={back} err={err} bound={bound}");
+        }
+    }
+
+    #[test]
+    fn q8_roundtrip_within_chunk_range_bound() {
+        let mut rng = Pcg32::new(0x9_8);
+        for _ in 0..200 {
+            let n = rng.gen_range(257) + 1;
+            let span = 10.0f32.powi(rng.gen_range(7) as i32 - 3);
+            let data: Vec<f32> =
+                (0..n).map(|_| (rng.gen_f32() * 2.0 - 1.0) * span).collect();
+            let (lo, scale) = q8_params(&data);
+            let step = scale / 255.0;
+            let maxabs = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            for &v in &data {
+                let q = q8_quantize_one(v, lo, scale);
+                let back = lo + q as f32 * step;
+                let err = (back as f64 - v as f64).abs();
+                let bound = scale as f64 / 500.0 + maxabs as f64 * 1e-5;
+                assert!(err <= bound, "v={v} back={back} err={err} bound={bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_degenerate_chunks() {
+        // constant chunk: scale 0, every element decodes to lo exactly
+        let data = [3.25f32; 9];
+        let (lo, scale) = q8_params(&data);
+        assert_eq!((lo, scale), (3.25, 0.0));
+        let mut out = Vec::new();
+        q8_dequantize_into(&[0, 0, 0], lo, scale, &mut out);
+        assert_eq!(out, vec![3.25; 3]);
+        // empty chunk
+        assert_eq!(q8_params(&[]), (0.0, 0.0));
+        // non-finite inputs stay total and finite
+        let wild = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0];
+        let (lo, scale) = q8_params(&wild);
+        assert!(lo.is_finite() && scale.is_finite());
+        for &v in &wild {
+            let q = q8_quantize_one(v, lo, scale);
+            let back = lo + q as f32 * (scale / 255.0);
+            assert!(back.is_finite(), "{v} decoded non-finite");
+        }
+    }
+
+    #[test]
+    fn roundtrip_inplace_matches_scalar_paths() {
+        let mut rng = Pcg32::new(7);
+        let data: Vec<f32> = (0..64).map(|_| rng.gen_f32() * 4.0 - 2.0).collect();
+        // fp32: untouched
+        let mut a = data.clone();
+        WireCodec::Fp32.roundtrip_inplace(&mut a);
+        assert_eq!(a, data);
+        // fp16: per-element conversion
+        let mut b = data.clone();
+        WireCodec::Fp16.roundtrip_inplace(&mut b);
+        for (got, &v) in b.iter().zip(data.iter()) {
+            assert_eq!(got.to_bits(), f16_bits_to_f32(f32_to_f16_bits(v)).to_bits());
+        }
+        // q8: chunk-wide params then per-element quantize
+        let mut c = data.clone();
+        WireCodec::Q8.roundtrip_inplace(&mut c);
+        let (lo, scale) = q8_params(&data);
+        for (got, &v) in c.iter().zip(data.iter()) {
+            let want = lo + q8_quantize_one(v, lo, scale) as f32 * (scale / 255.0);
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn parse_name_roundtrip_and_wire_bytes() {
+        for codec in [WireCodec::Fp32, WireCodec::Fp16, WireCodec::Q8] {
+            assert_eq!(WireCodec::parse(codec.name()), Some(codec));
+        }
+        assert_eq!(WireCodec::parse("int8"), Some(WireCodec::Q8));
+        assert_eq!(WireCodec::parse("half"), Some(WireCodec::Fp16));
+        assert_eq!(WireCodec::parse("nonsense"), None);
+        assert_eq!(WireCodec::default(), WireCodec::Fp32);
+        assert_eq!(WireCodec::Fp32.wire_bytes(4000), 4000);
+        assert_eq!(WireCodec::Fp16.wire_bytes(4000), 2000);
+        assert_eq!(WireCodec::Q8.wire_bytes(4000), 1008);
+    }
+}

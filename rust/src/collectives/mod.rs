@@ -14,10 +14,16 @@
 //!   shards with per-shard step tags, plus the bounded-staleness
 //!   reconcile that lets training overlap the transfer
 //!   ([`pipeline::OverlapConfig`]; DESIGN.md §Perf).
+//! * [`codec`] — wire codecs for chunk payloads ([`WireCodec`]:
+//!   `fp32`/`fp16`/`q8`); both transports compress every chunk —
+//!   pipelined shards included — under `--wire` (DESIGN.md §Perf,
+//!   "Wire formats").
 
+pub mod codec;
 pub mod pipeline;
 pub mod ring;
 
+pub use codec::WireCodec;
 pub use pipeline::OverlapConfig;
 pub use ring::AbortedError;
 

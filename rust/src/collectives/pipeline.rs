@@ -26,6 +26,12 @@
 //! flight. `max_staleness = 0` disables overlap entirely and (with
 //! `shards = 1`) takes the exact serial code path — bit-for-bit the
 //! pre-overlap behaviour, which the golden tests pin.
+//!
+//! Wire codecs compose orthogonally: the sharded schedule runs over the
+//! same [`ChunkTransport`] as the plain collective, so a compressed
+//! transport (`--wire fp16|q8`, `collectives::codec`) compresses every
+//! overlapped shard's chunks too — nothing in this module needs to know
+//! (the coded-sharded-ring property test in `prop_net.rs` pins it).
 
 use anyhow::Result;
 

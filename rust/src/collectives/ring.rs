@@ -14,7 +14,7 @@
 //!   differential oracle for the fused `preduce_mean_inplace` path.
 //!   Chunk buffers are *recycled* over a reverse channel per edge, so the
 //!   steady state allocates nothing — matching the zero-copy TCP write
-//!   path (`net::frame::write_chunk`).
+//!   path (`net::frame::write_chunk_coded`).
 //! * `net::TcpRingTransport` — framed TCP streams between worker
 //!   *processes*; the distributed data plane behind `ripples launch`
 //!   (see DESIGN.md §Deployment).
@@ -27,6 +27,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread;
 
 use anyhow::{anyhow, Result};
+
+use super::codec::WireCodec;
 
 /// Typed transport failure: the group's collective was torn down by
 /// failure repair (a peer died, or a ring neighbour poisoned the edge —
@@ -70,7 +72,11 @@ pub trait ChunkTransport {
 
 /// In-process transport: one mpsc edge in, one out, plus reverse *spare*
 /// edges that hand consumed chunk buffers back to their producer for
-/// reuse (`send` pops a spare instead of allocating).
+/// reuse (`send` pops a spare instead of allocating). A non-default
+/// [`WireCodec`] applies its encode→decode precision loss to every sent
+/// chunk — the numeric effect of the compressed TCP wire, byte shuffling
+/// elided — so in-process rings are a differential oracle for the coded
+/// data plane too.
 pub struct ChannelTransport {
     /// Chunks to the ring successor.
     tx: Sender<Vec<f32>>,
@@ -80,6 +86,8 @@ pub struct ChannelTransport {
     spare_tx: Sender<Vec<f32>>,
     /// Our own buffers coming back from the successor.
     spare_rx: Receiver<Vec<f32>>,
+    /// Wire codec whose precision loss `send` applies (`Fp32` = exact).
+    wire: WireCodec,
 }
 
 impl ChannelTransport {
@@ -87,6 +95,12 @@ impl ChannelTransport {
     /// `(r+1)%p` and receives from `(r-1+p)%p`, with a reverse spare
     /// channel along each data edge. Returns one transport per rank.
     pub fn ring(p: usize) -> Vec<ChannelTransport> {
+        Self::ring_with(p, WireCodec::Fp32)
+    }
+
+    /// [`ChannelTransport::ring`] under a wire codec: every chunk is
+    /// roundtripped through the codec before delivery.
+    pub fn ring_with(p: usize, wire: WireCodec) -> Vec<ChannelTransport> {
         let mut data_tx: Vec<Option<Sender<Vec<f32>>>> = (0..p).map(|_| None).collect();
         let mut data_rx: Vec<Option<Receiver<Vec<f32>>>> = (0..p).map(|_| None).collect();
         let mut spare_tx: Vec<Option<Sender<Vec<f32>>>> = (0..p).map(|_| None).collect();
@@ -106,6 +120,7 @@ impl ChannelTransport {
                 rx: data_rx[r].take().unwrap(),
                 spare_tx: spare_tx[r].take().unwrap(),
                 spare_rx: spare_rx[r].take().unwrap(),
+                wire,
             })
             .collect()
     }
@@ -117,6 +132,9 @@ impl ChunkTransport for ChannelTransport {
         let mut buf = self.spare_rx.try_recv().unwrap_or_default();
         buf.clear();
         buf.extend_from_slice(data);
+        if self.wire != WireCodec::Fp32 {
+            self.wire.roundtrip_inplace(&mut buf);
+        }
         self.tx.send(buf).map_err(|_| anyhow!("ring send: receiver hung up"))
     }
 
@@ -397,7 +415,9 @@ mod tests {
         // 2-rank ring immediately sees the truncated chunk and errors.
         let (tx, rx) = channel();
         let (spare_tx, spare_rx) = channel();
-        let mut t = Lying { inner: ChannelTransport { tx, rx, spare_tx, spare_rx } };
+        let mut t = Lying {
+            inner: ChannelTransport { tx, rx, spare_tx, spare_rx, wire: WireCodec::Fp32 },
+        };
         let mut buf = vec![1.0f32; 10];
         let err = ring_allreduce_via(0, 2, &mut buf, &mut t);
         assert!(err.is_err(), "short chunk must be rejected");

@@ -57,6 +57,22 @@ impl CostModel {
     /// are adjacent — the same placement optimization NCCL applies — which
     /// reproduces Fig. 15's dense-vs-sparse placement effect.
     pub fn ring_allreduce(&self, group: &[usize], bytes: usize) -> f64 {
+        self.ring_allreduce_throttled(group, bytes, &[])
+    }
+
+    /// [`CostModel::ring_allreduce`] with per-worker link throttles:
+    /// `bw_divisor[w]` divides worker `w`'s bandwidth (missing entries
+    /// and values below 1 count as 1.0 = full speed), and an edge runs
+    /// at the slower of its two endpoints' links — the simulator's
+    /// bandwidth-heterogeneity model (`cluster::BandwidthEvent`). With
+    /// no throttles this is arithmetically identical to the untuned
+    /// cost (multiplying the transfer term by exactly 1.0).
+    pub fn ring_allreduce_throttled(
+        &self,
+        group: &[usize],
+        bytes: usize,
+        bw_divisor: &[f64],
+    ) -> f64 {
         let p = group.len();
         if p <= 1 {
             return 0.0;
@@ -64,14 +80,16 @@ impl CostModel {
         let mut ring = group.to_vec();
         ring.sort_unstable(); // node-major adjacency
         let chunk = (bytes as f64 / p as f64).ceil();
+        let div = |w: usize| bw_divisor.get(w).copied().unwrap_or(1.0).max(1.0);
         let mut worst = 0.0f64;
         for i in 0..p {
             let a = ring[i];
             let b = ring[(i + 1) % p];
+            let slow = div(a).max(div(b));
             let t = if self.node_of(a) == self.node_of(b) {
-                self.intra_lat + chunk / self.intra_bw
+                self.intra_lat + chunk * slow / self.intra_bw
             } else {
-                self.inter_lat + chunk / self.inter_bw
+                self.inter_lat + chunk * slow / self.inter_bw
             };
             if t > worst {
                 worst = t;
@@ -199,6 +217,26 @@ mod tests {
         let bytes = 9 << 20;
         let group: Vec<usize> = (0..16).collect();
         assert!(m.ring_allreduce(&group, bytes) < m.ps_round(16, bytes));
+    }
+
+    #[test]
+    fn throttled_ring_scales_with_the_slowest_link() {
+        let m = cm();
+        let bytes = 9 << 20;
+        let group: Vec<usize> = (0..4).collect();
+        let base = m.ring_allreduce(&group, bytes);
+        // no throttles / explicit 1.0s: bit-identical to the plain cost
+        let ones = vec![1.0; 16];
+        assert_eq!(m.ring_allreduce_throttled(&group, bytes, &ones), base);
+        // one member's slow link throttles the edges touching it, and
+        // (in a 4-ring) every step waits on the slowest edge
+        let mut div = vec![1.0; 16];
+        div[2] = 8.0;
+        let throttled = m.ring_allreduce_throttled(&group, bytes, &div);
+        assert!(throttled > base * 4.0, "{throttled} vs {base}");
+        // sub-1.0 entries must not *speed up* the link
+        let wild = vec![0.25; 16];
+        assert_eq!(m.ring_allreduce_throttled(&group, bytes, &wild), base);
     }
 
     #[test]

@@ -10,6 +10,7 @@ mod parse;
 pub use parse::{parse_toml_subset, TomlValue};
 
 use crate::cluster::HeterogeneityProfile;
+use crate::collectives::codec::WireCodec;
 use crate::collectives::pipeline::OverlapConfig;
 
 /// Which synchronization algorithm runs (paper §2.2, §4, §5).
@@ -151,6 +152,14 @@ impl ClusterConfig {
                 return Err(format!("slow-schedule factor {} must be >= 1", ev.factor));
             }
         }
+        for ev in &self.hetero.bandwidth {
+            if ev.worker >= self.n_workers() {
+                return Err(format!("bw-schedule worker {} out of range", ev.worker));
+            }
+            if !(ev.factor >= 1.0 && ev.factor.is_finite()) {
+                return Err(format!("bw-schedule factor {} must be >= 1", ev.factor));
+            }
+        }
         Ok(())
     }
 }
@@ -277,6 +286,11 @@ pub struct Experiment {
     pub faults: FaultConfig,
     /// Checkpoint cadence and location (`[ckpt]` section).
     pub ckpt: CkptConfig,
+    /// Data-plane wire codec (`[wire]` section, `--wire`): how model
+    /// elements are represented on the wire. The `fp32` default is the
+    /// exact, golden-path behaviour; `fp16`/`q8` trade bounded precision
+    /// for 2x/4x fewer bytes per sync (DESIGN.md §Perf, "Wire formats").
+    pub wire: WireCodec,
 }
 
 impl Experiment {
@@ -409,6 +423,32 @@ impl Experiment {
             ("faults", "detect_secs") => {
                 self.faults.detect_secs = v.as_f64().ok_or_else(bad)?
             }
+            ("cluster", "bw_schedule") => {
+                // flat [worker, divisor, iter] triples, like slow_schedule
+                let arr = v.as_arr().ok_or_else(bad)?;
+                if arr.is_empty() || arr.len() % 3 != 0 {
+                    return Err(format!(
+                        "cluster.bw_schedule wants flat [worker, divisor, iter] \
+                         triples, got {} values",
+                        arr.len()
+                    ));
+                }
+                self.cluster.hetero.bandwidth = arr
+                    .chunks(3)
+                    .map(|c| {
+                        Ok(crate::cluster::BandwidthEvent {
+                            worker: c[0].as_usize().ok_or_else(bad)?,
+                            factor: c[1].as_f64().ok_or_else(bad)?,
+                            start_iter: c[2].as_usize().ok_or_else(bad)? as u64,
+                        })
+                    })
+                    .collect::<Result<_, String>>()?;
+            }
+            ("wire", "codec") => {
+                let s = v.as_str().ok_or_else(bad)?;
+                self.wire = WireCodec::parse(s)
+                    .ok_or_else(|| format!("unknown wire codec '{s}' (fp32|fp16|q8)"))?;
+            }
             ("ckpt", "every") => self.ckpt.every = v.as_usize().ok_or_else(bad)? as u64,
             ("ckpt", "dir") => self.ckpt.dir = Some(v.as_str().ok_or_else(bad)?.to_string()),
             _ => return Err(format!("unknown config key {section}.{key}")),
@@ -500,6 +540,32 @@ mod tests {
         assert_eq!(Experiment::default().overlap.shards, 1);
         // zero shards fails validation
         assert!(Experiment::from_str_cfg("[overlap]\nshards = 0\n").is_err());
+    }
+
+    #[test]
+    fn wire_and_bw_schedule_config_roundtrip() {
+        let e = Experiment::from_str_cfg(
+            "[wire]\ncodec = \"q8\"\n\n\
+             [cluster]\nbw_schedule = [7, 16.0, 0, 7, 1.0, 40]\n",
+        )
+        .unwrap();
+        assert_eq!(e.wire, WireCodec::Q8);
+        assert_eq!(e.cluster.hetero.bandwidth.len(), 2);
+        assert_eq!(e.cluster.hetero.bandwidth[0].worker, 7);
+        assert_eq!(e.cluster.hetero.bandwidth_factor_at(7, 10), 16.0);
+        assert_eq!(e.cluster.hetero.bandwidth_factor_at(7, 40), 1.0);
+        // default: exact wire, no throttles
+        assert_eq!(Experiment::default().wire, WireCodec::Fp32);
+        assert!(Experiment::default().cluster.hetero.bandwidth.is_empty());
+        // malformed / out-of-range rejected
+        assert!(Experiment::from_str_cfg("[wire]\ncodec = \"mp3\"\n").is_err());
+        assert!(Experiment::from_str_cfg("[cluster]\nbw_schedule = [7, 16.0]\n").is_err());
+        assert!(
+            Experiment::from_str_cfg("[cluster]\nbw_schedule = [99, 16.0, 0]\n").is_err()
+        );
+        assert!(
+            Experiment::from_str_cfg("[cluster]\nbw_schedule = [7, 0.5, 0]\n").is_err()
+        );
     }
 
     #[test]

@@ -121,12 +121,23 @@ impl SpeedTable {
         Self { ewma: vec![None; n_workers], alpha }
     }
 
-    /// Fold one raw step-duration sample into worker `w`'s EWMA.
+    /// Fold one raw step-duration sample into worker `w`'s EWMA. The
+    /// very first observation must seed the EWMA with the raw sample —
+    /// seeding from 0.0 as `α·sample` would make a brand-new worker
+    /// look `1/α` times too fast and transiently misclassify *other*
+    /// workers as stragglers relative to it. The old `unwrap_or(0.0)`
+    /// here only behaved because [`ewma_step`] happens to treat
+    /// `prev <= 0` as "seed"; the seed decision is made explicitly at
+    /// this call site now so the invariant no longer hangs off a
+    /// helper's internal guard.
     pub fn observe(&mut self, w: usize, step_secs: f64) {
         if !(step_secs > 0.0 && step_secs.is_finite()) {
             return; // ignore garbage samples
         }
-        self.ewma[w] = Some(ewma_step(self.ewma[w].unwrap_or(0.0), step_secs, self.alpha));
+        self.ewma[w] = Some(match self.ewma[w] {
+            Some(prev) => ewma_step(prev, step_secs, self.alpha),
+            None => step_secs,
+        });
     }
 
     /// Replace worker `w`'s entry with an already-smoothed EWMA (the
@@ -1102,6 +1113,31 @@ mod tests {
         t.report(2, 0.040);
         assert!((t.relative(2).unwrap() - 2.0).abs() < 1e-12);
         assert_eq!(t.snapshot(), vec![0.020, 0.0, 0.040]);
+    }
+
+    #[test]
+    fn speed_table_first_sample_seeds_at_full_value() {
+        // Pins the first-sample seed: an `unwrap_or(0.0)` seed folded
+        // through a plain `α·sample + (1−α)·prev` would land the first
+        // observation at α·sample (4x too fast at α=0.25), making every
+        // *other* worker look like a >=1/α straggler relative to the
+        // newcomer. (Historically latent — `ewma_step`'s `prev <= 0`
+        // guard masked it; the seed is now explicit in `observe`.)
+        let mut t = SpeedTable::new(2, 0.25);
+        t.observe(0, 0.040);
+        assert_eq!(t.get(0), Some(0.040), "first raw sample must land unscaled");
+        // healthy peer at a comparable speed: with a correct seed its
+        // relative factor is ~1.25, far under the filter threshold; the
+        // alpha-scaled seed (0.010) would have put it at 5.0
+        t.report(1, 0.050);
+        let rel = t.relative(1).unwrap();
+        assert!(
+            rel < DEFAULT_S_THRES,
+            "healthy peer misclassified at {rel}x after a first-sample seed"
+        );
+        // subsequent samples fold normally
+        t.observe(0, 0.080);
+        assert!((t.get(0).unwrap() - (0.25 * 0.080 + 0.75 * 0.040)).abs() < 1e-12);
     }
 
     #[test]

@@ -43,8 +43,8 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-pub use cluster::{CrashEvent, HeterogeneityProfile, SlowdownEvent};
-pub use collectives::{AbortedError, OverlapConfig};
+pub use cluster::{BandwidthEvent, CrashEvent, HeterogeneityProfile, SlowdownEvent};
+pub use collectives::{AbortedError, OverlapConfig, WireCodec};
 pub use config::{AlgoConfig, AlgoKind, ClusterConfig, Experiment, TrainConfig};
 pub use fault::{Fault, FaultPlan, FaultyTransport};
 pub use gg::{GgConfig, Group, GroupGenerator, SpeedTable, StaticScheduler};

@@ -51,10 +51,12 @@ ripples — Heterogeneity-Aware Asynchronous Decentralized Training
 USAGE:
   ripples train [--algo NAME] [--config FILE] [--slow W,FACTOR]
                 [--slow-schedule W,F@ITER[;W,F@ITER...]]
+                [--bw-schedule W,F@ITER[;W,F@ITER...]]
                 [--crash W@ITER[+REJOIN_SECS][;...]] [--no-repair true]
                 [--overlap-shards K] [--max-staleness S]
+                [--wire fp32|fp16|q8]
                 [--iters N] [--target LOSS] [--trace FILE.csv]
-  ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|failures|all>
+  ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|wire|failures|all>
               [--csv DIR] [--json DIR]
   ripples gg-serve [--addr HOST:PORT] [--workers N] [--wpn K]
                    [--mode random|smart] [--group-size G]
@@ -65,6 +67,7 @@ USAGE:
                  [--wpn K] [--seed S] [--lr LR] [--batch B] [--bias P]
                  [--floor-ms MS] [--model tiny|paper] [--echo true]
                  [--overlap-shards K] [--max-staleness S]
+                 [--wire fp32|fp16|q8]
                  [--liveness-ms MS] [--heartbeat-ms MS]
                  [--ckpt-every N] [--ckpt-dir DIR]
                  [--kill R@SECS] [--rejoin-after SECS]
@@ -74,6 +77,7 @@ USAGE:
                  [--seed S] [--lr LR] [--batch B] [--bias P]
                  [--floor-ms MS] [--dataset N] [--model tiny|paper]
                  [--overlap-shards K] [--max-staleness S]
+                 [--wire fp32|fp16|q8]
                  [--heartbeat-ms MS] [--probe-ms MS]
                  [--ckpt-every N] [--ckpt-dir DIR] [--rejoin true]
   ripples artifacts [--dir DIR]
@@ -92,7 +96,10 @@ table drives the slowdown filter (`fig dyn` measures the reaction).
 `--overlap-shards K` + `--max-staleness S` pipeline every P-Reduce over
 K model shards while workers keep stepping on stale weights (bounded by
 S; 0 = serial stop-and-wait) — `fig overlap` sweeps the hidden vs
-exposed sync cost. Crash tolerance: workers heartbeat the GG, whose
+exposed sync cost. `--wire fp16|q8` compresses every data-plane chunk
+(2x/4x fewer bytes, bounded precision loss); the sim adds per-link
+`--bw-schedule` bandwidth throttles and `fig wire` sweeps codec x
+bandwidth. Crash tolerance: workers heartbeat the GG, whose
 liveness monitor declares silent ranks dead and aborts their groups so
 ring peers unwind (poison frames) and retry repaired; `launch --kill
 R@SECS` SIGKILLs a worker mid-run, `--rejoin-after SECS` spawns a
@@ -127,6 +134,18 @@ fn get_flag<'a>(flags: &'a [(String, String)], key: &str) -> Option<&'a str> {
     flags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
 }
 
+/// `--wire fp32|fp16|q8`, or `default` when the flag is absent.
+fn parse_wire(
+    flags: &[(String, String)],
+    default: ripples::collectives::WireCodec,
+) -> Result<ripples::collectives::WireCodec, String> {
+    match get_flag(flags, "wire") {
+        None => Ok(default),
+        Some(s) => ripples::collectives::WireCodec::parse(s)
+            .ok_or_else(|| format!("unknown wire codec '{s}' (fp32|fp16|q8)")),
+    }
+}
+
 fn cmd_train(args: &[String]) -> Result<(), String> {
     let (_, flags) = parse_flags(args)?;
     let mut exp = match get_flag(&flags, "config") {
@@ -147,6 +166,9 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
     if let Some(sched) = get_flag(&flags, "slow-schedule") {
         exp.cluster.hetero.schedule = ripples::cluster::SlowdownEvent::parse_list(sched)?;
     }
+    if let Some(sched) = get_flag(&flags, "bw-schedule") {
+        exp.cluster.hetero.bandwidth = ripples::cluster::BandwidthEvent::parse_list(sched)?;
+    }
     if let Some(crash) = get_flag(&flags, "crash") {
         exp.cluster.hetero.crashes = ripples::cluster::CrashEvent::parse_list(crash)?;
     }
@@ -163,6 +185,7 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
     exp.overlap.shards = parse_or(&flags, "overlap-shards", exp.overlap.shards)?;
     exp.overlap.max_staleness =
         parse_or(&flags, "max-staleness", exp.overlap.max_staleness)?;
+    exp.wire = parse_wire(&flags, exp.wire)?;
     exp.validate()?;
     let mut params = SimParams::vgg16_defaults(exp);
     params.spec = ripples::bench::bench_spec();
@@ -308,6 +331,7 @@ fn cmd_launch(args: &[String]) -> Result<(), String> {
     cfg.overlap.shards = parse_or(&flags, "overlap-shards", cfg.overlap.shards)?;
     cfg.overlap.max_staleness =
         parse_or(&flags, "max-staleness", cfg.overlap.max_staleness)?;
+    cfg.wire = parse_wire(&flags, cfg.wire)?;
     cfg.liveness_ms = parse_or(&flags, "liveness-ms", cfg.liveness_ms)?;
     cfg.heartbeat_ms = parse_or(&flags, "heartbeat-ms", cfg.heartbeat_ms)?;
     cfg.ckpt_every = parse_or(&flags, "ckpt-every", cfg.ckpt_every)?;
@@ -397,6 +421,7 @@ fn cmd_worker(args: &[String]) -> Result<(), String> {
             shards: parse_or(&flags, "overlap-shards", defaults.overlap.shards)?,
             max_staleness: parse_or(&flags, "max-staleness", defaults.overlap.max_staleness)?,
         },
+        wire: parse_wire(&flags, defaults.wire)?,
         heartbeat_ms: parse_or(&flags, "heartbeat-ms", defaults.heartbeat_ms)?,
         probe_ms: parse_or(&flags, "probe-ms", defaults.probe_ms)?,
         ckpt_every: parse_or(&flags, "ckpt-every", defaults.ckpt_every)?,

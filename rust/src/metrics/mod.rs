@@ -134,13 +134,25 @@ pub struct WorkerStat {
     pub secs: f64,
     pub loss_first: f64,
     pub loss_last: f64,
+    /// Data-plane chunk bytes sent/received (the wire codec's
+    /// compression is directly visible here; 0 when not measured).
+    pub bytes_tx: u64,
+    pub bytes_rx: u64,
 }
 
 /// Per-worker throughput table for a distributed run: iteration rate is
 /// the heterogeneity metric (a gated fast worker converges to the slow
-/// worker's rate; see EXPERIMENTS.md §Deployment-run).
+/// worker's rate; see EXPERIMENTS.md §Deployment-run), and wire MB the
+/// bandwidth one (tx+rx chunk bytes — compare `--wire` codecs).
 pub fn worker_table(stats: &[WorkerStat]) -> Table {
-    let mut t = Table::new(&["worker", "iters", "iters/s", "preduces", "loss first→last"]);
+    let mut t = Table::new(&[
+        "worker",
+        "iters",
+        "iters/s",
+        "preduces",
+        "wire MB",
+        "loss first→last",
+    ]);
     for s in stats {
         let rate = if s.secs > 0.0 { s.iters as f64 / s.secs } else { 0.0 };
         t.row(vec![
@@ -148,6 +160,7 @@ pub fn worker_table(stats: &[WorkerStat]) -> Table {
             s.iters.to_string(),
             format!("{rate:.1}"),
             s.preduces.to_string(),
+            format!("{:.2}", (s.bytes_tx + s.bytes_rx) as f64 / 1e6),
             format!("{:.4} → {:.4}", s.loss_first, s.loss_last),
         ]);
     }
@@ -201,6 +214,9 @@ pub fn summarize(res: &SimResult) -> String {
         res.sync_fraction() * 100.0,
         res.conflicts,
     );
+    if res.bytes_on_wire > 0 {
+        let _ = write!(out, "  wireMB={:.1}", res.bytes_on_wire as f64 / 1e6);
+    }
     if res.measured_speeds.iter().any(|&v| v > 0.0) {
         let rel = relative_speeds(&res.measured_speeds);
         let rel_s: Vec<String> = rel.iter().map(|v| format!("{v:.2}")).collect();
@@ -256,6 +272,8 @@ mod tests {
                 secs: 4.0,
                 loss_first: 1.5,
                 loss_last: 0.5,
+                bytes_tx: 2_000_000,
+                bytes_rx: 1_500_000,
             },
             WorkerStat {
                 rank: 1,
@@ -264,11 +282,14 @@ mod tests {
                 secs: 4.0,
                 loss_first: 1.5,
                 loss_last: 0.6,
+                bytes_tx: 0,
+                bytes_rx: 0,
             },
         ]);
         let s = t.render();
         assert!(s.contains("25.0"), "{s}"); // 100 iters / 4 s
         assert!(s.contains("10.0"), "{s}");
+        assert!(s.contains("3.50"), "{s}"); // (2.0 + 1.5) MB on the wire
         assert_eq!(s.lines().count(), 4);
     }
 

@@ -63,10 +63,20 @@ impl Checkpoint {
         let iter = r.u64()?;
         let ewma_secs = f64::from_bits(r.u64()?);
         let count = r.u32()? as usize;
+        // Validate the declared count against the bytes actually present
+        // BEFORE reserving: a truncated/garbage file (which `latest`
+        // must *skip*) could otherwise demand a multi-GiB reservation
+        // from four random count bytes (same defect class as the frame
+        // decoder's allocation-before-check).
+        let need = count
+            .checked_mul(4)
+            .with_context(|| format!("checkpoint weight count {count} overflows"))?;
+        let raw = r.bytes(need)?;
         let mut weights = Vec::with_capacity(count);
-        for _ in 0..count {
-            weights.push(f32::from_le_bytes(r.u32()?.to_le_bytes()));
-        }
+        weights.extend(
+            raw.chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap())),
+        );
         r.done()?;
         Ok(Self { rank, iter, ewma_secs, weights })
     }
@@ -161,6 +171,36 @@ mod tests {
         bad.truncate(20);
         bad[4] = 1;
         assert!(Checkpoint::decode(&bad).is_err(), "truncated weights");
+    }
+
+    /// Regression: decode used to `Vec::with_capacity` the declared
+    /// weight count before checking the payload, so a corrupt file in
+    /// the shared dir could abort a rejoiner with a huge reservation
+    /// instead of being skipped by `latest`.
+    #[test]
+    fn adversarial_weight_count_rejected_before_allocation() {
+        let mut w = Writer::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION);
+        w.u32(0); // rank
+        w.u64(1); // iter
+        w.u64(0); // ewma bits
+        w.u32(u32::MAX); // declared ~4G weights...
+        w.bytes(&[0u8; 16]); // ...backed by 16 payload bytes
+        assert!(Checkpoint::decode(&w.finish()).is_err());
+        // and `latest` skips such a file instead of dying on it
+        let dir = tmpdir("adversarial");
+        save(&dir, &ckpt(1, 5)).unwrap();
+        let mut evil = Writer::new();
+        evil.bytes(MAGIC);
+        evil.u32(VERSION);
+        evil.u32(2);
+        evil.u64(999);
+        evil.u64(0);
+        evil.u32(u32::MAX);
+        std::fs::write(path_for(&dir, 2), evil.finish()).unwrap();
+        assert_eq!(latest(&dir).unwrap().unwrap().iter, 5);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

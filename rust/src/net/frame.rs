@@ -1,7 +1,7 @@
 //! Data-plane framing: length-prefixed messages between worker processes,
 //! reusing the `rpc::wire` codec style (little-endian, no deps).
 //!
-//! Three message kinds flow on a mesh connection:
+//! Message kinds flowing on a mesh connection:
 //!
 //! * `Hello { rank }` — sent once by the connecting side so the acceptor
 //!   can index the stream by peer rank.
@@ -11,6 +11,11 @@
 //!   groups are disjoint (lock vector) and an edge is quiescent between
 //!   groups, so a same-group mismatch is a protocol bug, not a
 //!   reordering.
+//! * `Chunk16` / `ChunkQ8` — the same transfer under a compressed wire
+//!   codec (`collectives::codec::WireCodec`): raw binary16 bits, or
+//!   per-chunk min/max-scaled int8 with an `(lo, scale)` header. The
+//!   frame tag carries the codec, so a receiver decodes whatever the
+//!   sender used.
 //! * `Poison { gid }` — failure repair: a worker unwinding from group
 //!   `gid`'s broken collective poisons its ring successor, which unwinds
 //!   and forwards the poison, so the whole ring unblocks in one
@@ -20,11 +25,18 @@
 //!   vector).
 //!
 //! Outer wire format matches the GG RPC: `u32 length (LE) | payload`.
+//! Payload element counts are validated against the *remaining payload
+//! bytes* before any allocation: a corrupt or malicious frame cannot
+//! demand a reservation larger than the bytes it actually shipped.
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
+use crate::collectives::codec::{
+    f16_bits_to_f32, f32_to_f16_bits, q8_dequantize_into, q8_params, q8_quantize_one,
+    WireCodec,
+};
 use crate::rpc::wire::{Reader, Writer};
 
 /// Refuse frames above this size (64 MiB ≈ a 16M-parameter f32 chunk);
@@ -36,8 +48,13 @@ pub const MAX_FRAME: usize = 1 << 26;
 pub enum Frame {
     /// Connection preamble: the sender's worker rank.
     Hello { rank: u32 },
-    /// One ring-collective transfer.
+    /// One ring-collective transfer, raw `f32` elements.
     Chunk { gid: u64, step: u32, data: Vec<f32> },
+    /// One ring-collective transfer, IEEE binary16 bits per element.
+    Chunk16 { gid: u64, step: u32, data: Vec<u16> },
+    /// One ring-collective transfer, per-chunk min/max-scaled int8:
+    /// element `i` decodes to `lo + data[i] · scale/255`.
+    ChunkQ8 { gid: u64, step: u32, lo: f32, scale: f32, data: Vec<u8> },
     /// Failure repair: group `gid`'s collective is broken — unwind.
     Poison { gid: u64 },
 }
@@ -63,6 +80,24 @@ impl Frame {
                 w.u8(2);
                 w.u64(*gid);
             }
+            Frame::Chunk16 { gid, step, data } => {
+                w.u8(3);
+                w.u64(*gid);
+                w.u32(*step);
+                w.u32(data.len() as u32);
+                for v in data {
+                    w.bytes(&v.to_le_bytes());
+                }
+            }
+            Frame::ChunkQ8 { gid, step, lo, scale, data } => {
+                w.u8(4);
+                w.u64(*gid);
+                w.u32(*step);
+                w.u32(data.len() as u32);
+                w.u32(lo.to_bits());
+                w.u32(scale.to_bits());
+                w.bytes(data);
+            }
         }
         w.finish()
     }
@@ -76,20 +111,87 @@ impl Frame {
                 let gid = r.u64()?;
                 let step = r.u32()?;
                 let count = r.u32()? as usize;
-                if count * 4 > MAX_FRAME {
-                    bail!("chunk too large: {count} elements");
-                }
+                // Validate the declared count against the payload bytes
+                // actually present BEFORE reserving anything: a corrupt
+                // frame must not buy a huge allocation with a u32.
+                let need = count
+                    .checked_mul(4)
+                    .filter(|&n| n <= MAX_FRAME)
+                    .with_context(|| format!("chunk too large: {count} elements"))?;
+                let raw = r.bytes(need)?;
                 let mut data = Vec::with_capacity(count);
-                for _ in 0..count {
-                    data.push(f32::from_le_bytes(r.u32()?.to_le_bytes()));
-                }
+                data.extend(
+                    raw.chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().unwrap())),
+                );
                 Frame::Chunk { gid, step, data }
             }
             2 => Frame::Poison { gid: r.u64()? },
+            3 => {
+                let gid = r.u64()?;
+                let step = r.u32()?;
+                let count = r.u32()? as usize;
+                let need = count
+                    .checked_mul(2)
+                    .filter(|&n| n <= MAX_FRAME)
+                    .with_context(|| format!("chunk16 too large: {count} elements"))?;
+                let raw = r.bytes(need)?;
+                let mut data = Vec::with_capacity(count);
+                data.extend(
+                    raw.chunks_exact(2)
+                        .map(|b| u16::from_le_bytes(b.try_into().unwrap())),
+                );
+                Frame::Chunk16 { gid, step, data }
+            }
+            4 => {
+                let gid = r.u64()?;
+                let step = r.u32()?;
+                let count = r.u32()? as usize;
+                let lo = f32::from_bits(r.u32()?);
+                let scale = f32::from_bits(r.u32()?);
+                if count > MAX_FRAME {
+                    bail!("chunkq8 too large: {count} elements");
+                }
+                let data = r.bytes(count)?.to_vec();
+                Frame::ChunkQ8 { gid, step, lo, scale, data }
+            }
             t => bail!("bad frame tag {t}"),
         };
         r.done()?;
         Ok(frame)
+    }
+
+    /// `(gid, step)` of any chunk variant; `None` for non-chunk frames.
+    pub fn chunk_tag(&self) -> Option<(u64, u32)> {
+        match self {
+            Frame::Chunk { gid, step, .. }
+            | Frame::Chunk16 { gid, step, .. }
+            | Frame::ChunkQ8 { gid, step, .. } => Some((*gid, *step)),
+            _ => None,
+        }
+    }
+
+    /// Decode a chunk's elements into `out` (replacing its contents),
+    /// whichever codec the sender used. Returns `false` (leaving `out`
+    /// untouched) for non-chunk frames.
+    pub fn take_chunk_data(self, out: &mut Vec<f32>) -> bool {
+        match self {
+            Frame::Chunk { data, .. } => {
+                *out = data;
+                true
+            }
+            Frame::Chunk16 { data, .. } => {
+                out.clear();
+                out.reserve(data.len());
+                out.extend(data.iter().map(|&h| f16_bits_to_f32(h)));
+                true
+            }
+            Frame::ChunkQ8 { lo, scale, data, .. } => {
+                q8_dequantize_into(&data, lo, scale, out);
+                true
+            }
+            _ => false,
+        }
     }
 }
 
@@ -103,28 +205,67 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
     Ok(())
 }
 
-/// Hot-path chunk writer: encodes straight from the slice into one
-/// buffer (length prefix included), skipping the intermediate
-/// `Vec<f32>` a `Frame::Chunk` would need. Byte-identical to
-/// `write_frame(&Frame::Chunk { .. })`.
-pub fn write_chunk<W: Write>(w: &mut W, gid: u64, step: u32, data: &[f32]) -> Result<()> {
-    let payload_len = 1 + 8 + 4 + 4 + 4 * data.len();
-    let mut buf = Vec::with_capacity(4 + payload_len);
-    buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
-    buf.push(1); // Frame::Chunk tag
-    buf.extend_from_slice(&gid.to_le_bytes());
-    buf.extend_from_slice(&step.to_le_bytes());
-    buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
-    for v in data {
-        buf.extend_from_slice(&v.to_le_bytes());
+/// Hot-path chunk writer: encodes straight from the `f32` slice into one
+/// reused buffer (length prefix included), skipping the intermediate
+/// `Frame` a `write_frame` round trip would need. Byte-identical to
+/// `write_frame` of the corresponding chunk variant. Returns the number
+/// of bytes written (frame prefix included).
+pub fn write_chunk_coded<W: Write>(
+    w: &mut W,
+    codec: WireCodec,
+    gid: u64,
+    step: u32,
+    data: &[f32],
+    buf: &mut Vec<u8>,
+) -> Result<usize> {
+    buf.clear();
+    let header = |buf: &mut Vec<u8>, payload_len: usize, tag: u8| {
+        buf.reserve(4 + payload_len);
+        buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
+        buf.push(tag);
+        buf.extend_from_slice(&gid.to_le_bytes());
+        buf.extend_from_slice(&step.to_le_bytes());
+        buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    };
+    match codec {
+        WireCodec::Fp32 => {
+            header(buf, 1 + 8 + 4 + 4 + 4 * data.len(), 1);
+            for v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        WireCodec::Fp16 => {
+            header(buf, 1 + 8 + 4 + 4 + 2 * data.len(), 3);
+            for v in data {
+                buf.extend_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
+            }
+        }
+        WireCodec::Q8 => {
+            header(buf, 1 + 8 + 4 + 4 + 4 + 4 + data.len(), 4);
+            let (lo, scale) = q8_params(data);
+            buf.extend_from_slice(&lo.to_bits().to_le_bytes());
+            buf.extend_from_slice(&scale.to_bits().to_le_bytes());
+            for v in data {
+                buf.push(q8_quantize_one(*v, lo, scale));
+            }
+        }
     }
-    w.write_all(&buf).context("write chunk frame")?;
+    w.write_all(buf).context("write chunk frame")?;
     w.flush().context("flush chunk frame")?;
-    Ok(())
+    Ok(buf.len())
 }
 
-/// Read one length-prefixed frame.
-pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+/// [`write_chunk_coded`] pinned to the raw `f32` codec — the original
+/// zero-copy fast path, byte-identical to
+/// `write_frame(&Frame::Chunk { .. })`.
+pub fn write_chunk<W: Write>(w: &mut W, gid: u64, step: u32, data: &[f32]) -> Result<()> {
+    let mut buf = Vec::new();
+    write_chunk_coded(w, WireCodec::Fp32, gid, step, data, &mut buf).map(|_| ())
+}
+
+/// Read one length-prefixed frame, returning the bytes consumed off the
+/// stream alongside it (prefix included) — the data plane's byte meter.
+pub fn read_frame_counted<R: Read>(r: &mut R) -> Result<(Frame, usize)> {
     let mut lenbuf = [0u8; 4];
     r.read_exact(&mut lenbuf).context("read frame length")?;
     let len = u32::from_le_bytes(lenbuf) as usize;
@@ -133,7 +274,12 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     }
     let mut buf = vec![0u8; len];
     r.read_exact(&mut buf).context("read frame payload")?;
-    Frame::decode(&buf)
+    Ok((Frame::decode(&buf)?, 4 + len))
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    read_frame_counted(r).map(|(f, _)| f)
 }
 
 #[cfg(test)]
@@ -146,6 +292,10 @@ mod tests {
             Frame::Hello { rank: 3 },
             Frame::Chunk { gid: 9, step: 4, data: vec![1.0, -2.5, f32::MIN] },
             Frame::Chunk { gid: u64::MAX, step: 0, data: vec![] },
+            Frame::Chunk16 { gid: 5, step: 2, data: vec![0x3c00, 0x7bff, 0x8001] },
+            Frame::Chunk16 { gid: 6, step: 0, data: vec![] },
+            Frame::ChunkQ8 { gid: 7, step: 1, lo: -1.5, scale: 3.0, data: vec![0, 128, 255] },
+            Frame::ChunkQ8 { gid: 8, step: 0, lo: 0.0, scale: 0.0, data: vec![] },
             Frame::Poison { gid: 77 },
         ] {
             assert_eq!(Frame::decode(&frame.encode()).unwrap(), frame);
@@ -175,6 +325,70 @@ mod tests {
     }
 
     #[test]
+    fn write_chunk_coded_matches_frame_encoding_per_codec() {
+        let (gid, step) = (42u64, 9u32);
+        let data = vec![1.5f32, -0.25, 0.75, 100.0];
+        let mut scratch = Vec::new();
+        for codec in [WireCodec::Fp32, WireCodec::Fp16, WireCodec::Q8] {
+            let mut fast = Vec::new();
+            let n =
+                write_chunk_coded(&mut fast, codec, gid, step, &data, &mut scratch).unwrap();
+            assert_eq!(n, fast.len());
+            let frame = match codec {
+                WireCodec::Fp32 => Frame::Chunk { gid, step, data: data.clone() },
+                WireCodec::Fp16 => Frame::Chunk16 {
+                    gid,
+                    step,
+                    data: data.iter().map(|&v| f32_to_f16_bits(v)).collect(),
+                },
+                WireCodec::Q8 => {
+                    let (lo, scale) = q8_params(&data);
+                    Frame::ChunkQ8 {
+                        gid,
+                        step,
+                        lo,
+                        scale,
+                        data: data.iter().map(|&v| q8_quantize_one(v, lo, scale)).collect(),
+                    }
+                }
+            };
+            let mut slow = Vec::new();
+            write_frame(&mut slow, &frame).unwrap();
+            assert_eq!(fast, slow, "{codec} fast path diverged from Frame::encode");
+            // the counted reader reports exactly what the writer shipped
+            let mut cur = std::io::Cursor::new(fast.clone());
+            let (decoded, consumed) = read_frame_counted(&mut cur).unwrap();
+            assert_eq!(consumed, fast.len());
+            assert_eq!(decoded, frame);
+        }
+    }
+
+    #[test]
+    fn take_chunk_data_decodes_every_codec() {
+        let data = vec![0.5f32, -1.0, 2.0];
+        let mut out = vec![9.9f32]; // stale contents must be replaced
+        assert!(Frame::Chunk { gid: 1, step: 0, data: data.clone() }
+            .take_chunk_data(&mut out));
+        assert_eq!(out, data);
+        let h: Vec<u16> = data.iter().map(|&v| f32_to_f16_bits(v)).collect();
+        assert!(Frame::Chunk16 { gid: 1, step: 0, data: h }.take_chunk_data(&mut out));
+        assert_eq!(out, data); // these values are fp16-exact
+        let (lo, scale) = q8_params(&data);
+        let q: Vec<u8> = data.iter().map(|&v| q8_quantize_one(v, lo, scale)).collect();
+        assert!(Frame::ChunkQ8 { gid: 1, step: 0, lo, scale, data: q }
+            .take_chunk_data(&mut out));
+        for (got, want) in out.iter().zip(data.iter()) {
+            assert!((got - want).abs() <= scale / 500.0, "{got} vs {want}");
+        }
+        assert!(!Frame::Poison { gid: 1 }.take_chunk_data(&mut out));
+        assert_eq!(Frame::Poison { gid: 1 }.chunk_tag(), None);
+        assert_eq!(
+            Frame::Chunk16 { gid: 3, step: 7, data: vec![] }.chunk_tag(),
+            Some((3, 7))
+        );
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Frame::decode(&[9]).is_err()); // bad tag
         assert!(Frame::decode(&[0, 1]).is_err()); // truncated hello
@@ -185,5 +399,45 @@ mod tests {
         // length prefix beyond MAX_FRAME
         let mut cur = std::io::Cursor::new(((MAX_FRAME + 1) as u32).to_le_bytes().to_vec());
         assert!(read_frame(&mut cur).is_err());
+    }
+
+    /// Regression: `Frame::Chunk` decode used to `Vec::with_capacity`
+    /// the wire-declared element count before checking it against the
+    /// remaining payload, so a tiny corrupt frame could demand a huge
+    /// reservation. The count must be validated against the bytes
+    /// actually present first — for every chunk variant.
+    #[test]
+    fn adversarial_count_rejected_before_allocation() {
+        for (tag, elem_size) in [(1u8, 4usize), (3, 2), (4, 1)] {
+            let mut w = Writer::new();
+            w.u8(tag);
+            w.u64(7); // gid
+            w.u32(0); // step
+            // declare ~16M elements (passes the MAX_FRAME element check)
+            w.u32((MAX_FRAME / elem_size - 8) as u32);
+            if tag == 4 {
+                w.u32(0); // lo
+                w.u32(0); // scale
+            }
+            w.bytes(&[0u8; 8]); // ...but ship 8 payload bytes
+            let err = Frame::decode(&w.finish())
+                .expect_err("under-shipped chunk decoded (allocation-before-check)");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated"),
+                "tag {tag}: expected a payload-bounds error, got: {msg}"
+            );
+            // and a count whose byte size overflows/over-caps still fails
+            let mut w = Writer::new();
+            w.u8(tag);
+            w.u64(7);
+            w.u32(0);
+            w.u32(u32::MAX);
+            if tag == 4 {
+                w.u32(0);
+                w.u32(0);
+            }
+            assert!(Frame::decode(&w.finish()).is_err(), "tag {tag}: u32::MAX count");
+        }
     }
 }

@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::SlowdownEvent;
+use crate::collectives::codec::WireCodec;
 use crate::collectives::pipeline::OverlapConfig;
 use crate::gg::GgConfig;
 use crate::metrics::{speed_table, worker_table, WorkerStat};
@@ -84,6 +85,9 @@ pub struct LaunchConfig {
     /// worker — shard step tags are part of the wire schedule, so the
     /// whole cluster must agree on `K`.
     pub overlap: OverlapConfig,
+    /// Data-plane wire codec (`--wire fp32|fp16|q8`), forwarded to every
+    /// worker so the whole cluster compresses uniformly.
+    pub wire: WireCodec,
     /// GG failure-detection deadline in ms (0 disables the monitor —
     /// a crash then holds its locks forever, the pre-fault-tolerance
     /// behaviour).
@@ -119,6 +123,7 @@ impl Default for LaunchConfig {
             tiny: true,
             echo: false,
             overlap: OverlapConfig::serial(),
+            wire: WireCodec::Fp32,
             liveness_ms: 4000,
             heartbeat_ms: 200,
             ckpt_every: 0,
@@ -158,6 +163,8 @@ impl LaunchReport {
                 secs: w.secs,
                 loss_first: w.loss_first,
                 loss_last: w.loss_last,
+                bytes_tx: w.bytes_tx,
+                bytes_rx: w.bytes_rx,
             })
             .collect()
     }
@@ -328,6 +335,7 @@ fn worker_command(cfg: &LaunchConfig, gg_addr: &str, rank: usize, secs: f64) -> 
         .args(["--model", if cfg.tiny { "tiny" } else { "paper" }])
         .args(["--overlap-shards", &cfg.overlap.shards.to_string()])
         .args(["--max-staleness", &cfg.overlap.max_staleness.to_string()])
+        .args(["--wire", cfg.wire.name()])
         .args(["--heartbeat-ms", &cfg.heartbeat_ms.to_string()])
         .stdout(Stdio::piped());
     if cfg.max_iters > 0 {

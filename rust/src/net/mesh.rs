@@ -14,21 +14,34 @@
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::collectives::codec::WireCodec;
 use crate::collectives::ring::{AbortedError, ChunkTransport};
 
-use super::frame::{read_frame, write_frame, Frame};
+use super::frame::{read_frame, read_frame_counted, write_chunk_coded, write_frame, Frame};
 
 /// Inbound streams registered by the accept loop, keyed by peer rank.
 struct Inbound {
     conns: Mutex<HashMap<u32, TcpStream>>,
     cv: Condvar,
+}
+
+/// Data-plane byte meter: every frame a transport ships or reads on its
+/// ring edges — chunks and poison alike, frame prefix included — so tx
+/// and rx count the same frame set cluster-wide (Hello preambles are
+/// excluded on both sides). Shared across every transport the mesh
+/// hands out, serial and overlapped paths alike; surfaced in the worker
+/// REPORT line (`tx=`/`rx=`).
+#[derive(Default)]
+struct ByteCounters {
+    sent: AtomicU64,
+    recv: AtomicU64,
 }
 
 /// Cap on concurrently pending `Hello` handshakes: far above any real
@@ -48,6 +61,12 @@ pub struct WorkerMesh {
     /// Per-transfer socket timeout: a peer dying mid-collective surfaces
     /// as an error instead of a hang.
     pub io_timeout: Duration,
+    /// Wire codec every transport this mesh hands out *sends* with
+    /// (`--wire`); receivers decode whatever codec arrives, so the knob
+    /// is send-side only. Default: raw `f32`, byte-identical to the
+    /// pre-codec wire.
+    pub wire: WireCodec,
+    bytes: Arc<ByteCounters>,
     stop: Arc<AtomicBool>,
     accept_handle: Option<thread::JoinHandle<()>>,
 }
@@ -119,6 +138,8 @@ impl WorkerMesh {
             outbound: Mutex::new(HashMap::new()),
             inbound,
             io_timeout: Duration::from_secs(60),
+            wire: WireCodec::Fp32,
+            bytes: Arc::new(ByteCounters::default()),
             stop,
             accept_handle: Some(accept_handle),
         })
@@ -127,6 +148,17 @@ impl WorkerMesh {
     /// The bound data-plane address to advertise to peers.
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// Data-plane frame bytes sent so far (chunk + poison frames, all
+    /// groups, both the serial and the overlap comm-thread path).
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes.sent.load(Ordering::Relaxed)
+    }
+
+    /// Data-plane frame bytes received so far.
+    pub fn bytes_recv(&self) -> u64 {
+        self.bytes.recv.load(Ordering::Relaxed)
     }
 
     /// Install the rank-indexed peer address list (index = worker rank).
@@ -272,7 +304,20 @@ impl WorkerMesh {
         let Some(recv) = self.inbound_within(pred, deadline)? else {
             return Ok(None);
         };
-        Ok(Some((TcpRingTransport { gid, send, recv, succ, pred, failed: None }, pos)))
+        Ok(Some((
+            TcpRingTransport {
+                gid,
+                send,
+                recv,
+                succ,
+                pred,
+                failed: None,
+                wire: self.wire,
+                bytes: Arc::clone(&self.bytes),
+                scratch: Vec::new(),
+            },
+            pos,
+        )))
     }
 }
 
@@ -298,6 +343,13 @@ pub struct TcpRingTransport {
     succ: u32,
     pred: u32,
     failed: Option<u32>,
+    /// Send-side wire codec (copied from [`WorkerMesh::wire`]); the
+    /// receive side decodes whatever codec the predecessor used.
+    wire: WireCodec,
+    /// Shared mesh-wide byte meter.
+    bytes: Arc<ByteCounters>,
+    /// Reused encode buffer: one allocation per transport, not per step.
+    scratch: Vec<u8>,
 }
 
 impl TcpRingTransport {
@@ -309,28 +361,47 @@ impl TcpRingTransport {
 
     /// Best-effort: poison the ring successor so it unwinds immediately
     /// instead of waiting out a socket timeout. Errors are swallowed —
-    /// the successor may be the dead rank itself.
+    /// the successor may be the dead rank itself. Metered like chunks so
+    /// the tx and rx counters measure the same frame set.
     pub fn poison(&mut self) {
-        let _ = write_frame(&mut self.send, &Frame::Poison { gid: self.gid });
+        let frame = Frame::Poison { gid: self.gid };
+        if write_frame(&mut self.send, &frame).is_ok() {
+            let n = 4 + frame.encode().len() as u64; // prefix + payload
+            self.bytes.sent.fetch_add(n, Ordering::Relaxed);
+        }
     }
 }
 
 impl ChunkTransport for TcpRingTransport {
     fn send(&mut self, step: u32, data: &[f32]) -> Result<()> {
-        super::frame::write_chunk(&mut self.send, self.gid, step, data).map_err(|e| {
-            self.failed.get_or_insert(self.succ);
-            e
-        })
+        match write_chunk_coded(
+            &mut self.send,
+            self.wire,
+            self.gid,
+            step,
+            data,
+            &mut self.scratch,
+        ) {
+            Ok(n) => {
+                self.bytes.sent.fetch_add(n as u64, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                self.failed.get_or_insert(self.succ);
+                Err(e)
+            }
+        }
     }
 
     fn recv(&mut self, step: u32, out: &mut Vec<f32>) -> Result<()> {
         loop {
-            let frame = read_frame(&mut self.recv).map_err(|e| {
+            let (frame, nbytes) = read_frame_counted(&mut self.recv).map_err(|e| {
                 self.failed.get_or_insert(self.pred);
                 e
             })?;
-            match frame {
-                Frame::Chunk { gid, step: got, data } if gid == self.gid => {
+            self.bytes.recv.fetch_add(nbytes as u64, Ordering::Relaxed);
+            if let Some((gid, got)) = frame.chunk_tag() {
+                if gid == self.gid {
                     if got != step {
                         bail!(
                             "chunk tag mismatch: got (gid {gid}, step {got}), \
@@ -338,7 +409,8 @@ impl ChunkTransport for TcpRingTransport {
                             self.gid
                         );
                     }
-                    *out = data;
+                    // decodes whichever codec the sender used
+                    frame.take_chunk_data(out);
                     return Ok(());
                 }
                 // Leftovers of an *earlier* aborted group on this edge
@@ -346,7 +418,15 @@ impl ChunkTransport for TcpRingTransport {
                 // serialize on the lock vector): the predecessor sent
                 // chunks, learned of the abort, and poisoned — while we
                 // skipped that group at WaitArmed and never drained them.
-                Frame::Chunk { gid, .. } if gid < self.gid => continue,
+                if gid < self.gid {
+                    continue;
+                }
+                bail!(
+                    "group {}: unexpected chunk for future group {gid} on ring edge",
+                    self.gid
+                );
+            }
+            match frame {
                 Frame::Poison { gid } if gid == self.gid => {
                     return Err(AbortedError { gid }.into());
                 }
@@ -593,6 +673,65 @@ mod tests {
             assert!(b0.iter().all(|&v| (v - 0.5).abs() < 1e-6), "{b0:?}");
             h1.join().unwrap();
         });
+    }
+
+    #[test]
+    fn compressed_codecs_cross_the_wire_and_are_metered() {
+        // Constant chunks are exact under every codec (q8 collapses to
+        // scale 0, 0.5 is fp16-representable), so the collective result
+        // must be exact while the byte meter shows the compression.
+        let members = [0usize, 1];
+        let mut per_codec_sent = Vec::new();
+        for wire in [WireCodec::Fp32, WireCodec::Fp16, WireCodec::Q8] {
+            let (mut meshes, _) = {
+                let mut meshes: Vec<WorkerMesh> = members
+                    .iter()
+                    .map(|&r| WorkerMesh::bind(r, "127.0.0.1:0").unwrap())
+                    .collect();
+                let addrs: Vec<SocketAddr> =
+                    meshes.iter().map(|m| m.local_addr()).collect();
+                for m in &mut meshes {
+                    m.set_peers(addrs.clone());
+                    m.io_timeout = Duration::from_secs(10);
+                }
+                (meshes, addrs)
+            };
+            for m in &mut meshes {
+                m.wire = wire;
+            }
+            let results: Vec<Vec<f32>> = thread::scope(|scope| {
+                let handles: Vec<_> = meshes
+                    .iter()
+                    .enumerate()
+                    .map(|(r, mesh)| {
+                        let members = &members;
+                        scope.spawn(move || {
+                            let mut buf = vec![r as f32; 64];
+                            let (mut t, pos) = mesh.ring_transport(11, members).unwrap();
+                            ring_allreduce_via(pos, 2, &mut buf, &mut t).unwrap();
+                            buf
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for buf in &results {
+                assert!(buf.iter().all(|&v| v == 0.5), "{wire}: {buf:?}");
+            }
+            let sent = meshes[0].bytes_sent();
+            assert!(sent > 0, "{wire}: nothing metered");
+            assert_eq!(
+                meshes[0].bytes_sent(),
+                meshes[1].bytes_recv(),
+                "{wire}: meter asymmetry on a symmetric pair"
+            );
+            per_codec_sent.push(sent);
+        }
+        // compression is visible on the meter: fp32 > fp16 > q8
+        assert!(
+            per_codec_sent[0] > per_codec_sent[1] && per_codec_sent[1] > per_codec_sent[2],
+            "bytes not ordered by codec: {per_codec_sent:?}"
+        );
     }
 
     #[test]

@@ -57,6 +57,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::collectives::codec::WireCodec;
 use crate::collectives::pipeline::{
     reconcile_shard, ring_allreduce_sharded, shard_bounds, OverlapConfig,
 };
@@ -103,6 +104,11 @@ pub struct WorkerParams {
     /// Pipelined-collective knobs (`--overlap-shards`/`--max-staleness`);
     /// the serial default reproduces the pre-overlap loop bit-for-bit.
     pub overlap: OverlapConfig,
+    /// Wire codec this worker *sends* collective chunks with (`--wire`);
+    /// receivers decode whatever codec arrives, but the whole cluster
+    /// should agree. The `fp32` default is byte-identical to the
+    /// pre-codec wire.
+    pub wire: WireCodec,
     /// Heartbeat period for the liveness beacon thread (0 = no thread —
     /// the GG then sees this worker only through its Sync traffic).
     pub heartbeat_ms: u64,
@@ -139,6 +145,7 @@ impl Default for WorkerParams {
             dataset_size: 2048,
             eval_size: 256,
             overlap: OverlapConfig::serial(),
+            wire: WireCodec::Fp32,
             heartbeat_ms: 200,
             probe_ms: 200,
             ckpt_every: 0,
@@ -219,6 +226,11 @@ pub struct WorkerReport {
     /// Collectives this worker unwound from because the group was
     /// aborted by failure repair (each was retried in a repaired group).
     pub aborts: u64,
+    /// Data-plane frame bytes sent (chunk + poison frames, prefixes
+    /// included) — the wire codec's compression shows up directly here.
+    pub bytes_tx: u64,
+    /// Data-plane frame bytes received.
+    pub bytes_rx: u64,
 }
 
 impl WorkerReport {
@@ -226,7 +238,7 @@ impl WorkerReport {
     pub fn to_line(&self) -> String {
         format!(
             "REPORT rank={} iters={} preduces={} loss_first={:.6} loss_last={:.6} \
-             secs={:.3} ewma={:.6} stale={} sync_secs={:.6} aborts={}",
+             secs={:.3} ewma={:.6} stale={} sync_secs={:.6} aborts={} tx={} rx={}",
             self.rank,
             self.iters,
             self.preduces,
@@ -236,7 +248,9 @@ impl WorkerReport {
             self.ewma_secs,
             self.stale_steps,
             self.sync_blocked_secs,
-            self.aborts
+            self.aborts,
+            self.bytes_tx,
+            self.bytes_rx
         )
     }
 
@@ -251,6 +265,8 @@ impl WorkerReport {
         let mut stale_steps = 0; // optional: absent in pre-overlap lines
         let mut sync_blocked_secs = 0.0; // optional, ditto
         let mut aborts = 0; // optional: absent in pre-fault-tolerance lines
+        let mut bytes_tx = 0; // optional: absent in pre-codec lines
+        let mut bytes_rx = 0; // optional, ditto
         for kv in line.trim().strip_prefix("REPORT ").unwrap_or("").split_whitespace() {
             let (k, v) = kv.split_once('=').with_context(|| format!("bad field {kv:?}"))?;
             match k {
@@ -264,6 +280,8 @@ impl WorkerReport {
                 "stale" => stale_steps = v.parse()?,
                 "sync_secs" => sync_blocked_secs = v.parse()?,
                 "aborts" => aborts = v.parse()?,
+                "tx" => bytes_tx = v.parse()?,
+                "rx" => bytes_rx = v.parse()?,
                 _ => {} // forward-compatible: ignore unknown fields
             }
         }
@@ -280,6 +298,8 @@ impl WorkerReport {
                     stale_steps,
                     sync_blocked_secs,
                     aborts,
+                    bytes_tx,
+                    bytes_rx,
                 })
             }
             _ => bail!("incomplete report line: {line:?}"),
@@ -533,6 +553,8 @@ pub fn run_worker(
         stale_steps,
         sync_blocked_secs: sync_blocked,
         aborts,
+        bytes_tx: mesh.bytes_sent(),
+        bytes_rx: mesh.bytes_recv(),
     })
 }
 
@@ -778,6 +800,7 @@ pub fn worker_main(
     // surface as an error here instead of hanging the whole cluster.
     let io_timeout = p.io_timeout();
     mesh.io_timeout = io_timeout;
+    mesh.wire = p.wire;
     println!("DATA_ADDR {}", mesh.local_addr());
     std::io::stdout().flush().ok();
     let peer_list = match peers_flag {
@@ -829,6 +852,8 @@ mod tests {
             stale_steps: 17,
             sync_blocked_secs: 0.812500,
             aborts: 2,
+            bytes_tx: 123456,
+            bytes_rx: 654321,
         };
         let parsed = WorkerReport::parse_line(&r.to_line()).unwrap();
         assert_eq!(parsed, r);
@@ -857,6 +882,8 @@ mod tests {
         assert_eq!(r.stale_steps, 0);
         assert_eq!(r.sync_blocked_secs, 0.0);
         assert_eq!(r.aborts, 0);
+        assert_eq!(r.bytes_tx, 0);
+        assert_eq!(r.bytes_rx, 0);
     }
 
     #[test]
@@ -893,6 +920,7 @@ mod tests {
         let p = WorkerParams::default();
         assert!(p.overlap.is_serial());
         assert_eq!(p.overlap.shards, 1);
+        assert_eq!(p.wire, WireCodec::Fp32, "exact wire is the golden default");
         assert_eq!(p.ckpt_every, 0, "checkpointing is opt-in");
         assert!(!p.rejoin);
         assert!(p.heartbeat_ms > 0, "liveness beacon on by default");

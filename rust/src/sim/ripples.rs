@@ -52,6 +52,10 @@ enum WState {
 }
 
 /// Scan armed groups; start every group whose members are all ready.
+/// `wire_bytes` is the codec-compressed per-member transfer size and
+/// `bw` the current per-worker link throttle (1.0 = full speed); every
+/// started collective adds its `2(p-1)` chunk transfers to `wire_total`.
+#[allow(clippy::too_many_arguments)]
 fn start_runnable(
     armed: &mut HashMap<GroupId, Vec<usize>>,
     wstate: &mut [WState],
@@ -59,7 +63,9 @@ fn start_runnable(
     now: f64,
     cost: &CostModel,
     cache: &mut CommCache,
-    bytes: usize,
+    wire_bytes: usize,
+    bw: &[f64],
+    wire_total: &mut u64,
 ) {
     let mut runnable: Vec<GroupId> = armed
         .iter()
@@ -76,8 +82,9 @@ fn start_runnable(
         }
         let dur = cost.gg_rtt()
             + cache.acquire(&members)
-            + cost.ring_allreduce(&members, bytes)
+            + cost.ring_allreduce_throttled(&members, wire_bytes, bw)
             + calibration::PREDUCE_OVERHEAD;
+        *wire_total += 2 * members.len().saturating_sub(1) as u64 * wire_bytes as u64;
         q.push(now + dur, Ev::PReduceDone(gid, members, dur));
     }
 }
@@ -114,7 +121,11 @@ fn run_inner(
     let mut st = params.make_state();
     let mut rng = Pcg32::new(exp.train.seed ^ 0x8199_1e5);
     let mut cache = CommCache::new(64, calibration::COMM_CREATE_COST);
-    let bytes = params.model_bytes;
+    // bytes-on-wire model: the configured codec compresses every chunk,
+    // so the cost model charges (and meters) compressed bytes
+    let wire = exp.wire;
+    let bytes = wire.wire_bytes(params.model_bytes);
+    let mut wire_total = 0u64;
     let section = exp.algo.section_len.max(1) as u64;
 
     let mut gg = match (gg_override, kind) {
@@ -144,6 +155,10 @@ fn run_inner(
     let mut durs = vec![0.0f64; n];
     let mut onset_request: Option<u64> = None;
     let hetero = exp.cluster.hetero.clone();
+    // per-link bandwidth throttle (divisor; 1.0 = full speed),
+    // re-resolved as each worker's local iteration advances
+    let mut bw_div: Vec<f64> =
+        (0..n).map(|w| hetero.bandwidth_factor_at(w, 0)).collect();
     let mut assigned: Vec<Option<GroupId>> = vec![None; n];
     // armed but not yet started: id -> members
     let mut armed: HashMap<GroupId, Vec<usize>> = HashMap::new();
@@ -223,7 +238,7 @@ fn run_inner(
                             }
                             start_runnable(
                                 &mut armed, &mut wstate, &mut q, now, &cost, &mut cache,
-                                bytes,
+                                bytes, &bw_div, &mut wire_total,
                             );
                         }
                     }
@@ -235,6 +250,7 @@ fn run_inner(
                 st.local_step(w, iters[w]);
                 let it = iters[w];
                 iters[w] += 1;
+                bw_div[w] = hetero.bandwidth_factor_at(w, iters[w]);
                 total_iters += 1;
                 compute_total += durs[w];
                 if let Some(gg) = gg.as_mut() {
@@ -277,6 +293,7 @@ fn run_inner(
                     }
                     start_runnable(
                         &mut armed, &mut wstate, &mut q, now, &cost, &mut cache, bytes,
+                        &bw_div, &mut wire_total,
                     );
                 } else {
                     // static scheduling: one schedule step per section
@@ -297,8 +314,13 @@ fn run_inner(
                                     wstate[m] = WState::InPReduce;
                                 }
                                 let dur = cache.acquire(&members)
-                                    + cost.ring_allreduce(&members, bytes)
+                                    + cost.ring_allreduce_throttled(
+                                        &members, bytes, &bw_div,
+                                    )
                                     + calibration::PREDUCE_OVERHEAD;
+                                wire_total += 2
+                                    * members.len().saturating_sub(1) as u64
+                                    * bytes as u64;
                                 q.push(now + dur, Ev::StaticDone(sidx, members));
                             }
                         }
@@ -306,7 +328,7 @@ fn run_inner(
                 }
             }
             Ev::PReduceDone(gid, members, dur) => {
-                st.preduce(&members);
+                st.preduce_coded(&members, wire);
                 {
                     let gg = gg.as_mut().expect("PReduceDone without GG");
                     for g in gg.complete(gid) {
@@ -361,10 +383,11 @@ fn run_inner(
                 }
                 start_runnable(
                     &mut armed, &mut wstate, &mut q, now, &cost, &mut cache, bytes,
+                    &bw_div, &mut wire_total,
                 );
             }
             Ev::StaticDone(_sidx, members) => {
-                st.preduce(&members);
+                st.preduce_coded(&members, wire);
                 for &m in &members {
                     wstate[m] = WState::Computing;
                     sync_total += now - ready_since[m];
@@ -392,6 +415,7 @@ fn run_inner(
                     }
                     start_runnable(
                         &mut armed, &mut wstate, &mut q, now, &cost, &mut cache, bytes,
+                        &bw_div, &mut wire_total,
                     );
                 }
             }
@@ -475,6 +499,7 @@ fn run_inner(
         groups_aborted: gg.as_ref().map(|g| g.stats.groups_aborted).unwrap_or(0),
         rejoins,
         deadlocked,
+        bytes_on_wire: wire_total,
     }
 }
 
@@ -686,6 +711,54 @@ mod tests {
         assert_eq!(ro.final_time.to_bits(), ro2.final_time.to_bits());
         assert_eq!(ro.sync_time.to_bits(), ro2.sync_time.to_bits());
         assert_eq!(ro.hidden_sync_time.to_bits(), ro2.hidden_sync_time.to_bits());
+    }
+
+    #[test]
+    fn compressed_wire_cuts_bytes_and_constrained_sync_time() {
+        use crate::cluster::BandwidthEvent;
+        use crate::collectives::WireCodec;
+        // every link throttled 512x: the ring, not the straggler, is the
+        // bottleneck — the scenario the wire codecs exist for
+        let constrained = |wire: WireCodec| {
+            let mut p = params(AlgoKind::RipplesSmart);
+            p.exp.wire = wire;
+            p.exp.cluster.hetero.bandwidth = (0..16)
+                .map(|w| BandwidthEvent { worker: w, factor: 512.0, start_iter: 0 })
+                .collect();
+            p
+        };
+        let rf = run(&constrained(WireCodec::Fp32));
+        let rq = run(&constrained(WireCodec::Q8));
+        // same schedule length, ~4x fewer bytes, >=2x less exposed sync
+        assert_eq!(rf.total_iters, rq.total_iters);
+        assert!(rq.bytes_on_wire > 0);
+        assert!(
+            rq.bytes_on_wire * 3 < rf.bytes_on_wire,
+            "q8 bytes {} vs fp32 {}",
+            rq.bytes_on_wire,
+            rf.bytes_on_wire
+        );
+        assert!(
+            rq.sync_time <= 0.5 * rf.sync_time,
+            "q8 sync {} vs fp32 {} not >=2x better",
+            rq.sync_time,
+            rf.sync_time
+        );
+        // the throttle itself is what made fp32 expensive
+        let uniform = run(&params(AlgoKind::RipplesSmart));
+        assert!(
+            rf.sync_time > 2.0 * uniform.sync_time,
+            "constrained {} vs uniform {}",
+            rf.sync_time,
+            uniform.sync_time
+        );
+        // codec + bandwidth model stay bit-for-bit deterministic
+        let rq2 = run(&constrained(WireCodec::Q8));
+        assert_eq!(rq.final_time.to_bits(), rq2.final_time.to_bits());
+        assert_eq!(rq.bytes_on_wire, rq2.bytes_on_wire);
+        for (x, y) in rq.trace.iter().zip(rq2.trace.iter()) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! replicas (real math), loss evaluation, trace recording, termination.
 
 use crate::collectives;
+use crate::collectives::codec::WireCodec;
 use crate::model::{loss_only, sgd_step, Dataset, MlpScratch, MlpSpec};
 
 /// One point on the loss curve.
@@ -59,6 +60,10 @@ pub struct SimResult {
     /// group naming a crashed rank — the no-repair failure mode
     /// (`[faults] repair = false`) that `fig failures` measures.
     pub deadlocked: bool,
+    /// Total bytes the cost model put on the wire across all collectives
+    /// (`2(p-1)` chunk transfers per P-Reduce, under the configured
+    /// [`WireCodec`]'s bytes-per-element — `fig wire`'s bytes axis).
+    pub bytes_on_wire: u64,
 }
 
 impl SimResult {
@@ -194,6 +199,28 @@ impl TrainState {
         sgd_step(&self.spec, &mut self.models[worker], &x, &y, self.lr, &mut self.scratch)
     }
 
+    /// F^G under a wire codec: each member's replica first takes the
+    /// codec's encode→decode precision loss (per ring-chunk granularity,
+    /// `p` chunks for a `p`-member group — the same quantization ranges
+    /// the TCP data plane uses), then the group averages. `Fp32` is
+    /// exactly [`TrainState::preduce`]. A first-order model: the real
+    /// ring also re-quantizes partial sums per hop, so this slightly
+    /// *under*-states q8 noise, which the differential ring tests bound
+    /// separately.
+    pub fn preduce_coded(&mut self, group: &[usize], wire: WireCodec) {
+        if wire != WireCodec::Fp32 {
+            let p = group.len().max(1);
+            for &g in group {
+                let n = self.models[g].len();
+                for c in 0..p {
+                    let (lo, hi) = crate::collectives::pipeline::shard_bounds(n, p, c);
+                    wire.roundtrip_inplace(&mut self.models[g][lo..hi]);
+                }
+            }
+        }
+        self.preduce(group);
+    }
+
     /// Apply F^G: average the models of `group` in place.
     pub fn preduce(&mut self, group: &[usize]) {
         debug_assert!(group.windows(2).all(|w| w[0] < w[1]), "group must be sorted");
@@ -292,6 +319,30 @@ mod tests {
         let spec = MlpSpec::tiny();
         let ds = Dataset::gaussian_mixture(spec.in_dim, spec.classes, 256, 7);
         TrainState::new(spec, ds, n, 32, 0.1, Some(0.05), 1)
+    }
+
+    #[test]
+    fn preduce_coded_fp32_is_exact_and_q8_stays_close() {
+        let mut a = state(4);
+        let mut b = state(4);
+        for w in 0..4 {
+            a.local_step(w, 0);
+            b.local_step(w, 0);
+        }
+        a.preduce(&[0, 2]);
+        b.preduce_coded(&[0, 2], WireCodec::Fp32);
+        assert_eq!(a.models[0], b.models[0], "fp32 coded path must be exact");
+        // q8: members end equal (same codec view averaged), near fp32
+        b.preduce_coded(&[1, 3], WireCodec::Q8);
+        a.preduce(&[1, 3]);
+        assert_eq!(b.models[1], b.models[3]);
+        let range = a.models[1]
+            .iter()
+            .fold((f32::MAX, f32::MIN), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+        let tol = (range.1 - range.0) / 125.0 + 1e-5;
+        for (x, y) in a.models[1].iter().zip(b.models[1].iter()) {
+            assert!((x - y).abs() <= tol, "{x} vs {y} (tol {tol})");
+        }
     }
 
     #[test]

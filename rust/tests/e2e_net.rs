@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use ripples::cluster::SlowdownEvent;
-use ripples::collectives::OverlapConfig;
+use ripples::collectives::{OverlapConfig, WireCodec};
 use ripples::net::{launch_local, KillSpec, LaunchConfig, LaunchReport};
 
 fn bin() -> PathBuf {
@@ -92,6 +92,56 @@ fn four_process_cluster_with_straggler() {
     assert!(
         fast_mean > 1.3 * slow_iters,
         "fast workers gated by the straggler: fast mean {fast_mean:.0} vs slow {slow_iters:.0}"
+    );
+}
+
+/// The compressed-wire acceptance scenario: the 4-process cluster runs
+/// end to end under `--wire fp16` and `--wire q8`. Every worker must
+/// train (loss decreases through lossy collectives), execute P-Reduces,
+/// and meter its data-plane bytes — and q8 must ship measurably fewer
+/// bytes per collective than fp16 (the whole point of the codec).
+#[test]
+fn four_process_cluster_under_compressed_wire() {
+    let base = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        slow: Some((0, 3.0)),
+        secs: 3.0,
+        group_size: 2,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 42,
+        ..LaunchConfig::default()
+    };
+    let mut tx_per_preduce = Vec::new();
+    for wire in [WireCodec::Fp16, WireCodec::Q8] {
+        let report = launch_local(&LaunchConfig { wire, ..base.clone() })
+            .unwrap_or_else(|e| panic!("{wire} cluster run: {e:#}"));
+        assert_eq!(report.workers.len(), 4, "{wire}");
+        let (mut tx, mut preduces) = (0u64, 0u64);
+        for w in &report.workers {
+            assert!(w.preduces > 0, "{wire}: worker {} never synchronized: {w:?}", w.rank);
+            assert!(
+                w.loss_last < w.loss_first * 0.85,
+                "{wire}: worker {} loss did not decrease: {} -> {}",
+                w.rank,
+                w.loss_first,
+                w.loss_last
+            );
+            assert!(w.bytes_tx > 0, "{wire}: worker {} metered no tx bytes", w.rank);
+            assert!(w.bytes_rx > 0, "{wire}: worker {} metered no rx bytes", w.rank);
+            tx += w.bytes_tx;
+            preduces += w.preduces;
+        }
+        tx_per_preduce.push(tx as f64 / preduces as f64);
+    }
+    // q8 chunks are ~half the bytes of fp16 chunks (1 vs 2 bytes/elem,
+    // plus small fixed headers) — visible per collective on the meter
+    let (fp16, q8) = (tx_per_preduce[0], tx_per_preduce[1]);
+    assert!(
+        q8 < 0.75 * fp16,
+        "q8 did not compress vs fp16: {q8:.0} vs {fp16:.0} tx bytes/preduce"
     );
 }
 
@@ -290,6 +340,47 @@ fn chaos_kill_worker_mid_run_cluster_repairs_and_finishes() {
         (lc - lr).abs() < 0.5 * lc.max(lr) + 0.05,
         "repaired cluster trained much worse than crash-free: {lc:.4} vs {lr:.4}"
     );
+}
+
+/// Chaos × compression: one kill-mid-run case under `--wire q8` — the
+/// poison/abort/repair paths must survive compressed frames (stale-frame
+/// skipping and poison relay key off the frame *tag*, which every codec
+/// variant carries). The cluster must repair, finish, and keep training.
+#[test]
+fn chaos_kill_worker_mid_run_under_q8_wire() {
+    let cfg = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        secs: 3.0,
+        group_size: 2,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 44,
+        liveness_ms: 2000,
+        heartbeat_ms: 100,
+        wire: WireCodec::Q8,
+        kill: Some(KillSpec { rank: 3, after_secs: 1.0, rejoin_after_secs: None }),
+        ..LaunchConfig::default()
+    };
+    let report = with_timeout(120, "chaos q8 kill run", move || {
+        launch_local(&cfg).expect("chaos q8 cluster run")
+    });
+    assert_eq!(report.killed, Some(3));
+    assert_eq!(report.workers.len(), 3, "exactly the survivors report");
+    assert_eq!(report.gg_stats.deaths, 1, "the killed rank must be declared dead");
+    for w in &report.workers {
+        assert_ne!(w.rank, 3);
+        assert!(w.preduces > 0, "survivor {} never synchronized: {w:?}", w.rank);
+        assert!(w.bytes_tx > 0, "survivor {} metered no compressed bytes", w.rank);
+        assert!(
+            w.loss_last < w.loss_first * 0.85,
+            "survivor {} loss did not decrease under q8: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+    }
 }
 
 /// The rejoin acceptance scenario: kill a worker, then spawn a

@@ -2,6 +2,11 @@
 //! `prop_gg.rs`: hand-rolled randomized harness (no proptest in the
 //! vendored registry), seeds in panic messages for reproducibility.
 
+use ripples::collectives::codec::{
+    f16_bits_to_f32, f32_to_f16_bits, q8_params, q8_quantize_one, F16_ABS_ERR, F16_MAX,
+    F16_REL_ERR,
+};
+use ripples::collectives::WireCodec;
 use ripples::net::frame::{read_frame, write_frame, Frame};
 use ripples::rpc::{Request, Response};
 use ripples::util::rng::Pcg32;
@@ -115,6 +120,151 @@ fn prop_stream_sequence_roundtrip() {
             let got = read_frame(&mut cur)
                 .unwrap_or_else(|e| panic!("seed {seed} frame {i}: {e}"));
             assert_eq!(&got, f, "seed {seed} frame {i}");
+        }
+    }
+}
+
+fn rand_coded_chunk(rng: &mut Pcg32) -> Frame {
+    let count = rng.gen_range(1025);
+    if rng.gen_range(2) == 0 {
+        Frame::Chunk16 {
+            gid: rng.next_u64(),
+            step: rng.next_u32(),
+            data: (0..count).map(|_| f32_to_f16_bits(rng.gen_f32() * 2e3 - 1e3)).collect(),
+        }
+    } else {
+        let vals: Vec<f32> = (0..count).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let (lo, scale) = q8_params(&vals);
+        Frame::ChunkQ8 {
+            gid: rng.next_u64(),
+            step: rng.next_u32(),
+            lo,
+            scale,
+            data: vals.iter().map(|&v| q8_quantize_one(v, lo, scale)).collect(),
+        }
+    }
+}
+
+/// Compressed chunk frames survive encode -> decode bit-exactly (the
+/// lossy step is the *codec*, not the framing), and truncation of any
+/// strict prefix is detected.
+#[test]
+fn prop_coded_chunk_roundtrip_and_truncation() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0xC0DEC);
+        let frame = rand_coded_chunk(&mut rng);
+        let buf = frame.encode();
+        let decoded = Frame::decode(&buf)
+            .unwrap_or_else(|e| panic!("seed {seed}: decode failed: {e}"));
+        assert_eq!(decoded, frame, "seed {seed}");
+        for _ in 0..6 {
+            let cut = rng.gen_range(buf.len());
+            assert!(
+                Frame::decode(&buf[..cut]).is_err(),
+                "seed {seed}: truncation at {cut}/{} decoded",
+                buf.len()
+            );
+        }
+    }
+}
+
+/// fp16 encode→decode error stays within the documented bound across a
+/// proptest-style sweep: normals over 12 orders of magnitude, f32/f16
+/// subnormals, saturation boundary, ±inf guards.
+#[test]
+fn prop_fp16_roundtrip_error_bound() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0xF16);
+        for i in 0..64 {
+            let v: f32 = match i % 8 {
+                0 => f32::from_bits(rng.next_u32() & 0x007f_ffff), // f32 subnormal
+                1 => (rng.gen_f32() * 2.0 - 1.0) * 2.0f32.powi(-20), // f16-subnormal range
+                2 => (rng.gen_f32() * 2.0 - 1.0) * 65504.0,
+                3 => [f32::INFINITY, f32::NEG_INFINITY][rng.gen_range(2)],
+                4 => (rng.gen_f32() * 2.0 - 1.0) * 1e9, // overflow range
+                _ => (rng.gen_f32() * 2.0 - 1.0) * 10.0f32.powi(rng.gen_range(9) as i32 - 4),
+            };
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!(back.is_finite(), "seed {seed}: {v} decoded non-finite");
+            if v.is_infinite() || v.abs() > F16_MAX {
+                // ±inf guard / overflow: saturate to ±F16_MAX
+                assert_eq!(back, F16_MAX.copysign(v), "seed {seed}: {v} -> {back}");
+            } else {
+                let err = (back as f64 - v as f64).abs();
+                let bound = (v.abs() as f64 * F16_REL_ERR as f64).max(F16_ABS_ERR as f64);
+                assert!(
+                    err <= bound,
+                    "seed {seed}: v={v} back={back} err={err} > bound={bound}"
+                );
+            }
+        }
+    }
+}
+
+/// q8 encode→decode error stays within the documented per-chunk bound
+/// `(hi-lo)/510` (plus f32 rounding slack) across value sweeps.
+#[test]
+fn prop_q8_roundtrip_error_bound() {
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0x9_8);
+        let n = rng.gen_range(512) + 1;
+        let span = 10.0f32.powi(rng.gen_range(9) as i32 - 4);
+        let offset = (rng.gen_f32() * 2.0 - 1.0) * span;
+        let vals: Vec<f32> =
+            (0..n).map(|_| offset + (rng.gen_f32() * 2.0 - 1.0) * span).collect();
+        let (lo, scale) = q8_params(&vals);
+        let step = scale / 255.0;
+        let maxabs = vals.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for &v in &vals {
+            let back = lo + q8_quantize_one(v, lo, scale) as f32 * step;
+            let err = (back as f64 - v as f64).abs();
+            let bound = scale as f64 / 500.0 + maxabs as f64 * 1e-5;
+            assert!(err <= bound, "seed {seed}: v={v} back={back} err={err} > {bound}");
+        }
+    }
+}
+
+/// The sharded ring under a lossy codec stays within tolerance of the
+/// fp32 oracle: every rank converges to (approximately) the same mean,
+/// with worst-case error bounded by the per-hop quantization noise.
+#[test]
+fn prop_sharded_ring_with_codec_matches_fp32_oracle() {
+    use ripples::collectives::pipeline::ring_allreduce_sharded;
+    use ripples::collectives::ring::ChannelTransport;
+    for seed in 0..SEEDS / 6 {
+        let mut rng = Pcg32::new(seed ^ 0x51A6);
+        let p = 2 + rng.gen_range(3); // 2..=4 ranks
+        let n = 16 + rng.gen_range(101);
+        let k = 1 + rng.gen_range(4); // 1..=4 shards
+        let bufs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect())
+            .collect();
+        let oracle: Vec<f32> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / p as f32)
+            .collect();
+        for (codec, tol) in [(WireCodec::Fp16, 1e-2f32), (WireCodec::Q8, 0.08)] {
+            let mut coded = bufs.clone();
+            let transports = ChannelTransport::ring_with(p, codec);
+            std::thread::scope(|scope| {
+                for ((r, buf), mut t) in coded.iter_mut().enumerate().zip(transports) {
+                    scope.spawn(move || {
+                        ring_allreduce_sharded(r, p, buf, k, &mut t, |_, _| ())
+                            .expect("coded ring");
+                    });
+                }
+            });
+            for (r, buf) in coded.iter().enumerate() {
+                for i in 0..n {
+                    let err = (buf[i] - oracle[i]).abs();
+                    assert!(
+                        err <= tol,
+                        "seed {seed} {codec} p={p} k={k} rank={r} idx={i}: \
+                         {} vs oracle {} (err {err})",
+                        buf[i],
+                        oracle[i]
+                    );
+                }
+            }
         }
     }
 }
