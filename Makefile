@@ -5,7 +5,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test chaos clippy doc fmt verify artifacts python-test bench bench-json clean
+.PHONY: build test chaos e2e clippy doc fmt verify artifacts python-test bench bench-json paper clean
 
 build:
 	$(CARGO) build --release
@@ -20,6 +20,14 @@ test: build
 # `verify` names the crash path even when test filters change.
 chaos:
 	$(CARGO) test -q --test e2e_net chaos_
+
+# End-to-end data-plane gate: the Ripples collectives suite plus the
+# AD-PSGD / Parameter Server baseline suite (`--algo adpsgd|ps`) — real
+# multi-process TCP clusters, the real-socket counterpart of `fig paper`.
+# Included in `cargo test` too; named here like `chaos` so `verify`
+# spells the gate out even when test filters change.
+e2e:
+	$(CARGO) test -q --test e2e_net --test e2e_baselines
 
 # Lint gate: clippy over every target (lib, bin, tests, benches,
 # examples) with warnings denied.
@@ -37,7 +45,7 @@ doc:
 fmt:
 	$(CARGO) fmt --check
 
-verify: build test chaos clippy doc fmt
+verify: build test chaos e2e clippy doc fmt
 
 # Lower the Layer-2/Layer-1 JAX graphs to HLO-text artifacts (needs
 # Python + JAX; content-hashed, so re-running is a no-op when the
@@ -57,6 +65,12 @@ bench:
 # `fig all` includes `fig wire` (BENCH_wire.json: codec x bandwidth).
 bench-json: build
 	$(CARGO) run --release -- fig all --json results
+
+# The paper table: all four algorithms x {homogeneous, 5x straggler,
+# 16x bandwidth cut} at one target loss -> results/BENCH_paper.json
+# (committed; shape-asserted by bench::figures::tests::paper_table_shape).
+paper: build
+	$(CARGO) run --release -- fig paper --json results
 
 clean:
 	$(CARGO) clean

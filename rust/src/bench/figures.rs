@@ -575,6 +575,80 @@ pub fn fig_failures(csv_dir: Option<&Path>) -> Table {
     t
 }
 
+/// Paper table (`fig paper`) — the headline comparison the satellite
+/// tables orbit: the four algorithms raced to the *same* target loss,
+/// homogeneous and under both heterogeneity axes (one 5x-slow worker;
+/// one worker's links throttled 16x). Speedups are relative to the
+/// homogeneous PS run, the paper's reporting convention (Fig. 17/19).
+pub fn fig_paper(csv_dir: Option<&Path>) -> Table {
+    fig_paper_at(csv_dir, super::LOSS_TARGET, 2500)
+}
+
+/// Parameterized core of [`fig_paper`]: tests call it with a laxer
+/// target and a smaller iteration budget so the 12-run sweep stays fast.
+pub fn fig_paper_at(csv_dir: Option<&Path>, target: f64, max_iters: usize) -> Table {
+    use crate::cluster::BandwidthEvent;
+    let mut t = Table::new(&[
+        "setting",
+        "algorithm",
+        "time-to-loss(s)",
+        "speedup vs ps-homo",
+        "paper shape",
+    ]);
+    let algos = [
+        AlgoKind::ParameterServer,
+        AlgoKind::AllReduce,
+        AlgoKind::AdPsgd,
+        AlgoKind::RipplesSmart,
+    ];
+    let run_one = |kind: AlgoKind,
+                   slow: Option<(usize, f64)>,
+                   bw: Vec<BandwidthEvent>|
+     -> SimResult {
+        let mut p = base_params(kind);
+        p.exp.train.loss_target = Some(target);
+        p.exp.train.max_iters = max_iters;
+        p.exp.cluster.hetero.slow_worker = slow;
+        p.exp.cluster.hetero.bandwidth = bw;
+        sim::run(&p)
+    };
+    let ps_homo = run_one(AlgoKind::ParameterServer, None, Vec::new());
+    let (ps_time, _) = ttt(&ps_homo);
+    // §7.4 again: "5x slowdown" = 5x *added* sleep = 6x total compute.
+    let throttle = vec![BandwidthEvent { worker: 7, factor: 16.0, start_iter: 0 }];
+    for (setting, slow, bw) in [
+        ("homo", None, Vec::new()),
+        ("hetero-5x", Some((7usize, 6.0f64)), Vec::new()),
+        ("hetero-bw16x", None, throttle),
+    ] {
+        for kind in algos {
+            let res = if setting == "homo" && kind == AlgoKind::ParameterServer {
+                ps_homo.clone()
+            } else {
+                run_one(kind, slow, bw.clone())
+            };
+            dump_trace(csv_dir, &format!("paper_{setting}_{}", kind.name()), &res);
+            let (time, _) = ttt(&res);
+            let shape = match (setting, kind) {
+                ("homo", AlgoKind::ParameterServer) => "baseline (1.00x)",
+                ("homo", AlgoKind::RipplesSmart) => "fastest homo (~5.3x)",
+                ("hetero-5x", AlgoKind::AllReduce) => "barrier waits for straggler",
+                ("hetero-5x", AlgoKind::RipplesSmart) => "degrades least (~4.2x)",
+                ("hetero-bw16x", AlgoKind::AdPsgd) => "pays only when 7 is picked",
+                _ => "",
+            };
+            t.row(vec![
+                setting.into(),
+                kind.name().into(),
+                fmt_ttt(&res),
+                format!("{:.2}", ps_time / time),
+                shape.into(),
+            ]);
+        }
+    }
+    t
+}
+
 /// Run one figure by id; `all` runs everything. Returns
 /// `(id, title, table)` so callers can derive stable artifact names
 /// (`BENCH_<id>.json`, CSV files).
@@ -596,6 +670,7 @@ pub fn run_figure(
         ("overlap", "Overlap pipeline (hidden vs exposed sync)", fig_overlap),
         ("wire", "Wire formats (codec x bandwidth)", fig_wire),
         ("failures", "Failure sweep (crash tolerance)", fig_failures),
+        ("paper", "Paper table (algorithms x heterogeneity)", fig_paper),
     ];
     let selected: Vec<_> = if id == "all" {
         all
@@ -605,7 +680,7 @@ pub fn run_figure(
     if selected.is_empty() {
         return Err(format!(
             "unknown figure '{id}' (try 1, 2b, 15, 16, 17, 18, 19, 20, dyn, overlap, \
-             wire, failures, all)"
+             wire, failures, paper, all)"
         ));
     }
     Ok(selected
@@ -788,6 +863,51 @@ mod tests {
     }
 
     #[test]
+    fn paper_table_shape() {
+        // Laxer target + smaller budget than the committed BENCH_paper
+        // run, same harness: the *shape* claims must already hold.
+        let t = fig_paper_at(None, 0.32, 600);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 13, "header + 3 settings x 4 algos:\n{csv}");
+        let cell = |setting: &str, algo: &str, idx: usize| -> String {
+            csv.lines()
+                .find(|l| l.starts_with(&format!("{setting},{algo},")))
+                .unwrap_or_else(|| panic!("missing row {setting}/{algo}:\n{csv}"))
+                .split(',')
+                .nth(idx)
+                .unwrap()
+                .to_string()
+        };
+        // time-to-loss, tolerating the `>` target-miss marker
+        let ttl = |setting: &str, algo: &str| -> f64 {
+            cell(setting, algo, 2).trim_start_matches('>').parse().unwrap()
+        };
+        // speedups are normalized to the homogeneous PS run
+        assert_eq!(cell("homo", "parameter-server", 3), "1.00", "{csv}");
+        // homogeneous: Ripples beats the PS baseline outright (Fig. 17)
+        assert!(
+            ttl("homo", "ripples-smart") < ttl("homo", "parameter-server"),
+            "{csv}"
+        );
+        // the headline claim (Fig. 19): under a straggler, Ripples
+        // reaches the target before both baselines
+        assert!(
+            ttl("hetero-5x", "ripples-smart") < ttl("hetero-5x", "ad-psgd"),
+            "{csv}"
+        );
+        assert!(
+            ttl("hetero-5x", "ripples-smart") < ttl("hetero-5x", "parameter-server"),
+            "{csv}"
+        );
+        // a 16x link throttle can only slow the barrier algorithms down
+        assert!(ttl("hetero-bw16x", "all-reduce") >= ttl("homo", "all-reduce"), "{csv}");
+        assert!(
+            ttl("hetero-bw16x", "parameter-server") >= ttl("homo", "parameter-server"),
+            "{csv}"
+        );
+    }
+
+    #[test]
     fn json_entry_wraps_table() {
         let mut t = Table::new(&["a"]);
         t.row(vec!["1".into()]);
@@ -798,5 +918,56 @@ mod tests {
             parsed.get("table").unwrap().get("rows").unwrap().as_arr().unwrap().len(),
             1
         );
+    }
+
+    #[test]
+    fn committed_paper_table_artifact_is_well_formed() {
+        // The checked-in `results/BENCH_paper.json` (refreshed by
+        // `make paper`) must stay parseable and keep the full
+        // 3-settings x 4-algorithms sweep with the PS-homo anchor row.
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results/BENCH_paper.json");
+        let json = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("committed artifact {} unreadable: {e}", path.display()));
+        let parsed = crate::util::json::parse(&json).unwrap();
+        assert_eq!(parsed.get("figure").unwrap().as_str(), Some("paper"));
+        let table = parsed.get("table").unwrap();
+        let header: Vec<_> = table
+            .get("header")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(
+            header,
+            ["setting", "algorithm", "time-to-loss(s)", "speedup vs ps-homo", "paper shape"]
+        );
+        let rows = table.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 12, "3 settings x 4 algorithms");
+        for setting in ["homo", "hetero-5x", "hetero-bw16x"] {
+            for kind in [
+                AlgoKind::ParameterServer,
+                AlgoKind::AllReduce,
+                AlgoKind::AdPsgd,
+                AlgoKind::RipplesSmart,
+            ] {
+                let row = rows
+                    .iter()
+                    .map(|r| r.as_arr().unwrap())
+                    .find(|r| r[0].as_str() == Some(setting) && r[1].as_str() == Some(kind.name()))
+                    .unwrap_or_else(|| panic!("missing row {setting}/{}", kind.name()));
+                let speedup: f64 = row[3].as_str().unwrap().parse().unwrap();
+                assert!(speedup > 0.0, "{setting}/{}: bad speedup", kind.name());
+            }
+        }
+        // the speedup column is anchored at the homogeneous PS run
+        let anchor = rows
+            .iter()
+            .map(|r| r.as_arr().unwrap())
+            .find(|r| r[0].as_str() == Some("homo") && r[1].as_str() == Some("parameter-server"))
+            .unwrap();
+        assert_eq!(anchor[3].as_str(), Some("1.00"));
     }
 }

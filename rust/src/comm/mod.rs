@@ -104,16 +104,67 @@ impl CostModel {
     /// per-sync software overhead (lock + graph dispatch), which is what
     /// makes AD-PSGD sync-dominated in Fig. 2(b).
     pub fn pairwise_avg(&self, a: usize, b: usize, bytes: usize, overhead: f64) -> f64 {
-        2.0 * self.p2p(a, b, bytes) + overhead
+        self.pairwise_avg_throttled(a, b, bytes, overhead, 1.0)
+    }
+
+    /// [`CostModel::pairwise_avg`] with a link throttle: `bw_divisor`
+    /// divides the pair's effective bandwidth (an exchange runs at the
+    /// slower endpoint's link, so callers pass the max of both workers'
+    /// divisors; values below 1 count as 1.0). At 1.0 this is
+    /// arithmetically identical to the unthrottled cost.
+    pub fn pairwise_avg_throttled(
+        &self,
+        a: usize,
+        b: usize,
+        bytes: usize,
+        overhead: f64,
+        bw_divisor: f64,
+    ) -> f64 {
+        let d = bw_divisor.max(1.0);
+        let xfer = if a == b {
+            0.0
+        } else if self.node_of(a) == self.node_of(b) {
+            self.intra_lat + bytes as f64 * d / self.intra_bw
+        } else {
+            self.inter_lat + bytes as f64 * d / self.inter_bw
+        };
+        2.0 * xfer + overhead
     }
 
     /// One synchronous PS round for `n` workers: all gradients funnel into
     /// the server link (serialized), then the model fans back out.
     pub fn ps_round(&self, n: usize, bytes: usize) -> f64 {
-        // Server sits on node 0; remote workers share the inter-node pipe.
-        let t_in = n as f64 * bytes as f64 / self.inter_bw + self.inter_lat;
-        let t_out = n as f64 * bytes as f64 / self.inter_bw + self.inter_lat;
-        t_in + t_out
+        self.ps_round_sharded(n, bytes, 1, &[])
+    }
+
+    /// [`CostModel::ps_round`] generalized to a key-range-sharded server
+    /// and per-worker link throttles (the real PS baseline's cost shape).
+    ///
+    /// With `k` shards the push and pull phases pipeline: a worker pulls
+    /// shard `s` while pushing `s+1`, so the two serialized phases
+    /// overlap everywhere except the first push and last pull — total
+    /// `(1 + 1/k)` of the one-way serialized load instead of `2`.
+    /// Each extra shard adds a per-phase latency term. `bw_divisor[w]`
+    /// scales worker `w`'s transfer as in
+    /// [`CostModel::ring_allreduce_throttled`] (missing entries and
+    /// values below 1 count as full speed). With `k = 1` and no
+    /// throttles this is arithmetically identical to the classic
+    /// two-phase round: every worker's unit factor is exactly 1.0, the
+    /// load term sums to `n · bytes / inter_bw`, and `(1 + 1/1) = 2`.
+    pub fn ps_round_sharded(
+        &self,
+        n: usize,
+        bytes: usize,
+        k: usize,
+        bw_divisor: &[f64],
+    ) -> f64 {
+        let k = k.max(1) as f64;
+        let div = |w: usize| bw_divisor.get(w).copied().unwrap_or(1.0).max(1.0);
+        // Server sits on node 0; remote workers share the inter-node pipe,
+        // each worker's serialized slice stretched by its link throttle.
+        let units: f64 = (0..n).map(div).sum();
+        let load = units * bytes as f64 / self.inter_bw;
+        (1.0 + 1.0 / k) * load + 2.0 * k * self.inter_lat
     }
 
     /// GG request/notify round trip (small control messages only).
@@ -245,6 +296,59 @@ mod tests {
         let t0 = m.pairwise_avg(0, 4, 1 << 20, 0.0);
         let t1 = m.pairwise_avg(0, 4, 1 << 20, 0.5);
         assert!((t1 - t0 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pairwise_throttle_is_identity_at_full_speed_and_grows() {
+        let m = cm();
+        let bytes = 9 << 20;
+        let base = m.pairwise_avg(0, 4, bytes, 0.25);
+        // 1.0 (and sub-1.0) divisors are bit-identical to the plain cost
+        assert_eq!(m.pairwise_avg_throttled(0, 4, bytes, 0.25, 1.0), base);
+        assert_eq!(m.pairwise_avg_throttled(0, 4, bytes, 0.25, 0.5), base);
+        // a throttled endpoint stretches the transfer term only
+        let fast = m.pairwise_avg_throttled(0, 4, bytes, 0.0, 1.0);
+        let slow = m.pairwise_avg_throttled(0, 4, bytes, 0.0, 8.0);
+        assert!(slow > fast * 2.0, "{slow} vs {fast}");
+        assert_eq!(m.pairwise_avg_throttled(3, 3, bytes, 0.25, 8.0), 0.25);
+    }
+
+    #[test]
+    fn ps_round_sharded_reduces_to_the_classic_round() {
+        let m = cm();
+        let bytes = 9 << 20;
+        for n in [1usize, 4, 16] {
+            // k = 1, no throttles: bit-identical to the two-phase cost
+            assert_eq!(m.ps_round_sharded(n, bytes, 1, &[]), m.ps_round(n, bytes));
+            let ones = vec![1.0; n];
+            assert_eq!(m.ps_round_sharded(n, bytes, 1, &ones), m.ps_round(n, bytes));
+        }
+    }
+
+    #[test]
+    fn ps_sharding_pipelines_push_and_pull() {
+        // At VGG-scale transfers the (1 + 1/k) pipelining beats the extra
+        // per-shard latency, and more shards keep helping monotonically.
+        let m = cm();
+        let bytes = 9 << 20;
+        let k1 = m.ps_round_sharded(16, bytes, 1, &[]);
+        let k4 = m.ps_round_sharded(16, bytes, 4, &[]);
+        let k8 = m.ps_round_sharded(16, bytes, 8, &[]);
+        assert!(k4 < k1, "{k4} vs {k1}");
+        assert!(k8 < k4, "{k8} vs {k4}");
+    }
+
+    #[test]
+    fn ps_round_scales_with_throttled_workers() {
+        let m = cm();
+        let bytes = 9 << 20;
+        let base = m.ps_round_sharded(16, bytes, 4, &[]);
+        let mut div = vec![1.0; 16];
+        div[7] = 16.0;
+        let slow = m.ps_round_sharded(16, bytes, 4, &div);
+        // one 16x-throttled worker adds 15 extra serialized units on the
+        // shared server pipe: the round must get strictly slower
+        assert!(slow > base, "{slow} vs {base}");
     }
 
     #[test]

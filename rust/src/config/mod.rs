@@ -177,6 +177,10 @@ pub struct AlgoConfig {
     /// AD-PSGD communication graph: ring neighbors only if true, else any
     /// opposite-set worker (bipartite sets are always enforced).
     pub adpsgd_ring_only: bool,
+    /// Parameter-server key-range shard count (`comm::CostModel::
+    /// ps_round_sharded`; the real PS baseline's `--ps-shards`). The
+    /// default 1 keeps the classic two-phase PS round bit-identical.
+    pub ps_shards: usize,
 }
 
 impl Default for AlgoConfig {
@@ -187,6 +191,7 @@ impl Default for AlgoConfig {
             c_thres: 8,
             section_len: 1,
             adpsgd_ring_only: false,
+            ps_shards: 1,
         }
     }
 }
@@ -204,6 +209,9 @@ impl AlgoConfig {
         }
         if self.section_len == 0 {
             return Err("section_len must be >= 1".into());
+        }
+        if self.ps_shards == 0 {
+            return Err("ps_shards must be >= 1".into());
         }
         Ok(())
     }
@@ -385,6 +393,7 @@ impl Experiment {
             ("algo", "adpsgd_ring_only") => {
                 self.algo.adpsgd_ring_only = v.as_bool().ok_or_else(bad)?
             }
+            ("algo", "ps_shards") => self.algo.ps_shards = v.as_usize().ok_or_else(bad)?,
             ("train", "lr") => self.train.lr = v.as_f64().ok_or_else(bad)? as f32,
             ("train", "max_iters") => self.train.max_iters = v.as_usize().ok_or_else(bad)?,
             ("train", "loss_target") => {
@@ -526,6 +535,15 @@ mod tests {
     #[test]
     fn config_file_unknown_key_rejected() {
         assert!(Experiment::from_str_cfg("[algo]\nwat = 1\n").is_err());
+    }
+
+    #[test]
+    fn ps_shards_config_roundtrip_and_validation() {
+        let e = Experiment::from_str_cfg("[algo]\nps_shards = 4\n").unwrap();
+        assert_eq!(e.algo.ps_shards, 4);
+        // default 1 = the classic unsharded PS round
+        assert_eq!(Experiment::default().algo.ps_shards, 1);
+        assert!(Experiment::from_str_cfg("[algo]\nps_shards = 0\n").is_err());
     }
 
     #[test]

@@ -56,12 +56,13 @@ USAGE:
                 [--overlap-shards K] [--max-staleness S]
                 [--wire fp32|fp16|q8]
                 [--iters N] [--target LOSS] [--trace FILE.csv]
-  ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|wire|failures|all>
+  ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|wire|failures|paper|all>
               [--csv DIR] [--json DIR]
   ripples gg-serve [--addr HOST:PORT] [--workers N] [--wpn K]
                    [--mode random|smart] [--group-size G]
                    [--liveness-ms MS]
   ripples launch [--workers N] [--slow W:FACTOR] [--secs S] [--iters N]
+                 [--algo ripples|allreduce|adpsgd|ps] [--ps-shards K]
                  [--slow-schedule W,F@ITER[;W,F@ITER...]]
                  [--group-size G] [--mode random|smart] [--c-thres C]
                  [--wpn K] [--seed S] [--lr LR] [--batch B] [--bias P]
@@ -72,6 +73,8 @@ USAGE:
                  [--ckpt-every N] [--ckpt-dir DIR]
                  [--kill R@SECS] [--rejoin-after SECS]
   ripples worker --rank R --workers N --gg HOST:PORT
+                 [--algo ripples|allreduce|adpsgd|ps]
+                 [--ps HOST:PORT] [--ps-shards K]
                  [--listen HOST:PORT] [--peers a0,a1,...] [--secs S]
                  [--iters N] [--slowdown F] [--slow-schedule F@ITER[,...]]
                  [--seed S] [--lr LR] [--batch B] [--bias P]
@@ -105,7 +108,13 @@ ring peers unwind (poison frames) and retry repaired; `launch --kill
 R@SECS` SIGKILLs a worker mid-run, `--rejoin-after SECS` spawns a
 replacement that restores the freshest `--ckpt-dir` checkpoint and
 rejoins (`fig failures` measures crash-free vs crash-with-repair vs
-crash-no-repair; sim crashes via `train --crash`). `fig --json DIR`
+crash-no-repair; sim crashes via `train --crash`). `launch --algo`
+swaps the data plane for a comparison baseline on the same TCP mesh:
+`allreduce` rings the whole cluster every iteration, `adpsgd` does
+randomized pairwise atomic averaging (actives initiate, passives
+serve), `ps` runs workers against a launcher-hosted sharded parameter
+server (`--ps-shards`); `fig paper` races all four to a common target
+loss (the paper-table speedup comparison). `fig --json DIR`
 writes each figure as machine-readable `DIR/BENCH_<id>.json` (the
 `make bench-json` perf trajectory).
 ";
@@ -311,6 +320,11 @@ fn cmd_launch(args: &[String]) -> Result<(), String> {
         ..LaunchConfig::default()
     };
     cfg.workers = parse_or(&flags, "workers", cfg.workers)?;
+    if let Some(algo) = get_flag(&flags, "algo") {
+        cfg.algo =
+            AlgoKind::parse(algo).ok_or_else(|| format!("unknown algorithm '{algo}'"))?;
+    }
+    cfg.ps_shards = parse_or(&flags, "ps-shards", cfg.ps_shards)?;
     if let Some(slow) = get_flag(&flags, "slow") {
         cfg.slow = Some(parse_slow(slow)?);
     }
@@ -393,6 +407,14 @@ fn cmd_worker(args: &[String]) -> Result<(), String> {
             .parse()
             .map_err(|e| format!("bad --workers: {e}"))?,
         gg_addr: get_flag(&flags, "gg").ok_or("worker needs --gg")?.to_string(),
+        algo: match get_flag(&flags, "algo") {
+            Some(a) => {
+                AlgoKind::parse(a).ok_or_else(|| format!("unknown algorithm '{a}'"))?
+            }
+            None => defaults.algo,
+        },
+        ps_addr: get_flag(&flags, "ps").map(String::from),
+        ps_shards: parse_or(&flags, "ps-shards", defaults.ps_shards)?,
         secs: parse_or(&flags, "secs", defaults.secs)?,
         max_iters: parse_or(&flags, "iters", defaults.max_iters)?,
         slowdown: parse_or(&flags, "slowdown", defaults.slowdown)?,

@@ -1,0 +1,382 @@
+//! AD-PSGD baseline over the TCP mesh (arXiv 1710.06952).
+//!
+//! Randomized pairwise *atomic* model averaging: each iteration an
+//! **active** worker takes one SGD step, picks a uniformly random
+//! **passive** partner, ships its whole model, and receives the pairwise
+//! mean back; the passive averages the push into its own model under a
+//! lock and keeps training between serves. The active/passive split is
+//! the paper's deadlock-avoidance ordering: actives only *initiate*
+//! exchanges and passives only *serve* them, so the wait-for graph is
+//! bipartite and acyclic — two actives can never hold each other's
+//! models hostage (AD-PSGD §3.2; DESIGN.md §Baselines).
+//!
+//! Wire protocol per exchange, on the existing directional mesh edges
+//! (`net::frame` framing, `--wire` codec respected):
+//!
+//! * active → passive: `Chunk { gid: xid, step: 0, data: model }` on the
+//!   active's outbound edge (xid = the active's exchange counter, so gid
+//!   tags stay monotone per edge);
+//! * passive → active: `Chunk { gid: xid, step: 1, data: mean }` on the
+//!   passive's outbound edge back to the active.
+//!
+//! Atomicity: the passive holds its model mutex across the average, and
+//! its local SGD steps take the same mutex, so a serve never interleaves
+//! with a half-applied gradient. The active applies the returned mean as
+//! its new model — under a lossless codec both sides hold the identical
+//! mean, so the global weight *sum* is preserved exactly (the property
+//! `prop_net.rs` pins on [`pairwise_average`]).
+//!
+//! Termination: every process runs the same timed window; passives keep
+//! serving for a short grace period past their own window so an active's
+//! final exchange still gets its reply, then everyone retires from the
+//! GG (registration/heartbeat ride the same control plane as Ripples).
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::model::mlp::{loss_only, MlpScratch, MlpSpec};
+use crate::model::Dataset;
+use crate::rpc::GgClient;
+use crate::util::rng::Pcg32;
+
+use super::frame::{read_frame_counted, write_chunk_coded};
+use super::mesh::WorkerMesh;
+use super::worker::{Heartbeat, SgdDriver, WorkerParams, WorkerReport};
+
+/// How long a passive keeps serving exchanges after its own timed window
+/// closes: an active whose window ends slightly later must still get the
+/// reply to its final push.
+const SERVE_GRACE: Duration = Duration::from_secs(2);
+
+/// Polling granularity of the passive serve loop (read timeout between
+/// frames; also the stop-flag check period).
+const SERVE_POLL: Duration = Duration::from_millis(100);
+
+/// In-place pairwise mean: both buffers end up holding `(a + b) / 2`
+/// elementwise — the atomic averaging step both AD-PSGD sides apply.
+/// `a[i] + b[i]` computed once and halved means the *sum* `a[i] + b[i]`
+/// is exactly preserved in f32 (multiplying by 0.5 is exact).
+pub fn pairwise_average(a: &mut [f32], b: &mut [f32]) {
+    assert_eq!(a.len(), b.len(), "pairwise_average length mismatch");
+    for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+        let m = (*x + *y) * 0.5;
+        *x = m;
+        *y = m;
+    }
+}
+
+/// The passive ranks (odd) an active may draw as exchange partners.
+pub fn passive_ranks(n_workers: usize) -> Vec<usize> {
+    (0..n_workers).filter(|w| w % 2 == 1).collect()
+}
+
+/// Serve one active's exchange stream until EOF/error or `stop`:
+/// read a push, average it into the shared model under the lock, reply
+/// with the mean. Returns the number of exchanges served.
+fn serve_active(
+    mesh: &WorkerMesh,
+    model: &Mutex<Vec<f32>>,
+    stop: &AtomicBool,
+    active: usize,
+    io_timeout: Duration,
+) -> Result<u64> {
+    // Wait (politely, stop-aware) for the active's first push to dial us.
+    let mut inbound = None;
+    while !stop.load(Ordering::Relaxed) {
+        if let Some(s) = mesh.inbound_stream(active, SERVE_POLL)? {
+            inbound = Some(s);
+            break;
+        }
+    }
+    let Some(mut inbound) = inbound else { return Ok(0) };
+    inbound.set_read_timeout(Some(SERVE_POLL)).ok();
+    let mut reply: Option<TcpStream> = None;
+    let mut serves = 0u64;
+    let mut data: Vec<f32> = Vec::new();
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let frame = match read_frame_counted(&mut inbound) {
+            Ok((frame, nbytes)) => {
+                mesh.add_bytes_recv(nbytes as u64);
+                frame
+            }
+            Err(e) => {
+                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                });
+                if timed_out && !stop.load(Ordering::Relaxed) {
+                    continue; // idle between pushes; keep serving
+                }
+                break; // stop requested, or the active went away (EOF)
+            }
+        };
+        let Some((xid, step)) = frame.chunk_tag() else { break };
+        if step != 0 || !frame.take_chunk_data(&mut data) {
+            break; // protocol violation; drop the edge
+        }
+        {
+            let mut m = model.lock().unwrap();
+            if m.len() != data.len() {
+                bail!(
+                    "adpsgd push from rank {active} has {} weights, model has {}",
+                    data.len(),
+                    m.len()
+                );
+            }
+            // atomic averaging: `data` holds the mean afterwards too
+            pairwise_average(&mut m, &mut data);
+        }
+        if reply.is_none() {
+            reply = mesh.outbound_stream(active, io_timeout)?;
+        }
+        let Some(out) = reply.as_mut() else { break };
+        match write_chunk_coded(out, mesh.wire, xid, 1, &data, &mut buf) {
+            Ok(n) => mesh.add_bytes_sent(n as u64),
+            Err(_) => break, // active gone mid-reply
+        }
+        serves += 1;
+    }
+    Ok(serves)
+}
+
+/// Run the AD-PSGD training loop over an already-bound mesh and a
+/// connected GG client (registration, liveness heartbeat, and retirement
+/// use the same control plane as the Ripples loop; the GG schedules no
+/// groups because this worker never `Sync`s).
+pub fn run_adpsgd(
+    p: &WorkerParams,
+    mesh: &WorkerMesh,
+    gg: &mut GgClient,
+) -> Result<WorkerReport> {
+    if p.n_workers < 2 {
+        bail!("adpsgd needs at least 2 workers (one active, one passive)");
+    }
+    let spec = if p.tiny { MlpSpec::tiny() } else { MlpSpec::default_paper() };
+    // Same seeds as the Ripples worker: shared dataset, identical init.
+    let ds = Dataset::gaussian_mixture(
+        spec.in_dim,
+        spec.classes,
+        p.dataset_size,
+        p.seed ^ 0xDA7A,
+    );
+    let class_index = ds.class_index();
+    let (ex, ey) = ds.eval_set(p.eval_size);
+    let mut flat = spec.init(p.seed ^ 1);
+
+    gg.register(p.rank, &mesh.local_addr().to_string())?;
+    let _beacon = Heartbeat::spawn(&p.gg_addr, p.rank, p.heartbeat_ms, p.io_timeout());
+
+    let loss_first = loss_only(&spec, &flat, &ex, &ey);
+    let mut drv = SgdDriver {
+        p,
+        spec: &spec,
+        ds: &ds,
+        class_index: &class_index,
+        scratch: MlpScratch::new(),
+        iters: 0,
+        ewma_secs: 0.0,
+    };
+
+    let mut preduces = 0u64;
+    let mut sync_blocked = 0.0f64;
+    let start = Instant::now();
+    let timed = if p.rank % 2 == 0 {
+        // ---- active: step, pick a random passive, exchange.
+        let passives = passive_ranks(p.n_workers);
+        let mut rng = Pcg32::new(p.seed ^ 0xADB5 ^ ((p.rank as u64) << 17));
+        let mut replies: HashMap<usize, TcpStream> = HashMap::new();
+        let mut buf: Vec<u8> = Vec::new();
+        let mut mean: Vec<f32> = Vec::new();
+        'outer: while start.elapsed().as_secs_f64() < p.secs && drv.iters < p.max_iters {
+            drv.step(&mut flat);
+            let partner = passives[rng.gen_range(passives.len())];
+            let t0 = Instant::now();
+            let xid = preduces + 1; // monotone gid per edge (global counter)
+            let Some(mut push) = mesh.outbound_stream(partner, p.io_timeout())? else {
+                break; // partner never answered: window is over for us
+            };
+            match write_chunk_coded(&mut push, mesh.wire, xid, 0, &flat, &mut buf) {
+                Ok(n) => mesh.add_bytes_sent(n as u64),
+                Err(_) => break,
+            }
+            if !replies.contains_key(&partner) {
+                match mesh.inbound_stream(partner, p.io_timeout())? {
+                    Some(s) => {
+                        // bounded patience per reply: a wedged passive
+                        // must surface here, not hang the worker
+                        s.set_read_timeout(Some(SERVE_GRACE.max(Duration::from_secs(10))))
+                            .ok();
+                        replies.insert(partner, s);
+                    }
+                    None => break,
+                }
+            }
+            let reply = replies.get_mut(&partner).expect("inserted above");
+            loop {
+                let frame = match read_frame_counted(reply) {
+                    Ok((frame, nbytes)) => {
+                        mesh.add_bytes_recv(nbytes as u64);
+                        frame
+                    }
+                    Err(_) => break 'outer, // passive retired/crashed
+                };
+                match frame.chunk_tag() {
+                    Some((gid, 1)) if gid == xid => {
+                        if !frame.take_chunk_data(&mut mean) {
+                            break 'outer;
+                        }
+                        break;
+                    }
+                    Some((gid, _)) if gid < xid => continue, // stale reply
+                    _ => break 'outer,
+                }
+            }
+            if mean.len() != flat.len() {
+                break;
+            }
+            flat.copy_from_slice(&mean);
+            preduces += 1;
+            sync_blocked += t0.elapsed().as_secs_f64();
+        }
+        start.elapsed().as_secs_f64()
+    } else {
+        // ---- passive: train under the model lock, serve every active
+        // from a dedicated thread (streams are per-edge, so serves to
+        // different actives only contend on the model mutex).
+        let actives: Vec<usize> = (0..p.n_workers).filter(|w| w % 2 == 0).collect();
+        let model = Mutex::new(std::mem::take(&mut flat));
+        let stop = AtomicBool::new(false);
+        let served = AtomicU64::new(0);
+        let io = p.io_timeout();
+        thread::scope(|scope| -> Result<()> {
+            let handles: Vec<_> = actives
+                .iter()
+                .map(|&a| {
+                    let (model, stop, served) = (&model, &stop, &served);
+                    scope.spawn(move || -> Result<()> {
+                        let n = serve_active(mesh, model, stop, a, io)?;
+                        served.fetch_add(n, Ordering::Relaxed);
+                        Ok(())
+                    })
+                })
+                .collect();
+            while start.elapsed().as_secs_f64() < p.secs && drv.iters < p.max_iters {
+                {
+                    let mut m = model.lock().unwrap();
+                    drv.step(&mut m);
+                }
+                // `std::sync::Mutex` is unfair: the floor sleep runs
+                // *inside* `step`, under the lock, and this loop would
+                // re-acquire within nanoseconds — parked serve threads
+                // could starve for the whole window. A short unlocked
+                // pause hands every waiting serve the mutex between
+                // steps, at a few percent of a floored step's cost.
+                thread::sleep(Duration::from_micros(200));
+            }
+            // serve out the grace window, then release the serve threads
+            thread::sleep(SERVE_GRACE);
+            stop.store(true, Ordering::Relaxed);
+            for h in handles {
+                h.join().expect("adpsgd serve thread panicked")?;
+            }
+            Ok(())
+        })?;
+        preduces = served.load(Ordering::Relaxed);
+        flat = model.into_inner().unwrap();
+        // the timed window excludes the serve grace
+        start.elapsed().as_secs_f64() - SERVE_GRACE.as_secs_f64()
+    };
+
+    gg.retire(p.rank)?;
+    let loss_last = loss_only(&spec, &flat, &ex, &ey);
+    Ok(WorkerReport {
+        rank: p.rank,
+        iters: drv.iters,
+        preduces,
+        loss_first,
+        loss_last,
+        secs: timed,
+        ewma_secs: drv.ewma_secs,
+        stale_steps: 0,
+        sync_blocked_secs: sync_blocked,
+        aborts: 0,
+        bytes_tx: mesh.bytes_sent(),
+        bytes_rx: mesh.bytes_recv(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairwise_average_sets_both_sides_to_the_mean() {
+        let mut a = vec![1.0f32, -2.0, 0.5];
+        let mut b = vec![3.0f32, 2.0, 0.5];
+        pairwise_average(&mut a, &mut b);
+        assert_eq!(a, vec![2.0, 0.0, 0.5]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn passive_ranks_are_the_odd_ranks() {
+        assert_eq!(passive_ranks(1), Vec::<usize>::new());
+        assert_eq!(passive_ranks(2), vec![1]);
+        assert_eq!(passive_ranks(5), vec![1, 3]);
+        assert_eq!(passive_ranks(8), vec![1, 3, 5, 7]);
+    }
+
+    /// Two meshes, one in-process exchange: the active pushes, the serve
+    /// loop averages + replies, both end at the identical mean.
+    #[test]
+    fn one_exchange_over_tcp_agrees_on_the_mean() {
+        let meshes: Vec<WorkerMesh> =
+            [0usize, 1].iter().map(|&r| WorkerMesh::bind(r, "127.0.0.1:0").unwrap()).collect();
+        let addrs: Vec<std::net::SocketAddr> =
+            meshes.iter().map(|m| m.local_addr()).collect();
+        for m in &meshes {
+            m.set_peers(addrs.clone());
+        }
+        let io = Duration::from_secs(10);
+        let model = Mutex::new(vec![2.0f32; 32]);
+        let stop = AtomicBool::new(false);
+        let served = thread::scope(|scope| {
+            let m1 = &meshes[1];
+            let (model, stop) = (&model, &stop);
+            let server = scope.spawn(move || serve_active(m1, model, stop, 0, io));
+            // active side: push xid 1, read the reply
+            let m0 = &meshes[0];
+            let mut push = m0.outbound_stream(1, io).unwrap().unwrap();
+            let mut buf = Vec::new();
+            let flat = vec![4.0f32; 32];
+            write_chunk_coded(
+                &mut push,
+                crate::collectives::codec::WireCodec::Fp32,
+                1,
+                0,
+                &flat,
+                &mut buf,
+            )
+            .unwrap();
+            let mut reply = m0.inbound_stream(1, io).unwrap().unwrap();
+            let (frame, _) = read_frame_counted(&mut reply).unwrap();
+            assert_eq!(frame.chunk_tag(), Some((1, 1)));
+            let mut mean = Vec::new();
+            assert!(frame.take_chunk_data(&mut mean));
+            assert_eq!(mean, vec![3.0f32; 32]);
+            stop.store(true, Ordering::Relaxed);
+            server.join().unwrap().unwrap()
+        });
+        assert_eq!(served, 1);
+        assert_eq!(*model.lock().unwrap(), vec![3.0f32; 32]);
+    }
+}

@@ -26,10 +26,12 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::SlowdownEvent;
 use crate::collectives::codec::WireCodec;
 use crate::collectives::pipeline::OverlapConfig;
+use crate::config::AlgoKind;
 use crate::gg::GgConfig;
 use crate::metrics::{speed_table, worker_table, WorkerStat};
 use crate::rpc::{GgClient, GgServer, LivenessConfig, StatsReport};
 
+use super::ps::PsServer;
 use super::worker::{format_worker_schedule, WorkerReport};
 
 /// Chaos orchestration: kill one worker mid-run, optionally spawn a
@@ -52,6 +54,13 @@ pub struct LaunchConfig {
     /// Path to the `ripples` binary to spawn workers from.
     pub bin: PathBuf,
     pub workers: usize,
+    /// Data-plane algorithm (`--algo ripples|allreduce|adpsgd|ps`):
+    /// GG-scheduled P-Reduce groups (the default), a full-cluster ring
+    /// every iteration, randomized pairwise atomic averaging, or a
+    /// sharded parameter server hosted by the launcher.
+    pub algo: AlgoKind,
+    /// Key-range shards for `--algo ps` (forwarded as `--ps-shards`).
+    pub ps_shards: usize,
     /// `(worker, factor)`: that worker's compute takes `factor`x as long.
     pub slow: Option<(usize, f64)>,
     /// Mid-run speed changes (`--slow-schedule W,F@ITER[;...]`): worker
@@ -107,6 +116,8 @@ impl Default for LaunchConfig {
         Self {
             bin: std::env::current_exe().unwrap_or_else(|_| PathBuf::from("ripples")),
             workers: 4,
+            algo: AlgoKind::RipplesSmart,
+            ps_shards: 4,
             slow: None,
             slow_schedule: Vec::new(),
             secs: 5.0,
@@ -202,8 +213,20 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
     if cfg.workers < 2 {
         bail!("launch needs at least 2 workers");
     }
-    if cfg.group_size < 2 || cfg.group_size > cfg.workers {
+    if matches!(cfg.algo, AlgoKind::DPsgd) {
+        bail!("--algo d-psgd is simulator-only (use `ripples sim`)");
+    }
+    // Group size only parameterizes the Ripples schedulers; All-Reduce is
+    // a full-cluster ring and AD-PSGD / PS ignore the GG's group machinery.
+    let ripples = matches!(
+        cfg.algo,
+        AlgoKind::RipplesSmart | AlgoKind::RipplesStatic | AlgoKind::RipplesRandom
+    );
+    if ripples && (cfg.group_size < 2 || cfg.group_size > cfg.workers) {
         bail!("group size {} out of range for {} workers", cfg.group_size, cfg.workers);
+    }
+    if cfg.ps_shards == 0 {
+        bail!("ps-shards must be >= 1");
     }
     if let Some((w, f)) = cfg.slow {
         if w >= cfg.workers {
@@ -242,10 +265,18 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
     // otherwise two conflicting groups deadlock waiting on each other
     // (same constraint as `runtime::threaded`, which only offers
     // SmartGg/Static). The event simulator runs without `rendezvous`.
-    let mut gg_cfg = if cfg.smart {
-        GgConfig::smart(cfg.workers, cfg.workers_per_node, cfg.group_size, cfg.c_thres)
+    // All-Reduce is "one group = the whole cluster, every iteration";
+    // AD-PSGD and PS only use the GG for registration/liveness, so any
+    // valid group size will do.
+    let (group_size, smart) = match cfg.algo {
+        AlgoKind::AllReduce => (cfg.workers, false),
+        AlgoKind::AdPsgd | AlgoKind::ParameterServer => (2, false),
+        _ => (cfg.group_size, cfg.smart),
+    };
+    let mut gg_cfg = if smart {
+        GgConfig::smart(cfg.workers, cfg.workers_per_node, group_size, cfg.c_thres)
     } else {
-        let mut c = GgConfig::random(cfg.workers, cfg.workers_per_node, cfg.group_size);
+        let mut c = GgConfig::random(cfg.workers, cfg.workers_per_node, group_size);
         c.use_group_buffer = true;
         c
     };
@@ -256,10 +287,23 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
         .context("spawn GG")?;
     let gg_addr = server.addr.to_string();
 
+    // For --algo ps the launcher also hosts the sharded parameter server,
+    // speaking the same wire codec as the workers.
+    let ps_server = if matches!(cfg.algo, AlgoKind::ParameterServer) {
+        let io = Duration::from_secs_f64((cfg.secs * 4.0).max(60.0));
+        Some(
+            PsServer::spawn("127.0.0.1:0", cfg.workers, cfg.ps_shards, cfg.wire, io)
+                .context("spawn parameter server")?,
+        )
+    } else {
+        None
+    };
+    let ps_addr = ps_server.as_ref().map(|s| s.addr().to_string());
+
     // Any failure below must not leak worker processes: they would keep
     // training (and holding sockets) for the rest of their timed window.
     let mut children: Vec<WorkerProc> = Vec::new();
-    let result = run_cluster(cfg, &gg_addr, &mut children);
+    let result = run_cluster(cfg, &gg_addr, ps_addr.as_deref(), &mut children);
     if result.is_err() {
         for wp in &mut children {
             let _ = wp.child.kill();
@@ -272,6 +316,11 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
     let gg_stats = stats_client.stats()?;
     drop(stats_client);
     server.shutdown();
+    if let Some(ps) = ps_server {
+        // all workers reported, so the server loop has drained; surface
+        // any protocol error it hit
+        let _rounds = ps.join().context("parameter server")?;
+    }
     // Ground truth per worker: the final scheduled factor, else static
     // (same resolution rule as the worker loop, evaluated at iter = MAX).
     let true_factors = (0..cfg.workers)
@@ -308,7 +357,13 @@ struct WorkerProc {
 }
 
 /// Shared argv for an original worker or a rejoining replacement.
-fn worker_command(cfg: &LaunchConfig, gg_addr: &str, rank: usize, secs: f64) -> Command {
+fn worker_command(
+    cfg: &LaunchConfig,
+    gg_addr: &str,
+    ps_addr: Option<&str>,
+    rank: usize,
+    secs: f64,
+) -> Command {
     let slowdown = match cfg.slow {
         Some((w, f)) if w == rank => f,
         _ => 1.0,
@@ -337,7 +392,11 @@ fn worker_command(cfg: &LaunchConfig, gg_addr: &str, rank: usize, secs: f64) -> 
         .args(["--max-staleness", &cfg.overlap.max_staleness.to_string()])
         .args(["--wire", cfg.wire.name()])
         .args(["--heartbeat-ms", &cfg.heartbeat_ms.to_string()])
+        .args(["--algo", cfg.algo.name()])
         .stdout(Stdio::piped());
+    if let Some(ps) = ps_addr {
+        cmd.args(["--ps", ps]).args(["--ps-shards", &cfg.ps_shards.to_string()]);
+    }
     if cfg.max_iters > 0 {
         cmd.args(["--iters", &cfg.max_iters.to_string()]);
     }
@@ -360,12 +419,13 @@ fn worker_command(cfg: &LaunchConfig, gg_addr: &str, rank: usize, secs: f64) -> 
 fn run_cluster(
     cfg: &LaunchConfig,
     gg_addr: &str,
+    ps_addr: Option<&str>,
     children: &mut Vec<WorkerProc>,
 ) -> Result<(Vec<WorkerReport>, Option<StatsReport>)> {
     // ---- phase 1: spawn everyone, collect advertised data-plane addrs
     let mut addrs: Vec<String> = Vec::new();
     for rank in 0..cfg.workers {
-        let mut cmd = worker_command(cfg, gg_addr, rank, cfg.secs);
+        let mut cmd = worker_command(cfg, gg_addr, ps_addr, rank, cfg.secs);
         cmd.stdin(Stdio::piped());
         let mut child = cmd
             .spawn()
@@ -418,7 +478,7 @@ fn run_cluster(
             std::thread::sleep(Duration::from_secs_f64(rejoin_after));
             let remaining =
                 (cfg.secs - training_started.elapsed().as_secs_f64()).max(1.0);
-            let mut cmd = worker_command(cfg, gg_addr, kill.rank, remaining);
+            let mut cmd = worker_command(cfg, gg_addr, ps_addr, kill.rank, remaining);
             // explicit peer list: no launcher handshake the second time
             // (the replacement registers its fresh address with the GG,
             // which survivors re-resolve via Lookup)

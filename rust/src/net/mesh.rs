@@ -161,6 +161,20 @@ impl WorkerMesh {
         self.bytes.recv.load(Ordering::Relaxed)
     }
 
+    /// Fold externally-framed traffic into the mesh byte meter. The
+    /// AD-PSGD exchange path writes frames on raw cloned streams (no
+    /// [`TcpRingTransport`] in the loop), so it meters itself through
+    /// these hooks to keep the worker REPORT's `tx=`/`rx=` comparable
+    /// across algorithms.
+    pub fn add_bytes_sent(&self, n: u64) {
+        self.bytes.sent.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// See [`WorkerMesh::add_bytes_sent`].
+    pub fn add_bytes_recv(&self, n: u64) {
+        self.bytes.recv.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Install the rank-indexed peer address list (index = worker rank).
     pub fn set_peers(&self, peers: Vec<SocketAddr>) {
         *self.peers.lock().unwrap() = peers;
@@ -257,6 +271,21 @@ impl WorkerMesh {
                 .map_err(|_| anyhow!("poisoned inbound mesh"))?;
             conns = guard;
         }
+    }
+
+    /// Dial (or reuse) the raw outbound stream to `peer`, waiting up to
+    /// `wait` for a refused dial to start answering. `Ok(None)` = no
+    /// answer in time. Used by the AD-PSGD pairwise exchange, which
+    /// frames its own traffic instead of going through a ring transport.
+    pub fn outbound_stream(&self, peer: usize, wait: Duration) -> Result<Option<TcpStream>> {
+        self.outbound_within(peer as u32, Instant::now() + wait)
+    }
+
+    /// Wait up to `wait` for the raw inbound stream registered from
+    /// `peer` (clone carries the mesh `io_timeout` as read timeout).
+    /// `Ok(None)` = nothing registered in time.
+    pub fn inbound_stream(&self, peer: usize, wait: Duration) -> Result<Option<TcpStream>> {
+        self.inbound_within(peer as u32, Instant::now() + wait)
     }
 
     /// Build the ring transport for this worker's position in `members`

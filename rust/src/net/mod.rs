@@ -11,7 +11,10 @@
 //! * [`worker`] — the per-process training loop (pure-Rust MLP +
 //!   GG-scheduled ring collectives) behind `ripples worker`;
 //! * [`launch`] — the localhost cluster orchestrator behind
-//!   `ripples launch`.
+//!   `ripples launch`;
+//! * [`adpsgd`] / [`ps`] — the paper's comparison baselines on the same
+//!   stack (`--algo adpsgd|ps`): randomized pairwise atomic averaging
+//!   and a sharded BSP parameter server (DESIGN.md §Baselines).
 //!
 //! The same `collectives::ring` schedule the thread runtime executes over
 //! mpsc channels runs here over sockets — one implementation of the
@@ -61,16 +64,20 @@
 //! assert!((r.ewma_secs - 0.0245).abs() < 1e-9);
 //! ```
 
+pub mod adpsgd;
 pub mod ckpt;
 pub mod frame;
 pub mod launch;
 pub mod mesh;
+pub mod ps;
 pub mod worker;
 
+pub use adpsgd::{pairwise_average, run_adpsgd};
 pub use ckpt::Checkpoint;
 pub use frame::Frame;
 pub use launch::{launch_local, KillSpec, LaunchConfig, LaunchReport};
 pub use mesh::{TcpRingTransport, WorkerMesh};
+pub use ps::{run_ps_worker, PsServer};
 pub use worker::{
     format_worker_schedule, parse_worker_schedule, run_worker, worker_main, WorkerParams,
     WorkerReport,

@@ -1,0 +1,384 @@
+//! Parameter-server baseline over TCP (DESIGN.md §Baselines).
+//!
+//! One server process owns the authoritative model, partitioned into
+//! `--ps-shards` contiguous key ranges (`collectives::pipeline::
+//! shard_bounds` — the exact partition `prop_net.rs` pins: disjoint,
+//! covering, balanced within one element). Every round, each worker
+//! takes one local SGD step, *pushes* its full model as `k` shard frames
+//! (`Chunk { gid: round, step: shard }`, `--wire` codec respected), then
+//! *pulls* the `k` averaged shards back. The server reads every worker's
+//! pushes in rank order, averages per shard, and broadcasts the mean —
+//! a classic BSP parameter server.
+//!
+//! Model averaging here is mathematically the gradient push/pull PS at
+//! one local step per round: with `w_i = w_prev - lr * g_i`,
+//! `mean_i(w_i) = w_prev - lr * mean_i(g_i)` — shipping weights instead
+//! of gradients is the same server update without a second weight
+//! broadcast format.
+//!
+//! Deadlock freedom is by phase ordering, not locks: workers write all
+//! `k` pushes before reading anything; the server reads *all* `n·k`
+//! pushes before writing anything. The cyclic wait a pull-before-push
+//! scheme could build is structurally impossible.
+//!
+//! Termination: the first worker whose timed window closes sends
+//! `Poison`; the server, on reading it (or any EOF), best-effort poisons
+//! every connection and exits, which unblocks workers mid-pull. The
+//! server is GG-free — PS workers never touch the control plane.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::collectives::codec::WireCodec;
+use crate::collectives::pipeline::shard_bounds;
+use crate::model::mlp::{loss_only, MlpScratch, MlpSpec};
+use crate::model::Dataset;
+
+use super::frame::{read_frame, read_frame_counted, write_chunk_coded, write_frame, Frame};
+use super::worker::{SgdDriver, WorkerParams, WorkerReport};
+
+/// The sharded parameter server: one background thread, `n` worker
+/// connections, BSP rounds until the first `Poison`/EOF.
+pub struct PsServer {
+    addr: SocketAddr,
+    handle: Option<thread::JoinHandle<Result<u64>>>,
+}
+
+impl PsServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"`) and serve `n_workers`
+    /// connections with `shards` key ranges, replying in `wire` codec.
+    /// `io` bounds every socket wait (accept phase included).
+    pub fn spawn(
+        listen: &str,
+        n_workers: usize,
+        shards: usize,
+        wire: WireCodec,
+        io: Duration,
+    ) -> Result<Self> {
+        if n_workers == 0 {
+            bail!("ps server needs at least one worker");
+        }
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("bind parameter server on {listen}"))?;
+        let addr = listener.local_addr()?;
+        let shards = shards.max(1);
+        let handle =
+            thread::spawn(move || serve(listener, n_workers, shards, wire, io));
+        Ok(Self { addr, handle: Some(handle) })
+    }
+
+    /// The bound server address to hand workers as `--ps`.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait for the server to finish; returns the number of completed
+    /// BSP rounds.
+    pub fn join(mut self) -> Result<u64> {
+        match self.handle.take() {
+            Some(h) => h.join().map_err(|_| anyhow::anyhow!("ps server panicked"))?,
+            None => Ok(0),
+        }
+    }
+}
+
+impl Drop for PsServer {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve(
+    listener: TcpListener,
+    n: usize,
+    k: usize,
+    wire: WireCodec,
+    io: Duration,
+) -> Result<u64> {
+    // ---- accept phase: one connection per rank, identified by Hello.
+    listener.set_nonblocking(true).ok();
+    let deadline = Instant::now() + io.max(Duration::from_secs(60));
+    let mut pending: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    let mut got = 0usize;
+    while got < n {
+        match listener.accept() {
+            Ok((mut s, _)) => {
+                s.set_nonblocking(false).ok();
+                s.set_nodelay(true).ok();
+                // bounded wait for the hello preamble
+                s.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                match read_frame(&mut s) {
+                    Ok(Frame::Hello { rank })
+                        if (rank as usize) < n && pending[rank as usize].is_none() =>
+                    {
+                        s.set_read_timeout(Some(io)).ok();
+                        s.set_write_timeout(Some(io)).ok();
+                        pending[rank as usize] = Some(s);
+                        got += 1;
+                    }
+                    _ => drop(s), // not a worker; ignore
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!("ps server: only {got}/{n} workers connected in time");
+                }
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e).context("ps server accept"),
+        }
+    }
+    let mut conns: Vec<TcpStream> =
+        pending.into_iter().map(|c| c.expect("accept loop filled every slot")).collect();
+
+    // ---- BSP rounds: read n·k pushes (rank order), average, broadcast.
+    let mut acc: Vec<Vec<f32>> = vec![Vec::new(); k];
+    let mut data: Vec<f32> = Vec::new();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut rounds = 0u64;
+    'rounds: loop {
+        let gid = rounds + 1;
+        let mut first = true;
+        for c in conns.iter_mut() {
+            for (s, a) in acc.iter_mut().enumerate() {
+                let frame = match read_frame_counted(c) {
+                    Ok((frame, _)) => frame,
+                    Err(_) => break 'rounds, // EOF/timeout: a worker left
+                };
+                match frame.chunk_tag() {
+                    Some((g, st)) if g == gid && st == s as u32 => {}
+                    // Poison (a worker's window closed) or protocol skew:
+                    // the round cannot complete — shut the server down.
+                    _ => break 'rounds,
+                }
+                if !frame.take_chunk_data(&mut data) {
+                    break 'rounds;
+                }
+                if first {
+                    a.clear();
+                    a.extend_from_slice(&data);
+                } else {
+                    if a.len() != data.len() {
+                        break 'rounds; // workers disagree on the model
+                    }
+                    for (x, y) in a.iter_mut().zip(&data) {
+                        *x += *y;
+                    }
+                }
+            }
+            first = false;
+        }
+        let inv = 1.0 / n as f32;
+        for a in acc.iter_mut() {
+            for x in a.iter_mut() {
+                *x *= inv;
+            }
+        }
+        for c in conns.iter_mut() {
+            for (s, a) in acc.iter().enumerate() {
+                if write_chunk_coded(c, wire, gid, s as u32, a, &mut buf).is_err() {
+                    break 'rounds;
+                }
+            }
+        }
+        rounds += 1;
+    }
+    // best-effort: unblock everyone still waiting on pulls
+    for c in conns.iter_mut() {
+        let _ = write_frame(c, &Frame::Poison { gid: rounds + 1 });
+    }
+    Ok(rounds)
+}
+
+/// The PS worker loop: local SGD step, push `k` shards, pull `k` means.
+/// Speaks only to the server — no GG, no mesh traffic.
+pub fn run_ps_worker(p: &WorkerParams) -> Result<WorkerReport> {
+    let addr = p
+        .ps_addr
+        .as_deref()
+        .context("--algo ps needs a parameter-server address (--ps)")?;
+    let spec = if p.tiny { MlpSpec::tiny() } else { MlpSpec::default_paper() };
+    // Same seeds as every other worker loop: shared dataset, shared init.
+    let ds = Dataset::gaussian_mixture(
+        spec.in_dim,
+        spec.classes,
+        p.dataset_size,
+        p.seed ^ 0xDA7A,
+    );
+    let class_index = ds.class_index();
+    let (ex, ey) = ds.eval_set(p.eval_size);
+    let mut flat = spec.init(p.seed ^ 1);
+    let n = flat.len();
+    let k = p.ps_shards.max(1);
+
+    let mut conn = TcpStream::connect(addr)
+        .with_context(|| format!("connect to parameter server at {addr}"))?;
+    conn.set_nodelay(true).ok();
+    let io = p.io_timeout();
+    conn.set_read_timeout(Some(io)).ok();
+    conn.set_write_timeout(Some(io)).ok();
+    write_frame(&mut conn, &Frame::Hello { rank: p.rank as u32 })?;
+
+    let loss_first = loss_only(&spec, &flat, &ex, &ey);
+    let mut drv = SgdDriver {
+        p,
+        spec: &spec,
+        ds: &ds,
+        class_index: &class_index,
+        scratch: MlpScratch::new(),
+        iters: 0,
+        ewma_secs: 0.0,
+    };
+
+    let mut rounds = 0u64;
+    let mut tx = 0u64;
+    let mut rx = 0u64;
+    let mut sync_blocked = 0.0f64;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut data: Vec<f32> = Vec::new();
+    let start = Instant::now();
+    'outer: while start.elapsed().as_secs_f64() < p.secs && drv.iters < p.max_iters {
+        drv.step(&mut flat);
+        let gid = rounds + 1;
+        let t0 = Instant::now();
+        // push phase: all k shards before reading anything (see module
+        // docs — this ordering is the deadlock-freedom argument)
+        for s in 0..k {
+            let (lo, hi) = shard_bounds(n, k, s);
+            match write_chunk_coded(&mut conn, p.wire, gid, s as u32, &flat[lo..hi], &mut buf)
+            {
+                Ok(nb) => tx += nb as u64,
+                Err(_) => break 'outer, // server gone
+            }
+        }
+        // pull phase: the k averaged shards, in shard order
+        for s in 0..k {
+            let (lo, hi) = shard_bounds(n, k, s);
+            let frame = match read_frame_counted(&mut conn) {
+                Ok((frame, nb)) => {
+                    rx += nb as u64;
+                    frame
+                }
+                Err(_) => break 'outer,
+            };
+            match frame.chunk_tag() {
+                Some((g, st)) if g == gid && st == s as u32 => {}
+                // Poison: some worker's window closed and the server shut
+                // the round down — our push of this round is simply lost.
+                _ => break 'outer,
+            }
+            if !frame.take_chunk_data(&mut data) || data.len() != hi - lo {
+                break 'outer;
+            }
+            flat[lo..hi].copy_from_slice(&data);
+        }
+        rounds += 1;
+        sync_blocked += t0.elapsed().as_secs_f64();
+    }
+    let timed = start.elapsed().as_secs_f64();
+    // tell the server we are done; it poisons everyone else
+    let _ = write_frame(&mut conn, &Frame::Poison { gid: rounds + 1 });
+
+    let loss_last = loss_only(&spec, &flat, &ex, &ey);
+    Ok(WorkerReport {
+        rank: p.rank,
+        iters: drv.iters,
+        preduces: rounds,
+        loss_first,
+        loss_last,
+        secs: timed,
+        ewma_secs: drv.ewma_secs,
+        stale_steps: 0,
+        sync_blocked_secs: sync_blocked,
+        aborts: 0,
+        bytes_tx: tx,
+        bytes_rx: rx,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two in-process PS workers against a live server: both run the
+    /// same number of rounds and end on the identical averaged model.
+    #[test]
+    fn two_workers_converge_to_identical_models() {
+        let server = PsServer::spawn(
+            "127.0.0.1:0",
+            2,
+            3,
+            WireCodec::Fp32,
+            Duration::from_secs(20),
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let mk = |rank: usize| WorkerParams {
+            rank,
+            n_workers: 2,
+            secs: 30.0, // bounded by max_iters, not wall clock
+            max_iters: 4,
+            compute_floor: Duration::ZERO,
+            ps_addr: Some(addr.clone()),
+            ps_shards: 3,
+            ..WorkerParams::default()
+        };
+        let (r0, r1) = thread::scope(|scope| {
+            let h0 = scope.spawn(|| run_ps_worker(&mk(0)).unwrap());
+            let h1 = scope.spawn(|| run_ps_worker(&mk(1)).unwrap());
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        assert_eq!(r0.iters, 4);
+        assert_eq!(r1.iters, 4);
+        assert_eq!(r0.preduces, 4, "every step must complete its round");
+        assert_eq!(r1.preduces, 4);
+        // both ended on the same pulled mean, so eval losses agree exactly
+        assert_eq!(r0.loss_last, r1.loss_last);
+        assert!(r0.bytes_tx > 0 && r0.bytes_rx > 0);
+        // the server saw exactly the workers' rounds
+        assert_eq!(server.join().unwrap(), 4);
+    }
+
+    #[test]
+    fn server_round_trips_the_mean_for_one_raw_client() {
+        let server = PsServer::spawn(
+            "127.0.0.1:0",
+            1,
+            2,
+            WireCodec::Fp32,
+            Duration::from_secs(20),
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        write_frame(&mut conn, &Frame::Hello { rank: 0 }).unwrap();
+        let model = vec![2.0f32; 7]; // n=1: the "mean" is the push itself
+        let mut buf = Vec::new();
+        for s in 0..2u32 {
+            let (lo, hi) = shard_bounds(model.len(), 2, s as usize);
+            write_chunk_coded(&mut conn, WireCodec::Fp32, 1, s, &model[lo..hi], &mut buf)
+                .unwrap();
+        }
+        let mut pulled = Vec::new();
+        for s in 0..2u32 {
+            let (frame, _) = read_frame_counted(&mut conn).unwrap();
+            assert_eq!(frame.chunk_tag(), Some((1, s)));
+            let mut shard = Vec::new();
+            assert!(frame.take_chunk_data(&mut shard));
+            pulled.extend_from_slice(&shard);
+        }
+        assert_eq!(pulled, model);
+        write_frame(&mut conn, &Frame::Poison { gid: 2 }).unwrap();
+        assert_eq!(server.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn ps_worker_requires_an_address() {
+        let p = WorkerParams { ps_addr: None, ..WorkerParams::default() };
+        assert!(run_ps_worker(&p).is_err());
+    }
+}

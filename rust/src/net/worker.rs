@@ -61,6 +61,7 @@ use crate::collectives::codec::WireCodec;
 use crate::collectives::pipeline::{
     reconcile_shard, ring_allreduce_sharded, shard_bounds, OverlapConfig,
 };
+use crate::config::AlgoKind;
 use crate::model::mlp::{loss_only, sgd_step, MlpScratch, MlpSpec};
 use crate::model::Dataset;
 use crate::rpc::{GgClient, GroupState, WaitOutcome};
@@ -124,6 +125,16 @@ pub struct WorkerParams {
     /// This process replaces a crashed rank: restore the freshest
     /// checkpoint in `ckpt_dir` and `Rejoin` instead of `Register`.
     pub rejoin: bool,
+    /// Which data-plane algorithm this worker runs (`--algo`):
+    /// GG-scheduled Ripples/all-reduce (the default), AD-PSGD pairwise
+    /// averaging, or the parameter-server client loop.
+    pub algo: AlgoKind,
+    /// Parameter-server address (`--ps`); required when
+    /// `algo == ParameterServer`, ignored otherwise.
+    pub ps_addr: Option<String>,
+    /// Key-range shard count for PS push/pull framing (`--ps-shards`);
+    /// every worker and the server must agree.
+    pub ps_shards: usize,
 }
 
 impl Default for WorkerParams {
@@ -151,6 +162,9 @@ impl Default for WorkerParams {
             ckpt_every: 0,
             ckpt_dir: None,
             rejoin: false,
+            algo: AlgoKind::RipplesSmart,
+            ps_addr: None,
+            ps_shards: 4,
         }
     }
 }
@@ -310,20 +324,20 @@ impl WorkerReport {
 /// The per-step training state shared by the main loop and the overlap
 /// engine's stale steps: one call = one timed SGD step (batch draw,
 /// update, heterogeneity sleep, EWMA fold) on whatever buffer is passed.
-struct SgdDriver<'a> {
-    p: &'a WorkerParams,
-    spec: &'a MlpSpec,
-    ds: &'a Dataset,
-    class_index: &'a [Vec<usize>],
-    scratch: MlpScratch,
+pub(crate) struct SgdDriver<'a> {
+    pub(crate) p: &'a WorkerParams,
+    pub(crate) spec: &'a MlpSpec,
+    pub(crate) ds: &'a Dataset,
+    pub(crate) class_index: &'a [Vec<usize>],
+    pub(crate) scratch: MlpScratch,
     /// Local iteration count (drives batch tags and the slow schedule).
-    iters: u64,
+    pub(crate) iters: u64,
     /// Measured step-duration EWMA, piggybacked on every Sync.
-    ewma_secs: f64,
+    pub(crate) ewma_secs: f64,
 }
 
 impl SgdDriver<'_> {
-    fn step(&mut self, flat: &mut [f32]) {
+    pub(crate) fn step(&mut self, flat: &mut [f32]) {
         let step_start = Instant::now();
         let tag = self
             .p
@@ -363,14 +377,14 @@ enum GroupOutcome {
 /// Liveness beacon: a background thread proving this rank alive to the
 /// GG on its own connection, so a worker blocked inside a long
 /// collective is not mistaken for a crash. Joined on drop.
-struct Heartbeat {
+pub(crate) struct Heartbeat {
     stop: Arc<AtomicBool>,
     handle: Option<thread::JoinHandle<()>>,
 }
 
 impl Heartbeat {
     /// No-op guard when `period_ms == 0` or the GG is unreachable.
-    fn spawn(addr: &str, rank: usize, period_ms: u64, io: Duration) -> Self {
+    pub(crate) fn spawn(addr: &str, rank: usize, period_ms: u64, io: Duration) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         if period_ms == 0 {
             return Self { stop, handle: None };
@@ -826,10 +840,24 @@ pub fn worker_main(
         bail!("expected {} peer addresses, got {}", p.n_workers, peers.len());
     }
     mesh.set_peers(peers);
-    let mut gg = GgClient::connect(&p.gg_addr)
-        .with_context(|| format!("connect to GG at {}", p.gg_addr))?;
-    gg.set_io_timeout(io_timeout)?;
-    let report = run_worker(p, &mesh, &mut gg)?;
+    let report = match p.algo {
+        // The PS client speaks only to the server process — no GG, no
+        // mesh traffic (the mesh stays bound so the launcher handshake
+        // is identical across algorithms).
+        AlgoKind::ParameterServer => super::ps::run_ps_worker(p)?,
+        AlgoKind::AdPsgd => {
+            let mut gg = GgClient::connect(&p.gg_addr)
+                .with_context(|| format!("connect to GG at {}", p.gg_addr))?;
+            gg.set_io_timeout(io_timeout)?;
+            super::adpsgd::run_adpsgd(p, &mesh, &mut gg)?
+        }
+        _ => {
+            let mut gg = GgClient::connect(&p.gg_addr)
+                .with_context(|| format!("connect to GG at {}", p.gg_addr))?;
+            gg.set_io_timeout(io_timeout)?;
+            run_worker(p, &mesh, &mut gg)?
+        }
+    };
     println!("{}", report.to_line());
     std::io::stdout().flush().ok();
     Ok(report)

@@ -107,7 +107,19 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
                         conflicts += 1;
                     }
                     let start = now.max(free_at);
-                    let dur = cost.pairwise_avg(w, p, bytes, calibration::ADPSGD_SYNC_OVERHEAD);
+                    // A bandwidth throttle on either endpoint slows the
+                    // whole exchange (the pair moves at the slower link).
+                    let hetero = &exp.cluster.hetero;
+                    let bw = hetero
+                        .bandwidth_factor_at(w, iters[w])
+                        .max(hetero.bandwidth_factor_at(p, iters[p]));
+                    let dur = cost.pairwise_avg_throttled(
+                        w,
+                        p,
+                        bytes,
+                        calibration::ADPSGD_SYNC_OVERHEAD,
+                        bw,
+                    );
                     let done = start + dur;
                     sync_free[w] = done;
                     sync_free[p] = done;
@@ -235,5 +247,46 @@ mod tests {
         let b = run(&p);
         assert_eq!(a.final_time, b.final_time);
         assert_eq!(a.conflicts, b.conflicts);
+    }
+
+    #[test]
+    fn deterministic_under_bandwidth_throttle() {
+        // Pins the AD-PSGD hetero-bandwidth rows of BENCH_paper.json:
+        // two fresh invocations must agree bit-for-bit.
+        use crate::cluster::BandwidthEvent;
+        let mut p = params();
+        p.exp.cluster.hetero.bandwidth =
+            vec![BandwidthEvent { worker: 1, factor: 16.0, start_iter: 0 }];
+        let a = run(&p);
+        let b = run(&p);
+        assert_eq!(a.final_time, b.final_time);
+        assert_eq!(a.sync_time, b.sync_time);
+        assert_eq!(a.conflicts, b.conflicts);
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (ta, tb) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(ta.loss.to_bits(), tb.loss.to_bits());
+            assert_eq!(ta.time, tb.time);
+        }
+    }
+
+    #[test]
+    fn bandwidth_throttle_slows_adpsgd() {
+        // Throttling every link by 1000x makes each pairwise exchange
+        // several seconds longer; whatever partner sequence the shared
+        // rng produces, the run cannot finish faster than the
+        // full-bandwidth one.
+        use crate::cluster::BandwidthEvent;
+        let base = run(&params());
+        let mut p = params();
+        p.exp.cluster.hetero.bandwidth = (0..p.exp.cluster.n_workers())
+            .map(|w| BandwidthEvent { worker: w, factor: 1000.0, start_iter: 0 })
+            .collect();
+        let slow = run(&p);
+        assert!(
+            slow.final_time > base.final_time,
+            "{} vs {}",
+            slow.final_time,
+            base.final_time
+        );
     }
 }

@@ -43,17 +43,29 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
     let mut sync_total = 0.0f64;
     let all: Vec<usize> = (0..n).collect();
 
-    let sync_cost = |k: AlgoKind| -> f64 {
+    let hetero = &exp.cluster.hetero;
+    let ps_shards = exp.algo.ps_shards.max(1);
+    // Per-iteration sync cost: bandwidth throttles (`cluster::
+    // BandwidthEvent`) reshape the collective exactly as in the Ripples
+    // engine, so heterogeneous-bandwidth comparisons (`fig paper`) are
+    // apples-to-apples. With no events every divisor is 1.0 and the
+    // throttled costs are bit-identical to the classic ones.
+    let sync_cost = |k: AlgoKind, iter: u64| -> f64 {
+        let div: Vec<f64> = (0..n).map(|w| hetero.bandwidth_factor_at(w, iter)).collect();
         match k {
             AlgoKind::AllReduce => {
-                cost.ring_allreduce(&all, bytes) + calibration::ALLREDUCE_OVERHEAD
+                cost.ring_allreduce_throttled(&all, bytes, &div)
+                    + calibration::ALLREDUCE_OVERHEAD
             }
             AlgoKind::ParameterServer => {
-                cost.ps_round(n, bytes) + calibration::PS_OVERHEAD
+                cost.ps_round_sharded(n, bytes, ps_shards, &div) + calibration::PS_OVERHEAD
             }
             AlgoKind::DPsgd => {
-                // two neighbor exchanges, worst-case inter-node
-                2.0 * cost.p2p(0, n / 2, bytes) + calibration::PREDUCE_OVERHEAD
+                // two neighbor exchanges, worst-case inter-node, at the
+                // cluster's slowest link
+                let worst = div.iter().cloned().fold(1.0, f64::max);
+                cost.pairwise_avg_throttled(0, n / 2, bytes, 0.0, worst)
+                    + calibration::PREDUCE_OVERHEAD
             }
             _ => unreachable!("rounds engine got {k:?}"),
         }
@@ -76,7 +88,7 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
         match kind {
             AlgoKind::AllReduce | AlgoKind::ParameterServer => {
                 let barrier = finish.iter().cloned().fold(0.0, f64::max);
-                let s = if do_sync { sync_cost(kind) } else { 0.0 };
+                let s = if do_sync { sync_cost(kind, iter) } else { 0.0 };
                 if do_sync {
                     st.global_average();
                 }
@@ -100,7 +112,7 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
                                 (snapshot[l][i] + snapshot[w][i] + snapshot[r][i]) / 3.0;
                         }
                     }
-                    let s = sync_cost(kind);
+                    let s = sync_cost(kind, iter);
                     let mut t_next = vec![0.0f64; n];
                     for w in 0..n {
                         let l = (w + n - 1) % n;
@@ -214,6 +226,58 @@ mod tests {
         // D-PSGD's fast workers keep running ahead of the slow one's
         // neighborhood, so it finishes the same #iters sooner.
         assert!(d.final_time < a.final_time, "{} vs {}", d.final_time, a.final_time);
+    }
+
+    #[test]
+    fn ps_rounds_are_deterministic() {
+        // Same idiom as the crash-schedule determinism test: two fresh
+        // invocations must agree bit-for-bit — this is what pins the PS
+        // rows of BENCH_paper.json to their committed values.
+        let p = params(AlgoKind::ParameterServer);
+        let a = run(&p);
+        let b = run(&p);
+        assert_eq!(a.final_time, b.final_time);
+        assert_eq!(a.total_iters, b.total_iters);
+        assert_eq!(a.sync_time, b.sync_time);
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (ta, tb) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(ta.loss, tb.loss);
+            assert_eq!(ta.time, tb.time);
+        }
+    }
+
+    #[test]
+    fn ps_sharding_cuts_the_sync_bill() {
+        let p1 = params(AlgoKind::ParameterServer);
+        let mut p4 = p1.clone();
+        p4.exp.algo.ps_shards = 4;
+        let r1 = run(&p1);
+        let r4 = run(&p4);
+        // identical iteration schedule, strictly cheaper sync per round
+        assert_eq!(r1.total_iters, r4.total_iters);
+        assert!(r4.sync_time < r1.sync_time, "{} vs {}", r4.sync_time, r1.sync_time);
+        assert!(r4.final_time < r1.final_time, "{} vs {}", r4.final_time, r1.final_time);
+    }
+
+    #[test]
+    fn bandwidth_throttle_slows_barrier_baselines() {
+        use crate::cluster::BandwidthEvent;
+        for kind in [AlgoKind::AllReduce, AlgoKind::ParameterServer] {
+            let base = run(&params(kind));
+            let mut p = params(kind);
+            p.exp.cluster.hetero.bandwidth =
+                vec![BandwidthEvent { worker: 1, factor: 8.0, start_iter: 0 }];
+            let slow = run(&p);
+            // compute draws are untouched by bandwidth events, so the
+            // only change is a strictly larger sync term every round
+            assert_eq!(base.total_iters, slow.total_iters, "{kind:?}");
+            assert!(
+                slow.final_time > base.final_time,
+                "{kind:?}: {} vs {}",
+                slow.final_time,
+                base.final_time
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! End-to-end tests of the baseline data planes: AD-PSGD and the
+//! Parameter Server running as real worker *processes* over the same TCP
+//! mesh, launcher, and wire codecs as the Ripples collectives
+//! (`--algo adpsgd|ps`; DESIGN.md §Baselines).
+//!
+//! The calibrated four-way speedup *table* lives in the simulator
+//! (`fig paper`, pinned by `bench::figures` tests and the committed
+//! `BENCH_paper.json`); what these tests pin is the real-socket
+//! structure behind it: both baselines train end to end, the PS barrier
+//! gates every worker down to the straggler, AD-PSGD cannot steer its
+//! random pairwise syncs away from the straggler, and Ripples sustains
+//! more cluster work than the barrier baseline in the same wall-clock
+//! window.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ripples::config::AlgoKind;
+use ripples::net::{launch_local, LaunchConfig, LaunchReport};
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_ripples"))
+}
+
+/// Hard test timeout (same rationale as `e2e_net`): a protocol
+/// regression must fail the test, not hang CI.
+fn with_timeout<T, F>(secs: u64, what: &str, f: F) -> T
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .unwrap_or_else(|_| panic!("{what}: hung past the {secs}s test timeout"))
+}
+
+fn base(algo: AlgoKind) -> LaunchConfig {
+    LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        algo,
+        secs: 3.0,
+        compute_floor_ms: 8,
+        seed: 42,
+        ..LaunchConfig::default()
+    }
+}
+
+fn total_iters(r: &LaunchReport) -> u64 {
+    r.workers.iter().map(|w| w.iters).sum()
+}
+
+/// A 4-process AD-PSGD cluster (actives 0/2, passives 1/3) trains end to
+/// end: every rank's loss drops by the same tolerance the Ripples e2e
+/// uses, every rank both ships and meters model bytes, actives complete
+/// exchanges and passives serve them.
+#[test]
+fn four_process_adpsgd_cluster_converges() {
+    let report = with_timeout(120, "adpsgd cluster run", || {
+        launch_local(&base(AlgoKind::AdPsgd)).expect("adpsgd cluster run")
+    });
+    assert_eq!(report.workers.len(), 4);
+    for w in &report.workers {
+        assert!(w.iters > 0, "worker {} never trained: {w:?}", w.rank);
+        // actives count exchanges, passives count serves — with two
+        // actives pushing every iteration, both must be nonzero
+        assert!(w.preduces > 0, "worker {} never synchronized: {w:?}", w.rank);
+        assert!(w.bytes_tx > 0, "worker {} metered no tx bytes: {w:?}", w.rank);
+        assert!(w.bytes_rx > 0, "worker {} metered no rx bytes: {w:?}", w.rank);
+        assert!(
+            w.loss_last < w.loss_first * 0.85,
+            "worker {} loss did not decrease: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+    }
+}
+
+/// A 4-process Parameter Server cluster (server hosted by the launcher,
+/// 3 key-range shards) trains end to end. The BSP rounds are atomic —
+/// a worker only leaves between rounds, and the first leaver ends the
+/// server loop for everyone — so every worker reports the same number
+/// of completed rounds (within one).
+#[test]
+fn four_process_ps_cluster_converges() {
+    let cfg = LaunchConfig { ps_shards: 3, ..base(AlgoKind::ParameterServer) };
+    let report = with_timeout(120, "ps cluster run", move || {
+        launch_local(&cfg).expect("ps cluster run")
+    });
+    assert_eq!(report.workers.len(), 4);
+    for w in &report.workers {
+        assert!(w.preduces > 0, "worker {} completed no PS rounds: {w:?}", w.rank);
+        assert!(w.bytes_tx > 0, "worker {} metered no tx bytes: {w:?}", w.rank);
+        assert!(w.bytes_rx > 0, "worker {} metered no rx bytes: {w:?}", w.rank);
+        assert!(
+            w.loss_last < w.loss_first * 0.85,
+            "worker {} loss did not decrease: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+    }
+    let rounds: Vec<u64> = report.workers.iter().map(|w| w.preduces).collect();
+    let (min, max) = (
+        rounds.iter().copied().min().unwrap(),
+        rounds.iter().copied().max().unwrap(),
+    );
+    assert!(max - min <= 1, "BSP rounds diverged across workers: {rounds:?}");
+}
+
+/// The heterogeneous acceptance scenario: the same 4-process cluster with
+/// worker 1 slowed 3x, run under all three algorithms for the same
+/// wall-clock window (the paper's Fig. 1 / Fig. 19 setting on real
+/// sockets). Ripples must beat both baselines where each is structurally
+/// weak:
+///
+///  * the PS barrier gates *every* worker to the straggler's rate while
+///    Ripples's fast workers keep free-running, so Ripples completes
+///    strictly more cluster iterations in the window;
+///  * AD-PSGD's random partner choice cannot avoid the straggler: the
+///    slow passive keeps absorbing a near-uniform share of the sync
+///    traffic, and the initiating actives — blocked on a partner's
+///    in-flight step every iteration — fall well behind the free-running
+///    passive, while no fast Ripples rank is gated at all.
+#[test]
+fn heterogeneous_straggler_ripples_beats_the_baselines() {
+    let slow = Some((1usize, 3.0f64));
+    let secs = 4.0;
+    let run = |algo: AlgoKind| -> LaunchReport {
+        let cfg = LaunchConfig { slow, secs, ..base(algo) };
+        with_timeout(120, "hetero baseline run", move || {
+            launch_local(&cfg).unwrap_or_else(|e| panic!("{} cluster run: {e:#}", algo.name()))
+        })
+    };
+    let ripples = run(AlgoKind::RipplesSmart);
+    let adpsgd = run(AlgoKind::AdPsgd);
+    let ps = run(AlgoKind::ParameterServer);
+
+    // all three still train through the straggler
+    for r in [&ripples, &adpsgd, &ps] {
+        assert_eq!(r.workers.len(), 4);
+        for w in &r.workers {
+            assert!(
+                w.loss_last < w.loss_first * 0.85,
+                "worker {} loss did not decrease: {} -> {}",
+                w.rank,
+                w.loss_first,
+                w.loss_last
+            );
+        }
+    }
+
+    let iters = |r: &LaunchReport, rank: usize| r.workers[rank].iters as f64;
+    let fast_mean = |r: &LaunchReport| -> f64 {
+        let sum: f64 = r.workers.iter().filter(|w| w.rank != 1).map(|w| w.iters as f64).sum();
+        sum / 3.0
+    };
+
+    // Ripples is not gated by the straggler (same bar as e2e_net)...
+    assert!(
+        fast_mean(&ripples) > 1.3 * iters(&ripples, 1),
+        "ripples fast workers gated: fast mean {:.0} vs slow {:.0}",
+        fast_mean(&ripples),
+        iters(&ripples, 1)
+    );
+    // ...while the PS barrier locksteps everyone to the straggler's rate
+    assert!(
+        fast_mean(&ps) < 1.4 * iters(&ps, 1),
+        "PS failed to gate (not a barrier?): fast mean {:.0} vs slow {:.0}",
+        fast_mean(&ps),
+        iters(&ps, 1)
+    );
+    // net effect: strictly more cluster work for Ripples in the window
+    assert!(
+        total_iters(&ripples) > total_iters(&ps),
+        "ripples did not out-iterate the gated PS: {} vs {}",
+        total_iters(&ripples),
+        total_iters(&ps)
+    );
+
+    // AD-PSGD cannot steer around the straggler: the slow passive (rank
+    // 1) still serves a near-uniform share of the exchanges the fast
+    // passive (rank 3) gets (uniform random partner choice)...
+    assert!(
+        adpsgd.workers[1].preduces as f64 > 0.4 * adpsgd.workers[3].preduces as f64,
+        "straggler stopped being picked (filtered?): serves {} vs {}",
+        adpsgd.workers[1].preduces,
+        adpsgd.workers[3].preduces
+    );
+    // ...and its initiating actives, blocked on a partner's in-flight
+    // step (3x long half the time) every single iteration, fall well
+    // behind their own free-running fast passive — the sync tax Ripples
+    // avoids by scheduling stragglers out (no fast Ripples rank is gated,
+    // asserted above).
+    let active_max = iters(&adpsgd, 0).max(iters(&adpsgd, 2));
+    assert!(
+        iters(&adpsgd, 3) > 1.25 * active_max,
+        "adpsgd actives were not dragged by the straggler: passive {:.0} vs \
+         active max {:.0}",
+        iters(&adpsgd, 3),
+        active_max
+    );
+}

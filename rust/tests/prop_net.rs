@@ -317,3 +317,111 @@ fn prop_rpc_request_roundtrip() {
         assert_eq!(Response::decode(&resp.encode()).unwrap(), resp, "seed {seed}");
     }
 }
+
+/// The PS key-range partition (`net::ps` pushes/pulls shard `s` of `k`
+/// via `shard_bounds`) tiles the model exactly for arbitrary
+/// `(model_len, shards)`: contiguous, disjoint, covering, and balanced
+/// within one element.
+#[test]
+fn prop_ps_shard_partition_tiles_the_model() {
+    use ripples::collectives::pipeline::shard_bounds;
+    for seed in 0..SEEDS * 4 {
+        let mut rng = Pcg32::new(seed ^ 0x5A4D);
+        let n = 1 + rng.gen_range(4096);
+        let k = 1 + rng.gen_range(64); // sometimes k > n: empty shards allowed
+        let mut expect_lo = 0usize;
+        let (mut smallest, mut largest) = (usize::MAX, 0usize);
+        for s in 0..k {
+            let (lo, hi) = shard_bounds(n, k, s);
+            assert_eq!(lo, expect_lo, "seed {seed}: gap/overlap at shard {s} (n={n} k={k})");
+            assert!(hi >= lo, "seed {seed}: inverted shard {s} (n={n} k={k})");
+            smallest = smallest.min(hi - lo);
+            largest = largest.max(hi - lo);
+            expect_lo = hi;
+        }
+        assert_eq!(expect_lo, n, "seed {seed}: shards do not cover 0..{n} (k={k})");
+        assert!(
+            largest - smallest <= 1,
+            "seed {seed}: unbalanced shards (n={n} k={k}): sizes span {smallest}..{largest}"
+        );
+    }
+}
+
+/// `pairwise_average` is AD-PSGD's atomic averaging step: both sides end
+/// bit-identical, and each pair's elementwise f32 sum is preserved
+/// *exactly* — the mean is computed once from the sum and halved, and
+/// halving then re-doubling a (normal-range) f32 round-trips bit-for-bit.
+#[test]
+fn prop_pairwise_average_preserves_each_pair_sum() {
+    use ripples::net::pairwise_average;
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0xADA5);
+        let n = 1 + rng.gen_range(512);
+        let mut a: Vec<f32> = (0..n).map(|_| rng.gen_f32() * 2e3 - 1e3).collect();
+        let mut b: Vec<f32> = (0..n)
+            .map(|i| match rng.gen_range(4) {
+                0 => -a[i], // exact cancellation: the sum is a signed zero
+                1 => 0.0,
+                _ => rng.gen_f32() * 2e3 - 1e3,
+            })
+            .collect();
+        let sums: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        pairwise_average(&mut a, &mut b);
+        for i in 0..n {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "seed {seed}: sides diverge at {i}");
+            assert_eq!(
+                (a[i] + b[i]).to_bits(),
+                sums[i].to_bits(),
+                "seed {seed}: pair sum drifted at {i}: {} -> {}",
+                sums[i],
+                a[i] + b[i]
+            );
+        }
+    }
+}
+
+/// Disjoint mutable borrows of two models in the cluster.
+fn pair_mut<T>(v: &mut [Vec<T>], i: usize, j: usize) -> (&mut [T], &mut [T]) {
+    assert!(i != j);
+    let (lo, hi) = (i.min(j), i.max(j));
+    let (head, tail) = v.split_at_mut(hi);
+    if i < j {
+        (&mut head[lo], &mut tail[0])
+    } else {
+        (&mut tail[0], &mut head[lo])
+    }
+}
+
+/// A random gossip schedule of pairwise averages conserves the
+/// cluster-wide weight sum: every exchange moves mass between two models
+/// but never creates or destroys it. Each op perturbs the *exact* sum by
+/// at most the f32 rounding of one pair sum per coordinate, so the total
+/// drift is bounded far below the signal.
+#[test]
+fn prop_random_gossip_conserves_global_weight_sum() {
+    use ripples::net::pairwise_average;
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0x6055);
+        let workers = 2 + rng.gen_range(7);
+        let n = 1 + rng.gen_range(64);
+        let mut models: Vec<Vec<f32>> = (0..workers)
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 2e3 - 1e3).collect())
+            .collect();
+        let global = |ms: &[Vec<f32>]| -> f64 {
+            ms.iter().flatten().map(|&v| v as f64).sum()
+        };
+        let before = global(&models);
+        let rounds = 64;
+        for _ in 0..rounds {
+            let w = rng.gen_range(workers);
+            let p = (w + 1 + rng.gen_range(workers - 1)) % workers;
+            let (a, b) = pair_mut(&mut models, w, p);
+            pairwise_average(a, b);
+        }
+        // values stay in the initial ±1e3 hull, so |x + y| <= 2e3 and one
+        // pair-sum rounding is at most ulp(2e3)/2 ~ 6.1e-5 per coordinate
+        let bound = rounds as f64 * n as f64 * 2.5e-4;
+        let drift = (global(&models) - before).abs();
+        assert!(drift <= bound, "seed {seed}: weight sum drifted {drift} > {bound}");
+    }
+}
