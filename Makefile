@@ -5,7 +5,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test chaos e2e clippy doc fmt verify artifacts python-test bench bench-json paper clean
+.PHONY: build test chaos e2e stress clippy doc fmt verify artifacts python-test bench bench-json paper clean
 
 build:
 	$(CARGO) build --release
@@ -29,6 +29,18 @@ chaos:
 e2e:
 	$(CARGO) test -q --test e2e_net --test e2e_baselines
 
+# Concurrency stress gate: many real threads hammer one sharded Group
+# Generator (plus a 64-rank TCP e2e against the reactor) asserting the
+# paper's serialization invariants — no double grants, GB FIFO,
+# complete death purges, no leaked locks. Runs single-threaded per test
+# binary so each case owns all cores, under a hard wall-clock cap: the
+# suite's loops are bounded and its sockets carry IO timeouts, so a
+# deadlock fails the build instead of wedging it.
+stress:
+	timeout 600 $(CARGO) test -q --release --test stress_gg -- --test-threads=1
+
+verify: build test chaos e2e stress clippy doc fmt
+
 # Lint gate: clippy over every target (lib, bin, tests, benches,
 # examples) with warnings denied.
 clippy:
@@ -44,8 +56,6 @@ doc:
 # Formatting gate: the tree must be rustfmt-clean.
 fmt:
 	$(CARGO) fmt --check
-
-verify: build test chaos e2e clippy doc fmt
 
 # Lower the Layer-2/Layer-1 JAX graphs to HLO-text artifacts (needs
 # Python + JAX; content-hashed, so re-running is a no-op when the

@@ -3,6 +3,7 @@
 //!   * fused P-Reduce mean (GB/s) across group sizes and model sizes
 //!   * threaded chunked ring all-reduce
 //!   * Group Generator request/complete throughput (random vs smart)
+//!   * Group Generator RPC serving over real TCP (locked vs sharded)
 //!   * lock vector ops and static scheduler lookups
 //!
 //! Run: `cargo bench --bench bench_primitives`
@@ -188,6 +189,69 @@ fn bench_gg() {
     }
 }
 
+/// One measured run: `p` localhost TCP clients hammer a fresh GgServer
+/// with heartbeats + probes (the lock-free hot path on the sharded
+/// backend; fully serialized on the locked oracle), returning RPC round
+/// trips per second. Each client keeps one connection for the whole run
+/// (the reconnect-per-call pattern this repo used to have would dominate
+/// the measurement with handshakes).
+fn gg_rpc_throughput(p: usize, mode: ripples::rpc::GgMode, iters: usize) -> f64 {
+    use ripples::rpc::{GgClient, GgServer};
+    use std::sync::{Arc, Barrier};
+
+    let cfg = GgConfig::random(p.max(4), 4, 3);
+    let server = GgServer::spawn_with_backend("127.0.0.1:0", cfg, 11, None, mode)
+        .expect("spawn bench GG");
+    let addr = server.addr;
+    let barrier = Arc::new(Barrier::new(p + 1));
+    let handles: Vec<_> = (0..p)
+        .map(|w| {
+            let b = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut c = GgClient::connect(addr).expect("bench client");
+                c.set_io_timeout(std::time::Duration::from_secs(60)).expect("timeout");
+                b.wait();
+                for _ in 0..iters {
+                    c.heartbeat(w).expect("heartbeat");
+                    c.probe(u64::MAX).expect("probe");
+                }
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t0 = Instant::now();
+    for h in handles {
+        h.join().expect("bench rank");
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    server.shutdown();
+    (2 * p * iters) as f64 / secs
+}
+
+/// Concurrent GG RPC serving: single-lock oracle vs sharded backend over
+/// real TCP through the reactor, p in {4, 64, 256} client threads. No
+/// asserts — machine-dependent ratios are printed, not gated (the
+/// differential suites gate *correctness*; `fig scale` records the
+/// measured numbers).
+fn bench_gg_rpc() {
+    use ripples::rpc::GgMode;
+    println!("\n== Group Generator RPC serving (real TCP, reactor) ==");
+    println!(
+        "{:<10} {:>16} {:>16} {:>10}",
+        "clients", "locked rpc/s", "sharded rpc/s", "ratio"
+    );
+    for &p in &[4usize, 64, 256] {
+        // ~constant total work so the big fan-outs stay quick
+        let iters = (20_000 / p).max(20);
+        let locked = gg_rpc_throughput(p, GgMode::SingleLock, iters);
+        let sharded = gg_rpc_throughput(p, GgMode::Sharded, iters);
+        println!(
+            "{p:<10} {locked:>16.0} {sharded:>16.0} {:>9.2}x",
+            sharded / locked
+        );
+    }
+}
+
 fn bench_lockvec_and_sched() {
     println!("\n== lock vector + static scheduler micro ==");
     let mut lv = LockVector::new(1024);
@@ -227,6 +291,7 @@ fn main() {
     bench_preduce_fused();
     bench_ring();
     bench_gg();
+    bench_gg_rpc();
     bench_lockvec_and_sched();
     println!("\nbench_primitives done");
 }

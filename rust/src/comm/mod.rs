@@ -171,6 +171,22 @@ impl CostModel {
     pub fn gg_rtt(&self) -> f64 {
         self.rpc_rtt
     }
+
+    /// GG round trip under coordinator contention: `outstanding` RPCs
+    /// race for the GG while this one is in flight, each costing
+    /// `service` seconds of coordinator CPU, spread over `shards`
+    /// independently lockable shards (DESIGN.md §Scale). With
+    /// `service == 0` (the default) this is *identically* [`Self::gg_rtt`]
+    /// — the pre-scale model, bit-for-bit, which is what keeps the
+    /// determinism suite byte-stable. `div_ceil` models the residency:
+    /// a shard serves its queue serially, and this request waits behind
+    /// its share of the outstanding ones.
+    pub fn gg_rtt_contended(&self, outstanding: usize, service: f64, shards: usize) -> f64 {
+        if service <= 0.0 {
+            return self.gg_rtt();
+        }
+        self.rpc_rtt + outstanding.div_ceil(shards.max(1)) as f64 * service
+    }
 }
 
 /// Communicator cache, mirroring §6.1: NCCL communicators are expensive to
@@ -224,6 +240,33 @@ mod tests {
 
     fn cm() -> CostModel {
         CostModel::from_cluster(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn contended_gg_rtt_identity_at_zero_service() {
+        // service = 0 must be *exactly* gg_rtt, whatever the load — the
+        // determinism suite rides on this identity.
+        let m = cm();
+        for outstanding in [0, 1, 7, 1024] {
+            for shards in [1, 16] {
+                assert_eq!(m.gg_rtt_contended(outstanding, 0.0, shards), m.gg_rtt());
+            }
+        }
+    }
+
+    #[test]
+    fn contended_gg_rtt_grows_with_load_and_shrinks_with_shards() {
+        let m = cm();
+        let s = 2e-6;
+        // monotone in outstanding load
+        assert!(m.gg_rtt_contended(64, s, 1) > m.gg_rtt_contended(8, s, 1));
+        // sharding divides the queue this request waits behind
+        assert!(m.gg_rtt_contended(64, s, 16) < m.gg_rtt_contended(64, s, 1));
+        // exact shape: rtt + ceil(outstanding/shards) * service
+        assert_eq!(m.gg_rtt_contended(64, s, 16), m.gg_rtt() + 4.0 * s);
+        assert_eq!(m.gg_rtt_contended(65, s, 16), m.gg_rtt() + 5.0 * s);
+        // degenerate shard count is clamped, not a divide-by-zero
+        assert_eq!(m.gg_rtt_contended(8, s, 0), m.gg_rtt() + 8.0 * s);
     }
 
     #[test]

@@ -2,6 +2,14 @@
 //! worker is currently claimed by an armed group. Backed by a `u64` bitset
 //! — lock/try-lock over a whole group is a handful of word ops, which is
 //! what keeps the centralized GG off the critical path.
+//!
+//! Two implementations share the semantics: [`LockVector`] (plain, owned
+//! by the single-lock [`GroupGenerator`](crate::gg::GroupGenerator)) and
+//! [`AtomicLockVector`] (shared-reference, used by
+//! [`ShardedGg`](crate::gg::ShardedGg) so probes read lock bits without
+//! any lock at all).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Fixed-capacity bitset sized to the worker count.
 #[derive(Debug, Clone)]
@@ -85,6 +93,103 @@ impl LockVector {
     }
 }
 
+/// [`LockVector`] semantics over atomic words, for the sharded GG.
+///
+/// # Concurrency contract
+///
+/// *Readers* ([`AtomicLockVector::is_locked`],
+/// [`AtomicLockVector::locked_count`], [`AtomicLockVector::all_free`])
+/// are lock-free and may run from any thread at any time — they feed
+/// heuristics (idle filters, probes, stats), where a stale bit is
+/// harmless.
+///
+/// *Mutators* ([`AtomicLockVector::try_lock`],
+/// [`AtomicLockVector::release`], [`AtomicLockVector::force_release`])
+/// MUST be externally serialized — in [`ShardedGg`](crate::gg::ShardedGg)
+/// they only run under the scheduler mutex. That contract is what lets
+/// `try_lock` be a plain check-then-set (no CAS loop, no rollback): no
+/// other mutator can interleave between the all-free check and the bit
+/// stores, exactly like the `&mut self` version above.
+#[derive(Debug)]
+pub struct AtomicLockVector {
+    words: Vec<AtomicU64>,
+    n: usize,
+    locked_count: AtomicUsize,
+}
+
+impl AtomicLockVector {
+    pub fn new(n: usize) -> Self {
+        Self {
+            words: (0..n.div_ceil(64)).map(|_| AtomicU64::new(0)).collect(),
+            n,
+            locked_count: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn is_locked(&self, w: usize) -> bool {
+        debug_assert!(w < self.n);
+        self.words[w / 64].load(Ordering::Acquire) >> (w % 64) & 1 == 1
+    }
+
+    pub fn locked_count(&self) -> usize {
+        self.locked_count.load(Ordering::Acquire)
+    }
+
+    /// True if every member of `group` is free.
+    pub fn all_free(&self, group: &[usize]) -> bool {
+        group.iter().all(|&w| !self.is_locked(w))
+    }
+
+    /// Lock the whole group if every member is free; false (and nothing
+    /// changed) on any conflict. Mutator — see the serialization contract.
+    pub fn try_lock(&self, group: &[usize]) -> bool {
+        if !self.all_free(group) {
+            return false;
+        }
+        for &w in group {
+            self.words[w / 64].fetch_or(1 << (w % 64), Ordering::AcqRel);
+        }
+        self.locked_count.fetch_add(group.len(), Ordering::AcqRel);
+        true
+    }
+
+    /// Release the whole group. Panics (debug) if any bit wasn't set —
+    /// releasing an unlocked worker is a protocol bug. Mutator.
+    pub fn release(&self, group: &[usize]) {
+        for &w in group {
+            debug_assert!(self.is_locked(w), "releasing unlocked worker {w}");
+            self.words[w / 64].fetch_and(!(1 << (w % 64)), Ordering::AcqRel);
+        }
+        self.locked_count.fetch_sub(group.len(), Ordering::AcqRel);
+    }
+
+    /// Clear `w`'s bit if set, returning whether a bit was cleared (the
+    /// dead-rank guard sweep; see [`LockVector::force_release`]). Mutator.
+    pub fn force_release(&self, w: usize) -> bool {
+        if self.is_locked(w) {
+            self.words[w / 64].fetch_and(!(1 << (w % 64)), Ordering::AcqRel);
+            self.locked_count.fetch_sub(1, Ordering::AcqRel);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Indices of currently-free workers.
+    pub fn free_workers(&self) -> Vec<usize> {
+        (0..self.n).filter(|&w| !self.is_locked(w)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +252,64 @@ mod tests {
         lv.try_lock(&[1]);
         lv.release(&[1]);
         lv.release(&[1]);
+    }
+
+    #[test]
+    fn atomic_lockvec_mirrors_plain_semantics() {
+        let lv = AtomicLockVector::new(100);
+        assert!(lv.try_lock(&[0, 63, 64, 99]));
+        assert!(lv.is_locked(0) && lv.is_locked(63) && lv.is_locked(64) && lv.is_locked(99));
+        assert!(!lv.is_locked(1));
+        assert_eq!(lv.locked_count(), 4);
+        assert!(!lv.try_lock(&[64, 65]), "overlap must fail");
+        assert!(!lv.is_locked(65), "failed try_lock must not partially lock");
+        lv.release(&[0, 63, 64, 99]);
+        assert_eq!(lv.locked_count(), 0);
+        assert!(lv.all_free(&[0, 63, 64, 99]));
+        lv.try_lock(&[2, 5]);
+        assert!(lv.force_release(2));
+        assert!(!lv.force_release(2), "idempotent on a free worker");
+        assert_eq!(lv.free_workers(), (0..100).filter(|&w| w != 5).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn atomic_lockvec_readers_are_safe_under_concurrent_mutation() {
+        // Mutators serialized by a mutex (the ShardedGg contract);
+        // lock-free readers hammer from other threads — the counter and
+        // bits must stay consistent at quiescence.
+        use std::sync::{Arc, Mutex};
+        let lv = Arc::new(AtomicLockVector::new(64));
+        let gate = Arc::new(Mutex::new(()));
+        let stop = Arc::new(AtomicUsize::new(0));
+        let reader = {
+            let (lv, stop) = (lv.clone(), stop.clone());
+            std::thread::spawn(move || {
+                while stop.load(Ordering::Acquire) == 0 {
+                    let _ = lv.locked_count();
+                    let _ = lv.is_locked(7);
+                }
+            })
+        };
+        let writers: Vec<_> = (0..4u64)
+            .map(|t| {
+                let (lv, gate) = (lv.clone(), gate.clone());
+                std::thread::spawn(move || {
+                    let group = [t as usize * 2, t as usize * 2 + 1];
+                    for _ in 0..500 {
+                        let _g = gate.lock().unwrap();
+                        if lv.try_lock(&group) {
+                            lv.release(&group);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(1, Ordering::Release);
+        reader.join().unwrap();
+        assert_eq!(lv.locked_count(), 0);
+        assert!(lv.all_free(&(0..64).collect::<Vec<_>>()));
     }
 }

@@ -65,9 +65,11 @@
 //! ```
 
 pub mod lockvec;
+pub mod sharded;
 pub mod static_sched;
 
-pub use lockvec::LockVector;
+pub use lockvec::{AtomicLockVector, LockVector};
+pub use sharded::{CompleteOutcome, GroupPhase, ShardedGg};
 pub use static_sched::StaticScheduler;
 
 use crate::util::rng::Pcg32;
@@ -304,7 +306,7 @@ pub struct DeathPurge {
 /// the set exceeds this (ids are monotonic, so the most recent survive).
 /// Far above anything a bounded run creates; keeps unbounded services
 /// from leaking.
-const ABORTED_MEMORY: usize = 1 << 16;
+pub(crate) const ABORTED_MEMORY: usize = 1 << 16;
 
 /// The GG state machine.
 #[derive(Debug)]
@@ -886,7 +888,7 @@ impl GroupGenerator {
 
 /// Shuffle and partition `items` into chunks of ~`k` (last chunk absorbs
 /// the remainder if it would be a singleton).
-fn vec_partition(items: &mut Vec<usize>, k: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
+pub(crate) fn vec_partition(items: &mut Vec<usize>, k: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
     rng.shuffle(items);
     let mut out: Vec<Vec<usize>> = Vec::new();
     let mut i = 0;

@@ -1,0 +1,911 @@
+//! Scale-out Group Generator: the same state machine as
+//! [`GroupGenerator`](crate::gg::GroupGenerator), with the hot state
+//! sharded so concurrent Sync/Wait/Heartbeat RPCs stop serializing on
+//! one lock (DESIGN.md §Scale).
+//!
+//! The single-lock GG wraps *everything* — SpeedTable, Group Buffer,
+//! LockVector, group table, stats — in one `Mutex`, so at p = 400+ every
+//! heartbeat queues behind every division. [`ShardedGg`] splits that
+//! state by how it is actually accessed:
+//!
+//! * **per-rank atomic cells** — progress counters, draft counters,
+//!   speed EWMAs (f64 bits; 0 = no measurement), retired/dead flags.
+//!   Speed reports and filter reads never take a lock.
+//! * **per-rank Group Buffers** — one small mutex per rank; a buffer-hit
+//!   `Sync` (the common case under the smart GG) touches only its own
+//!   rank's buffer.
+//! * **group table + aborted-id set sharded by group id** — `Probe` and
+//!   parked `Wait`s read one shard, never the scheduler.
+//! * **an atomic LockVector** ([`lockvec::AtomicLockVector`]) — lock-free
+//!   readers; writers are serialized by the scheduler core below, so
+//!   acquire/release touches only the words covering the group's ranks.
+//! * **one small `sched` mutex** — the only serialized path: fresh
+//!   division generation (which must see a stable idle view and owns the
+//!   RNG), group creation, completion's release-then-arm sweep, and
+//!   death/abort teardown. Holding try_lock + pending-push and
+//!   release + arm-sweep under the same lock is what prevents the
+//!   lost-wakeup race (a group pends just as its blocker's completion
+//!   finishes sweeping) and the rendezvous double-draft race (two
+//!   concurrent divisions both drafting one idle rank into conflicting
+//!   fresh groups, a circular wait).
+//!
+//! Sequential equivalence: driven single-threaded with the same seed,
+//! `ShardedGg` produces *bit-identical* assignments, armed lists, and
+//! stats to `GroupGenerator` — the single-lock path stays behind a flag
+//! as the differential-testing oracle (`rust/tests/prop_gg.rs`), and the
+//! concurrent stress suite (`rust/tests/stress_gg.rs`) checks the
+//! paper's invariants under real thread interleavings.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::rng::Pcg32;
+
+use super::lockvec::AtomicLockVector;
+use super::{ewma_step, vec_partition, DeathPurge, GgConfig, GgStats, Group, GroupId};
+
+/// Group-table shard count: gid-keyed state (`groups`, `aborted`) is
+/// split `gid % GROUP_SHARDS` ways so Probe/Wait readers of different
+/// groups do not contend. Ids are assigned sequentially, so consecutive
+/// groups land on distinct shards.
+const GROUP_SHARDS: usize = 16;
+
+/// One live group's entry in the sharded table. `armed` mirrors "not in
+/// the pending queue" — kept here, under the gid shard, so state probes
+/// never need the scheduler lock.
+#[derive(Debug)]
+struct Entry {
+    members: Vec<usize>,
+    armed: bool,
+}
+
+/// The serialized scheduler core: fresh-division RNG, the FIFO pending
+/// queue, and the id allocator. Everything else is sharded around it.
+#[derive(Debug)]
+struct Sched {
+    rng: Pcg32,
+    pending: VecDeque<GroupId>,
+    next_id: GroupId,
+}
+
+/// Per-rank speed telemetry on atomic f64 bits (0 bits = no measurement;
+/// stored samples are validated `> 0.0 && finite`, whose bit patterns are
+/// never zero). Same observe/report/reference semantics as
+/// [`SpeedTable`](crate::gg::SpeedTable); concurrent `observe` folds are
+/// last-writer-wins, which is fine for a smoothed heuristic input.
+#[derive(Debug)]
+struct AtomicSpeed {
+    bits: Vec<AtomicU64>,
+    alpha: f64,
+}
+
+impl AtomicSpeed {
+    fn new(n: usize, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "bad EWMA alpha {alpha}");
+        Self { bits: (0..n).map(|_| AtomicU64::new(0)).collect(), alpha }
+    }
+
+    fn get(&self, w: usize) -> Option<f64> {
+        let b = self.bits[w].load(Ordering::Acquire);
+        if b == 0 {
+            None
+        } else {
+            Some(f64::from_bits(b))
+        }
+    }
+
+    fn observe(&self, w: usize, step_secs: f64) {
+        if !(step_secs > 0.0 && step_secs.is_finite()) {
+            return; // ignore garbage samples
+        }
+        let next = match self.get(w) {
+            Some(prev) => ewma_step(prev, step_secs, self.alpha),
+            None => step_secs,
+        };
+        self.bits[w].store(next.to_bits(), Ordering::Release);
+    }
+
+    fn report(&self, w: usize, ewma_secs: f64) {
+        if ewma_secs > 0.0 && ewma_secs.is_finite() {
+            self.bits[w].store(ewma_secs.to_bits(), Ordering::Release);
+        }
+    }
+
+    fn clear(&self, w: usize) {
+        self.bits[w].store(0, Ordering::Release);
+    }
+
+    fn reference_excluding(&self, skip: &[bool]) -> Option<f64> {
+        (0..self.bits.len())
+            .filter(|&w| !skip.get(w).copied().unwrap_or(false))
+            .filter_map(|w| self.get(w))
+            .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.min(v))))
+    }
+
+    fn snapshot(&self) -> Vec<f64> {
+        (0..self.bits.len()).map(|w| self.get(w).unwrap_or(0.0)).collect()
+    }
+}
+
+/// [`GgStats`] on atomic counters (relaxed: they are telemetry, and the
+/// scheduler-ordered ones are updated under the sched lock anyway).
+#[derive(Debug, Default)]
+struct AtomicStats {
+    requests: AtomicU64,
+    groups_created: AtomicU64,
+    conflicts: AtomicU64,
+    divisions: AtomicU64,
+    buffer_hits: AtomicU64,
+    max_pending: AtomicUsize,
+    deaths: AtomicU64,
+    groups_aborted: AtomicU64,
+    rejoins: AtomicU64,
+}
+
+impl AtomicStats {
+    fn snapshot(&self) -> GgStats {
+        GgStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            groups_created: self.groups_created.load(Ordering::Relaxed),
+            conflicts: self.conflicts.load(Ordering::Relaxed),
+            divisions: self.divisions.load(Ordering::Relaxed),
+            buffer_hits: self.buffer_hits.load(Ordering::Relaxed),
+            max_pending: self.max_pending.load(Ordering::Relaxed),
+            deaths: self.deaths.load(Ordering::Relaxed),
+            groups_aborted: self.groups_aborted.load(Ordering::Relaxed),
+            rejoins: self.rejoins.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Where a group id stands right now — the sharded analogue of the RPC
+/// layer's Pending/Armed/Done/Aborted probe, computed from one gid shard
+/// plus the aborted set (never the scheduler lock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupPhase {
+    Pending,
+    Armed,
+    Done,
+    Aborted,
+}
+
+/// What [`ShardedGg::try_complete`] found: the armed-check and the
+/// completion happen under one scheduler hold, so a concurrent Complete
+/// race cannot slip between "is it armed?" and "complete it".
+#[derive(Debug)]
+pub enum CompleteOutcome {
+    /// The group completed; these pending groups armed as a result.
+    Done(Vec<Group>),
+    /// The id is live but still pending — completing it is a protocol
+    /// error (it holds no locks to release).
+    NotArmed,
+    /// Unknown id: already completed or aborted (idempotent duplicate).
+    Unknown,
+}
+
+/// The sharded Group Generator. All methods take `&self`; see the module
+/// docs for the sharding map and the serialization contract.
+#[derive(Debug)]
+pub struct ShardedGg {
+    cfg: GgConfig,
+    locks: AtomicLockVector,
+    gb: Vec<Mutex<VecDeque<GroupId>>>,
+    groups: Vec<Mutex<HashMap<GroupId, Entry>>>,
+    aborted: Vec<Mutex<HashSet<GroupId>>>,
+    counters: Vec<AtomicU64>,
+    speed: AtomicSpeed,
+    drafts: Vec<AtomicU64>,
+    last_drafted: Vec<AtomicU64>,
+    retired: Vec<AtomicBool>,
+    dead: Vec<AtomicBool>,
+    sched: Mutex<Sched>,
+    stats: AtomicStats,
+    /// Bumped after every operation that can change a group's phase;
+    /// the RPC reactor re-evaluates parked Wait RPCs when it moves.
+    epoch: AtomicU64,
+}
+
+impl ShardedGg {
+    /// `seed` seeds the internal division RNG — drive a
+    /// [`GroupGenerator`](crate::gg::GroupGenerator) with
+    /// `Pcg32::new(seed)` for the differential oracle.
+    pub fn new(cfg: GgConfig, seed: u64) -> Self {
+        assert!(cfg.group_size >= 2 && cfg.group_size <= cfg.n_workers);
+        let n = cfg.n_workers;
+        let alpha = cfg.speed_alpha;
+        Self {
+            cfg,
+            locks: AtomicLockVector::new(n),
+            gb: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            groups: (0..GROUP_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            aborted: (0..GROUP_SHARDS).map(|_| Mutex::new(HashSet::new())).collect(),
+            counters: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            speed: AtomicSpeed::new(n, alpha),
+            drafts: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            last_drafted: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            retired: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            sched: Mutex::new(Sched {
+                rng: Pcg32::new(seed),
+                pending: VecDeque::new(),
+                next_id: 1,
+            }),
+            stats: AtomicStats::default(),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, id: GroupId) -> &Mutex<HashMap<GroupId, Entry>> {
+        &self.groups[(id % GROUP_SHARDS as u64) as usize]
+    }
+
+    #[inline]
+    fn aborted_shard(&self, id: GroupId) -> &Mutex<HashSet<GroupId>> {
+        &self.aborted[(id % GROUP_SHARDS as u64) as usize]
+    }
+
+    fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// Monotone change counter for group phases (see field docs).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    pub fn config(&self) -> &GgConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> GgStats {
+        self.stats.snapshot()
+    }
+
+    pub fn group(&self, id: GroupId) -> Option<Group> {
+        let shard = self.shard(id).lock().unwrap();
+        shard.get(&id).map(|e| Group { id, members: e.members.clone() })
+    }
+
+    pub fn counters(&self) -> Vec<u64> {
+        self.counters.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn observe_speed(&self, w: usize, step_secs: f64) {
+        self.speed.observe(w, step_secs);
+    }
+
+    pub fn report_speed(&self, w: usize, ewma_secs: f64) {
+        self.speed.report(w, ewma_secs);
+    }
+
+    /// All EWMAs, 0.0 where nothing was measured (wire-friendly; same
+    /// shape as `SpeedTable::snapshot`).
+    pub fn speed_snapshot(&self) -> Vec<f64> {
+        self.speed.snapshot()
+    }
+
+    pub fn relative_speed(&self, w: usize) -> Option<f64> {
+        let retired = self.retired_mask();
+        Some(self.speed.get(w)? / self.speed.reference_excluding(&retired)?)
+    }
+
+    pub fn drafts(&self) -> Vec<u64> {
+        self.drafts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn last_drafted(&self) -> Vec<u64> {
+        self.last_drafted.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.sched.lock().unwrap().pending.len()
+    }
+
+    pub fn live_groups(&self) -> usize {
+        self.groups.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn live_group_ids(&self) -> Vec<GroupId> {
+        self.groups
+            .iter()
+            .flat_map(|s| s.lock().unwrap().keys().copied().collect::<Vec<_>>())
+            .collect()
+    }
+
+    pub fn gb_front(&self, w: usize) -> Option<GroupId> {
+        self.gb[w].lock().unwrap().front().copied()
+    }
+
+    pub fn gb_snapshot(&self, w: usize) -> Vec<GroupId> {
+        self.gb[w].lock().unwrap().iter().copied().collect()
+    }
+
+    pub fn retire(&self, w: usize) {
+        self.retired[w].store(true, Ordering::Release);
+    }
+
+    pub fn is_retired(&self, w: usize) -> bool {
+        self.retired[w].load(Ordering::Acquire)
+    }
+
+    pub fn is_dead(&self, w: usize) -> bool {
+        self.dead[w].load(Ordering::Acquire)
+    }
+
+    pub fn was_aborted(&self, id: GroupId) -> bool {
+        self.aborted_shard(id).lock().unwrap().contains(&id)
+    }
+
+    pub fn is_locked_worker(&self, w: usize) -> bool {
+        self.locks.is_locked(w)
+    }
+
+    pub fn locked_count(&self) -> usize {
+        self.locks.locked_count()
+    }
+
+    pub fn is_armed(&self, id: GroupId) -> bool {
+        self.shard(id).lock().unwrap().get(&id).is_some_and(|e| e.armed)
+    }
+
+    /// One-shot phase probe: a single gid-shard read (plus the aborted
+    /// set for dead ids) — what the RPC reactor evaluates for parked
+    /// WaitArmed/WaitDone and Probe calls.
+    pub fn phase(&self, id: GroupId) -> GroupPhase {
+        let armed = self.shard(id).lock().unwrap().get(&id).map(|e| e.armed);
+        match armed {
+            Some(true) => GroupPhase::Armed,
+            Some(false) => GroupPhase::Pending,
+            None if self.was_aborted(id) => GroupPhase::Aborted,
+            None => GroupPhase::Done,
+        }
+    }
+
+    fn retired_mask(&self) -> Vec<bool> {
+        self.retired.iter().map(|r| r.load(Ordering::Acquire)).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // the worker protocol
+    // ------------------------------------------------------------------
+
+    /// Worker `w` requests synchronization. Same contract and — under
+    /// sequential driving with the same seed — same results and stats as
+    /// `GroupGenerator::request`. Buffer hits return without touching the
+    /// scheduler lock.
+    pub fn request(&self, w: usize) -> (Option<GroupId>, Vec<Group>) {
+        assert!(w < self.cfg.n_workers);
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.counters[w].fetch_add(1, Ordering::Relaxed);
+
+        if self.cfg.use_group_buffer {
+            if let Some(front) = self.gb_front(w) {
+                self.stats.buffer_hits.fetch_add(1, Ordering::Relaxed);
+                return (Some(front), Vec::new());
+            }
+        }
+        if self.retired[w].load(Ordering::Acquire) {
+            return (None, Vec::new()); // drained and departed
+        }
+
+        let mut sched = self.sched.lock().unwrap();
+        // A concurrent division may have drafted `w` between the lock-free
+        // buffer check and here: answer with the buffered group, exactly
+        // as a later sequential request would. Generating a *fresh* group
+        // instead would leave `w` syncing on it while its buffer-front
+        // group waits for `w` — a circular wait in rendezvous runtimes.
+        // (Unreachable sequentially, so the oracle equivalence holds.)
+        if self.cfg.use_group_buffer {
+            if let Some(front) = self.gb_front(w) {
+                self.stats.buffer_hits.fetch_add(1, Ordering::Relaxed);
+                return (Some(front), Vec::new());
+            }
+        }
+
+        let member_lists = if self.cfg.use_global_division || self.cfg.inter_intra {
+            self.global_division(w, &mut sched)
+        } else {
+            match self.random_group(w, &mut sched) {
+                Some(g) => vec![g],
+                None => Vec::new(),
+            }
+        };
+        if member_lists.is_empty() {
+            return (None, Vec::new()); // nobody left to pair with
+        }
+
+        let mut newly_armed = Vec::new();
+        let mut assigned = None;
+        for members in member_lists {
+            let contains_w = members.contains(&w);
+            let id = self.create_group(w, members, &mut newly_armed, &mut sched);
+            if contains_w && assigned.is_none() {
+                assigned = Some(id);
+            }
+        }
+        drop(sched);
+        self.bump_epoch();
+        (assigned, newly_armed)
+    }
+
+    /// Armed-checked completion under one scheduler hold (see
+    /// [`CompleteOutcome`]).
+    pub fn try_complete(&self, id: GroupId) -> CompleteOutcome {
+        let mut sched = self.sched.lock().unwrap();
+        let entry = {
+            let mut shard = self.shard(id).lock().unwrap();
+            match shard.get(&id) {
+                None => return CompleteOutcome::Unknown,
+                Some(e) if !e.armed => return CompleteOutcome::NotArmed,
+                Some(_) => shard.remove(&id).unwrap(),
+            }
+        };
+        self.locks.release(&entry.members);
+        if self.cfg.use_group_buffer {
+            for &m in &entry.members {
+                let mut gb = self.gb[m].lock().unwrap();
+                // Completion should be at the front of each member's GB
+                // (groups arm in creation order); fall back to a purge.
+                if gb.front() == Some(&id) {
+                    gb.pop_front();
+                } else {
+                    gb.retain(|&g| g != id);
+                }
+            }
+        }
+        let armed = self.arm_unblocked(&entry.members, &mut sched);
+        drop(sched);
+        self.bump_epoch();
+        CompleteOutcome::Done(armed)
+    }
+
+    /// Oracle-shaped completion: unknown ids are an idempotent no-op,
+    /// and completing a *pending* id is a protocol bug (the single-lock
+    /// GG would corrupt its lock vector; here it panics loudly instead).
+    pub fn complete(&self, id: GroupId) -> Vec<Group> {
+        match self.try_complete(id) {
+            CompleteOutcome::Done(armed) => armed,
+            CompleteOutcome::Unknown => Vec::new(),
+            CompleteOutcome::NotArmed => {
+                panic!("complete() on pending group {id} (protocol bug)")
+            }
+        }
+    }
+
+    /// Tear one group down without completing it; arm whatever its locks
+    /// were blocking. Idempotent on unknown ids.
+    pub fn abort_group(&self, id: GroupId) -> Vec<Group> {
+        let mut sched = self.sched.lock().unwrap();
+        let armed = match self.teardown_group(id, &mut sched) {
+            Some((group, true)) => self.arm_unblocked(&group.members, &mut sched),
+            _ => Vec::new(),
+        };
+        drop(sched);
+        self.bump_epoch();
+        armed
+    }
+
+    /// Failure detection verdict: `w` crashed. Same semantics as the
+    /// single-lock `declare_dead` (retire + speed purge + abort every
+    /// group naming the rank + one arm sweep + lock-bit guard sweep).
+    pub fn declare_dead(&self, w: usize) -> DeathPurge {
+        let mut sched = self.sched.lock().unwrap();
+        let purge = self.declare_dead_locked(w, &mut sched);
+        drop(sched);
+        self.bump_epoch();
+        purge
+    }
+
+    /// A checkpoint-restored replacement re-registers rank `w`.
+    pub fn rejoin(&self, w: usize) -> DeathPurge {
+        let mut sched = self.sched.lock().unwrap();
+        let purge = self.declare_dead_locked(w, &mut sched);
+        self.dead[w].store(false, Ordering::Release);
+        self.retired[w].store(false, Ordering::Release);
+        self.speed.clear(w);
+        let caught_up = (0..self.cfg.n_workers)
+            .filter(|&x| x != w && !self.retired[x].load(Ordering::Acquire))
+            .map(|x| self.counters[x].load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0);
+        self.counters[w].fetch_max(caught_up, Ordering::Relaxed);
+        self.stats.rejoins.fetch_add(1, Ordering::Relaxed);
+        drop(sched);
+        self.bump_epoch();
+        purge
+    }
+
+    // ------------------------------------------------------------------
+    // internals (all hold the sched lock)
+    // ------------------------------------------------------------------
+
+    fn declare_dead_locked(&self, w: usize, sched: &mut Sched) -> DeathPurge {
+        if self.dead[w].load(Ordering::Acquire) {
+            return DeathPurge::default();
+        }
+        self.dead[w].store(true, Ordering::Release);
+        self.retired[w].store(true, Ordering::Release);
+        self.stats.deaths.fetch_add(1, Ordering::Relaxed);
+        self.speed.clear(w);
+        self.gb[w].lock().unwrap().clear();
+        let mut doomed: Vec<GroupId> = self
+            .groups
+            .iter()
+            .flat_map(|s| {
+                s.lock()
+                    .unwrap()
+                    .iter()
+                    .filter(|(_, e)| e.members.contains(&w))
+                    .map(|(&id, _)| id)
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        doomed.sort_unstable(); // shard/HashMap order varies; stay deterministic
+        // Remove every doomed group first, then arm in one sweep — arming
+        // as we go could transiently hand out a pending group that names
+        // the dead rank and is itself about to be aborted.
+        let mut released: Vec<usize> = Vec::new();
+        let mut aborted = Vec::new();
+        for id in doomed {
+            let (group, was_armed) =
+                self.teardown_group(id, sched).expect("doomed id is live");
+            if was_armed {
+                released.extend(group.members.iter().copied());
+            }
+            aborted.push(group);
+        }
+        let newly_armed = if released.is_empty() {
+            Vec::new()
+        } else {
+            self.arm_unblocked(&released, sched)
+        };
+        // Guard against protocol drift: a dead rank must never keep a bit.
+        debug_assert!(!self.locks.is_locked(w), "dead rank {w} still locked");
+        self.locks.force_release(w);
+        DeathPurge { aborted, newly_armed }
+    }
+
+    fn note_aborted(&self, id: GroupId, next_id: GroupId) {
+        let mut shard = self.aborted_shard(id).lock().unwrap();
+        shard.insert(id);
+        // Same bounded memory as the oracle, split per shard: ids are
+        // monotone, keep the most recent window.
+        if shard.len() > super::ABORTED_MEMORY / GROUP_SHARDS {
+            let min_keep = next_id.saturating_sub(super::ABORTED_MEMORY as u64);
+            shard.retain(|&g| g >= min_keep);
+        }
+    }
+
+    fn teardown_group(&self, id: GroupId, sched: &mut Sched) -> Option<(Group, bool)> {
+        let entry = self.shard(id).lock().unwrap().remove(&id)?;
+        self.stats.groups_aborted.fetch_add(1, Ordering::Relaxed);
+        self.note_aborted(id, sched.next_id);
+        if self.cfg.use_group_buffer {
+            for &m in &entry.members {
+                self.gb[m].lock().unwrap().retain(|&g| g != id);
+            }
+        }
+        let group = Group { id, members: entry.members };
+        if !entry.armed {
+            let pos = sched
+                .pending
+                .iter()
+                .position(|&p| p == id)
+                .expect("pending group is queued");
+            sched.pending.remove(pos);
+            return Some((group, false)); // pending groups hold no locks
+        }
+        self.locks.release(&group.members);
+        Some((group, true))
+    }
+
+    /// Arm pending groups that can now lock after `released` workers came
+    /// free, preserving FIFO fairness (same touched-set skip as the
+    /// oracle's `arm_unblocked`).
+    fn arm_unblocked(&self, released: &[usize], sched: &mut Sched) -> Vec<Group> {
+        let mut armed = Vec::new();
+        let mut still_pending = VecDeque::new();
+        while let Some(pid) = sched.pending.pop_front() {
+            let members = self
+                .shard(pid)
+                .lock()
+                .unwrap()
+                .get(&pid)
+                .expect("pending id is live")
+                .members
+                .clone();
+            let touched = members.iter().any(|m| released.contains(m));
+            if touched && self.locks.try_lock(&members) {
+                self.shard(pid).lock().unwrap().get_mut(&pid).unwrap().armed = true;
+                armed.push(Group { id: pid, members });
+            } else {
+                still_pending.push_back(pid);
+            }
+        }
+        sched.pending = still_pending;
+        armed
+    }
+
+    fn create_group(
+        &self,
+        initiator: usize,
+        mut members: Vec<usize>,
+        newly_armed: &mut Vec<Group>,
+        sched: &mut Sched,
+    ) -> GroupId {
+        members.sort_unstable();
+        members.dedup();
+        debug_assert!(members.len() >= 2);
+        let id = sched.next_id;
+        sched.next_id += 1;
+        self.stats.groups_created.fetch_add(1, Ordering::Relaxed);
+        let req_now = self.stats.requests.load(Ordering::Relaxed);
+        for &m in &members {
+            if m != initiator {
+                self.drafts[m].fetch_add(1, Ordering::Relaxed);
+                self.last_drafted[m].store(req_now, Ordering::Relaxed);
+            }
+        }
+        if self.cfg.use_group_buffer {
+            for &m in &members {
+                self.gb[m].lock().unwrap().push_back(id);
+            }
+        }
+        let armed = self.locks.try_lock(&members);
+        if armed {
+            newly_armed.push(Group { id, members: members.clone() });
+        } else {
+            self.stats.conflicts.fetch_add(1, Ordering::Relaxed);
+            sched.pending.push_back(id);
+            self.stats.max_pending.fetch_max(sched.pending.len(), Ordering::Relaxed);
+        }
+        self.shard(id).lock().unwrap().insert(id, Entry { members, armed });
+        id
+    }
+
+    /// §4.1 random group — byte-for-byte the oracle's sampling (same RNG
+    /// consumption), reading the sharded state instead.
+    fn random_group(&self, w: usize, sched: &mut Sched) -> Option<Vec<usize>> {
+        let mut others: Vec<usize> = (0..self.cfg.n_workers)
+            .filter(|&x| {
+                x != w
+                    && !self.retired[x].load(Ordering::Acquire)
+                    && (!self.cfg.rendezvous
+                        || (self.gb[x].lock().unwrap().is_empty()
+                            && !self.locks.is_locked(x)))
+            })
+            .collect();
+        if others.is_empty() {
+            return None;
+        }
+        let k = self.cfg.group_size.min(others.len() + 1);
+        // partial shuffle: pick k-1 distinct others
+        let mut members = vec![w];
+        for i in 0..k - 1 {
+            let j = i + sched.rng.gen_range(others.len() - i);
+            others.swap(i, j);
+            members.push(others[i]);
+        }
+        Some(members)
+    }
+
+    /// §5.1/§5.2/§5.3 Global Division — the oracle's logic over sharded
+    /// state, serialized under `sched` (a division must see a stable idle
+    /// view, and two concurrent divisions must not both draft one idle
+    /// rank).
+    fn global_division(&self, w: usize, sched: &mut Sched) -> Vec<Vec<usize>> {
+        let division = self.stats.divisions.fetch_add(1, Ordering::Relaxed) + 1;
+        let c_i = self.counters[w].load(Ordering::Relaxed);
+        let retired = self.retired_mask();
+        let speed_ref = self.speed.reference_excluding(&retired);
+        let mut idle: Vec<usize> = (0..self.cfg.n_workers)
+            .filter(|&x| {
+                if x == w {
+                    return true;
+                }
+                let buffer_free =
+                    !self.cfg.use_group_buffer || self.gb[x].lock().unwrap().is_empty();
+                let lock_free = !self.locks.is_locked(x) && !retired[x];
+                let measured_rel =
+                    self.speed.get(x).and_then(|own| speed_ref.map(|r| own / r));
+                let fast_enough = match (self.cfg.s_thres, measured_rel) {
+                    (Some(thres), Some(rel)) => rel <= thres,
+                    _ => match self.cfg.c_thres {
+                        Some(thres) => {
+                            c_i.saturating_sub(self.counters[x].load(Ordering::Relaxed))
+                                < thres
+                        }
+                        None => true,
+                    },
+                };
+                buffer_free && lock_free && fast_enough
+            })
+            .collect();
+        if idle.len() < 2 {
+            return Vec::new(); // nobody idle to pair with: skip this sync
+        }
+        if self.cfg.inter_intra {
+            self.inter_intra_division(&mut idle, division as usize, &mut sched.rng)
+        } else {
+            vec_partition(&mut idle, self.cfg.group_size, &mut sched.rng)
+        }
+    }
+
+    /// §5.2 Inter-Intra — identical group construction to the oracle
+    /// (`rotation` is the post-increment division count, exactly the
+    /// value the oracle reads from `stats.divisions`).
+    fn inter_intra_division(
+        &self,
+        idle: &mut Vec<usize>,
+        rotation: usize,
+        rng: &mut Pcg32,
+    ) -> Vec<Vec<usize>> {
+        let wpn = self.cfg.workers_per_node.max(1);
+        let mut per_node: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &x in idle.iter() {
+            per_node.entry(x / wpn).or_default().push(x);
+        }
+        let mut heads = Vec::new();
+        let mut locals: Vec<Vec<usize>> = Vec::new();
+        let mut nodes: Vec<usize> = per_node.keys().copied().collect();
+        nodes.sort_unstable();
+        for nd in nodes {
+            let mut ws = per_node.remove(&nd).unwrap();
+            ws.sort_unstable();
+            let h = ws
+                .iter()
+                .position(|&w| w % wpn == rotation % wpn)
+                .unwrap_or(rotation % ws.len());
+            heads.push(ws.swap_remove(h));
+            if !ws.is_empty() {
+                locals.push(ws);
+            }
+        }
+        let mut groups = Vec::new();
+        if heads.len() >= 2 {
+            heads.sort_unstable();
+            let mut i = 0;
+            while i < heads.len() {
+                let end = (i + self.cfg.group_size).min(heads.len());
+                groups.push(heads[i..end].to_vec());
+                i = end;
+            }
+            if groups.len() >= 2 && groups.last().unwrap().len() == 1 {
+                let last = groups.pop().unwrap();
+                groups.last_mut().unwrap().extend(last);
+            }
+            groups.retain(|g| g.len() >= 2);
+        }
+        for mut ws in locals {
+            if ws.len() >= 2 {
+                groups.extend(vec_partition(&mut ws, self.cfg.group_size, rng));
+            }
+        }
+        let mut per_node2: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &x in idle.iter() {
+            per_node2.entry(x / wpn).or_default().push(x);
+        }
+        let mut nodes2: Vec<usize> = per_node2.keys().copied().collect();
+        nodes2.sort_unstable();
+        for nd in nodes2 {
+            let ws = per_node2.remove(&nd).unwrap();
+            if ws.len() >= 2 {
+                groups.push(ws);
+            }
+        }
+        if groups.is_empty() {
+            groups.push(idle.clone());
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gg::GroupGenerator;
+
+    /// Drive oracle and sharded GG through one identical sequential
+    /// schedule and compare everything observable at every step.
+    fn assert_equivalent(cfg: GgConfig, seed: u64, steps: usize) {
+        let mut oracle = GroupGenerator::new(cfg.clone());
+        let mut orng = Pcg32::new(seed);
+        let sharded = ShardedGg::new(cfg.clone(), seed);
+        let mut ops = Pcg32::new(seed ^ 0x5eed);
+        let mut armed_live: Vec<GroupId> = Vec::new();
+        for step in 0..steps {
+            let w = ops.gen_range(cfg.n_workers);
+            if ops.gen_range(4) == 0 && !armed_live.is_empty() {
+                let id = armed_live.remove(ops.gen_range(armed_live.len()));
+                let a = oracle.complete(id);
+                let b = sharded.complete(id);
+                assert_eq!(a, b, "seed {seed} step {step}: complete({id}) diverged");
+                armed_live.extend(a.iter().map(|g| g.id));
+            } else {
+                let (aa, ag) = oracle.request(w, &mut orng);
+                let (ba, bg) = sharded.request(w);
+                assert_eq!(aa, ba, "seed {seed} step {step}: assignment diverged");
+                assert_eq!(ag, bg, "seed {seed} step {step}: armed set diverged");
+                armed_live.extend(ag.iter().map(|g| g.id));
+            }
+            armed_live.retain(|&id| oracle.is_armed(id));
+            assert_eq!(format!("{:?}", oracle.stats), format!("{:?}", sharded.stats()));
+            assert_eq!(oracle.counters(), &sharded.counters()[..]);
+            assert_eq!(oracle.pending_len(), sharded.pending_len());
+            assert_eq!(oracle.locked_count(), sharded.locked_count());
+            for x in 0..cfg.n_workers {
+                assert_eq!(oracle.gb_snapshot(x), sharded.gb_snapshot(x));
+                assert_eq!(oracle.is_locked_worker(x), sharded.is_locked_worker(x));
+            }
+        }
+    }
+
+    #[test]
+    fn sequentially_bit_identical_to_the_oracle_random() {
+        assert_equivalent(GgConfig::random(8, 4, 3), 42, 300);
+    }
+
+    #[test]
+    fn sequentially_bit_identical_to_the_oracle_smart() {
+        assert_equivalent(GgConfig::smart(16, 4, 3, 8), 7, 300);
+    }
+
+    #[test]
+    fn sequentially_bit_identical_under_rendezvous() {
+        let mut cfg = GgConfig::random(12, 4, 3);
+        cfg.rendezvous = true;
+        cfg.use_group_buffer = true;
+        assert_equivalent(cfg, 1234, 300);
+    }
+
+    #[test]
+    fn phase_probe_tracks_the_group_lifecycle() {
+        let gg = ShardedGg::new(GgConfig::random(6, 3, 3), 9);
+        let (assigned, armed) = gg.request(0);
+        let id = assigned.unwrap();
+        assert_eq!(gg.phase(id), GroupPhase::Armed);
+        assert_eq!(armed.len(), 1);
+        assert!(matches!(gg.try_complete(id), CompleteOutcome::Done(_)));
+        assert_eq!(gg.phase(id), GroupPhase::Done);
+        assert!(matches!(gg.try_complete(id), CompleteOutcome::Unknown));
+        // an aborted id probes as Aborted, not Done
+        let (assigned, _) = gg.request(1);
+        let id2 = assigned.unwrap();
+        gg.abort_group(id2);
+        assert_eq!(gg.phase(id2), GroupPhase::Aborted);
+    }
+
+    #[test]
+    fn try_complete_rejects_pending_groups() {
+        // Arm [0,1,2]-ish group, then force a conflicting pending group
+        // by requesting from a free-but-overlapping drafting pattern.
+        let cfg = GgConfig::random(4, 2, 4); // whole-cluster groups
+        let gg = ShardedGg::new(cfg, 3);
+        let (a, _) = gg.request(0);
+        let first = a.unwrap();
+        let (b, armed) = gg.request(1); // conflicts: everyone is locked
+        let second = b.unwrap();
+        assert!(armed.is_empty());
+        assert_eq!(gg.phase(second), GroupPhase::Pending);
+        assert!(matches!(gg.try_complete(second), CompleteOutcome::NotArmed));
+        // completing the armed group arms the pending one
+        let CompleteOutcome::Done(now_armed) = gg.try_complete(first) else {
+            panic!("armed group must complete");
+        };
+        assert_eq!(now_armed.len(), 1);
+        assert_eq!(now_armed[0].id, second);
+    }
+
+    #[test]
+    fn epoch_moves_on_phase_changes() {
+        let gg = ShardedGg::new(GgConfig::random(4, 2, 2), 5);
+        let e0 = gg.epoch();
+        let (a, _) = gg.request(0);
+        assert!(gg.epoch() > e0);
+        let e1 = gg.epoch();
+        gg.complete(a.unwrap());
+        assert!(gg.epoch() > e1);
+    }
+}

@@ -47,5 +47,5 @@ pub use cluster::{BandwidthEvent, CrashEvent, HeterogeneityProfile, SlowdownEven
 pub use collectives::{AbortedError, OverlapConfig, WireCodec};
 pub use config::{AlgoConfig, AlgoKind, ClusterConfig, Experiment, TrainConfig};
 pub use fault::{Fault, FaultPlan, FaultyTransport};
-pub use gg::{GgConfig, Group, GroupGenerator, SpeedTable, StaticScheduler};
+pub use gg::{GgConfig, Group, GroupGenerator, ShardedGg, SpeedTable, StaticScheduler};
 pub use sim::{SimParams, SimResult};

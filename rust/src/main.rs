@@ -56,11 +56,11 @@ USAGE:
                 [--overlap-shards K] [--max-staleness S]
                 [--wire fp32|fp16|q8]
                 [--iters N] [--target LOSS] [--trace FILE.csv]
-  ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|wire|failures|paper|all>
+  ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|wire|failures|scale|paper|all>
               [--csv DIR] [--json DIR]
   ripples gg-serve [--addr HOST:PORT] [--workers N] [--wpn K]
                    [--mode random|smart] [--group-size G]
-                   [--liveness-ms MS]
+                   [--gg-backend sharded|locked] [--liveness-ms MS]
   ripples launch [--workers N] [--slow W:FACTOR] [--secs S] [--iters N]
                  [--algo ripples|allreduce|adpsgd|ps] [--ps-shards K]
                  [--slow-schedule W,F@ITER[;W,F@ITER...]]
@@ -278,9 +278,17 @@ fn cmd_gg_serve(args: &[String]) -> Result<(), String> {
     let liveness = (liveness_ms > 0).then(|| {
         ripples::rpc::LivenessConfig::with_timeout(Duration::from_millis(liveness_ms))
     });
-    let server = GgServer::spawn_with_liveness(addr, cfg, 42, liveness)
+    // `locked` keeps the single-lock oracle backend around for
+    // differential debugging; `sharded` (the default) is the scale-out
+    // coordinator (DESIGN.md §Scale).
+    let backend = get_flag(&flags, "gg-backend").unwrap_or("sharded");
+    let mode = ripples::rpc::GgMode::parse(backend).map_err(|e| e.to_string())?;
+    let server = GgServer::spawn_with_backend(addr, cfg, 42, liveness, mode)
         .map_err(|e| e.to_string())?;
-    println!("GG serving on {} ({workers} workers, {wpn} per node)", server.addr);
+    println!(
+        "GG serving on {} ({workers} workers, {wpn} per node, {backend} backend)",
+        server.addr
+    );
     println!("press Ctrl-C to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

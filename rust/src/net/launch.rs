@@ -300,10 +300,17 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
     };
     let ps_addr = ps_server.as_ref().map(|s| s.addr().to_string());
 
+    // One persistent control-plane client for every launcher-side stats
+    // snapshot: reconnecting per call paid a fresh TCP round trip each
+    // time (and inflated the server's accepted-connection count — see
+    // the connection-reuse regression test in `rpc`).
+    let mut stats_client = GgClient::connect(server.addr).context("GG stats client")?;
+
     // Any failure below must not leak worker processes: they would keep
     // training (and holding sockets) for the rest of their timed window.
     let mut children: Vec<WorkerProc> = Vec::new();
-    let result = run_cluster(cfg, &gg_addr, ps_addr.as_deref(), &mut children);
+    let result =
+        run_cluster(cfg, &gg_addr, ps_addr.as_deref(), &mut stats_client, &mut children);
     if result.is_err() {
         for wp in &mut children {
             let _ = wp.child.kill();
@@ -312,7 +319,6 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
     }
     let (reports, gg_stats_at_kill) = result?;
 
-    let mut stats_client = GgClient::connect(server.addr).context("GG stats")?;
     let gg_stats = stats_client.stats()?;
     drop(stats_client);
     server.shutdown();
@@ -420,6 +426,7 @@ fn run_cluster(
     cfg: &LaunchConfig,
     gg_addr: &str,
     ps_addr: Option<&str>,
+    stats_client: &mut GgClient,
     children: &mut Vec<WorkerProc>,
 ) -> Result<(Vec<WorkerReport>, Option<StatsReport>)> {
     // ---- phase 1: spawn everyone, collect advertised data-plane addrs
@@ -471,9 +478,7 @@ fn run_cluster(
         victim.child.kill().context("kill victim worker")?;
         victim.child.wait().context("reap victim worker")?;
         victim.expect_report = false;
-        let mut stats_client = GgClient::connect(gg_addr).context("stats after kill")?;
-        stats_at_kill = Some(stats_client.stats()?);
-        drop(stats_client);
+        stats_at_kill = Some(stats_client.stats().context("stats after kill")?);
         if let Some(rejoin_after) = kill.rejoin_after_secs {
             std::thread::sleep(Duration::from_secs_f64(rejoin_after));
             let remaining =

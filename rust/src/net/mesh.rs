@@ -14,7 +14,8 @@
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::io::Read;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -24,7 +25,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::collectives::codec::WireCodec;
 use crate::collectives::ring::{AbortedError, ChunkTransport};
 
-use super::frame::{read_frame, read_frame_counted, write_chunk_coded, write_frame, Frame};
+use super::frame::{read_frame_counted, write_chunk_coded, write_frame, Frame};
 
 /// Inbound streams registered by the accept loop, keyed by peer rank.
 struct Inbound {
@@ -45,8 +46,85 @@ struct ByteCounters {
 }
 
 /// Cap on concurrently pending `Hello` handshakes: far above any real
-/// cluster's rank count, far below a connect flood's thread bill.
+/// cluster's rank count, far below a connect flood's memory bill.
 const MAX_PENDING_HANDSHAKES: usize = 128;
+
+/// Bounded wait for a dialer's `Hello` preamble.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Accept-sweep idle backoff bounds (reset to min on any progress).
+const ACCEPT_IDLE_MIN: Duration = Duration::from_micros(50);
+const ACCEPT_IDLE_MAX: Duration = Duration::from_millis(1);
+
+/// A `Hello` payload is 5 bytes (tag + rank); a length prefix claiming
+/// more than this is not a peer preamble — dropped before buffering.
+const MAX_HELLO_LEN: usize = 64;
+
+/// One accepted connection still mid-`Hello` in the accept sweep.
+struct PendingHello {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    deadline: Instant,
+}
+
+/// What one non-blocking pump of a pending handshake decided.
+enum HelloDecision {
+    /// Still waiting for bytes; `fed` = some arrived this sweep.
+    Keep { fed: bool },
+    /// Timed out, hung up, errored, or sent a non-`Hello` — discard.
+    Drop,
+    /// Complete `Hello { rank }` received: register the stream.
+    Register(u32),
+}
+
+impl PendingHello {
+    /// Advance the handshake without ever reading PAST the hello frame:
+    /// the dialer's first chunk may already be in flight behind it and
+    /// must stay in the socket buffer for the data path (which reads
+    /// from the registered stream, not from this buffer).
+    fn pump(&mut self, now: Instant) -> HelloDecision {
+        if now >= self.deadline {
+            return HelloDecision::Drop;
+        }
+        let mut fed = false;
+        loop {
+            let need = if self.buf.len() < 4 {
+                4 - self.buf.len()
+            } else {
+                let len = u32::from_le_bytes([
+                    self.buf[0],
+                    self.buf[1],
+                    self.buf[2],
+                    self.buf[3],
+                ]) as usize;
+                if len > MAX_HELLO_LEN {
+                    return HelloDecision::Drop;
+                }
+                4 + len - self.buf.len()
+            };
+            if need == 0 {
+                break;
+            }
+            let mut tmp = [0u8; 64];
+            match (&self.stream).read(&mut tmp[..need.min(64)]) {
+                Ok(0) => return HelloDecision::Drop,
+                Ok(n) => {
+                    self.buf.extend_from_slice(&tmp[..n]);
+                    fed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return HelloDecision::Keep { fed };
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return HelloDecision::Drop,
+            }
+        }
+        match Frame::decode(&self.buf[4..]) {
+            Ok(Frame::Hello { rank }) => HelloDecision::Register(rank),
+            _ => HelloDecision::Drop, // not a peer; ignore
+        }
+    }
+}
 
 /// One worker's view of the cluster data plane.
 pub struct WorkerMesh {
@@ -84,50 +162,74 @@ impl WorkerMesh {
         let stop = Arc::new(AtomicBool::new(false));
         let inb = Arc::clone(&inbound);
         let stop2 = Arc::clone(&stop);
-        let inflight = Arc::new(AtomicUsize::new(0));
         let accept_handle = thread::spawn(move || {
+            // Event-driven accept loop: ONE thread sweeps every pending
+            // handshake over non-blocking sockets instead of spawning a
+            // thread per connection. A slow or stuck dialer just sits in
+            // the pending set while everyone else registers on the same
+            // sweep (the slow-dialer regression test); the set is capped
+            // so a connect flood cannot buy unbounded memory — excess
+            // sockets are dropped (a real peer fails fast and surfaces
+            // the error instead of hanging). Idle backoff ramps 50 µs →
+            // 1 ms, replacing the old fixed 2 ms accept-poll sleep.
             listener.set_nonblocking(true).ok();
+            let mut pending: Vec<PendingHello> = Vec::new();
+            let mut idle = ACCEPT_IDLE_MIN;
             while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((mut stream, _)) => {
-                        // Handshake per connection on its own thread: a
-                        // slow or stuck dialer must not head-of-line-block
-                        // every other peer's registration behind its 10 s
-                        // hello timeout (found by the slow-dialer test).
-                        // In-flight handshakes are capped so a connect
-                        // flood cannot spawn unbounded threads — excess
-                        // sockets are dropped (a real peer fails fast
-                        // and surfaces the error instead of hanging).
-                        if inflight.load(Ordering::Relaxed) >= MAX_PENDING_HANDSHAKES {
-                            drop(stream);
-                            continue;
-                        }
-                        inflight.fetch_add(1, Ordering::Relaxed);
-                        let inb = Arc::clone(&inb);
-                        let inflight = Arc::clone(&inflight);
-                        let stop = Arc::clone(&stop2);
-                        thread::spawn(move || {
-                            stream.set_nonblocking(false).ok();
-                            stream.set_nodelay(true).ok();
-                            // bounded wait for the hello preamble
-                            stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
-                            match read_frame(&mut stream) {
-                                // a mesh being torn down must not admit
-                                // late registrations
-                                Ok(Frame::Hello { rank }) if !stop.load(Ordering::Relaxed) => {
-                                    let mut conns = inb.conns.lock().unwrap();
-                                    conns.insert(rank, stream);
-                                    inb.cv.notify_all();
-                                }
-                                _ => drop(stream), // not a peer; ignore
+                let mut progress = false;
+                loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if pending.len() >= MAX_PENDING_HANDSHAKES {
+                                drop(stream);
+                                continue;
                             }
-                            inflight.fetch_sub(1, Ordering::Relaxed);
-                        });
+                            stream.set_nonblocking(true).ok();
+                            stream.set_nodelay(true).ok();
+                            pending.push(PendingHello {
+                                stream,
+                                buf: Vec::new(),
+                                deadline: Instant::now() + HELLO_TIMEOUT,
+                            });
+                            progress = true;
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(_) => return,
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        thread::sleep(Duration::from_millis(2));
+                }
+                let now = Instant::now();
+                let mut i = 0;
+                while i < pending.len() {
+                    match pending[i].pump(now) {
+                        HelloDecision::Keep { fed } => {
+                            progress |= fed;
+                            i += 1;
+                        }
+                        HelloDecision::Drop => {
+                            pending.swap_remove(i);
+                            progress = true;
+                        }
+                        HelloDecision::Register(rank) => {
+                            let p = pending.swap_remove(i);
+                            progress = true;
+                            // a mesh being torn down must not admit late
+                            // registrations
+                            if !stop2.load(Ordering::Relaxed) {
+                                // back to blocking: the data path reads
+                                // this stream (via clones) blockingly
+                                p.stream.set_nonblocking(false).ok();
+                                let mut conns = inb.conns.lock().unwrap();
+                                conns.insert(rank, p.stream);
+                                inb.cv.notify_all();
+                            }
+                        }
                     }
-                    Err(_) => break,
+                }
+                if progress {
+                    idle = ACCEPT_IDLE_MIN;
+                } else {
+                    thread::sleep(idle);
+                    idle = (idle * 2).min(ACCEPT_IDLE_MAX);
                 }
             }
         });
@@ -530,9 +632,9 @@ mod tests {
         // Regression: the accept loop used to run the Hello handshake
         // inline with a 10 s read timeout, so one connect-then-silent
         // socket stalled every other peer's registration behind it. With
-        // per-connection handshake threads, a real peer registers (and a
-        // collective completes) well inside a 3 s io_timeout even while
-        // a silent dialer sits on each mesh.
+        // the non-blocking handshake sweep, a silent dialer just sits in
+        // the pending set while a real peer registers (and a collective
+        // completes) well inside a 3 s io_timeout.
         let members = [0usize, 1];
         let mut meshes: Vec<WorkerMesh> = members
             .iter()
@@ -569,6 +671,60 @@ mod tests {
         for buf in &results {
             assert!(buf.iter().all(|&v| (v - 0.5).abs() < 1e-6), "{buf:?}");
         }
+    }
+
+    #[test]
+    fn hello_arriving_in_pieces_still_registers() {
+        // The sweep must assemble a handshake that trickles in across
+        // several reads (frame prefix first, payload later) — the old
+        // blocking read_frame got this for free, the non-blocking pump
+        // has to buffer.
+        use std::io::Write;
+        let mesh = WorkerMesh::bind(0, "127.0.0.1:0").unwrap();
+        let mut dialer = TcpStream::connect(mesh.local_addr()).unwrap();
+        let frame = Frame::Hello { rank: 3 }.encode();
+        let mut wire = (frame.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&frame);
+        for b in wire {
+            dialer.write_all(&[b]).unwrap();
+            dialer.flush().unwrap();
+            thread::sleep(Duration::from_millis(2));
+        }
+        let got = mesh
+            .inbound_stream(3, Duration::from_secs(5))
+            .unwrap()
+            .expect("piecewise hello must register rank 3");
+        drop(got);
+    }
+
+    #[test]
+    fn bytes_behind_the_hello_stay_on_the_data_path() {
+        // A dialer's first chunk can share a packet with its Hello. The
+        // handshake pump must stop reading at the hello boundary so the
+        // chunk is still in the socket buffer for the ring transport.
+        use std::io::Write;
+        let mesh = WorkerMesh::bind(0, "127.0.0.1:0").unwrap();
+        let mut dialer = TcpStream::connect(mesh.local_addr()).unwrap();
+        let mut wire = Vec::new();
+        for frame in [
+            Frame::Hello { rank: 1 },
+            Frame::Chunk { gid: 2, step: 0, data: vec![1.0, 2.0, 3.0] },
+        ] {
+            let payload = frame.encode();
+            wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            wire.extend_from_slice(&payload);
+        }
+        dialer.write_all(&wire).unwrap(); // one write: hello + chunk together
+        let mut inbound = mesh
+            .inbound_stream(1, Duration::from_secs(5))
+            .unwrap()
+            .expect("hello must register rank 1");
+        let (frame, _) = read_frame_counted(&mut inbound).unwrap();
+        assert_eq!(
+            frame,
+            Frame::Chunk { gid: 2, step: 0, data: vec![1.0, 2.0, 3.0] },
+            "the chunk behind the hello must survive intact"
+        );
     }
 
     fn pair_meshes(io_secs: u64) -> (Vec<WorkerMesh>, Vec<SocketAddr>) {

@@ -12,25 +12,37 @@
 //!   survivor reports a broken collective and accuses the peer it saw
 //!   fail), `Probe` (armed / pending / done / aborted).
 //!
-//! The server wraps the same pure [`GroupGenerator`] state machine the
-//! simulator and the threaded runtime use. With a [`LivenessConfig`]
-//! installed, a monitor thread declares ranks dead when their heartbeat
-//! goes stale — quickly when a peer accused them, eventually on the hard
-//! timeout — which aborts their in-flight groups so ring partners unwind
-//! and retry in repaired groups (DESIGN.md §Fault-tolerance).
+//! The server wraps the same pure Group Generator state machine the
+//! simulator and the threaded runtime use — by default the sharded
+//! implementation ([`ShardedGg`], DESIGN.md §Scale) so concurrent
+//! Sync/Wait/Heartbeat RPCs stop serializing on one mutex; the original
+//! single-lock [`GroupGenerator`] stays available as [`GgMode::SingleLock`]
+//! (the differential-testing oracle and `--gg-backend locked`). With a
+//! [`LivenessConfig`] installed, a monitor thread declares ranks dead
+//! when their heartbeat goes stale — quickly when a peer accused them,
+//! eventually on the hard timeout — which aborts their in-flight groups
+//! so ring partners unwind and retry in repaired groups (DESIGN.md
+//! §Fault-tolerance).
+//!
+//! Serving is event-driven ([`reactor`]): one reactor thread multiplexes
+//! every connection over non-blocking sockets and a small worker pool
+//! executes decoded requests, so one process hosts hundreds of ranks
+//! without a thread per socket — and blocking `WaitArmed`/`WaitDone`
+//! calls park instead of burning a 1 ms poll loop each.
 
+pub mod reactor;
 pub mod wire;
 
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::gg::{GgConfig, Group, GroupGenerator, GroupId};
+use crate::gg::{GgConfig, Group, GroupGenerator, GroupId, GroupPhase, ShardedGg};
 use crate::util::rng::Pcg32;
 use wire::{Reader, Writer};
 
@@ -517,12 +529,275 @@ struct LivenessTracker {
     inner: Mutex<(Vec<Option<Instant>>, Vec<bool>)>,
 }
 
-/// Everything the connection threads and the monitor share.
-struct ServerShared {
-    state: Mutex<(GroupGenerator, Pcg32)>,
+/// Which Group Generator implementation backs the server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GgMode {
+    /// Sharded hot state (default, [`ShardedGg`]): buffer-hit Syncs,
+    /// Probes, Waits, Heartbeats, speed reports, and Stats never touch
+    /// the scheduler mutex; only division/creation/completion serialize.
+    #[default]
+    Sharded,
+    /// The original whole-state-machine-behind-one-mutex path — kept as
+    /// the differential-testing oracle (prop/stress suites drive both
+    /// and demand identical behavior) and as `--gg-backend locked`.
+    SingleLock,
+}
+
+impl GgMode {
+    /// Parse a `--gg-backend` CLI value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sharded" => Ok(GgMode::Sharded),
+            "locked" | "single-lock" => Ok(GgMode::SingleLock),
+            other => bail!("unknown GG backend '{other}' (sharded|locked)"),
+        }
+    }
+}
+
+/// The state machine behind either backend, so the reactor, the liveness
+/// monitor, and the request handlers are backend-blind. Every method
+/// takes `&self`; the single-lock variant serializes internally (that is
+/// the point of keeping it — the oracle the sharded path must match).
+pub(crate) enum GgBackend {
+    SingleLock {
+        state: Mutex<(GroupGenerator, Pcg32)>,
+        /// Phase-change counter for the reactor's parked waits (the
+        /// sharded GG maintains its own).
+        epoch: AtomicU64,
+    },
+    Sharded(ShardedGg),
+}
+
+impl GgBackend {
+    fn new(mode: GgMode, cfg: GgConfig, seed: u64) -> Self {
+        match mode {
+            GgMode::SingleLock => GgBackend::SingleLock {
+                state: Mutex::new((GroupGenerator::new(cfg), Pcg32::new(seed))),
+                epoch: AtomicU64::new(0),
+            },
+            GgMode::Sharded => GgBackend::Sharded(ShardedGg::new(cfg, seed)),
+        }
+    }
+
+    fn n_workers(&self) -> usize {
+        match self {
+            GgBackend::SingleLock { state, .. } => {
+                state.lock().unwrap().0.config().n_workers
+            }
+            GgBackend::Sharded(gg) => gg.config().n_workers,
+        }
+    }
+
+    /// Monotone counter that moves whenever a group's phase may have
+    /// changed; the reactor re-evaluates parked waits when it does.
+    pub(crate) fn epoch(&self) -> u64 {
+        match self {
+            GgBackend::SingleLock { epoch, .. } => epoch.load(Ordering::Acquire),
+            GgBackend::Sharded(gg) => gg.epoch(),
+        }
+    }
+
+    fn bump(&self) {
+        if let GgBackend::SingleLock { epoch, .. } = self {
+            epoch.fetch_add(1, Ordering::Release);
+        }
+    }
+
+    fn is_dead(&self, w: usize) -> bool {
+        match self {
+            GgBackend::SingleLock { state, .. } => state.lock().unwrap().0.is_dead(w),
+            GgBackend::Sharded(gg) => gg.is_dead(w),
+        }
+    }
+
+    fn is_retired(&self, w: usize) -> bool {
+        match self {
+            GgBackend::SingleLock { state, .. } => state.lock().unwrap().0.is_retired(w),
+            GgBackend::Sharded(gg) => gg.is_retired(w),
+        }
+    }
+
+    /// The `Sync` handler: fold the piggybacked telemetry in *before*
+    /// the request so this very division sees it — unless the rank was
+    /// declared dead (a zombie's report must not repopulate the purged
+    /// speed entry). Wire id 0 with no members encodes "skip this sync"
+    /// (GroupIds start at 1).
+    fn sync(&self, w: usize, speed: &SpeedReport) -> Response {
+        if w >= self.n_workers() {
+            return Response::Err { msg: format!("worker {w} out of range") };
+        }
+        let resp = match self {
+            GgBackend::SingleLock { state, .. } => {
+                let mut guard = state.lock().unwrap();
+                let (gg, rng) = &mut *guard;
+                if !gg.is_dead(w) {
+                    gg.report_speed(w, speed.ewma_step_secs);
+                }
+                let (id, armed) = gg.request(w, rng);
+                let id = id.unwrap_or(0);
+                let members = gg
+                    .group(id)
+                    .map(|g| g.members.iter().map(|&m| m as u32).collect())
+                    .unwrap_or_default();
+                Response::Assigned { id, members, armed: group_pairs(armed) }
+            }
+            GgBackend::Sharded(gg) => {
+                if !gg.is_dead(w) {
+                    gg.report_speed(w, speed.ewma_step_secs);
+                }
+                let (id, armed) = gg.request(w);
+                let id = id.unwrap_or(0);
+                let members = gg
+                    .group(id)
+                    .map(|g| g.members.iter().map(|&m| m as u32).collect())
+                    .unwrap_or_default();
+                Response::Assigned { id, members, armed: group_pairs(armed) }
+            }
+        };
+        self.bump();
+        resp
+    }
+
+    /// The `Complete` handler. Unknown = already completed or aborted: a
+    /// duplicate/retried leader Complete is idempotent, not a crash.
+    /// Completing a *pending* group would corrupt the lock vector — a
+    /// client protocol violation, rejected. The sharded path does the
+    /// armed-check and the completion atomically under one scheduler
+    /// hold ([`ShardedGg::try_complete`]); the single-lock path holds
+    /// its one mutex across both, same effect.
+    fn complete(&self, id: GroupId) -> Response {
+        let resp = match self {
+            GgBackend::SingleLock { state, .. } => {
+                let mut guard = state.lock().unwrap();
+                let (gg, _) = &mut *guard;
+                if gg.group(id).is_none() {
+                    Response::Armed { groups: Vec::new() }
+                } else if !gg.is_armed(id) {
+                    Response::Err { msg: format!("group {id} is not armed") }
+                } else {
+                    Response::Armed { groups: group_pairs(gg.complete(id)) }
+                }
+            }
+            GgBackend::Sharded(gg) => match gg.try_complete(id) {
+                crate::gg::CompleteOutcome::Unknown => {
+                    Response::Armed { groups: Vec::new() }
+                }
+                crate::gg::CompleteOutcome::NotArmed => {
+                    Response::Err { msg: format!("group {id} is not armed") }
+                }
+                crate::gg::CompleteOutcome::Done(groups) => {
+                    Response::Armed { groups: group_pairs(groups) }
+                }
+            },
+        };
+        self.bump();
+        resp
+    }
+
+    fn stats_report(&self) -> StatsReport {
+        match self {
+            GgBackend::SingleLock { state, .. } => {
+                let guard = state.lock().unwrap();
+                let gg = &guard.0;
+                StatsReport {
+                    requests: gg.stats.requests,
+                    conflicts: gg.stats.conflicts,
+                    groups_created: gg.stats.groups_created,
+                    buffer_hits: gg.stats.buffer_hits,
+                    speeds: gg.speed_table().snapshot(),
+                    drafts: gg.drafts().to_vec(),
+                    last_drafted: gg.last_drafted().to_vec(),
+                    deaths: gg.stats.deaths,
+                    groups_aborted: gg.stats.groups_aborted,
+                    rejoins: gg.stats.rejoins,
+                }
+            }
+            GgBackend::Sharded(gg) => {
+                let stats = gg.stats();
+                StatsReport {
+                    requests: stats.requests,
+                    conflicts: stats.conflicts,
+                    groups_created: stats.groups_created,
+                    buffer_hits: stats.buffer_hits,
+                    speeds: gg.speed_snapshot(),
+                    drafts: gg.drafts(),
+                    last_drafted: gg.last_drafted(),
+                    deaths: stats.deaths,
+                    groups_aborted: stats.groups_aborted,
+                    rejoins: stats.rejoins,
+                }
+            }
+        }
+    }
+
+    fn retire(&self, w: usize) {
+        match self {
+            GgBackend::SingleLock { state, .. } => state.lock().unwrap().0.retire(w),
+            GgBackend::Sharded(gg) => gg.retire(w),
+        }
+        self.bump();
+    }
+
+    fn abort_group(&self, id: GroupId) {
+        match self {
+            GgBackend::SingleLock { state, .. } => {
+                let _ = state.lock().unwrap().0.abort_group(id);
+            }
+            GgBackend::Sharded(gg) => {
+                let _ = gg.abort_group(id);
+            }
+        }
+        self.bump();
+    }
+
+    fn probe(&self, id: GroupId) -> GroupState {
+        match self {
+            GgBackend::SingleLock { state, .. } => {
+                group_state(&state.lock().unwrap().0, id)
+            }
+            GgBackend::Sharded(gg) => match gg.phase(id) {
+                GroupPhase::Pending => GroupState::Pending,
+                GroupPhase::Armed => GroupState::Armed,
+                GroupPhase::Done => GroupState::Done,
+                GroupPhase::Aborted => GroupState::Aborted,
+            },
+        }
+    }
+
+    fn rejoin(&self, w: usize) {
+        match self {
+            GgBackend::SingleLock { state, .. } => {
+                let _ = state.lock().unwrap().0.rejoin(w);
+            }
+            GgBackend::Sharded(gg) => {
+                let _ = gg.rejoin(w);
+            }
+        }
+        self.bump();
+    }
+
+    fn declare_dead(&self, w: usize) {
+        match self {
+            GgBackend::SingleLock { state, .. } => {
+                let _ = state.lock().unwrap().0.declare_dead(w);
+            }
+            GgBackend::Sharded(gg) => {
+                let _ = gg.declare_dead(w);
+            }
+        }
+        self.bump();
+    }
+}
+
+/// Everything the reactor, its workers, and the monitor share.
+pub(crate) struct ServerShared {
+    pub(crate) backend: GgBackend,
     /// Rank-indexed data-plane address registry (`Register`/`Lookup`).
     addrs: Mutex<Vec<Option<String>>>,
     liveness: Option<LivenessTracker>,
+    /// Total accepted connections (the client-reuse regression tests
+    /// assert a persistent client shows up here exactly once).
+    pub(crate) connections_accepted: AtomicU64,
 }
 
 impl ServerShared {
@@ -561,11 +836,13 @@ impl ServerShared {
     }
 }
 
-/// A running GG server; one thread per connection, shared state machine,
-/// plus an optional liveness monitor ([`LivenessConfig`]).
+/// A running GG server: one event-loop reactor thread multiplexing every
+/// connection ([`reactor`]), a small worker pool executing requests, and
+/// an optional liveness monitor ([`LivenessConfig`]).
 pub struct GgServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    shared: Arc<ServerShared>,
     handle: Option<thread::JoinHandle<()>>,
     monitor: Option<thread::JoinHandle<()>>,
 }
@@ -579,63 +856,53 @@ impl GgServer {
     }
 
     /// [`GgServer::spawn`] with an optional liveness monitor: stale
-    /// heartbeats (see [`LivenessConfig`]) trigger
-    /// [`GroupGenerator::declare_dead`], aborting the dead rank's groups.
+    /// heartbeats (see [`LivenessConfig`]) trigger a death declaration,
+    /// aborting the dead rank's groups.
     pub fn spawn_with_liveness(
         addr: &str,
         cfg: GgConfig,
         seed: u64,
         liveness: Option<LivenessConfig>,
     ) -> Result<Self> {
-        let listener = TcpListener::bind(addr).context("bind GG server")?;
-        let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
+        Self::spawn_with_backend(addr, cfg, seed, liveness, GgMode::default())
+    }
+
+    /// Full-control spawn: pick the Group Generator backend explicitly
+    /// (the prop/stress suites and `--gg-backend locked` use this; the
+    /// default everywhere else is [`GgMode::Sharded`]).
+    pub fn spawn_with_backend(
+        addr: &str,
+        cfg: GgConfig,
+        seed: u64,
+        liveness: Option<LivenessConfig>,
+        mode: GgMode,
+    ) -> Result<Self> {
         let n = cfg.n_workers;
+        let stop = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(ServerShared {
-            state: Mutex::new((GroupGenerator::new(cfg), Pcg32::new(seed))),
+            backend: GgBackend::new(mode, cfg, seed),
             addrs: Mutex::new(vec![None; n]),
             liveness: liveness.map(|cfg| LivenessTracker {
                 cfg,
                 inner: Mutex::new((vec![None; n], vec![false; n])),
             }),
+            connections_accepted: AtomicU64::new(0),
         });
         let monitor = shared.liveness.is_some().then(|| {
             let shared = Arc::clone(&shared);
             let stop = Arc::clone(&stop);
             thread::spawn(move || monitor_liveness(&shared, &stop))
         });
-        let stop2 = Arc::clone(&stop);
-        let shared2 = Arc::clone(&shared);
-        let handle = thread::spawn(move || {
-            listener.set_nonblocking(true).ok();
-            let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        stream.set_nonblocking(false).ok();
-                        // Read timeout so connection threads observe the
-                        // stop flag instead of blocking forever on idle
-                        // clients (shutdown would otherwise deadlock).
-                        stream
-                            .set_read_timeout(Some(std::time::Duration::from_millis(100)))
-                            .ok();
-                        let st = Arc::clone(&shared2);
-                        let stop3 = Arc::clone(&stop2);
-                        conns.push(thread::spawn(move || {
-                            let _ = serve_conn(stream, st, stop3);
-                        }));
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        thread::sleep(std::time::Duration::from_millis(2));
-                    }
-                    Err(_) => break,
-                }
-            }
-            for c in conns {
-                let _ = c.join();
-            }
-        });
-        Ok(Self { addr: local, stop, handle: Some(handle), monitor })
+        let (local, handle) =
+            reactor::spawn(addr, Arc::clone(&shared), Arc::clone(&stop))?;
+        Ok(Self { addr: local, stop, shared, handle: Some(handle), monitor })
+    }
+
+    /// Total client connections accepted so far (regression guard: a
+    /// persistent [`GgClient`] must appear here exactly once, however
+    /// many RPCs it issues).
+    pub fn connections_accepted(&self) -> u64 {
+        self.shared.connections_accepted.load(Ordering::Acquire)
     }
 
     fn join_threads(&mut self) {
@@ -667,16 +934,21 @@ impl Drop for GgServer {
 /// never-seen ranks are exempt — their silence is expected.
 fn monitor_liveness(shared: &ServerShared, stop: &AtomicBool) {
     let tracker = shared.liveness.as_ref().expect("monitor without liveness");
+    let n = shared.backend.n_workers();
     while !stop.load(Ordering::Relaxed) {
         thread::sleep(tracker.cfg.poll);
         let now = Instant::now();
-        let Ok(mut guard) = shared.state.lock() else { return };
-        let (gg, _) = &mut *guard;
-        // lock order everywhere: state, then liveness
+        // Verdicts are computed under the liveness lock only; the
+        // dead/retired reads and the death declarations go through the
+        // backend (lock-free on the sharded path). A rank heartbeating
+        // in the window between verdict and declaration was always
+        // possible — `touch` never took the state lock — so this holds
+        // no new races, and no lock-order edge between liveness and the
+        // GG state remains at all.
         let live = tracker.inner.lock().unwrap();
         let mut verdicts = Vec::new();
-        for w in 0..gg.config().n_workers {
-            if gg.is_dead(w) || gg.is_retired(w) {
+        for w in 0..n {
+            if shared.backend.is_dead(w) || shared.backend.is_retired(w) {
                 continue;
             }
             let accused = live.1[w];
@@ -695,7 +967,7 @@ fn monitor_liveness(shared: &ServerShared, stop: &AtomicBool) {
         drop(live);
         for w in verdicts {
             // clients discover the purge by polling Wait/Probe
-            let _ = gg.declare_dead(w);
+            shared.backend.declare_dead(w);
         }
     }
 }
@@ -722,192 +994,110 @@ fn group_state(gg: &GroupGenerator, id: GroupId) -> GroupState {
     }
 }
 
-fn serve_conn(
-    mut stream: TcpStream,
-    shared: Arc<ServerShared>,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
-    loop {
-        let frame = match read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(e) => {
-                // timeouts poll the stop flag; real errors end the session
-                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
-                    matches!(
-                        io.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    )
-                });
-                if timed_out && !stop.load(Ordering::Relaxed) {
-                    continue;
-                }
-                return Ok(()); // client hung up or server stopping
-            }
-        };
-        let req = Request::decode(&frame)?;
-        // Every rank-bearing request doubles as proof of life.
-        match &req {
-            Request::Sync { worker, .. }
-            | Request::Heartbeat { worker }
-            | Request::Retire { worker }
-            | Request::Register { worker, .. } => shared.touch(*worker as usize),
-            _ => {}
-        }
-        // Lock-free handlers first (no GG state involved).
-        match &req {
-            Request::Heartbeat { .. } => {
-                write_frame(&mut stream, &Response::Ok.encode())?;
-                continue;
-            }
-            Request::Register { worker, addr } => {
-                let w = *worker as usize;
-                let resp = {
-                    let mut addrs = shared.addrs.lock().unwrap();
-                    if w < addrs.len() {
-                        addrs[w] = Some(addr.clone());
-                        Response::Ok
-                    } else {
-                        Response::Err { msg: format!("worker {w} out of range") }
-                    }
-                };
-                write_frame(&mut stream, &resp.encode())?;
-                continue;
-            }
-            Request::Lookup { worker } => {
-                let addr =
-                    shared.addrs.lock().unwrap().get(*worker as usize).cloned().flatten();
-                write_frame(&mut stream, &Response::Addr { addr }.encode())?;
-                continue;
-            }
-            _ => {}
-        }
-        // Blocking calls poll the state machine without holding the lock
-        // across sleeps (other connections keep making progress).
-        if let Request::WaitArmed { id } | Request::WaitDone { id } = req {
-            let want_armed = matches!(req, Request::WaitArmed { .. });
-            let resp = loop {
-                {
-                    let guard = shared.state.lock().map_err(|_| anyhow!("poisoned GG"))?;
-                    match group_state(&guard.0, id) {
-                        s @ (GroupState::Done | GroupState::Aborted) => {
-                            break Response::State(s)
-                        }
-                        GroupState::Armed if want_armed => {
-                            break Response::State(GroupState::Armed)
-                        }
-                        GroupState::Armed | GroupState::Pending => {}
-                    }
-                }
-                if stop.load(Ordering::Relaxed) {
-                    break Response::Err { msg: "server stopping".into() };
-                }
-                thread::sleep(std::time::Duration::from_millis(1));
-            };
-            write_frame(&mut stream, &resp.encode())?;
-            continue;
-        }
-        let resp = {
-            let mut guard = shared.state.lock().map_err(|_| anyhow!("poisoned GG"))?;
-            let (gg, rng) = &mut *guard;
-            match &req {
-                Request::Sync { worker, speed } => {
-                    let w = *worker as usize;
-                    if w >= gg.config().n_workers {
-                        Response::Err { msg: format!("worker {w} out of range") }
-                    } else {
-                        // fold the piggybacked telemetry in *before* the
-                        // request so this very division sees it — unless
-                        // the rank was declared dead: a zombie's report
-                        // must not repopulate the purged speed entry
-                        if !gg.is_dead(w) {
-                            gg.report_speed(w, speed.ewma_step_secs);
-                        }
-                        let (id, armed) = gg.request(w, rng);
-                        // id 0 with no members encodes "skip this sync"
-                        // (GroupIds start at 1)
-                        let id = id.unwrap_or(0);
-                        let members = gg
-                            .group(id)
-                            .map(|g| g.members.iter().map(|&m| m as u32).collect())
-                            .unwrap_or_default();
-                        Response::Assigned { id, members, armed: group_pairs(armed) }
-                    }
-                }
-                Request::Complete { id } => {
-                    let id = *id;
-                    if gg.group(id).is_none() {
-                        // unknown = already completed or aborted: a
-                        // duplicate/retried leader Complete is idempotent,
-                        // not a crash
-                        Response::Armed { groups: Vec::new() }
-                    } else if !gg.is_armed(id) {
-                        // completing a pending group would corrupt the lock
-                        // vector — a client protocol violation
-                        Response::Err { msg: format!("group {id} is not armed") }
-                    } else {
-                        Response::Armed { groups: group_pairs(gg.complete(id)) }
-                    }
-                }
-                Request::Stats => Response::Stats(StatsReport {
-                    requests: gg.stats.requests,
-                    conflicts: gg.stats.conflicts,
-                    groups_created: gg.stats.groups_created,
-                    buffer_hits: gg.stats.buffer_hits,
-                    speeds: gg.speed_table().snapshot(),
-                    drafts: gg.drafts().to_vec(),
-                    last_drafted: gg.last_drafted().to_vec(),
-                    deaths: gg.stats.deaths,
-                    groups_aborted: gg.stats.groups_aborted,
-                    rejoins: gg.stats.rejoins,
-                }),
-                Request::Shutdown => {
-                    stop.store(true, Ordering::Relaxed);
-                    Response::Ok
-                }
-                Request::Retire { worker } => {
-                    let w = *worker as usize;
-                    if w >= gg.config().n_workers {
-                        Response::Err { msg: format!("worker {w} out of range") }
-                    } else {
-                        gg.retire(w);
-                        Response::Ok
-                    }
-                }
-                Request::AbortGroup { id, suspect } => {
-                    // tear the broken group down no matter who (if
-                    // anyone) gets blamed — the collective cannot finish
-                    let _ = gg.abort_group(*id);
-                    let s = *suspect as usize;
-                    if *suspect != NO_SUSPECT && s < gg.config().n_workers {
-                        shared.accuse(s);
-                    }
-                    Response::Ok
-                }
-                Request::Probe { id } => Response::State(group_state(gg, *id)),
-                Request::Rejoin { worker, addr } => {
-                    let w = *worker as usize;
-                    if w >= gg.config().n_workers {
-                        Response::Err { msg: format!("worker {w} out of range") }
-                    } else {
-                        let _ = gg.rejoin(w);
-                        shared.addrs.lock().unwrap()[w] = Some(addr.clone());
-                        shared.clear_suspicion(w);
-                        Response::Ok
-                    }
-                }
-                // handled above without the state lock
-                Request::WaitArmed { .. }
-                | Request::WaitDone { .. }
-                | Request::Heartbeat { .. }
-                | Request::Register { .. }
-                | Request::Lookup { .. } => unreachable!(),
-            }
-        };
-        write_frame(&mut stream, &resp.encode())?;
-        if matches!(req, Request::Shutdown) {
-            return Ok(());
-        }
+/// What a request handler decided: reply now, or park the connection
+/// until the awaited group changes phase (the reactor re-evaluates
+/// parked waits whenever [`GgBackend::epoch`] moves — no poll loop).
+pub(crate) enum Handled {
+    Reply(Response),
+    Park { id: GroupId, want_armed: bool },
+}
+
+/// Evaluate a parked `WaitArmed`/`WaitDone`: `Some(response)` once the
+/// wait resolves, `None` while it must stay parked. On the sharded
+/// backend this reads one group shard — never the scheduler lock.
+pub(crate) fn resolve_wait(
+    shared: &ServerShared,
+    id: GroupId,
+    want_armed: bool,
+) -> Option<Response> {
+    match shared.backend.probe(id) {
+        s @ (GroupState::Done | GroupState::Aborted) => Some(Response::State(s)),
+        GroupState::Armed if want_armed => Some(Response::State(GroupState::Armed)),
+        GroupState::Armed | GroupState::Pending => None,
     }
+}
+
+/// Execute one decoded request against the shared state. Called from the
+/// reactor's worker pool; every backend mutation happens inside
+/// [`GgBackend`], so this function never holds a lock across calls.
+pub(crate) fn handle_request(
+    shared: &ServerShared,
+    req: &Request,
+    stop: &AtomicBool,
+) -> Handled {
+    // Every rank-bearing request doubles as proof of life.
+    match req {
+        Request::Sync { worker, .. }
+        | Request::Heartbeat { worker }
+        | Request::Retire { worker }
+        | Request::Register { worker, .. } => shared.touch(*worker as usize),
+        _ => {}
+    }
+    let n = shared.backend.n_workers();
+    let resp = match req {
+        Request::Heartbeat { .. } => Response::Ok,
+        Request::Register { worker, addr } => {
+            let w = *worker as usize;
+            let mut addrs = shared.addrs.lock().unwrap();
+            if w < addrs.len() {
+                addrs[w] = Some(addr.clone());
+                Response::Ok
+            } else {
+                Response::Err { msg: format!("worker {w} out of range") }
+            }
+        }
+        Request::Lookup { worker } => Response::Addr {
+            addr: shared.addrs.lock().unwrap().get(*worker as usize).cloned().flatten(),
+        },
+        Request::WaitArmed { id } | Request::WaitDone { id } => {
+            let want_armed = matches!(req, Request::WaitArmed { .. });
+            return match resolve_wait(shared, *id, want_armed) {
+                Some(resp) => Handled::Reply(resp),
+                None => Handled::Park { id: *id, want_armed },
+            };
+        }
+        Request::Sync { worker, speed } => {
+            shared.backend.sync(*worker as usize, speed)
+        }
+        Request::Complete { id } => shared.backend.complete(*id),
+        Request::Stats => Response::Stats(shared.backend.stats_report()),
+        Request::Shutdown => {
+            stop.store(true, Ordering::Relaxed);
+            Response::Ok
+        }
+        Request::Retire { worker } => {
+            let w = *worker as usize;
+            if w >= n {
+                Response::Err { msg: format!("worker {w} out of range") }
+            } else {
+                shared.backend.retire(w);
+                Response::Ok
+            }
+        }
+        Request::AbortGroup { id, suspect } => {
+            // tear the broken group down no matter who (if anyone) gets
+            // blamed — the collective cannot finish
+            shared.backend.abort_group(*id);
+            let s = *suspect as usize;
+            if *suspect != NO_SUSPECT && s < n {
+                shared.accuse(s);
+            }
+            Response::Ok
+        }
+        Request::Probe { id } => Response::State(shared.backend.probe(*id)),
+        Request::Rejoin { worker, addr } => {
+            let w = *worker as usize;
+            if w >= n {
+                Response::Err { msg: format!("worker {w} out of range") }
+            } else {
+                shared.backend.rejoin(w);
+                shared.addrs.lock().unwrap()[w] = Some(addr.clone());
+                shared.clear_suspicion(w);
+                Response::Ok
+            }
+        }
+    };
+    Handled::Reply(resp)
 }
 
 // ---------------------------------------------------------------------------
@@ -1338,6 +1528,27 @@ mod tests {
             thread::sleep(Duration::from_millis(20));
         }
         assert_eq!(deaths, 1, "accused silent rank must die on the fast path");
+        server.shutdown();
+    }
+
+    #[test]
+    fn client_connection_is_reused_across_calls() {
+        // Regression: launcher-side stats used to reconnect per call.
+        // One persistent GgClient must register exactly one accepted
+        // connection no matter how many RPCs it issues.
+        let server =
+            GgServer::spawn("127.0.0.1:0", GgConfig::random(4, 4, 2), 2).unwrap();
+        let mut c = GgClient::connect(server.addr).unwrap();
+        for w in 0..4 {
+            c.heartbeat(w).unwrap();
+            let _ = c.stats().unwrap();
+            let _ = c.probe(999).unwrap();
+        }
+        assert_eq!(
+            server.connections_accepted(),
+            1,
+            "a persistent client must not re-dial per call"
+        );
         server.shutdown();
     }
 

@@ -1,0 +1,476 @@
+//! Event-driven serving for the GG RPC service (DESIGN.md §Scale).
+//!
+//! The previous server burned one blocking thread per connection plus a
+//! 2 ms accept-poll sleep — fine at 4 ranks, not at the hundreds the
+//! scale sweep hosts in one process. This module replaces it with:
+//!
+//! * **one reactor thread** owning the listener and every connection:
+//!   non-blocking accepts, non-blocking reads into per-connection
+//!   buffers, frame extraction, and outbox flushing, with an adaptive
+//!   idle backoff (50 µs → 1 ms) instead of a fixed sleep;
+//! * **a small worker pool** draining a condvar work queue: decode the
+//!   request, run [`handle_request`] against the shared backend, append
+//!   the response frame to the connection's outbox;
+//! * **parked waits**: `WaitArmed`/`WaitDone` that cannot resolve yet
+//!   hold no thread and no lock — they sit in a waiter list that is
+//!   re-evaluated whenever the backend's epoch counter moves (every
+//!   phase-changing operation bumps it). The old path polled the state
+//!   lock every 1 ms per waiting connection.
+//!
+//! Concurrency contract with clients: a [`GgClient`](super::GgClient)
+//! issues one call at a time per connection (synchronous request →
+//! response), so per-connection response ordering is trivially
+//! preserved. Frames are still atomic even for a misbehaving pipelined
+//! client — each response is appended to the outbox under its mutex in
+//! one piece — but interleaving *order* is only guaranteed for the
+//! one-outstanding-call contract every client in this repo follows.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::{handle_request, resolve_wait, Handled, Request, Response, ServerShared};
+use crate::gg::GroupId;
+
+/// Same frame cap as the blocking codec path.
+const MAX_FRAME: usize = 1 << 24;
+
+/// Idle backoff bounds: reset to `IDLE_MIN` on any progress, double up
+/// to `IDLE_MAX` while nothing moves. Replaces the fixed 2 ms sleep.
+const IDLE_MIN: Duration = Duration::from_micros(50);
+const IDLE_MAX: Duration = Duration::from_millis(1);
+
+/// Best-effort flush budget for responses still queued at shutdown.
+const DRAIN_BUDGET: Duration = Duration::from_millis(500);
+
+/// One client connection. The reactor owns reads; responses are staged
+/// in `out` (worker threads append whole frames under the mutex, then
+/// opportunistically flush; the reactor re-flushes whatever the socket
+/// buffer refused).
+struct Conn {
+    stream: TcpStream,
+    out: Mutex<Vec<u8>>,
+    closed: AtomicBool,
+}
+
+impl Conn {
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+    }
+
+    fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+}
+
+/// Reactor-private per-connection read state.
+struct ConnState {
+    conn: Arc<Conn>,
+    rd: Vec<u8>,
+}
+
+/// A decoded-frame unit of work for the pool.
+struct Job {
+    conn: Arc<Conn>,
+    frame: Vec<u8>,
+}
+
+#[derive(Default)]
+struct WorkQueue {
+    jobs: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+/// A parked `WaitArmed`/`WaitDone` holding no thread.
+struct Waiter {
+    conn: Arc<Conn>,
+    id: GroupId,
+    want_armed: bool,
+}
+
+/// Bind `addr` and start the reactor; returns the bound address and the
+/// reactor's join handle (workers are joined inside it).
+pub(crate) fn spawn(
+    addr: &str,
+    shared: Arc<ServerShared>,
+    stop: Arc<AtomicBool>,
+) -> Result<(SocketAddr, thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr).context("bind GG server")?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true).context("nonblocking GG listener")?;
+    let handle = thread::spawn(move || run(listener, shared, stop));
+    Ok((local, handle))
+}
+
+fn run(listener: TcpListener, shared: Arc<ServerShared>, stop: Arc<AtomicBool>) {
+    let queue = Arc::new(WorkQueue::default());
+    let waiters: Arc<Mutex<Vec<Waiter>>> = Arc::new(Mutex::new(Vec::new()));
+    let n_workers =
+        thread::available_parallelism().map(|p| p.get()).unwrap_or(1).clamp(2, 8);
+    let workers: Vec<_> = (0..n_workers)
+        .map(|_| {
+            let (shared, queue, waiters, stop) = (
+                Arc::clone(&shared),
+                Arc::clone(&queue),
+                Arc::clone(&waiters),
+                Arc::clone(&stop),
+            );
+            thread::spawn(move || worker_loop(&shared, &queue, &waiters, &stop))
+        })
+        .collect();
+
+    let mut conns: Vec<ConnState> = Vec::new();
+    let mut idle = IDLE_MIN;
+    let mut last_epoch = shared.backend.epoch();
+    while !stop.load(Ordering::Relaxed) {
+        let mut progress = false;
+        // accept everything ready, without blocking
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(true).ok();
+                    stream.set_nodelay(true).ok();
+                    shared.connections_accepted.fetch_add(1, Ordering::AcqRel);
+                    conns.push(ConnState {
+                        conn: Arc::new(Conn {
+                            stream,
+                            out: Mutex::new(Vec::new()),
+                            closed: AtomicBool::new(false),
+                        }),
+                        rd: Vec::new(),
+                    });
+                    progress = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        for cs in &mut conns {
+            progress |= pump_reads(cs, &queue);
+        }
+        for cs in &conns {
+            progress |= flush(&cs.conn);
+        }
+        conns.retain(|cs| !cs.conn.is_closed());
+        // Re-evaluate parked waits only when some group's phase may have
+        // changed — the epoch is bumped by every mutating backend op.
+        let epoch = shared.backend.epoch();
+        if epoch != last_epoch {
+            last_epoch = epoch;
+            progress |= sweep_waiters(&shared, &waiters);
+        }
+        if progress {
+            idle = IDLE_MIN;
+        } else {
+            thread::sleep(idle);
+            idle = (idle * 2).min(IDLE_MAX);
+        }
+    }
+
+    // Shutdown: wake and join the pool, fail whatever is still parked,
+    // then best-effort flush the queued responses (the Shutdown Ok
+    // itself is one of them).
+    queue.cv.notify_all();
+    for w in workers {
+        let _ = w.join();
+    }
+    let parked: Vec<Waiter> = std::mem::take(&mut *waiters.lock().unwrap());
+    for w in parked {
+        send(&w.conn, &Response::Err { msg: "server stopping".into() });
+    }
+    let deadline = Instant::now() + DRAIN_BUDGET;
+    loop {
+        let mut pending = false;
+        for cs in &conns {
+            flush(&cs.conn);
+            pending |=
+                !cs.conn.is_closed() && !cs.conn.out.lock().unwrap().is_empty();
+        }
+        if !pending || Instant::now() >= deadline {
+            break;
+        }
+        thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Drain readable bytes into the connection's buffer and enqueue every
+/// complete frame. Returns whether anything moved.
+fn pump_reads(cs: &mut ConnState, queue: &WorkQueue) -> bool {
+    if cs.conn.is_closed() {
+        return false;
+    }
+    let mut progress = false;
+    let mut buf = [0u8; 8192];
+    loop {
+        match (&cs.conn.stream).read(&mut buf) {
+            Ok(0) => {
+                cs.conn.close();
+                break;
+            }
+            Ok(n) => {
+                cs.rd.extend_from_slice(&buf[..n]);
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                cs.conn.close();
+                break;
+            }
+        }
+    }
+    while cs.rd.len() >= 4 {
+        let len =
+            u32::from_le_bytes([cs.rd[0], cs.rd[1], cs.rd[2], cs.rd[3]]) as usize;
+        if len > MAX_FRAME {
+            cs.conn.close(); // protocol violation
+            break;
+        }
+        if cs.rd.len() < 4 + len {
+            break; // frame still arriving
+        }
+        let frame = cs.rd[4..4 + len].to_vec();
+        cs.rd.drain(..4 + len);
+        let mut jobs = queue.jobs.lock().unwrap();
+        jobs.push_back(Job { conn: Arc::clone(&cs.conn), frame });
+        drop(jobs);
+        queue.cv.notify_one();
+        progress = true;
+    }
+    progress
+}
+
+fn worker_loop(
+    shared: &ServerShared,
+    queue: &WorkQueue,
+    waiters: &Mutex<Vec<Waiter>>,
+    stop: &AtomicBool,
+) {
+    loop {
+        let job = {
+            let mut jobs = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = jobs.pop_front() {
+                    break Some(j);
+                }
+                if stop.load(Ordering::Relaxed) {
+                    break None;
+                }
+                // timeout as a stop-flag backstop (the reactor also
+                // notify_all()s on shutdown)
+                let (guard, _) = queue
+                    .cv
+                    .wait_timeout(jobs, Duration::from_millis(50))
+                    .unwrap();
+                jobs = guard;
+            }
+        };
+        let Some(job) = job else { return };
+        match Request::decode(&job.frame) {
+            Err(_) => job.conn.close(), // garbage client: drop the session
+            Ok(req) => match handle_request(shared, &req, stop) {
+                Handled::Reply(resp) => {
+                    send(&job.conn, &resp);
+                    if matches!(req, Request::Shutdown) {
+                        queue.cv.notify_all(); // wake peers to observe stop
+                    }
+                }
+                Handled::Park { id, want_armed } => {
+                    waiters
+                        .lock()
+                        .unwrap()
+                        .push(Waiter { conn: Arc::clone(&job.conn), id, want_armed });
+                    // The phase may have changed between the handler's
+                    // evaluation and the park — sweep once so that
+                    // transition is never missed (the reactor only
+                    // sweeps on *future* epoch moves).
+                    sweep_waiters(shared, waiters);
+                }
+            },
+        }
+    }
+}
+
+/// Resolve every parked wait that can now answer. Waiters are removed
+/// under the list lock (so concurrent sweeps never double-reply) and
+/// their responses written after it drops.
+fn sweep_waiters(shared: &ServerShared, waiters: &Mutex<Vec<Waiter>>) -> bool {
+    let resolved: Vec<(Arc<Conn>, Response)> = {
+        let mut ws = waiters.lock().unwrap();
+        let mut resolved = Vec::new();
+        ws.retain(|w| {
+            if w.conn.is_closed() {
+                return false; // client hung up while parked
+            }
+            match resolve_wait(shared, w.id, w.want_armed) {
+                Some(resp) => {
+                    resolved.push((Arc::clone(&w.conn), resp));
+                    false
+                }
+                None => true,
+            }
+        });
+        resolved
+    };
+    let progress = !resolved.is_empty();
+    for (conn, resp) in resolved {
+        send(&conn, &resp);
+    }
+    progress
+}
+
+/// Stage one response frame atomically and try to push it out.
+fn send(conn: &Conn, resp: &Response) {
+    let payload = resp.encode();
+    {
+        let mut out = conn.out.lock().unwrap();
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+    }
+    flush(conn);
+}
+
+/// Write as much of the outbox as the socket accepts right now.
+fn flush(conn: &Conn) -> bool {
+    if conn.is_closed() {
+        return false;
+    }
+    let mut out = conn.out.lock().unwrap();
+    let mut progress = false;
+    while !out.is_empty() {
+        match (&conn.stream).write(&out) {
+            Ok(0) => {
+                conn.close();
+                break;
+            }
+            Ok(n) => {
+                out.drain(..n);
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.close();
+                break;
+            }
+        }
+    }
+    progress
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::gg::GgConfig;
+    use crate::rpc::{GgClient, GgMode, GgServer};
+
+    /// Many synchronous clients over real sockets against the reactor:
+    /// every request answered, shared state consistent, clean shutdown.
+    /// Clients complete *transitively* — a Complete's newly-armed groups
+    /// are completed too — so every armed group is finished by whichever
+    /// client it was handed to and no `wait_done` can park forever.
+    #[test]
+    fn reactor_serves_many_concurrent_clients() {
+        let server =
+            GgServer::spawn("127.0.0.1:0", GgConfig::random(8, 4, 2), 3).unwrap();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..8)
+            .map(|w| {
+                std::thread::spawn(move || {
+                    let mut c = GgClient::connect(addr).unwrap();
+                    // a deadlock should fail loudly, not hang the suite
+                    c.set_io_timeout(std::time::Duration::from_secs(30)).unwrap();
+                    for _ in 0..20 {
+                        let (assigned, armed) = c.sync(w, 0.01).unwrap();
+                        let mut todo: Vec<_> =
+                            armed.into_iter().map(|(gid, _)| gid).collect();
+                        while let Some(gid) = todo.pop() {
+                            for (ng, _) in c.complete(gid).unwrap() {
+                                todo.push(ng);
+                            }
+                        }
+                        if let Some((gid, _)) = assigned {
+                            // armed-elsewhere groups finish via that
+                            // client's transitive completes
+                            c.wait_done(gid).unwrap();
+                        }
+                        c.heartbeat(w).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut c = GgClient::connect(addr).unwrap();
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.requests, 8 * 20, "every Sync must be served exactly once");
+        server.shutdown();
+    }
+
+    /// The locked (oracle) backend serves the identical protocol through
+    /// the same reactor — it must stay a drop-in for differential runs.
+    #[test]
+    fn reactor_serves_single_lock_backend_too() {
+        let server = GgServer::spawn_with_backend(
+            "127.0.0.1:0",
+            GgConfig::random(4, 4, 2),
+            9,
+            None,
+            GgMode::SingleLock,
+        )
+        .unwrap();
+        let mut c = GgClient::connect(server.addr).unwrap();
+        let (assigned, armed) = c.sync(0, 0.0).unwrap();
+        let (gid, _) = assigned.expect("sync must assign");
+        assert!(!armed.is_empty());
+        let _ = c.complete(gid).unwrap();
+        assert_eq!(c.stats().unwrap().requests, 1);
+        server.shutdown();
+    }
+
+    /// A parked WaitDone must resolve when a *different* connection
+    /// completes the group — the epoch sweep path, not a poll loop.
+    #[test]
+    fn parked_wait_resolves_via_epoch_sweep() {
+        let server =
+            GgServer::spawn("127.0.0.1:0", GgConfig::random(4, 4, 2), 7).unwrap();
+        let addr = server.addr;
+        let mut c = GgClient::connect(addr).unwrap();
+        let (assigned, _) = c.sync(0, 0.0).unwrap();
+        let (gid, _) = assigned.unwrap();
+        let waiter = std::thread::spawn(move || {
+            let mut c2 = GgClient::connect(addr).unwrap();
+            c2.wait_done(gid).unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        c.complete(gid).unwrap();
+        waiter.join().unwrap();
+        server.shutdown();
+    }
+
+    /// Waits still parked at shutdown get an explicit error response
+    /// instead of a hang or a silent close.
+    #[test]
+    fn shutdown_fails_parked_waits() {
+        let server =
+            GgServer::spawn("127.0.0.1:0", GgConfig::random(4, 4, 2), 8).unwrap();
+        let addr = server.addr;
+        let mut c = GgClient::connect(addr).unwrap();
+        let (assigned, _) = c.sync(0, 0.0).unwrap();
+        let (gid, _) = assigned.unwrap();
+        let waiter = std::thread::spawn(move || {
+            let mut c2 = GgClient::connect(addr).unwrap();
+            c2.wait_done(gid) // never completed: parked until shutdown
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        server.shutdown();
+        let err = waiter.join().unwrap();
+        assert!(err.is_err(), "parked wait must surface the shutdown as an error");
+    }
+}

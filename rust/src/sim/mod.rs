@@ -43,6 +43,13 @@ pub struct SimParams {
     /// worker's primary class). 0 = IID; the figure harnesses use 0.6 so
     /// synchronization frequency/randomness has a statistical effect.
     pub data_bias: f64,
+    /// Coordinator CPU seconds per GG RPC for the contention model
+    /// ([`crate::comm::CostModel::gg_rtt_contended`]). 0.0 (default)
+    /// disables contention — bit-identical to the pre-scale model.
+    pub gg_service: f64,
+    /// Independently lockable GG shards the contention model divides the
+    /// outstanding-RPC queue across. Ignored while `gg_service == 0`.
+    pub gg_shards: usize,
 }
 
 impl SimParams {
@@ -56,6 +63,8 @@ impl SimParams {
             compute_base: calibration::VGG16_COMPUTE,
             model_bytes: calibration::VGG16_BYTES,
             data_bias: 0.0,
+            gg_service: 0.0,
+            gg_shards: 1,
         }
     }
 
@@ -69,6 +78,8 @@ impl SimParams {
             compute_base: calibration::RESNET50_COMPUTE,
             model_bytes: calibration::RESNET50_BYTES,
             data_bias: 0.0,
+            gg_service: 0.0,
+            gg_shards: 1,
         }
     }
 

@@ -55,6 +55,9 @@ enum WState {
 /// `wire_bytes` is the codec-compressed per-member transfer size and
 /// `bw` the current per-worker link throttle (1.0 = full speed); every
 /// started collective adds its `2(p-1)` chunk transfers to `wire_total`.
+/// `gg_service`/`gg_shards` feed the coordinator-contention model: each
+/// start's GG round trip waits behind the still-Ready workers racing the
+/// GG, spread across the shards (identity at `gg_service == 0`).
 #[allow(clippy::too_many_arguments)]
 fn start_runnable(
     armed: &mut HashMap<GroupId, Vec<usize>>,
@@ -66,6 +69,8 @@ fn start_runnable(
     wire_bytes: usize,
     bw: &[f64],
     wire_total: &mut u64,
+    gg_service: f64,
+    gg_shards: usize,
 ) {
     let mut runnable: Vec<GroupId> = armed
         .iter()
@@ -80,7 +85,10 @@ fn start_runnable(
         for &m in &members {
             wstate[m] = WState::InPReduce;
         }
-        let dur = cost.gg_rtt()
+        // workers sitting at their sync point right now are in the GG's
+        // request/notify queues alongside this group's start
+        let outstanding = wstate.iter().filter(|&&s| s == WState::Ready).count();
+        let dur = cost.gg_rtt_contended(outstanding, gg_service, gg_shards)
             + cache.acquire(&members)
             + cost.ring_allreduce_throttled(&members, wire_bytes, bw)
             + calibration::PREDUCE_OVERHEAD;
@@ -238,7 +246,8 @@ fn run_inner(
                             }
                             start_runnable(
                                 &mut armed, &mut wstate, &mut q, now, &cost, &mut cache,
-                                bytes, &bw_div, &mut wire_total,
+                                bytes, &bw_div, &mut wire_total, params.gg_service,
+                                params.gg_shards,
                             );
                         }
                     }
@@ -293,7 +302,7 @@ fn run_inner(
                     }
                     start_runnable(
                         &mut armed, &mut wstate, &mut q, now, &cost, &mut cache, bytes,
-                        &bw_div, &mut wire_total,
+                        &bw_div, &mut wire_total, params.gg_service, params.gg_shards,
                     );
                 } else {
                     // static scheduling: one schedule step per section
@@ -383,7 +392,7 @@ fn run_inner(
                 }
                 start_runnable(
                     &mut armed, &mut wstate, &mut q, now, &cost, &mut cache, bytes,
-                    &bw_div, &mut wire_total,
+                    &bw_div, &mut wire_total, params.gg_service, params.gg_shards,
                 );
             }
             Ev::StaticDone(_sidx, members) => {
@@ -415,7 +424,7 @@ fn run_inner(
                     }
                     start_runnable(
                         &mut armed, &mut wstate, &mut q, now, &cost, &mut cache, bytes,
-                        &bw_div, &mut wire_total,
+                        &bw_div, &mut wire_total, params.gg_service, params.gg_shards,
                     );
                 }
             }
@@ -521,6 +530,41 @@ mod tests {
         p.dataset_size = 256;
         p.batch = 32;
         p
+    }
+
+    #[test]
+    fn gg_contention_costs_time_and_sharding_recovers_it() {
+        // service = 0 must be bit-identical to the pre-contention model,
+        // regardless of the shard count (the shards knob is ignored).
+        let base = run(&params(AlgoKind::RipplesRandom));
+        let mut zero = params(AlgoKind::RipplesRandom);
+        zero.gg_shards = 16;
+        let z = run(&zero);
+        assert_eq!(z.final_time.to_bits(), base.final_time.to_bits());
+        assert_eq!(z.total_iters, base.total_iters);
+
+        // A busy single-lock coordinator slows the run; 16 shards divide
+        // the queue and claw most of the loss back.
+        let mut locked = params(AlgoKind::RipplesRandom);
+        locked.gg_service = 5e-3;
+        locked.gg_shards = 1;
+        let slow = run(&locked);
+        let mut sharded = locked.clone();
+        sharded.gg_shards = 16;
+        let fast = run(&sharded);
+        assert!(
+            slow.final_time > base.final_time,
+            "contention free: {} vs {}",
+            slow.final_time,
+            base.final_time
+        );
+        assert!(
+            fast.final_time < slow.final_time,
+            "sharding did not help: {} vs {}",
+            fast.final_time,
+            slow.final_time
+        );
+        assert!(fast.final_time >= base.final_time);
     }
 
     #[test]

@@ -270,6 +270,203 @@ fn prop_death_purge_invariants_smart_gg() {
     }
 }
 
+/// Differential fuzz: the sharded scale-out coordinator vs the
+/// single-lock oracle under ONE interleaved op stream — Sync, Complete,
+/// declare_dead, rejoin, retire, report_speed, abort_group. Assignments,
+/// armed sets, purges, and stats must be identical per op (the sharded
+/// path sequences its mutators so RNG consumption and stat ordering
+/// match the oracle exactly); every 8 ops the full observable state is
+/// swept. Seed and step are in every panic message.
+fn gg_differential_workload(cfg: GgConfig, seed: u64, steps: usize) {
+    use ripples::gg::ShardedGg;
+    let n = cfg.n_workers;
+    let mut oracle = GroupGenerator::new(cfg.clone());
+    let mut orng = Pcg32::new(seed);
+    let sharded = ShardedGg::new(cfg.clone(), seed);
+    let mut ops = Pcg32::new(seed ^ 0xD1FF);
+    let mut armed: Vec<GroupId> = Vec::new();
+    // Vec (not HashSet): choices must replay identically across runs
+    let mut dead: Vec<usize> = Vec::new();
+
+    let full_sweep = |oracle: &GroupGenerator, sharded: &ShardedGg, step: usize| {
+        assert_eq!(
+            format!("{:?}", oracle.stats),
+            format!("{:?}", sharded.stats()),
+            "seed {seed} step {step}: stats diverged"
+        );
+        assert_eq!(oracle.counters(), &sharded.counters()[..], "seed {seed} step {step}");
+        assert_eq!(oracle.drafts(), &sharded.drafts()[..], "seed {seed} step {step}");
+        assert_eq!(
+            oracle.last_drafted(),
+            &sharded.last_drafted()[..],
+            "seed {seed} step {step}"
+        );
+        assert_eq!(oracle.pending_len(), sharded.pending_len(), "seed {seed} step {step}");
+        assert_eq!(
+            oracle.locked_count(),
+            sharded.locked_count(),
+            "seed {seed} step {step}"
+        );
+        let mut a_live = oracle.live_group_ids();
+        let mut b_live = sharded.live_group_ids();
+        a_live.sort_unstable();
+        b_live.sort_unstable();
+        assert_eq!(a_live, b_live, "seed {seed} step {step}: live groups diverged");
+        assert_eq!(
+            oracle.speed_table().snapshot(),
+            sharded.speed_snapshot(),
+            "seed {seed} step {step}: speed tables diverged"
+        );
+        for w in 0..n {
+            assert_eq!(
+                oracle.gb_snapshot(w),
+                sharded.gb_snapshot(w),
+                "seed {seed} step {step}: GB of {w} diverged"
+            );
+            assert_eq!(
+                oracle.is_locked_worker(w),
+                sharded.is_locked_worker(w),
+                "seed {seed} step {step}: lock bit of {w} diverged"
+            );
+            assert_eq!(oracle.is_dead(w), sharded.is_dead(w), "seed {seed} step {step}");
+            assert_eq!(
+                oracle.is_retired(w),
+                sharded.is_retired(w),
+                "seed {seed} step {step}"
+            );
+        }
+    };
+
+    for step in 0..steps {
+        let roll = ops.gen_f64();
+        if roll < 0.50 {
+            // ---- Sync from a random live rank
+            let live: Vec<usize> = (0..n).filter(|w| !dead.contains(w)).collect();
+            if !live.is_empty() {
+                let w = live[ops.gen_range(live.len())];
+                let (aa, ag) = oracle.request(w, &mut orng);
+                let (ba, bg) = sharded.request(w);
+                assert_eq!(aa, ba, "seed {seed} step {step}: assignment diverged");
+                assert_eq!(ag, bg, "seed {seed} step {step}: armed set diverged");
+                armed.extend(ag.iter().map(|g| g.id));
+            }
+        } else if roll < 0.70 {
+            // ---- Complete a random armed group
+            if !armed.is_empty() {
+                let id = armed.swap_remove(ops.gen_range(armed.len()));
+                let a = oracle.complete(id);
+                let b = sharded.complete(id);
+                assert_eq!(a, b, "seed {seed} step {step}: complete({id}) diverged");
+                armed.extend(a.iter().map(|g| g.id));
+            }
+        } else if roll < 0.76 {
+            // ---- declare a random live rank dead (keep 2 alive)
+            if dead.len() + 2 < n {
+                let live: Vec<usize> = (0..n).filter(|w| !dead.contains(w)).collect();
+                let victim = live[ops.gen_range(live.len())];
+                let a = oracle.declare_dead(victim);
+                let b = sharded.declare_dead(victim);
+                assert_eq!(
+                    format!("{a:?}"),
+                    format!("{b:?}"),
+                    "seed {seed} step {step}: death purge of {victim} diverged"
+                );
+                dead.push(victim);
+                armed.extend(a.newly_armed.iter().map(|g| g.id));
+            }
+        } else if roll < 0.82 {
+            // ---- rejoin a dead rank (or, rarely, a live one — that
+            // purges and revives in both)
+            let w = if !dead.is_empty() && ops.gen_f64() < 0.8 {
+                dead.swap_remove(ops.gen_range(dead.len()))
+            } else {
+                ops.gen_range(n)
+            };
+            dead.retain(|&d| d != w);
+            let a = oracle.rejoin(w);
+            let b = sharded.rejoin(w);
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "seed {seed} step {step}: rejoin purge of {w} diverged"
+            );
+            armed.extend(a.newly_armed.iter().map(|g| g.id));
+        } else if roll < 0.88 {
+            // ---- abort a random armed group (failure repair path)
+            if !armed.is_empty() {
+                let id = armed.swap_remove(ops.gen_range(armed.len()));
+                let a = oracle.abort_group(id);
+                let b = sharded.abort_group(id);
+                assert_eq!(a, b, "seed {seed} step {step}: abort({id}) diverged");
+                assert_eq!(
+                    oracle.was_aborted(id),
+                    sharded.was_aborted(id),
+                    "seed {seed} step {step}"
+                );
+                armed.extend(a.iter().map(|g| g.id));
+            }
+        } else if roll < 0.94 {
+            // ---- retire a random rank
+            let w = ops.gen_range(n);
+            oracle.retire(w);
+            sharded.retire(w);
+        } else {
+            // ---- piggybacked speed report (same value to both)
+            let w = ops.gen_range(n);
+            let s = 0.005 + 0.040 * ops.gen_f64();
+            oracle.report_speed(w, s);
+            sharded.report_speed(w, s);
+        }
+        // purges/aborts may have torn down groups still in our list
+        armed.retain(|&id| oracle.is_armed(id));
+        armed.sort_unstable();
+        armed.dedup();
+        if step % 8 == 0 {
+            full_sweep(&oracle, &sharded, step);
+        }
+    }
+    full_sweep(&oracle, &sharded, steps);
+    // drain both and verify neither leaks
+    while let Some(id) = armed.pop() {
+        let a = oracle.complete(id);
+        let b = sharded.complete(id);
+        assert_eq!(a, b, "seed {seed} drain: complete({id}) diverged");
+        armed.extend(a.iter().map(|g| g.id));
+    }
+    assert_eq!(oracle.pending_len(), 0, "seed {seed}: oracle leaked pending");
+    assert_eq!(sharded.pending_len(), 0, "seed {seed}: sharded leaked pending");
+    assert_eq!(sharded.locked_count(), 0, "seed {seed}: sharded leaked locks");
+}
+
+#[test]
+fn prop_sharded_gg_differentially_equal_random() {
+    for seed in 0..SEEDS {
+        gg_differential_workload(GgConfig::random(16, 4, 3), seed, 250);
+    }
+}
+
+#[test]
+fn prop_sharded_gg_differentially_equal_smart() {
+    for seed in 0..SEEDS {
+        gg_differential_workload(GgConfig::smart(16, 4, 3, 8), seed, 250);
+    }
+}
+
+#[test]
+fn prop_sharded_gg_differentially_equal_various_shapes() {
+    let mut rng = Pcg32::new(0x5ca1e);
+    for seed in 0..SEEDS {
+        let nodes = 1 + rng.gen_range(6);
+        let wpn = 1 + rng.gen_range(6);
+        let n = (nodes * wpn).max(3);
+        let k = 2 + rng.gen_range((n - 1).min(5));
+        gg_differential_workload(GgConfig::random(n, wpn, k), seed, 120);
+        let mut smart = GgConfig::smart(n, wpn, k, 4);
+        smart.rendezvous = seed % 2 == 0;
+        gg_differential_workload(smart, seed, 120);
+    }
+}
+
 /// Identical crash schedules replay bit-for-bit: the fault-injection
 /// backbone's reproducibility guarantee, end to end through the
 /// simulator (crash, repair, rejoin, loss trace).

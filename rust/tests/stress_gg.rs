@@ -1,0 +1,257 @@
+//! Concurrency stress suite for the sharded Group Generator and the
+//! reactor RPC plane (`make stress`). Unlike `prop_gg`'s sequential
+//! differential fuzz, every test here hammers ONE coordinator from many
+//! real threads at once and checks the paper's serialization invariants
+//! *while* the races are live:
+//!
+//!   * no rank is ever a member of two armed groups (LockVector
+//!     exclusivity), detected via a per-rank owner ledger of CAS'd
+//!     group ids — a double grant fails the CAS with both ids in hand;
+//!   * per-rank Group Buffer FIFO: the assigned group ids a rank
+//!     observes are non-decreasing (creation order; an older group never
+//!     surfaces after a newer one);
+//!   * death/rejoin chaos leaves no leaked locks, no lock bit on a dead
+//!     rank, and a fully drainable group table;
+//!   * 64 real TCP clients against one reactor-served `GgServer` are
+//!     each served exactly once per Sync.
+//!
+//! Everything is bounded (iteration counts, IO timeouts) so a deadlock
+//! fails loudly instead of hanging the suite; `make stress` adds a hard
+//! `timeout` on top.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use ripples::gg::{GgConfig, ShardedGg};
+
+/// T = n_workers threads, each exclusively driving its own rank through
+/// `iters` request + transitive-complete rounds against one shared
+/// [`ShardedGg`].
+///
+/// Owner ledger: each newly-armed group is returned to exactly one
+/// caller (the op that armed it); that caller CASes every member's cell
+/// `0 -> gid` on delivery and stores `0` back *before* completing the
+/// group. While a group is armed its members' locks are held, so no
+/// other group naming them can arm — any failed CAS is a genuine double
+/// grant, and the panic carries both group ids.
+fn hammer(cfg: GgConfig, iters: usize) {
+    let n = cfg.n_workers;
+    let gg = Arc::new(ShardedGg::new(cfg, 0xABBA));
+    let ledger: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+
+    std::thread::scope(|scope| {
+        for w in 0..n {
+            let gg = Arc::clone(&gg);
+            let ledger = Arc::clone(&ledger);
+            scope.spawn(move || {
+                let mut last_assigned = 0u64; // gids start at 1
+                for _ in 0..iters {
+                    let (assigned, newly) = gg.request(w);
+                    if let Some(gid) = assigned {
+                        // non-decreasing: a still-open buffer front is
+                        // legitimately re-served, but an *older* group
+                        // must never surface after a newer one (GB FIFO
+                        // + monotone creation ids)
+                        assert!(
+                            gid >= last_assigned,
+                            "rank {w}: GB FIFO violated ({gid} after {last_assigned})"
+                        );
+                        last_assigned = gid;
+                    }
+                    // transitively complete every group this thread owns
+                    let mut todo = newly;
+                    while let Some(g) = todo.pop() {
+                        for &m in &g.members {
+                            let prev = ledger[m].compare_exchange(
+                                0,
+                                g.id,
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            );
+                            if let Err(other) = prev {
+                                panic!(
+                                    "rank {m} granted to two armed groups at once: \
+                                     g{} and g{other}",
+                                    g.id
+                                );
+                            }
+                        }
+                        // release the ledger BEFORE complete(): the locks
+                        // are still held here, so no concurrent arm of
+                        // these members can race the store
+                        for &m in &g.members {
+                            let prev = ledger[m].swap(0, Ordering::AcqRel);
+                            assert_eq!(prev, g.id, "ledger of {m} corrupted");
+                        }
+                        todo.extend(gg.complete(g.id));
+                    }
+                }
+            });
+        }
+    });
+
+    // quiesce: complete whatever armed groups remained undelivered-as-
+    // completable (threads exited mid-chain), then nothing may leak
+    drain(&gg);
+    assert_eq!(gg.pending_len(), 0, "pending groups leaked");
+    assert_eq!(gg.locked_count(), 0, "locks leaked");
+    let stats = gg.stats();
+    assert_eq!(stats.requests, (n * iters) as u64, "requests lost or duplicated");
+    let csum: u64 = gg.counters().iter().sum();
+    assert_eq!(csum, stats.requests, "per-worker counters drifted");
+}
+
+/// Complete every live armed group until the table is empty (completing
+/// armed groups frees locks, which arms pending ones). Bounded so a
+/// stuck table panics instead of spinning forever.
+fn drain(gg: &ShardedGg) {
+    for _ in 0..100_000 {
+        let live = gg.live_group_ids();
+        if live.is_empty() {
+            return;
+        }
+        let mut progressed = false;
+        for id in live {
+            if gg.is_armed(id) {
+                gg.complete(id);
+                progressed = true;
+            }
+        }
+        assert!(progressed, "live groups remain but none are armed: stuck table");
+    }
+    panic!("drain did not converge");
+}
+
+#[test]
+fn stress_no_double_grants_random_gg() {
+    hammer(GgConfig::random(16, 4, 3), 400);
+}
+
+#[test]
+fn stress_no_double_grants_smart_gg() {
+    // GB + GD + inter-intra: the buffer-hit fast path and the division
+    // path race each other here
+    hammer(GgConfig::smart(16, 4, 3, 8), 400);
+}
+
+#[test]
+fn stress_no_double_grants_rendezvous_gg() {
+    let mut cfg = GgConfig::random(12, 4, 3);
+    cfg.rendezvous = true;
+    cfg.use_group_buffer = true;
+    hammer(cfg, 400);
+}
+
+/// Death/rejoin chaos: a dedicated chaos thread repeatedly kills and
+/// rejoins one victim rank while every other rank hammers the
+/// coordinator. The victim can still be drafted into groups while alive,
+/// so purges race live arms and completes. Afterwards: all purges
+/// accounted, no lock bit on any dead rank at any observed point, no
+/// leaks after drain.
+#[test]
+fn stress_death_rejoin_chaos_purges_completely() {
+    let n = 16usize;
+    let victim = n - 1;
+    let rounds = 60u64;
+    let gg = Arc::new(ShardedGg::new(GgConfig::smart(n, 4, 3, 8), 0xC4A0));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|scope| {
+        // workers: every rank except the victim
+        for w in 0..n - 1 {
+            let gg = Arc::clone(&gg);
+            let stop = Arc::clone(&stop);
+            scope.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    let (_, newly) = gg.request(w);
+                    let mut todo: Vec<_> = newly.into_iter().map(|g| g.id).collect();
+                    while let Some(id) = todo.pop() {
+                        // purged groups complete as no-ops (Unknown)
+                        todo.extend(gg.complete(id).into_iter().map(|g| g.id));
+                    }
+                }
+            });
+        }
+        // chaos: death + rejoin of the victim, owning its rank exclusively
+        let chaos_gg = Arc::clone(&gg);
+        let chaos_stop = Arc::clone(&stop);
+        scope.spawn(move || {
+            for _ in 0..rounds {
+                let purge = chaos_gg.declare_dead(victim);
+                // the dead rank must hold no lock the instant the purge
+                // returns (the purge's own guard sweep)
+                assert!(
+                    !chaos_gg.is_locked_worker(victim),
+                    "dead victim still holds a lock"
+                );
+                assert!(chaos_gg.is_dead(victim));
+                let mut todo: Vec<_> =
+                    purge.newly_armed.into_iter().map(|g| g.id).collect();
+                while let Some(id) = todo.pop() {
+                    todo.extend(chaos_gg.complete(id).into_iter().map(|g| g.id));
+                }
+                chaos_gg.rejoin(victim);
+            }
+            chaos_stop.store(true, Ordering::Release);
+        });
+    });
+
+    drain(&gg);
+    assert_eq!(gg.pending_len(), 0, "pending groups leaked across purges");
+    assert_eq!(gg.locked_count(), 0, "locks leaked across purges");
+    let stats = gg.stats();
+    // every chaos round is one death + one rejoin-revive; the rejoin's
+    // internal purge only counts a death if the rank was still dead
+    // (it never is here — the chaos thread is the only killer)
+    assert_eq!(stats.deaths, rounds, "death count drifted");
+    assert_eq!(stats.rejoins, rounds, "rejoin count drifted");
+    assert!(!gg.is_dead(victim), "victim must end revived");
+}
+
+/// Scale e2e: 64 real localhost ranks, each its own thread + TCP
+/// connection, against one reactor-served sharded `GgServer`. Every Sync
+/// must be served exactly once; the armed-group chains drain exactly as
+/// in the in-process hammer (each client completes what it owns, waits
+/// for what it was assigned).
+#[test]
+fn scale_e2e_64_ranks_over_tcp() {
+    use ripples::rpc::{GgClient, GgServer};
+
+    let ranks = 64usize;
+    let iters = 10usize;
+    let server =
+        GgServer::spawn("127.0.0.1:0", GgConfig::random(ranks, 4, 4), 21).unwrap();
+    let addr = server.addr;
+    let handles: Vec<_> = (0..ranks)
+        .map(|w| {
+            std::thread::spawn(move || {
+                let mut c = GgClient::connect(addr).unwrap();
+                // a deadlock must fail loudly, not hang the suite
+                c.set_io_timeout(std::time::Duration::from_secs(60)).unwrap();
+                for _ in 0..iters {
+                    let (assigned, armed) = c.sync(w, 0.01).unwrap();
+                    let mut todo: Vec<_> = armed.into_iter().map(|(g, _)| g).collect();
+                    while let Some(gid) = todo.pop() {
+                        for (ng, _) in c.complete(gid).unwrap() {
+                            todo.push(ng);
+                        }
+                    }
+                    if let Some((gid, _)) = assigned {
+                        c.wait_done(gid).unwrap();
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut c = GgClient::connect(addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(
+        stats.requests,
+        (ranks * iters) as u64,
+        "every Sync must be served exactly once"
+    );
+    server.shutdown();
+}
