@@ -5,7 +5,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test chaos e2e stress clippy doc fmt verify artifacts python-test bench bench-json paper clean
+.PHONY: build test chaos e2e pipeline stress clippy doc fmt verify artifacts python-test bench bench-json paper clean
 
 build:
 	$(CARGO) build --release
@@ -39,7 +39,17 @@ e2e:
 stress:
 	timeout 600 $(CARGO) test -q --release --test stress_gg -- --test-threads=1
 
-verify: build test chaos e2e stress clippy doc fmt
+# Staged step-pipeline gate (DESIGN.md §Perf): the `step` module's
+# bounded-queue/stage unit tests, the staged sim time model (bitwise
+# determinism + zero-load identity), the seeded queue property suite,
+# and the 4-process prefetch e2e. Included in `cargo test` too — named
+# here so `verify` spells the gate out even when test filters change.
+pipeline:
+	$(CARGO) test -q step::
+	$(CARGO) test -q staged_
+	$(CARGO) test -q --test prop_net --test e2e_net pipeline_
+
+verify: build test chaos e2e pipeline stress clippy doc fmt
 
 # Lint gate: clippy over every target (lib, bin, tests, benches,
 # examples) with warnings denied.
@@ -72,7 +82,9 @@ bench:
 
 # Machine-readable perf trajectory: every figure harness as
 # results/BENCH_<id>.json (accumulated across PRs; see EXPERIMENTS.md).
-# `fig all` includes `fig wire` (BENCH_wire.json: codec x bandwidth).
+# `fig all` includes `fig wire` (BENCH_wire.json: codec x bandwidth) and
+# `fig overlap` (BENCH_overlap.json: sharded-overlap + staged-pipeline
+# axes; shape-asserted by figures::tests once generated).
 bench-json: build
 	$(CARGO) run --release -- fig all --json results
 

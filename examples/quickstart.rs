@@ -35,6 +35,8 @@ fn main() -> anyhow::Result<()> {
         preduce_prefix: "preduce_mlp_g".into(),
         compute_floor: Duration::ZERO,
         overlap: OverlapConfig::serial(),
+        prefetch: 0,
+        load_floor: Duration::ZERO,
     };
     println!(
         "training MLP on {} workers, smart GG, {} iters...",

@@ -12,7 +12,7 @@
 //! entropy of the rule as the model learns it.
 //!
 //!   make artifacts && cargo run --release --example train_transformer -- \
-//!       [--iters N] [--workers W] [--slow WORKER,FACTOR]
+//!       [--iters N] [--workers W] [--slow WORKER,FACTOR] [--prefetch N]
 
 use std::time::Duration;
 
@@ -42,6 +42,8 @@ fn main() -> anyhow::Result<()> {
         }
         None => HeterogeneityProfile::default(),
     };
+    let prefetch: usize =
+        flag(&args, "--prefetch").map(|v| v.parse()).transpose()?.unwrap_or(0);
     let wpn = 4.min(workers);
     assert!(workers % wpn == 0, "workers must be a multiple of {wpn}");
 
@@ -62,6 +64,8 @@ fn main() -> anyhow::Result<()> {
         preduce_prefix: "preduce_tlm_g".into(),
         compute_floor: Duration::ZERO,
         overlap: OverlapConfig::serial(),
+        prefetch,
+        load_floor: Duration::ZERO,
     };
     println!(
         "e2e: transformer LM ({} params/replica), {} workers x {} iters, smart GG",

@@ -12,6 +12,7 @@ pub use parse::{parse_toml_subset, TomlValue};
 use crate::cluster::HeterogeneityProfile;
 use crate::collectives::codec::WireCodec;
 use crate::collectives::pipeline::OverlapConfig;
+use crate::step::PipelineConfig;
 
 /// Which synchronization algorithm runs (paper §2.2, §4, §5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -290,6 +291,13 @@ pub struct Experiment {
     /// Pipelined P-Reduce overlap knobs (`[overlap]` section; the serial
     /// default reproduces the stop-and-wait sync path bit-for-bit).
     pub overlap: OverlapConfig,
+    /// Staged step-pipeline knobs (`[pipeline]` section): loader-stage
+    /// prefetch depth and per-batch load time. The inline default
+    /// (`prefetch = 0`) keeps the lockstep step model bit-for-bit; with
+    /// prefetch the sim's step duration becomes `max(load, compute)`
+    /// after the pipeline primes (DESIGN.md §Perf, "Staged step
+    /// pipeline").
+    pub pipeline: PipelineConfig,
     /// Crash repair/detection policy (`[faults]` section).
     pub faults: FaultConfig,
     /// Checkpoint cadence and location (`[ckpt]` section).
@@ -306,6 +314,7 @@ impl Experiment {
         self.cluster.validate()?;
         self.algo.validate(self.cluster.n_workers())?;
         self.overlap.validate()?;
+        self.pipeline.validate()?;
         self.faults.validate()?;
         for ev in &self.cluster.hetero.crashes {
             if ev.worker >= self.cluster.n_workers() {
@@ -404,6 +413,12 @@ impl Experiment {
             ("overlap", "shards") => self.overlap.shards = v.as_usize().ok_or_else(bad)?,
             ("overlap", "max_staleness") => {
                 self.overlap.max_staleness = v.as_usize().ok_or_else(bad)? as u64
+            }
+            ("pipeline", "prefetch") => {
+                self.pipeline.prefetch = v.as_usize().ok_or_else(bad)?
+            }
+            ("pipeline", "load_secs") => {
+                self.pipeline.load_secs = v.as_f64().ok_or_else(bad)?
             }
             ("cluster", "crash_schedule") => {
                 // flat [worker, iter, rejoin_secs] triples; rejoin < 0 =
@@ -558,6 +573,20 @@ mod tests {
         assert_eq!(Experiment::default().overlap.shards, 1);
         // zero shards fails validation
         assert!(Experiment::from_str_cfg("[overlap]\nshards = 0\n").is_err());
+    }
+
+    #[test]
+    fn pipeline_config_roundtrip_and_validation() {
+        let e = Experiment::from_str_cfg("[pipeline]\nprefetch = 4\nload_secs = 0.02\n")
+            .unwrap();
+        assert_eq!(e.pipeline.prefetch, 4);
+        assert_eq!(e.pipeline.load_secs, 0.02);
+        assert!(e.pipeline.is_staged());
+        // default = inline (bit-identical lockstep step model)
+        assert_eq!(Experiment::default().pipeline, PipelineConfig::inline());
+        assert!(!Experiment::default().pipeline.is_staged());
+        // negative load time fails validation
+        assert!(Experiment::from_str_cfg("[pipeline]\nload_secs = -0.5\n").is_err());
     }
 
     #[test]

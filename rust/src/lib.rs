@@ -41,6 +41,7 @@ pub mod net;
 pub mod rpc;
 pub mod runtime;
 pub mod sim;
+pub mod step;
 pub mod util;
 
 pub use cluster::{BandwidthEvent, CrashEvent, HeterogeneityProfile, SlowdownEvent};
@@ -49,3 +50,4 @@ pub use config::{AlgoConfig, AlgoKind, ClusterConfig, Experiment, TrainConfig};
 pub use fault::{Fault, FaultPlan, FaultyTransport};
 pub use gg::{GgConfig, Group, GroupGenerator, ShardedGg, SpeedTable, StaticScheduler};
 pub use sim::{SimParams, SimResult};
+pub use step::PipelineConfig;

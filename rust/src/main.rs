@@ -54,6 +54,7 @@ USAGE:
                 [--bw-schedule W,F@ITER[;W,F@ITER...]]
                 [--crash W@ITER[+REJOIN_SECS][;...]] [--no-repair true]
                 [--overlap-shards K] [--max-staleness S]
+                [--prefetch N] [--load-secs S]
                 [--wire fp32|fp16|q8]
                 [--iters N] [--target LOSS] [--trace FILE.csv]
   ripples fig <1|2b|15|16|17|18|19|20|dyn|overlap|wire|failures|scale|paper|all>
@@ -68,6 +69,7 @@ USAGE:
                  [--wpn K] [--seed S] [--lr LR] [--batch B] [--bias P]
                  [--floor-ms MS] [--model tiny|paper] [--echo true]
                  [--overlap-shards K] [--max-staleness S]
+                 [--prefetch N] [--load-ms MS]
                  [--wire fp32|fp16|q8]
                  [--liveness-ms MS] [--heartbeat-ms MS]
                  [--ckpt-every N] [--ckpt-dir DIR]
@@ -80,6 +82,7 @@ USAGE:
                  [--seed S] [--lr LR] [--batch B] [--bias P]
                  [--floor-ms MS] [--dataset N] [--model tiny|paper]
                  [--overlap-shards K] [--max-staleness S]
+                 [--prefetch N] [--load-ms MS]
                  [--wire fp32|fp16|q8]
                  [--heartbeat-ms MS] [--probe-ms MS]
                  [--ckpt-every N] [--ckpt-dir DIR] [--rejoin true]
@@ -99,7 +102,12 @@ table drives the slowdown filter (`fig dyn` measures the reaction).
 `--overlap-shards K` + `--max-staleness S` pipeline every P-Reduce over
 K model shards while workers keep stepping on stale weights (bounded by
 S; 0 = serial stop-and-wait) — `fig overlap` sweeps the hidden vs
-exposed sync cost. `--wire fp16|q8` compresses every data-plane chunk
+exposed sync cost, including a staged-vs-lockstep loader axis. The
+worker step itself is a staged load → compute → reconcile pipeline:
+`--prefetch N` keeps N mini-batches ready ahead of compute on a loader
+thread (`--load-ms` emulates per-batch I/O; 0 = inline, bit-identical),
+and per-stage stall seconds surface as `load_wait`/`compute_wait`/
+`reconcile_wait` in worker REPORTs and the launch table. `--wire fp16|q8` compresses every data-plane chunk
 (2x/4x fewer bytes, bounded precision loss); the sim adds per-link
 `--bw-schedule` bandwidth throttles and `fig wire` sweeps codec x
 bandwidth. Crash tolerance: workers heartbeat the GG, whose
@@ -194,6 +202,8 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
     exp.overlap.shards = parse_or(&flags, "overlap-shards", exp.overlap.shards)?;
     exp.overlap.max_staleness =
         parse_or(&flags, "max-staleness", exp.overlap.max_staleness)?;
+    exp.pipeline.prefetch = parse_or(&flags, "prefetch", exp.pipeline.prefetch)?;
+    exp.pipeline.load_secs = parse_or(&flags, "load-secs", exp.pipeline.load_secs)?;
     exp.wire = parse_wire(&flags, exp.wire)?;
     exp.validate()?;
     let mut params = SimParams::vgg16_defaults(exp);
@@ -353,6 +363,8 @@ fn cmd_launch(args: &[String]) -> Result<(), String> {
     cfg.overlap.shards = parse_or(&flags, "overlap-shards", cfg.overlap.shards)?;
     cfg.overlap.max_staleness =
         parse_or(&flags, "max-staleness", cfg.overlap.max_staleness)?;
+    cfg.prefetch = parse_or(&flags, "prefetch", cfg.prefetch)?;
+    cfg.load_floor_ms = parse_or(&flags, "load-ms", cfg.load_floor_ms)?;
     cfg.wire = parse_wire(&flags, cfg.wire)?;
     cfg.liveness_ms = parse_or(&flags, "liveness-ms", cfg.liveness_ms)?;
     cfg.heartbeat_ms = parse_or(&flags, "heartbeat-ms", cfg.heartbeat_ms)?;
@@ -451,6 +463,12 @@ fn cmd_worker(args: &[String]) -> Result<(), String> {
             shards: parse_or(&flags, "overlap-shards", defaults.overlap.shards)?,
             max_staleness: parse_or(&flags, "max-staleness", defaults.overlap.max_staleness)?,
         },
+        prefetch: parse_or(&flags, "prefetch", defaults.prefetch)?,
+        load_floor: Duration::from_millis(parse_or(
+            &flags,
+            "load-ms",
+            defaults.load_floor.as_millis() as u64,
+        )?),
         wire: parse_wire(&flags, defaults.wire)?,
         heartbeat_ms: parse_or(&flags, "heartbeat-ms", defaults.heartbeat_ms)?,
         probe_ms: parse_or(&flags, "probe-ms", defaults.probe_ms)?,

@@ -138,12 +138,20 @@ pub struct WorkerStat {
     /// compression is directly visible here; 0 when not measured).
     pub bytes_tx: u64,
     pub bytes_rx: u64,
+    /// Per-stage stall seconds from the staged step pipeline
+    /// (DESIGN.md §Perf): compute waiting for batches, the loader
+    /// waiting on backpressure, and training blocked on reconcile.
+    pub load_wait_secs: f64,
+    pub compute_wait_secs: f64,
+    pub reconcile_wait_secs: f64,
 }
 
 /// Per-worker throughput table for a distributed run: iteration rate is
 /// the heterogeneity metric (a gated fast worker converges to the slow
-/// worker's rate; see EXPERIMENTS.md §Deployment-run), and wire MB the
-/// bandwidth one (tx+rx chunk bytes — compare `--wire` codecs).
+/// worker's rate; see EXPERIMENTS.md §Deployment-run), wire MB the
+/// bandwidth one (tx+rx chunk bytes — compare `--wire` codecs), and the
+/// stall column the pipeline one (per-stage exposed seconds
+/// load/compute/reconcile — compare `--prefetch` depths).
 pub fn worker_table(stats: &[WorkerStat]) -> Table {
     let mut t = Table::new(&[
         "worker",
@@ -151,6 +159,7 @@ pub fn worker_table(stats: &[WorkerStat]) -> Table {
         "iters/s",
         "preduces",
         "wire MB",
+        "stall l/c/r s",
         "loss first→last",
     ]);
     for s in stats {
@@ -161,6 +170,10 @@ pub fn worker_table(stats: &[WorkerStat]) -> Table {
             format!("{rate:.1}"),
             s.preduces.to_string(),
             format!("{:.2}", (s.bytes_tx + s.bytes_rx) as f64 / 1e6),
+            format!(
+                "{:.2}/{:.2}/{:.2}",
+                s.load_wait_secs, s.compute_wait_secs, s.reconcile_wait_secs
+            ),
             format!("{:.4} → {:.4}", s.loss_first, s.loss_last),
         ]);
     }
@@ -274,6 +287,9 @@ mod tests {
                 loss_last: 0.5,
                 bytes_tx: 2_000_000,
                 bytes_rx: 1_500_000,
+                load_wait_secs: 0.75,
+                compute_wait_secs: 0.125,
+                reconcile_wait_secs: 1.5,
             },
             WorkerStat {
                 rank: 1,
@@ -284,12 +300,17 @@ mod tests {
                 loss_last: 0.6,
                 bytes_tx: 0,
                 bytes_rx: 0,
+                load_wait_secs: 0.0,
+                compute_wait_secs: 0.0,
+                reconcile_wait_secs: 0.0,
             },
         ]);
         let s = t.render();
         assert!(s.contains("25.0"), "{s}"); // 100 iters / 4 s
         assert!(s.contains("10.0"), "{s}");
         assert!(s.contains("3.50"), "{s}"); // (2.0 + 1.5) MB on the wire
+        assert!(s.contains("0.75/0.13/1.50"), "{s}"); // per-stage stalls
+        assert!(s.contains("0.00/0.00/0.00"), "{s}");
         assert_eq!(s.lines().count(), 4);
     }
 

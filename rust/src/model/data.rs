@@ -124,10 +124,133 @@ impl Dataset {
         (x, y)
     }
 
+    /// [`Dataset::batch`] into caller-provided buffers (cleared first):
+    /// the same tag-derived PCG stream, so the filled batch is
+    /// element-identical to the allocating form — the loader stage's
+    /// recycling path must not change the data (pinned by tests).
+    pub fn batch_into(&self, tag: u64, batch: usize, out: &mut LoadedBatch) {
+        let mut rng = Pcg32::new(tag.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+        out.x.clear();
+        out.y.clear();
+        out.x.reserve(batch * self.in_dim);
+        out.y.reserve(batch);
+        for _ in 0..batch {
+            let i = rng.gen_range(self.len());
+            out.x.extend_from_slice(&self.x[i * self.in_dim..(i + 1) * self.in_dim]);
+            out.y.push(self.y[i]);
+        }
+    }
+
+    /// [`Dataset::batch_biased`] into caller-provided buffers (cleared
+    /// first): same RNG stream, element-identical output.
+    pub fn batch_biased_into(
+        &self,
+        tag: u64,
+        batch: usize,
+        primary_class: usize,
+        bias: f64,
+        class_index: &[Vec<usize>],
+        out: &mut LoadedBatch,
+    ) {
+        let mut rng = Pcg32::new(tag.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+        out.x.clear();
+        out.y.clear();
+        out.x.reserve(batch * self.in_dim);
+        out.y.reserve(batch);
+        let primary = &class_index[primary_class % self.classes];
+        for _ in 0..batch {
+            let i = if !primary.is_empty() && rng.gen_f64() < bias {
+                primary[rng.gen_range(primary.len())]
+            } else {
+                rng.gen_range(self.len())
+            };
+            out.x.extend_from_slice(&self.x[i * self.in_dim..(i + 1) * self.in_dim]);
+            out.y.push(self.y[i]);
+        }
+    }
+
     /// The first `k` rows as a fixed evaluation set.
     pub fn eval_set(&self, k: usize) -> (Vec<f32>, Vec<usize>) {
         let k = k.min(self.len());
         (self.x[..k * self.in_dim].to_vec(), self.y[..k].to_vec())
+    }
+}
+
+/// One mini-batch in recyclable buffers: features row-major
+/// `(batch, in_dim)` plus labels. The staged pipeline circulates these
+/// between the loader and compute stages instead of allocating per
+/// batch (DESIGN.md §Perf, "Staged step pipeline").
+#[derive(Debug, Clone, Default)]
+pub struct LoadedBatch {
+    pub x: Vec<f32>,
+    pub y: Vec<usize>,
+}
+
+impl LoadedBatch {
+    /// An empty batch pre-sized for `batch` rows of `in_dim` features.
+    pub fn with_capacity(batch: usize, in_dim: usize) -> Self {
+        Self { x: Vec::with_capacity(batch * in_dim), y: Vec::with_capacity(batch) }
+    }
+}
+
+/// Deterministic batch-producing iterator with a recycling buffer pool:
+/// each [`BatchProducer::produce`] fills the next batch of the stream
+/// defined by `next_tag` into a recycled [`LoadedBatch`] (or a fresh
+/// one when the pool is dry). The tag closure owns the iteration
+/// counter, so the produced sequence is exactly the sequence the inline
+/// loop would have drawn — queue timing cannot reorder or skip batches.
+pub struct BatchProducer {
+    ds: std::sync::Arc<Dataset>,
+    class_index: std::sync::Arc<Vec<Vec<usize>>>,
+    batch: usize,
+    primary_class: usize,
+    bias: f64,
+    next_tag: Box<dyn FnMut() -> u64 + Send>,
+    pool: Vec<LoadedBatch>,
+}
+
+impl BatchProducer {
+    pub fn new(
+        ds: std::sync::Arc<Dataset>,
+        class_index: std::sync::Arc<Vec<Vec<usize>>>,
+        batch: usize,
+        primary_class: usize,
+        bias: f64,
+        next_tag: Box<dyn FnMut() -> u64 + Send>,
+    ) -> Self {
+        Self { ds, class_index, batch, primary_class, bias, next_tag, pool: Vec::new() }
+    }
+
+    /// Return a consumed batch's buffers to the pool for reuse.
+    pub fn recycle(&mut self, spent: LoadedBatch) {
+        self.pool.push(spent);
+    }
+
+    /// Fill and return the next batch of the stream.
+    pub fn produce(&mut self) -> LoadedBatch {
+        let mut out = self
+            .pool
+            .pop()
+            .unwrap_or_else(|| LoadedBatch::with_capacity(self.batch, self.ds.in_dim));
+        let tag = (self.next_tag)();
+        self.ds.batch_biased_into(
+            tag,
+            self.batch,
+            self.primary_class,
+            self.bias,
+            &self.class_index,
+            &mut out,
+        );
+        out
+    }
+}
+
+impl Iterator for BatchProducer {
+    type Item = LoadedBatch;
+
+    /// Infinite: the training loop, not the data, decides when to stop.
+    fn next(&mut self) -> Option<LoadedBatch> {
+        Some(self.produce())
     }
 }
 
@@ -169,6 +292,62 @@ mod tests {
         let b = Dataset::gaussian_mixture(4, 3, 20, 5);
         assert_eq!(a.x, b.x);
         assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        let ds = Dataset::gaussian_mixture(4, 3, 50, 3);
+        let idx = ds.class_index();
+        let mut buf = LoadedBatch::default();
+        for tag in [0u64, 7, u64::MAX] {
+            ds.batch_into(tag, 16, &mut buf);
+            let (x, y) = ds.batch(tag, 16);
+            assert_eq!(buf.x, x);
+            assert_eq!(buf.y, y);
+            // reuse the same buffers (recycling path) for the biased form
+            ds.batch_biased_into(tag, 16, 1, 0.7, &idx, &mut buf);
+            let (bx, by) = ds.batch_biased(tag, 16, 1, 0.7, &idx);
+            assert_eq!(buf.x, bx);
+            assert_eq!(buf.y, by);
+        }
+    }
+
+    #[test]
+    fn producer_replays_the_inline_sequence_and_recycles() {
+        let ds = std::sync::Arc::new(Dataset::gaussian_mixture(4, 3, 50, 9));
+        let idx = std::sync::Arc::new(ds.class_index());
+        let seed = 42u64;
+        let mut iter = 0u64;
+        let mut producer = BatchProducer::new(
+            std::sync::Arc::clone(&ds),
+            std::sync::Arc::clone(&idx),
+            8,
+            1,
+            0.5,
+            Box::new(move || {
+                let tag = seed.wrapping_add(iter);
+                iter += 1;
+                tag
+            }),
+        );
+        // the produced sequence is exactly the inline loop's sequence
+        for i in 0..4u64 {
+            let got = producer.next().unwrap();
+            let (x, y) = ds.batch_biased(seed.wrapping_add(i), 8, 1, 0.5, &idx);
+            assert_eq!(got.x, x, "batch {i} diverged from the inline stream");
+            assert_eq!(got.y, y);
+            let ptr = got.x.as_ptr();
+            producer.recycle(got);
+            // the pool really recycles: the next fill reuses the buffers
+            let again = producer.pool.last().unwrap();
+            assert_eq!(again.x.as_ptr(), ptr);
+        }
+        // a recycled buffer is refilled, not reallocated
+        let spent = producer.produce();
+        let ptr = spent.x.as_ptr();
+        producer.recycle(spent);
+        let next = producer.produce();
+        assert_eq!(next.x.as_ptr(), ptr, "pool did not recycle the buffer");
     }
 
     #[test]

@@ -6,5 +6,5 @@
 pub mod data;
 pub mod mlp;
 
-pub use data::Dataset;
+pub use data::{BatchProducer, Dataset, LoadedBatch};
 pub use mlp::{loss_and_grad, loss_only, sgd_step, MlpScratch, MlpSpec};

@@ -184,6 +184,7 @@ pub fn run_adpsgd(
         scratch: MlpScratch::new(),
         iters: 0,
         ewma_secs: 0.0,
+        load_wait_secs: 0.0,
     };
 
     let mut preduces = 0u64;
@@ -309,6 +310,9 @@ pub fn run_adpsgd(
         stale_steps: 0,
         sync_blocked_secs: sync_blocked,
         aborts: 0,
+        load_wait_secs: drv.load_wait_secs,
+        compute_wait_secs: 0.0,
+        reconcile_wait_secs: sync_blocked,
         bytes_tx: mesh.bytes_sent(),
         bytes_rx: mesh.bytes_recv(),
     })

@@ -94,6 +94,12 @@ pub struct LaunchConfig {
     /// worker — shard step tags are part of the wire schedule, so the
     /// whole cluster must agree on `K`.
     pub overlap: OverlapConfig,
+    /// Loader-stage queue depth (`--prefetch`), forwarded to every
+    /// worker; 0 keeps the inline bit-identical batch draw.
+    pub prefetch: usize,
+    /// Emulated per-batch I/O latency in ms (`--load-ms`), forwarded to
+    /// every worker.
+    pub load_floor_ms: u64,
     /// Data-plane wire codec (`--wire fp32|fp16|q8`), forwarded to every
     /// worker so the whole cluster compresses uniformly.
     pub wire: WireCodec,
@@ -134,6 +140,8 @@ impl Default for LaunchConfig {
             tiny: true,
             echo: false,
             overlap: OverlapConfig::serial(),
+            prefetch: 0,
+            load_floor_ms: 0,
             wire: WireCodec::Fp32,
             liveness_ms: 4000,
             heartbeat_ms: 200,
@@ -176,6 +184,9 @@ impl LaunchReport {
                 loss_last: w.loss_last,
                 bytes_tx: w.bytes_tx,
                 bytes_rx: w.bytes_rx,
+                load_wait_secs: w.load_wait_secs,
+                compute_wait_secs: w.compute_wait_secs,
+                reconcile_wait_secs: w.reconcile_wait_secs,
             })
             .collect()
     }
@@ -245,6 +256,12 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
         }
     }
     cfg.overlap.validate().map_err(|e| anyhow::anyhow!("bad overlap config: {e}"))?;
+    crate::step::PipelineConfig {
+        prefetch: cfg.prefetch,
+        load_secs: cfg.load_floor_ms as f64 / 1000.0,
+    }
+    .validate()
+    .map_err(|e| anyhow::anyhow!("bad pipeline config: {e}"))?;
     if let Some(kill) = &cfg.kill {
         if kill.rank >= cfg.workers {
             bail!("kill rank {} out of range", kill.rank);
@@ -396,6 +413,8 @@ fn worker_command(
         .args(["--model", if cfg.tiny { "tiny" } else { "paper" }])
         .args(["--overlap-shards", &cfg.overlap.shards.to_string()])
         .args(["--max-staleness", &cfg.overlap.max_staleness.to_string()])
+        .args(["--prefetch", &cfg.prefetch.to_string()])
+        .args(["--load-ms", &cfg.load_floor_ms.to_string()])
         .args(["--wire", cfg.wire.name()])
         .args(["--heartbeat-ms", &cfg.heartbeat_ms.to_string()])
         .args(["--algo", cfg.algo.name()])

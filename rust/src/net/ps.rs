@@ -233,6 +233,7 @@ pub fn run_ps_worker(p: &WorkerParams) -> Result<WorkerReport> {
         scratch: MlpScratch::new(),
         iters: 0,
         ewma_secs: 0.0,
+        load_wait_secs: 0.0,
     };
 
     let mut rounds = 0u64;
@@ -296,6 +297,9 @@ pub fn run_ps_worker(p: &WorkerParams) -> Result<WorkerReport> {
         stale_steps: 0,
         sync_blocked_secs: sync_blocked,
         aborts: 0,
+        load_wait_secs: drv.load_wait_secs,
+        compute_wait_secs: 0.0,
+        reconcile_wait_secs: sync_blocked,
         bytes_tx: tx,
         bytes_rx: rx,
     })

@@ -15,6 +15,26 @@
 //!     blocks on `WaitDone` so their next `Sync` cannot re-observe the
 //!     group at the front of their Group Buffer.
 //!
+//! # Staged step pipeline
+//!
+//! The worker step is a three-stage pipeline over the shared
+//! [`crate::step`] queues (DESIGN.md §Perf, "Staged step pipeline"):
+//!
+//! * **load** — with `--prefetch N > 0` a loader thread keeps the next
+//!   `N` mini-batches ready in a bounded queue (recycled
+//!   [`LoadedBatch`] buffers circulate back through a spare queue);
+//!   `--load-ms` emulates per-batch I/O. `--prefetch 0` (default) draws
+//!   batches inline, bit-identical to the pre-pipeline loop.
+//! * **compute** — one SGD step on whatever batch is ready, timed and
+//!   EWMA-folded (the queue wait counts: it is what this worker's step
+//!   actually costs).
+//! * **reconcile** — consume finished P-Reduce shards and fold them
+//!   into the live model (the overlap engine below).
+//!
+//! The driver loop polls the stage queues instead of running straight
+//! line; per-stage stall time is reported as `load_wait=` /
+//! `compute_wait=` / `reconcile_wait=` on the REPORT line.
+//!
 //! # Compute/communication overlap
 //!
 //! With `--max-staleness S > 0` step 3 stops being stop-and-wait: a
@@ -26,7 +46,12 @@
 //! (`collectives::pipeline::reconcile_shard`: group average plus the
 //! local progress made in flight). `S = 0` (the default) is the serial
 //! loop above, bit-for-bit. All members of a cluster must run the same
-//! `K`: shard step tags are part of the wire schedule.
+//! `K`: shard step tags are part of the wire schedule. Shards cross the
+//! comm→training boundary through a poison-aware bounded queue
+//! ([`crate::step::Bounded`]): an abort poisons the queue, the training
+//! side drains the shards that fully averaged (valid group means) and
+//! then observes the fault — fault propagation across every stage
+//! boundary takes the same shape.
 //!
 //! Termination mirrors the threaded runtime: `Retire`, then keep syncing
 //! until the Group Buffer drains — partners of already-scheduled groups
@@ -50,7 +75,6 @@ use std::io::Write as _;
 use std::net::SocketAddr;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -63,8 +87,9 @@ use crate::collectives::pipeline::{
 };
 use crate::config::AlgoKind;
 use crate::model::mlp::{loss_only, sgd_step, MlpScratch, MlpSpec};
-use crate::model::Dataset;
+use crate::model::{BatchProducer, Dataset, LoadedBatch};
 use crate::rpc::{GgClient, GroupState, WaitOutcome};
+use crate::step::{self, Bounded, CloseGuard, QueueEnd, Stage};
 
 use super::ckpt;
 use super::mesh::{TcpRingTransport, WorkerMesh};
@@ -105,6 +130,15 @@ pub struct WorkerParams {
     /// Pipelined-collective knobs (`--overlap-shards`/`--max-staleness`);
     /// the serial default reproduces the pre-overlap loop bit-for-bit.
     pub overlap: OverlapConfig,
+    /// Loader-stage queue depth (`--prefetch`): mini-batches kept ready
+    /// ahead of compute by a dedicated loader thread. 0 (default) draws
+    /// batches inline — bit-identical to the pre-pipeline loop.
+    pub prefetch: usize,
+    /// Emulated per-batch I/O latency (`--load-ms`): the loader sleeps
+    /// this long per batch (inline draws sleep it on the training
+    /// thread), making a slow data source observable on the tiny
+    /// synthetic datasets. Zero by default.
+    pub load_floor: Duration,
     /// Wire codec this worker *sends* collective chunks with (`--wire`);
     /// receivers decode whatever codec arrives, but the whole cluster
     /// should agree. The `fp32` default is byte-identical to the
@@ -156,6 +190,8 @@ impl Default for WorkerParams {
             dataset_size: 2048,
             eval_size: 256,
             overlap: OverlapConfig::serial(),
+            prefetch: 0,
+            load_floor: Duration::ZERO,
             wire: WireCodec::Fp32,
             heartbeat_ms: 200,
             probe_ms: 200,
@@ -240,6 +276,18 @@ pub struct WorkerReport {
     /// Collectives this worker unwound from because the group was
     /// aborted by failure repair (each was retried in a repaired group).
     pub aborts: u64,
+    /// Load-stage stall: seconds the compute stage spent waiting for a
+    /// mini-batch (queue pop wait when staged; inline batch synthesis
+    /// plus the `--load-ms` floor when `--prefetch 0`).
+    pub load_wait_secs: f64,
+    /// Compute-stage stall seen by the loader: seconds the loader
+    /// thread spent blocked on backpressure (full batch queue) or
+    /// waiting for a recycled buffer. 0 when `--prefetch 0`.
+    pub compute_wait_secs: f64,
+    /// Reconcile-stage stall: seconds the training thread spent blocked
+    /// on the collective/shard queue — the stage-named view of
+    /// `sync_blocked_secs` (the two report the same measurement).
+    pub reconcile_wait_secs: f64,
     /// Data-plane frame bytes sent (chunk + poison frames, prefixes
     /// included) — the wire codec's compression shows up directly here.
     pub bytes_tx: u64,
@@ -252,7 +300,8 @@ impl WorkerReport {
     pub fn to_line(&self) -> String {
         format!(
             "REPORT rank={} iters={} preduces={} loss_first={:.6} loss_last={:.6} \
-             secs={:.3} ewma={:.6} stale={} sync_secs={:.6} aborts={} tx={} rx={}",
+             secs={:.3} ewma={:.6} stale={} sync_secs={:.6} aborts={} tx={} rx={} \
+             load_wait={:.6} compute_wait={:.6} reconcile_wait={:.6}",
             self.rank,
             self.iters,
             self.preduces,
@@ -264,7 +313,10 @@ impl WorkerReport {
             self.sync_blocked_secs,
             self.aborts,
             self.bytes_tx,
-            self.bytes_rx
+            self.bytes_rx,
+            self.load_wait_secs,
+            self.compute_wait_secs,
+            self.reconcile_wait_secs
         )
     }
 
@@ -281,6 +333,9 @@ impl WorkerReport {
         let mut aborts = 0; // optional: absent in pre-fault-tolerance lines
         let mut bytes_tx = 0; // optional: absent in pre-codec lines
         let mut bytes_rx = 0; // optional, ditto
+        let mut load_wait_secs = 0.0; // optional: absent in pre-pipeline lines
+        let mut compute_wait_secs = 0.0; // optional, ditto
+        let mut reconcile_wait_secs = 0.0; // optional, ditto
         for kv in line.trim().strip_prefix("REPORT ").unwrap_or("").split_whitespace() {
             let (k, v) = kv.split_once('=').with_context(|| format!("bad field {kv:?}"))?;
             match k {
@@ -296,6 +351,9 @@ impl WorkerReport {
                 "aborts" => aborts = v.parse()?,
                 "tx" => bytes_tx = v.parse()?,
                 "rx" => bytes_rx = v.parse()?,
+                "load_wait" => load_wait_secs = v.parse()?,
+                "compute_wait" => compute_wait_secs = v.parse()?,
+                "reconcile_wait" => reconcile_wait_secs = v.parse()?,
                 _ => {} // forward-compatible: ignore unknown fields
             }
         }
@@ -314,6 +372,9 @@ impl WorkerReport {
                     aborts,
                     bytes_tx,
                     bytes_rx,
+                    load_wait_secs,
+                    compute_wait_secs,
+                    reconcile_wait_secs,
                 })
             }
             _ => bail!("incomplete report line: {line:?}"),
@@ -334,16 +395,26 @@ pub(crate) struct SgdDriver<'a> {
     pub(crate) iters: u64,
     /// Measured step-duration EWMA, piggybacked on every Sync.
     pub(crate) ewma_secs: f64,
+    /// Accumulated load-stage stall: time spent obtaining batches
+    /// (inline synthesis + `--load-ms` floor, or staged queue waits).
+    pub(crate) load_wait_secs: f64,
 }
 
 impl SgdDriver<'_> {
+    /// The batch tag for local iteration `iter` of rank `rank`: the
+    /// loader stage must reproduce this stream exactly, so the formula
+    /// lives in one place.
+    pub(crate) fn batch_tag(seed: u64, rank: usize, iter: u64) -> u64 {
+        seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(((rank as u64) << 32) | iter)
+    }
+
+    /// Inline (lockstep) step: draw the batch on this thread, then
+    /// compute. Bit-identical to the pre-pipeline loop when
+    /// `load_floor` is zero — the load segment is only *metered*.
     pub(crate) fn step(&mut self, flat: &mut [f32]) {
         let step_start = Instant::now();
-        let tag = self
-            .p
-            .seed
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add(((self.p.rank as u64) << 32) | self.iters);
+        let tag = Self::batch_tag(self.p.seed, self.p.rank, self.iters);
         let (x, y) = self.ds.batch_biased(
             tag,
             self.p.batch,
@@ -351,7 +422,34 @@ impl SgdDriver<'_> {
             self.p.data_bias,
             self.class_index,
         );
-        sgd_step(self.spec, flat, &x, &y, self.p.lr, &mut self.scratch);
+        if self.p.load_floor > Duration::ZERO {
+            std::thread::sleep(self.p.load_floor);
+        }
+        self.load_wait_secs += step_start.elapsed().as_secs_f64();
+        self.compute_on(flat, &x, &y, step_start);
+    }
+
+    /// Compute on an already-loaded batch (the staged path): SGD step,
+    /// heterogeneity sleep, EWMA fold. `step_start` is when the driver
+    /// began waiting for the batch, so the EWMA measures what this
+    /// worker's step actually costs — queue wait included.
+    pub(crate) fn step_on(
+        &mut self,
+        flat: &mut [f32],
+        batch: &LoadedBatch,
+        step_start: Instant,
+    ) {
+        self.compute_on(flat, &batch.x, &batch.y, step_start);
+    }
+
+    fn compute_on(
+        &mut self,
+        flat: &mut [f32],
+        x: &[f32],
+        y: &[usize],
+        step_start: Instant,
+    ) {
+        sgd_step(self.spec, flat, x, y, self.p.lr, &mut self.scratch);
         let factor = self.p.slowdown_at(self.iters);
         self.iters += 1;
         if self.p.compute_floor > Duration::ZERO {
@@ -360,6 +458,132 @@ impl SgdDriver<'_> {
         let step_secs = step_start.elapsed().as_secs_f64();
         self.ewma_secs =
             crate::gg::ewma_step(self.ewma_secs, step_secs, crate::gg::SPEED_ALPHA);
+    }
+}
+
+/// The loader stage: recycle the spent batch buffers, emulate the
+/// configured I/O floor, fill the next batch of the deterministic tag
+/// stream. Driven by [`step::spawn`] between the spare queue and the
+/// batch queue.
+struct BatchLoader {
+    producer: BatchProducer,
+    load_floor: Duration,
+}
+
+impl Stage for BatchLoader {
+    type In = LoadedBatch;
+    type Out = LoadedBatch;
+
+    fn process(&mut self, spare: LoadedBatch) -> Result<LoadedBatch, String> {
+        self.producer.recycle(spare);
+        if self.load_floor > Duration::ZERO {
+            thread::sleep(self.load_floor);
+        }
+        Ok(self.producer.produce())
+    }
+}
+
+/// Where the compute stage gets its mini-batches: drawn inline
+/// (`--prefetch 0`, today's lockstep loop bit-for-bit) or popped from
+/// the loader stage's bounded queue.
+pub(crate) enum BatchFeed {
+    Inline,
+    Staged {
+        batches: Arc<Bounded<LoadedBatch>>,
+        spares: Arc<Bounded<LoadedBatch>>,
+        loader: Option<thread::JoinHandle<Result<(), String>>>,
+    },
+}
+
+impl BatchFeed {
+    /// Build the feed for one worker: spawns the loader thread when
+    /// `prefetch > 0`, pre-seeding the spare queue so the loader starts
+    /// filling immediately. `start_iter` aligns the loader's tag stream
+    /// with a checkpoint-restored iteration counter.
+    fn build(
+        p: &WorkerParams,
+        spec: &MlpSpec,
+        ds: &Arc<Dataset>,
+        class_index: &Arc<Vec<Vec<usize>>>,
+        start_iter: u64,
+    ) -> Self {
+        if p.prefetch == 0 {
+            return BatchFeed::Inline;
+        }
+        let depth = p.prefetch;
+        let batches = Bounded::new(depth);
+        // one more spare than the queue holds: the loader always has a
+        // buffer to fill while `depth` finished batches sit queued
+        let spares = Bounded::new(depth + 1);
+        for _ in 0..=depth {
+            let _ = spares.push(LoadedBatch::with_capacity(p.batch, spec.in_dim));
+        }
+        let (seed, rank) = (p.seed, p.rank);
+        let mut iter = start_iter;
+        let producer = BatchProducer::new(
+            Arc::clone(ds),
+            Arc::clone(class_index),
+            p.batch,
+            p.rank % spec.classes,
+            p.data_bias,
+            Box::new(move || {
+                let tag = SgdDriver::batch_tag(seed, rank, iter);
+                iter += 1;
+                tag
+            }),
+        );
+        let loader = step::spawn(
+            BatchLoader { producer, load_floor: p.load_floor },
+            Arc::clone(&spares),
+            Arc::clone(&batches),
+        );
+        BatchFeed::Staged { batches, spares, loader: Some(loader) }
+    }
+
+    /// Shut the pipeline down: close both queues (waking a loader
+    /// blocked on either) and join the loader thread. Returns the
+    /// loader-side stall time (`compute_wait`: backpressure on the
+    /// batch queue plus waiting for recycled buffers).
+    fn shutdown(&mut self) -> f64 {
+        match self {
+            BatchFeed::Inline => 0.0,
+            BatchFeed::Staged { batches, spares, loader } => {
+                spares.close();
+                batches.close();
+                if let Some(h) = loader.take() {
+                    let _ = h.join();
+                }
+                (batches.send_wait() + spares.recv_wait()).as_secs_f64()
+            }
+        }
+    }
+}
+
+/// One pipelined step: pop a batch from the feed (metering the
+/// load-stage stall) and compute on it. The inline feed delegates to
+/// [`SgdDriver::step`] unchanged.
+fn pipelined_step(
+    drv: &mut SgdDriver<'_>,
+    feed: &mut BatchFeed,
+    flat: &mut [f32],
+) -> Result<()> {
+    match feed {
+        BatchFeed::Inline => {
+            drv.step(flat);
+            Ok(())
+        }
+        BatchFeed::Staged { batches, spares, .. } => {
+            let step_start = Instant::now();
+            let batch = match batches.pop() {
+                Ok(b) => b,
+                Err(QueueEnd::Poisoned) => bail!("loader stage poisoned"),
+                Err(QueueEnd::Closed) => bail!("loader stage ended early"),
+            };
+            drv.load_wait_secs += step_start.elapsed().as_secs_f64();
+            drv.step_on(flat, &batch, step_start);
+            let _ = spares.push(batch); // Err only during shutdown
+            Ok(())
+        }
     }
 }
 
@@ -423,16 +647,20 @@ pub fn run_worker(
     gg: &mut GgClient,
 ) -> Result<WorkerReport> {
     p.overlap.validate().map_err(|e| anyhow!("bad overlap config: {e}"))?;
+    step::PipelineConfig { prefetch: p.prefetch, load_secs: p.load_floor.as_secs_f64() }
+        .validate()
+        .map_err(|e| anyhow!("bad pipeline config: {e}"))?;
     let spec = if p.tiny { MlpSpec::tiny() } else { MlpSpec::default_paper() };
     // Shared dataset and identical init across the cluster: seeds must
     // not depend on rank (P-Reduce averages replicas of one model).
-    let ds = Dataset::gaussian_mixture(
+    // Arc'd so the loader stage can share them with the training thread.
+    let ds = Arc::new(Dataset::gaussian_mixture(
         spec.in_dim,
         spec.classes,
         p.dataset_size,
         p.seed ^ 0xDA7A,
-    );
-    let class_index = ds.class_index();
+    ));
+    let class_index = Arc::new(ds.class_index());
     let (ex, ey) = ds.eval_set(p.eval_size);
     let mut flat = spec.init(p.seed ^ 1);
     let mut restored_iter = 0u64;
@@ -477,12 +705,16 @@ pub fn run_worker(
     let mut drv = SgdDriver {
         p,
         spec: &spec,
-        ds: &ds,
-        class_index: &class_index,
+        ds: &*ds,
+        class_index: class_index.as_slice(),
         scratch: MlpScratch::new(),
         iters: restored_iter,
         ewma_secs: restored_ewma,
+        load_wait_secs: 0.0,
     };
+    // loader stage (no-op Inline feed when --prefetch 0); the tag stream
+    // starts at the restored iteration so a rejoiner's batches line up
+    let mut feed = BatchFeed::build(p, &spec, &ds, &class_index, restored_iter);
 
     let overlap_active = !p.overlap.is_serial();
     let mut preduces = 0u64;
@@ -496,8 +728,8 @@ pub fn run_worker(
     let start = Instant::now();
     let iter_budget = p.max_iters.saturating_add(restored_iter);
     while start.elapsed().as_secs_f64() < p.secs && drv.iters < iter_budget {
-        // ---- compute phase (timestamped, EWMA-folded)
-        drv.step(&mut flat);
+        // ---- load + compute phases (timestamped, EWMA-folded)
+        pipelined_step(&mut drv, &mut feed, &mut flat)?;
         if p.ckpt_every > 0 && drv.iters % p.ckpt_every == 0 {
             if let Some(dir) = &p.ckpt_dir {
                 ckpt::save(
@@ -516,7 +748,8 @@ pub fn run_worker(
         if let Some((gid, members)) = assigned {
             let outcome = if overlap_active {
                 let (stale, blocked, outcome) = execute_group_overlapped(
-                    p, mesh, gg, gid, &members, &mut flat, &mut drv, start, iter_budget,
+                    p, mesh, gg, gid, &members, &mut flat, &mut drv, &mut feed, start,
+                    iter_budget,
                 )?;
                 stale_steps += stale;
                 sync_blocked += blocked;
@@ -555,6 +788,9 @@ pub fn run_worker(
         }
     }
 
+    // loader stage shutdown: collect its stall meters before reporting
+    let compute_wait = feed.shutdown();
+
     let loss_last = loss_only(&spec, &flat, &ex, &ey);
     Ok(WorkerReport {
         rank: p.rank,
@@ -567,6 +803,9 @@ pub fn run_worker(
         stale_steps,
         sync_blocked_secs: sync_blocked,
         aborts,
+        load_wait_secs: drv.load_wait_secs,
+        compute_wait_secs: compute_wait,
+        reconcile_wait_secs: sync_blocked,
         bytes_tx: mesh.bytes_sent(),
         bytes_rx: mesh.bytes_recv(),
     })
@@ -628,21 +867,27 @@ fn unwind_broken_collective(
     gg.abort_group(gid, suspect)
 }
 
-/// One GG-assigned P-Reduce, stop-and-wait: wait for the group to arm,
-/// run the (possibly sharded) ring collective over TCP, report/observe
-/// completion. With the default single shard this is the exact
-/// pre-overlap schedule, frames and arithmetic identical. A collective
-/// broken by a crashed peer rolls the model back to `snapshot` and
-/// returns [`GroupOutcome::Aborted`] instead of erroring: the next sync
-/// retries in a repaired group.
-fn execute_group(
+/// One *attempt* at a GG-assigned collective — the arm/acquire/run/
+/// unwind skeleton shared by the serial and overlapped paths. Waits for
+/// the group to arm, acquires the ring transport, runs the sharded ring
+/// collective over `buf` (streaming each finished shard through
+/// `on_shard`), and on a broken ring hands `buf` to `on_broken` (the
+/// caller's rollback policy) before poisoning downstream and reporting
+/// the abort — so a mid-collective failure recovers identically on both
+/// paths. Completion protocol: the ring leader reports `Complete`,
+/// everyone else blocks on `WaitDone` (an abort *there* means the leader
+/// died after the collective — the averaged data is fine either way).
+#[allow(clippy::too_many_arguments)]
+fn collective_attempt(
     p: &WorkerParams,
     mesh: &WorkerMesh,
     gg: &mut GgClient,
     gid: u64,
     members: &[usize],
-    flat: &mut [f32],
-    snapshot: &mut Vec<f32>,
+    buf: &mut [f32],
+    shards: usize,
+    on_shard: impl FnMut(usize, &[f32]),
+    on_broken: impl FnOnce(&mut [f32]),
 ) -> Result<GroupOutcome> {
     if members.len() < 2 {
         bail!("GG assigned degenerate group {members:?}");
@@ -653,31 +898,51 @@ fn execute_group(
     let Some((mut transport, pos)) = acquire_transport(p, mesh, gg, gid, members)? else {
         return Ok(GroupOutcome::Aborted);
     };
-    snapshot.clear();
-    snapshot.extend_from_slice(flat);
-    let run = ring_allreduce_sharded(
-        pos,
-        members.len(),
-        flat,
-        p.overlap.shards,
-        &mut transport,
-        |_, _| (),
-    );
+    let run =
+        ring_allreduce_sharded(pos, members.len(), buf, shards, &mut transport, on_shard);
     if run.is_err() {
-        // partial reduce-scatter sums are garbage: roll back, then
-        // unwind the ring and report so everyone retries repaired
-        flat.copy_from_slice(snapshot);
+        // partial reduce-scatter sums are garbage: let the caller roll
+        // back, then unwind the ring and report so everyone retries
+        on_broken(buf);
         unwind_broken_collective(mesh, gg, gid, &mut transport)?;
         return Ok(GroupOutcome::Aborted);
     }
     if members[0] == p.rank {
         gg.complete(gid)?;
     } else {
-        // Aborted here means the leader died *after* the collective —
-        // our averaged data is fine either way.
         let _ = gg.wait_done(gid)?;
     }
     Ok(GroupOutcome::Done)
+}
+
+/// One GG-assigned P-Reduce, stop-and-wait: snapshot, then run one
+/// [`collective_attempt`] in place over the live weights. With the
+/// default single shard this is the exact pre-overlap schedule, frames
+/// and arithmetic identical. A collective broken by a crashed peer rolls
+/// the model back to `snapshot` and returns [`GroupOutcome::Aborted`]
+/// instead of erroring: the next sync retries in a repaired group.
+fn execute_group(
+    p: &WorkerParams,
+    mesh: &WorkerMesh,
+    gg: &mut GgClient,
+    gid: u64,
+    members: &[usize],
+    flat: &mut [f32],
+    snapshot: &mut Vec<f32>,
+) -> Result<GroupOutcome> {
+    snapshot.clear();
+    snapshot.extend_from_slice(flat);
+    collective_attempt(
+        p,
+        mesh,
+        gg,
+        gid,
+        members,
+        flat,
+        p.overlap.shards,
+        |_, _| (),
+        |buf| buf.copy_from_slice(snapshot),
+    )
 }
 
 /// One GG-assigned P-Reduce with compute/communication overlap: the comm
@@ -704,6 +969,7 @@ fn execute_group_overlapped(
     members: &[usize],
     flat: &mut [f32],
     drv: &mut SgdDriver<'_>,
+    feed: &mut BatchFeed,
     start: Instant,
     iter_budget: u64,
 ) -> Result<(u64, f64, GroupOutcome)> {
@@ -716,54 +982,64 @@ fn execute_group_overlapped(
     // keeps; `work` is the buffer the comm thread averages in place.
     let snap = flat.to_vec();
     let mut work = flat.to_vec();
-    let rank = p.rank;
-    let (tx, rx) = channel::<(usize, Vec<f32>)>();
+    // Finished shards cross the comm→training stage boundary through a
+    // poison-aware bounded queue (capacity k: the comm thread never
+    // blocks on a slow reconciler mid-ring).
+    let shard_q: Arc<Bounded<(usize, Vec<f32>)>> = Bounded::new(k);
+    let q_comm = Arc::clone(&shard_q);
     thread::scope(|scope| -> Result<(u64, f64, GroupOutcome)> {
         let comm = scope.spawn(move || -> Result<GroupOutcome> {
-            if gg.wait_armed(gid)? == WaitOutcome::Aborted {
-                return Ok(GroupOutcome::Aborted);
-            }
-            let Some((mut transport, pos)) = acquire_transport(p, mesh, gg, gid, members)?
-            else {
-                return Ok(GroupOutcome::Aborted);
-            };
-            let run = ring_allreduce_sharded(
-                pos,
-                members.len(),
+            // close on every exit path (including panics) so the
+            // training thread's pop never hangs on a dead stage
+            let _guard = CloseGuard(Arc::clone(&q_comm));
+            let outcome = collective_attempt(
+                p,
+                mesh,
+                gg,
+                gid,
+                members,
                 &mut work,
                 k,
-                &mut transport,
                 |s, avg| {
                     // training thread gone = error already in flight; the
                     // collective itself must still finish for the peers
-                    let _ = tx.send((s, avg.to_vec()));
+                    let _ = q_comm.push((s, avg.to_vec()));
                 },
-            );
-            if run.is_err() {
-                // dropping tx unblocks the training thread's recv; fully
-                // averaged shards were already streamed and stay applied
-                unwind_broken_collective(mesh, gg, gid, &mut transport)?;
-                return Ok(GroupOutcome::Aborted);
+                // fully averaged shards were already streamed and stay
+                // applied; un-averaged shards simply stay local
+                |_| (),
+            )?;
+            if outcome == GroupOutcome::Aborted {
+                // fault propagation across the stage boundary: the
+                // training side drains valid shards, then observes this
+                q_comm.poison();
             }
-            if members[0] == rank {
-                gg.complete(gid)?;
-            } else {
-                let _ = gg.wait_done(gid)?;
-            }
-            Ok(GroupOutcome::Done)
+            Ok(outcome)
         });
 
         let mut applied = 0usize;
         let mut stale = 0u64;
         let mut blocked = 0.0f64;
-        while applied < k {
+        let mut step_err = None;
+        let mut comm_ended = false;
+        while applied < k && !comm_ended {
             // drain whatever shards already landed, without blocking
-            while let Ok((s, avg)) = rx.try_recv() {
-                let (lo, hi) = shard_bounds(n, k, s);
-                reconcile_shard(&mut flat[lo..hi], &snap[lo..hi], &avg);
-                applied += 1;
+            // (pop/try_pop deliver queued shards even after a poison)
+            loop {
+                match shard_q.try_pop() {
+                    Ok(Some((s, avg))) => {
+                        let (lo, hi) = shard_bounds(n, k, s);
+                        reconcile_shard(&mut flat[lo..hi], &snap[lo..hi], &avg);
+                        applied += 1;
+                    }
+                    Ok(None) => break,
+                    Err(_) => {
+                        comm_ended = true; // done/aborted; join() knows which
+                        break;
+                    }
+                }
             }
-            if applied >= k {
+            if applied >= k || comm_ended {
                 break;
             }
             // same budget as the main loop: max_iters offset by the
@@ -772,12 +1048,22 @@ fn execute_group_overlapped(
             let budget_left = drv.iters < iter_budget
                 && start.elapsed().as_secs_f64() < p.secs;
             if stale < p.overlap.max_staleness && budget_left {
-                drv.step(flat); // hidden compute on (slightly) stale weights
-                stale += 1;
+                // hidden compute on (slightly) stale weights
+                match pipelined_step(drv, feed, flat) {
+                    Ok(()) => stale += 1,
+                    Err(e) => {
+                        // loader stage died: let the collective finish
+                        // for the peers (pushes fail fast once closed),
+                        // then surface the error after the join
+                        shard_q.close();
+                        step_err = Some(e);
+                        break;
+                    }
+                }
             } else {
                 // staleness bound reached: this is the *exposed* sync
                 let t0 = Instant::now();
-                let msg = rx.recv();
+                let msg = shard_q.pop();
                 blocked += t0.elapsed().as_secs_f64();
                 match msg {
                     Ok((s, avg)) => {
@@ -795,6 +1081,9 @@ fn execute_group_overlapped(
         let res = comm.join().map_err(|_| anyhow!("comm thread panicked"))?;
         blocked += t0.elapsed().as_secs_f64();
         let outcome = res?;
+        if let Some(e) = step_err {
+            return Err(e);
+        }
         Ok((stale, blocked, outcome))
     })
 }
@@ -880,6 +1169,9 @@ mod tests {
             stale_steps: 17,
             sync_blocked_secs: 0.812500,
             aborts: 2,
+            load_wait_secs: 0.137500,
+            compute_wait_secs: 0.062500,
+            reconcile_wait_secs: 0.812500,
             bytes_tx: 123456,
             bytes_rx: 654321,
         };
@@ -912,6 +1204,9 @@ mod tests {
         assert_eq!(r.aborts, 0);
         assert_eq!(r.bytes_tx, 0);
         assert_eq!(r.bytes_rx, 0);
+        assert_eq!(r.load_wait_secs, 0.0);
+        assert_eq!(r.compute_wait_secs, 0.0);
+        assert_eq!(r.reconcile_wait_secs, 0.0);
     }
 
     #[test]
@@ -948,6 +1243,8 @@ mod tests {
         let p = WorkerParams::default();
         assert!(p.overlap.is_serial());
         assert_eq!(p.overlap.shards, 1);
+        assert_eq!(p.prefetch, 0, "inline loader is the bit-identical default");
+        assert_eq!(p.load_floor, Duration::ZERO);
         assert_eq!(p.wire, WireCodec::Fp32, "exact wire is the golden default");
         assert_eq!(p.ckpt_every, 0, "checkpointing is opt-in");
         assert!(!p.rejoin);

@@ -22,6 +22,7 @@ use anyhow::{anyhow, Result};
 use crate::cluster::HeterogeneityProfile;
 use crate::collectives::pipeline::OverlapConfig;
 use crate::gg::{GgConfig, GroupGenerator, GroupId, StaticScheduler};
+use crate::step::{self, Bounded, QueueEnd, Stage};
 use crate::util::rng::Pcg32;
 
 use super::engine::PjrtEngine;
@@ -213,6 +214,13 @@ pub struct ThreadedConfig {
     /// collective is one fused mean with no wire pipeline to shard, so
     /// only `max_staleness` changes behaviour in this engine.
     pub overlap: OverlapConfig,
+    /// Staged step pipeline (§Perf): batches the per-worker loader
+    /// stage keeps synthesized ahead of compute. 0 = inline lockstep
+    /// batch synthesis on the worker thread, the pre-pipeline loop.
+    pub prefetch: usize,
+    /// Emulated per-batch load cost (sleep in the loader stage, or on
+    /// the worker thread itself when `prefetch == 0`).
+    pub load_floor: Duration,
 }
 
 /// Outcome of a threaded run.
@@ -231,6 +239,14 @@ pub struct ThreadedReport {
     /// (rendezvous wait + collective, minus time covered by stale
     /// compute) — the exposed-sync measurement the overlap reduces.
     pub sync_wait: Vec<Duration>,
+    /// Wall-clock each worker's compute stage spent waiting on its
+    /// loader stage for the next batch (with `prefetch == 0` this is
+    /// the inline synthesis + `load_floor` cost, fully exposed).
+    pub load_wait: Vec<Duration>,
+    /// Wall-clock each worker's loader stage spent blocked on
+    /// backpressure (bounded queue full: compute is the bottleneck).
+    /// Always zero when `prefetch == 0`.
+    pub compute_wait: Vec<Duration>,
 }
 
 #[derive(Default)]
@@ -302,6 +318,130 @@ pub fn synth_tokens(rng: &mut Pcg32, batch: usize, seq: usize, vocab: usize) -> 
     out
 }
 
+/// One synthesized training batch — the currency between the loader
+/// stage and the compute stage of the staged step pipeline.
+enum SynthBatch {
+    Mlp { x: Vec<f32>, y: Vec<i32> },
+    Tlm { tokens: Vec<i32> },
+}
+
+fn synth_for(rng: &mut Pcg32, workload: &Workload) -> SynthBatch {
+    match *workload {
+        Workload::Mlp { batch, in_dim, classes } => {
+            let (x, y) = synth_batch(rng, batch, in_dim, classes);
+            SynthBatch::Mlp { x, y }
+        }
+        Workload::Tlm { batch, seq, vocab } => {
+            SynthBatch::Tlm { tokens: synth_tokens(rng, batch, seq, vocab) }
+        }
+    }
+}
+
+/// Loader stage of the staged pipeline (`step::Stage`): consumes demand
+/// tokens, synthesizes batches on its own thread with its own RNG
+/// stream, pays the emulated `load_floor` there — off the worker's
+/// critical path.
+struct SynthLoader {
+    rng: Pcg32,
+    workload: Workload,
+    load_floor: Duration,
+}
+
+impl Stage for SynthLoader {
+    type In = ();
+    type Out = SynthBatch;
+
+    fn process(&mut self, _token: ()) -> Result<SynthBatch, String> {
+        if self.load_floor > Duration::ZERO {
+            thread::sleep(self.load_floor);
+        }
+        Ok(synth_for(&mut self.rng, &self.workload))
+    }
+}
+
+/// Where the worker's compute stage gets its next batch: synthesized
+/// inline (lockstep, `prefetch == 0` — the pre-pipeline loop, same RNG
+/// stream) or popped from the loader stage's bounded queue. The token
+/// queue (capacity `prefetch + 1`, pre-seeded) is the demand signal:
+/// the worker returns a token per batch consumed, so the loader stays
+/// exactly `prefetch` batches ahead and blocks when compute falls
+/// behind (`compute_wait`).
+enum BatchFeed {
+    Inline,
+    Staged {
+        batches: Arc<Bounded<SynthBatch>>,
+        tokens: Arc<Bounded<()>>,
+        loader: Option<thread::JoinHandle<Result<(), String>>>,
+    },
+}
+
+impl BatchFeed {
+    fn build(w: usize, cfg: &ThreadedConfig) -> BatchFeed {
+        if cfg.prefetch == 0 {
+            return BatchFeed::Inline;
+        }
+        let depth = cfg.prefetch;
+        let batches = Bounded::new(depth);
+        let tokens = Bounded::new(depth + 1);
+        for _ in 0..=depth {
+            let _ = tokens.push(());
+        }
+        let stage = SynthLoader {
+            // loader-owned stream, disjoint from the worker RNG that
+            // keeps driving stale steps and (inline mode) batches
+            rng: Pcg32::new(cfg.seed ^ ((w as u64) << 20) ^ 0x10AD),
+            workload: cfg.workload.clone(),
+            load_floor: cfg.load_floor,
+        };
+        let loader = step::spawn(stage, Arc::clone(&tokens), Arc::clone(&batches));
+        BatchFeed::Staged { batches, tokens, loader: Some(loader) }
+    }
+
+    /// Next batch for the compute stage, metering the exposed load wait.
+    fn next(
+        &mut self,
+        rng: &mut Pcg32,
+        cfg: &ThreadedConfig,
+        load_wait: &mut Duration,
+    ) -> Result<SynthBatch> {
+        let t = Instant::now();
+        let out = match self {
+            BatchFeed::Inline => {
+                if cfg.load_floor > Duration::ZERO {
+                    thread::sleep(cfg.load_floor);
+                }
+                synth_for(rng, &cfg.workload)
+            }
+            BatchFeed::Staged { batches, tokens, .. } => match batches.pop() {
+                Ok(b) => {
+                    let _ = tokens.push(());
+                    b
+                }
+                Err(QueueEnd::Poisoned) => return Err(anyhow!("loader stage poisoned")),
+                Err(QueueEnd::Closed) => return Err(anyhow!("loader stage ended early")),
+            },
+        };
+        *load_wait += t.elapsed();
+        Ok(out)
+    }
+
+    /// Close the queues, join the loader, and report how long it sat
+    /// blocked on backpressure (the compute stage was the bottleneck).
+    fn shutdown(&mut self) -> Duration {
+        match self {
+            BatchFeed::Inline => Duration::ZERO,
+            BatchFeed::Staged { batches, tokens, loader } => {
+                batches.close();
+                tokens.close();
+                if let Some(h) = loader.take() {
+                    let _ = h.join();
+                }
+                batches.send_wait() + tokens.recv_wait()
+            }
+        }
+    }
+}
+
 /// Run a threaded Ripples training session over the PJRT artifacts.
 pub fn run_threaded(cfg: ThreadedConfig, engine: EngineClient) -> Result<ThreadedReport> {
     let n = cfg.n_nodes * cfg.workers_per_node;
@@ -340,14 +480,18 @@ pub fn run_threaded(cfg: ThreadedConfig, engine: EngineClient) -> Result<Threade
     let mut per_worker_iters = vec![0u64; n];
     let mut stale_steps = vec![0u64; n];
     let mut sync_wait = vec![Duration::ZERO; n];
+    let mut load_wait = vec![Duration::ZERO; n];
+    let mut compute_wait = vec![Duration::ZERO; n];
     for (w, h) in handles.into_iter().enumerate() {
-        let (iters, mut ls, stale, waited) = h
+        let (iters, mut ls, stale, waited, loaded, fed) = h
             .join()
             .map_err(|_| anyhow!("worker {w} panicked"))??;
         per_worker_iters[w] = iters;
         losses.append(&mut ls);
         stale_steps[w] = stale;
         sync_wait[w] = waited;
+        load_wait[w] = loaded;
+        compute_wait[w] = fed;
     }
     let wall = start.elapsed();
     let coord = shared.coord.lock().unwrap();
@@ -366,31 +510,50 @@ pub fn run_threaded(cfg: ThreadedConfig, engine: EngineClient) -> Result<Threade
         final_models,
         stale_steps,
         sync_wait,
+        load_wait,
+        compute_wait,
     })
 }
 
-type WorkerOut = Result<(u64, Vec<(usize, u64, f32)>, u64, Duration)>;
+type WorkerOut =
+    Result<(u64, Vec<(usize, u64, f32)>, u64, Duration, Duration, Duration)>;
 
 fn worker_loop(w: usize, sh: Arc<Shared>) -> WorkerOut {
+    // the feed is shut down on *every* exit path — a worker error must
+    // close the queues or the loader thread would block on backpressure
+    // forever and the final join would hang
+    let mut feed = BatchFeed::build(w, &sh.cfg);
+    let res = worker_iters(w, &sh, &mut feed);
+    let compute_wait = feed.shutdown();
+    let (iters, losses, stale, blocked, load_wait) = res?;
+    Ok((iters, losses, stale, blocked, load_wait, compute_wait))
+}
+
+fn worker_iters(
+    w: usize,
+    sh: &Arc<Shared>,
+    feed: &mut BatchFeed,
+) -> Result<(u64, Vec<(usize, u64, f32)>, u64, Duration, Duration)> {
     let cfg = &sh.cfg;
     let mut rng = Pcg32::new(cfg.seed ^ ((w as u64) << 20) ^ 0xBEEF);
     let mut losses = Vec::new();
     let mut stale_total = 0u64;
     let mut stale_time = Duration::ZERO;
     let mut blocked = Duration::ZERO;
+    let mut load_wait = Duration::ZERO;
     for it in 0..cfg.iters as u64 {
         // per-iteration: scheduled (SlowdownEvent) speed changes apply
         let slowdown = cfg.hetero.slowdown_at(w, it);
-        // ---- compute phase (PJRT train step through the AOT artifacts)
+        // ---- load stage: next batch (inline synthesis or prefetched)
         let t0 = Instant::now();
+        let batch = feed.next(&mut rng, cfg, &mut load_wait)?;
+        // ---- compute stage (PJRT train step through the AOT artifacts)
         let flat = sh.models[w].lock().unwrap().clone();
-        let (new_flat, loss) = match cfg.workload {
-            Workload::Mlp { batch, in_dim, classes } => {
-                let (x, y) = synth_batch(&mut rng, batch, in_dim, classes);
+        let (new_flat, loss) = match batch {
+            SynthBatch::Mlp { x, y } => {
                 sh.engine.mlp_step(&cfg.step_artifact, flat, x, y, cfg.lr)?
             }
-            Workload::Tlm { batch, seq, vocab } => {
-                let tokens = synth_tokens(&mut rng, batch, seq, vocab);
+            SynthBatch::Tlm { tokens } => {
                 sh.engine.tlm_step(&cfg.step_artifact, flat, tokens, cfg.lr)?
             }
         };
@@ -450,7 +613,7 @@ fn worker_loop(w: usize, sh: Arc<Shared>) -> WorkerOut {
             sync_gg(w, &sh, 0.0, None)?;
         }
     }
-    Ok((cfg.iters as u64, losses, stale_total, blocked))
+    Ok((cfg.iters as u64, losses, stale_total, blocked, load_wait))
 }
 
 /// Permission for [`sync_gg`] to take bounded stale SGD steps while the

@@ -51,6 +51,54 @@ enum WState {
     InPReduce,
 }
 
+/// Per-stage virtual time model of the staged step pipeline
+/// (`[pipeline]`, mirroring `net::worker`'s loader thread). Lockstep
+/// (prefetch 0) serializes the stages — every step costs
+/// `load + compute` and fully exposes its load segment. With a
+/// prefetching loader only each worker's first step pays the priming
+/// load; afterwards a step advances at the *bottleneck* stage,
+/// `max(load, compute)`, and the shorter stage's slack is metered as
+/// the other stage's wait (compute stalled on the loader feeds
+/// `load_wait`, an idle loader feeds `compute_wait`). `load_secs ==
+/// 0.0` leaves every duration bit-for-bit identical to the
+/// pre-pipeline model, staged or not.
+struct StageMeter {
+    load: f64,
+    staged: bool,
+    primed: Vec<bool>,
+    load_wait: f64,
+    compute_wait: f64,
+}
+
+impl StageMeter {
+    fn new(pipeline: crate::step::PipelineConfig, n: usize) -> Self {
+        StageMeter {
+            load: pipeline.load_secs,
+            staged: pipeline.is_staged(),
+            primed: vec![false; n],
+            load_wait: 0.0,
+            compute_wait: 0.0,
+        }
+    }
+
+    /// Scheduled duration of worker `w`'s next step given its raw
+    /// compute cost `c`, accumulating the exposed stage waits.
+    fn step_dur(&mut self, w: usize, c: f64) -> f64 {
+        if !self.staged || !self.primed[w] {
+            self.primed[w] = true;
+            self.load_wait += self.load;
+            return self.load + c;
+        }
+        if self.load > c {
+            self.load_wait += self.load - c;
+            self.load
+        } else {
+            self.compute_wait += c - self.load;
+            c
+        }
+    }
+}
+
 /// Scan armed groups; start every group whose members are all ready.
 /// `wire_bytes` is the codec-compressed per-member transfer size and
 /// `bw` the current per-worker link throttle (1.0 = full speed); every
@@ -184,6 +232,10 @@ fn run_inner(
     // leaves the original arithmetic untouched, bit for bit.
     let overlap = exp.overlap;
     let mut hidden_total = 0.0;
+    // §Perf staged pipeline: every step duration flows through the
+    // stage meter, which models the loader/compute handoff and meters
+    // the per-stage exposed waits (identity at the default config).
+    let mut stage = StageMeter::new(exp.pipeline, n);
     let mut total_iters = 0u64;
     let max_total = exp.train.max_iters as u64 * n as u64;
     let eval_stride = (exp.train.eval_every * n) as u64;
@@ -201,7 +253,7 @@ fn run_inner(
 
     st.record(0.0, 0.0);
     for w in 0..n {
-        durs[w] = timer.next_compute(w);
+        durs[w] = stage.step_dur(w, timer.next_compute(w));
         q.push(durs[w], Ev::ComputeDone(w));
     }
 
@@ -279,7 +331,7 @@ fn run_inner(
                     break;
                 }
                 if (it + 1) % section != 0 {
-                    durs[w] = timer.next_compute(w);
+                    durs[w] = stage.step_dur(w, timer.next_compute(w));
                     q.push(now + durs[w], Ev::ComputeDone(w));
                     continue;
                 }
@@ -293,7 +345,7 @@ fn run_inner(
                             // no sync possible (cannot happen in the sim's
                             // never-retiring workload, but stay graceful)
                             wstate[w] = WState::Computing;
-                            durs[w] = timer.next_compute(w);
+                            durs[w] = stage.step_dur(w, timer.next_compute(w));
                             q.push(now + durs[w], Ev::ComputeDone(w));
                         }
                     }
@@ -310,7 +362,7 @@ fn run_inner(
                     match sched.group_of(w, sidx) {
                         None => {
                             wstate[w] = WState::Computing;
-                            durs[w] = timer.next_compute(w);
+                            durs[w] = stage.step_dur(w, timer.next_compute(w));
                             q.push(now + durs[w], Ev::ComputeDone(w));
                         }
                         Some(members) => {
@@ -349,7 +401,7 @@ fn run_inner(
                         // this was m's own sync step: resume compute
                         assigned[m] = None;
                         wstate[m] = WState::Computing;
-                        durs[m] = timer.next_compute(m);
+                        durs[m] = stage.step_dur(m, timer.next_compute(m));
                         if overlap.max_staleness > 0 {
                             // Hidden = what stale compute can cover: up
                             // to `S` steps' worth, never the final
@@ -400,7 +452,7 @@ fn run_inner(
                 for &m in &members {
                     wstate[m] = WState::Computing;
                     sync_total += now - ready_since[m];
-                    durs[m] = timer.next_compute(m);
+                    durs[m] = stage.step_dur(m, timer.next_compute(m));
                     q.push(now + durs[m], Ev::ComputeDone(m));
                 }
             }
@@ -415,7 +467,7 @@ fn run_inner(
                         None => {
                             // nobody left to pair with: skip this sync
                             wstate[m] = WState::Computing;
-                            durs[m] = timer.next_compute(m);
+                            durs[m] = stage.step_dur(m, timer.next_compute(m));
                             q.push(now + durs[m], Ev::ComputeDone(m));
                         }
                     }
@@ -449,7 +501,10 @@ fn run_inner(
                     }
                     wstate[w] = WState::Computing;
                     assigned[w] = None;
-                    durs[w] = timer.next_compute(w);
+                    // the restored process starts its loader cold: the
+                    // first post-rejoin step pays the priming load again
+                    stage.primed[w] = false;
+                    durs[w] = stage.step_dur(w, timer.next_compute(w));
                     q.push(now + durs[w], Ev::ComputeDone(w));
                 }
             }
@@ -493,6 +548,9 @@ fn run_inner(
         compute_time: compute_total,
         sync_time: sync_total,
         hidden_sync_time: hidden_total,
+        load_wait_time: stage.load_wait,
+        compute_wait_time: stage.compute_wait,
+        reconcile_wait_time: sync_total,
         time_to_target: st.hit_time,
         avg_iters_to_target: st.hit_avg_iter,
         trace: st.trace,
@@ -755,6 +813,87 @@ mod tests {
         assert_eq!(ro.final_time.to_bits(), ro2.final_time.to_bits());
         assert_eq!(ro.sync_time.to_bits(), ro2.sync_time.to_bits());
         assert_eq!(ro.hidden_sync_time.to_bits(), ro2.hidden_sync_time.to_bits());
+    }
+
+    #[test]
+    fn staged_pipeline_makespan_is_bottleneck_not_sum() {
+        // lockstep pays load + compute every step and exposes the whole
+        // load segment; a primed staged loader pays only the bottleneck
+        // max(load, compute), so with load at 0.4x the compute base the
+        // staged run must be strictly faster and expose strictly less
+        // load wait, idling the loader (compute_wait > 0) instead.
+        let base = run(&params(AlgoKind::RipplesSmart));
+        let mut lock = params(AlgoKind::RipplesSmart);
+        lock.exp.pipeline.load_secs = 0.4 * lock.compute_base;
+        let mut staged = lock.clone();
+        staged.exp.pipeline.prefetch = 4;
+        let rl = run(&lock);
+        let rs = run(&staged);
+        assert_eq!(rl.total_iters, rs.total_iters);
+        assert!(rl.final_time > base.final_time);
+        assert!(rl.load_wait_time > 0.0);
+        assert_eq!(rl.compute_wait_time, 0.0);
+        assert!(
+            rs.load_wait_time < rl.load_wait_time,
+            "prefetch did not cut exposed load wait: {} vs {}",
+            rs.load_wait_time,
+            rl.load_wait_time
+        );
+        assert!(
+            rs.final_time < rl.final_time,
+            "staged makespan not below lockstep: {} vs {}",
+            rs.final_time,
+            rl.final_time
+        );
+        assert!(rs.compute_wait_time > 0.0, "loader never idled: {rs:?}");
+        // reconcile wait is the stage-named view of the sync meter
+        assert_eq!(rs.reconcile_wait_time.to_bits(), rs.sync_time.to_bits());
+        assert_eq!(rl.reconcile_wait_time.to_bits(), rl.sync_time.to_bits());
+    }
+
+    #[test]
+    fn staged_time_model_deterministic_and_identity_at_zero_load() {
+        // prefetch with zero load cost must not move a single event:
+        // the bottleneck max(0, c) is bitwise c, so the whole schedule
+        // (and the loss trace riding on it) is unchanged.
+        let base = run(&params(AlgoKind::RipplesSmart));
+        let mut zero = params(AlgoKind::RipplesSmart);
+        zero.exp.pipeline.prefetch = 4;
+        let z = run(&zero);
+        assert_eq!(z.final_time.to_bits(), base.final_time.to_bits());
+        assert_eq!(z.total_iters, base.total_iters);
+        assert_eq!(base.load_wait_time, 0.0);
+        assert_eq!(base.compute_wait_time, 0.0);
+        for (x, y) in base.trace.iter().zip(z.trace.iter()) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
+
+        // staged runs with per-stage durations enabled stay bit-for-bit
+        // reproducible, crashes + overlap included (satellite of the
+        // determinism suite: the stage meter adds no RNG draws)
+        use crate::cluster::CrashEvent;
+        let mut p = params(AlgoKind::RipplesSmart);
+        p.exp.train.max_iters = 100;
+        p.exp.pipeline.prefetch = 4;
+        p.exp.pipeline.load_secs = 0.5 * p.compute_base;
+        p.exp.overlap =
+            crate::collectives::OverlapConfig { shards: 4, max_staleness: 4 };
+        p.exp.cluster.hetero.crashes =
+            vec![CrashEvent { worker: 3, at_iter: 15, rejoin_after_secs: Some(2.0) }];
+        let a = run(&p);
+        let b = run(&p);
+        assert_eq!(a.final_time.to_bits(), b.final_time.to_bits());
+        assert_eq!(a.load_wait_time.to_bits(), b.load_wait_time.to_bits());
+        assert_eq!(a.compute_wait_time.to_bits(), b.compute_wait_time.to_bits());
+        assert_eq!(
+            a.reconcile_wait_time.to_bits(),
+            b.reconcile_wait_time.to_bits()
+        );
+        assert_eq!(a.per_worker_iters, b.per_worker_iters);
+        assert_eq!(a.rejoins, b.rejoins);
+        for (x, y) in a.trace.iter().zip(b.trace.iter()) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
     }
 
     #[test]

@@ -34,6 +34,20 @@ pub struct SimResult {
     /// the pipelined-overlap model (`Experiment::overlap`); 0.0 when
     /// overlap is off.
     pub hidden_sync_time: f64,
+    /// Per-stage exposed waits of the staged step pipeline
+    /// (`Experiment::pipeline`). With the lockstep default, every step
+    /// fully exposes its load segment (`load_wait_time` = total load
+    /// time, `compute_wait_time` = 0); with prefetch, only the
+    /// per-step `max(load, compute)` bottleneck is exposed — the
+    /// shorter stage's remainder shows up in the *other* stage's wait.
+    pub load_wait_time: f64,
+    /// Virtual seconds the loader stage idled waiting for compute
+    /// (steps where compute was the pipeline bottleneck).
+    pub compute_wait_time: f64,
+    /// The reconcile stage's exposed wait: identical to `sync_time`,
+    /// reported under its stage name so the three-stage breakdown is
+    /// complete (load / compute / reconcile).
+    pub reconcile_wait_time: f64,
     pub time_to_target: Option<f64>,
     pub avg_iters_to_target: Option<f64>,
     pub conflicts: u64,

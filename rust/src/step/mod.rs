@@ -1,0 +1,502 @@
+//! Staged step pipeline: the shared load → compute → reconcile
+//! decomposition of the per-worker training step (DESIGN.md §Perf,
+//! "Staged step pipeline").
+//!
+//! The monolithic worker loop serializes three activities that have no
+//! data dependency on each other across *adjacent* iterations: drawing
+//! the next mini-batch, running SGD on the current one, and folding
+//! finished P-Reduce shards back into the live model. This module owns
+//! the machinery every execution surface shares to overlap them:
+//!
+//! * [`Bounded`] — a bounded SPSC handoff queue with blocking
+//!   backpressure, poison-aware shutdown, and built-in stall meters
+//!   (the `load_wait`/`compute_wait`/`reconcile_wait` counters reported
+//!   by workers come from these meters). A queue drains its remaining
+//!   items even after [`Bounded::poison`], so a consumer always sees
+//!   every item the producer completed before the fault — the
+//!   keep-fully-averaged-shards rule of the overlap engine extended to
+//!   every stage boundary.
+//! * [`Stage`] — one pipeline stage as a value: pull an input, produce
+//!   an output. [`spawn`] drives a stage on its own thread between two
+//!   queues and propagates close/poison in both directions, so a fault
+//!   (or a clean shutdown) anywhere in the pipeline unwinds every
+//!   stage without deadlocking.
+//! * [`PipelineConfig`] — the `--prefetch N` / `--load-ms` knobs shared
+//!   by the distributed worker, the threaded runtime, and the
+//!   simulator's virtual-time model (`[pipeline]` config section).
+//!
+//! Buffer recycling falls out of the topology rather than a dedicated
+//! pool type: stages hand *spare* buffers back upstream through a
+//! second bounded queue (consumer → producer), so the loader refills
+//! recycled allocations instead of allocating per batch, and the spare
+//! queue's bound doubles as the prefetch-depth limit. `prefetch = 0`
+//! (the default) bypasses the queues entirely and runs today's inline
+//! lockstep loop bit-for-bit.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a [`Bounded::pop`] returned no item: the producer side shut the
+/// queue down cleanly, or poisoned it (fault propagation across a stage
+/// boundary — the queue analogue of a poison frame on the ring).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueEnd {
+    /// Clean shutdown: the producer finished and no more items exist.
+    Closed,
+    /// Fault shutdown: the producer hit an error (collective abort,
+    /// stage failure). Items popped before this were still valid.
+    Poisoned,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    poisoned: bool,
+    /// High-water mark: the most items ever queued at once (the
+    /// capacity property test pins `max_occupancy <= capacity`).
+    max_occupancy: usize,
+}
+
+/// A bounded SPSC handoff queue: `push` blocks while full
+/// (backpressure), `pop` blocks while empty, and either side can end
+/// the stream with [`close`](Bounded::close) (clean) or
+/// [`poison`](Bounded::poison) (fault). Remaining items are always
+/// drained before the consumer observes the end.
+///
+/// Both blocking directions are metered ([`recv_wait`](Bounded::recv_wait),
+/// [`send_wait`](Bounded::send_wait)) — those meters are the per-stage
+/// stall counters the pipeline reports.
+pub struct Bounded<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    recv_wait_ns: AtomicU64,
+    send_wait_ns: AtomicU64,
+}
+
+impl<T> Bounded<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to >= 1).
+    pub fn new(cap: usize) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(Inner {
+                q: VecDeque::with_capacity(cap.max(1)),
+                closed: false,
+                poisoned: false,
+                max_occupancy: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+            recv_wait_ns: AtomicU64::new(0),
+            send_wait_ns: AtomicU64::new(0),
+        })
+    }
+
+    fn add_wait(meter: &AtomicU64, since: Instant) {
+        let ns = since.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        meter.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Blocking send. Waits while the queue is full (metered as
+    /// producer stall time); returns the item back if the queue was
+    /// closed or poisoned before it could be accepted.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed && !g.poisoned {
+            let t0 = Instant::now();
+            g = self.not_full.wait(g).unwrap();
+            Self::add_wait(&self.send_wait_ns, t0);
+        }
+        if g.closed || g.poisoned {
+            return Err(item);
+        }
+        g.q.push_back(item);
+        g.max_occupancy = g.max_occupancy.max(g.q.len());
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive. Drains queued items first — even after close
+    /// or poison — then reports how the stream ended (metered as
+    /// consumer stall time).
+    pub fn pop(&self) -> Result<T, QueueEnd> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.poisoned {
+                return Err(QueueEnd::Poisoned);
+            }
+            if g.closed {
+                return Err(QueueEnd::Closed);
+            }
+            let t0 = Instant::now();
+            g = self.not_empty.wait(g).unwrap();
+            Self::add_wait(&self.recv_wait_ns, t0);
+        }
+    }
+
+    /// Non-blocking receive: `Ok(Some)` on an item, `Ok(None)` when
+    /// empty but still open, `Err` when empty and ended.
+    pub fn try_pop(&self) -> Result<Option<T>, QueueEnd> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(item) = g.q.pop_front() {
+            drop(g);
+            self.not_full.notify_one();
+            return Ok(Some(item));
+        }
+        if g.poisoned {
+            return Err(QueueEnd::Poisoned);
+        }
+        if g.closed {
+            return Err(QueueEnd::Closed);
+        }
+        Ok(None)
+    }
+
+    /// Clean end-of-stream: queued items remain poppable, further
+    /// pushes fail, blocked threads wake. Idempotent.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Fault end-of-stream: like [`close`](Bounded::close) but consumers
+    /// observe [`QueueEnd::Poisoned`] after draining. Poison wins over a
+    /// concurrent close. Idempotent.
+    pub fn poison(&self) {
+        self.inner.lock().unwrap().poisoned = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// True once [`poison`](Bounded::poison) has been called.
+    pub fn is_poisoned(&self) -> bool {
+        self.inner.lock().unwrap().poisoned
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// True when no items are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The configured bound.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// High-water mark of queued items over the queue's lifetime.
+    pub fn max_occupancy(&self) -> usize {
+        self.inner.lock().unwrap().max_occupancy
+    }
+
+    /// Total time consumers spent blocked in [`pop`](Bounded::pop).
+    pub fn recv_wait(&self) -> Duration {
+        Duration::from_nanos(self.recv_wait_ns.load(Ordering::Relaxed))
+    }
+
+    /// Total time producers spent blocked in [`push`](Bounded::push)
+    /// (backpressure from a full queue).
+    pub fn send_wait(&self) -> Duration {
+        Duration::from_nanos(self.send_wait_ns.load(Ordering::Relaxed))
+    }
+}
+
+/// Closes a [`Bounded`] queue when dropped — placed at the top of a
+/// stage thread so a panic (or any early return) still releases peers
+/// blocked on the queue instead of wedging the pipeline.
+pub struct CloseGuard<T>(pub Arc<Bounded<T>>);
+
+impl<T> Drop for CloseGuard<T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// One pipeline stage as a value: transform an input pulled from the
+/// upstream queue into an output for the downstream queue. Stages are
+/// driven by [`spawn`]; state (RNG streams, datasets, scratch) lives in
+/// the implementing struct, which is what makes a loader's batch
+/// sequence deterministic regardless of queue timing.
+pub trait Stage {
+    /// Upstream item type (often a recycled buffer to refill).
+    type In: Send + 'static;
+    /// Downstream item type.
+    type Out: Send + 'static;
+    /// Process one item. An `Err` poisons the downstream queue and
+    /// stops the stage.
+    fn process(&mut self, item: Self::In) -> Result<Self::Out, String>;
+}
+
+/// Drive a [`Stage`] on its own thread: pop from `rx`, process, push to
+/// `tx`, until either queue ends. Close/poison propagates both ways —
+/// upstream close drains into a downstream close, upstream poison or a
+/// stage error becomes a downstream poison, and a downstream shutdown
+/// closes `rx` so the producer above stops too.
+pub fn spawn<S>(
+    mut stage: S,
+    rx: Arc<Bounded<S::In>>,
+    tx: Arc<Bounded<S::Out>>,
+) -> std::thread::JoinHandle<Result<(), String>>
+where
+    S: Stage + Send + 'static,
+{
+    std::thread::spawn(move || {
+        let _up = CloseGuard(Arc::clone(&rx));
+        let _down = CloseGuard(Arc::clone(&tx));
+        loop {
+            match rx.pop() {
+                Ok(item) => match stage.process(item) {
+                    Ok(out) => {
+                        if tx.push(out).is_err() {
+                            // downstream ended first: stop pulling so the
+                            // guard's close unwinds the upstream producer
+                            return Ok(());
+                        }
+                    }
+                    Err(e) => {
+                        tx.poison();
+                        return Err(e);
+                    }
+                },
+                Err(QueueEnd::Closed) => return Ok(()),
+                Err(QueueEnd::Poisoned) => {
+                    tx.poison();
+                    return Err("upstream stage poisoned".into());
+                }
+            }
+        }
+    })
+}
+
+/// Staged-pipeline knobs, shared by the distributed worker
+/// (`--prefetch` / `--load-ms`), the threaded runtime, and the
+/// simulator's virtual-time model (`[pipeline]` config section).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineConfig {
+    /// Mini-batches the loader stage keeps ready ahead of compute
+    /// (queue depth). 0 = no loader thread: the inline lockstep loop,
+    /// bit-identical to the pre-pipeline behaviour.
+    pub prefetch: usize,
+    /// Modeled per-batch load duration: virtual seconds in the sim, an
+    /// emulated I/O floor (`--load-ms`) on real surfaces. 0 = loading
+    /// costs only what the batch synthesis itself costs.
+    pub load_secs: f64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self::inline()
+    }
+}
+
+impl PipelineConfig {
+    /// The lockstep default: no loader stage, no modeled load cost.
+    pub fn inline() -> Self {
+        Self { prefetch: 0, load_secs: 0.0 }
+    }
+
+    /// True when a loader stage should run on its own thread.
+    pub fn is_staged(&self) -> bool {
+        self.prefetch > 0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.prefetch > 1024 {
+            return Err(format!(
+                "pipeline.prefetch {} is unreasonable (max 1024)",
+                self.prefetch
+            ));
+        }
+        if !self.load_secs.is_finite() || self.load_secs < 0.0 {
+            return Err(format!(
+                "pipeline.load_secs must be finite and >= 0 (got {})",
+                self.load_secs
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn push_pop_fifo_and_close() {
+        let q = Bounded::new(4);
+        for i in 0..3 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        assert_eq!(q.pop(), Ok(0));
+        assert_eq!(q.pop(), Ok(1));
+        assert_eq!(q.pop(), Ok(2));
+        assert_eq!(q.pop(), Err(QueueEnd::Closed));
+        assert_eq!(q.push(9), Err(9));
+        assert_eq!(q.max_occupancy(), 3);
+    }
+
+    #[test]
+    fn poison_drains_then_reports() {
+        let q = Bounded::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.poison();
+        // queued items survive the poison; only the end marker changes
+        assert_eq!(q.pop(), Ok(1));
+        assert_eq!(q.try_pop(), Ok(Some(2)));
+        assert_eq!(q.pop(), Err(QueueEnd::Poisoned));
+        assert_eq!(q.try_pop(), Err(QueueEnd::Poisoned));
+        assert!(q.is_poisoned());
+    }
+
+    #[test]
+    fn poison_wins_over_close() {
+        let q = Bounded::<u32>::new(2);
+        q.close();
+        q.poison();
+        assert_eq!(q.pop(), Err(QueueEnd::Poisoned));
+    }
+
+    #[test]
+    fn try_pop_empty_open_is_none() {
+        let q = Bounded::<u32>::new(2);
+        assert_eq!(q.try_pop(), Ok(None));
+    }
+
+    #[test]
+    fn backpressure_blocks_and_meters() {
+        let q = Bounded::new(1);
+        q.push(0u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || q2.push(1).is_ok());
+        thread::sleep(Duration::from_millis(20));
+        // producer is blocked on the full queue; free a slot
+        assert_eq!(q.pop(), Ok(0));
+        assert!(producer.join().unwrap());
+        assert_eq!(q.pop(), Ok(1));
+        assert!(q.send_wait() >= Duration::from_millis(5), "{:?}", q.send_wait());
+        assert_eq!(q.max_occupancy(), 1);
+    }
+
+    #[test]
+    fn pop_blocks_until_push_and_meters() {
+        let q = Bounded::<u32>::new(2);
+        let q2 = Arc::clone(&q);
+        let consumer = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.push(7).unwrap();
+        assert_eq!(consumer.join().unwrap(), Ok(7));
+        assert!(q.recv_wait() >= Duration::from_millis(5), "{:?}", q.recv_wait());
+    }
+
+    #[test]
+    fn close_guard_releases_blocked_consumer() {
+        let q = Bounded::<u32>::new(2);
+        let q2 = Arc::clone(&q);
+        let consumer = thread::spawn(move || q2.pop());
+        let producer = thread::spawn(move || {
+            let _guard = CloseGuard(Arc::clone(&q));
+            // exits without pushing: the guard must close the queue
+        });
+        producer.join().unwrap();
+        assert_eq!(consumer.join().unwrap(), Err(QueueEnd::Closed));
+    }
+
+    /// Doubler stage used by the driver tests.
+    struct Doubler;
+    impl Stage for Doubler {
+        type In = u32;
+        type Out = u32;
+        fn process(&mut self, item: u32) -> Result<u32, String> {
+            if item == 13 {
+                return Err("unlucky".into());
+            }
+            Ok(item * 2)
+        }
+    }
+
+    #[test]
+    fn spawned_stage_maps_and_closes_downstream() {
+        let rx = Bounded::new(2);
+        let tx = Bounded::new(2);
+        let h = spawn(Doubler, Arc::clone(&rx), Arc::clone(&tx));
+        for i in 0..5u32 {
+            rx.push(i).unwrap();
+        }
+        rx.close();
+        let mut got = Vec::new();
+        while let Ok(v) = tx.pop() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 2, 4, 6, 8]);
+        assert_eq!(tx.pop(), Err(QueueEnd::Closed));
+        assert!(h.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn stage_error_poisons_downstream_and_closes_upstream() {
+        let rx = Bounded::new(4);
+        let tx = Bounded::new(4);
+        let h = spawn(Doubler, Arc::clone(&rx), Arc::clone(&tx));
+        rx.push(1).unwrap();
+        rx.push(13).unwrap(); // stage error
+        // good output before the fault still arrives, then poison
+        assert_eq!(tx.pop(), Ok(2));
+        assert_eq!(tx.pop(), Err(QueueEnd::Poisoned));
+        assert!(h.join().unwrap().is_err());
+        // the guard closed the upstream queue so producers stop
+        assert_eq!(rx.push(5), Err(5));
+    }
+
+    #[test]
+    fn upstream_poison_propagates_through_stage() {
+        let rx = Bounded::new(4);
+        let tx = Bounded::new(4);
+        let h = spawn(Doubler, Arc::clone(&rx), Arc::clone(&tx));
+        rx.push(3).unwrap();
+        rx.poison();
+        assert_eq!(tx.pop(), Ok(6));
+        assert_eq!(tx.pop(), Err(QueueEnd::Poisoned));
+        assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn downstream_shutdown_stops_stage_cleanly() {
+        let rx = Bounded::new(4);
+        let tx = Bounded::<u32>::new(1);
+        let h = spawn(Doubler, Arc::clone(&rx), Arc::clone(&tx));
+        tx.close();
+        // the stage notices on its next push and exits Ok, closing rx
+        rx.push(1).unwrap_or(());
+        assert!(h.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn pipeline_config_validation_and_defaults() {
+        let d = PipelineConfig::default();
+        assert_eq!(d, PipelineConfig::inline());
+        assert!(!d.is_staged());
+        assert!(d.validate().is_ok());
+        assert!(PipelineConfig { prefetch: 4, load_secs: 0.01 }.is_staged());
+        assert!(PipelineConfig { prefetch: 4, load_secs: 0.01 }.validate().is_ok());
+        assert!(PipelineConfig { prefetch: 2000, load_secs: 0.0 }.validate().is_err());
+        assert!(PipelineConfig { prefetch: 0, load_secs: -1.0 }.validate().is_err());
+        assert!(PipelineConfig { prefetch: 0, load_secs: f64::NAN }.validate().is_err());
+    }
+}

@@ -271,6 +271,83 @@ fn overlap_pipeline_reduces_exposed_sync() {
     );
 }
 
+/// The staged-pipeline acceptance scenario (DESIGN.md §Perf): a
+/// 4-process cluster with a deliberately slow loader (`--load-ms 20`
+/// under a 40 ms compute floor). With `--prefetch 0` every step pays the
+/// load serially and `load_wait` grows by ~20 ms per iteration; with
+/// `--prefetch 4` the loader thread runs ahead of compute, so the only
+/// exposed load is the first-batch priming. The staged run must show a
+/// strictly lower `load_wait`, loader-side backpressure (`compute_wait`
+/// > 0 exactly because the loader outpaces compute), and an equal loss
+/// trajectory — same seed, same batch tags, only the overlap differs.
+#[test]
+fn pipeline_prefetch_hides_slow_loader() {
+    let base = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        secs: 4.0,
+        group_size: 2,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 40,
+        load_floor_ms: 20,
+        seed: 42,
+        ..LaunchConfig::default()
+    };
+    let lockstep = launch_local(&base).expect("lockstep cluster run");
+    let staged = launch_local(&LaunchConfig { prefetch: 4, ..base.clone() })
+        .expect("staged cluster run");
+
+    let load_wait = |r: &LaunchReport| -> f64 {
+        r.workers.iter().map(|w| w.load_wait_secs).sum()
+    };
+    // sanity: the slow loader actually hurt the serial path (~20 ms/iter)
+    assert!(
+        load_wait(&lockstep) > 0.5,
+        "lockstep run did not expose the load floor: {:.3}s",
+        load_wait(&lockstep)
+    );
+    assert!(
+        load_wait(&staged) < 0.25 * load_wait(&lockstep),
+        "prefetch did not hide the slow loader: staged {:.3}s vs lockstep {:.3}s",
+        load_wait(&staged),
+        load_wait(&lockstep)
+    );
+    // without a loader thread there is nothing to backpressure ...
+    for w in &lockstep.workers {
+        assert_eq!(
+            w.compute_wait_secs, 0.0,
+            "lockstep worker {} reported loader backpressure: {w:?}",
+            w.rank
+        );
+    }
+    // ... while the staged loader (20 ms) outpaces compute (40 ms) and
+    // spends the surplus blocked on the full batch queue
+    assert!(
+        staged.workers.iter().any(|w| w.compute_wait_secs > 0.0),
+        "staged loaders never hit backpressure: {:?}",
+        staged.workers
+    );
+
+    let mean_loss = |r: &LaunchReport| -> f64 {
+        r.workers.iter().map(|w| w.loss_last).sum::<f64>() / r.workers.len() as f64
+    };
+    for w in &staged.workers {
+        assert!(
+            w.loss_last < w.loss_first * 0.85,
+            "worker {} loss did not decrease under prefetch: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+    }
+    let (ll, ls) = (mean_loss(&lockstep), mean_loss(&staged));
+    assert!(
+        (ll - ls).abs() < 0.5 * ll.max(ls) + 0.05,
+        "final losses diverged: lockstep {ll:.4} vs staged {ls:.4}"
+    );
+}
+
 /// The chaos acceptance scenario: a 4-process cluster, one worker
 /// SIGKILLed mid-run (with an 8 ms compute floor and constant syncing,
 /// that lands mid-collective or with in-flight group state). The
@@ -339,6 +416,81 @@ fn chaos_kill_worker_mid_run_cluster_repairs_and_finishes() {
     assert!(
         (lc - lr).abs() < 0.5 * lc.max(lr) + 0.05,
         "repaired cluster trained much worse than crash-free: {lc:.4} vs {lr:.4}"
+    );
+}
+
+/// Abort-parity regression for the shared `collective_attempt` helper:
+/// the serial and overlapped paths now snapshot/rollback/retry through
+/// the same code, so a mid-collective kill must behave identically on
+/// each. Run the same kill scenario serial and overlapped (K=4, S=6):
+/// both clusters must abort at least one in-flight collective, declare
+/// exactly the killed rank dead, finish the window with every survivor
+/// training, and land on equal final losses within tolerance.
+#[test]
+fn chaos_abort_parity_serial_vs_overlapped() {
+    let base = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        secs: 3.0,
+        group_size: 2,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 42,
+        liveness_ms: 2000,
+        heartbeat_ms: 100,
+        kill: Some(KillSpec { rank: 3, after_secs: 1.0, rejoin_after_secs: None }),
+        ..LaunchConfig::default()
+    };
+    let serial = with_timeout(120, "serial abort-parity run", {
+        let cfg = base.clone();
+        move || launch_local(&cfg).expect("serial chaos run")
+    });
+    let overlapped = with_timeout(120, "overlapped abort-parity run", {
+        let cfg = LaunchConfig {
+            overlap: OverlapConfig { shards: 4, max_staleness: 6 },
+            ..base
+        };
+        move || launch_local(&cfg).expect("overlapped chaos run")
+    });
+
+    for (label, report) in [("serial", &serial), ("overlapped", &overlapped)] {
+        assert_eq!(report.killed, Some(3), "{label}: kill was not delivered");
+        assert_eq!(report.workers.len(), 3, "{label}: exactly the survivors report");
+        assert_eq!(
+            report.gg_stats.deaths, 1,
+            "{label}: the killed rank must be declared dead (and only it)"
+        );
+        // the kill must have interrupted real in-flight collectives —
+        // the snapshot/rollback path under test actually ran
+        let aborts: u64 = report.workers.iter().map(|w| w.aborts).sum();
+        assert!(
+            aborts > 0,
+            "{label}: no survivor aborted a collective around the kill: {:?}",
+            report.workers
+        );
+        for w in &report.workers {
+            assert_ne!(w.rank, 3);
+            assert!(w.preduces > 0, "{label}: survivor {} never synchronized: {w:?}", w.rank);
+            assert!(
+                w.loss_last < w.loss_first * 0.85,
+                "{label}: survivor {} loss did not decrease after rollback: {} -> {}",
+                w.rank,
+                w.loss_first,
+                w.loss_last
+            );
+        }
+    }
+
+    // parity: the rollback-and-carry-on outcome must not depend on which
+    // execution path (serial vs overlapped) hit the abort
+    let mean_loss = |r: &LaunchReport| -> f64 {
+        r.workers.iter().map(|w| w.loss_last).sum::<f64>() / r.workers.len() as f64
+    };
+    let (ls, lo) = (mean_loss(&serial), mean_loss(&overlapped));
+    assert!(
+        (ls - lo).abs() < 0.5 * ls.max(lo) + 0.05,
+        "abort handling diverged across paths: serial {ls:.4} vs overlapped {lo:.4}"
     );
 }
 

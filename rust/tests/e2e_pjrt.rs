@@ -142,6 +142,8 @@ fn threaded_smart_gg_full_stack() {
         preduce_prefix: "preduce_mlp_g".into(),
         compute_floor: Duration::ZERO,
         overlap: OverlapConfig::serial(),
+        prefetch: 0,
+        load_floor: Duration::ZERO,
     };
     let report = run_threaded(cfg, engine).unwrap();
     assert_eq!(report.per_worker_iters, vec![8, 8, 8, 8]);
@@ -181,6 +183,8 @@ fn threaded_static_schedule_full_stack() {
         preduce_prefix: "preduce_mlp_g".into(),
         compute_floor: Duration::from_millis(1),
         overlap: OverlapConfig::serial(),
+        prefetch: 0,
+        load_floor: Duration::ZERO,
     };
     let report = run_threaded(cfg, engine).unwrap();
     assert_eq!(report.per_worker_iters, vec![8; 4]);
@@ -234,6 +238,8 @@ fn threaded_smart_gg_seed_stress() {
             preduce_prefix: "preduce_mlp_g".into(),
             compute_floor: Duration::ZERO,
             overlap: OverlapConfig::serial(),
+            prefetch: 0,
+            load_floor: Duration::ZERO,
         };
         let report = run_threaded(cfg, engine.clone()).unwrap();
         assert!(
@@ -270,6 +276,8 @@ fn threaded_overlap_hides_straggler_wait() {
         preduce_prefix: "preduce_mlp_g".into(),
         compute_floor: Duration::from_millis(4),
         overlap: OverlapConfig::serial(),
+        prefetch: 0,
+        load_floor: Duration::ZERO,
     };
     let serial = run_threaded(base.clone(), engine.clone()).unwrap();
     let mut over_cfg = base;
@@ -306,6 +314,59 @@ fn threaded_overlap_hides_straggler_wait() {
         spread(&overlapped.final_models) < 1.0,
         "replicas diverged under overlap: {}",
         spread(&overlapped.final_models)
+    );
+}
+
+#[test]
+fn threaded_prefetch_hides_load_floor() {
+    // Staged pipeline acceptance on the threaded runtime: with compute
+    // dominating a nontrivial batch-load floor, the prefetching loader
+    // hides nearly all load time (only priming stays exposed), while
+    // the lockstep loop pays the floor on every iteration.
+    let Some(dir) = artifacts() else { return };
+    let (engine, _h) = EngineClient::spawn(dir).unwrap();
+    let base = ThreadedConfig {
+        n_nodes: 1,
+        workers_per_node: 2,
+        iters: 8,
+        group_size: 2,
+        sched: ThreadSched::SmartGg,
+        lr: 0.05,
+        seed: 13,
+        hetero: HeterogeneityProfile::default(),
+        workload: Workload::Mlp { batch: 128, in_dim: 32, classes: 10 },
+        step_artifact: "mlp_train_step".into(),
+        init_artifact: "mlp_init".into(),
+        preduce_prefix: "preduce_mlp_g".into(),
+        compute_floor: Duration::from_millis(15),
+        overlap: OverlapConfig::serial(),
+        prefetch: 0,
+        load_floor: Duration::from_millis(5),
+    };
+    let lockstep = run_threaded(base.clone(), engine.clone()).unwrap();
+    let mut staged_cfg = base;
+    staged_cfg.prefetch = 4;
+    let staged = run_threaded(staged_cfg, engine).unwrap();
+    assert_eq!(lockstep.per_worker_iters, vec![8; 2]);
+    assert_eq!(staged.per_worker_iters, vec![8; 2]);
+    let wait = |r: &ripples::runtime::threaded::ThreadedReport| -> f64 {
+        r.load_wait.iter().map(|d| d.as_secs_f64()).sum()
+    };
+    // lockstep exposes the full floor every step: 2 workers x 8 x 5ms
+    assert!(wait(&lockstep) >= 0.060, "lockstep load wait {:.4}s", wait(&lockstep));
+    assert!(
+        wait(&staged) < 0.5 * wait(&lockstep),
+        "prefetch did not hide the load floor: staged {:.4}s vs lockstep {:.4}s",
+        wait(&staged),
+        wait(&lockstep)
+    );
+    // stage meters: no loader thread exists in lockstep mode, and the
+    // staged loader must have hit backpressure (compute is slower)
+    assert_eq!(lockstep.compute_wait, vec![Duration::ZERO; 2]);
+    assert!(
+        staged.compute_wait.iter().any(|d| *d > Duration::ZERO),
+        "staged loader never blocked on backpressure: {:?}",
+        staged.compute_wait
     );
 }
 

@@ -380,6 +380,73 @@ fn prop_pairwise_average_preserves_each_pair_sum() {
     }
 }
 
+/// The staged step pipeline's bounded SPSC handoff under seeded
+/// interleavings (producer and consumer jitter independently per seed):
+/// items arrive as the exact ordered prefix of what was pushed (no
+/// loss, duplication, or reordering), occupancy never exceeds the
+/// configured capacity, and a poisoned queue still drains every item
+/// enqueued before the poison before reporting the fault.
+#[test]
+fn pipeline_bounded_queue_order_capacity_poison_drain() {
+    use ripples::step::{Bounded, QueueEnd};
+    use std::time::Duration;
+    for seed in 0..SEEDS {
+        let mut rng = Pcg32::new(seed ^ 0x0B5C);
+        let cap = 1 + rng.gen_range(8);
+        let total = 8 + rng.gen_range(120);
+        let poison = rng.gen_range(2) == 0;
+        // poison mid-stream: the producer stops after `sent` items
+        let sent = if poison { rng.gen_range(total) } else { total };
+        let q = Bounded::<u64>::new(cap);
+        let (prod_seed, cons_seed) = (seed ^ 0x9A0D, seed ^ 0x50B);
+        let qp = std::sync::Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            let mut prng = Pcg32::new(prod_seed);
+            for i in 0..sent as u64 {
+                if prng.gen_range(4) == 0 {
+                    std::thread::yield_now();
+                }
+                if prng.gen_range(16) == 0 {
+                    std::thread::sleep(Duration::from_micros(prng.gen_range(50) as u64));
+                }
+                assert!(qp.push(i).is_ok(), "queue ended under the producer");
+            }
+            if poison {
+                qp.poison();
+            } else {
+                qp.close();
+            }
+        });
+        let mut crng = Pcg32::new(cons_seed);
+        let mut got = Vec::new();
+        let end = loop {
+            if crng.gen_range(4) == 0 {
+                std::thread::yield_now();
+            }
+            if crng.gen_range(16) == 0 {
+                std::thread::sleep(Duration::from_micros(crng.gen_range(50) as u64));
+            }
+            match q.pop() {
+                Ok(v) => got.push(v),
+                Err(e) => break e,
+            }
+        };
+        producer.join().unwrap();
+        let expect: Vec<u64> = (0..sent as u64).collect();
+        assert_eq!(got, expect, "seed {seed} cap={cap} poison={poison}");
+        assert_eq!(
+            end,
+            if poison { QueueEnd::Poisoned } else { QueueEnd::Closed },
+            "seed {seed}"
+        );
+        assert!(
+            q.max_occupancy() <= cap,
+            "seed {seed}: occupancy {} exceeded cap {cap}",
+            q.max_occupancy()
+        );
+    }
+}
+
 /// Disjoint mutable borrows of two models in the cluster.
 fn pair_mut<T>(v: &mut [Vec<T>], i: usize, j: usize) -> (&mut [T], &mut [T]) {
     assert!(i != j);
