@@ -5,7 +5,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test chaos e2e pipeline stress clippy doc fmt verify artifacts python-test bench bench-json paper clean
+.PHONY: build test chaos e2e pipeline stress topo clippy doc fmt verify artifacts python-test bench bench-json paper clean
 
 build:
 	$(CARGO) build --release
@@ -49,7 +49,19 @@ pipeline:
 	$(CARGO) test -q staged_
 	$(CARGO) test -q --test prop_net --test e2e_net pipeline_
 
-verify: build test chaos e2e pipeline stress clippy doc fmt
+# Topology gate (DESIGN.md §Perf "Hierarchical P-Reduce"): `--topo`
+# parsing + plan assembly (bit-identical across GG backends), the
+# two-level collective unit tests, the shared-uplink/hierarchical cost
+# model, the fig-topo shape claims (live and against the committed
+# results/BENCH_topo.json), and the 4-process hierarchical e2e with its
+# mid-collective kill variant. Included in `cargo test` too — named
+# here so `verify` spells the gate out even when test filters change.
+topo:
+	$(CARGO) test -q topo
+	$(CARGO) test -q hier
+	$(CARGO) test -q --test e2e_net topo_
+
+verify: build test chaos e2e pipeline stress topo clippy doc fmt
 
 # Lint gate: clippy over every target (lib, bin, tests, benches,
 # examples) with warnings denied.
@@ -82,9 +94,11 @@ bench:
 
 # Machine-readable perf trajectory: every figure harness as
 # results/BENCH_<id>.json (accumulated across PRs; see EXPERIMENTS.md).
-# `fig all` includes `fig wire` (BENCH_wire.json: codec x bandwidth) and
+# `fig all` includes `fig wire` (BENCH_wire.json: codec x bandwidth),
 # `fig overlap` (BENCH_overlap.json: sharded-overlap + staged-pipeline
-# axes; shape-asserted by figures::tests once generated).
+# axes; shape-asserted by figures::tests once generated), and
+# `fig topo` (BENCH_topo.json: hierarchical vs flat placement;
+# committed and shape-asserted by figures::tests).
 bench-json: build
 	$(CARGO) run --release -- fig all --json results
 

@@ -700,7 +700,7 @@ fn real_gg_round_trips(ranks: usize, iters: usize, mode: crate::rpc::GgMode) -> 
                         }
                         calls += 1;
                     }
-                    if let Some((gid, _)) = assigned {
+                    if let Some((gid, _, _)) = assigned {
                         c.wait_done(gid).expect("wait_done");
                         calls += 1;
                     }
@@ -794,6 +794,112 @@ pub fn fig_paper_at(csv_dir: Option<&Path>, target: f64, max_iters: usize) -> Ta
     t
 }
 
+/// Topo sweep (`fig topo`) — hierarchical P-Reduce vs flat rings when
+/// rank placement matters: a 2-rack cluster (4 ranks/machine) whose
+/// machines share one constrained 1.5 GB/s uplink each, moving VGG-size
+/// buffers (EXPERIMENTS.md §Topo-sweep, DESIGN.md §Perf "Hierarchical
+/// P-Reduce"). Two planes: *model* — closed-form collective cost of one
+/// full-cluster sync at p up to 512 for the three placement-aware
+/// shapes (placement-blind flat ring, bandwidth-ordered flat ring,
+/// two-level hier); *sim* — the p=8 anchor run end-to-end (all-reduce
+/// barrier engine, real SGD math) so the equal-loss claim is visible:
+/// every shape records the bit-identical final loss and only the clock
+/// moves. Expected shape: hier beats blind >= 2x at every p (the
+/// fig-topo acceptance); the ordered flat ring lands in between at the
+/// anchor, and latency accumulation (2(p-1) steps vs 2(L-1)) hands hier
+/// the win again at large p.
+pub fn fig_topo(csv_dir: Option<&Path>) -> Table {
+    fig_topo_at(csv_dir, &[8, 32, 128, 512], 40)
+}
+
+/// Parameterized core of [`fig_topo`]: tests call it with fewer p points
+/// and a smaller sim iteration budget so the sweep stays fast.
+pub fn fig_topo_at(csv_dir: Option<&Path>, ps: &[usize], sim_iters: usize) -> Table {
+    use crate::config::SyncShape;
+    let mut t = Table::new(&[
+        "setting",
+        "p",
+        "shape",
+        "sync s",
+        "final loss",
+        "expected shape",
+    ]);
+    // model plane: one full-cluster collective on the 2-rack fabric
+    // (numbers match `comm::tests::rack2`)
+    let cost = CostModel {
+        workers_per_node: 4,
+        intra_bw: 12e9,
+        inter_bw: 1.5e9,
+        intra_lat: 5e-6,
+        inter_lat: 25e-6,
+        rpc_rtt: 1e-4,
+    };
+    // 4x the calibrated VGG-16 wire size: the uncompressed fp32 gradient
+    // buffer, the worst case the placement plan has to move (and the
+    // fixture `comm::tests::rack2` prices)
+    let bytes = 4 * calibration::VGG16_BYTES;
+    for &p in ps {
+        let group: Vec<usize> = (0..p).collect();
+        for (name, secs, note) in [
+            (
+                "flat-blind",
+                cost.ring_allreduce_uplink(&group, bytes, &[], 4, true),
+                "every edge crosses; uplinks serialize",
+            ),
+            (
+                "flat-ordered",
+                cost.ring_allreduce_uplink(&group, bytes, &[], 4, false),
+                "one crossing per uplink per step",
+            ),
+            (
+                "hier",
+                cost.hierarchical(&group, bytes, &[], 4),
+                ">= 2x over blind",
+            ),
+        ] {
+            t.row(vec![
+                "model".into(),
+                p.to_string(),
+                name.into(),
+                format!("{secs:.6}"),
+                "-".into(),
+                note.into(),
+            ]);
+        }
+    }
+    // sim plane: the p=8 anchor, all four shapes (flat = legacy default)
+    let anchor = |shape: SyncShape| -> SimResult {
+        let mut sp = base_params(AlgoKind::AllReduce);
+        sp.exp.train.loss_target = None;
+        sp.exp.train.max_iters = sim_iters;
+        sp.exp.train.eval_every = 10;
+        sp.exp.cluster.n_nodes = 2;
+        sp.exp.cluster.workers_per_node = 4;
+        sp.exp.cluster.link.inter_bw = 1.5e9;
+        sp.exp.topology.shape = shape;
+        sp.model_bytes = bytes;
+        sim::run(&sp)
+    };
+    for (shape, name, note) in [
+        (SyncShape::Flat, "flat", "legacy default == ordered"),
+        (SyncShape::FlatBlind, "flat-blind", ""),
+        (SyncShape::FlatOrdered, "flat-ordered", ""),
+        (SyncShape::Hier, "hier", "same loss bits, least sync"),
+    ] {
+        let res = anchor(shape);
+        dump_trace(csv_dir, &format!("topo_{name}"), &res);
+        t.row(vec![
+            "sim".into(),
+            "8".into(),
+            name.into(),
+            format!("{:.3}", res.sync_time),
+            format!("{:.6}", res.trace.last().map(|tp| tp.loss).unwrap_or(f64::NAN)),
+            note.into(),
+        ]);
+    }
+    t
+}
+
 /// Run one figure by id; `all` runs everything. Returns
 /// `(id, title, table)` so callers can derive stable artifact names
 /// (`BENCH_<id>.json`, CSV files).
@@ -816,6 +922,7 @@ pub fn run_figure(
         ("wire", "Wire formats (codec x bandwidth)", fig_wire),
         ("failures", "Failure sweep (crash tolerance)", fig_failures),
         ("scale", "Scale sweep (coordinator contention x sharding)", fig_scale),
+        ("topo", "Topo sweep (hierarchical vs flat placement)", fig_topo),
         ("paper", "Paper table (algorithms x heterogeneity)", fig_paper),
     ];
     let selected: Vec<_> = if id == "all" {
@@ -826,7 +933,7 @@ pub fn run_figure(
     if selected.is_empty() {
         return Err(format!(
             "unknown figure '{id}' (try 1, 2b, 15, 16, 17, 18, 19, 20, dyn, overlap, \
-             wire, failures, scale, paper, all)"
+             wire, failures, scale, topo, paper, all)"
         ));
     }
     Ok(selected
@@ -1108,6 +1215,133 @@ mod tests {
         // are the bench's claim, not this 1-core test's)
         assert!(cell("real-tcp", 8, "locked", 4) > 0.0, "{csv}");
         assert!(cell("real-tcp", 8, "sharded", 4) > 0.0, "{csv}");
+    }
+
+    #[test]
+    fn topo_scenario_shapes() {
+        // Fewer model p points and a 6-iteration sim anchor than the
+        // committed BENCH_topo run; the same harness, the same shape
+        // claims — the acceptance's ">= 2x over blind" is asserted live
+        // on both planes.
+        let t = fig_topo_at(None, &[8, 32], 6);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 11, "header + 2p x 3 model + 4 sim:\n{csv}");
+        let cell = |setting: &str, p: usize, shape: &str, idx: usize| -> f64 {
+            csv.lines()
+                .find(|l| l.starts_with(&format!("{setting},{p},{shape},")))
+                .unwrap_or_else(|| panic!("missing row {setting}/{p}/{shape}:\n{csv}"))
+                .split(',')
+                .nth(idx)
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        for &p in &[8usize, 32] {
+            let blind = cell("model", p, "flat-blind", 3);
+            let ordered = cell("model", p, "flat-ordered", 3);
+            let hier = cell("model", p, "hier", 3);
+            assert!(blind > 0.0 && ordered > 0.0 && hier > 0.0, "{csv}");
+            assert!(
+                blind >= 2.0 * hier,
+                "p={p}: two-level must halve blind-flat sync ({blind} vs {hier}):\n{csv}"
+            );
+            assert!(blind > ordered, "p={p}:\n{csv}");
+        }
+        // the p=8 anchor: hier also beats the bandwidth-ordered ring
+        assert!(cell("model", 8, "hier", 3) < cell("model", 8, "flat-ordered", 3), "{csv}");
+        // sim plane: equal loss across all four shapes, >= 2x sync win
+        let loss = |shape: &str| -> String {
+            csv.lines()
+                .find(|l| l.starts_with(&format!("sim,8,{shape},")))
+                .unwrap_or_else(|| panic!("missing sim row {shape}:\n{csv}"))
+                .split(',')
+                .nth(4)
+                .unwrap()
+                .to_string()
+        };
+        let flat_loss = loss("flat");
+        for shape in ["flat-blind", "flat-ordered", "hier"] {
+            assert_eq!(loss(shape), flat_loss, "{shape}: loss moved:\n{csv}");
+        }
+        let s_blind = cell("sim", 8, "flat-blind", 3);
+        let s_ordered = cell("sim", 8, "flat-ordered", 3);
+        let s_hier = cell("sim", 8, "hier", 3);
+        assert!(s_blind >= 2.0 * s_hier, "sim: {s_blind} vs {s_hier}:\n{csv}");
+        assert!(s_blind > s_ordered && s_ordered > s_hier, "{csv}");
+    }
+
+    #[test]
+    fn committed_topo_artifact_is_well_formed() {
+        // The checked-in `results/BENCH_topo.json` (refreshed by
+        // `make fig` / `ripples fig topo --json`) must stay parseable and
+        // keep the acceptance shape: hier >= 2x over the placement-blind
+        // flat ring at every model p and on the sim anchor, with the
+        // sim's final loss bit-identical across shapes.
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results/BENCH_topo.json");
+        let json = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("committed artifact {} unreadable: {e}", path.display()));
+        let parsed = crate::util::json::parse(&json).unwrap();
+        assert_eq!(parsed.get("figure").unwrap().as_str(), Some("topo"));
+        let table = parsed.get("table").unwrap();
+        let header: Vec<_> = table
+            .get("header")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(header, ["setting", "p", "shape", "sync s", "final loss", "expected shape"]);
+        let rows: Vec<Vec<String>> = table
+            .get("rows")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| {
+                r.as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|c| c.as_str().unwrap().to_string())
+                    .collect()
+            })
+            .collect();
+        assert_eq!(rows.len(), 16, "4 model p x 3 shapes + 4 sim rows");
+        let cell = |setting: &str, p: &str, shape: &str, idx: usize| -> f64 {
+            rows.iter()
+                .find(|r| r[0] == setting && r[1] == p && r[2] == shape)
+                .unwrap_or_else(|| panic!("missing row {setting}/{p}/{shape}"))[idx]
+                .parse()
+                .unwrap()
+        };
+        for p in ["8", "32", "128", "512"] {
+            let blind = cell("model", p, "flat-blind", 3);
+            let hier = cell("model", p, "hier", 3);
+            assert!(blind > 0.0 && hier > 0.0);
+            assert!(blind >= 2.0 * hier, "p={p}: {blind} vs {hier}");
+            assert!(blind > cell("model", p, "flat-ordered", 3), "p={p}");
+        }
+        // hier beats even the ordered flat ring at the anchor and again
+        // at large p where per-step latency accumulates over 2(p-1) steps
+        assert!(cell("model", "8", "hier", 3) < cell("model", "8", "flat-ordered", 3));
+        assert!(cell("model", "512", "hier", 3) < cell("model", "512", "flat-ordered", 3));
+        // sim anchor: equal loss, >= 2x sync win, ordered in between
+        let sim_loss = |shape: &str| -> String {
+            rows.iter()
+                .find(|r| r[0] == "sim" && r[2] == shape)
+                .unwrap_or_else(|| panic!("missing sim row {shape}"))[4]
+                .clone()
+        };
+        let flat_loss = sim_loss("flat");
+        for shape in ["flat-blind", "flat-ordered", "hier"] {
+            assert_eq!(sim_loss(shape), flat_loss, "{shape}: loss moved");
+        }
+        let s_blind = cell("sim", "8", "flat-blind", 3);
+        let s_ordered = cell("sim", "8", "flat-ordered", 3);
+        let s_hier = cell("sim", "8", "hier", 3);
+        assert!(s_blind >= 2.0 * s_hier, "{s_blind} vs {s_hier}");
+        assert!(s_blind > s_ordered && s_ordered > s_hier);
     }
 
     #[test]

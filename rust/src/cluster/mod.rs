@@ -133,7 +133,13 @@ impl CrashEvent {
 
 /// Resolve a `(factor, start_iter)` schedule at `iter`: the entry with
 /// the largest active `start_iter` (<= `iter`) wins; `base` when none
-/// is active. The single source of truth for schedule semantics —
+/// is active. Ties on equal `start_iter` resolve deterministically to
+/// the *last* such entry in iteration order — i.e. last-in-config wins,
+/// so `7,2.0@40;7,6.0@40` means factor 6.0 from iteration 40 regardless
+/// of how the entries got merged. (The `start >= b` comparison below is
+/// what makes the later equal entry overwrite the earlier one; don't
+/// "fix" it to `>` without updating this contract and its test.)
+/// The single source of truth for schedule semantics —
 /// shared by the simulator profile, the real worker loop, and the
 /// launcher's ground-truth table, so they cannot drift apart.
 pub fn scheduled_factor_at(
@@ -386,6 +392,32 @@ mod tests {
         assert!((t.next_compute(0) - 0.1).abs() < 1e-12); // iter 1
         assert!((t.next_compute(0) - 0.3).abs() < 1e-12); // iter 2: slowed
         assert!((t.next_compute(1) - 0.1).abs() < 1e-12); // other worker clean
+    }
+
+    #[test]
+    fn scheduled_factor_tie_break_is_last_in_config() {
+        // Duplicate `start_iter` entries: the documented contract is
+        // last-in-config wins, and it must not depend on whether the
+        // duplicates sit before or after other entries.
+        let dup = [(2.0f64, 40u64), (6.0, 40)];
+        assert_eq!(scheduled_factor_at(dup, 1.0, 39), 1.0);
+        assert_eq!(scheduled_factor_at(dup, 1.0, 40), 6.0);
+        // swapped order flips the winner — that *is* the contract
+        let swapped = [(6.0f64, 40u64), (2.0, 40)];
+        assert_eq!(scheduled_factor_at(swapped, 1.0, 40), 2.0);
+        // a duplicate of an older start does not displace a newer entry
+        let mixed = [(3.0f64, 10u64), (5.0, 40), (4.0, 10)];
+        assert_eq!(scheduled_factor_at(mixed, 1.0, 10), 4.0);
+        assert_eq!(scheduled_factor_at(mixed, 1.0, 40), 5.0);
+        // and the profile surface resolves the same way
+        let p = HeterogeneityProfile {
+            schedule: vec![
+                SlowdownEvent { worker: 1, factor: 2.0, start_iter: 40 },
+                SlowdownEvent { worker: 1, factor: 6.0, start_iter: 40 },
+            ],
+            ..HeterogeneityProfile::default()
+        };
+        assert_eq!(p.slowdown_at(1, 40), 6.0);
     }
 
     #[test]

@@ -1,0 +1,452 @@
+//! Two-level (hierarchical) P-Reduce: intra-node reduce → inter-node
+//! ring → broadcast back.
+//!
+//! A flat ring crosses every inter-node link `2(p-1)` times; when the
+//! group spans racks behind constrained uplinks that is the whole sync
+//! cost (DESIGN.md §Perf, "Hierarchical P-Reduce"). The two-level shape
+//! moves each model byte across the uplink once per ring step instead:
+//!
+//! 1. **intra gather** — every non-leader member ships its shard to its
+//!    node leader, which accumulates a node-local *sum*;
+//! 2. **inter ring** — the node leaders run the ordinary chunked ring
+//!    over their sums, with the single division point scaled by the
+//!    *group total* ([`ring_allreduce_via_div`]) so the result is the
+//!    group mean, not the leader mean;
+//! 3. **broadcast** — each leader ships the finished mean back to its
+//!    members.
+//!
+//! The schedule is generic over the same [`ChunkTransport`] as the flat
+//! ring, so wire codecs (`--wire fp16|q8`) and the pipelined shard path
+//! compress every phase for free. Which ranks lead and how nodes are
+//! ordered comes from the GG-attached [`SyncPlan`](crate::topo::SyncPlan);
+//! this module only executes it.
+//!
+//! ## Step tags
+//!
+//! Per shard `s`, member↔leader edges carry exactly two frames — gather
+//! (`2s`) and broadcast (`2s + 1`) — while the leader ring runs the
+//! usual `2(L-1)` tags from [`shard_step_base`]`(L, s)`. The two tag
+//! spaces live on disjoint edges (a member↔leader pair is never also a
+//! ring edge), so framed transports verify ordering exactly as before.
+//!
+//! ## Abort semantics
+//!
+//! Any transport error propagates to the caller, which unwinds *both*
+//! levels: a leader poisons its member links and its ring edges, a
+//! member poisons its leader link (see `net::worker`). The group then
+//! aborts through the same GG repair path as a flat collective.
+
+use anyhow::{anyhow, Result};
+
+use super::pipeline::{shard_bounds, shard_step_base};
+use super::ring::{ring_allreduce_via_div, ChunkTransport};
+
+/// Gather step tag for shard `s` on a member↔leader edge.
+pub fn intra_gather_step(s: usize) -> u32 {
+    (2 * s) as u32
+}
+
+/// Broadcast step tag for shard `s` on a member↔leader edge.
+pub fn intra_bcast_step(s: usize) -> u32 {
+    (2 * s) as u32 + 1
+}
+
+/// Run a non-leader member's side: per shard, ship our contribution to
+/// the node leader and receive the finished group mean back. `on_shard`
+/// fires per finished shard, mirroring
+/// [`ring_allreduce_sharded`](super::pipeline::ring_allreduce_sharded).
+pub fn hier_member<T, F>(
+    link: &mut T,
+    buf: &mut [f32],
+    k: usize,
+    mut on_shard: F,
+) -> Result<()>
+where
+    T: ChunkTransport,
+    F: FnMut(usize, &[f32]),
+{
+    let k = k.max(1);
+    let n = buf.len();
+    let mut incoming: Vec<f32> = Vec::new();
+    for s in 0..k {
+        let (lo, hi) = shard_bounds(n, k, s);
+        link.send(intra_gather_step(s), &buf[lo..hi])?;
+        link.recv(intra_bcast_step(s), &mut incoming)?;
+        if incoming.len() != hi - lo {
+            return Err(anyhow!(
+                "hier broadcast shard {s}: expected {} elements, got {}",
+                hi - lo,
+                incoming.len()
+            ));
+        }
+        buf[lo..hi].copy_from_slice(&incoming);
+        on_shard(s, &buf[lo..hi]);
+    }
+    Ok(())
+}
+
+/// Run a node leader's side: per shard, accumulate every member's
+/// contribution (in `members` order — the plan's intra order, so every
+/// member of the cluster sums in the same sequence), run the inter-node
+/// ring over the node sums dividing by `p_total`, and broadcast the
+/// finished mean back to the members.
+///
+/// `ring` is `Some((transport, pos, n_leaders))` when the group spans
+/// more than one node; a single-node group (`None`) just scales its sum
+/// to the mean locally.
+pub fn hier_leader<T, F>(
+    members: &mut [T],
+    ring: Option<(&mut T, usize, usize)>,
+    p_total: usize,
+    buf: &mut [f32],
+    k: usize,
+    mut on_shard: F,
+) -> Result<()>
+where
+    T: ChunkTransport,
+    F: FnMut(usize, &[f32]),
+{
+    let k = k.max(1);
+    let n = buf.len();
+    let mut incoming: Vec<f32> = Vec::new();
+    let mut ring = ring;
+    for s in 0..k {
+        let (lo, hi) = shard_bounds(n, k, s);
+        // phase 1: node-local sum, fixed member order
+        for link in members.iter_mut() {
+            link.recv(intra_gather_step(s), &mut incoming)?;
+            if incoming.len() != hi - lo {
+                return Err(anyhow!(
+                    "hier gather shard {s}: expected {} elements, got {}",
+                    hi - lo,
+                    incoming.len()
+                ));
+            }
+            for (b, v) in buf[lo..hi].iter_mut().zip(incoming.iter()) {
+                *b += v;
+            }
+        }
+        // phase 2: inter-node ring over node sums; the one division
+        // point divides by the group total
+        match ring.as_mut() {
+            Some((t, pos, leaders)) => ring_allreduce_via_div(
+                *pos,
+                *leaders,
+                &mut buf[lo..hi],
+                *t,
+                shard_step_base(*leaders, s),
+                p_total,
+            )?,
+            None => {
+                let inv = 1.0 / p_total as f32;
+                for b in buf[lo..hi].iter_mut() {
+                    *b *= inv;
+                }
+            }
+        }
+        // phase 3: broadcast the finished mean back
+        for link in members.iter_mut() {
+            link.send(intra_bcast_step(s), &buf[lo..hi])?;
+        }
+        on_shard(s, &buf[lo..hi]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ring::ChannelTransport;
+    use crate::collectives::WireCodec;
+    use crate::topo::{SyncPlan, Topology};
+    use crate::util::rng::Pcg32;
+    use std::thread;
+
+    /// Build a duplex in-memory edge: returns (end_a, end_b) where each
+    /// end's `send` feeds the other's `recv`.
+    fn duplex(wire: WireCodec) -> (ChannelTransport, ChannelTransport) {
+        let mut ring = ChannelTransport::ring_with(2, wire);
+        let b = ring.pop().unwrap();
+        let a = ring.pop().unwrap();
+        (a, b)
+    }
+
+    /// Execute a [`SyncPlan`] over in-memory channels, one thread per
+    /// member: the test-side mirror of what `net::worker` runs over TCP.
+    /// `bufs` is indexed by ring position (`plan.ring_order()` order) and
+    /// is updated in place with each member's post-collective buffer.
+    fn run_plan(plan: &SyncPlan, bufs: &mut [Vec<f32>], k: usize, wire: WireCodec) {
+        let p_total = plan.total();
+        let n_leaders = plan.nodes.len();
+        // duplex member<->leader edges, per node
+        let mut leader_ends: Vec<Vec<ChannelTransport>> = Vec::new();
+        let mut member_ends: Vec<Vec<Option<ChannelTransport>>> = Vec::new();
+        for node in &plan.nodes {
+            let mut le = Vec::new();
+            let mut me = Vec::new();
+            for _ in &node[1..] {
+                let (a, b) = duplex(wire);
+                le.push(a);
+                me.push(Some(b));
+            }
+            leader_ends.push(le);
+            member_ends.push(me);
+        }
+        // leader ring transports (only when the group spans >1 node)
+        let mut ring_ts: Vec<Option<ChannelTransport>> = if n_leaders > 1 {
+            ChannelTransport::ring_with(n_leaders, wire)
+                .into_iter()
+                .map(Some)
+                .collect()
+        } else {
+            (0..n_leaders).map(|_| None).collect()
+        };
+        let done: Vec<(usize, Vec<f32>)> = thread::scope(|scope| {
+            let mut handles = Vec::new();
+            let mut pos = 0usize;
+            for (ni, node) in plan.nodes.iter().enumerate() {
+                for ii in 0..node.len() {
+                    let mut buf = std::mem::take(&mut bufs[pos]);
+                    let my_pos = pos;
+                    pos += 1;
+                    if ii == 0 {
+                        let mut links = std::mem::take(&mut leader_ends[ni]);
+                        let mut ring_t = ring_ts[ni].take();
+                        handles.push(scope.spawn(move || {
+                            let ring = ring_t.as_mut().map(|t| (t, ni, n_leaders));
+                            hier_leader(&mut links, ring, p_total, &mut buf, k, |_, _| ())
+                                .expect("leader");
+                            (my_pos, buf)
+                        }));
+                    } else {
+                        let mut link = member_ends[ni][ii - 1].take().unwrap();
+                        handles.push(scope.spawn(move || {
+                            hier_member(&mut link, &mut buf, k, |_, _| ()).expect("member");
+                            (my_pos, buf)
+                        }));
+                    }
+                }
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (pos, buf) in done {
+            bufs[pos] = buf;
+        }
+    }
+
+    fn naive_mean(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let p = bufs.len();
+        let n = bufs[0].len();
+        (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / p as f32)
+            .collect()
+    }
+
+    fn rand_bufs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::new(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn two_node_group_forms_the_group_mean() {
+        let topo = Topology::parse("a:0,1,2;b:3,4,5", 6).unwrap();
+        for (k, n) in [(1usize, 300usize), (3, 301), (4, 7)] {
+            let plan = SyncPlan::make(&[0, 1, 2, 3, 4, 5], Some(&topo), &[]);
+            let mut bufs = rand_bufs(6, n, (k * 100 + n) as u64);
+            let expect = naive_mean(&bufs);
+            run_plan(&plan, &mut bufs, k, WireCodec::Fp32);
+            for (r, buf) in bufs.iter().enumerate() {
+                for i in 0..n {
+                    assert!(
+                        (buf[i] - expect[i]).abs() < 1e-5,
+                        "k={k} n={n} pos={r} idx={i}: {} vs {}",
+                        buf[i],
+                        expect[i]
+                    );
+                }
+            }
+            // all members identical
+            for b in &bufs[1..] {
+                assert_eq!(&bufs[0], b);
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_group_divides_by_total() {
+        let topo = Topology::parse("a:0,1,2", 3).unwrap();
+        let plan = SyncPlan::make(&[0, 1, 2], Some(&topo), &[]);
+        assert_eq!(plan.nodes.len(), 1);
+        let mut bufs =
+            vec![vec![3.0f32; 16], vec![6.0f32; 16], vec![9.0f32; 16]];
+        run_plan(&plan, &mut bufs, 2, WireCodec::Fp32);
+        for b in &bufs {
+            assert!(b.iter().all(|&v| (v - 6.0).abs() < 1e-6), "{:?}", &b[..4]);
+        }
+    }
+
+    #[test]
+    fn ragged_nodes_and_singleton_nodes_work() {
+        // 3 nodes: sizes 3, 1, 2 — a singleton node's leader has no
+        // member links at all
+        let topo = Topology::parse("a:0,1,2;b:3;c:4,5", 6).unwrap();
+        let plan = SyncPlan::make(&[5, 3, 0, 1, 2, 4], Some(&topo), &[]);
+        let mut bufs = rand_bufs(6, 129, 17);
+        let expect = naive_mean(&bufs);
+        run_plan(&plan, &mut bufs, 2, WireCodec::Fp32);
+        for buf in &bufs {
+            for i in 0..129 {
+                assert!((buf[i] - expect[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn codec_composes_with_hierarchy() {
+        // fp16 wire: every phase compresses; the result stays within the
+        // codec's tolerance of the exact mean
+        let topo = Topology::parse("a:0,1;b:2,3", 4).unwrap();
+        let plan = SyncPlan::make(&[0, 1, 2, 3], Some(&topo), &[]);
+        let mut bufs = rand_bufs(4, 256, 23);
+        let expect = naive_mean(&bufs);
+        run_plan(&plan, &mut bufs, 2, WireCodec::Fp16);
+        for buf in &bufs {
+            for i in 0..256 {
+                assert!(
+                    (buf[i] - expect[i]).abs() < 3e-2,
+                    "idx {i}: {} vs {}",
+                    buf[i],
+                    expect[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn member_rejects_short_broadcast() {
+        // a lying leader edge: member must error on a truncated shard
+        let (mut leader_end, mut member_end) = duplex(WireCodec::Fp32);
+        let h = thread::spawn(move || {
+            let mut incoming = Vec::new();
+            leader_end.recv(intra_gather_step(0), &mut incoming).unwrap();
+            leader_end.send(intra_bcast_step(0), &incoming[..3]).unwrap();
+        });
+        let mut buf = vec![1.0f32; 8];
+        let err = hier_member(&mut member_end, &mut buf, 1, |_, _| ());
+        assert!(err.is_err(), "short broadcast must be rejected");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn leader_rejects_short_gather() {
+        let (mut leader_end, mut member_end) = duplex(WireCodec::Fp32);
+        let h = thread::spawn(move || {
+            member_end.send(intra_gather_step(0), &[1.0f32; 3]).unwrap();
+        });
+        let mut buf = vec![1.0f32; 8];
+        let err = hier_leader(
+            std::slice::from_mut(&mut leader_end),
+            None,
+            2,
+            &mut buf,
+            1,
+            |_, _| (),
+        );
+        assert!(err.is_err(), "short gather must be rejected");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn intra_step_tags_are_disjoint_per_shard() {
+        for s in 0..8 {
+            assert_ne!(intra_gather_step(s), intra_bcast_step(s));
+            if s > 0 {
+                assert!(intra_gather_step(s) > intra_bcast_step(s - 1));
+            }
+        }
+    }
+
+    /// Satellite 4: property test — the two-level collective is
+    /// *bit-identical* to a flat ring oracle at fp32 when the data is
+    /// integer-valued (every partial sum exactly representable, so
+    /// associativity differences cannot surface). Random group shapes
+    /// and node assignments.
+    #[test]
+    fn prop_hier_bit_identical_to_flat_oracle_on_integer_data() {
+        const SEEDS: u64 = 40;
+        for seed in 0..SEEDS {
+            let mut rng = Pcg32::new(0x70_90 + seed);
+            let p = 2 + rng.gen_range(7); // 2..=8 members
+            let n = 1 + rng.gen_range(97);
+            let k = 1 + rng.gen_range(3);
+            // random node assignment: up to p machines
+            let n_machines = 1 + rng.gen_range(p);
+            let mut spec_nodes: Vec<Vec<usize>> = vec![Vec::new(); n_machines];
+            for r in 0..p {
+                let m = rng.gen_range(n_machines);
+                spec_nodes[m].push(r);
+            }
+            let spec = spec_nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, rs)| !rs.is_empty())
+                .map(|(m, rs)| {
+                    let list: Vec<String> = rs.iter().map(|r| r.to_string()).collect();
+                    format!("m{m}:{}", list.join(","))
+                })
+                .collect::<Vec<_>>()
+                .join(";");
+            let topo = Topology::parse(&spec, p).unwrap_or_else(|e| {
+                panic!("seed {seed}: bad spec {spec:?}: {e}")
+            });
+            let members: Vec<usize> = (0..p).collect();
+            let plan = SyncPlan::make(&members, Some(&topo), &[]);
+            plan.validate(&members)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+            // integer-valued data in [-8, 8): sums up to 8*8=64 exact
+            let bufs: Vec<Vec<f32>> = (0..p)
+                .map(|_| {
+                    (0..n)
+                        .map(|_| (rng.gen_range(16) as f32) - 8.0)
+                        .collect()
+                })
+                .collect();
+
+            // oracle: flat chunked ring (integer sums are exact, so the
+            // reduction order cannot change the bits)
+            let mut flat = bufs.clone();
+            thread::scope(|scope| {
+                let mut ts = ChannelTransport::ring(p);
+                for (pos, buf) in flat.iter_mut().enumerate() {
+                    let mut t = ts.remove(0);
+                    scope.spawn(move || {
+                        crate::collectives::ring::ring_allreduce_via_offset(
+                            pos, p, buf, &mut t, 0,
+                        )
+                        .expect("flat oracle");
+                    });
+                }
+            });
+
+            // two-level run over the same pos-indexed data
+            let mut hier = bufs.clone();
+            run_plan(&plan, &mut hier, k, WireCodec::Fp32);
+
+            for pos in 0..p {
+                for i in 0..n {
+                    assert_eq!(
+                        flat[pos][i].to_bits(),
+                        hier[pos][i].to_bits(),
+                        "seed {seed} spec {spec:?} pos {pos} idx {i}: \
+                         flat {} != hier {}",
+                        flat[pos][i],
+                        hier[pos][i]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -18,8 +18,14 @@
 //!   `fp32`/`fp16`/`q8`); both transports compress every chunk —
 //!   pipelined shards included — under `--wire` (DESIGN.md §Perf,
 //!   "Wire formats").
+//! * [`hier`] — the two-level (intra-node reduce → inter-node ring →
+//!   broadcast) execution of a topology-aware
+//!   [`SyncPlan`](crate::topo::SyncPlan), built on the same
+//!   [`ring::ChunkTransport`] and shard machinery (DESIGN.md §Perf,
+//!   "Hierarchical P-Reduce").
 
 pub mod codec;
+pub mod hier;
 pub mod pipeline;
 pub mod ring;
 

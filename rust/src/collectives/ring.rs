@@ -175,7 +175,32 @@ pub fn ring_allreduce_via_offset<T: ChunkTransport>(
     transport: &mut T,
     base_step: u32,
 ) -> Result<()> {
+    ring_allreduce_via_div(r, p, buf, transport, base_step, p)
+}
+
+/// The same schedule with the mean divisor decoupled from the ring size:
+/// the fully-reduced chunks are scaled by `1/divisor` instead of `1/p`.
+/// `collectives::hier` runs the inter-node ring over `k` node leaders
+/// whose buffers already hold *sums* of their node's members, so the
+/// single division point must divide by the group total, not `k`.
+/// `divisor == p` is exactly [`ring_allreduce_via_offset`].
+pub fn ring_allreduce_via_div<T: ChunkTransport>(
+    r: usize,
+    p: usize,
+    buf: &mut [f32],
+    transport: &mut T,
+    base_step: u32,
+    divisor: usize,
+) -> Result<()> {
     if p <= 1 {
+        // Degenerate ring: nothing to exchange, but the divisor contract
+        // still applies (a 1-leader inter ring must still form the mean).
+        if divisor > 1 {
+            let inv = 1.0 / divisor as f32;
+            for b in buf.iter_mut() {
+                *b *= inv;
+            }
+        }
         return Ok(());
     }
     let n = buf.len();
@@ -205,7 +230,7 @@ pub fn ring_allreduce_via_offset<T: ChunkTransport>(
     // Rank r now owns the fully-reduced chunk (r+1)%p; divide it to a mean.
     let owned = (r + 1) % p;
     let (lo, hi) = chunk_bounds(n, p, owned);
-    let inv = 1.0 / p as f32;
+    let inv = 1.0 / divisor as f32;
     for b in buf[lo..hi].iter_mut() {
         *b *= inv;
     }
@@ -391,6 +416,65 @@ mod tests {
             "buffers not recycled: {} distinct allocations over 32 steps",
             seen.len()
         );
+    }
+
+    #[test]
+    fn div_schedule_with_divisor_p_is_bit_identical_to_offset() {
+        // `ring_allreduce_via_offset` delegates with `divisor = p`; pin
+        // that the delegation really is the old schedule bit-for-bit.
+        let p = 4;
+        let n = 257;
+        let run = |via_div: bool| -> Vec<Vec<f32>> {
+            let mut bufs = rand_bufs(p, n, 99);
+            let transports = ChannelTransport::ring(p);
+            thread::scope(|scope| {
+                for ((r, buf), mut t) in bufs.iter_mut().enumerate().zip(transports) {
+                    scope.spawn(move || {
+                        if via_div {
+                            ring_allreduce_via_div(r, p, buf, &mut t, 0, p).unwrap();
+                        } else {
+                            ring_allreduce_via_offset(r, p, buf, &mut t, 0).unwrap();
+                        }
+                    });
+                }
+            });
+            bufs
+        };
+        let a = run(true);
+        let b = run(false);
+        for (x, y) in a.iter().zip(b.iter()) {
+            for (u, v) in x.iter().zip(y.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn div_schedule_scales_by_divisor() {
+        // Two ranks holding per-node *sums* of a 6-member group: the
+        // inter ring must divide by 6, not 2, to form the group mean.
+        let p = 2;
+        let n = 64;
+        let mut bufs = vec![vec![6.0f32; n], vec![12.0f32; n]];
+        let transports = ChannelTransport::ring(p);
+        thread::scope(|scope| {
+            for ((r, buf), mut t) in bufs.iter_mut().enumerate().zip(transports) {
+                scope.spawn(move || {
+                    ring_allreduce_via_div(r, p, buf, &mut t, 0, 6).unwrap();
+                });
+            }
+        });
+        for buf in &bufs {
+            assert!(buf.iter().all(|&v| (v - 3.0).abs() < 1e-6), "{:?}", &buf[..4]);
+        }
+        // degenerate 1-rank ring still applies the divisor
+        let mut solo = vec![8.0f32; 8];
+        let (tx, rx) = channel();
+        let (spare_tx, spare_rx) = channel();
+        let mut t =
+            ChannelTransport { tx, rx, spare_tx, spare_rx, wire: WireCodec::Fp32 };
+        ring_allreduce_via_div(0, 1, &mut solo, &mut t, 0, 4).unwrap();
+        assert!(solo.iter().all(|&v| (v - 2.0).abs() < 1e-6));
     }
 
     /// A transport that injects a short payload mid-schedule.

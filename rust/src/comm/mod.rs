@@ -98,6 +98,156 @@ impl CostModel {
         2.0 * (p - 1) as f64 * worst
     }
 
+    /// Flat ring under *shared-uplink serialization*: each machine owns
+    /// one uplink, and every ring edge leaving that machine in a step
+    /// queues on it — so a placement-blind ring order that hops machines
+    /// on every edge pays `crossings x chunk` per uplink per step, while
+    /// a node-major order pays exactly one. This is the cost shape the
+    /// classic worst-edge model ([`Self::ring_allreduce_throttled`])
+    /// cannot see: there every crossing is "the same slowest edge", here
+    /// they *serialize*. `per_machine` ranks share a machine
+    /// (`machine = rank / per_machine`); `interleave` picks the ring
+    /// order: `false` = node-major (sorted — machine-adjacent, the
+    /// bandwidth-ordered degenerate plan), `true` = round-robin across
+    /// machines (the placement-blind worst case a speed-sorted order
+    /// degenerates to). `bw_divisor` stretches transfers as in
+    /// [`Self::ring_allreduce_throttled`].
+    pub fn ring_allreduce_uplink(
+        &self,
+        group: &[usize],
+        bytes: usize,
+        bw_divisor: &[f64],
+        per_machine: usize,
+        interleave: bool,
+    ) -> f64 {
+        let p = group.len();
+        if p <= 1 {
+            return 0.0;
+        }
+        let per = per_machine.max(1);
+        let mach = |w: usize| w / per;
+        let mut ring = group.to_vec();
+        ring.sort_unstable(); // node-major adjacency
+        if interleave {
+            // round-robin over machines: bucket node-major, then deal one
+            // rank per machine per round — maximizes boundary crossings
+            let mut ids: Vec<usize> = Vec::new();
+            let mut buckets: Vec<Vec<usize>> = Vec::new();
+            for &w in &ring {
+                match ids.iter().position(|&m| m == mach(w)) {
+                    Some(i) => buckets[i].push(w),
+                    None => {
+                        ids.push(mach(w));
+                        buckets.push(vec![w]);
+                    }
+                }
+            }
+            ring.clear();
+            let mut round = 0;
+            while ring.len() < p {
+                for b in &buckets {
+                    if let Some(&w) = b.get(round) {
+                        ring.push(w);
+                    }
+                }
+                round += 1;
+            }
+        }
+        let chunk = (bytes as f64 / p as f64).ceil();
+        let div = |w: usize| bw_divisor.get(w).copied().unwrap_or(1.0).max(1.0);
+        // per machine: the serialized sum of its outbound crossings
+        let mut uplink_ids: Vec<usize> = Vec::new();
+        let mut uplink_load: Vec<f64> = Vec::new();
+        let mut worst_intra = 0.0f64;
+        for i in 0..p {
+            let a = ring[i];
+            let b = ring[(i + 1) % p];
+            let slow = div(a).max(div(b));
+            if mach(a) == mach(b) {
+                let t = self.intra_lat + chunk * slow / self.intra_bw;
+                worst_intra = worst_intra.max(t);
+            } else {
+                let load = chunk * slow / self.inter_bw;
+                match uplink_ids.iter().position(|&m| m == mach(a)) {
+                    Some(j) => uplink_load[j] += load,
+                    None => {
+                        uplink_ids.push(mach(a));
+                        uplink_load.push(load);
+                    }
+                }
+            }
+        }
+        let worst_uplink = uplink_load
+            .iter()
+            .fold(0.0f64, |w, &t| w.max(self.inter_lat + t));
+        2.0 * (p - 1) as f64 * worst_intra.max(worst_uplink)
+    }
+
+    /// Two-level hierarchical P-Reduce cost (`collectives::hier` over
+    /// real sockets, `SyncPlan` multi-node shape): members ship their
+    /// buffer to their machine's leader over point-to-point intra links
+    /// (parallel across pairs — the slowest pair bounds the phase), the
+    /// leaders run a chunked inter-machine ring (exactly one crossing
+    /// per uplink per step, chunk `bytes / L`), and the mean fans back
+    /// out intra-machine. Total uplink traffic per machine is
+    /// `2(L-1)/L x bytes` — independent of how many ranks share the
+    /// machine — versus `2(p-1)/p x bytes` *per crossing* for a flat
+    /// ring, which is what makes the two-level shape win on a
+    /// constrained uplink. Machines and leaders are derived as in
+    /// [`Self::ring_allreduce_uplink`] (leader = lowest rank on the
+    /// machine: a stand-in for the GG's fastest-measured pick with
+    /// identical transfer counts).
+    pub fn hierarchical(
+        &self,
+        group: &[usize],
+        bytes: usize,
+        bw_divisor: &[f64],
+        per_machine: usize,
+    ) -> f64 {
+        let p = group.len();
+        if p <= 1 {
+            return 0.0;
+        }
+        let per = per_machine.max(1);
+        let mach = |w: usize| w / per;
+        let div = |w: usize| bw_divisor.get(w).copied().unwrap_or(1.0).max(1.0);
+        let mut sorted = group.to_vec();
+        sorted.sort_unstable();
+        let mut nodes: Vec<Vec<usize>> = Vec::new();
+        for &w in &sorted {
+            match nodes.last_mut() {
+                Some(nd) if mach(nd[0]) == mach(w) => nd.push(w),
+                _ => nodes.push(vec![w]),
+            }
+        }
+        // intra fan-in (gather) and fan-out (broadcast): full-size
+        // transfers on dedicated member<->leader links, slowest pair wins
+        let mut intra = 0.0f64;
+        for nd in &nodes {
+            for &m in &nd[1..] {
+                let slow = div(nd[0]).max(div(m));
+                intra = intra.max(self.intra_lat + bytes as f64 * slow / self.intra_bw);
+            }
+        }
+        // inter-machine leader ring: every step moves one chunk over each
+        // uplink — no serialization by construction
+        let l = nodes.len();
+        let ring = if l > 1 {
+            let chunk = (bytes as f64 / l as f64).ceil();
+            let mut worst = 0.0f64;
+            for i in 0..l {
+                let a = nodes[i][0];
+                let b = nodes[(i + 1) % l][0];
+                let slow = div(a).max(div(b));
+                worst = worst.max(self.inter_lat + chunk * slow / self.inter_bw);
+            }
+            2.0 * (l - 1) as f64 * worst
+        } else {
+            0.0
+        };
+        2.0 * intra + ring
+    }
+
     /// Pairwise model averaging as AD-PSGD implements it over TF remote
     /// variables: the active worker ships its model to the passive one and
     /// receives the averaged model back — two full-model transfers plus a
@@ -331,6 +481,93 @@ mod tests {
         // sub-1.0 entries must not *speed up* the link
         let wild = vec![0.25; 16];
         assert_eq!(m.ring_allreduce_throttled(&group, bytes, &wild), base);
+    }
+
+    /// The `fig topo` anchor scenario: 8 workers on 2 machines of 4, a
+    /// 38.72 MB model, 12 GB/s intra links and a constrained 1.5 GB/s
+    /// uplink. Closed forms (chunk = bytes/8 = 4.84 MB):
+    ///   blind   = 14 x (25us + 4 x chunk/1.5e9)   ~ 0.18104 s
+    ///   ordered = 14 x (25us + chunk/1.5e9)       ~ 0.04552 s
+    ///   hier    = 2 x (5us + bytes/12e9)
+    ///           + 2 x (25us + (bytes/2)/1.5e9)    ~ 0.03233 s
+    fn rack2() -> CostModel {
+        CostModel {
+            workers_per_node: 4,
+            intra_bw: 12e9,
+            inter_bw: 1.5e9,
+            intra_lat: 5e-6,
+            inter_lat: 25e-6,
+            rpc_rtt: 1e-4,
+        }
+    }
+    const RACK2_BYTES: usize = 38_720_000;
+
+    #[test]
+    fn uplink_serialization_separates_blind_from_ordered() {
+        let m = rack2();
+        let group: Vec<usize> = (0..8).collect();
+        let blind = m.ring_allreduce_uplink(&group, RACK2_BYTES, &[], 4, true);
+        let ordered = m.ring_allreduce_uplink(&group, RACK2_BYTES, &[], 4, false);
+        assert!((blind - 0.181_043_333).abs() < 1e-6, "blind = {blind}");
+        assert!((ordered - 0.045_523_333).abs() < 1e-6, "ordered = {ordered}");
+        // node-major crosses each uplink once per step: no serialization,
+        // so it coincides with the classic worst-edge model here
+        let legacy = m.ring_allreduce_throttled(&group, RACK2_BYTES, &[]);
+        assert!((ordered - legacy).abs() < 1e-9, "{ordered} vs {legacy}");
+    }
+
+    #[test]
+    fn hierarchical_beats_both_flat_shapes_on_a_constrained_uplink() {
+        let m = rack2();
+        let group: Vec<usize> = (0..8).collect();
+        let hier = m.hierarchical(&group, RACK2_BYTES, &[], 4);
+        assert!((hier - 0.032_326_667).abs() < 1e-6, "hier = {hier}");
+        let blind = m.ring_allreduce_uplink(&group, RACK2_BYTES, &[], 4, true);
+        let ordered = m.ring_allreduce_uplink(&group, RACK2_BYTES, &[], 4, false);
+        assert!(blind >= 2.0 * hier, "need the >=2x headline: {blind} vs {hier}");
+        assert!(ordered > hier, "{ordered} vs {hier}");
+    }
+
+    #[test]
+    fn hierarchical_degenerates_cleanly() {
+        let m = rack2();
+        // singleton / empty groups cost nothing
+        assert_eq!(m.hierarchical(&[3], RACK2_BYTES, &[], 4), 0.0);
+        assert_eq!(m.hierarchical(&[], RACK2_BYTES, &[], 4), 0.0);
+        // one machine: no leader ring, just gather + broadcast
+        let one = m.hierarchical(&[0, 1, 2, 3], RACK2_BYTES, &[], 4);
+        let xfer = 5e-6 + RACK2_BYTES as f64 / 12e9;
+        assert!((one - 2.0 * xfer).abs() < 1e-9, "one-machine = {one}");
+        // one rank per machine: pure leader ring = ordered flat ring
+        let spread: Vec<usize> = vec![0, 4, 8, 12];
+        let h = m.hierarchical(&spread, RACK2_BYTES, &[], 4);
+        let flat = m.ring_allreduce_uplink(&spread, RACK2_BYTES, &[], 4, false);
+        assert!((h - flat).abs() < 1e-9, "{h} vs {flat}");
+    }
+
+    #[test]
+    fn uplink_ring_respects_throttles_and_degenerates() {
+        let m = rack2();
+        let group: Vec<usize> = (0..8).collect();
+        assert_eq!(m.ring_allreduce_uplink(&[5], RACK2_BYTES, &[], 4, true), 0.0);
+        // explicit 1.0 divisors are bit-identical to no divisors
+        let ones = vec![1.0; 8];
+        for interleave in [false, true] {
+            assert_eq!(
+                m.ring_allreduce_uplink(&group, RACK2_BYTES, &ones, 4, interleave),
+                m.ring_allreduce_uplink(&group, RACK2_BYTES, &[], 4, interleave),
+            );
+        }
+        // a throttled member slows its machine's uplink serialization
+        let mut div = vec![1.0; 8];
+        div[1] = 4.0;
+        let base = m.ring_allreduce_uplink(&group, RACK2_BYTES, &[], 4, true);
+        let slow = m.ring_allreduce_uplink(&group, RACK2_BYTES, &div, 4, true);
+        assert!(slow > base, "{slow} vs {base}");
+        // hierarchical: a slow member stretches its intra pair only
+        let hb = m.hierarchical(&group, RACK2_BYTES, &[], 4);
+        let hs = m.hierarchical(&group, RACK2_BYTES, &div, 4);
+        assert!(hs > hb, "{hs} vs {hb}");
     }
 
     #[test]

@@ -218,6 +218,68 @@ impl AlgoConfig {
     }
 }
 
+/// How the simulator charges each P-Reduce collective for worker
+/// placement (`[topology]` section; DESIGN.md §Perf, "Hierarchical
+/// P-Reduce"). The deployment plane's equivalent is `launch --topo`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SyncShape {
+    /// Legacy worst-edge ring cost (`CostModel::ring_allreduce_throttled`)
+    /// — the bit-identical default.
+    #[default]
+    Flat,
+    /// Shared-uplink serialization with a placement-blind ring order
+    /// (machines interleaved — what a speed-sorted order degenerates to).
+    FlatBlind,
+    /// Shared-uplink serialization with a node-major (bandwidth-ordered)
+    /// ring — the degenerate single-level plan.
+    FlatOrdered,
+    /// Two-level hierarchical P-Reduce: intra-machine gather, leader
+    /// ring, intra-machine broadcast.
+    Hier,
+}
+
+impl SyncShape {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "flat" => SyncShape::Flat,
+            "flat-blind" | "blind" => SyncShape::FlatBlind,
+            "flat-ordered" | "ordered" => SyncShape::FlatOrdered,
+            "hier" | "hierarchical" => SyncShape::Hier,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncShape::Flat => "flat",
+            SyncShape::FlatBlind => "flat-blind",
+            SyncShape::FlatOrdered => "flat-ordered",
+            SyncShape::Hier => "hier",
+        }
+    }
+}
+
+/// Placement model for the sync collective (`[topology]` section).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TopologyConfig {
+    pub shape: SyncShape,
+    /// Ranks per machine for the placement model; 0 (default) follows
+    /// `cluster.workers_per_node`. Lets a sweep shrink or grow machines
+    /// without disturbing the GG's architecture-aware grouping.
+    pub nodes: usize,
+}
+
+impl TopologyConfig {
+    /// Machine size the cost functions should use.
+    pub fn per_machine(&self, cluster_wpn: usize) -> usize {
+        if self.nodes > 0 {
+            self.nodes
+        } else {
+            cluster_wpn.max(1)
+        }
+    }
+}
+
 /// Training-loop knobs (model-agnostic).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -307,6 +369,9 @@ pub struct Experiment {
     /// exact, golden-path behaviour; `fp16`/`q8` trade bounded precision
     /// for 2x/4x fewer bytes per sync (DESIGN.md §Perf, "Wire formats").
     pub wire: WireCodec,
+    /// Sync-collective placement shape (`[topology]` section). The
+    /// `flat` default charges the legacy worst-edge ring, bit-for-bit.
+    pub topology: TopologyConfig,
 }
 
 impl Experiment {
@@ -475,6 +540,16 @@ impl Experiment {
             }
             ("ckpt", "every") => self.ckpt.every = v.as_usize().ok_or_else(bad)? as u64,
             ("ckpt", "dir") => self.ckpt.dir = Some(v.as_str().ok_or_else(bad)?.to_string()),
+            ("topology", "shape") => {
+                let s = v.as_str().ok_or_else(bad)?;
+                self.topology.shape = SyncShape::parse(s).ok_or_else(|| {
+                    format!(
+                        "unknown topology shape '{s}' \
+                         (flat|flat-blind|flat-ordered|hier)"
+                    )
+                })?;
+            }
+            ("topology", "nodes") => self.topology.nodes = v.as_usize().ok_or_else(bad)?,
             _ => return Err(format!("unknown config key {section}.{key}")),
         }
         Ok(())
@@ -613,6 +688,30 @@ mod tests {
         assert!(
             Experiment::from_str_cfg("[cluster]\nbw_schedule = [7, 0.5, 0]\n").is_err()
         );
+    }
+
+    #[test]
+    fn topology_config_roundtrip_and_defaults() {
+        let e = Experiment::from_str_cfg("[topology]\nshape = \"hier\"\nnodes = 2\n")
+            .unwrap();
+        assert_eq!(e.topology.shape, SyncShape::Hier);
+        assert_eq!(e.topology.nodes, 2);
+        assert_eq!(e.topology.per_machine(4), 2); // explicit override wins
+        // default: legacy flat shape, machine size follows the cluster
+        let d = Experiment::default();
+        assert_eq!(d.topology.shape, SyncShape::Flat);
+        assert_eq!(d.topology.per_machine(4), 4);
+        assert_eq!(d.topology.per_machine(0), 1); // never a zero divisor
+        // every shape name round-trips; junk is rejected
+        for s in [
+            SyncShape::Flat,
+            SyncShape::FlatBlind,
+            SyncShape::FlatOrdered,
+            SyncShape::Hier,
+        ] {
+            assert_eq!(SyncShape::parse(s.name()), Some(s), "{s:?}");
+        }
+        assert!(Experiment::from_str_cfg("[topology]\nshape = \"torus\"\n").is_err());
     }
 
     #[test]

@@ -234,6 +234,15 @@ pub struct GgConfig {
     /// wait. The event simulator leaves this off and keeps the paper's
     /// unrestricted §4.1 sampling (pending groups just queue there).
     pub rendezvous: bool,
+    /// Physical rank → machine placement (`--topo` / `[topology]`).
+    /// When set, every drafted group's RPC reply carries a two-level
+    /// [`SyncPlan`](crate::topo::SyncPlan) (intra-node reduce →
+    /// inter-node ring → broadcast); when `None`, replies carry the
+    /// bandwidth-ordered flat ring built from [`SpeedTable`] telemetry.
+    /// Plans are assembled at reply time from this field plus the speed
+    /// snapshot — the GG state machines themselves never read it, so
+    /// both backends stay bit-identical (DESIGN.md §Perf).
+    pub topology: Option<crate::topo::Topology>,
 }
 
 impl GgConfig {
@@ -250,6 +259,7 @@ impl GgConfig {
             s_thres: None,
             speed_alpha: SPEED_ALPHA,
             rendezvous: false,
+            topology: None,
         }
     }
 
@@ -271,6 +281,7 @@ impl GgConfig {
             s_thres: Some(DEFAULT_S_THRES),
             speed_alpha: SPEED_ALPHA,
             rendezvous: false,
+            topology: None,
         }
     }
 }

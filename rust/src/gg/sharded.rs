@@ -899,6 +899,53 @@ mod tests {
     }
 
     #[test]
+    fn plan_assembly_is_bit_identical_across_backends() {
+        // Plans never live inside either state machine — they are a pure
+        // function of (members, topology, speed snapshot). Drive both
+        // backends identically, report some speeds, and check the plans
+        // assembled from each backend's own snapshot match exactly.
+        let topo = crate::topo::Topology::parse("a:0,1,2;b:3,4;c:5", 6).unwrap();
+        let mut cfg = GgConfig::random(6, 3, 3);
+        cfg.topology = Some(topo);
+        let mut oracle = GroupGenerator::new(cfg.clone());
+        let mut orng = Pcg32::new(21);
+        let sharded = ShardedGg::new(cfg.clone(), 21);
+        let mut ops = Pcg32::new(21 ^ 0x5eed);
+        for _ in 0..100 {
+            let w = ops.gen_range(cfg.n_workers);
+            if ops.gen_range(3) == 0 {
+                let ewma = 0.01 + 0.01 * w as f64;
+                oracle.report_speed(w, ewma);
+                sharded.report_speed(w, ewma);
+            }
+            let (aa, _) = oracle.request(w, &mut orng);
+            let (ba, _) = sharded.request(w);
+            assert_eq!(aa, ba);
+            let Some(id) = aa else { continue };
+            let a_speeds = oracle.speed_table().snapshot();
+            let b_speeds = sharded.speed_snapshot();
+            assert_eq!(a_speeds, b_speeds, "speed snapshots diverged");
+            let members = oracle.group(id).unwrap().members.clone();
+            let a_plan = crate::topo::SyncPlan::make(
+                &members,
+                oracle.config().topology.as_ref(),
+                &a_speeds,
+            );
+            let b_plan = crate::topo::SyncPlan::make(
+                &members,
+                sharded.config().topology.as_ref(),
+                &b_speeds,
+            );
+            assert_eq!(a_plan.nodes, b_plan.nodes, "plans diverged for {members:?}");
+            assert!(a_plan.validate(&members).is_ok());
+            if oracle.is_armed(id) {
+                oracle.complete(id);
+                sharded.complete(id);
+            }
+        }
+    }
+
+    #[test]
     fn epoch_moves_on_phase_changes() {
         let gg = ShardedGg::new(GgConfig::random(4, 2, 2), 5);
         let e0 = gg.epoch();

@@ -42,6 +42,7 @@ pub mod rpc;
 pub mod runtime;
 pub mod sim;
 pub mod step;
+pub mod topo;
 pub mod util;
 
 pub use cluster::{BandwidthEvent, CrashEvent, HeterogeneityProfile, SlowdownEvent};
@@ -51,3 +52,4 @@ pub use fault::{Fault, FaultPlan, FaultyTransport};
 pub use gg::{GgConfig, Group, GroupGenerator, ShardedGg, SpeedTable, StaticScheduler};
 pub use sim::{SimParams, SimResult};
 pub use step::PipelineConfig;
+pub use topo::{SyncPlan, Topology};

@@ -62,6 +62,7 @@ USAGE:
   ripples gg-serve [--addr HOST:PORT] [--workers N] [--wpn K]
                    [--mode random|smart] [--group-size G]
                    [--gg-backend sharded|locked] [--liveness-ms MS]
+                   [--topo m0:0,1;m1:2,3]
   ripples launch [--workers N] [--slow W:FACTOR] [--secs S] [--iters N]
                  [--algo ripples|allreduce|adpsgd|ps] [--ps-shards K]
                  [--slow-schedule W,F@ITER[;W,F@ITER...]]
@@ -74,6 +75,7 @@ USAGE:
                  [--liveness-ms MS] [--heartbeat-ms MS]
                  [--ckpt-every N] [--ckpt-dir DIR]
                  [--kill R@SECS] [--rejoin-after SECS]
+                 [--topo m0:0,1;m1:2,3]
   ripples worker --rank R --workers N --gg HOST:PORT
                  [--algo ripples|allreduce|adpsgd|ps]
                  [--ps HOST:PORT] [--ps-shards K]
@@ -122,7 +124,13 @@ swaps the data plane for a comparison baseline on the same TCP mesh:
 randomized pairwise atomic averaging (actives initiate, passives
 serve), `ps` runs workers against a launcher-hosted sharded parameter
 server (`--ps-shards`); `fig paper` races all four to a common target
-loss (the paper-table speedup comparison). `fig --json DIR`
+loss (the paper-table speedup comparison). `launch --topo
+m0:0,1;m1:2,3` declares which machine hosts each rank: the GG then
+ships a placement plan with every group — flat rings become
+bandwidth-ordered (slowest measured link crossed once), and groups
+spanning machines run the two-level hierarchical P-Reduce (intra-node
+gather, leader ring, broadcast back; `fig topo` sweeps the win over
+flat rings on a constrained uplink). `fig --json DIR`
 writes each figure as machine-readable `DIR/BENCH_<id>.json` (the
 `make bench-json` perf trajectory).
 ";
@@ -279,11 +287,16 @@ fn cmd_gg_serve(args: &[String]) -> Result<(), String> {
         .unwrap_or("3")
         .parse()
         .map_err(|e| format!("bad group size: {e}"))?;
-    let cfg = match get_flag(&flags, "mode").unwrap_or("smart") {
+    let mut cfg = match get_flag(&flags, "mode").unwrap_or("smart") {
         "random" => GgConfig::random(workers, wpn, group),
         "smart" => GgConfig::smart(workers, wpn, group, 8),
         other => return Err(format!("unknown mode '{other}'")),
     };
+    if let Some(topo) = get_flag(&flags, "topo") {
+        cfg.topology = Some(
+            ripples::Topology::parse(topo, workers).map_err(|e| format!("bad --topo: {e}"))?,
+        );
+    }
     let liveness_ms: u64 = parse_or(&flags, "liveness-ms", 0)?;
     let liveness = (liveness_ms > 0).then(|| {
         ripples::rpc::LivenessConfig::with_timeout(Duration::from_millis(liveness_ms))
@@ -384,6 +397,9 @@ fn cmd_launch(args: &[String]) -> Result<(), String> {
         });
     } else if get_flag(&flags, "rejoin-after").is_some() {
         return Err("--rejoin-after needs --kill".into());
+    }
+    if let Some(topo) = get_flag(&flags, "topo") {
+        cfg.topo = Some(topo.to_string());
     }
     match get_flag(&flags, "mode").unwrap_or("smart") {
         "smart" => cfg.smart = true,

@@ -218,11 +218,18 @@ pub fn speed_table(speeds: &[f64], true_factors: &[f64], drafts: &[u64]) -> Tabl
 /// GG-scheduled runs with measured speed telemetry get a second line
 /// with the per-worker relative speeds the slowdown filter acted on.
 pub fn summarize(res: &SimResult) -> String {
+    // Empty results (zero workers) must print 0.0, not NaN — same guard
+    // as the per-worker rate in [`worker_table`].
+    let iters_per_worker = if res.per_worker_iters.is_empty() {
+        0.0
+    } else {
+        res.total_iters as f64 / res.per_worker_iters.len() as f64
+    };
     let mut out = format!(
         "{:<18} time={:>9.2}s  iters/worker={:>7.1}  per-iter={:>7.4}s  sync%={:>5.1}  conflicts={}",
         res.algo,
         res.final_time,
-        res.total_iters as f64 / res.per_worker_iters.len() as f64,
+        iters_per_worker,
         res.per_iter_time(),
         res.sync_fraction() * 100.0,
         res.conflicts,
@@ -355,6 +362,16 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert_eq!(lines[0], base);
         assert_eq!(lines[1], "measured speeds: rel=[1.00 2.50] ewma_ms=[10.0 25.0]");
+    }
+
+    #[test]
+    fn summarize_empty_result_has_no_nan() {
+        // Regression: an empty result (no workers ran) used to divide by
+        // `per_worker_iters.len() == 0` and print `NaN`.
+        let res = SimResult { algo: "ripples-smart".into(), ..SimResult::default() };
+        let line = summarize(&res);
+        assert!(!line.contains("NaN"), "{line}");
+        assert!(line.contains("iters/worker=    0.0"), "{line}");
     }
 
     #[test]

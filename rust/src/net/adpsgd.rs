@@ -303,6 +303,7 @@ pub fn run_adpsgd(
         rank: p.rank,
         iters: drv.iters,
         preduces,
+        hier_preduces: 0,
         loss_first,
         loss_last,
         secs: timed,

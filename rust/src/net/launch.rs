@@ -115,6 +115,10 @@ pub struct LaunchConfig {
     pub ckpt_dir: Option<PathBuf>,
     /// Chaos orchestration (`--kill R@SECS`, `--rejoin-after SECS`).
     pub kill: Option<KillSpec>,
+    /// Physical placement map (`--topo m0:0,1;m1:2,3`): rank → machine.
+    /// With a map, the GG plans two-level hierarchical P-Reduce for
+    /// groups spanning machines; None keeps flat rings everywhere.
+    pub topo: Option<String>,
 }
 
 impl Default for LaunchConfig {
@@ -148,6 +152,7 @@ impl Default for LaunchConfig {
             ckpt_every: 0,
             ckpt_dir: None,
             kill: None,
+            topo: None,
         }
     }
 }
@@ -298,6 +303,11 @@ pub fn launch_local(cfg: &LaunchConfig) -> Result<LaunchReport> {
         c
     };
     gg_cfg.rendezvous = true;
+    if let Some(spec) = &cfg.topo {
+        gg_cfg.topology = Some(
+            crate::topo::Topology::parse(spec, cfg.workers).context("bad --topo map")?,
+        );
+    }
     let liveness = (cfg.liveness_ms > 0)
         .then(|| LivenessConfig::with_timeout(Duration::from_millis(cfg.liveness_ms)));
     let server = GgServer::spawn_with_liveness("127.0.0.1:0", gg_cfg, cfg.seed, liveness)
@@ -534,7 +544,12 @@ fn run_cluster(
                 break;
             }
             if line.trim().starts_with("REPORT ") {
-                report = Some(WorkerReport::parse_line(&line)?);
+                // strict parse: a corrupted report line must fail the
+                // launch naming the offending rank, not aggregate zeros
+                report = Some(
+                    WorkerReport::parse_line(&line)
+                        .with_context(|| format!("worker {rank}: bad report line"))?,
+                );
             } else if cfg.echo {
                 print!("[w{rank}] {line}");
             }

@@ -24,6 +24,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::collectives::codec::WireCodec;
 use crate::collectives::ring::{AbortedError, ChunkTransport};
+use crate::topo::SyncPlan;
 
 use super::frame::{read_frame_counted, write_chunk_coded, write_frame, Frame};
 
@@ -450,6 +451,115 @@ impl WorkerMesh {
             pos,
         )))
     }
+
+    /// Duplex edge to one peer: send *and* receive sides both point at
+    /// `peer` (a member↔leader link in the two-level collective — the
+    /// degenerate "ring" where successor and predecessor coincide).
+    fn duplex_edge(
+        &self,
+        gid: u64,
+        peer: u32,
+        deadline: Instant,
+    ) -> Result<Option<TcpRingTransport>> {
+        let Some(send) = self.outbound_within(peer, deadline)? else {
+            return Ok(None);
+        };
+        let Some(recv) = self.inbound_within(peer, deadline)? else {
+            return Ok(None);
+        };
+        Ok(Some(TcpRingTransport {
+            gid,
+            send,
+            recv,
+            succ: peer,
+            pred: peer,
+            failed: None,
+            wire: self.wire,
+            bytes: Arc::clone(&self.bytes),
+            scratch: Vec::new(),
+        }))
+    }
+
+    /// Build this worker's transports for a two-level hierarchical
+    /// P-Reduce over `plan` (see `collectives::hier`): a non-leader gets
+    /// one duplex edge to its node leader; a leader gets duplex edges to
+    /// its node's members (plan order) plus the inter-node ring over all
+    /// leaders (`None` when the plan has a single node). Blocks up to the
+    /// full `io_timeout`.
+    pub fn hier_transport(&self, gid: u64, plan: &SyncPlan) -> Result<HierRole> {
+        match self.try_hier_transport(gid, plan, self.io_timeout)? {
+            Some(role) => Ok(role),
+            None => bail!(
+                "group {gid}: hierarchical edges not established within {:?} \
+                 ({:?})",
+                self.io_timeout,
+                plan.nodes
+            ),
+        }
+    }
+
+    /// [`WorkerMesh::hier_transport`] with a bounded wait: `Ok(None)` if
+    /// any edge is still missing after `wait` (same contract as
+    /// [`WorkerMesh::try_ring_transport`]).
+    pub fn try_hier_transport(
+        &self,
+        gid: u64,
+        plan: &SyncPlan,
+        wait: Duration,
+    ) -> Result<Option<HierRole>> {
+        let deadline = Instant::now() + wait;
+        let (ni, idx) = plan
+            .position_of(self.rank as usize)
+            .ok_or_else(|| anyhow!("rank {} not in plan {:?}", self.rank, plan.nodes))?;
+        let node = &plan.nodes[ni];
+        if idx > 0 {
+            let leader = node[0] as u32;
+            return Ok(self
+                .duplex_edge(gid, leader, deadline)?
+                .map(|link| HierRole::Member { link }));
+        }
+        // Leader: dial every member edge first so no peer's inbound wait
+        // depends on a dial we have not issued yet, then collect inbounds.
+        let peers: Vec<u32> = node[1..].iter().map(|&m| m as u32).collect();
+        let mut sends = Vec::with_capacity(peers.len());
+        for &m in &peers {
+            let Some(s) = self.outbound_within(m, deadline)? else {
+                return Ok(None);
+            };
+            sends.push(s);
+        }
+        let mut members = Vec::with_capacity(peers.len());
+        for (&m, send) in peers.iter().zip(sends) {
+            let Some(recv) = self.inbound_within(m, deadline)? else {
+                return Ok(None);
+            };
+            members.push(TcpRingTransport {
+                gid,
+                send,
+                recv,
+                succ: m,
+                pred: m,
+                failed: None,
+                wire: self.wire,
+                bytes: Arc::clone(&self.bytes),
+                scratch: Vec::new(),
+            });
+        }
+        let leaders = plan.leaders();
+        let ring = if leaders.len() > 1 {
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            match self.try_ring_transport(gid, &leaders, deadline - now)? {
+                Some((t, pos)) => Some((t, pos, leaders.len())),
+                None => return Ok(None),
+            }
+        } else {
+            None
+        };
+        Ok(Some(HierRole::Leader { members, ring }))
+    }
 }
 
 impl Drop for WorkerMesh {
@@ -499,6 +609,53 @@ impl TcpRingTransport {
         if write_frame(&mut self.send, &frame).is_ok() {
             let n = 4 + frame.encode().len() as u64; // prefix + payload
             self.bytes.sent.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One worker's transports for a two-level hierarchical P-Reduce (built
+/// by [`WorkerMesh::hier_transport`]; executed by `collectives::hier`).
+pub enum HierRole {
+    /// Non-leader: one duplex edge to the node leader.
+    Member { link: TcpRingTransport },
+    /// Node leader: duplex member edges in plan order, plus the
+    /// inter-node ring `(transport, ring position, leader count)` —
+    /// `None` when the plan has a single node.
+    Leader {
+        members: Vec<TcpRingTransport>,
+        ring: Option<(TcpRingTransport, usize, usize)>,
+    },
+}
+
+impl HierRole {
+    /// Best-effort poison of *every* edge this role holds, so an abort
+    /// unwinds across both levels: a member wakes its leader, a leader
+    /// wakes its whole node and both ring neighbours' reads (each of
+    /// which repeats this on its own edges — the poison floods the tree).
+    pub fn poison_all(&mut self) {
+        match self {
+            HierRole::Member { link } => link.poison(),
+            HierRole::Leader { members, ring } => {
+                for m in members {
+                    m.poison();
+                }
+                if let Some((t, _, _)) = ring {
+                    t.poison();
+                }
+            }
+        }
+    }
+
+    /// The first peer observed failing on any held edge, if any (the
+    /// suspect to accuse; poison receipts accuse nobody).
+    pub fn failed_peer(&self) -> Option<usize> {
+        match self {
+            HierRole::Member { link } => link.failed_peer(),
+            HierRole::Leader { members, ring } => members
+                .iter()
+                .filter_map(|m| m.failed_peer())
+                .next()
+                .or_else(|| ring.as_ref().and_then(|(t, _, _)| t.failed_peer())),
         }
     }
 }
@@ -917,6 +1074,181 @@ mod tests {
             per_codec_sent[0] > per_codec_sent[1] && per_codec_sent[1] > per_codec_sent[2],
             "bytes not ordered by codec: {per_codec_sent:?}"
         );
+    }
+
+    fn cluster_meshes(n: usize, io_secs: u64) -> Vec<WorkerMesh> {
+        let mut meshes: Vec<WorkerMesh> =
+            (0..n).map(|r| WorkerMesh::bind(r, "127.0.0.1:0").unwrap()).collect();
+        let addrs: Vec<SocketAddr> = meshes.iter().map(|m| m.local_addr()).collect();
+        for m in &mut meshes {
+            m.set_peers(addrs.clone());
+            m.io_timeout = Duration::from_secs(io_secs);
+        }
+        meshes
+    }
+
+    /// Run one hierarchical collective over real sockets: each rank's
+    /// thread builds its role from the plan and executes it.
+    fn run_hier(
+        meshes: &[WorkerMesh],
+        plan: &SyncPlan,
+        gid: u64,
+        bufs: Vec<Vec<f32>>,
+        k: usize,
+    ) -> Vec<Vec<f32>> {
+        use crate::collectives::hier::{hier_leader, hier_member};
+        let p_total = plan.total();
+        thread::scope(|scope| {
+            let handles: Vec<_> = plan
+                .ring_order()
+                .into_iter()
+                .zip(bufs)
+                .map(|(r, mut buf)| {
+                    let mesh = &meshes[r];
+                    scope.spawn(move || {
+                        match mesh.hier_transport(gid, plan).unwrap() {
+                            HierRole::Member { mut link } => {
+                                hier_member(&mut link, &mut buf, k, |_, _| Ok(()))
+                                    .unwrap();
+                            }
+                            HierRole::Leader { mut members, mut ring } => {
+                                hier_leader(
+                                    &mut members,
+                                    ring.as_mut().map(|(t, pos, l)| (t, *pos, *l)),
+                                    p_total,
+                                    &mut buf,
+                                    k,
+                                    |_, _| {},
+                                )
+                                .unwrap();
+                            }
+                        }
+                        (r, buf)
+                    })
+                })
+                .collect();
+            let mut out = vec![Vec::new(); meshes.len()];
+            for h in handles {
+                let (r, buf) = h.join().unwrap();
+                out[r] = buf;
+            }
+            out
+        })
+    }
+
+    #[test]
+    fn hier_transport_two_level_matches_mean() {
+        // Two nodes of ragged size over real sockets; the two-level
+        // collective must land every rank on the group mean.
+        let topo = crate::topo::Topology::parse("a:0,1,2;b:3,4", 5).unwrap();
+        let members = [0usize, 1, 2, 3, 4];
+        let plan = SyncPlan::make(&members, Some(&topo), &[0.0; 5]);
+        assert_eq!(plan.leaders().len(), 2);
+        let meshes = cluster_meshes(5, 10);
+        let n = 67;
+        let mut rng = Pcg32::new(3);
+        let bufs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect())
+            .collect();
+        // run_hier hands buffers out in ring order — keep them aligned
+        let order = plan.ring_order();
+        let expect: Vec<f32> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / 5.0)
+            .collect();
+        let ordered: Vec<Vec<f32>> =
+            order.iter().map(|&r| bufs[r].clone()).collect();
+        let results = run_hier(&meshes, &plan, 21, ordered, 3);
+        for (r, buf) in results.iter().enumerate() {
+            for i in 0..n {
+                assert!(
+                    (buf[i] - expect[i]).abs() < 1e-5,
+                    "rank {r} idx {i}: {} vs {}",
+                    buf[i],
+                    expect[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hier_poison_unwinds_both_levels() {
+        // A member deserts mid-collective: its leader's gather aborts, the
+        // leader floods poison over its node and the leader ring, and the
+        // far node — leader and member alike — unwinds with the typed
+        // abort instead of hanging on a socket timeout.
+        use crate::collectives::hier::{hier_leader, hier_member};
+        let topo = crate::topo::Topology::parse("a:0,1;b:2,3", 4).unwrap();
+        let members = [0usize, 1, 2, 3];
+        let plan = SyncPlan::make(&members, Some(&topo), &[0.0; 4]);
+        let meshes = cluster_meshes(4, 10);
+        let p_total = plan.total();
+        thread::scope(|scope| {
+            let plan = &plan;
+            // rank 1 (member of node a): joins its edge, then poisons
+            let m1 = &meshes[1];
+            let h1 = scope.spawn(move || {
+                let mut role = m1.hier_transport(31, plan).unwrap();
+                role.poison_all();
+            });
+            // rank 0 (leader of node a): gather aborts; flood the poison
+            let m0 = &meshes[0];
+            let h0 = scope.spawn(move || {
+                let mut buf = vec![1.0f32; 8];
+                let mut role = m0.hier_transport(31, plan).unwrap();
+                let HierRole::Leader { ref mut members, ref mut ring } = role else {
+                    panic!("rank 0 must lead node a");
+                };
+                let err = hier_leader(
+                    members,
+                    ring.as_mut().map(|(t, pos, l)| (t, *pos, *l)),
+                    p_total,
+                    &mut buf,
+                    1,
+                    |_, _| {},
+                )
+                .expect_err("poisoned gather must fail");
+                assert!(err.downcast_ref::<AbortedError>().is_some(), "{err:#}");
+                role.poison_all();
+            });
+            // rank 2 (leader of node b): ring read aborts; flood onward
+            let m2 = &meshes[2];
+            let h2 = scope.spawn(move || {
+                let mut buf = vec![2.0f32; 8];
+                let mut role = m2.hier_transport(31, plan).unwrap();
+                let HierRole::Leader { ref mut members, ref mut ring } = role else {
+                    panic!("rank 2 must lead node b");
+                };
+                let err = hier_leader(
+                    members,
+                    ring.as_mut().map(|(t, pos, l)| (t, *pos, *l)),
+                    p_total,
+                    &mut buf,
+                    1,
+                    |_, _| {},
+                )
+                .expect_err("ring neighbour's poison must abort");
+                assert!(err.downcast_ref::<AbortedError>().is_some(), "{err:#}");
+                role.poison_all();
+            });
+            // rank 3 (member of node b): ships its shard, then its
+            // broadcast wait must end in the typed abort from its leader
+            let m3 = &meshes[3];
+            let h3 = scope.spawn(move || {
+                let mut buf = vec![3.0f32; 8];
+                let HierRole::Member { mut link } =
+                    m3.hier_transport(31, plan).unwrap()
+                else {
+                    panic!("rank 3 must be a plain member");
+                };
+                let err = hier_member(&mut link, &mut buf, 1, |_, _| Ok(()))
+                    .expect_err("leader's poison must abort the broadcast wait");
+                assert!(err.downcast_ref::<AbortedError>().is_some(), "{err:#}");
+            });
+            h1.join().unwrap();
+            h0.join().unwrap();
+            h2.join().unwrap();
+            h3.join().unwrap();
+        });
     }
 
     #[test]

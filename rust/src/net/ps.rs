@@ -290,6 +290,7 @@ pub fn run_ps_worker(p: &WorkerParams) -> Result<WorkerReport> {
         rank: p.rank,
         iters: drv.iters,
         preduces: rounds,
+        hier_preduces: 0,
         loss_first,
         loss_last,
         secs: timed,

@@ -9,9 +9,11 @@
 //!  2. `Sync` with the Group Generator, piggybacking the EWMA as a
 //!     [`SpeedReport`](crate::rpc::SpeedReport) so the GG's speed table
 //!     tracks *measured* heterogeneity; a `None` assignment means "skip";
-//!  3. `WaitArmed`, then run the ring mean-all-reduce with the group over
-//!     the [`WorkerMesh`];
-//!  4. the ring leader (lowest rank) reports `Complete`; everyone else
+//!  3. `WaitArmed`, then run the group mean-all-reduce over the
+//!     [`WorkerMesh`] following the GG's placement plan: a flat
+//!     (bandwidth-ordered) ring, or the two-level hierarchical
+//!     collective when a `--topo` map puts the group on several nodes;
+//!  4. the lowest drafted rank reports `Complete`; everyone else
 //!     blocks on `WaitDone` so their next `Sync` cannot re-observe the
 //!     group at the front of their Group Buffer.
 //!
@@ -82,6 +84,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::collectives::codec::WireCodec;
+use crate::collectives::hier::{hier_leader, hier_member};
 use crate::collectives::pipeline::{
     reconcile_shard, ring_allreduce_sharded, shard_bounds, OverlapConfig,
 };
@@ -90,9 +93,10 @@ use crate::model::mlp::{loss_only, sgd_step, MlpScratch, MlpSpec};
 use crate::model::{BatchProducer, Dataset, LoadedBatch};
 use crate::rpc::{GgClient, GroupState, WaitOutcome};
 use crate::step::{self, Bounded, CloseGuard, QueueEnd, Stage};
+use crate::topo::SyncPlan;
 
 use super::ckpt;
-use super::mesh::{TcpRingTransport, WorkerMesh};
+use super::mesh::{HierRole, TcpRingTransport, WorkerMesh};
 
 /// Everything one worker process needs (built from CLI flags by
 /// `ripples worker`, or directly by tests).
@@ -260,6 +264,10 @@ pub struct WorkerReport {
     pub iters: u64,
     /// P-Reduce collectives this worker participated in (drain included).
     pub preduces: u64,
+    /// Subset of `preduces` that ran the two-level hierarchical
+    /// collective (multi-node `SyncPlan` from a `--topo`-configured GG);
+    /// 0 when every group ran a flat ring.
+    pub hier_preduces: u64,
     pub loss_first: f64,
     pub loss_last: f64,
     pub secs: f64,
@@ -301,7 +309,7 @@ impl WorkerReport {
         format!(
             "REPORT rank={} iters={} preduces={} loss_first={:.6} loss_last={:.6} \
              secs={:.3} ewma={:.6} stale={} sync_secs={:.6} aborts={} tx={} rx={} \
-             load_wait={:.6} compute_wait={:.6} reconcile_wait={:.6}",
+             load_wait={:.6} compute_wait={:.6} reconcile_wait={:.6} hier={}",
             self.rank,
             self.iters,
             self.preduces,
@@ -316,7 +324,8 @@ impl WorkerReport {
             self.bytes_rx,
             self.load_wait_secs,
             self.compute_wait_secs,
-            self.reconcile_wait_secs
+            self.reconcile_wait_secs,
+            self.hier_preduces
         )
     }
 
@@ -336,7 +345,15 @@ impl WorkerReport {
         let mut load_wait_secs = 0.0; // optional: absent in pre-pipeline lines
         let mut compute_wait_secs = 0.0; // optional, ditto
         let mut reconcile_wait_secs = 0.0; // optional, ditto
-        for kv in line.trim().strip_prefix("REPORT ").unwrap_or("").split_whitespace() {
+        let mut hier_preduces = 0; // optional: absent in pre-topology lines
+        // Strict prefix check: a garbled/truncated line used to degrade
+        // to an empty report via `unwrap_or("")` and surface as a table
+        // full of zeros instead of an error.
+        let body = line
+            .trim()
+            .strip_prefix("REPORT ")
+            .ok_or_else(|| anyhow!("not a REPORT line: {line:?}"))?;
+        for kv in body.split_whitespace() {
             let (k, v) = kv.split_once('=').with_context(|| format!("bad field {kv:?}"))?;
             match k {
                 "rank" => rank = Some(v.parse()?),
@@ -354,6 +371,7 @@ impl WorkerReport {
                 "load_wait" => load_wait_secs = v.parse()?,
                 "compute_wait" => compute_wait_secs = v.parse()?,
                 "reconcile_wait" => reconcile_wait_secs = v.parse()?,
+                "hier" => hier_preduces = v.parse()?,
                 _ => {} // forward-compatible: ignore unknown fields
             }
         }
@@ -363,6 +381,7 @@ impl WorkerReport {
                     rank,
                     iters,
                     preduces,
+                    hier_preduces,
                     loss_first: lf,
                     loss_last: ll,
                     secs,
@@ -718,6 +737,7 @@ pub fn run_worker(
 
     let overlap_active = !p.overlap.is_serial();
     let mut preduces = 0u64;
+    let mut hier_preduces = 0u64;
     let mut stale_steps = 0u64;
     let mut sync_blocked = 0.0f64;
     let mut aborts = 0u64;
@@ -745,24 +765,30 @@ pub fn run_worker(
         }
         // ---- sync phase (EWMA rides along as the SpeedReport)
         let (assigned, _newly_armed) = gg.sync(p.rank, drv.ewma_secs)?;
-        if let Some((gid, members)) = assigned {
+        if let Some((gid, members, plan)) = assigned {
             let outcome = if overlap_active {
                 let (stale, blocked, outcome) = execute_group_overlapped(
-                    p, mesh, gg, gid, &members, &mut flat, &mut drv, &mut feed, start,
-                    iter_budget,
+                    p, mesh, gg, gid, &members, &plan, &mut flat, &mut drv, &mut feed,
+                    start, iter_budget,
                 )?;
                 stale_steps += stale;
                 sync_blocked += blocked;
                 outcome
             } else {
                 let t0 = Instant::now();
-                let outcome =
-                    execute_group(p, mesh, gg, gid, &members, &mut flat, &mut abort_snap)?;
+                let outcome = execute_group(
+                    p, mesh, gg, gid, &members, &plan, &mut flat, &mut abort_snap,
+                )?;
                 sync_blocked += t0.elapsed().as_secs_f64();
                 outcome
             };
             match outcome {
-                GroupOutcome::Done => preduces += 1,
+                GroupOutcome::Done => {
+                    preduces += 1;
+                    if !plan.is_flat() {
+                        hier_preduces += 1;
+                    }
+                }
                 // repaired at the GG: the next sync drafts a fresh group
                 GroupOutcome::Aborted => aborts += 1,
             }
@@ -779,9 +805,15 @@ pub fn run_worker(
         let (assigned, _) = gg.sync(p.rank, drv.ewma_secs)?;
         match assigned {
             None => break,
-            Some((gid, members)) => {
-                match execute_group(p, mesh, gg, gid, &members, &mut flat, &mut abort_snap)? {
-                    GroupOutcome::Done => preduces += 1,
+            Some((gid, members, plan)) => {
+                match execute_group(p, mesh, gg, gid, &members, &plan, &mut flat, &mut abort_snap)?
+                {
+                    GroupOutcome::Done => {
+                        preduces += 1;
+                        if !plan.is_flat() {
+                            hier_preduces += 1;
+                        }
+                    }
                     GroupOutcome::Aborted => aborts += 1,
                 }
             }
@@ -796,6 +828,7 @@ pub fn run_worker(
         rank: p.rank,
         iters,
         preduces,
+        hier_preduces,
         loss_first,
         loss_last,
         secs: timed,
@@ -867,16 +900,86 @@ fn unwind_broken_collective(
     gg.abort_group(gid, suspect)
 }
 
+/// [`acquire_transport`], hierarchical edition: wait for every edge of
+/// the two-level plan this rank participates in (member↔leader duplex,
+/// plus the inter-node leader ring when this rank leads its node), with
+/// the same bounded probe/re-resolve loop.
+fn acquire_hier_transport(
+    p: &WorkerParams,
+    mesh: &WorkerMesh,
+    gg: &mut GgClient,
+    gid: u64,
+    members: &[usize],
+    plan: &SyncPlan,
+) -> Result<Option<HierRole>> {
+    let wait = Duration::from_millis(p.probe_ms.max(1));
+    let deadline = Instant::now() + p.io_timeout();
+    loop {
+        if let Some(role) = mesh.try_hier_transport(gid, plan, wait)? {
+            return Ok(Some(role));
+        }
+        match gg.probe(gid)? {
+            GroupState::Aborted | GroupState::Done => return Ok(None),
+            GroupState::Armed | GroupState::Pending => {}
+        }
+        for &m in members {
+            if m != p.rank {
+                if let Some(addr) = gg.lookup(m)? {
+                    if let Ok(parsed) = addr.parse() {
+                        mesh.update_peer(m, parsed);
+                    }
+                }
+            }
+        }
+        if Instant::now() >= deadline {
+            bail!(
+                "group {gid}: hierarchical edges not established within {:?} ({:?})",
+                p.io_timeout(),
+                plan.nodes
+            );
+        }
+    }
+}
+
+/// [`unwind_broken_collective`] for the two-level collective: poison
+/// *every* live edge of the tree — intra-node duplexes and the leader
+/// ring — so both levels unwind, then accuse the peer whose socket
+/// actually failed (if any) and report the abort.
+fn unwind_broken_hier(
+    mesh: &WorkerMesh,
+    gg: &mut GgClient,
+    gid: u64,
+    role: &mut HierRole,
+) -> Result<()> {
+    role.poison_all();
+    let suspect = role.failed_peer();
+    if let Some(r) = suspect {
+        mesh.invalidate(r);
+    }
+    gg.abort_group(gid, suspect)
+}
+
 /// One *attempt* at a GG-assigned collective — the arm/acquire/run/
 /// unwind skeleton shared by the serial and overlapped paths. Waits for
-/// the group to arm, acquires the ring transport, runs the sharded ring
-/// collective over `buf` (streaming each finished shard through
-/// `on_shard`), and on a broken ring hands `buf` to `on_broken` (the
-/// caller's rollback policy) before poisoning downstream and reporting
-/// the abort — so a mid-collective failure recovers identically on both
-/// paths. Completion protocol: the ring leader reports `Complete`,
-/// everyone else blocks on `WaitDone` (an abort *there* means the leader
-/// died after the collective — the averaged data is fine either way).
+/// the group to arm, acquires transports for the GG's placement plan,
+/// runs the collective over `buf` (streaming each finished shard through
+/// `on_shard`), and on a broken collective hands `buf` to `on_broken`
+/// (the caller's rollback policy) before poisoning downstream and
+/// reporting the abort — so a mid-collective failure recovers
+/// identically on both paths.
+///
+/// Plan dispatch: a single-node plan runs the flat sharded ring in the
+/// plan's (bandwidth-ordered) member order — every member received the
+/// *same* frozen plan from the GG, so the schedules agree. A multi-node
+/// plan runs the two-level collective: intra-node gather to the node
+/// leader, inter-node ring over the leaders, intra-node broadcast back
+/// ([`crate::collectives::hier`]).
+///
+/// Completion protocol: the lowest drafted rank reports `Complete`
+/// (independent of the plan's ring order, so flat and hierarchical
+/// groups retire identically), everyone else blocks on `WaitDone` (an
+/// abort *there* means that rank died after the collective — the
+/// averaged data is fine either way).
 #[allow(clippy::too_many_arguments)]
 fn collective_attempt(
     p: &WorkerParams,
@@ -884,6 +987,7 @@ fn collective_attempt(
     gg: &mut GgClient,
     gid: u64,
     members: &[usize],
+    plan: &SyncPlan,
     buf: &mut [f32],
     shards: usize,
     on_shard: impl FnMut(usize, &[f32]),
@@ -892,20 +996,50 @@ fn collective_attempt(
     if members.len() < 2 {
         bail!("GG assigned degenerate group {members:?}");
     }
+    plan.validate(members)
+        .map_err(|e| anyhow!("group {gid}: bad plan from GG: {e}"))?;
     if gg.wait_armed(gid)? == WaitOutcome::Aborted {
         return Ok(GroupOutcome::Aborted);
     }
-    let Some((mut transport, pos)) = acquire_transport(p, mesh, gg, gid, members)? else {
-        return Ok(GroupOutcome::Aborted);
-    };
-    let run =
-        ring_allreduce_sharded(pos, members.len(), buf, shards, &mut transport, on_shard);
-    if run.is_err() {
-        // partial reduce-scatter sums are garbage: let the caller roll
-        // back, then unwind the ring and report so everyone retries
-        on_broken(buf);
-        unwind_broken_collective(mesh, gg, gid, &mut transport)?;
-        return Ok(GroupOutcome::Aborted);
+    if plan.is_flat() {
+        // Degenerate (single-node) plan: flat ring, but in the plan's
+        // order — bandwidth-ordered when the GG has speed measurements,
+        // so the slowest link is crossed exactly once per chunk stream.
+        let order = plan.ring_order();
+        let Some((mut transport, pos)) = acquire_transport(p, mesh, gg, gid, &order)? else {
+            return Ok(GroupOutcome::Aborted);
+        };
+        let run =
+            ring_allreduce_sharded(pos, order.len(), buf, shards, &mut transport, on_shard);
+        if run.is_err() {
+            // partial reduce-scatter sums are garbage: let the caller
+            // roll back, then unwind the ring and report so everyone
+            // retries
+            on_broken(buf);
+            unwind_broken_collective(mesh, gg, gid, &mut transport)?;
+            return Ok(GroupOutcome::Aborted);
+        }
+    } else {
+        let Some(mut role) = acquire_hier_transport(p, mesh, gg, gid, members, plan)? else {
+            return Ok(GroupOutcome::Aborted);
+        };
+        let p_total = plan.total();
+        let run = match &mut role {
+            HierRole::Member { link } => hier_member(link, buf, shards, on_shard),
+            HierRole::Leader { members: links, ring } => hier_leader(
+                links,
+                ring.as_mut().map(|(t, pos, leaders)| (t, *pos, *leaders)),
+                p_total,
+                buf,
+                shards,
+                on_shard,
+            ),
+        };
+        if run.is_err() {
+            on_broken(buf);
+            unwind_broken_hier(mesh, gg, gid, &mut role)?;
+            return Ok(GroupOutcome::Aborted);
+        }
     }
     if members[0] == p.rank {
         gg.complete(gid)?;
@@ -927,6 +1061,7 @@ fn execute_group(
     gg: &mut GgClient,
     gid: u64,
     members: &[usize],
+    plan: &SyncPlan,
     flat: &mut [f32],
     snapshot: &mut Vec<f32>,
 ) -> Result<GroupOutcome> {
@@ -938,6 +1073,7 @@ fn execute_group(
         gg,
         gid,
         members,
+        plan,
         flat,
         p.overlap.shards,
         |_, _| (),
@@ -967,6 +1103,7 @@ fn execute_group_overlapped(
     gg: &mut GgClient,
     gid: u64,
     members: &[usize],
+    plan: &SyncPlan,
     flat: &mut [f32],
     drv: &mut SgdDriver<'_>,
     feed: &mut BatchFeed,
@@ -998,6 +1135,7 @@ fn execute_group_overlapped(
                 gg,
                 gid,
                 members,
+                plan,
                 &mut work,
                 k,
                 |s, avg| {
@@ -1162,6 +1300,7 @@ mod tests {
             rank: 3,
             iters: 120,
             preduces: 40,
+            hier_preduces: 5,
             loss_first: 1.386294,
             loss_last: 0.25,
             secs: 4.002,
@@ -1183,6 +1322,28 @@ mod tests {
     fn report_parse_rejects_incomplete() {
         assert!(WorkerReport::parse_line("REPORT rank=1 iters=2").is_err());
         assert!(WorkerReport::parse_line("nonsense").is_err());
+    }
+
+    #[test]
+    fn report_parse_rejects_corrupted_prefix() {
+        // Regression: these used to parse as an *empty* report (prefix
+        // strip fell back to ""), then fail only on missing fields with
+        // a misleading error — or, worse, would have succeeded silently
+        // had the required fields ever grown defaults. A mangled prefix
+        // must be its own loud error naming the line.
+        let good = "REPORT rank=0 iters=1 preduces=0 loss_first=1.0 \
+                    loss_last=0.5 secs=1.0";
+        assert!(WorkerReport::parse_line(good).is_ok());
+        let bads: Vec<String> = vec![
+            good[1..].to_string(),               // truncated: "EPORT rank=..."
+            good.replace("REPORT ", "REPORT"),   // glued: "REPORTrank=..."
+            format!("x{good}"),                  // garbage prepended
+            String::new(),                       // empty line (dead worker)
+        ];
+        for bad in &bads {
+            let err = WorkerReport::parse_line(bad).unwrap_err().to_string();
+            assert!(err.contains("not a REPORT line"), "{bad:?} -> {err}");
+        }
     }
 
     #[test]

@@ -33,6 +33,7 @@
 pub mod reactor;
 pub mod wire;
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -43,6 +44,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::gg::{GgConfig, Group, GroupGenerator, GroupId, GroupPhase, ShardedGg};
+use crate::topo::{SyncPlan, Topology};
 use crate::util::rng::Pcg32;
 use wire::{Reader, Writer};
 
@@ -196,11 +198,25 @@ impl StatsReport {
     }
 }
 
+/// One group on the wire: `(id, members, plan)`. `plan` is the
+/// node-major [`SyncPlan`] (`u32` ranks, leader first per node); an
+/// empty plan means "flat ring in member order" — exactly what
+/// plan-blind peers ran before topology existed, so the degenerate
+/// encoding is also the backward-compatible one.
+pub type WireGroup = (GroupId, Vec<u32>, Vec<Vec<u32>>);
+
 /// Server -> client messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    Assigned { id: GroupId, members: Vec<u32>, armed: Vec<(GroupId, Vec<u32>)> },
-    Armed { groups: Vec<(GroupId, Vec<u32>)> },
+    Assigned {
+        id: GroupId,
+        members: Vec<u32>,
+        /// Placement-aware sync plan for the assigned group (node-major,
+        /// leader first; empty = flat in member order).
+        plan: Vec<Vec<u32>>,
+        armed: Vec<WireGroup>,
+    },
+    Armed { groups: Vec<WireGroup> },
     Stats(StatsReport),
     Ok,
     Err { msg: String },
@@ -308,18 +324,49 @@ impl Request {
     }
 }
 
-fn encode_groups(w: &mut Writer, groups: &[(GroupId, Vec<u32>)]) {
-    w.u32(groups.len() as u32);
-    for (id, members) in groups {
-        w.u64(*id);
-        w.u32(members.len() as u32);
-        for &m in members {
+fn encode_plan(w: &mut Writer, plan: &[Vec<u32>]) {
+    w.u32(plan.len() as u32);
+    for node in plan {
+        w.u32(node.len() as u32);
+        for &m in node {
             w.u32(m);
         }
     }
 }
 
-fn decode_groups(r: &mut Reader) -> Result<Vec<(GroupId, Vec<u32>)>> {
+fn decode_plan(r: &mut Reader) -> Result<Vec<Vec<u32>>> {
+    let n = r.u32()? as usize;
+    if n > 1 << 16 {
+        bail!("unreasonable plan node count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = r.u32()? as usize;
+        if k > 1 << 16 {
+            bail!("unreasonable plan member count {k}");
+        }
+        let mut node = Vec::with_capacity(k);
+        for _ in 0..k {
+            node.push(r.u32()?);
+        }
+        out.push(node);
+    }
+    Ok(out)
+}
+
+fn encode_groups(w: &mut Writer, groups: &[WireGroup]) {
+    w.u32(groups.len() as u32);
+    for (id, members, plan) in groups {
+        w.u64(*id);
+        w.u32(members.len() as u32);
+        for &m in members {
+            w.u32(m);
+        }
+        encode_plan(w, plan);
+    }
+}
+
+fn decode_groups(r: &mut Reader) -> Result<Vec<WireGroup>> {
     let n = r.u32()? as usize;
     if n > 1 << 20 {
         bail!("unreasonable group count {n}");
@@ -335,7 +382,7 @@ fn decode_groups(r: &mut Reader) -> Result<Vec<(GroupId, Vec<u32>)>> {
         for _ in 0..k {
             members.push(r.u32()?);
         }
-        out.push((id, members));
+        out.push((id, members, decode_plan(r)?));
     }
     Ok(out)
 }
@@ -344,13 +391,14 @@ impl Response {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
-            Response::Assigned { id, members, armed } => {
+            Response::Assigned { id, members, plan, armed } => {
                 w.u8(0);
                 w.u64(*id);
                 w.u32(members.len() as u32);
                 for &m in members {
                     w.u32(m);
                 }
+                encode_plan(&mut w, plan);
                 encode_groups(&mut w, armed);
             }
             Response::Armed { groups } => {
@@ -411,7 +459,12 @@ impl Response {
                 for _ in 0..k {
                     members.push(r.u32()?);
                 }
-                Response::Assigned { id, members, armed: decode_groups(&mut r)? }
+                Response::Assigned {
+                    id,
+                    members,
+                    plan: decode_plan(&mut r)?,
+                    armed: decode_groups(&mut r)?,
+                }
             }
             1 => Response::Armed { groups: decode_groups(&mut r)? },
             2 => {
@@ -621,8 +674,14 @@ impl GgBackend {
     /// the request so this very division sees it — unless the rank was
     /// declared dead (a zombie's report must not repopulate the purged
     /// speed entry). Wire id 0 with no members encodes "skip this sync"
-    /// (GroupIds start at 1).
-    fn sync(&self, w: usize, speed: &SpeedReport) -> Response {
+    /// (GroupIds start at 1). The reply carries the placement-aware
+    /// [`SyncPlan`] for the assigned group (and every newly armed one),
+    /// assembled outside the state machines from `(members, topology,
+    /// speed snapshot)` and frozen per group in the [`PlanCache`] — so
+    /// both backends serve identical plans, every member of a group sees
+    /// the same schedule, and the differential `prop_gg` equivalence is
+    /// untouched.
+    fn sync(&self, w: usize, speed: &SpeedReport, plans: &PlanCache) -> Response {
         if w >= self.n_workers() {
             return Response::Err { msg: format!("worker {w} out of range") };
         }
@@ -635,11 +694,21 @@ impl GgBackend {
                 }
                 let (id, armed) = gg.request(w, rng);
                 let id = id.unwrap_or(0);
-                let members = gg
-                    .group(id)
-                    .map(|g| g.members.iter().map(|&m| m as u32).collect())
-                    .unwrap_or_default();
-                Response::Assigned { id, members, armed: group_pairs(armed) }
+                let speeds = gg.speed_table().snapshot();
+                let topo = gg.config().topology.as_ref();
+                let (members, plan) = match gg.group(id) {
+                    Some(g) => (
+                        g.members.iter().map(|&m| m as u32).collect(),
+                        cached_plan(plans, id, &g.members, topo, &speeds),
+                    ),
+                    None => (Vec::new(), Vec::new()),
+                };
+                Response::Assigned {
+                    id,
+                    members,
+                    plan,
+                    armed: planned_groups(plans, armed, topo, &speeds),
+                }
             }
             GgBackend::Sharded(gg) => {
                 if !gg.is_dead(w) {
@@ -647,11 +716,21 @@ impl GgBackend {
                 }
                 let (id, armed) = gg.request(w);
                 let id = id.unwrap_or(0);
-                let members = gg
-                    .group(id)
-                    .map(|g| g.members.iter().map(|&m| m as u32).collect())
-                    .unwrap_or_default();
-                Response::Assigned { id, members, armed: group_pairs(armed) }
+                let speeds = gg.speed_snapshot();
+                let topo = gg.config().topology.as_ref();
+                let (members, plan) = match gg.group(id) {
+                    Some(g) => (
+                        g.members.iter().map(|&m| m as u32).collect(),
+                        cached_plan(plans, id, &g.members, topo, &speeds),
+                    ),
+                    None => (Vec::new(), Vec::new()),
+                };
+                Response::Assigned {
+                    id,
+                    members,
+                    plan,
+                    armed: planned_groups(plans, armed, topo, &speeds),
+                }
             }
         };
         self.bump();
@@ -665,7 +744,7 @@ impl GgBackend {
     /// armed-check and the completion atomically under one scheduler
     /// hold ([`ShardedGg::try_complete`]); the single-lock path holds
     /// its one mutex across both, same effect.
-    fn complete(&self, id: GroupId) -> Response {
+    fn complete(&self, id: GroupId, plans: &PlanCache) -> Response {
         let resp = match self {
             GgBackend::SingleLock { state, .. } => {
                 let mut guard = state.lock().unwrap();
@@ -675,7 +754,13 @@ impl GgBackend {
                 } else if !gg.is_armed(id) {
                     Response::Err { msg: format!("group {id} is not armed") }
                 } else {
-                    Response::Armed { groups: group_pairs(gg.complete(id)) }
+                    let armed = gg.complete(id);
+                    let speeds = gg.speed_table().snapshot();
+                    let topo = gg.config().topology.as_ref();
+                    plans.lock().unwrap().remove(&id);
+                    Response::Armed {
+                        groups: planned_groups(plans, armed, topo, &speeds),
+                    }
                 }
             }
             GgBackend::Sharded(gg) => match gg.try_complete(id) {
@@ -686,7 +771,12 @@ impl GgBackend {
                     Response::Err { msg: format!("group {id} is not armed") }
                 }
                 crate::gg::CompleteOutcome::Done(groups) => {
-                    Response::Armed { groups: group_pairs(groups) }
+                    let speeds = gg.speed_snapshot();
+                    let topo = gg.config().topology.as_ref();
+                    plans.lock().unwrap().remove(&id);
+                    Response::Armed {
+                        groups: planned_groups(plans, groups, topo, &speeds),
+                    }
                 }
             },
         };
@@ -738,7 +828,7 @@ impl GgBackend {
         self.bump();
     }
 
-    fn abort_group(&self, id: GroupId) {
+    fn abort_group(&self, id: GroupId, plans: &PlanCache) {
         match self {
             GgBackend::SingleLock { state, .. } => {
                 let _ = state.lock().unwrap().0.abort_group(id);
@@ -747,6 +837,7 @@ impl GgBackend {
                 let _ = gg.abort_group(id);
             }
         }
+        plans.lock().unwrap().remove(&id);
         self.bump();
     }
 
@@ -764,27 +855,29 @@ impl GgBackend {
         }
     }
 
-    fn rejoin(&self, w: usize) {
-        match self {
-            GgBackend::SingleLock { state, .. } => {
-                let _ = state.lock().unwrap().0.rejoin(w);
-            }
-            GgBackend::Sharded(gg) => {
-                let _ = gg.rejoin(w);
-            }
+    fn rejoin(&self, w: usize, plans: &PlanCache) {
+        let purge = match self {
+            GgBackend::SingleLock { state, .. } => state.lock().unwrap().0.rejoin(w),
+            GgBackend::Sharded(gg) => gg.rejoin(w),
+        };
+        let mut cache = plans.lock().unwrap();
+        for g in &purge.aborted {
+            cache.remove(&g.id);
         }
+        drop(cache);
         self.bump();
     }
 
-    fn declare_dead(&self, w: usize) {
-        match self {
-            GgBackend::SingleLock { state, .. } => {
-                let _ = state.lock().unwrap().0.declare_dead(w);
-            }
-            GgBackend::Sharded(gg) => {
-                let _ = gg.declare_dead(w);
-            }
+    fn declare_dead(&self, w: usize, plans: &PlanCache) {
+        let purge = match self {
+            GgBackend::SingleLock { state, .. } => state.lock().unwrap().0.declare_dead(w),
+            GgBackend::Sharded(gg) => gg.declare_dead(w),
+        };
+        let mut cache = plans.lock().unwrap();
+        for g in &purge.aborted {
+            cache.remove(&g.id);
         }
+        drop(cache);
         self.bump();
     }
 }
@@ -792,6 +885,8 @@ impl GgBackend {
 /// Everything the reactor, its workers, and the monitor share.
 pub(crate) struct ServerShared {
     pub(crate) backend: GgBackend,
+    /// Frozen per-group sync plans (see [`PlanCache`]).
+    plans: PlanCache,
     /// Rank-indexed data-plane address registry (`Register`/`Lookup`).
     addrs: Mutex<Vec<Option<String>>>,
     liveness: Option<LivenessTracker>,
@@ -881,6 +976,7 @@ impl GgServer {
         let stop = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(ServerShared {
             backend: GgBackend::new(mode, cfg, seed),
+            plans: Mutex::new(HashMap::new()),
             addrs: Mutex::new(vec![None; n]),
             liveness: liveness.map(|cfg| LivenessTracker {
                 cfg,
@@ -967,15 +1063,63 @@ fn monitor_liveness(shared: &ServerShared, stop: &AtomicBool) {
         drop(live);
         for w in verdicts {
             // clients discover the purge by polling Wait/Probe
-            shared.backend.declare_dead(w);
+            shared.backend.declare_dead(w, &shared.plans);
         }
     }
 }
 
-fn group_pairs(groups: Vec<Group>) -> Vec<(GroupId, Vec<u32>)> {
+/// Per-group memo of the assembled wire plan. Group members learn their
+/// plan from their *own* Sync replies, which happen at different times —
+/// against an evolving speed table. Executing a ring requires every
+/// member to hold the identical schedule, so the first reply that needs
+/// a group's plan freezes it here and every later reply serves the same
+/// bytes. Entries are evicted when the group completes or aborts.
+pub(crate) type PlanCache = Mutex<HashMap<GroupId, Vec<Vec<u32>>>>;
+
+/// Assemble the wire form of a group's [`SyncPlan`]: node-major, leader
+/// first within each node. A flat single-node plan in drafted member
+/// order encodes as the empty vec — the degenerate case costs zero bytes
+/// and old-style "members only" consumers keep working.
+fn wire_plan(members: &[usize], topo: Option<&Topology>, speeds: &[f64]) -> Vec<Vec<u32>> {
+    let plan = SyncPlan::make(members, topo, speeds);
+    if plan.is_flat() && plan.ring_order() == members {
+        return Vec::new();
+    }
+    plan.nodes
+        .into_iter()
+        .map(|node| node.into_iter().map(|m| m as u32).collect())
+        .collect()
+}
+
+/// The memoized form of [`wire_plan`]: compute on first use, then serve
+/// the frozen copy for the group's lifetime.
+fn cached_plan(
+    plans: &PlanCache,
+    id: GroupId,
+    members: &[usize],
+    topo: Option<&Topology>,
+    speeds: &[f64],
+) -> Vec<Vec<u32>> {
+    plans
+        .lock()
+        .unwrap()
+        .entry(id)
+        .or_insert_with(|| wire_plan(members, topo, speeds))
+        .clone()
+}
+
+fn planned_groups(
+    plans: &PlanCache,
+    groups: Vec<Group>,
+    topo: Option<&Topology>,
+    speeds: &[f64],
+) -> Vec<WireGroup> {
     groups
         .into_iter()
-        .map(|g| (g.id, g.members.into_iter().map(|m| m as u32).collect()))
+        .map(|g| {
+            let plan = cached_plan(plans, g.id, &g.members, topo, speeds);
+            (g.id, g.members.into_iter().map(|m| m as u32).collect(), plan)
+        })
         .collect()
 }
 
@@ -1057,9 +1201,9 @@ pub(crate) fn handle_request(
             };
         }
         Request::Sync { worker, speed } => {
-            shared.backend.sync(*worker as usize, speed)
+            shared.backend.sync(*worker as usize, speed, &shared.plans)
         }
-        Request::Complete { id } => shared.backend.complete(*id),
+        Request::Complete { id } => shared.backend.complete(*id, &shared.plans),
         Request::Stats => Response::Stats(shared.backend.stats_report()),
         Request::Shutdown => {
             stop.store(true, Ordering::Relaxed);
@@ -1077,7 +1221,7 @@ pub(crate) fn handle_request(
         Request::AbortGroup { id, suspect } => {
             // tear the broken group down no matter who (if anyone) gets
             // blamed — the collective cannot finish
-            shared.backend.abort_group(*id);
+            shared.backend.abort_group(*id, &shared.plans);
             let s = *suspect as usize;
             if *suspect != NO_SUSPECT && s < n {
                 shared.accuse(s);
@@ -1090,7 +1234,7 @@ pub(crate) fn handle_request(
             if w >= n {
                 Response::Err { msg: format!("worker {w} out of range") }
             } else {
-                shared.backend.rejoin(w);
+                shared.backend.rejoin(w, &shared.plans);
                 shared.addrs.lock().unwrap()[w] = Some(addr.clone());
                 shared.clear_suspicion(w);
                 Response::Ok
@@ -1134,7 +1278,11 @@ impl GgClient {
     }
 
     /// Worker sync request; returns `(assigned, newly_armed)`. `assigned`
-    /// is None (wire id 0) when the GG says "skip this sync step".
+    /// is None (wire id 0) when the GG says "skip this sync step";
+    /// otherwise it carries the server-assembled [`SyncPlan`] for the
+    /// group (an empty wire plan decodes to the flat plan in drafted
+    /// member order). Armed notifications drop their plans — every
+    /// executor learns its own plan from its own `Sync` reply.
     /// `ewma_step_secs` piggybacks the worker's measured step-duration
     /// EWMA (0.0 = no measurement yet).
     #[allow(clippy::type_complexity)]
@@ -1142,20 +1290,34 @@ impl GgClient {
         &mut self,
         worker: usize,
         ewma_step_secs: f64,
-    ) -> Result<(Option<(GroupId, Vec<usize>)>, Vec<(GroupId, Vec<usize>)>)> {
+    ) -> Result<(Option<(GroupId, Vec<usize>, SyncPlan)>, Vec<(GroupId, Vec<usize>)>)> {
         match self.call(&Request::Sync {
             worker: worker as u32,
             speed: SpeedReport::new(ewma_step_secs),
         })? {
-            Response::Assigned { id, members, armed } => {
+            Response::Assigned { id, members, plan, armed } => {
                 let assigned = (id != 0).then(|| {
-                    (id, members.into_iter().map(|m| m as usize).collect::<Vec<_>>())
+                    let members: Vec<usize> =
+                        members.into_iter().map(|m| m as usize).collect();
+                    let plan = if plan.is_empty() {
+                        SyncPlan::flat(&members)
+                    } else {
+                        SyncPlan {
+                            nodes: plan
+                                .into_iter()
+                                .map(|n| n.into_iter().map(|m| m as usize).collect())
+                                .collect(),
+                        }
+                    };
+                    (id, members, plan)
                 });
                 Ok((
                     assigned,
                     armed
                         .into_iter()
-                        .map(|(id, ms)| (id, ms.into_iter().map(|m| m as usize).collect()))
+                        .map(|(id, ms, _plan)| {
+                            (id, ms.into_iter().map(|m| m as usize).collect())
+                        })
                         .collect(),
                 ))
             }
@@ -1168,7 +1330,7 @@ impl GgClient {
         match self.call(&Request::Complete { id })? {
             Response::Armed { groups } => Ok(groups
                 .into_iter()
-                .map(|(id, ms)| (id, ms.into_iter().map(|m| m as usize).collect()))
+                .map(|(id, ms, _plan)| (id, ms.into_iter().map(|m| m as usize).collect()))
                 .collect()),
             Response::Err { msg } => bail!("GG error: {msg}"),
             other => bail!("unexpected response {other:?}"),
@@ -1313,9 +1475,22 @@ mod tests {
             Response::Assigned {
                 id: 9,
                 members: vec![0, 4, 5],
-                armed: vec![(9, vec![0, 4, 5]), (10, vec![1, 2])],
+                plan: vec![],
+                armed: vec![
+                    (9, vec![0, 4, 5], vec![]),
+                    (10, vec![1, 2], vec![vec![1], vec![2]]),
+                ],
+            },
+            Response::Assigned {
+                id: 3,
+                members: vec![0, 1, 2, 3],
+                plan: vec![vec![1, 0], vec![3, 2]],
+                armed: vec![],
             },
             Response::Armed { groups: vec![] },
+            Response::Armed {
+                groups: vec![(77, vec![5, 6], vec![vec![6, 5]])],
+            },
             Response::Stats(StatsReport {
                 requests: 1,
                 conflicts: 2,
@@ -1372,8 +1547,10 @@ mod tests {
         .unwrap();
         let mut client = GgClient::connect(server.addr).unwrap();
         let (assigned, armed) = client.sync(0, 0.0125).unwrap();
-        let (id, members) = assigned.expect("sync must assign a group");
+        let (id, members, plan) = assigned.expect("sync must assign a group");
         assert!(members.contains(&0));
+        assert!(plan.validate(&members).is_ok(), "plan must cover the members");
+        assert!(plan.is_flat(), "no topology configured: plan must be flat");
         assert!(!armed.is_empty());
         // complete every armed group
         for (gid, _) in armed {
@@ -1400,7 +1577,7 @@ mod tests {
             GgServer::spawn("127.0.0.1:0", GgConfig::random(4, 4, 2), 7).unwrap();
         let mut c = GgClient::connect(server.addr).unwrap();
         let (assigned, _armed) = c.sync(0, 0.0).unwrap();
-        let (gid, _) = assigned.expect("sync must assign a group");
+        let (gid, _, _) = assigned.expect("sync must assign a group");
         // the first group has no conflicts: wait_armed returns immediately
         c.wait_armed(gid).unwrap();
         // a second connection completes the group while we block on it
@@ -1428,7 +1605,7 @@ mod tests {
             GgServer::spawn("127.0.0.1:0", GgConfig::random(4, 4, 2), 11).unwrap();
         let mut c = GgClient::connect(server.addr).unwrap();
         let (assigned, _) = c.sync(0, 0.0).unwrap();
-        let (gid, members) = assigned.expect("sync must assign");
+        let (gid, members, _) = assigned.expect("sync must assign");
         assert!(members.contains(&0));
         assert_eq!(c.probe(gid).unwrap(), GroupState::Armed);
         // a ring survivor reports the collective broken, accusing nobody
@@ -1474,7 +1651,7 @@ mod tests {
         let mut c = GgClient::connect(server.addr).unwrap();
         c.heartbeat(1).unwrap(); // rank 1's first and last sign of life
         let (assigned, _) = c.sync(0, 0.0).unwrap();
-        let (gid, members) = assigned.expect("pair must form");
+        let (gid, members, _) = assigned.expect("pair must form");
         assert_eq!(members, vec![0, 1]);
         // keep rank 0 alive past rank 1's deadline
         let deadline = Instant::now() + Duration::from_millis(700);
@@ -1515,7 +1692,7 @@ mod tests {
         .unwrap();
         let mut c = GgClient::connect(server.addr).unwrap();
         let (assigned, _) = c.sync(0, 0.0).unwrap();
-        let (gid, _) = assigned.expect("pair must form");
+        let (gid, _, _) = assigned.expect("pair must form");
         // survivor reports the broken collective and accuses rank 1
         c.abort_group(gid, Some(1)).unwrap();
         let deadline = Instant::now() + Duration::from_millis(900);
@@ -1550,6 +1727,27 @@ mod tests {
             "a persistent client must not re-dial per call"
         );
         server.shutdown();
+    }
+
+    #[test]
+    fn topology_configured_sync_carries_hier_plan() {
+        // With a `--topo` placement the Sync reply's plan must bucket the
+        // group's members by machine — identically on both backends,
+        // since assembly is a pure function of (members, topo, speeds).
+        for mode in [GgMode::Sharded, GgMode::SingleLock] {
+            let mut cfg = GgConfig::random(4, 4, 4);
+            cfg.topology = Some(crate::topo::Topology::parse("m0:0,1;m1:2,3", 4).unwrap());
+            let server =
+                GgServer::spawn_with_backend("127.0.0.1:0", cfg, 13, None, mode).unwrap();
+            let mut c = GgClient::connect(server.addr).unwrap();
+            let (assigned, _) = c.sync(0, 0.02).unwrap();
+            let (_, members, plan) = assigned.expect("sync must assign");
+            assert_eq!(members, vec![0, 1, 2, 3]);
+            assert!(!plan.is_flat(), "two machines must yield a two-level plan");
+            assert_eq!(plan.nodes, vec![vec![0, 1], vec![2, 3]]);
+            assert!(plan.validate(&members).is_ok());
+            server.shutdown();
+        }
     }
 
     #[test]

@@ -394,7 +394,7 @@ mod tests {
                                 todo.push(ng);
                             }
                         }
-                        if let Some((gid, _)) = assigned {
+                        if let Some((gid, _, _)) = assigned {
                             // armed-elsewhere groups finish via that
                             // client's transitive completes
                             c.wait_done(gid).unwrap();
@@ -427,7 +427,7 @@ mod tests {
         .unwrap();
         let mut c = GgClient::connect(server.addr).unwrap();
         let (assigned, armed) = c.sync(0, 0.0).unwrap();
-        let (gid, _) = assigned.expect("sync must assign");
+        let (gid, _, _) = assigned.expect("sync must assign");
         assert!(!armed.is_empty());
         let _ = c.complete(gid).unwrap();
         assert_eq!(c.stats().unwrap().requests, 1);
@@ -443,7 +443,7 @@ mod tests {
         let addr = server.addr;
         let mut c = GgClient::connect(addr).unwrap();
         let (assigned, _) = c.sync(0, 0.0).unwrap();
-        let (gid, _) = assigned.unwrap();
+        let (gid, _, _) = assigned.unwrap();
         let waiter = std::thread::spawn(move || {
             let mut c2 = GgClient::connect(addr).unwrap();
             c2.wait_done(gid).unwrap()
@@ -463,7 +463,7 @@ mod tests {
         let addr = server.addr;
         let mut c = GgClient::connect(addr).unwrap();
         let (assigned, _) = c.sync(0, 0.0).unwrap();
-        let (gid, _) = assigned.unwrap();
+        let (gid, _, _) = assigned.unwrap();
         let waiter = std::thread::spawn(move || {
             let mut c2 = GgClient::connect(addr).unwrap();
             c2.wait_done(gid) // never completed: parked until shutdown

@@ -23,7 +23,8 @@ pub mod state;
 pub use state::{SimResult, TracePoint, TrainState};
 
 use crate::cluster::calibration;
-use crate::config::{AlgoKind, Experiment};
+use crate::comm::CostModel;
+use crate::config::{AlgoKind, Experiment, SyncShape, TopologyConfig};
 use crate::model::{Dataset, MlpSpec};
 
 /// Everything a simulation run needs.
@@ -100,6 +101,33 @@ impl SimParams {
             self.exp.train.seed,
             self.data_bias,
         )
+    }
+}
+
+/// One collective's virtual cost under the configured placement shape
+/// (`[topology]`, DESIGN.md §Perf "Hierarchical P-Reduce"). Shared by
+/// the Ripples engine (per-group P-Reduce) and the rounds engine's
+/// global all-reduce barrier. The `flat` default is the call both
+/// engines always made — bit-identical; the other shapes swap in the
+/// shared-uplink serialization and two-level models so `fig topo` can
+/// sweep them.
+pub(crate) fn preduce_sync_cost(
+    cost: &CostModel,
+    topo: &TopologyConfig,
+    members: &[usize],
+    wire_bytes: usize,
+    bw: &[f64],
+) -> f64 {
+    let per = topo.per_machine(cost.workers_per_node);
+    match topo.shape {
+        SyncShape::Flat => cost.ring_allreduce_throttled(members, wire_bytes, bw),
+        SyncShape::FlatBlind => {
+            cost.ring_allreduce_uplink(members, wire_bytes, bw, per, true)
+        }
+        SyncShape::FlatOrdered => {
+            cost.ring_allreduce_uplink(members, wire_bytes, bw, per, false)
+        }
+        SyncShape::Hier => cost.hierarchical(members, wire_bytes, bw, per),
     }
 }
 

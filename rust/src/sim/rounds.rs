@@ -54,7 +54,10 @@ pub fn run_until(params: &SimParams, time_budget: Option<f64>) -> SimResult {
         let div: Vec<f64> = (0..n).map(|w| hetero.bandwidth_factor_at(w, iter)).collect();
         match k {
             AlgoKind::AllReduce => {
-                cost.ring_allreduce_throttled(&all, bytes, &div)
+                // same placement-shape dispatch as the Ripples engine:
+                // `[topology] shape = "flat"` (default) is bit-identical
+                // to the classic throttled ring
+                super::preduce_sync_cost(&cost, &exp.topology, &all, bytes, &div)
                     + calibration::ALLREDUCE_OVERHEAD
             }
             AlgoKind::ParameterServer => {
@@ -178,6 +181,52 @@ mod tests {
         p.dataset_size = 256;
         p.batch = 32;
         p
+    }
+
+    #[test]
+    fn allreduce_topology_anchor_halves_blind_sync() {
+        // The fig-topo acceptance anchor: 8 workers as 2 machines of 4
+        // behind a constrained 1.5 GB/s uplink, VGG-size transfers, one
+        // global collective per iteration. The barrier schedule is fixed
+        // independent of virtual time, so every placement shape runs
+        // bit-identical arithmetic (equal loss); the two-level collective
+        // must at least halve the placement-blind flat ring's sync time,
+        // with the bandwidth-ordered flat ring in between.
+        use crate::config::SyncShape;
+        let mk = |shape: SyncShape| {
+            let mut p = params(AlgoKind::AllReduce);
+            p.exp.cluster.n_nodes = 2;
+            p.exp.cluster.workers_per_node = 4;
+            p.exp.cluster.link.inter_bw = 1.5e9;
+            p.exp.topology.shape = shape;
+            p.model_bytes = 38_720_000;
+            run(&p)
+        };
+        let flat = mk(SyncShape::Flat);
+        let blind = mk(SyncShape::FlatBlind);
+        let ordered = mk(SyncShape::FlatOrdered);
+        let hier = mk(SyncShape::Hier);
+        let loss = flat.trace.last().unwrap().loss;
+        for (name, r) in [("blind", &blind), ("ordered", &ordered), ("hier", &hier)] {
+            assert_eq!(r.total_iters, flat.total_iters, "{name}");
+            assert_eq!(
+                r.trace.last().unwrap().loss.to_bits(),
+                loss.to_bits(),
+                "{name}: placement shape changed the arithmetic"
+            );
+        }
+        assert!(
+            blind.sync_time >= 2.0 * hier.sync_time,
+            "two-level must halve blind-flat sync: {} vs {}",
+            blind.sync_time,
+            hier.sync_time
+        );
+        assert!(ordered.sync_time > hier.sync_time);
+        assert!(blind.sync_time > ordered.sync_time);
+        assert!(hier.final_time < blind.final_time);
+        // node-major order on 2 machines is the degenerate no-op: the
+        // uplink model and the classic worst-edge model coincide
+        assert!((ordered.sync_time - flat.sync_time).abs() < 1e-6 * flat.sync_time);
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Physical placement model and the per-group synchronization plan.
+//!
+//! The paper's P-Reduce rings are flat and order-blind; PR 5's bandwidth
+//! schedules made the cost visible — a constrained uplink is crossed
+//! `2(p-1)` times per collective. This module is the shape layer that
+//! fixes it (DESIGN.md §Perf, "Hierarchical P-Reduce"):
+//!
+//! * [`Topology`] — rank → machine placement, parsed from `--topo` /
+//!   `[topology] nodes = "..."` with the grammar `m0:0,1;m1:2,3`
+//!   (machine name, colon, comma-separated ranks; machines separated by
+//!   semicolons). Ranks absent from the spec get an implicit singleton
+//!   machine — a worker the operator did not place is assumed alone.
+//! * [`SyncPlan`] — the placement-aware execution plan the Group
+//!   Generator attaches to every drafted group: a node-major list of
+//!   member lists (leader first). The plan is computed by the *pure*
+//!   [`SyncPlan::make`] from `(members, topology, measured speeds)`, so
+//!   the single-lock and sharded GG backends produce bit-identical plans
+//!   and the RPC layer can assemble it at reply time without touching
+//!   either state machine.
+//!
+//! Plan semantics (executed by `collectives::hier` and `net::worker`):
+//! multi-member nodes reduce intra-node onto their leader, the leaders
+//! run one inter-node ring dividing by the *group total*, then broadcast
+//! back. The all-singleton plan degenerates to a flat ring whose order
+//! is the plan's node order — bandwidth-ordered by the measured
+//! [`SpeedTable`](crate::gg::SpeedTable) telemetry (slowest first), so
+//! adjacent slow links collapse instead of gating every edge.
+
+/// Rank → machine placement, the operator-declared ground truth the GG
+/// plans against. Construct with [`Topology::parse`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Machine index per rank (`0..n_workers`).
+    node_of: Vec<usize>,
+    /// Machine names, indexed by machine id (implicit singletons are
+    /// named after their rank).
+    names: Vec<String>,
+}
+
+impl Topology {
+    /// Parse a `name:r0,r1;name2:r2,...` placement spec for `n_workers`
+    /// ranks. Errors (satellite-tested): a rank outside `0..n_workers`,
+    /// the same rank placed on two machines, or a machine with no ranks.
+    /// Ranks the spec never mentions are placed alone on an implicit
+    /// machine named after the rank.
+    pub fn parse(spec: &str, n_workers: usize) -> Result<Topology, String> {
+        let mut node_of: Vec<Option<usize>> = vec![None; n_workers];
+        let mut names: Vec<String> = Vec::new();
+        for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+            let part = part.trim();
+            let (name, ranks) = part
+                .split_once(':')
+                .ok_or_else(|| format!("bad topology entry {part:?}: expected NAME:R,R,..."))?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(format!("bad topology entry {part:?}: empty machine name"));
+            }
+            let node = names.len();
+            let mut placed = 0usize;
+            for r in ranks.split(',').filter(|r| !r.trim().is_empty()) {
+                let rank: usize = r
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("bad rank {r:?} on machine {name:?}: {e}"))?;
+                if rank >= n_workers {
+                    return Err(format!(
+                        "unknown rank {rank} on machine {name:?} (cluster has {n_workers} workers)"
+                    ));
+                }
+                if let Some(prev) = node_of[rank] {
+                    return Err(format!(
+                        "rank {rank} placed on two machines: {:?} and {name:?}",
+                        names[prev]
+                    ));
+                }
+                node_of[rank] = Some(node);
+                placed += 1;
+            }
+            if placed == 0 {
+                return Err(format!("machine {name:?} has no ranks (empty node)"));
+            }
+            names.push(name.to_string());
+        }
+        // implicit singleton machines for unplaced ranks
+        let node_of = node_of
+            .into_iter()
+            .enumerate()
+            .map(|(rank, n)| match n {
+                Some(n) => n,
+                None => {
+                    names.push(rank.to_string());
+                    names.len() - 1
+                }
+            })
+            .collect();
+        Ok(Topology { node_of, names })
+    }
+
+    /// Machine index of `rank` (ranks beyond the parsed cluster size are
+    /// treated as alone — a rejoined replacement keeps its placement).
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of.get(rank).copied().unwrap_or(usize::MAX - rank)
+    }
+
+    /// Number of machines (explicit + implicit singletons).
+    pub fn n_nodes(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Number of ranks this topology places.
+    pub fn n_workers(&self) -> usize {
+        self.node_of.len()
+    }
+
+    /// Machine name by index.
+    pub fn name(&self, node: usize) -> &str {
+        &self.names[node]
+    }
+}
+
+/// The placement-aware execution plan for one drafted group: node-major
+/// member lists, leader first within each node. Attached to Sync/Armed
+/// RPC replies so every member executes the same shape.
+///
+/// Invariants (guaranteed by [`SyncPlan::make`], checked by
+/// [`SyncPlan::validate`]): the concatenation of `nodes` is a
+/// permutation of the group's members; no node is empty.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SyncPlan {
+    /// One entry per physical node with drafted members; each inner list
+    /// is `[leader, member, member, ...]`. All-singleton = flat ring in
+    /// this exact order.
+    pub nodes: Vec<Vec<usize>>,
+}
+
+impl SyncPlan {
+    /// Build the plan for `members` from the placement and the measured
+    /// per-rank EWMA step seconds (`speeds[r]`, 0.0 = unmeasured — the
+    /// [`SpeedTable`](crate::gg::SpeedTable) snapshot convention).
+    ///
+    /// Pure and deterministic: both GG backends call this at RPC reply
+    /// time, so the differential `prop_gg` equivalence is untouched.
+    ///
+    /// * With a topology: members bucket by machine (node order = first
+    ///   appearance in drafted order); each bucket's leader is its
+    ///   fastest *measured* member (lowest EWMA; ties and the unmeasured
+    ///   case fall back to lowest rank), remaining members ascend by
+    ///   rank.
+    /// * Without: every member is its own node, stably ordered
+    ///   slowest-first by EWMA (unmeasured members keep drafted order at
+    ///   the tail) — the bandwidth-ordered flat ring.
+    pub fn make(members: &[usize], topo: Option<&Topology>, speeds: &[f64]) -> SyncPlan {
+        let ewma = |r: usize| speeds.get(r).copied().unwrap_or(0.0);
+        let Some(topo) = topo else {
+            // flat degenerate case: bandwidth-ordered singletons
+            let mut order: Vec<usize> = members.to_vec();
+            // stable sort, slowest (largest EWMA) first; unmeasured (0.0)
+            // members sink to the tail in drafted order
+            order.sort_by(|&a, &b| {
+                ewma(b).partial_cmp(&ewma(a)).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            return SyncPlan { nodes: order.into_iter().map(|r| vec![r]).collect() };
+        };
+        let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+        for &m in members {
+            let node = topo.node_of(m);
+            match nodes.iter_mut().find(|(n, _)| *n == node) {
+                Some((_, bucket)) => bucket.push(m),
+                None => nodes.push((node, vec![m])),
+            }
+        }
+        let nodes = nodes
+            .into_iter()
+            .map(|(_, mut bucket)| {
+                // leader = fastest measured member (ties / all-unmeasured
+                // resolve to lowest rank); the rest ascend by rank
+                let lead = *bucket
+                    .iter()
+                    .min_by(|&&a, &&b| {
+                        let ka = if ewma(a) > 0.0 { ewma(a) } else { f64::INFINITY };
+                        let kb = if ewma(b) > 0.0 { ewma(b) } else { f64::INFINITY };
+                        ka.partial_cmp(&kb)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.cmp(&b))
+                    })
+                    .expect("non-empty bucket");
+                bucket.retain(|&m| m != lead);
+                bucket.sort_unstable();
+                let mut out = Vec::with_capacity(bucket.len() + 1);
+                out.push(lead);
+                out.extend(bucket);
+                out
+            })
+            .collect();
+        SyncPlan { nodes }
+    }
+
+    /// A trivially flat plan in drafted order (what plan-less peers --
+    /// e.g. pre-topology launchers -- implicitly run).
+    pub fn flat(members: &[usize]) -> SyncPlan {
+        SyncPlan { nodes: members.iter().map(|&m| vec![m]).collect() }
+    }
+
+    /// True when every node is a singleton — execute as a flat ring in
+    /// plan order.
+    pub fn is_flat(&self) -> bool {
+        self.nodes.iter().all(|n| n.len() == 1)
+    }
+
+    /// Total member count across nodes.
+    pub fn total(&self) -> usize {
+        self.nodes.iter().map(|n| n.len()).sum()
+    }
+
+    /// The flat ring order (node-major flatten) — the execution order of
+    /// the degenerate case, and the canonical member enumeration.
+    pub fn ring_order(&self) -> Vec<usize> {
+        self.nodes.iter().flatten().copied().collect()
+    }
+
+    /// One leader per node, in node order — the inter-node ring.
+    pub fn leaders(&self) -> Vec<usize> {
+        self.nodes.iter().map(|n| n[0]).collect()
+    }
+
+    /// Locate `rank` as `(node_index, index_within_node)`.
+    pub fn position_of(&self, rank: usize) -> Option<(usize, usize)> {
+        self.nodes.iter().enumerate().find_map(|(ni, node)| {
+            node.iter().position(|&m| m == rank).map(|ii| (ni, ii))
+        })
+    }
+
+    /// Check the plan covers exactly `members` (as a set) with no empty
+    /// node — what an executing worker asserts before trusting a plan
+    /// that crossed the wire.
+    pub fn validate(&self, members: &[usize]) -> Result<(), String> {
+        if self.nodes.iter().any(|n| n.is_empty()) {
+            return Err("plan has an empty node".into());
+        }
+        let mut planned = self.ring_order();
+        let mut expect = members.to_vec();
+        planned.sort_unstable();
+        expect.sort_unstable();
+        if planned != expect {
+            return Err(format!(
+                "plan members {planned:?} do not match group members {expect:?}"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_places_ranks_and_implicit_singletons() {
+        let t = Topology::parse("m0:0,1;m1:2,3", 6).unwrap();
+        assert_eq!(t.node_of(0), t.node_of(1));
+        assert_eq!(t.node_of(2), t.node_of(3));
+        assert_ne!(t.node_of(0), t.node_of(2));
+        // 4 and 5 are implicit singletons on their own machines
+        assert_ne!(t.node_of(4), t.node_of(5));
+        assert_ne!(t.node_of(4), t.node_of(0));
+        assert_eq!(t.n_nodes(), 4);
+        assert_eq!(t.name(t.node_of(0)), "m0");
+        assert_eq!(t.name(t.node_of(4)), "4");
+        assert_eq!(t.n_workers(), 6);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_rank() {
+        let err = Topology::parse("m0:0,9", 4).unwrap_err();
+        assert!(err.contains("unknown rank 9"), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_rank_on_two_machines() {
+        let err = Topology::parse("m0:0,1;m1:1,2", 4).unwrap_err();
+        assert!(err.contains("rank 1 placed on two machines"), "{err}");
+        // same machine twice is the same defect
+        let err = Topology::parse("m0:0,0", 4).unwrap_err();
+        assert!(err.contains("two machines"), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_empty_node() {
+        let err = Topology::parse("m0:0;empty:", 4).unwrap_err();
+        assert!(err.contains("empty node"), "{err}");
+        let err = Topology::parse("m0:0;:1", 4).unwrap_err();
+        assert!(err.contains("empty machine name"), "{err}");
+        assert!(Topology::parse("m0", 4).is_err()); // no colon at all
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_empty_spec() {
+        let t = Topology::parse(" m0 : 0 , 1 ; m1 : 2 ", 3).unwrap();
+        assert_eq!(t.node_of(0), t.node_of(1));
+        assert_ne!(t.node_of(0), t.node_of(2));
+        // an empty spec = everyone alone
+        let t = Topology::parse("", 3).unwrap();
+        assert_eq!(t.n_nodes(), 3);
+    }
+
+    #[test]
+    fn plan_without_topology_orders_slowest_first() {
+        // speeds are EWMA step seconds: larger = slower
+        let speeds = vec![0.01, 0.08, 0.02, 0.0];
+        let plan = SyncPlan::make(&[0, 1, 2, 3], None, &speeds);
+        assert!(plan.is_flat());
+        assert_eq!(plan.ring_order(), vec![1, 2, 0, 3]); // unmeasured 3 last
+        assert_eq!(plan.total(), 4);
+        plan.validate(&[0, 1, 2, 3]).unwrap();
+    }
+
+    #[test]
+    fn plan_with_topology_buckets_by_node_and_picks_fast_leader() {
+        let topo = Topology::parse("a:0,1,2;b:3,4,5", 6).unwrap();
+        let speeds = vec![0.03, 0.01, 0.02, 0.0, 0.0, 0.0];
+        let plan = SyncPlan::make(&[0, 3, 1, 4, 2, 5], Some(&topo), &speeds);
+        assert!(!plan.is_flat());
+        assert_eq!(plan.nodes.len(), 2);
+        // node a first (rank 0 drafted first); leader 1 (fastest measured)
+        assert_eq!(plan.nodes[0], vec![1, 0, 2]);
+        // node b: nobody measured -> lowest rank leads
+        assert_eq!(plan.nodes[1], vec![3, 4, 5]);
+        assert_eq!(plan.leaders(), vec![1, 3]);
+        assert_eq!(plan.position_of(2), Some((0, 2)));
+        assert_eq!(plan.position_of(3), Some((1, 0)));
+        assert_eq!(plan.position_of(9), None);
+        plan.validate(&[0, 1, 2, 3, 4, 5]).unwrap();
+    }
+
+    #[test]
+    fn plan_is_deterministic_for_shuffled_speeds_ties() {
+        let topo = Topology::parse("a:0,1;b:2,3", 4).unwrap();
+        // exact EWMA ties: lowest rank must lead, stably
+        let speeds = vec![0.02, 0.02, 0.02, 0.02];
+        let p1 = SyncPlan::make(&[2, 0, 3, 1], Some(&topo), &speeds);
+        let p2 = SyncPlan::make(&[2, 0, 3, 1], Some(&topo), &speeds);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.nodes, vec![vec![2, 3], vec![0, 1]]);
+    }
+
+    #[test]
+    fn plan_validate_catches_mismatches() {
+        let plan = SyncPlan { nodes: vec![vec![0, 1], vec![2]] };
+        plan.validate(&[2, 0, 1]).unwrap();
+        assert!(plan.validate(&[0, 1]).is_err());
+        assert!(plan.validate(&[0, 1, 3]).is_err());
+        let empty = SyncPlan { nodes: vec![vec![0], vec![]] };
+        assert!(empty.validate(&[0]).is_err());
+    }
+
+    #[test]
+    fn flat_plan_preserves_drafted_order() {
+        let plan = SyncPlan::flat(&[3, 1, 2]);
+        assert!(plan.is_flat());
+        assert_eq!(plan.ring_order(), vec![3, 1, 2]);
+    }
+}

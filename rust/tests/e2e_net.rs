@@ -599,6 +599,113 @@ fn chaos_rejoin_restores_from_checkpoint_and_contributes() {
     let _ = std::fs::remove_dir_all(&ckpt_dir);
 }
 
+/// The topology acceptance scenario: 4 processes declared as 2 machines
+/// of 2 (`--topo m0:0,1;m1:2,3`), group size 3 so every drafted group
+/// spans machines with at least one multi-member node — the GG must ship
+/// multi-node plans and the workers must run the two-level hierarchical
+/// collective (intra gather -> leader ring -> broadcast) over real
+/// sockets, and still train.
+#[test]
+fn topo_four_process_hierarchical_collective() {
+    let cfg = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        secs: 3.0,
+        group_size: 3,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 42,
+        topo: Some("m0:0,1;m1:2,3".into()),
+        ..LaunchConfig::default()
+    };
+    let report = with_timeout(120, "topo cluster run", move || {
+        launch_local(&cfg).expect("topo cluster run")
+    });
+    assert_eq!(report.workers.len(), 4);
+    assert!(report.gg_stats.groups_created > 0, "GG never created a group");
+    for w in &report.workers {
+        assert!(w.preduces > 0, "worker {} never synchronized: {w:?}", w.rank);
+        assert!(
+            w.loss_last < w.loss_first * 0.85,
+            "worker {} loss did not decrease through hierarchical collectives: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+    }
+    // the point of the scenario: two-level collectives actually executed
+    // (size-3 groups over a 2+2 placement are always multi-node)
+    let hier: u64 = report.workers.iter().map(|w| w.hier_preduces).sum();
+    assert!(
+        hier > 0,
+        "no group ever ran the two-level collective: {:?}",
+        report.workers
+    );
+}
+
+/// Topology × chaos: kill a rank mid-run while the cluster is executing
+/// two-level collectives. A death inside the hierarchy must unwind both
+/// levels — member<->leader edges and the leader ring — via the poison
+/// relay + GG abort, and the repaired 3-worker cluster (still spanning
+/// both declared machines) must keep running hierarchical groups and
+/// finish training.
+#[test]
+fn chaos_topo_kill_mid_hier_collective_unwinds_both_levels() {
+    let cfg = LaunchConfig {
+        bin: bin(),
+        workers: 4,
+        secs: 3.0,
+        group_size: 3,
+        smart: true,
+        c_thres: 2,
+        compute_floor_ms: 8,
+        seed: 42,
+        liveness_ms: 2000,
+        heartbeat_ms: 100,
+        topo: Some("m0:0,1;m1:2,3".into()),
+        kill: Some(KillSpec { rank: 3, after_secs: 1.0, rejoin_after_secs: None }),
+        ..LaunchConfig::default()
+    };
+    let report = with_timeout(120, "topo chaos run", move || {
+        launch_local(&cfg).expect("topo chaos cluster run")
+    });
+    assert_eq!(report.killed, Some(3));
+    assert_eq!(report.workers.len(), 3, "exactly the survivors report");
+    assert_eq!(
+        report.gg_stats.deaths, 1,
+        "the killed rank must be declared dead (and only it)"
+    );
+    // the kill must have interrupted in-flight collectives: survivors
+    // unwound (poison relay across one or both levels) and retried
+    let aborts: u64 = report.workers.iter().map(|w| w.aborts).sum();
+    assert!(
+        aborts > 0,
+        "no survivor aborted a collective around the kill: {:?}",
+        report.workers
+    );
+    let mut hier = 0u64;
+    for w in &report.workers {
+        assert_ne!(w.rank, 3);
+        assert!(w.preduces > 0, "survivor {} never synchronized: {w:?}", w.rank);
+        assert!(
+            w.loss_last < w.loss_first * 0.85,
+            "survivor {} loss did not decrease after unwind: {} -> {}",
+            w.rank,
+            w.loss_first,
+            w.loss_last
+        );
+        hier += w.hier_preduces;
+    }
+    // the repaired cluster still spans both machines (size-3 groups over
+    // m0:{0,1} + m1:{2}), so two-level collectives kept completing
+    assert!(
+        hier > 0,
+        "no two-level collective completed across the kill: {:?}",
+        report.workers
+    );
+}
+
 /// Random-GG pair: the minimal cluster exercises the non-smart scheduling
 /// path and the leader/`WaitDone` completion protocol.
 #[test]

@@ -294,10 +294,22 @@ fn prop_rpc_request_roundtrip() {
                 "seed {seed}"
             );
         }
+        // random node-major sync plans (possibly empty = flat) must survive
+        // the wire alongside the members they partition
+        let rand_plan = |rng: &mut Pcg32| -> Vec<Vec<u32>> {
+            (0..rng.gen_range(4))
+                .map(|_| (0..1 + rng.gen_range(3)).map(|_| rng.next_u32()).collect())
+                .collect()
+        };
         let resp = Response::Assigned {
             id: rng.next_u64(),
             members: (0..rng.gen_range(9)).map(|_| rng.next_u32()).collect(),
-            armed: vec![(rng.next_u64(), vec![rng.next_u32()])],
+            plan: rand_plan(&mut rng),
+            armed: vec![(rng.next_u64(), vec![rng.next_u32()], rand_plan(&mut rng))],
+        };
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp, "seed {seed}");
+        let resp = Response::Armed {
+            groups: vec![(rng.next_u64(), vec![rng.next_u32()], rand_plan(&mut rng))],
         };
         assert_eq!(Response::decode(&resp.encode()).unwrap(), resp, "seed {seed}");
         // the Stats response carries the per-worker speed table

@@ -236,7 +236,7 @@ fn scale_e2e_64_ranks_over_tcp() {
                             todo.push(ng);
                         }
                     }
-                    if let Some((gid, _)) = assigned {
+                    if let Some((gid, _, _)) = assigned {
                         c.wait_done(gid).unwrap();
                     }
                 }
