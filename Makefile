@@ -5,7 +5,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test chaos e2e pipeline stress topo clippy doc fmt verify artifacts python-test bench bench-json paper clean
+.PHONY: build test chaos e2e pipeline stress topo modelcheck lint-strict tsan miri clippy doc fmt verify artifacts python-test bench bench-json paper clean
 
 build:
 	$(CARGO) build --release
@@ -61,7 +61,56 @@ topo:
 	$(CARGO) test -q hier
 	$(CARGO) test -q --test e2e_net topo_
 
-verify: build test chaos e2e pipeline stress topo clippy doc fmt
+# Model-check gate (DESIGN.md §Correctness): the modelcheck integration
+# suite (committed minimized counterexample fixtures replayed against
+# both real GG backends + the RPC seam, the shared ABORTED_SET_CAP pin,
+# CHECK_gg.json shape), then the exhaustive bounded exploration itself —
+# every scenario at 3 ranks to depth 20 with the sleep-set reduction
+# measured — regenerating results/CHECK_gg.json. Any invariant violation
+# fails the build and prints a minimized counterexample schedule.
+modelcheck: build
+	$(CARGO) test -q --test modelcheck
+	$(CARGO) run --release -- check --ranks 3 --depth 20 --scenario all --json results/CHECK_gg.json
+
+# Strict lint gate beyond clippy: no unwrap/expect in non-test net/rpc
+# code (allowlist: tools/lint_allow.txt, stale entries fail) and the RPC
+# frame-tag table must be a complete bijection with every Request
+# variant dispatched. Pure-stdlib python3, no extra deps.
+lint-strict:
+	$(PYTHON) tools/lint_strict.py
+
+verify: build test chaos e2e pipeline stress topo modelcheck lint-strict clippy doc fmt
+
+# ThreadSanitizer gate (environment-gated; see EXPERIMENTS.md
+# §Environment-gated tests): re-runs the concurrency stress suite and
+# the step:: bounded-queue tests under TSan. Needs a nightly toolchain
+# with the rust-src component (-Zbuild-std instruments std too); when no
+# nightly is installed the target SKIPs with a notice instead of
+# failing, so `make tsan` is safe to call anywhere.
+tsan:
+	@if $(CARGO) +nightly --version >/dev/null 2>&1; then \
+		target=$$(rustc -vV | sed -n 's/^host: //p'); \
+		RUSTFLAGS="-Zsanitizer=thread" $(CARGO) +nightly test -q \
+			-Zbuild-std --target $$target --test stress_gg -- --test-threads=1 && \
+		RUSTFLAGS="-Zsanitizer=thread" $(CARGO) +nightly test -q \
+			-Zbuild-std --target $$target step:: ; \
+	else \
+		echo "tsan: SKIP — no nightly toolchain installed" \
+			"(EXPERIMENTS.md §Environment-gated tests)"; \
+	fi
+
+# Miri gate (environment-gated, same doc section): interprets the step::
+# bounded-queue/stage unit tests for undefined behaviour. stress_gg is
+# excluded here on purpose — it opens real TCP sockets, which Miri
+# cannot emulate (TSan covers it above). SKIPs with a notice when
+# cargo-miri is not installed.
+miri:
+	@if $(CARGO) +nightly miri --version >/dev/null 2>&1; then \
+		$(CARGO) +nightly miri test -q step:: ; \
+	else \
+		echo "miri: SKIP — cargo-miri not installed" \
+			"(EXPERIMENTS.md §Environment-gated tests)"; \
+	fi
 
 # Lint gate: clippy over every target (lib, bin, tests, benches,
 # examples) with warnings denied.

@@ -1,0 +1,501 @@
+//! Conformance: the model is only trusted because explored traces
+//! replay against the *real* coordinator.
+//!
+//! Three replay targets share every trace:
+//!
+//! * the single-lock oracle [`GroupGenerator`] (driven with an external
+//!   [`Pcg32`], exactly like the simulator engines);
+//! * the sharded backend [`ShardedGg`] (same config, same seed — the
+//!   two must stay bit-identical, the standing differential invariant
+//!   from `prop_gg`);
+//! * the RPC dispatch seam [`crate::rpc::ReplayServer`] — decoded
+//!   [`Request`]s through the reactor's own `handle_request`, so the
+//!   trace also exercises request validation and the plan cache.
+//!
+//! [`conformance_replay`] is the *strict* mode: it additionally steps
+//! the abstract [`Model`] alongside and demands identical assignments,
+//! identical newly-armed sets, and an identical state snapshot after
+//! every op. Strict mode only accepts configurations in the
+//! **membership-deterministic regime** ([`membership_deterministic`]):
+//! the model drafts deterministically where the real GG shuffles, so
+//! they can only be compared where the shuffle cannot change membership
+//! (group size ≥ n, or Global Division with n ≤ 3 and group size 2).
+//!
+//! [`replay_against_real`] is the *tolerant* mode used by the committed
+//! counterexample fixtures (`rust/tests/fixtures/check/`): mutated-model
+//! traces replay against the real backends — which do **not** contain
+//! the mutation — asserting after every op that the two backends agree
+//! exactly and that the real coordinator never reaches the bad state
+//! (via [`assert_real_invariants`]).
+
+use crate::gg::{GgConfig, GroupGenerator, GroupId, ShardedGg};
+use crate::rpc::{GgMode, ReplayServer, Request, Response, SpeedReport};
+use crate::util::rng::Pcg32;
+
+use super::model::{Model, ModelCfg, Mutation, Op};
+
+/// True when the real backends' RNG cannot influence group membership,
+/// making the model's deterministic sampling exact (see module docs).
+pub fn membership_deterministic(cfg: &ModelCfg) -> bool {
+    if cfg.use_global_division {
+        cfg.group_size >= cfg.n || (cfg.n <= 3 && cfg.group_size == 2)
+    } else {
+        cfg.group_size >= cfg.n
+    }
+}
+
+/// Lower a model configuration onto the real [`GgConfig`] (all
+/// heterogeneity filters off — the model has no notion of speed).
+pub fn to_gg_config(cfg: &ModelCfg) -> GgConfig {
+    let mut g = GgConfig::random(cfg.n, cfg.n, cfg.group_size);
+    g.use_group_buffer = cfg.use_group_buffer;
+    g.use_global_division = cfg.use_global_division;
+    g.rendezvous = cfg.rendezvous;
+    g
+}
+
+/// Everything observable about a backend's coordination state, in one
+/// comparable value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendSnapshot {
+    pub locks: Vec<bool>,
+    pub gbs: Vec<Vec<GroupId>>,
+    pub retired: Vec<bool>,
+    pub dead: Vec<bool>,
+    /// Live groups sorted by id: `(id, members, armed)`.
+    pub live: Vec<(GroupId, Vec<usize>, bool)>,
+    pub pending_len: usize,
+}
+
+macro_rules! snapshot_impl {
+    ($gg:expr, $n:expr) => {{
+        let gg = $gg;
+        let n = $n;
+        let mut ids = gg.live_group_ids();
+        ids.sort_unstable();
+        BackendSnapshot {
+            locks: (0..n).map(|w| gg.is_locked_worker(w)).collect(),
+            gbs: (0..n).map(|w| gg.gb_snapshot(w)).collect(),
+            retired: (0..n).map(|w| gg.is_retired(w)).collect(),
+            dead: (0..n).map(|w| gg.is_dead(w)).collect(),
+            live: ids
+                .iter()
+                .map(|&id| {
+                    let members =
+                        gg.group(id).map(|g| g.members.clone()).unwrap_or_default();
+                    (id, members, gg.is_armed(id))
+                })
+                .collect(),
+            pending_len: gg.pending_len(),
+        }
+    }};
+}
+
+pub fn snapshot_oracle(gg: &GroupGenerator) -> BackendSnapshot {
+    snapshot_impl!(gg, gg.config().n_workers)
+}
+
+pub fn snapshot_sharded(gg: &ShardedGg) -> BackendSnapshot {
+    snapshot_impl!(gg, gg.config().n_workers)
+}
+
+/// The coordination invariants, checked on a *real* backend's snapshot
+/// (the fixture replays assert the real code never reaches a mutated
+/// model's bad state).
+pub fn assert_real_invariants(s: &BackendSnapshot) -> Result<(), String> {
+    let n = s.locks.len();
+    let mut armed_count = vec![0usize; n];
+    for (id, members, armed) in &s.live {
+        if *armed {
+            for &m in members {
+                armed_count[m] += 1;
+                if armed_count[m] > 1 {
+                    return Err(format!("rank {m} in two armed groups (g{id})"));
+                }
+            }
+        }
+    }
+    for w in 0..n {
+        if s.locks[w] != (armed_count[w] == 1) {
+            return Err(format!(
+                "rank {w}: lock bit {} vs {} armed memberships",
+                s.locks[w], armed_count[w]
+            ));
+        }
+    }
+    let unarmed = s.live.iter().filter(|(_, _, a)| !a).count();
+    if unarmed != s.pending_len {
+        return Err(format!(
+            "{} unarmed live groups but pending_len {}",
+            unarmed, s.pending_len
+        ));
+    }
+    for (id, members, armed) in &s.live {
+        if !armed && !members.iter().any(|&m| s.locks[m]) {
+            return Err(format!("pending g{id} {members:?} blocked by nobody (lost wakeup)"));
+        }
+    }
+    for w in 0..n {
+        let mut prev = 0;
+        for &g in &s.gbs[w] {
+            if g <= prev {
+                return Err(format!("worker {w} GB not strictly increasing at g{g}"));
+            }
+            prev = g;
+            match s.live.iter().find(|(id, _, _)| *id == g) {
+                None => return Err(format!("worker {w} GB holds dead id g{g}")),
+                Some((_, members, _)) if !members.contains(&w) => {
+                    return Err(format!("worker {w} GB holds g{g} which omits it"))
+                }
+                Some(_) => {}
+            }
+        }
+    }
+    for w in 0..n {
+        if !s.dead[w] {
+            continue;
+        }
+        if s.locks[w] {
+            return Err(format!("dead rank {w} still locked"));
+        }
+        if !s.gbs[w].is_empty() {
+            return Err(format!("dead rank {w} has a non-empty GB"));
+        }
+        if let Some((id, _, _)) =
+            s.live.iter().find(|(_, members, _)| members.contains(&w))
+        {
+            return Err(format!("dead rank {w} named by live g{id}"));
+        }
+    }
+    Ok(())
+}
+
+/// Result of a tolerant fixture replay: the final backends (for
+/// test-specific asserts) plus the per-op snapshots.
+pub struct RealReplay {
+    pub oracle: GroupGenerator,
+    pub rng: Pcg32,
+    pub sharded: ShardedGg,
+    pub snapshots: Vec<BackendSnapshot>,
+}
+
+/// Replay `ops` against the real single-lock and sharded backends
+/// (same config, same seed), asserting after every op that the two are
+/// state-identical and that [`assert_real_invariants`] holds. `Complete`
+/// ops whose group is not armed are skipped (mutated-model traces refer
+/// to states the real code refuses to enter) — but both backends must
+/// agree on the refusal.
+pub fn replay_against_real(
+    cfg: &ModelCfg,
+    seed: u64,
+    ops: &[Op],
+) -> Result<RealReplay, String> {
+    let gcfg = to_gg_config(cfg);
+    let mut oracle = GroupGenerator::new(gcfg.clone());
+    let mut rng = Pcg32::new(seed);
+    let sharded = ShardedGg::new(gcfg, seed);
+    let mut snapshots = Vec::new();
+    for (i, &op) in ops.iter().enumerate() {
+        match op {
+            Op::Sync(w) => {
+                let (a, armed) = oracle.request(w, &mut rng);
+                let (a2, armed2) = sharded.request(w);
+                if a != a2 {
+                    return Err(format!("op {i} sync({w}): assigned {a:?} vs {a2:?}"));
+                }
+                let ids: Vec<GroupId> = armed.iter().map(|g| g.id).collect();
+                let ids2: Vec<GroupId> = armed2.iter().map(|g| g.id).collect();
+                if ids != ids2 {
+                    return Err(format!("op {i} sync({w}): armed {ids:?} vs {ids2:?}"));
+                }
+            }
+            Op::Complete(g) => {
+                let armed = oracle.is_armed(g);
+                if armed != sharded.is_armed(g) {
+                    return Err(format!("op {i} complete(g{g}): armed-ness disagrees"));
+                }
+                if armed {
+                    oracle.complete(g);
+                    sharded.complete(g);
+                }
+            }
+            Op::Resume(_) => {}
+            Op::Die(w) => {
+                oracle.declare_dead(w);
+                sharded.declare_dead(w);
+            }
+            Op::Rejoin(w) => {
+                oracle.rejoin(w);
+                sharded.rejoin(w);
+            }
+            Op::Abort(g) => {
+                oracle.abort_group(g);
+                sharded.abort_group(g);
+            }
+            Op::Retire(w) => {
+                oracle.retire(w);
+                sharded.retire(w);
+            }
+        }
+        let so = snapshot_oracle(&oracle);
+        let ss = snapshot_sharded(&sharded);
+        if so != ss {
+            return Err(format!(
+                "op {i} ({}): oracle and sharded snapshots diverge\n  oracle:  {so:?}\n  sharded: {ss:?}",
+                op.render()
+            ));
+        }
+        assert_real_invariants(&so)
+            .map_err(|e| format!("op {i} ({}): real invariant: {e}", op.render()))?;
+        snapshots.push(so);
+    }
+    Ok(RealReplay { oracle, rng, sharded, snapshots })
+}
+
+/// Strict conformance: step the unmutated model, the oracle, the
+/// sharded backend, and the RPC replay seam in lockstep; every
+/// assignment, newly-armed set, RPC response, and state snapshot must
+/// agree exactly. Only valid in the membership-deterministic regime.
+pub fn conformance_replay(cfg: &ModelCfg, seed: u64, ops: &[Op]) -> Result<(), String> {
+    assert!(
+        membership_deterministic(cfg),
+        "strict conformance requires the membership-deterministic regime"
+    );
+    let gcfg = to_gg_config(cfg);
+    let mut model = Model::new(cfg.clone(), Mutation::None);
+    let mut oracle = GroupGenerator::new(gcfg.clone());
+    let mut rng = Pcg32::new(seed);
+    let sharded = ShardedGg::new(gcfg.clone(), seed);
+    let rpc = ReplayServer::new(GgMode::Sharded, gcfg, seed);
+    for (i, &op) in ops.iter().enumerate() {
+        if !model.enabled().contains(&op) {
+            return Err(format!("op {i} ({}) not enabled in the model", op.render()));
+        }
+        let eff = model.step(op);
+        match op {
+            Op::Sync(w) => {
+                let (a, armed) = oracle.request(w, &mut rng);
+                let (a2, armed2) = sharded.request(w);
+                let ids: Vec<GroupId> = armed.iter().map(|g| g.id).collect();
+                let ids2: Vec<GroupId> = armed2.iter().map(|g| g.id).collect();
+                let resp = rpc.apply(&Request::Sync {
+                    worker: w as u32,
+                    speed: SpeedReport::new(0.0),
+                });
+                let (a3, ids3) = match resp {
+                    Some(Response::Assigned { id, armed, .. }) => (
+                        (id != 0).then_some(id),
+                        armed.iter().map(|g| g.0).collect::<Vec<GroupId>>(),
+                    ),
+                    other => return Err(format!("op {i} sync({w}): rpc said {other:?}")),
+                };
+                if eff.assigned != a || a != a2 || a != a3 {
+                    return Err(format!(
+                        "op {i} sync({w}): assigned model={:?} oracle={a:?} \
+                         sharded={a2:?} rpc={a3:?}",
+                        eff.assigned
+                    ));
+                }
+                if eff.newly_armed != ids || ids != ids2 || ids != ids3 {
+                    return Err(format!(
+                        "op {i} sync({w}): armed model={:?} oracle={ids:?} \
+                         sharded={ids2:?} rpc={ids3:?}",
+                        eff.newly_armed
+                    ));
+                }
+            }
+            Op::Complete(g) => {
+                let armed = oracle.complete(g);
+                let armed2 = sharded.complete(g);
+                let ids: Vec<GroupId> = armed.iter().map(|g| g.id).collect();
+                let ids2: Vec<GroupId> = armed2.iter().map(|g| g.id).collect();
+                let ids3 = match rpc.apply(&Request::Complete { id: g }) {
+                    Some(Response::Armed { groups }) => {
+                        groups.iter().map(|g| g.0).collect::<Vec<GroupId>>()
+                    }
+                    other => {
+                        return Err(format!("op {i} complete(g{g}): rpc said {other:?}"))
+                    }
+                };
+                if eff.newly_armed != ids || ids != ids2 || ids != ids3 {
+                    return Err(format!(
+                        "op {i} complete(g{g}): armed model={:?} oracle={ids:?} \
+                         sharded={ids2:?} rpc={ids3:?}",
+                        eff.newly_armed
+                    ));
+                }
+            }
+            Op::Resume(_) => {}
+            Op::Die(w) => {
+                oracle.declare_dead(w);
+                sharded.declare_dead(w);
+                rpc.declare_dead(w);
+            }
+            Op::Rejoin(w) => {
+                oracle.rejoin(w);
+                sharded.rejoin(w);
+                let addr = format!("replay://{w}");
+                match rpc.apply(&Request::Rejoin { worker: w as u32, addr }) {
+                    Some(Response::Ok) => {}
+                    other => {
+                        return Err(format!("op {i} rejoin({w}): rpc said {other:?}"))
+                    }
+                }
+            }
+            Op::Abort(g) => {
+                oracle.abort_group(g);
+                sharded.abort_group(g);
+                match rpc.apply(&Request::AbortGroup { id: g, suspect: u32::MAX }) {
+                    Some(Response::Ok) => {}
+                    other => return Err(format!("op {i} abort(g{g}): rpc said {other:?}")),
+                }
+            }
+            Op::Retire(w) => {
+                oracle.retire(w);
+                sharded.retire(w);
+                match rpc.apply(&Request::Retire { worker: w as u32 }) {
+                    Some(Response::Ok) => {}
+                    other => {
+                        return Err(format!("op {i} retire({w}): rpc said {other:?}"))
+                    }
+                }
+            }
+        }
+        let so = snapshot_oracle(&oracle);
+        let ss = snapshot_sharded(&sharded);
+        if so != ss {
+            return Err(format!(
+                "op {i} ({}): oracle vs sharded diverge\n  {so:?}\n  {ss:?}",
+                op.render()
+            ));
+        }
+        diff_model(&model, &so).map_err(|e| {
+            format!("op {i} ({}): model vs real diverge: {e}", op.render())
+        })?;
+    }
+    Ok(())
+}
+
+/// Compare the abstract model's state against a real snapshot.
+fn diff_model(model: &Model, s: &BackendSnapshot) -> Result<(), String> {
+    let n = model.cfg.n;
+    for w in 0..n {
+        if model.is_locked(w) != s.locks[w] {
+            return Err(format!("rank {w} lock: model {}", model.is_locked(w)));
+        }
+        if model.gb_snapshot(w) != s.gbs[w] {
+            return Err(format!(
+                "rank {w} GB: model {:?} real {:?}",
+                model.gb_snapshot(w),
+                s.gbs[w]
+            ));
+        }
+        if model.is_retired(w) != s.retired[w] {
+            return Err(format!("rank {w} retired: model {}", model.is_retired(w)));
+        }
+        if model.is_dead(w) != s.dead[w] {
+            return Err(format!("rank {w} dead: model {}", model.is_dead(w)));
+        }
+    }
+    let live: Vec<(GroupId, Vec<usize>, bool)> = model
+        .live_groups()
+        .iter()
+        .map(|(&id, (members, armed))| (id, members.clone(), *armed))
+        .collect();
+    if live != s.live {
+        return Err(format!("live groups: model {live:?} real {:?}", s.live));
+    }
+    let pending = live.iter().filter(|(_, _, a)| !a).count();
+    if pending != s.pending_len {
+        return Err(format!("pending: model {pending} real {}", s.pending_len));
+    }
+    Ok(())
+}
+
+/// Drive the unmutated model with a seeded random walk over its enabled
+/// ops and strict-conformance-replay the whole trace. Used by the
+/// `check::tests` random-walk suite and the `modelcheck` integration
+/// tests.
+pub fn random_walk_conformance(
+    cfg: &ModelCfg,
+    seed: u64,
+    steps: usize,
+) -> Result<Vec<Op>, String> {
+    let mut model = Model::new(cfg.clone(), Mutation::None);
+    let mut rng = Pcg32::new(seed ^ 0x9e37_79b9);
+    let mut trace = Vec::new();
+    for _ in 0..steps {
+        let enabled = model.enabled();
+        if enabled.is_empty() {
+            break;
+        }
+        let op = enabled[rng.gen_range(enabled.len())];
+        model.step(op);
+        trace.push(op);
+    }
+    conformance_replay(cfg, seed, &trace)?;
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::scenario_cfg;
+    use crate::check::Scenario;
+
+    fn walk_many(cfg: &ModelCfg, seeds: u64, steps: usize) {
+        for seed in 0..seeds {
+            if let Err(e) = random_walk_conformance(cfg, seed, steps) {
+                panic!("conformance walk failed (seed {seed}): {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn conformance_drafts_regime() {
+        // group_size = n random sampling: membership-deterministic.
+        let cfg = scenario_cfg(Scenario::Drafts, 3);
+        assert!(membership_deterministic(&cfg));
+        walk_many(&cfg, 25, 40);
+    }
+
+    #[test]
+    fn conformance_gd_pair_regime() {
+        // n=3, group size 2, GB+GD: the division is forced.
+        let cfg = scenario_cfg(Scenario::Faults, 3);
+        assert!(membership_deterministic(&cfg));
+        walk_many(&cfg, 25, 40);
+    }
+
+    #[test]
+    fn conformance_rejoin_regime() {
+        let cfg = scenario_cfg(Scenario::Rejoin, 3);
+        assert!(membership_deterministic(&cfg));
+        walk_many(&cfg, 25, 40);
+    }
+
+    #[test]
+    fn conformance_rendezvous_regime() {
+        let cfg = scenario_cfg(Scenario::Rendezvous, 3);
+        assert!(membership_deterministic(&cfg));
+        walk_many(&cfg, 25, 40);
+    }
+
+    #[test]
+    fn nondeterministic_regime_is_rejected() {
+        // n=4 with group size 2 random sampling: the shuffle matters.
+        let mut cfg = scenario_cfg(Scenario::Drafts, 4);
+        cfg.group_size = 2;
+        assert!(!membership_deterministic(&cfg));
+    }
+
+    #[test]
+    fn tolerant_replay_reports_backend_agreement() {
+        let cfg = scenario_cfg(Scenario::Faults, 3);
+        let ops = [Op::Sync(0), Op::Complete(1), Op::Sync(1), Op::Abort(2)];
+        let replay = replay_against_real(&cfg, 7, &ops).expect("replay");
+        assert_eq!(replay.snapshots.len(), ops.len());
+        assert!(replay.oracle.was_aborted(2));
+        assert!(replay.sharded.was_aborted(2));
+    }
+}

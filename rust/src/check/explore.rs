@@ -1,0 +1,261 @@
+//! The exhaustive schedule explorer.
+//!
+//! Depth-first enumeration of every interleaving of enabled [`Op`]s up to
+//! a depth bound, with two reductions:
+//!
+//! * a **canonical-state hash table**: a state already explored with at
+//!   least as much remaining depth is not re-expanded (the table maps
+//!   `state_hash -> max remaining depth explored`);
+//! * **sleep sets** (Godefroid-style partial-order reduction): once a
+//!   transition `t` has been fully explored from state `s`, siblings
+//!   explored later pass `t` down in their *sleep set* for as long as `t`
+//!   stays independent of the path taken — re-exploring `t` there would
+//!   only reach already-covered interleavings. Independence is checked
+//!   dynamically and conservatively: `a` and `b` are independent at `s`
+//!   only if each stays enabled after the other and the two execution
+//!   orders land in the same state (equal canonical hashes).
+//!
+//! Soundness note for the combination: a state is *inserted* into the
+//! hash table only when visited with an **empty** sleep set (a full
+//! expansion); pruning against the table is then always safe, because the
+//! recorded exploration covered a superset of what any later visit —
+//! whatever its sleep set — would cover. Visits with a non-empty sleep
+//! set recurse without recording. `tests::reduction_reaches_same_leaves`
+//! cross-checks the reduced and unreduced explorations empirically.
+//!
+//! Invariants are checked at *every* visited state. On violation the
+//! explorer returns the path as a counterexample and greedily minimizes
+//! it (drop one op at a time while the violation still reproduces).
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::model::{EngineSemantics, Model, Op, Violation};
+
+/// Exploration statistics (also serialized into `results/CHECK_gg.json`).
+#[derive(Debug, Clone, Default)]
+pub struct ExploreStats {
+    /// States visited (invariant-checked).
+    pub states_explored: u64,
+    /// Revisits pruned by the canonical-state hash table.
+    pub states_deduped: u64,
+    /// Transitions skipped because they were in a sleep set.
+    pub sleep_set_pruned: u64,
+    /// Deepest path length reached.
+    pub max_depth_reached: u32,
+    /// Canonical hashes of every quiescent (no-enabled-ops) state seen.
+    /// Sleep sets reduce *transitions*, never reachable *states*, so on
+    /// a depth that exhausts the space this set must match between the
+    /// reduced and unreduced explorations — the empirical soundness
+    /// cross-check (`tests::reduction_reaches_same_leaves`).
+    pub quiescent_states: BTreeSet<u64>,
+}
+
+/// A violation plus the schedule that reaches it.
+#[derive(Debug, Clone)]
+pub struct Counterexample {
+    pub violation: Violation,
+    /// The schedule as first found.
+    pub trace: Vec<Op>,
+    /// Greedily minimized schedule (still reproduces the violation).
+    pub minimized: Vec<Op>,
+    /// Rendering of the violating state at the end of `minimized`.
+    pub state: String,
+}
+
+impl Counterexample {
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "invariant violated: {}\n  {}\n  trace ({} ops, minimized from {}):\n",
+            self.violation.invariant,
+            self.violation.detail,
+            self.minimized.len(),
+            self.trace.len()
+        ));
+        for (i, op) in self.minimized.iter().enumerate() {
+            out.push_str(&format!("    {:>2}. {}\n", i + 1, op.render()));
+        }
+        out.push_str(&format!("  state: {}\n", self.state));
+        out
+    }
+}
+
+struct Explorer {
+    depth: u32,
+    use_sleep_sets: bool,
+    /// state hash -> max remaining depth already fully expanded with.
+    visited: HashMap<u64, u32>,
+    stats: ExploreStats,
+}
+
+/// Exhaustively explore `initial` to `depth`, checking invariants at
+/// every state. Returns the stats and the first counterexample, if any.
+pub fn explore(initial: &Model, depth: u32) -> (ExploreStats, Option<Counterexample>) {
+    explore_with(initial, depth, true)
+}
+
+/// As [`explore`], optionally disabling the sleep-set reduction (used to
+/// measure the reduction ratio and to cross-validate the reduction).
+pub fn explore_with(
+    initial: &Model,
+    depth: u32,
+    use_sleep_sets: bool,
+) -> (ExploreStats, Option<Counterexample>) {
+    let mut ex = Explorer {
+        depth,
+        use_sleep_sets,
+        visited: HashMap::new(),
+        stats: ExploreStats::default(),
+    };
+    let mut path = Vec::new();
+    let cex = match ex.dfs(initial, depth, &mut path, &[]) {
+        Ok(()) => None,
+        Err(violation) => {
+            let trace = path.clone();
+            let minimized = minimize(initial, &trace);
+            // Re-derive the violation from the minimized trace (greedy
+            // removal may surface the failure through a different — but
+            // still real — invariant).
+            let mut m = initial.clone();
+            let mut violation = violation;
+            for &op in &minimized {
+                m.step(op);
+                if let Err(v) = m.check_invariants() {
+                    violation = v;
+                    break;
+                }
+            }
+            let state = m.render();
+            Some(Counterexample { violation, trace, minimized, state })
+        }
+    };
+    (ex.stats, cex)
+}
+
+impl Explorer {
+    fn dfs(
+        &mut self,
+        s: &Model,
+        depth_left: u32,
+        path: &mut Vec<Op>,
+        sleep: &[Op],
+    ) -> Result<(), Violation> {
+        self.stats.states_explored += 1;
+        let here = self.depth - depth_left;
+        if here > self.stats.max_depth_reached {
+            self.stats.max_depth_reached = here;
+        }
+        s.check_invariants()?;
+        let enabled = s.enabled();
+        if enabled.is_empty() {
+            self.stats.quiescent_states.insert(s.state_hash());
+            // Quiescence. Under sim semantics an armed group always
+            // completes and a pending group always conflicts (invariant
+            // no-lost-wakeup), so quiescence with a live worker still
+            // waiting is a deadlock. Under rendezvous semantics budget
+            // exhaustion can strand a waiter benignly; there the
+            // no-circular-wait invariant is the deadlock detector.
+            if s.cfg.engine == EngineSemantics::Sim && s.any_live_waiting() {
+                return Err(Violation {
+                    invariant: "no-deadlock",
+                    detail: "quiescent state with a live worker still waiting".into(),
+                });
+            }
+            return Ok(());
+        }
+        if depth_left == 0 {
+            return Ok(());
+        }
+        let h = s.state_hash();
+        if let Some(&d) = self.visited.get(&h) {
+            if d >= depth_left {
+                self.stats.states_deduped += 1;
+                return Ok(());
+            }
+        }
+        if sleep.is_empty() {
+            self.visited.insert(h, depth_left);
+        }
+        let mut done: Vec<Op> = Vec::new();
+        for &op in &enabled {
+            if sleep.contains(&op) {
+                self.stats.sleep_set_pruned += 1;
+                continue;
+            }
+            let child = s.child(op);
+            let child_sleep: Vec<Op> = if self.use_sleep_sets {
+                sleep
+                    .iter()
+                    .chain(done.iter())
+                    .copied()
+                    .filter(|&t| independent(s, t, op))
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            path.push(op);
+            self.dfs(&child, depth_left - 1, path, &child_sleep)?;
+            path.pop();
+            if self.use_sleep_sets {
+                done.push(op);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Conservative dynamic independence at `s`: both orders must be
+/// executable and commute to the same canonical state.
+fn independent(s: &Model, a: Op, b: Op) -> bool {
+    if a == b {
+        return false;
+    }
+    let sa = s.child(a);
+    if !sa.enabled().contains(&b) {
+        return false;
+    }
+    let sb = s.child(b);
+    if !sb.enabled().contains(&a) {
+        return false;
+    }
+    sa.child(b).state_hash() == sb.child(a).state_hash()
+}
+
+/// Replay `ops` from `initial`; true if some prefix violates an
+/// invariant (or ends in a sim-semantics stranded-waiter quiescence).
+/// Ops that are not enabled when reached make the candidate invalid.
+pub fn replay_violates(initial: &Model, ops: &[Op]) -> bool {
+    let mut m = initial.clone();
+    for &op in ops {
+        if !m.enabled().contains(&op) {
+            return false;
+        }
+        m.step(op);
+        if m.check_invariants().is_err() {
+            return true;
+        }
+    }
+    m.cfg.engine == EngineSemantics::Sim && m.enabled().is_empty() && m.any_live_waiting()
+}
+
+/// Greedy delta-debugging: repeatedly drop the first single op whose
+/// removal keeps the violation reproducible, until a fixed point.
+pub fn minimize(initial: &Model, trace: &[Op]) -> Vec<Op> {
+    let mut best = trace.to_vec();
+    loop {
+        let mut improved = false;
+        for i in 0..best.len() {
+            let mut cand = best.clone();
+            cand.remove(i);
+            if replay_violates(initial, &cand) {
+                best = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            return best;
+        }
+    }
+}

@@ -1,0 +1,367 @@
+//! Exhaustive protocol model checking for the GG coordination state
+//! machine (`ripples check`).
+//!
+//! The paper's central correctness claim over AD-PSGD is that Partial
+//! All-Reduce plus GG scheduling is *deadlock-free*; `prop_gg` and
+//! `stress_gg` only sample random interleavings of the protocol. This
+//! module proves the claim exhaustively on a bounded instance: a
+//! loom-style schedule explorer ([`explore`]) enumerates **every**
+//! interleaving of an abstracted protocol model ([`model::Model`]) up to
+//! a depth bound, with sleep-set partial-order reduction and a
+//! canonical-state hash table, checking the coordination invariants (no
+//! deadlock, no double grant, no leaked locks, GB FIFO sanity,
+//! aborted-set boundedness, no circular wait) at every visited state.
+//!
+//! Three pillars keep the result meaningful:
+//!
+//! * **Conformance** ([`conform`]): explored traces replay against the
+//!   real [`GroupGenerator`](crate::gg::GroupGenerator), the real
+//!   [`ShardedGg`](crate::gg::ShardedGg), and the RPC dispatch seam
+//!   ([`crate::rpc::ReplayServer`]), diffing full state after every op —
+//!   the model is only trusted because the real code agrees with it.
+//! * **Mutation self-tests** ([`model::Mutation`]): deliberately
+//!   re-broken transition rules (the PR 7 lost wakeup, the rendezvous
+//!   double-draft circular wait, completion without the
+//!   release-then-arm sweep, ...) must each be *caught* with a
+//!   minimized counterexample — proof the harness has teeth. The
+//!   minimized traces are committed as fixtures
+//!   (`rust/tests/fixtures/check/`) and replayed against the real
+//!   backends, which must refuse to reach the bad states.
+//! * **Bounded honesty**: DESIGN.md §Correctness spells out exactly
+//!   what the bounds (ranks, depth, budgets, deterministic sampling) do
+//!   and do not prove.
+
+pub mod conform;
+pub mod explore;
+pub mod model;
+
+pub use conform::{
+    assert_real_invariants, conformance_replay, membership_deterministic,
+    random_walk_conformance, replay_against_real, BackendSnapshot, RealReplay,
+};
+pub use explore::{explore, explore_with, Counterexample, ExploreStats};
+pub use model::{EngineSemantics, Model, ModelCfg, Mutation, Op, Violation};
+
+/// A bounded scenario: which protocol features are live and which fault
+/// budgets are nonzero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Plain §4.1 random drafting, no Group Buffer, simulator
+    /// semantics: the conflict/pending/arm-sweep core.
+    Drafts,
+    /// GB + Global Division with deaths and aborts in the mix (and a
+    /// tiny aborted-set cap so boundedness is observable).
+    Faults,
+    /// GB + GD with a death followed by a checkpoint-restored rejoin.
+    Rejoin,
+    /// Rendezvous-engine semantics (threaded/distributed): groups only
+    /// draft idle workers, members must meet, retires drain — the
+    /// regime where drafting a busy worker would deadlock.
+    Rendezvous,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 4] =
+        [Scenario::Drafts, Scenario::Faults, Scenario::Rejoin, Scenario::Rendezvous];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Drafts => "drafts",
+            Scenario::Faults => "faults",
+            Scenario::Rejoin => "rejoin",
+            Scenario::Rendezvous => "rendezvous",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Scenario::ALL.into_iter().find(|x| x.name() == s)
+    }
+}
+
+/// The bounded model configuration for a scenario at `ranks` workers.
+/// All four stay inside the membership-deterministic regime at `ranks =
+/// 3` so the conformance suite can replay their traces strictly.
+pub fn scenario_cfg(s: Scenario, ranks: usize) -> ModelCfg {
+    let base = ModelCfg {
+        n: ranks,
+        group_size: ranks,
+        use_group_buffer: false,
+        use_global_division: false,
+        rendezvous: false,
+        engine: EngineSemantics::Sim,
+        aborted_cap: 4,
+        syncs_per_worker: 3,
+        max_deaths: 0,
+        max_rejoins: 0,
+        max_aborts: 0,
+        max_retires: 0,
+    };
+    match s {
+        Scenario::Drafts => base,
+        Scenario::Faults => ModelCfg {
+            group_size: 2.min(ranks),
+            use_group_buffer: true,
+            use_global_division: true,
+            aborted_cap: 2,
+            max_deaths: 1,
+            max_aborts: 3,
+            ..base
+        },
+        Scenario::Rejoin => ModelCfg {
+            group_size: 2.min(ranks),
+            use_group_buffer: true,
+            use_global_division: true,
+            max_deaths: 1,
+            max_rejoins: 1,
+            max_aborts: 1,
+            ..base
+        },
+        Scenario::Rendezvous => ModelCfg {
+            use_group_buffer: true,
+            rendezvous: true,
+            engine: EngineSemantics::Rendezvous,
+            max_retires: 2,
+            max_aborts: 1,
+            ..base
+        },
+    }
+}
+
+/// The scenario that makes a given mutation observable (used by the
+/// `--mutation` self-test mode and the fixture generator).
+pub fn mutation_cfg(m: Mutation, ranks: usize) -> ModelCfg {
+    match m {
+        Mutation::None
+        | Mutation::SkipArmSweep
+        | Mutation::DoubleGrant
+        | Mutation::CompleteKeepsLocks => scenario_cfg(Scenario::Drafts, ranks),
+        Mutation::AbortSkipsGbPurge
+        | Mutation::DeathKeepsLocks
+        | Mutation::SkipAbortedPrune => scenario_cfg(Scenario::Faults, ranks),
+        Mutation::DraftBusy => {
+            // The circular wait needs a second disjoint pair, so at
+            // least 4 ranks with pair-sized groups and two retires.
+            let mut cfg = scenario_cfg(Scenario::Rendezvous, ranks.max(4));
+            cfg.group_size = 2;
+            cfg
+        }
+    }
+}
+
+/// One scenario's exploration outcome.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: &'static str,
+    pub ranks: usize,
+    pub depth: u32,
+    pub stats: ExploreStats,
+    /// States visited with the sleep-set reduction disabled (only
+    /// measured when asked — it re-runs the exploration).
+    pub unreduced_states: Option<u64>,
+    pub counterexample: Option<Counterexample>,
+}
+
+/// Explore one scenario. `measure_reduction` re-runs without sleep sets
+/// to report the reduction ratio.
+pub fn run_scenario(
+    s: Scenario,
+    ranks: usize,
+    depth: u32,
+    measure_reduction: bool,
+) -> ScenarioReport {
+    let initial = Model::new(scenario_cfg(s, ranks), Mutation::None);
+    let (stats, counterexample) = explore(&initial, depth);
+    let unreduced_states = measure_reduction
+        .then(|| explore_with(&initial, depth, false).0.states_explored);
+    ScenarioReport {
+        scenario: s.name(),
+        ranks,
+        depth,
+        stats,
+        unreduced_states,
+        counterexample,
+    }
+}
+
+/// Explore a mutated model; the mutation is *expected* to be caught.
+pub fn run_mutation(m: Mutation, ranks: usize, depth: u32) -> ScenarioReport {
+    let cfg = mutation_cfg(m, ranks);
+    let n = cfg.n;
+    let initial = Model::new(cfg, m);
+    let (stats, counterexample) = explore(&initial, depth);
+    ScenarioReport {
+        scenario: m.name(),
+        ranks: n,
+        depth,
+        stats,
+        unreduced_states: None,
+        counterexample,
+    }
+}
+
+/// Serialize scenario reports as the `results/CHECK_gg.json` artifact
+/// (shape-asserted by `rust/tests/modelcheck.rs`).
+pub fn report_json(ranks: usize, depth: u32, reports: &[ScenarioReport]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"id\": \"gg_modelcheck\",\n");
+    out.push_str("  \"generated_by\": \"ripples check\",\n");
+    out.push_str("  \"placeholder\": false,\n");
+    out.push_str(&format!("  \"ranks\": {ranks},\n"));
+    out.push_str(&format!("  \"depth\": {depth},\n"));
+    out.push_str("  \"scenarios\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        let ratio = match r.unreduced_states {
+            Some(u) if r.stats.states_explored > 0 => {
+                format!("{:.3}", u as f64 / r.stats.states_explored as f64)
+            }
+            _ => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"states_explored\": {}, \
+             \"states_deduped\": {}, \"sleep_set_pruned\": {}, \
+             \"max_depth_reached\": {}, \"quiescent_states\": {}, \
+             \"unreduced_states\": {}, \"reduction_ratio\": {}, \
+             \"violations\": {}}}{}\n",
+            r.scenario,
+            r.stats.states_explored,
+            r.stats.states_deduped,
+            r.stats.sleep_set_pruned,
+            r.stats.max_depth_reached,
+            r.stats.quiescent_states.len(),
+            r.unreduced_states.map_or("null".to_string(), |u| u.to_string()),
+            ratio,
+            u32::from(r.counterexample.is_some()),
+            if i + 1 < reports.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::explore::replay_violates;
+    use super::*;
+
+    /// Every unmutated scenario explores clean at a modest bound (the
+    /// release-mode `make modelcheck` run goes deeper).
+    #[test]
+    fn scenarios_have_no_violations() {
+        for s in Scenario::ALL {
+            let depth = match s {
+                Scenario::Drafts | Scenario::Rendezvous => 12,
+                Scenario::Faults | Scenario::Rejoin => 10,
+            };
+            let r = run_scenario(s, 3, depth, false);
+            assert!(
+                r.counterexample.is_none(),
+                "scenario {} violated:\n{}",
+                s.name(),
+                r.counterexample.unwrap().render()
+            );
+            assert!(r.stats.states_explored > 10, "scenario {} too small", s.name());
+        }
+    }
+
+    /// Every deliberately broken transition rule is caught, with a
+    /// minimized counterexample that still replays to the violation.
+    #[test]
+    fn every_mutation_is_caught() {
+        for m in Mutation::ALL {
+            let r = run_mutation(m, 3, 14);
+            let cex = r.counterexample.unwrap_or_else(|| {
+                panic!("mutation {} was NOT caught — the checker has no teeth", m.name())
+            });
+            assert!(!cex.minimized.is_empty(), "mutation {}: empty trace", m.name());
+            assert!(
+                cex.minimized.len() <= cex.trace.len(),
+                "mutation {}: minimizer grew the trace",
+                m.name()
+            );
+            let initial = Model::new(mutation_cfg(m, 3), m);
+            assert!(
+                replay_violates(&initial, &cex.minimized),
+                "mutation {}: minimized trace does not replay",
+                m.name()
+            );
+        }
+    }
+
+    /// Mutations are caught with and without the sleep-set reduction —
+    /// the reduction must not hide bugs.
+    #[test]
+    fn mutations_caught_without_reduction_too() {
+        for m in Mutation::ALL {
+            let initial = Model::new(mutation_cfg(m, 3), m);
+            let (_, cex) = explore_with(&initial, 14, false);
+            assert!(cex.is_some(), "mutation {} missed without reduction", m.name());
+        }
+    }
+
+    /// Empirical soundness of sleep sets + state caching: on a depth
+    /// that exhausts the space (max path length < bound), the reduced
+    /// and unreduced explorations must reach exactly the same quiescent
+    /// states — sleep sets reduce transitions, never reachable states.
+    #[test]
+    fn reduction_reaches_same_leaves() {
+        let mut cfg = scenario_cfg(Scenario::Drafts, 2);
+        cfg.syncs_per_worker = 2;
+        let initial = Model::new(cfg, Mutation::None);
+        let (reduced, c1) = explore_with(&initial, 16, true);
+        let (full, c2) = explore_with(&initial, 16, false);
+        assert!(c1.is_none() && c2.is_none());
+        // Exhaustive: no path ran into the depth bound.
+        assert!(reduced.max_depth_reached < 16);
+        assert!(full.max_depth_reached < 16);
+        assert_eq!(reduced.quiescent_states, full.quiescent_states);
+        assert!(reduced.states_explored <= full.states_explored);
+        assert!(reduced.sleep_set_pruned > 0, "reduction never fired");
+    }
+
+    /// The minimized lost-wakeup counterexample is exactly the textbook
+    /// three-op schedule.
+    #[test]
+    fn lost_wakeup_minimizes_to_three_ops() {
+        let r = run_mutation(Mutation::SkipArmSweep, 3, 14);
+        let cex = r.counterexample.expect("caught");
+        assert_eq!(cex.minimized.len(), 3, "trace: {:?}", cex.minimized);
+        assert!(
+            matches!(cex.minimized.last(), Some(Op::Complete(_))),
+            "lost wakeup must end in a complete: {:?}",
+            cex.minimized
+        );
+    }
+
+    #[test]
+    fn double_grant_minimizes_to_two_syncs() {
+        let r = run_mutation(Mutation::DoubleGrant, 3, 14);
+        let cex = r.counterexample.expect("caught");
+        assert_eq!(cex.minimized.len(), 2, "trace: {:?}", cex.minimized);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = run_scenario(Scenario::Drafts, 3, 8, true);
+        let json = report_json(3, 8, &[r]);
+        let parsed = crate::util::json::parse(&json).expect("valid JSON");
+        assert_eq!(parsed.get("id").and_then(|v| v.as_str()), Some("gg_modelcheck"));
+        let scenarios = parsed.get("scenarios").and_then(|v| v.as_arr()).expect("arr");
+        assert_eq!(scenarios.len(), 1);
+        let s0 = &scenarios[0];
+        assert_eq!(s0.get("scenario").and_then(|v| v.as_str()), Some("drafts"));
+        assert_eq!(s0.get("violations").and_then(|v| v.as_usize()), Some(0));
+        assert!(s0.get("states_explored").and_then(|v| v.as_usize()).unwrap_or(0) > 0);
+        assert!(s0.get("reduction_ratio").is_some());
+    }
+
+    /// Exhausting a scenario and then replaying a model-generated trace
+    /// through the real backends end-to-end (the acceptance path).
+    #[test]
+    fn explored_scenario_traces_replay_strictly() {
+        let cfg = scenario_cfg(Scenario::Faults, 3);
+        for seed in 0..10 {
+            conform::random_walk_conformance(&cfg, seed, 30)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+}

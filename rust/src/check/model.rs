@@ -1,0 +1,935 @@
+//! The abstracted protocol model the checker explores.
+//!
+//! [`Model`] is a small-step operational model of the whole coordination
+//! system: the Group Generator's observable state (lock vector, pending
+//! FIFO, live group table, per-worker Group Buffers, retired/dead flags,
+//! bounded aborted set — mirroring `gg/mod.rs` + `gg/lockvec.rs`) *plus*
+//! one automaton per participant (worker sync/complete/retire, death,
+//! abort, rejoin, Group Buffer hit, rendezvous draft). Every [`Op`] is an
+//! atomic transition, exactly as every `GroupGenerator` method runs under
+//! one lock hold in both real backends — so interleavings of `Op`s are
+//! precisely the schedules the real coordinator can observe.
+//!
+//! Two deliberate abstractions (see DESIGN.md §Correctness for the full
+//! model ↔ implementation mapping):
+//!
+//! * **Sampling is deterministic.** Where the real GG shuffles
+//!   (`vec_partition`) or samples (`random_group`), the model drafts the
+//!   lowest-ranked candidates. The conformance replayer
+//!   ([`crate::check::conform`]) therefore only drives configurations in
+//!   the *membership-deterministic regime* (group size ≥ n, or Global
+//!   Division with n ≤ 3 and group size 2), where the real RNG cannot
+//!   influence which members a group gets — there the model and both real
+//!   backends must agree exactly.
+//! * **Budgets bound the run.** Each worker has a finite sync budget and
+//!   each fault class a finite count, so the reachable state space is
+//!   finite and the explorer can exhaust it.
+//!
+//! [`Mutation`] re-breaks one transition rule at a time (the PR 7
+//! lost-wakeup, the rendezvous double-draft circular wait, completion
+//! without the release-then-arm sweep, ...). The checker must catch every
+//! mutation — that is the self-test proving the harness has teeth.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::hash::{Hash, Hasher};
+
+use crate::gg::GroupId;
+
+/// A deliberately re-broken transition rule. `Mutation::None` is the
+/// faithful model; every other variant must be *caught* by the explorer
+/// (`check --mutation <name>` and the `check::tests` self-tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Mutation {
+    /// Faithful transition rules.
+    #[default]
+    None,
+    /// Completion releases locks but skips the release-then-arm sweep —
+    /// the classic lost wakeup: a pending group stays pending although
+    /// nothing holds its locks any more.
+    SkipArmSweep,
+    /// `try_lock` ignores conflicts: a new group arms even when a member
+    /// is already locked by another armed group (double grant).
+    DoubleGrant,
+    /// Completion removes the group but keeps its lock bits set (leaked
+    /// locks).
+    CompleteKeepsLocks,
+    /// Group generation drops the idleness restriction and drafts busy
+    /// workers — the rendezvous double-draft race: a fresh group can arm
+    /// while a member is stuck at a *pending* front group, a circular
+    /// wait (PR 7's threaded-runtime bug class).
+    DraftBusy,
+    /// Abort tears the group down but does not purge it from member
+    /// Group Buffers (dangling GB entries).
+    AbortSkipsGbPurge,
+    /// A death declaration marks the rank dead but skips the group
+    /// teardown and the force-release guard — the dead rank keeps its
+    /// locks and stays named by live groups.
+    DeathKeepsLocks,
+    /// `note_aborted` never prunes: the aborted-id memory grows past
+    /// [`crate::gg::ABORTED_SET_CAP`]'s model analogue.
+    SkipAbortedPrune,
+}
+
+impl Mutation {
+    /// Every broken variant (the self-test sweep).
+    pub const ALL: [Mutation; 7] = [
+        Mutation::SkipArmSweep,
+        Mutation::DoubleGrant,
+        Mutation::CompleteKeepsLocks,
+        Mutation::DraftBusy,
+        Mutation::AbortSkipsGbPurge,
+        Mutation::DeathKeepsLocks,
+        Mutation::SkipAbortedPrune,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mutation::None => "none",
+            Mutation::SkipArmSweep => "skip-arm-sweep",
+            Mutation::DoubleGrant => "double-grant",
+            Mutation::CompleteKeepsLocks => "complete-keeps-locks",
+            Mutation::DraftBusy => "draft-busy",
+            Mutation::AbortSkipsGbPurge => "abort-skips-gb-purge",
+            Mutation::DeathKeepsLocks => "death-keeps-locks",
+            Mutation::SkipAbortedPrune => "skip-aborted-prune",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        let mut all = vec![Mutation::None];
+        all.extend(Mutation::ALL);
+        all.into_iter().find(|m| m.name() == s)
+    }
+}
+
+/// How the engine driving the GG behaves — the worker automata differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineSemantics {
+    /// Simulator semantics (§4.1): an armed group's collective always
+    /// runs to completion — members need not rendezvous, conflicts just
+    /// queue at the GG.
+    Sim,
+    /// Collective-rendezvous semantics (threaded/distributed runtimes):
+    /// a group completes only once every member has arrived at it — the
+    /// semantics under which drafting busy workers deadlocks.
+    Rendezvous,
+}
+
+/// Model configuration: the GG policy knobs that matter to coordination,
+/// plus the exploration budgets.
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub n: usize,
+    pub group_size: usize,
+    pub use_group_buffer: bool,
+    pub use_global_division: bool,
+    /// GG-side idle restriction for freshly sampled random groups
+    /// (`GgConfig::rendezvous`).
+    pub rendezvous: bool,
+    pub engine: EngineSemantics,
+    /// Model analogue of [`crate::gg::ABORTED_SET_CAP`], kept small so
+    /// boundedness is observable within the depth bound.
+    pub aborted_cap: usize,
+    /// Per-worker sync budget.
+    pub syncs_per_worker: u32,
+    pub max_deaths: u32,
+    pub max_rejoins: u32,
+    pub max_aborts: u32,
+    pub max_retires: u32,
+}
+
+/// One atomic transition of the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Worker reaches its sync point and calls the GG (`request`).
+    Sync(usize),
+    /// The leader of an armed group reports its P-Reduce finished.
+    Complete(GroupId),
+    /// A worker observes that the group it waited on is gone
+    /// (completed or aborted) and goes back to computing.
+    Resume(usize),
+    /// Failure detection declares the rank dead (`declare_dead`) —
+    /// also the liveness-accusation path.
+    Die(usize),
+    /// A checkpoint-restored replacement re-registers the rank.
+    Rejoin(usize),
+    /// A ring survivor reports the group's collective broke
+    /// (`abort_group`).
+    Abort(GroupId),
+    /// Graceful departure (`retire`).
+    Retire(usize),
+}
+
+impl Op {
+    /// Render as one fixture-file line (see `rust/tests/fixtures/check/`).
+    pub fn render(self) -> String {
+        match self {
+            Op::Sync(w) => format!("sync {w}"),
+            Op::Complete(g) => format!("complete {g}"),
+            Op::Resume(w) => format!("resume {w}"),
+            Op::Die(w) => format!("die {w}"),
+            Op::Rejoin(w) => format!("rejoin {w}"),
+            Op::Abort(g) => format!("abort {g}"),
+            Op::Retire(w) => format!("retire {w}"),
+        }
+    }
+
+    /// Parse one fixture-file line (inverse of [`Op::render`]).
+    pub fn parse(line: &str) -> Option<Self> {
+        let (kind, arg) = line.trim().split_once(' ')?;
+        let arg = arg.trim();
+        Some(match kind {
+            "sync" => Op::Sync(arg.parse().ok()?),
+            "complete" => Op::Complete(arg.parse().ok()?),
+            "resume" => Op::Resume(arg.parse().ok()?),
+            "die" => Op::Die(arg.parse().ok()?),
+            "rejoin" => Op::Rejoin(arg.parse().ok()?),
+            "abort" => Op::Abort(arg.parse().ok()?),
+            "retire" => Op::Retire(arg.parse().ok()?),
+            _ => return None,
+        })
+    }
+}
+
+/// Where a worker automaton stands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkerPhase {
+    /// Computing locally; may sync while budget remains.
+    Idle,
+    /// Synced and waiting on its assigned group.
+    Waiting(GroupId),
+}
+
+/// What one [`Op`] did — the conformance replayer diffs this against the
+/// real backends' return values.
+#[derive(Debug, Clone, Default)]
+pub struct StepEffect {
+    /// Group assigned to the syncing worker (Sync only).
+    pub assigned: Option<GroupId>,
+    /// Groups that acquired their locks as a result of this op.
+    pub newly_armed: Vec<GroupId>,
+}
+
+/// An invariant violation: which invariant, and a human-readable detail.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+/// The full system state (coordinator + worker automata + budgets).
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub cfg: ModelCfg,
+    pub mutation: Mutation,
+    locks: Vec<bool>,
+    pending: VecDeque<GroupId>,
+    /// id -> (sorted members, armed)
+    groups: BTreeMap<GroupId, (Vec<usize>, bool)>,
+    gb: Vec<VecDeque<GroupId>>,
+    retired: Vec<bool>,
+    dead: Vec<bool>,
+    aborted: BTreeSet<GroupId>,
+    next_id: GroupId,
+    phase: Vec<WorkerPhase>,
+    syncs_left: Vec<u32>,
+    deaths_left: u32,
+    rejoins_left: u32,
+    aborts_left: u32,
+    retires_left: u32,
+}
+
+impl Hash for Model {
+    fn hash<H: Hasher>(&self, h: &mut H) {
+        // cfg and mutation are constant across a run: not hashed.
+        self.locks.hash(h);
+        self.pending.hash(h);
+        self.groups.hash(h);
+        self.gb.hash(h);
+        self.retired.hash(h);
+        self.dead.hash(h);
+        self.aborted.hash(h);
+        self.next_id.hash(h);
+        self.phase.hash(h);
+        self.syncs_left.hash(h);
+        self.deaths_left.hash(h);
+        self.rejoins_left.hash(h);
+        self.aborts_left.hash(h);
+        self.retires_left.hash(h);
+    }
+}
+
+impl Model {
+    pub fn new(cfg: ModelCfg, mutation: Mutation) -> Self {
+        assert!(cfg.group_size >= 2 && cfg.group_size <= cfg.n);
+        let n = cfg.n;
+        let syncs = cfg.syncs_per_worker;
+        Self {
+            mutation,
+            locks: vec![false; n],
+            pending: VecDeque::new(),
+            groups: BTreeMap::new(),
+            gb: vec![VecDeque::new(); n],
+            retired: vec![false; n],
+            dead: vec![false; n],
+            aborted: BTreeSet::new(),
+            next_id: 1,
+            phase: vec![WorkerPhase::Idle; n],
+            syncs_left: vec![syncs; n],
+            deaths_left: cfg.max_deaths,
+            rejoins_left: cfg.max_rejoins,
+            aborts_left: cfg.max_aborts,
+            retires_left: cfg.max_retires,
+            cfg,
+        }
+    }
+
+    /// Deterministic 64-bit canonical-state hash (std `DefaultHasher`
+    /// with its fixed keys — stable across runs, unlike `RandomState`).
+    pub fn state_hash(&self) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        h.finish()
+    }
+
+    pub fn phase_of(&self, w: usize) -> WorkerPhase {
+        self.phase[w]
+    }
+
+    pub fn live_groups(&self) -> &BTreeMap<GroupId, (Vec<usize>, bool)> {
+        &self.groups
+    }
+
+    pub fn gb_snapshot(&self, w: usize) -> Vec<GroupId> {
+        self.gb[w].iter().copied().collect()
+    }
+
+    pub fn is_locked(&self, w: usize) -> bool {
+        self.locks[w]
+    }
+
+    pub fn is_retired(&self, w: usize) -> bool {
+        self.retired[w]
+    }
+
+    pub fn is_dead(&self, w: usize) -> bool {
+        self.dead[w]
+    }
+
+    pub fn was_aborted(&self, id: GroupId) -> bool {
+        self.aborted.contains(&id)
+    }
+
+    /// A live (non-dead) worker still waiting on a group.
+    pub fn any_live_waiting(&self) -> bool {
+        (0..self.cfg.n)
+            .any(|w| !self.dead[w] && matches!(self.phase[w], WorkerPhase::Waiting(_)))
+    }
+
+    // ------------------------------------------------------------------
+    // enabled transitions
+    // ------------------------------------------------------------------
+
+    /// All transitions enabled in this state, in a deterministic order.
+    pub fn enabled(&self) -> Vec<Op> {
+        let mut ops = Vec::new();
+        for w in 0..self.cfg.n {
+            if self.dead[w] {
+                continue;
+            }
+            match self.phase[w] {
+                WorkerPhase::Idle => {
+                    if self.syncs_left[w] > 0 {
+                        ops.push(Op::Sync(w));
+                    }
+                }
+                WorkerPhase::Waiting(g) => {
+                    if !self.groups.contains_key(&g) {
+                        ops.push(Op::Resume(w));
+                    }
+                }
+            }
+        }
+        for (&g, (members, armed)) in &self.groups {
+            if *armed {
+                let can = match self.cfg.engine {
+                    EngineSemantics::Sim => true,
+                    EngineSemantics::Rendezvous => members.iter().all(|&m| {
+                        self.dead[m] || self.phase[m] == WorkerPhase::Waiting(g)
+                    }),
+                };
+                if can {
+                    ops.push(Op::Complete(g));
+                }
+            }
+            if self.aborts_left > 0 {
+                ops.push(Op::Abort(g));
+            }
+        }
+        for w in 0..self.cfg.n {
+            if self.deaths_left > 0 && !self.dead[w] {
+                ops.push(Op::Die(w));
+            }
+            if self.rejoins_left > 0 && self.dead[w] {
+                ops.push(Op::Rejoin(w));
+            }
+            if self.retires_left > 0 && !self.retired[w] && !self.dead[w] {
+                ops.push(Op::Retire(w));
+            }
+        }
+        ops
+    }
+
+    /// Successor state under `op` (must be enabled).
+    pub fn child(&self, op: Op) -> Model {
+        let mut m = self.clone();
+        m.step(op);
+        m
+    }
+
+    // ------------------------------------------------------------------
+    // transition effects (each mirrors one GroupGenerator entry point)
+    // ------------------------------------------------------------------
+
+    /// Apply one enabled transition in place; returns what it did.
+    pub fn step(&mut self, op: Op) -> StepEffect {
+        match op {
+            Op::Sync(w) => self.step_sync(w),
+            Op::Complete(g) => self.step_complete(g),
+            Op::Resume(w) => {
+                self.phase[w] = WorkerPhase::Idle;
+                StepEffect::default()
+            }
+            Op::Die(w) => {
+                self.deaths_left -= 1;
+                self.declare_dead_inner(w)
+            }
+            Op::Rejoin(w) => {
+                self.rejoins_left -= 1;
+                let eff = self.declare_dead_inner(w);
+                self.dead[w] = false;
+                self.retired[w] = false;
+                eff
+            }
+            Op::Abort(g) => {
+                self.aborts_left -= 1;
+                let (members, was_armed) = self.teardown(g);
+                let newly_armed =
+                    if was_armed { self.arm_unblocked(&members) } else { Vec::new() };
+                StepEffect { assigned: None, newly_armed }
+            }
+            Op::Retire(w) => {
+                self.retires_left -= 1;
+                self.retired[w] = true;
+                StepEffect::default()
+            }
+        }
+    }
+
+    /// Mirrors `GroupGenerator::request` (GB hit first, retired skip,
+    /// then division / random sampling, then group creation).
+    fn step_sync(&mut self, w: usize) -> StepEffect {
+        self.syncs_left[w] -= 1;
+        if self.cfg.use_group_buffer {
+            if let Some(&front) = self.gb[w].front() {
+                self.phase[w] = WorkerPhase::Waiting(front);
+                return StepEffect { assigned: Some(front), newly_armed: Vec::new() };
+            }
+        }
+        if self.retired[w] {
+            return StepEffect::default(); // drained and departed: skip
+        }
+        let member_lists = if self.cfg.use_global_division {
+            self.division(w)
+        } else {
+            match self.random_group(w) {
+                Some(g) => vec![g],
+                None => Vec::new(),
+            }
+        };
+        let mut eff = StepEffect::default();
+        for members in member_lists {
+            let contains_w = members.contains(&w);
+            let (id, armed) = self.create_group(members);
+            if armed {
+                eff.newly_armed.push(id);
+            }
+            if contains_w && eff.assigned.is_none() {
+                eff.assigned = Some(id);
+            }
+        }
+        if let Some(id) = eff.assigned {
+            self.phase[w] = WorkerPhase::Waiting(id);
+        }
+        eff
+    }
+
+    /// Mirrors `global_division` with the sampling abstracted to a
+    /// deterministic chunking of the sorted idle list (`vec_partition`
+    /// without the shuffle — identical membership in the
+    /// membership-deterministic regime the conformance replayer uses).
+    fn division(&self, w: usize) -> Vec<Vec<usize>> {
+        let idle: Vec<usize> = (0..self.cfg.n)
+            .filter(|&x| {
+                if x == w {
+                    return true;
+                }
+                if self.retired[x] {
+                    return false;
+                }
+                if self.mutation == Mutation::DraftBusy {
+                    return true; // broken rule: idleness ignored
+                }
+                let buffer_free = !self.cfg.use_group_buffer || self.gb[x].is_empty();
+                buffer_free && !self.locks[x]
+            })
+            .collect();
+        if idle.len() < 2 {
+            return Vec::new(); // nobody idle to pair with: skip
+        }
+        let k = self.cfg.group_size;
+        let mut out: Vec<Vec<usize>> = idle.chunks(k).map(<[usize]>::to_vec).collect();
+        if out.len() >= 2 && out.last().is_some_and(|g| g.len() == 1) {
+            let last = out.pop().unwrap_or_default();
+            if let Some(prev) = out.last_mut() {
+                prev.extend(last);
+            }
+        }
+        out.retain(|g| g.len() >= 2);
+        out
+    }
+
+    /// Mirrors `random_group` with the partial shuffle abstracted to
+    /// "draft the lowest-ranked candidates".
+    fn random_group(&self, w: usize) -> Option<Vec<usize>> {
+        let others: Vec<usize> = (0..self.cfg.n)
+            .filter(|&x| {
+                x != w
+                    && !self.retired[x]
+                    && (!self.cfg.rendezvous
+                        || self.mutation == Mutation::DraftBusy
+                        || (self.gb[x].is_empty() && !self.locks[x]))
+            })
+            .collect();
+        if others.is_empty() {
+            return None;
+        }
+        let k = self.cfg.group_size.min(others.len() + 1);
+        let mut members = vec![w];
+        members.extend(others.into_iter().take(k - 1));
+        Some(members)
+    }
+
+    /// Mirrors `create_group`: sorted members, GB push, try_lock else
+    /// pend. Returns `(id, armed)`.
+    fn create_group(&mut self, mut members: Vec<usize>) -> (GroupId, bool) {
+        members.sort_unstable();
+        members.dedup();
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.cfg.use_group_buffer {
+            for &m in &members {
+                self.gb[m].push_back(id);
+            }
+        }
+        let conflict = members.iter().any(|&m| self.locks[m]);
+        let armed = !conflict || self.mutation == Mutation::DoubleGrant;
+        if armed {
+            for &m in &members {
+                self.locks[m] = true;
+            }
+        } else {
+            self.pending.push_back(id);
+        }
+        self.groups.insert(id, (members, armed));
+        (id, armed)
+    }
+
+    /// Mirrors `GroupGenerator::complete` (release, GB pop-front-else-
+    /// purge, release-then-arm sweep).
+    fn step_complete(&mut self, g: GroupId) -> StepEffect {
+        let Some((members, _)) = self.groups.remove(&g) else {
+            return StepEffect::default(); // idempotent on unknown ids
+        };
+        if self.mutation != Mutation::CompleteKeepsLocks {
+            for &m in &members {
+                self.locks[m] = false;
+            }
+        }
+        if self.cfg.use_group_buffer {
+            for &m in &members {
+                if self.gb[m].front() == Some(&g) {
+                    self.gb[m].pop_front();
+                } else {
+                    self.gb[m].retain(|&x| x != g);
+                }
+            }
+        }
+        let newly_armed = if self.mutation == Mutation::SkipArmSweep {
+            Vec::new() // broken rule: the lost wakeup
+        } else {
+            self.arm_unblocked(&members)
+        };
+        StepEffect { assigned: None, newly_armed }
+    }
+
+    /// Mirrors `arm_unblocked`: FIFO sweep with the touched-set skip.
+    fn arm_unblocked(&mut self, released: &[usize]) -> Vec<GroupId> {
+        let mut armed = Vec::new();
+        let mut still = VecDeque::new();
+        while let Some(pid) = self.pending.pop_front() {
+            let members = match self.groups.get(&pid) {
+                Some((m, _)) => m.clone(),
+                None => continue,
+            };
+            let touched = members.iter().any(|m| released.contains(m));
+            let free = !members.iter().any(|&m| self.locks[m]);
+            if touched && free {
+                for &m in &members {
+                    self.locks[m] = true;
+                }
+                if let Some(e) = self.groups.get_mut(&pid) {
+                    e.1 = true;
+                }
+                armed.push(pid);
+            } else {
+                still.push_back(pid);
+            }
+        }
+        self.pending = still;
+        armed
+    }
+
+    /// Mirrors `teardown_group`: note aborted, GB purge, pending-drop or
+    /// lock release. Returns `(members, was_armed)`.
+    fn teardown(&mut self, g: GroupId) -> (Vec<usize>, bool) {
+        let Some((members, armed)) = self.groups.remove(&g) else {
+            return (Vec::new(), false);
+        };
+        self.note_aborted(g);
+        if self.cfg.use_group_buffer && self.mutation != Mutation::AbortSkipsGbPurge {
+            for &m in &members {
+                self.gb[m].retain(|&x| x != g);
+            }
+        }
+        if !armed {
+            self.pending.retain(|&p| p != g);
+            return (members, false); // pending groups hold no locks
+        }
+        for &m in &members {
+            self.locks[m] = false;
+        }
+        (members, true)
+    }
+
+    /// Mirrors `note_aborted`'s bounded memory.
+    fn note_aborted(&mut self, g: GroupId) {
+        self.aborted.insert(g);
+        if self.mutation == Mutation::SkipAbortedPrune {
+            return; // broken rule: unbounded growth
+        }
+        if self.aborted.len() > self.cfg.aborted_cap {
+            let min_keep = self.next_id.saturating_sub(self.cfg.aborted_cap as u64);
+            self.aborted.retain(|&x| x >= min_keep);
+        }
+    }
+
+    /// Mirrors `declare_dead`: flags, GB clear, batched teardown of every
+    /// group naming the rank, ONE arm sweep, then the force-release
+    /// guard.
+    fn declare_dead_inner(&mut self, w: usize) -> StepEffect {
+        if self.dead[w] {
+            return StepEffect::default(); // idempotent
+        }
+        self.dead[w] = true;
+        self.retired[w] = true;
+        self.phase[w] = WorkerPhase::Idle; // its process is gone
+        self.gb[w].clear();
+        if self.mutation == Mutation::DeathKeepsLocks {
+            return StepEffect::default(); // broken rule: no purge at all
+        }
+        let doomed: Vec<GroupId> = self
+            .groups
+            .iter()
+            .filter(|(_, (m, _))| m.contains(&w))
+            .map(|(&id, _)| id)
+            .collect(); // BTreeMap: already sorted (deterministic teardown order)
+        let mut released: Vec<usize> = Vec::new();
+        for id in doomed {
+            let (members, was_armed) = self.teardown(id);
+            if was_armed {
+                released.extend(members);
+            }
+        }
+        let newly_armed =
+            if released.is_empty() { Vec::new() } else { self.arm_unblocked(&released) };
+        self.locks[w] = false; // force_release (a no-op when invariants hold)
+        StepEffect { assigned: None, newly_armed }
+    }
+
+    // ------------------------------------------------------------------
+    // invariants
+    // ------------------------------------------------------------------
+
+    /// Check every state invariant; `Err` carries which one broke.
+    ///
+    /// The invariants (DESIGN.md §Correctness):
+    /// 1. no double grant — each rank is a member of at most one armed
+    ///    group;
+    /// 2. lock-bit consistency — a rank's lock bit is set iff an armed
+    ///    group names it (leaked locks show up here);
+    /// 3. no lost wakeup — every pending group conflicts with some armed
+    ///    group (a pending group whose locks are all free was forgotten
+    ///    by an arm sweep and will never arm);
+    /// 4. GB sanity — per-worker Group Buffer ids are strictly
+    ///    increasing, live, and name the worker;
+    /// 5. death hygiene — a dead rank holds no lock, has an empty GB,
+    ///    and is named by no live group;
+    /// 6. aborted-set boundedness — the remembered aborted ids never
+    ///    exceed the cap;
+    /// 7. no circular wait (rendezvous engines) — the wait-for graph
+    ///    over groups (armed group -> a member's GB-front group; pending
+    ///    group -> armed lock holders) is acyclic.
+    pub fn check_invariants(&self) -> Result<(), Violation> {
+        let n = self.cfg.n;
+        // 1 + 2: armed-membership counts vs lock bits
+        let mut armed_count = vec![0usize; n];
+        for (id, (members, armed)) in &self.groups {
+            if *armed {
+                for &m in members {
+                    armed_count[m] += 1;
+                    if armed_count[m] > 1 {
+                        return Err(Violation {
+                            invariant: "no-double-grant",
+                            detail: format!(
+                                "rank {m} is a member of two armed groups (second: g{id})"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        for w in 0..n {
+            if self.locks[w] != (armed_count[w] == 1) {
+                return Err(Violation {
+                    invariant: "lock-consistency",
+                    detail: format!(
+                        "rank {w}: lock bit {} but {} armed memberships",
+                        self.locks[w], armed_count[w]
+                    ),
+                });
+            }
+        }
+        // 3: pending groups must be blocked by someone
+        for &pid in &self.pending {
+            let Some((members, armed)) = self.groups.get(&pid) else {
+                return Err(Violation {
+                    invariant: "pending-live",
+                    detail: format!("pending id g{pid} is not a live group"),
+                });
+            };
+            if *armed {
+                return Err(Violation {
+                    invariant: "pending-live",
+                    detail: format!("pending id g{pid} is marked armed"),
+                });
+            }
+            if !members.iter().any(|&m| self.locks[m]) {
+                return Err(Violation {
+                    invariant: "no-lost-wakeup",
+                    detail: format!(
+                        "pending g{pid} {members:?} holds no conflict — it was \
+                         never armed by a release-then-arm sweep"
+                    ),
+                });
+            }
+        }
+        // every live !armed group must be queued
+        for (id, (_, armed)) in &self.groups {
+            if !*armed && !self.pending.contains(id) {
+                return Err(Violation {
+                    invariant: "pending-live",
+                    detail: format!("unarmed live g{id} missing from the pending queue"),
+                });
+            }
+        }
+        // 4: GB sanity
+        for w in 0..n {
+            let mut prev = 0;
+            for &g in &self.gb[w] {
+                if g <= prev {
+                    return Err(Violation {
+                        invariant: "gb-fifo",
+                        detail: format!("worker {w} GB not strictly increasing at g{g}"),
+                    });
+                }
+                prev = g;
+                match self.groups.get(&g) {
+                    None => {
+                        return Err(Violation {
+                            invariant: "gb-live",
+                            detail: format!(
+                                "worker {w} GB holds g{g} which is not live \
+                                 (stale entry after an abort/death purge)"
+                            ),
+                        })
+                    }
+                    Some((members, _)) if !members.contains(&w) => {
+                        return Err(Violation {
+                            invariant: "gb-live",
+                            detail: format!("worker {w} GB holds g{g} which omits it"),
+                        })
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+        // 5: death hygiene
+        for w in 0..n {
+            if !self.dead[w] {
+                continue;
+            }
+            if self.locks[w] {
+                return Err(Violation {
+                    invariant: "dead-unlocked",
+                    detail: format!("dead rank {w} still holds a lock bit"),
+                });
+            }
+            if !self.gb[w].is_empty() {
+                return Err(Violation {
+                    invariant: "dead-unlocked",
+                    detail: format!("dead rank {w} has a non-empty GB"),
+                });
+            }
+            for (id, (members, _)) in &self.groups {
+                if members.contains(&w) {
+                    return Err(Violation {
+                        invariant: "dead-unlocked",
+                        detail: format!("dead rank {w} is named by live g{id}"),
+                    });
+                }
+            }
+        }
+        // 6: aborted-set boundedness
+        if self.aborted.len() > self.cfg.aborted_cap {
+            return Err(Violation {
+                invariant: "aborted-bounded",
+                detail: format!(
+                    "aborted-id memory holds {} ids, cap {}",
+                    self.aborted.len(),
+                    self.cfg.aborted_cap
+                ),
+            });
+        }
+        // 7: no circular wait (rendezvous engines only — under sim
+        // semantics armed groups always complete, so the graph is
+        // trivially acyclic: pending -> armed and armed has no edges)
+        if self.cfg.engine == EngineSemantics::Rendezvous {
+            self.check_wait_graph()?;
+        }
+        Ok(())
+    }
+
+    /// Cycle detection over the wait-for graph: an *armed* group waits
+    /// for each member to arrive, and a member stuck at a different
+    /// GB-front group delays it (edge armed -> front); a *pending* group
+    /// waits for the armed groups holding its locks (edge pending ->
+    /// holder). A cycle is a rendezvous deadlock.
+    fn check_wait_graph(&self) -> Result<(), Violation> {
+        // armed holder of each locked rank
+        let mut holder: BTreeMap<usize, GroupId> = BTreeMap::new();
+        for (&id, (members, armed)) in &self.groups {
+            if *armed {
+                for &m in members {
+                    holder.insert(m, id);
+                }
+            }
+        }
+        let mut edges: BTreeMap<GroupId, Vec<GroupId>> = BTreeMap::new();
+        for (&id, (members, armed)) in &self.groups {
+            let e = edges.entry(id).or_default();
+            if *armed {
+                for &m in members {
+                    if self.dead[m] {
+                        continue;
+                    }
+                    if let Some(&front) = self.gb[m].front() {
+                        if front != id {
+                            e.push(front);
+                        }
+                    }
+                }
+            } else {
+                for &m in members {
+                    if let Some(&h) = holder.get(&m) {
+                        e.push(h);
+                    }
+                }
+            }
+        }
+        // iterative DFS 3-coloring
+        let mut color: BTreeMap<GroupId, u8> = BTreeMap::new(); // 1=open, 2=done
+        for &start in self.groups.keys() {
+            if color.contains_key(&start) {
+                continue;
+            }
+            let mut stack = vec![(start, 0usize)];
+            color.insert(start, 1);
+            while let Some(frame) = stack.last_mut() {
+                let (node, next) = (frame.0, frame.1);
+                let succ = edges.get(&node).map(Vec::as_slice).unwrap_or(&[]);
+                if next < succ.len() {
+                    frame.1 += 1;
+                    let s = succ[next];
+                    match color.get(&s) {
+                        Some(1) => {
+                            return Err(Violation {
+                                invariant: "no-circular-wait",
+                                detail: format!(
+                                    "wait-for cycle through g{node} -> g{s}: a member \
+                                     is stuck at a pending front group whose locks \
+                                     this armed group holds"
+                                ),
+                            })
+                        }
+                        Some(_) => {}
+                        None => {
+                            color.insert(s, 1);
+                            stack.push((s, 0));
+                        }
+                    }
+                } else {
+                    color.insert(node, 2);
+                    stack.pop();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Compact state rendering for counterexample reports.
+    pub fn render(&self) -> String {
+        let groups: Vec<String> = self
+            .groups
+            .iter()
+            .map(|(id, (m, a))| {
+                format!("g{id}{m:?}{}", if *a { "*" } else { "" })
+            })
+            .collect();
+        let phases: Vec<String> = (0..self.cfg.n)
+            .map(|w| match self.phase[w] {
+                _ if self.dead[w] => format!("{w}:dead"),
+                WorkerPhase::Idle if self.retired[w] => format!("{w}:retired"),
+                WorkerPhase::Idle => format!("{w}:idle"),
+                WorkerPhase::Waiting(g) => format!("{w}:wait(g{g})"),
+            })
+            .collect();
+        format!(
+            "groups=[{}] (*=armed) pending={:?} locks={:?} workers=[{}]",
+            groups.join(" "),
+            self.pending,
+            (0..self.cfg.n).filter(|&w| self.locks[w]).collect::<Vec<_>>(),
+            phases.join(" ")
+        )
+    }
+}

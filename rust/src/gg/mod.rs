@@ -316,8 +316,12 @@ pub struct DeathPurge {
 /// Bound on the remembered aborted-group ids: old ids are pruned once
 /// the set exceeds this (ids are monotonic, so the most recent survive).
 /// Far above anything a bounded run creates; keeps unbounded services
-/// from leaking.
-pub(crate) const ABORTED_MEMORY: usize = 1 << 16;
+/// from leaking. The single shared definition for *both* backends — the
+/// oracle prunes against the whole set, [`ShardedGg`] prunes each of its
+/// id shards against its `1/GROUP_SHARDS` slice with the same recent-id
+/// window, so the two agree on every `was_aborted` answer
+/// (`modelcheck::aborted_cap_agrees_across_backends` pins this).
+pub const ABORTED_SET_CAP: usize = 1 << 16;
 
 /// The GG state machine.
 #[derive(Debug)]
@@ -346,7 +350,7 @@ pub struct GroupGenerator {
     dead: Vec<bool>,
     /// Ids of groups torn down by failure repair, so Wait/Probe can tell
     /// "aborted — do not run the collective" from "completed" (bounded;
-    /// see [`ABORTED_MEMORY`]).
+    /// see [`ABORTED_SET_CAP`]).
     aborted: HashSet<GroupId>,
     next_id: GroupId,
     pub stats: GgStats,
@@ -458,7 +462,7 @@ impl GroupGenerator {
     }
 
     /// True if `id` was torn down by failure repair (as opposed to
-    /// completing normally). Memory is bounded (`ABORTED_MEMORY`).
+    /// completing normally). Memory is bounded ([`ABORTED_SET_CAP`]).
     pub fn was_aborted(&self, id: GroupId) -> bool {
         self.aborted.contains(&id)
     }
@@ -480,9 +484,9 @@ impl GroupGenerator {
 
     fn note_aborted(&mut self, id: GroupId) {
         self.aborted.insert(id);
-        if self.aborted.len() > ABORTED_MEMORY {
+        if self.aborted.len() > ABORTED_SET_CAP {
             // ids are monotonic: keep the most recent window
-            let min_keep = self.next_id.saturating_sub(ABORTED_MEMORY as u64);
+            let min_keep = self.next_id.saturating_sub(ABORTED_SET_CAP as u64);
             self.aborted.retain(|&g| g >= min_keep);
         }
     }

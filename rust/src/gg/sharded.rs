@@ -572,8 +572,8 @@ impl ShardedGg {
         shard.insert(id);
         // Same bounded memory as the oracle, split per shard: ids are
         // monotone, keep the most recent window.
-        if shard.len() > super::ABORTED_MEMORY / GROUP_SHARDS {
-            let min_keep = next_id.saturating_sub(super::ABORTED_MEMORY as u64);
+        if shard.len() > super::ABORTED_SET_CAP / GROUP_SHARDS {
+            let min_keep = next_id.saturating_sub(super::ABORTED_SET_CAP as u64);
             shard.retain(|&g| g >= min_keep);
         }
     }

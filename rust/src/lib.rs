@@ -29,6 +29,7 @@
 //! `--slow-schedule`; DESIGN.md §Hardware-Adaptation).
 
 pub mod bench;
+pub mod check;
 pub mod cluster;
 pub mod collectives;
 pub mod comm;

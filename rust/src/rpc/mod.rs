@@ -1245,6 +1245,62 @@ pub(crate) fn handle_request(
 }
 
 // ---------------------------------------------------------------------------
+// Replay seam
+// ---------------------------------------------------------------------------
+
+/// In-process, transport-free handle onto the server's pure transition
+/// seam: a [`ServerShared`] with no sockets, reactor threads, or liveness
+/// monitor. The model checker's conformance replayer
+/// ([`crate::check::conform`]) drives decoded [`Request`]s straight
+/// through `handle_request` — the same dispatch the reactor's worker pool
+/// uses — so a replayed trace exercises the exact request-handling +
+/// backend path a live cluster does, minus the wire.
+pub struct ReplayServer {
+    shared: ServerShared,
+    stop: AtomicBool,
+}
+
+impl ReplayServer {
+    pub fn new(mode: GgMode, cfg: GgConfig, seed: u64) -> Self {
+        let n = cfg.n_workers;
+        Self {
+            shared: ServerShared {
+                backend: GgBackend::new(mode, cfg, seed),
+                plans: Mutex::new(HashMap::new()),
+                addrs: Mutex::new(vec![None; n]),
+                liveness: None,
+                connections_accepted: AtomicU64::new(0),
+            },
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Dispatch one request exactly as the reactor would. `None` means
+    /// the request parked (`WaitArmed`/`WaitDone` on a group that has
+    /// not resolved) — poll it again via [`ReplayServer::resolve`].
+    pub fn apply(&self, req: &Request) -> Option<Response> {
+        match handle_request(&self.shared, req, &self.stop) {
+            Handled::Reply(resp) => Some(resp),
+            Handled::Park { id, want_armed } => resolve_wait(&self.shared, id, want_armed),
+        }
+    }
+
+    /// Re-evaluate a parked wait (the reactor does this on every epoch
+    /// bump).
+    pub fn resolve(&self, id: GroupId, want_armed: bool) -> Option<Response> {
+        resolve_wait(&self.shared, id, want_armed)
+    }
+
+    /// The liveness monitor's accusation seam: declare `w` dead exactly
+    /// as `monitor_liveness` does (backend death purge + plan-cache
+    /// eviction). There is no `Request` for this — in production only
+    /// the monitor's timeout/accusation logic may kill a rank.
+    pub fn declare_dead(&self, w: usize) {
+        self.shared.backend.declare_dead(w, &self.shared.plans);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Client
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,308 @@
+//! Model-checker integration suite: committed counterexample fixtures,
+//! the shared aborted-set cap, and the `results/CHECK_gg.json` artifact
+//! shape.
+//!
+//! The fixtures under `rust/tests/fixtures/check/` are minimized
+//! counterexamples produced by `ripples check --mutation <name>`: each
+//! is a schedule that drives a *deliberately re-broken* model into an
+//! invariant violation. Here every fixture is replayed twice:
+//!
+//! 1. against the mutated model — it must still reach the violation
+//!    (the committed trace stays a real counterexample);
+//! 2. against the real `GroupGenerator` and `ShardedGg` — which do not
+//!    contain the mutation and therefore must sail through with all
+//!    coordination invariants intact, both backends state-identical.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use ripples::check::explore::replay_violates;
+use ripples::check::{
+    membership_deterministic, mutation_cfg, random_walk_conformance,
+    replay_against_real, EngineSemantics, Model, ModelCfg, Mutation, Op, Scenario,
+};
+use ripples::gg::{GgConfig, GroupGenerator, ShardedGg, ABORTED_SET_CAP};
+use ripples::util::rng::Pcg32;
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/check")
+}
+
+/// Parse one committed fixture: `mutation <name>` line, `cfg k=v ...`
+/// line, then one op per line (`#` comments skipped).
+fn parse_fixture(text: &str) -> (ModelCfg, Mutation, Vec<Op>) {
+    let mut mutation = None;
+    let mut cfg = None;
+    let mut ops = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("mutation ") {
+            mutation = Some(Mutation::parse(name.trim()).expect("known mutation"));
+        } else if let Some(kvs) = line.strip_prefix("cfg ") {
+            cfg = Some(parse_cfg(kvs));
+        } else {
+            ops.push(Op::parse(line).unwrap_or_else(|| panic!("bad op line: {line}")));
+        }
+    }
+    (cfg.expect("cfg line"), mutation.expect("mutation line"), ops)
+}
+
+fn parse_cfg(kvs: &str) -> ModelCfg {
+    let mut cfg = ModelCfg {
+        n: 0,
+        group_size: 0,
+        use_group_buffer: false,
+        use_global_division: false,
+        rendezvous: false,
+        engine: EngineSemantics::Sim,
+        aborted_cap: 0,
+        syncs_per_worker: 0,
+        max_deaths: 0,
+        max_rejoins: 0,
+        max_aborts: 0,
+        max_retires: 0,
+    };
+    for kv in kvs.split_whitespace() {
+        let (k, v) = kv.split_once('=').unwrap_or_else(|| panic!("bad cfg pair: {kv}"));
+        let num = || v.parse::<usize>().unwrap_or_else(|_| panic!("bad value: {kv}"));
+        match k {
+            "n" => cfg.n = num(),
+            "gs" => cfg.group_size = num(),
+            "gb" => cfg.use_group_buffer = num() != 0,
+            "gd" => cfg.use_global_division = num() != 0,
+            "rnd" => cfg.rendezvous = num() != 0,
+            "eng" => {
+                cfg.engine = match v {
+                    "sim" => EngineSemantics::Sim,
+                    "rdv" => EngineSemantics::Rendezvous,
+                    other => panic!("bad engine: {other}"),
+                }
+            }
+            "cap" => cfg.aborted_cap = num(),
+            "syncs" => cfg.syncs_per_worker = num(),
+            "deaths" => cfg.max_deaths = num(),
+            "rejoins" => cfg.max_rejoins = num(),
+            "aborts" => cfg.max_aborts = num(),
+            "retires" => cfg.max_retires = num(),
+            other => panic!("unknown cfg key: {other}"),
+        }
+    }
+    cfg
+}
+
+fn load_fixture(name: &str) -> (ModelCfg, Mutation, Vec<Op>) {
+    let path = fixture_dir().join(name);
+    let text = fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    parse_fixture(&text)
+}
+
+/// Shared body: the trace must violate on the mutated model and replay
+/// cleanly (both backends identical, all invariants green) on the real,
+/// unmutated coordinator. Returns one final replay for fixture-specific
+/// asserts.
+fn check_fixture(name: &str) -> ripples::check::RealReplay {
+    let (cfg, mutation, ops) = load_fixture(name);
+    assert_ne!(mutation, Mutation::None, "{name}: fixture must name a mutation");
+    // The committed cfg is the one `--mutation` self-tests explore with;
+    // keep them in lockstep so the fixture cannot silently drift.
+    let expect = mutation_cfg(mutation, 3);
+    assert_eq!(
+        format!("{cfg:?}"),
+        format!("{expect:?}"),
+        "{name}: fixture cfg drifted from mutation_cfg"
+    );
+    assert!(
+        replay_violates(&Model::new(cfg.clone(), mutation), &ops),
+        "{name}: committed trace no longer violates the mutated model"
+    );
+    let mut last = None;
+    for seed in [3, 17, 91] {
+        let replay = replay_against_real(&cfg, seed, &ops)
+            .unwrap_or_else(|e| panic!("{name} (seed {seed}): real replay failed: {e}"));
+        assert_eq!(replay.snapshots.len(), ops.len());
+        last = Some(replay);
+    }
+    last.expect("at least one seed")
+}
+
+#[test]
+fn fixture_skip_arm_sweep_replays() {
+    let replay = check_fixture("skip_arm_sweep.trace");
+    // The mutation loses the wakeup; the real coordinator must have
+    // swept g2 from pending to armed when g1 completed.
+    assert!(replay.oracle.is_armed(2), "real GG lost the wakeup");
+    assert_eq!(replay.oracle.pending_len(), 0);
+}
+
+#[test]
+fn fixture_double_grant_replays() {
+    let replay = check_fixture("double_grant.trace");
+    // The real coordinator must refuse the second grant: g2 pends.
+    assert!(!replay.oracle.is_armed(2));
+    assert_eq!(replay.oracle.pending_len(), 1);
+}
+
+#[test]
+fn fixture_complete_keeps_locks_replays() {
+    let replay = check_fixture("complete_keeps_locks.trace");
+    for w in 0..3 {
+        assert!(!replay.oracle.is_locked_worker(w), "rank {w} lock leaked");
+        assert!(!replay.sharded.is_locked_worker(w), "rank {w} lock leaked (sharded)");
+    }
+}
+
+#[test]
+fn fixture_abort_skips_gb_purge_replays() {
+    let replay = check_fixture("abort_skips_gb_purge.trace");
+    assert!(replay.oracle.was_aborted(1));
+    for w in 0..3 {
+        assert!(
+            replay.oracle.gb_snapshot(w).is_empty(),
+            "rank {w} GB still holds the aborted group"
+        );
+    }
+}
+
+#[test]
+fn fixture_death_keeps_locks_replays() {
+    let replay = check_fixture("death_keeps_locks.trace");
+    assert!(replay.oracle.is_dead(2));
+    assert!(replay.oracle.live_group_ids().is_empty(), "death purge incomplete");
+    for w in 0..3 {
+        assert!(!replay.oracle.is_locked_worker(w), "rank {w} lock survived the death");
+    }
+}
+
+#[test]
+fn fixture_draft_busy_replays() {
+    let replay = check_fixture("draft_busy.trace");
+    // The idle-draft rule the mutation broke: under rendezvous, every
+    // armed group sits at the *front* of each member's Group Buffer —
+    // no member is stuck behind some other pending group.
+    let last = replay.snapshots.last().expect("snapshots");
+    for (id, members, armed) in &last.live {
+        if !armed {
+            continue;
+        }
+        for &m in members {
+            assert_eq!(
+                last.gbs[m].first(),
+                Some(id),
+                "armed g{id} drafted busy rank {m} (GB {:?})",
+                last.gbs[m]
+            );
+        }
+    }
+}
+
+#[test]
+fn fixture_skip_aborted_prune_replays() {
+    let replay = check_fixture("skip_aborted_prune.trace");
+    for id in 1..=3 {
+        assert!(replay.oracle.was_aborted(id));
+        assert!(replay.sharded.was_aborted(id));
+    }
+}
+
+/// The one shared cap ([`ABORTED_SET_CAP`]) bounds the aborted-id memory
+/// of *both* backends to the same recent-id window. The sharded backend
+/// prunes per shard, so at the window boundary it may lag the oracle by
+/// up to `GROUP_SHARDS` ids — but never disagrees well inside or well
+/// outside the window, and never retains less than the oracle.
+#[test]
+fn aborted_cap_agrees_across_backends() {
+    const OVERSHOOT: u64 = 96;
+    let total = ABORTED_SET_CAP as u64 + OVERSHOOT;
+    let gcfg = GgConfig::random(2, 2, 2);
+    let mut oracle = GroupGenerator::new(gcfg.clone());
+    let mut rng = Pcg32::new(11);
+    let sharded = ShardedGg::new(gcfg, 11);
+    for i in 0..total {
+        let (id, _) = oracle.request(0, &mut rng);
+        let id = id.unwrap_or_else(|| panic!("iter {i}: oracle drafted no group"));
+        oracle.abort_group(id);
+        let (id2, _) = sharded.request(0);
+        let id2 = id2.unwrap_or_else(|| panic!("iter {i}: sharded drafted no group"));
+        assert_eq!(id, id2, "iter {i}: backends allocated different group ids");
+        sharded.abort_group(id2);
+    }
+    // Ids ran 1..=total; both backends keep exactly the most recent
+    // ABORTED_SET_CAP ids (the oracle), modulo per-shard lag of at most
+    // 16 ids on the sharded side.
+    let min_keep = total + 1 - ABORTED_SET_CAP as u64; // oracle's window start
+    let skew = 16;
+    assert!(min_keep > skew, "overshoot too small to observe pruning");
+    for id in 1..=total {
+        let o = oracle.was_aborted(id);
+        let s = sharded.was_aborted(id);
+        if id >= min_keep {
+            assert!(o && s, "id {id} inside the window was pruned (oracle={o} sharded={s})");
+        } else if id < min_keep - skew {
+            assert!(!o && !s, "id {id} outside the window survived (oracle={o} sharded={s})");
+        } else {
+            // Boundary: the oracle has pruned; the sharded backend may
+            // lag by < GROUP_SHARDS ids but never retains *less*.
+            assert!(!o, "oracle kept id {id} beyond its window");
+        }
+    }
+    assert!(!oracle.was_aborted(1) && !sharded.was_aborted(1));
+    assert!(oracle.was_aborted(total) && sharded.was_aborted(total));
+}
+
+/// Deep random-walk conformance across every bounded scenario — the
+/// acceptance path: model traces replay state-identically through the
+/// oracle, the sharded backend, and the RPC seam.
+#[test]
+fn scenario_walks_replay_across_backends() {
+    for s in Scenario::ALL {
+        let cfg = ripples::check::scenario_cfg(s, 3);
+        assert!(membership_deterministic(&cfg), "{}: bad regime", s.name());
+        for seed in 0..15 {
+            random_walk_conformance(&cfg, seed, 35)
+                .unwrap_or_else(|e| panic!("{} seed {seed}: {e}", s.name()));
+        }
+    }
+}
+
+/// Shape of the committed `results/CHECK_gg.json` artifact. Skips (with
+/// a notice) when the artifact is absent — `make clean` removes
+/// `results/` and `make modelcheck` regenerates it.
+#[test]
+fn check_artifact_shape() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("results/CHECK_gg.json");
+    let Ok(text) = fs::read_to_string(&path) else {
+        eprintln!(
+            "NOTICE: {} missing — run `make modelcheck` to generate it; skipping",
+            path.display()
+        );
+        return;
+    };
+    let parsed = ripples::util::json::parse(&text).expect("CHECK_gg.json: invalid JSON");
+    assert_eq!(
+        parsed.get("id").and_then(|v| v.as_str()),
+        Some("gg_modelcheck"),
+        "artifact id"
+    );
+    assert!(parsed.get("placeholder").and_then(|v| v.as_bool()).is_some());
+    assert!(parsed.get("ranks").and_then(|v| v.as_usize()).unwrap_or(0) >= 2);
+    assert!(parsed.get("depth").and_then(|v| v.as_usize()).unwrap_or(0) >= 1);
+    let scenarios =
+        parsed.get("scenarios").and_then(|v| v.as_arr()).expect("scenarios array");
+    assert_eq!(scenarios.len(), Scenario::ALL.len(), "one entry per scenario");
+    for s in scenarios {
+        let name = s.get("scenario").and_then(|v| v.as_str()).expect("scenario name");
+        assert!(Scenario::parse(name).is_some(), "unknown scenario {name}");
+        assert_eq!(
+            s.get("violations").and_then(|v| v.as_usize()),
+            Some(0),
+            "{name}: committed artifact must be violation-free"
+        );
+        assert!(s.get("states_explored").is_some());
+        assert!(s.get("sleep_set_pruned").is_some());
+        assert!(s.get("quiescent_states").is_some());
+    }
+}

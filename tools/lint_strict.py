@@ -1,0 +1,313 @@
+#!/usr/bin/env python3
+"""Strict lint gate (`make lint-strict`).
+
+Two checks clippy does not make:
+
+1. **No stray panics on the data/control plane.** `.unwrap()` /
+   `.expect(` are denied in non-test code under `rust/src/net/` and
+   `rust/src/rpc/` — a worker or the coordinator must degrade with an
+   error, not take the whole cluster down with a panic. Intentional
+   panic sites (mutex-poisoning policy, platform guarantees) are
+   enumerated in `tools/lint_allow.txt` as `path|substring` lines; every
+   entry must still match something, so the allowlist cannot rot.
+
+2. **RPC protocol completeness.** The `Request`/`Response` enums in
+   `rust/src/rpc/mod.rs` are wire-framed by hand; this check parses the
+   encode/decode matches and `handle_request` and asserts:
+   every variant has an encode tag, tags are unique, decode covers every
+   tag with the same variant<->tag bijection, and every `Request`
+   variant is handled by the server dispatch.
+
+Pure stdlib, no third-party deps. Exit 0 = clean.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+PANIC_SCOPES = [ROOT / "rust/src/net", ROOT / "rust/src/rpc"]
+RPC_MOD = ROOT / "rust/src/rpc/mod.rs"
+ALLOWLIST = ROOT / "tools/lint_allow.txt"
+
+PANIC_PAT = re.compile(r"\.unwrap\(\)|\.expect\(")
+
+
+def sanitize(line, in_block_comment):
+    """Blank out string literals and comments so panic matches are real
+    code. Returns (sanitized_line, in_block_comment_after)."""
+    out = []
+    i = 0
+    n = len(line)
+    in_str = False
+    while i < n:
+        c = line[i]
+        if in_block_comment:
+            if line.startswith("*/", i):
+                in_block_comment = False
+                i += 2
+            else:
+                i += 1
+            continue
+        if in_str:
+            if c == "\\":
+                i += 2
+                continue
+            if c == '"':
+                in_str = False
+            i += 1
+            continue
+        if c == '"':
+            in_str = True
+            out.append(c)
+            i += 1
+            continue
+        if c == "'":
+            # char literal: 'x', '\n', '\'' or '"' — skip it whole so a
+            # quote char cannot open a phantom string
+            m = re.match(r"'(\\.|[^\\'])'", line[i:])
+            if m:
+                i += m.end()
+                continue
+            i += 1
+            continue
+        if line.startswith("//", i):
+            break
+        if line.startswith("/*", i):
+            in_block_comment = True
+            i += 2
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out), in_block_comment
+
+
+def non_test_lines(path):
+    """Yield (lineno, sanitized_line) outside `#[cfg(test)] mod` blocks."""
+    in_block = False
+    pending_test_attr = False
+    test_depth = None  # brace depth inside a cfg(test) module
+    depth = 0
+    for lineno, raw in enumerate(path.read_text().splitlines(), 1):
+        line, in_block = sanitize(raw, in_block)
+        opens = line.count("{")
+        closes = line.count("}")
+        stripped = line.strip()
+        if test_depth is None:
+            if "#[cfg(test)]" in stripped:
+                pending_test_attr = True
+            elif pending_test_attr and stripped.startswith("mod "):
+                # the whole module is test code; skip until its brace closes
+                test_depth = depth
+                pending_test_attr = False
+            elif stripped and not stripped.startswith("#["):
+                pending_test_attr = False
+        depth += opens - closes
+        if test_depth is not None:
+            if depth <= test_depth:
+                test_depth = None
+            continue
+        yield lineno, line
+
+
+def load_allowlist():
+    entries = []
+    if ALLOWLIST.exists():
+        for raw in ALLOWLIST.read_text().splitlines():
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            if "|" not in line:
+                sys.exit(f"lint-strict: malformed allowlist line: {line!r}")
+            path, substr = line.split("|", 1)
+            entries.append({"path": path.strip(), "substr": substr, "hits": 0})
+    return entries
+
+
+def check_panics():
+    errors = []
+    allow = load_allowlist()
+    for scope in PANIC_SCOPES:
+        for path in sorted(scope.rglob("*.rs")):
+            rel = path.relative_to(ROOT).as_posix()
+            prev = ""
+            for lineno, line in non_test_lines(path):
+                if not PANIC_PAT.search(line):
+                    if line.strip():
+                        prev = line
+                    continue
+                # builder chains split one call per line: match the
+                # allowlist against the joined tail too, so an entry can
+                # say `.lock().unwrap()` about a `.lock()\n.unwrap()`
+                context = prev.strip() + line.strip()
+                matched = False
+                for entry in allow:
+                    if rel.endswith(entry["path"]) and (
+                        entry["substr"] in line or entry["substr"] in context
+                    ):
+                        entry["hits"] += 1
+                        matched = True
+                if line.strip():
+                    prev = line
+                if not matched:
+                    errors.append(
+                        f"{rel}:{lineno}: unwrap/expect in non-test "
+                        f"net/rpc code: {line.strip()}"
+                    )
+    for entry in allow:
+        if entry["hits"] == 0:
+            errors.append(
+                f"tools/lint_allow.txt: stale entry "
+                f"{entry['path']}|{entry['substr']} matches nothing — remove it"
+            )
+    return errors
+
+
+def enum_variants(text, name):
+    m = re.search(rf"pub enum {name} \{{", text)
+    if not m:
+        sys.exit(f"lint-strict: enum {name} not found in {RPC_MOD}")
+    body = balanced(text, m.end() - 1)
+    variants = []
+    depth = 0
+    for line in body.splitlines():
+        code, _ = sanitize(line, False)
+        if depth == 0:
+            vm = re.match(r"\s*([A-Z]\w*)\s*(\{|\(|,|$)", code)
+            if vm:
+                variants.append(vm.group(1))
+        depth += code.count("{") - code.count("}")
+        depth += code.count("(") - code.count(")")
+    return variants
+
+
+def balanced(text, open_idx):
+    """Return the text between the brace at open_idx and its match."""
+    depth = 0
+    for i in range(open_idx, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[open_idx + 1 : i]
+    sys.exit("lint-strict: unbalanced braces")
+
+
+def fn_body(text, start_pat):
+    m = re.search(start_pat, text)
+    if not m:
+        sys.exit(f"lint-strict: pattern {start_pat!r} not found in {RPC_MOD}")
+    open_idx = text.index("{", m.end())
+    return balanced(text, open_idx)
+
+
+def encode_tags(body, enum):
+    """Map variant -> first `w.u8(N)` written in its encode arm."""
+    tags = {}
+    current = None
+    for line in body.splitlines():
+        code, _ = sanitize(line, False)
+        vm = re.search(rf"{enum}::(\w+)(?:\s*\{{[^}}]*\}}|\s*\([^)]*\))?\s*=>", code)
+        if vm:
+            current = vm.group(1)
+        tm = re.search(r"w\.u8\((\d+)\)", code)
+        if tm and current is not None and current not in tags:
+            tags[current] = int(tm.group(1))
+    return tags
+
+
+def decode_tags(body, enum):
+    """Map tag -> variant from `N => Enum::Variant` decode arms."""
+    tags = {}
+    for line in body.splitlines():
+        code, _ = sanitize(line, False)
+        m = re.search(rf"(\d+)\s*=>\s*\{{?\s*$|(\d+)\s*=>\s*{enum}::(\w+)", code)
+        dm = re.search(rf"^\s*(\d+)\s*=>", code)
+        if not dm:
+            continue
+        tag = int(dm.group(1))
+        vm = re.search(rf"{enum}::(\w+)", code)
+        if vm:
+            tags[tag] = vm.group(1)
+        else:
+            tags[tag] = None  # multi-line arm; variant named later
+    return tags
+
+
+def fill_multiline_decode(body, enum, tags):
+    """Resolve `N => { ... Enum::Variant { ... } }` multi-line arms."""
+    lines = body.splitlines()
+    for i, line in enumerate(lines):
+        dm = re.search(r"^\s*(\d+)\s*=>\s*\{?\s*$", sanitize(line, False)[0])
+        if not dm:
+            continue
+        tag = int(dm.group(1))
+        if tags.get(tag) is not None:
+            continue
+        for look in lines[i + 1 : i + 30]:
+            vm = re.search(rf"{enum}::(\w+)", sanitize(look, False)[0])
+            if vm:
+                tags[tag] = vm.group(1)
+                break
+    return tags
+
+
+def check_protocol():
+    errors = []
+    text = RPC_MOD.read_text()
+    for enum, impl_pat in [
+        ("Request", r"impl Request\b"),
+        ("Response", r"impl Response\b"),
+    ]:
+        variants = enum_variants(text, enum)
+        if not variants:
+            errors.append(f"rpc: no variants parsed for {enum}")
+            continue
+        impl_body = fn_body(text, impl_pat)
+        enc_body = fn_body(impl_body, r"fn encode\b")
+        dec_body = fn_body(impl_body, r"fn decode\b")
+        enc = encode_tags(enc_body, enum)
+        dec = fill_multiline_decode(dec_body, enum, decode_tags(dec_body, enum))
+        for v in variants:
+            if v not in enc:
+                errors.append(f"rpc: {enum}::{v} has no encode frame tag")
+        dup = {}
+        for v, t in enc.items():
+            if t in dup:
+                errors.append(
+                    f"rpc: {enum}::{v} and {enum}::{dup[t]} share frame tag {t}"
+                )
+            dup[t] = v
+        for v, t in enc.items():
+            if dec.get(t) != v:
+                errors.append(
+                    f"rpc: {enum}::{v} encodes tag {t} but decode arm {t} "
+                    f"is {dec.get(t)}"
+                )
+        for t, v in dec.items():
+            if v not in variants:
+                errors.append(f"rpc: decode arm {t} names unknown {enum}::{v}")
+    # Every Request variant must be dispatched by the server.
+    handled = set(
+        re.findall(r"Request::(\w+)", fn_body(text, r"fn handle_request\b"))
+    )
+    for v in enum_variants(text, "Request"):
+        if v not in handled:
+            errors.append(f"rpc: Request::{v} is not handled in handle_request")
+    return errors
+
+
+def main():
+    errors = check_panics() + check_protocol()
+    if errors:
+        for e in errors:
+            print(e, file=sys.stderr)
+        print(f"lint-strict: {len(errors)} error(s)", file=sys.stderr)
+        return 1
+    print("lint-strict: clean (panic scopes + rpc protocol table)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
